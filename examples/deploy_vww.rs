@@ -1,0 +1,74 @@
+//! End-to-end driver (the EXPERIMENTS.md §End-to-end run).
+//!
+//! The full MCU-MixQ workflow on MobileNet-Tiny × synth-VWW (Table I
+//! row 2 pairing):
+//!
+//! 1. differentiable hardware-aware quantization search (a few hundred
+//!    PJRT supernet steps, loss curve logged);
+//! 2. argmax sub-net selection;
+//! 3. quantization-aware training of the selected config (loss curve
+//!    logged);
+//! 4. deployment on the simulated STM32F746 through the TinyEngine-like
+//!    engine, against the CMix-NN / WPC&DDD / TinyEngine baselines;
+//! 5. the Table I comparison row plus headline speedups.
+//!
+//! All three layers compose here: the Pallas fake-quant kernels inside the
+//! JAX-lowered HLO programs (L1/L2), PJRT execution + NAS + deployment in
+//! Rust (L3). Run with
+//! `cargo run --release --example deploy_vww -- --search-steps 200 --qat-steps 300`.
+
+use mcu_mixq::coordinator::{self, PipelineCfg};
+use mcu_mixq::runtime::{ArtifactStore, Runtime};
+use mcu_mixq::util::cli::Args;
+
+fn main() -> mcu_mixq::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let store = ArtifactStore::open(args.str_or("artifacts", "artifacts"))?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let backbone = args.str_or("backbone", "mobilenet_tiny");
+    let mut cfg = PipelineCfg::new(&backbone);
+    cfg.search.steps = args.usize_or("search-steps", 200);
+    cfg.qat.steps = args.usize_or("qat-steps", 300);
+    cfg.search.seed = args.u64_or("seed", cfg.search.seed);
+
+    println!(
+        "== MCU-MixQ pipeline: {} ({} search + {} QAT steps) ==",
+        backbone, cfg.search.steps, cfg.qat.steps
+    );
+    let t0 = std::time::Instant::now();
+    let report = coordinator::run_pipeline(&rt, &store, &cfg)?;
+
+    println!("\n-- supernet search loss curve --");
+    for log in &report.search_history {
+        println!(
+            "  step {:>4}  loss {:.4}  ce {:.4}  comp {:.4}  acc {:.3}",
+            log.step, log.loss, log.ce, log.comp, log.acc
+        );
+    }
+    println!(
+        "selected config: w={:?} a={:?} (branch entropy {:.2})",
+        report.searched_wbits, report.searched_abits, report.final_entropy
+    );
+
+    println!("\n-- QAT loss curve --");
+    for log in &report.qat_history {
+        println!(
+            "  step {:>4}  loss {:.4}  acc {:.3}",
+            log.step, log.loss, log.acc
+        );
+    }
+    println!("QAT eval accuracy: {:.1}%", report.qat_eval_acc * 100.0);
+
+    println!("\n-- deployment comparison (Table I) --");
+    println!(
+        "{}",
+        coordinator::deploy::render_rows(&backbone, &report.rows)
+    );
+    for (m, s) in &report.speedups {
+        println!("MCU-MixQ speedup over {m}: {s:.2}x");
+    }
+    println!("\npipeline wall-clock: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

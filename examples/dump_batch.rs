@@ -1,0 +1,13 @@
+//! Debug helper: dump synthetic batches to raw f32/i32 files.
+use mcu_mixq::datasets::{generate, Task};
+use std::io::Write;
+
+fn main() {
+    let n = 512;
+    let b = generate(Task::SynthCifar, n, 16, 4321);
+    let mut f = std::fs::File::create("/tmp/cifar_x.bin").unwrap();
+    for v in &b.images { f.write_all(&v.to_le_bytes()).unwrap(); }
+    let mut f = std::fs::File::create("/tmp/cifar_y.bin").unwrap();
+    for v in &b.labels { f.write_all(&v.to_le_bytes()).unwrap(); }
+    println!("dumped {} images", n);
+}

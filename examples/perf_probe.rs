@@ -1,0 +1,32 @@
+use mcu_mixq::engine;
+use mcu_mixq::mcu::CycleModel;
+use mcu_mixq::models::vgg_tiny;
+use mcu_mixq::ops::Method;
+use mcu_mixq::quant::{quantize_model, BitConfig};
+use mcu_mixq::util::prng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let m = vgg_tiny(10, 16);
+    let mut rng = Rng::new(1);
+    let flat: Vec<f32> = (0..m.param_count).map(|_| rng.normal() * 0.1).collect();
+    let img: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.f32()).collect();
+    let cm = CycleModel::cortex_m7();
+    for method in [Method::RpSlbc, Method::TinyEngine, Method::Naive] {
+        for bits in [4u8, 8] {
+            if !method.supports(bits, bits) { continue; }
+            let cfg = BitConfig::uniform(m.num_layers(), bits);
+            let q = quantize_model(&m, &flat, &cfg);
+            // warmup
+            engine::infer(&m, &q, &cfg, method, &img, &cm).unwrap();
+            let iters = 20;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                engine::infer(&m, &q, &cfg, method, &img, &cm).unwrap();
+            }
+            let dt = t0.elapsed().as_secs_f64() / iters as f64;
+            let macs_s = m.total_macs() as f64 / dt;
+            println!("{:<11} {}bit: {:>8.2} ms/infer, {:.2e} simulated MACs/s", method.name(), bits, dt*1e3, macs_s);
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Quickstart: the MCU-MixQ public API in ~60 lines.
+//!
+//! 1. Pick a backbone and a mixed-precision bit configuration.
+//! 2. Predict its MCU cost with the Eq. 12 performance model.
+//! 3. Deploy it on the simulated STM32F746 through the engine and compare
+//!    the prediction with the measured cycle count.
+//!
+//! Run with `cargo run --release --example quickstart`.
+
+use mcu_mixq::engine;
+use mcu_mixq::models;
+use mcu_mixq::ops::Method;
+use mcu_mixq::perf::PerfModel;
+use mcu_mixq::quant::BitConfig;
+use mcu_mixq::util::prng::Rng;
+
+fn main() -> mcu_mixq::Result<()> {
+    // A VGG-style compact backbone (Table I row 1 geometry).
+    let model = models::vgg_tiny(10, 16);
+    println!(
+        "backbone: {} ({} layers, {} params, {} MACs)",
+        model.name,
+        model.num_layers(),
+        model.param_count,
+        model.total_macs()
+    );
+
+    // A mixed 2–8-bit configuration (what the NAS would emit).
+    let cfg = BitConfig {
+        wbits: vec![4, 3, 4, 3, 2, 8],
+        abits: vec![8, 4, 4, 4, 4, 8],
+    };
+    println!(
+        "config: w={:?} a={:?} (avg {:.2}/{:.2} bits)",
+        cfg.wbits,
+        cfg.abits,
+        cfg.avg_wbits(),
+        cfg.avg_abits()
+    );
+
+    // Predict the deployment cost analytically (Eq. 12)...
+    let pm = PerfModel::cortex_m7();
+    let predicted = pm.model_complexity(&model, Method::RpSlbc, &cfg);
+    println!("Eq.12 predicted complexity: {predicted:.0} SISD-equivalents");
+
+    // ...then actually deploy on the simulated MCU and measure.
+    let mut rng = Rng::new(42);
+    let params: Vec<f32> = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+    let image: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.f32()).collect();
+    let report = engine::deploy(&model, &params, &cfg, Method::RpSlbc, &image)?;
+    println!(
+        "deployed via {}: {} cycles = {:.2} ms @216MHz, peak SRAM {:.1} KB, flash {:.1} KB",
+        report.method.name(),
+        report.cycles,
+        report.latency_ms,
+        report.peak_sram as f64 / 1024.0,
+        report.flash_bytes as f64 / 1024.0
+    );
+
+    // And the same model as int8 TinyEngine for contrast.
+    let cfg8 = BitConfig::uniform(model.num_layers(), 8);
+    let tiny = engine::deploy(&model, &params, &cfg8, Method::TinyEngine, &image)?;
+    println!(
+        "int8 TinyEngine baseline: {} cycles = {:.2} ms  →  MCU-MixQ speedup {:.2}x",
+        tiny.cycles,
+        tiny.latency_ms,
+        tiny.cycles as f64 / report.cycles as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! SLBC playground: inspect the packed-arithmetic machinery (§IV) layer
+//! by layer.
+//!
+//! Shows, for a chosen `(weight-bits, activation-bits)` pair:
+//! * the polynomial packing identity on a small 1-D convolution;
+//! * the adaptive lane plan (lane size / field stride / MACs-per-multiply);
+//! * naive-SLBC vs reordered-SLBC segmentation counts (Theorem IV.1);
+//! * the resulting equivalent-ops landscape over the full (w,a) grid.
+//!
+//! Run with `cargo run --release --example slbc_playground -- --wbits 4 --abits 4`.
+
+use mcu_mixq::simd::adaptive::{best_plan, cmixnn_equivalent_ops, slbc_equivalent_ops};
+use mcu_mixq::simd::poly::{conv1d_full_direct, conv1d_full_packed};
+use mcu_mixq::util::bench::Table;
+use mcu_mixq::util::cli::Args;
+use mcu_mixq::util::prng::Rng;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let wbits = args.usize_or("wbits", 4) as u32;
+    let abits = args.usize_or("abits", 4) as u32;
+    let k_taps = args.usize_or("taps", 3) as u32;
+
+    // --- 1. the packing identity --------------------------------------
+    let mut rng = Rng::new(args.u64_or("seed", 1));
+    let x: Vec<u64> = (0..12).map(|_| rng.below(1 << abits)).collect();
+    let k: Vec<u64> = (0..k_taps as usize).map(|_| rng.below(1 << wbits)).collect();
+    let direct = conv1d_full_direct(&x, &k);
+    let packed = conv1d_full_packed(&x, &k, abits, wbits);
+    println!("x = {x:?}");
+    println!("k = {k:?}");
+    println!("conv (direct) = {direct:?}");
+    println!("conv (packed) = {packed:?}");
+    assert_eq!(direct, packed, "Eq. 3–7 identity violated!");
+    println!("✓ one wide multiply reproduced the whole convolution\n");
+
+    // --- 2. the adaptive lane plan -------------------------------------
+    let plan = best_plan(abits, wbits, k_taps).expect("plan exists for 2..=8 bits");
+    println!("adaptive lane plan for a={abits}b w={wbits}b k={k_taps}:");
+    println!(
+        "  register {}b, lanes of {}b ({} lanes), field stride {}b",
+        plan.cfg.register_bits,
+        plan.cfg.lane_bits,
+        plan.cfg.lanes(),
+        plan.field
+    );
+    println!(
+        "  {} MACs per multiply, accumulation depth {}, cost/MAC {:.3}",
+        plan.macs_per_instr, plan.accum_depth, plan.cost_per_mac
+    );
+    if let Some(rp) = &plan.reordered {
+        println!(
+            "  segmentation: naive {} ops/instr → reordered {} ops/instr ({:.0}% kept)",
+            plan.conv.seg_ops_per_instr(),
+            rp.seg_ops_per_instr(),
+            rp.seg_reduction_vs_naive() * 100.0
+        );
+    } else {
+        println!("  (geometry admits no reordered plan at this width)");
+    }
+
+    // --- 3. the (w,a) equivalent-ops landscape (Fig. 6's raw data) -----
+    println!("\nequivalent ops per instruction slot (SLBC / CMix-NN):");
+    let mut t = Table::new(
+        std::iter::once("w\\a".to_string())
+            .chain((2..=8).map(|a| format!("{a}b")))
+            .collect::<Vec<_>>(),
+    );
+    for w in 2..=8u32 {
+        let mut row = vec![format!("{w}b")];
+        for a in 2..=8u32 {
+            let s = slbc_equivalent_ops(w, a, k_taps);
+            let c = cmixnn_equivalent_ops(w, a);
+            row.push(format!("{s:.1}/{c:.1}"));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("(larger is better; SLBC ≥ CMix-NN everywhere, biggest at low bits)");
+}

@@ -1,0 +1,7 @@
+"""Build-time compile path for MCU-MixQ.
+
+Everything in this package runs ONCE at ``make artifacts`` and never on the
+request path. It authors the Layer-1 Pallas kernels and the Layer-2 JAX
+model/supernet, and AOT-lowers them to HLO text consumed by the Rust
+Layer-3 coordinator.
+"""

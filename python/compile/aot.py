@@ -1,0 +1,178 @@
+"""AOT compile path: lower every Layer-2 program to HLO *text* artifacts.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (wrapped by
+``make artifacts``). Python runs exactly once; afterwards the Rust binary is
+self-contained.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted per backbone (vgg_tiny on synth-CIFAR, mobilenet_tiny on synth-VWW):
+
+* ``<bb>_qat_step.hlo.txt``       — QAT SGD step, runtime bitwidth tensors
+* ``<bb>_eval.hlo.txt``           — eval loss/accuracy on a big batch
+* ``<bb>_infer.hlo.txt``          — batch-1 logits
+* ``<bb>_supernet_step.hlo.txt``  — differentiable NAS step (cost table in)
+* ``<bb>_init.bin``               — flat f32 LE initial parameters
+
+Plus ``slbc_demo.hlo.txt`` (the Layer-1 packed-convolution kernel standalone,
+int64 carrier) and ``manifest.json`` describing shapes, offsets and layer
+geometry for the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import asdict
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as Spec
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+INFER_BATCH = 1
+
+#: slbc_demo geometry — mirrored in the manifest for the Rust consumer.
+SLBC_DEMO = {"n": 64, "k": 5, "sx_bits": 4, "sk_bits": 4}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1024:.0f} KiB)")
+
+
+def f32(*shape):
+    return Spec(shape, jnp.float32)
+
+
+def i32(*shape):
+    return Spec(shape, jnp.int32)
+
+
+def lower_backbone(bb: M.Backbone, out_dir: str) -> dict:
+    """Lower all four programs of one backbone; return its manifest entry."""
+    L, K = bb.num_layers, len(M.OPTIONS)
+    P = bb.param_count
+    hw, c = bb.input_hw, bb.input_c
+
+    def x_spec(b):
+        return f32(b, hw, hw, c)
+
+    arts = {}
+
+    qat = M.make_qat_train_step(bb)
+    lowered = jax.jit(qat).lower(
+        f32(P), f32(P), x_spec(TRAIN_BATCH), i32(TRAIN_BATCH), f32(L), f32(L), f32()
+    )
+    arts["qat_step"] = f"{bb.name}_qat_step.hlo.txt"
+    _write(os.path.join(out_dir, arts["qat_step"]), to_hlo_text(lowered))
+
+    ev = M.make_eval_step(bb)
+    lowered = jax.jit(ev).lower(
+        f32(P), x_spec(EVAL_BATCH), i32(EVAL_BATCH), f32(L), f32(L)
+    )
+    arts["eval"] = f"{bb.name}_eval.hlo.txt"
+    _write(os.path.join(out_dir, arts["eval"]), to_hlo_text(lowered))
+
+    inf = M.make_infer(bb)
+    lowered = jax.jit(inf).lower(f32(P), x_spec(INFER_BATCH), f32(L), f32(L))
+    arts["infer"] = f"{bb.name}_infer.hlo.txt"
+    _write(os.path.join(out_dir, arts["infer"]), to_hlo_text(lowered))
+
+    sn = M.make_supernet_train_step(bb)
+    lowered = jax.jit(sn).lower(
+        f32(P), f32(P), f32(L, K), f32(L, K),
+        x_spec(TRAIN_BATCH), i32(TRAIN_BATCH),
+        f32(L, K, K), f32(), f32(), f32(),
+    )
+    arts["supernet_step"] = f"{bb.name}_supernet_step.hlo.txt"
+    _write(os.path.join(out_dir, arts["supernet_step"]), to_hlo_text(lowered))
+
+    params = M.init_params(bb, seed=0)
+    init_path = f"{bb.name}_init.bin"
+    with open(os.path.join(out_dir, init_path), "wb") as f:
+        f.write(bytes(memoryview(jax.device_get(params).astype("<f4"))))
+    print(f"  wrote {out_dir}/{init_path} ({P} params)")
+
+    return {
+        "input_hw": hw,
+        "input_c": c,
+        "num_classes": bb.num_classes,
+        "num_layers": L,
+        "param_count": P,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "infer_batch": INFER_BATCH,
+        "layers": [asdict(l) for l in bb.layers],
+        "artifacts": arts,
+        "init": init_path,
+    }
+
+
+def lower_slbc_demo(out_dir: str) -> dict:
+    """Lower the standalone Layer-1 SLBC kernel (int64 carrier)."""
+    jax.config.update("jax_enable_x64", True)
+    from .kernels import slbc
+
+    n, k = SLBC_DEMO["n"], SLBC_DEMO["k"]
+    sx, sk = SLBC_DEMO["sx_bits"], SLBC_DEMO["sk_bits"]
+
+    def demo(x, kern):
+        return slbc.slbc_conv1d_full(x, kern, sx_bits=sx, sk_bits=sk)
+
+    lowered = jax.jit(demo).lower(
+        Spec((n,), jnp.int64), Spec((k,), jnp.int64)
+    )
+    _write(os.path.join(out_dir, "slbc_demo.hlo.txt"), to_hlo_text(lowered))
+    entry = dict(SLBC_DEMO)
+    entry["artifact"] = "slbc_demo.hlo.txt"
+    entry["group_size"] = slbc.group_size(sx, sk, k)
+    entry["field_width"] = slbc.field_width(sx, sk, k)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "options": M.OPTIONS,
+        "momentum": M.MOMENTUM,
+        "backbones": {},
+    }
+    for name, num_classes in [("vgg_tiny", 10), ("mobilenet_tiny", 2)]:
+        print(f"lowering {name} ...")
+        bb = M.BACKBONES[name](num_classes=num_classes)
+        manifest["backbones"][name] = lower_backbone(bb, args.out_dir)
+
+    print("lowering slbc_demo ...")
+    manifest["slbc_demo"] = lower_slbc_demo(args.out_dir)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

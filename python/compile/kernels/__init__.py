@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels for MCU-MixQ.
+
+* :mod:`slbc`  — the paper's SIMD Low-Bitwidth Convolution expressed as
+  packed integer arithmetic in a Pallas kernel (interpret mode).
+* :mod:`quant` — fake-quantization kernels (signed / unsigned uniform)
+  with straight-through-estimator gradients; these are the kernels the
+  Layer-2 model and supernet call on every quantized tensor.
+* :mod:`ref`   — pure-``jnp`` oracles both kernels are tested against.
+"""

@@ -1,0 +1,91 @@
+"""Fake-quantization Pallas kernels with straight-through gradients.
+
+These are the Layer-1 kernels the Layer-2 model calls on *every* quantized
+tensor — weights and activations of every layer, and all supernet branches —
+so they lower into every HLO artifact the Rust coordinator executes.
+
+Design notes
+------------
+* Scales are dynamic (max-abs per tensor), so no quantization state crosses
+  the AOT boundary; the Rust side only ever ships bitwidths.
+* Bitwidths are *traced* float tensors. One ``qat_train_step`` artifact
+  therefore serves every quantization configuration the NAS emits — the
+  coordinator feeds ``wbits[L]`` / ``abits[L]`` as inputs at run time.
+* Gradients use the straight-through estimator (identity through ``round``,
+  clipped outside the representable range), via ``jax.custom_vjp`` — Pallas
+  kernels have no autodiff rule, and STE is what the paper's QAT stage uses.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fq_signed_kernel(x_ref, bits_ref, o_ref):
+    """Symmetric signed uniform quantizer: n = 2^(b-1) - 1 levels/sign."""
+    x = x_ref[...]
+    n = jnp.exp2(bits_ref[0] - 1.0) - 1.0
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    scale = amax / n
+    o_ref[...] = jnp.clip(jnp.round(x / scale), -n, n) * scale
+
+
+def _fq_unsigned_kernel(x_ref, bits_ref, o_ref):
+    """Unsigned uniform quantizer for post-ReLU activations: n = 2^b - 1."""
+    x = jnp.maximum(x_ref[...], 0.0)
+    n = jnp.exp2(bits_ref[0]) - 1.0
+    amax = jnp.maximum(jnp.max(x), 1e-8)
+    scale = amax / n
+    o_ref[...] = jnp.clip(jnp.round(x / scale), 0.0, n) * scale
+
+
+def _call_fq(kernel, x, bits):
+    flat = x.reshape(-1)
+    bits_arr = jnp.asarray(bits, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, flat.dtype),
+        interpret=True,
+    )(flat, bits_arr)
+    return out.reshape(x.shape)
+
+
+@jax.custom_vjp
+def fake_quant_signed(x, bits):
+    """STE-wrapped signed fake-quant (weights)."""
+    return _call_fq(_fq_signed_kernel, x, bits)
+
+
+def _fqs_fwd(x, bits):
+    return _call_fq(_fq_signed_kernel, x, bits), None
+
+
+def _fqs_bwd(_, g):
+    # Straight-through: identity to x, no gradient to the bitwidth.
+    return g, None
+
+
+fake_quant_signed.defvjp(_fqs_fwd, _fqs_bwd)
+
+
+@jax.custom_vjp
+def fake_quant_unsigned(x, bits):
+    """STE-wrapped unsigned fake-quant (post-ReLU activations).
+
+    The backward pass gates the gradient at zero (the ReLU clip is part of
+    the quantizer), matching the conventional QAT treatment.
+    """
+    return _call_fq(_fq_unsigned_kernel, x, bits)
+
+
+def _fqu_fwd(x, bits):
+    return _call_fq(_fq_unsigned_kernel, x, bits), (x > 0.0)
+
+
+def _fqu_bwd(res, g):
+    return jnp.where(res, g, 0.0), None
+
+
+fake_quant_unsigned.defvjp(_fqu_fwd, _fqu_bwd)

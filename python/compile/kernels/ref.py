@@ -1,0 +1,102 @@
+"""Pure-``jnp`` reference oracles for the Layer-1 Pallas kernels.
+
+These are deliberately written in the most direct, obviously-correct style
+(no packing tricks, no bit manipulation) so the pytest/hypothesis suites can
+use them as ground truth for:
+
+* :func:`conv1d_full`      — the polynomial/convolution identity (paper
+  Eq. 5–7) the SLBC kernel exploits,
+* :func:`fake_quant_signed` / :func:`fake_quant_unsigned` — the uniform
+  quantizers the QAT path and the NAS supernet branches apply,
+* :func:`conv2d_nhwc` / :func:`depthwise_conv2d_nhwc` / :func:`dense`
+  — the layer math of the Layer-2 model.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv1d_full(s, k):
+    """Full 1-D convolution ``y[n] = sum_m s[n-m] * k[m]`` (paper Eq. 6).
+
+    ``s`` has ``N`` elements and ``k`` has ``K``; the result has
+    ``N + K - 1`` elements. This is true convolution (kernel flipped), the
+    orientation under which packed polynomial multiplication (Eq. 5) equals
+    the convolution sequence.
+    """
+    return jnp.convolve(s, k, mode="full")
+
+
+def fake_quant_signed(x, bits):
+    """Symmetric signed uniform fake-quantization with dynamic max-abs scale.
+
+    ``n = 2**(bits-1) - 1`` levels per sign; the scale is derived from the
+    tensor's max-abs so no quantization state needs to cross the AOT
+    boundary. ``bits`` may be a traced float tensor (the Rust coordinator
+    feeds per-layer bitwidths at run time).
+    """
+    n = jnp.exp2(bits - 1.0) - 1.0
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    scale = amax / n
+    return jnp.clip(jnp.round(x / scale), -n, n) * scale
+
+
+def fake_quant_unsigned(x, bits):
+    """Unsigned uniform fake-quantization (for post-ReLU activations).
+
+    ``n = 2**bits - 1`` levels; inputs are clipped at zero first.
+    """
+    n = jnp.exp2(bits) - 1.0
+    xp = jnp.maximum(x, 0.0)
+    amax = jnp.maximum(jnp.max(xp), 1e-8)
+    scale = amax / n
+    return jnp.clip(jnp.round(xp / scale), 0.0, n) * scale
+
+
+def conv2d_nhwc(x, w, stride=1, padding="SAME"):
+    """Standard 2-D convolution, NHWC activations, HWIO weights."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def depthwise_conv2d_nhwc(x, w, stride=1, padding="SAME"):
+    """Depthwise 2-D convolution; ``w`` is HWIO with I == channel count and
+    O == 1, reshaped to the grouped form lax expects."""
+    c = x.shape[-1]
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def dense(x, w, b):
+    """Fully-connected layer: ``x @ w + b``."""
+    return x @ w + b
+
+
+def max_pool_2x2(x):
+    """2x2 max pooling, stride 2, NHWC."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def global_avg_pool(x):
+    """Global average pooling over H and W, NHWC -> NC."""
+    return jnp.mean(x, axis=(1, 2))

@@ -1,0 +1,202 @@
+"""SLBC — SIMD Low-Bitwidth Convolution as a Pallas kernel (Layer 1).
+
+The paper's core arithmetic trick (Eq. 3–7): pack several ``s_b``-bit
+operands into one wide integer so that a *single* multiplication computes
+many multiply-accumulates at once, then segment the convolution outputs out
+of the product's bit-fields:
+
+    R1 = sum_i s[i] * 2^(i*S)          (packed signal group)
+    R2 = sum_j k[j] * 2^(j*S)          (packed kernel)
+    P  = R1 * R2 = sum_n y[n] * 2^(n*S)   with  y = conv_full(s, k)
+
+On the Cortex-M7 the "wide integer" is a 32-bit DSP register treated as
+SIMD lanes; the Rust Layer-3 operators replay exactly this scheme on the
+cycle-level MCU simulator. Here the same insight is re-expressed for the
+TPU-era stack (see DESIGN.md §Hardware-Adaptation): a Pallas kernel packs
+groups into int64 "registers", performs one multiply per group, and extracts
+the fields — raising effective MACs per hardware multiply exactly as the
+paper raises MACs per SIMD instruction. ``interpret=True`` throughout (the
+CPU PJRT plugin cannot execute Mosaic custom-calls).
+
+Field-width rule (guard bits): with ``sx``-bit signal, ``sk``-bit kernel and
+``K`` taps, a convolution output needs ``sx + sk + ceil(log2(K))`` bits, so
+the field stride ``S`` must satisfy that bound, and a 63-bit register packs
+``G = floor(63 / S) - K + 1`` signal elements per multiply (the top ``K-1``
+fields of the product spill into the next group — the overlap the paper's
+segmentation stage, and RP-SLBC's reordering, deal with).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+#: Width in bits of the simulated wide register. int64 is used as the
+#: carrier; one sign bit is reserved, hence 63 usable bits.
+REGISTER_BITS = 63
+
+
+def field_width(sx_bits: int, sk_bits: int, k_taps: int) -> int:
+    """Minimal field stride ``S`` so packed convolution outputs never carry
+    into the neighbouring field (paper §IV.A, the guard-bit condition)."""
+    if k_taps < 1:
+        raise ValueError("kernel must have at least one tap")
+    guard = max(1, math.ceil(math.log2(k_taps))) if k_taps > 1 else 0
+    return sx_bits + sk_bits + guard
+
+
+def group_size(sx_bits: int, sk_bits: int, k_taps: int) -> int:
+    """Number of signal elements packed per wide multiply.
+
+    The product of a ``G``-field signal register and a ``K``-field kernel
+    register occupies ``G + K - 1`` fields, all of which must fit in the
+    63-bit carrier.
+    """
+    s = field_width(sx_bits, sk_bits, k_taps)
+    g = REGISTER_BITS // s - (k_taps - 1)
+    if g < 1:
+        raise ValueError(
+            f"bitwidths sx={sx_bits} sk={sk_bits} with K={k_taps} taps do "
+            f"not fit a {REGISTER_BITS}-bit register"
+        )
+    return g
+
+
+def _slbc_kernel(x_ref, k_ref, o_ref, *, sx_bits, sk_bits, k_taps, n_groups, g):
+    """Pallas kernel body: pack → multiply → segment, one group per step.
+
+    The output ref is pre-zeroed and accumulated across groups with the
+    overlap handling of Eq. 11: fields ``>= G`` of group ``i`` land in the
+    territory of group ``i+1``.
+    """
+    s = field_width(sx_bits, sk_bits, k_taps)
+    mask = jnp.int64((1 << s) - 1)
+
+    # Pack the kernel once: R2 = sum_j k[j] << (j*S)   (paper Eq. 4)
+    shifts_k = (jnp.arange(k_taps, dtype=jnp.int64) * s).astype(jnp.int64)
+    r2 = jnp.sum(k_ref[...].astype(jnp.int64) << shifts_k)
+
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+    shifts_g = (jnp.arange(g, dtype=jnp.int64) * s).astype(jnp.int64)
+    n_fields = g + k_taps - 1
+
+    def body(i, _):
+        # Pack one signal group: R1 = sum_i s[gi + i] << (i*S)  (Eq. 3)
+        grp = lax.dynamic_slice(x_ref[...], (i * g,), (g,)).astype(jnp.int64)
+        r1 = jnp.sum(grp << shifts_g)
+        # One wide multiply performs g*k_taps MACs (Eq. 5).
+        p = r1 * r2
+        # Segmentation: extract the n_fields convolution outputs (Eq. 7)
+        # and accumulate them at their global positions (Eq. 11).
+        fields = (p >> (jnp.arange(n_fields, dtype=jnp.int64) * s)) & mask
+        cur = lax.dynamic_slice(o_ref[...], (i * g,), (n_fields,))
+        o_ref[...] = lax.dynamic_update_slice(o_ref[...], cur + fields, (i * g,))
+        return 0
+
+    lax.fori_loop(0, n_groups, body, 0)
+
+
+def slbc_conv1d_full(x, k, *, sx_bits: int, sk_bits: int):
+    """Full 1-D convolution of unsigned low-bitwidth sequences via packing.
+
+    ``x``: int32/int64 array of non-negative ``sx_bits``-bit values
+    (length padded internally to a multiple of the group size);
+    ``k``: non-negative ``sk_bits``-bit kernel taps. Returns
+    ``len(x) + len(k) - 1`` int64 outputs, bit-exact with
+    :func:`ref.conv1d_full`.
+
+    Signedness: like the MCU operators (and CMix-NN), signed operands are
+    handled one level up by offsetting into unsigned range; the packed
+    arithmetic itself is unsigned.
+    """
+    if not jax.config.jax_enable_x64:
+        raise RuntimeError(
+            "slbc kernels need jax_enable_x64 (the 63-bit carrier register)"
+        )
+    n = x.shape[0]
+    k_taps = k.shape[0]
+    g = group_size(sx_bits, sk_bits, k_taps)
+    n_groups = -(-n // g)  # ceil
+    n_pad = n_groups * g
+
+    x64 = jnp.zeros((n_pad,), jnp.int64).at[:n].set(x.astype(jnp.int64))
+    k64 = k.astype(jnp.int64)
+    out_len = n_pad + k_taps - 1
+
+    out = pl.pallas_call(
+        partial(
+            _slbc_kernel,
+            sx_bits=sx_bits,
+            sk_bits=sk_bits,
+            k_taps=k_taps,
+            n_groups=n_groups,
+            g=g,
+        ),
+        out_shape=jax.ShapeDtypeStruct((out_len,), jnp.int64),
+        interpret=True,
+    )(x64, k64)
+    return out[: n + k_taps - 1]
+
+
+def _slbc_dot_kernel(a_ref, b_ref, o_ref, *, sa_bits, sb_bits, n, g):
+    """Packed dot product: the dense-layer / im2col-inner-loop variant.
+
+    Packs ``a`` ascending and ``b`` descending within each group so the
+    middle field of the product accumulates the group's dot product — the
+    same trick SLBC's Rust `conv_slbc` uses for the matmul-shaped inner
+    loops, and the degenerate (single-output) case of Eq. 5.
+    """
+    s = field_width(sa_bits, sb_bits, g)
+    mask = jnp.int64((1 << s) - 1)
+    n_groups = n // g
+    shifts_a = (jnp.arange(g, dtype=jnp.int64) * s).astype(jnp.int64)
+    shifts_b = shifts_a[::-1]
+    mid = jnp.int64((g - 1) * s)
+
+    def body(i, acc):
+        ga = lax.dynamic_slice(a_ref[...], (i * g,), (g,)).astype(jnp.int64)
+        gb = lax.dynamic_slice(b_ref[...], (i * g,), (g,)).astype(jnp.int64)
+        ra = jnp.sum(ga << shifts_a)
+        rb = jnp.sum(gb << shifts_b)
+        return acc + (((ra * rb) >> mid) & mask)
+
+    o_ref[0] = lax.fori_loop(0, n_groups, body, jnp.int64(0))
+
+
+def slbc_dot(a, b, *, sa_bits: int, sb_bits: int):
+    """Packed dot product of two unsigned low-bitwidth vectors.
+
+    Length is padded to a multiple of the group size; returns a scalar
+    int64 equal to ``sum(a * b)``.
+    """
+    n = a.shape[0]
+    # For a dot product every field accumulates up to g products, so the
+    # guard must cover g itself; solve for the largest feasible g.
+    g = 1
+    while True:
+        s_next = field_width(sa_bits, sb_bits, g + 1)
+        if (2 * (g + 1) - 1) * s_next > REGISTER_BITS:
+            break
+        g += 1
+    n_pad = -(-n // g) * g
+    a64 = jnp.zeros((n_pad,), jnp.int64).at[:n].set(a.astype(jnp.int64))
+    b64 = jnp.zeros((n_pad,), jnp.int64).at[:n].set(b.astype(jnp.int64))
+
+    out = pl.pallas_call(
+        partial(_slbc_dot_kernel, sa_bits=sa_bits, sb_bits=sb_bits, n=n_pad, g=g),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int64),
+        interpret=True,
+    )(a64, b64)
+    return out[0]
+
+
+def macs_per_multiply(sx_bits: int, sk_bits: int, k_taps: int) -> int:
+    """Effective MACs performed by one wide multiply — the quantity Fig. 6
+    compares against CMix-NN's lanes-only packing."""
+    return group_size(sx_bits, sk_bits, k_taps) * k_taps

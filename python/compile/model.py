@@ -1,0 +1,368 @@
+"""Layer-2: mixed-precision CNN + EdMIPS-style quantization supernet (JAX).
+
+This module defines — entirely at build time — every compute graph the Rust
+Layer-3 coordinator executes through PJRT:
+
+* ``qat_train_step`` / ``eval_step`` / ``infer``: the mixed-precision model
+  with per-layer weight/activation bitwidths as *runtime tensors*, so one
+  artifact serves every quantization configuration the NAS emits.
+* ``supernet_train_step``: the differentiable hardware-aware quantization
+  explorer (paper §III.B). Each layer holds branch logits over the bitwidth
+  options; the complexity loss contracts ``softmax(alpha_w) · C ·
+  softmax(alpha_a)`` against a cost table **supplied by Rust as an input**
+  — the HW/SW co-design seam: Layer 3's Eq. 12 packing performance model
+  drives Layer 2's gradient-based search.
+
+All quantizers are the Layer-1 Pallas kernels from ``kernels.quant``; the
+model layer math is checked against ``kernels.ref`` by the pytest suite.
+
+Parameters live in ONE flat f32 vector (offsets recorded in the manifest),
+which keeps the Rust FFI surface to a handful of buffers per step.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import ref
+from .kernels.quant import fake_quant_signed, fake_quant_unsigned
+
+#: Bitwidth options of the quantization search space Q (paper §III.B).
+#: MCU-MixQ supports every integer bitwidth in [2, 8].
+OPTIONS: List[int] = [2, 3, 4, 5, 6, 7, 8]
+
+#: SGD momentum used by both training loops.
+MOMENTUM = 0.9
+
+
+@dataclass
+class LayerSpec:
+    """One quantizable layer. Mirrored verbatim into the JSON manifest so
+    the Rust side (perf model, engine, planner) sees identical geometry."""
+
+    name: str
+    kind: str  # "conv" | "dwconv" | "dense"
+    cin: int
+    cout: int
+    k: int = 1
+    stride: int = 1
+    in_h: int = 1
+    in_w: int = 1
+    out_h: int = 1
+    out_w: int = 1
+    pool_after: bool = False  # 2x2 max-pool after activation
+    gap_before: bool = False  # global-average-pool before a dense layer
+    w_offset: int = 0
+    w_size: int = 0
+    b_offset: int = 0
+    b_size: int = 0
+    macs: int = 0
+
+    def weight_shape(self):
+        if self.kind == "conv":
+            return (self.k, self.k, self.cin, self.cout)
+        if self.kind == "dwconv":
+            return (self.k, self.k, 1, self.cout)
+        if self.kind == "dense":
+            return (self.cin, self.cout)
+        raise ValueError(self.kind)
+
+
+@dataclass
+class Backbone:
+    """A model family entry of the zoo (VGG-Tiny / MobileNet-Tiny)."""
+
+    name: str
+    input_hw: int
+    input_c: int
+    num_classes: int
+    layers: List[LayerSpec] = field(default_factory=list)
+    param_count: int = 0
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+
+def _finalize(bb: Backbone) -> Backbone:
+    """Assign flat-vector offsets and MAC counts."""
+    off = 0
+    for l in bb.layers:
+        wshape = l.weight_shape()
+        l.w_offset = off
+        l.w_size = int(jnp.prod(jnp.array(wshape)))
+        off += l.w_size
+        l.b_offset = off
+        l.b_size = l.cout
+        off += l.b_size
+        if l.kind == "conv":
+            l.macs = l.out_h * l.out_w * l.k * l.k * l.cin * l.cout
+        elif l.kind == "dwconv":
+            l.macs = l.out_h * l.out_w * l.k * l.k * l.cout
+        else:
+            l.macs = l.cin * l.cout
+    bb.param_count = off
+    return bb
+
+
+def vgg_tiny(num_classes: int = 10, hw: int = 16) -> Backbone:
+    """VGG-Tiny: the paper's VGG-style compact backbone (Table I row 1).
+
+    conv16-conv16-pool / conv32-conv32-pool / conv64-pool / dense."""
+    h = hw
+    layers = [
+        LayerSpec("conv1", "conv", 3, 16, 3, 1, h, h, h, h),
+        LayerSpec("conv2", "conv", 16, 16, 3, 1, h, h, h, h, pool_after=True),
+    ]
+    h //= 2
+    layers += [
+        LayerSpec("conv3", "conv", 16, 32, 3, 1, h, h, h, h),
+        LayerSpec("conv4", "conv", 32, 32, 3, 1, h, h, h, h, pool_after=True),
+    ]
+    h //= 2
+    layers += [
+        LayerSpec("conv5", "conv", 32, 64, 3, 1, h, h, h, h, pool_after=True),
+    ]
+    h //= 2
+    layers += [
+        LayerSpec("fc", "dense", h * h * 64, num_classes),
+    ]
+    return _finalize(Backbone("vgg_tiny", hw, 3, num_classes, layers))
+
+
+def mobilenet_tiny(num_classes: int = 2, hw: int = 16) -> Backbone:
+    """MobileNet-Tiny: depthwise-separable compact backbone (Table I row 2).
+
+    conv16 / dw+pw32-pool / dw+pw64-pool / dw+pw64 / GAP-dense."""
+    h = hw
+    layers = [
+        LayerSpec("conv1", "conv", 3, 16, 3, 1, h, h, h, h),
+        LayerSpec("dw1", "dwconv", 16, 16, 3, 1, h, h, h, h),
+        LayerSpec("pw1", "conv", 16, 32, 1, 1, h, h, h, h, pool_after=True),
+    ]
+    h //= 2
+    layers += [
+        LayerSpec("dw2", "dwconv", 32, 32, 3, 1, h, h, h, h),
+        LayerSpec("pw2", "conv", 32, 64, 1, 1, h, h, h, h, pool_after=True),
+    ]
+    h //= 2
+    layers += [
+        LayerSpec("dw3", "dwconv", 64, 64, 3, 1, h, h, h, h),
+        LayerSpec("pw3", "conv", 64, 64, 1, 1, h, h, h, h),
+        LayerSpec("fc", "dense", 64, num_classes, gap_before=True),
+    ]
+    return _finalize(Backbone("mobilenet_tiny", hw, 3, num_classes, layers))
+
+
+BACKBONES = {
+    "vgg_tiny": vgg_tiny,
+    "mobilenet_tiny": mobilenet_tiny,
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter handling
+# --------------------------------------------------------------------------
+
+
+def init_params(bb: Backbone, seed: int = 0) -> jnp.ndarray:
+    """He-initialised flat parameter vector (deterministic)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for l in bb.layers:
+        key, sub = jax.random.split(key)
+        wshape = l.weight_shape()
+        fan_in = l.k * l.k * (1 if l.kind == "dwconv" else l.cin)
+        if l.kind == "dense":
+            fan_in = l.cin
+        std = (2.0 / max(fan_in, 1)) ** 0.5
+        chunks.append(jax.random.normal(sub, wshape, jnp.float32).reshape(-1) * std)
+        chunks.append(jnp.zeros((l.cout,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def _slice_params(flat: jnp.ndarray, l: LayerSpec):
+    w = flat[l.w_offset : l.w_offset + l.w_size].reshape(l.weight_shape())
+    b = flat[l.b_offset : l.b_offset + l.b_size]
+    return w, b
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+
+def _apply_layer(l: LayerSpec, h: jnp.ndarray, wq: jnp.ndarray, b: jnp.ndarray,
+                 last: bool) -> jnp.ndarray:
+    if l.kind == "conv":
+        h = ref.conv2d_nhwc(h, wq, l.stride) + b
+    elif l.kind == "dwconv":
+        h = ref.depthwise_conv2d_nhwc(h, wq, l.stride) + b
+    else:
+        if l.gap_before:
+            h = ref.global_avg_pool(h)
+        elif h.ndim == 4:
+            h = h.reshape(h.shape[0], -1)
+        h = ref.dense(h, wq, b)
+    if not last:
+        h = jax.nn.relu(h)
+        if l.pool_after:
+            h = ref.max_pool_2x2(h)
+    return h
+
+
+def forward(bb: Backbone, flat: jnp.ndarray, x: jnp.ndarray,
+            wbits: jnp.ndarray, abits: jnp.ndarray) -> jnp.ndarray:
+    """Mixed-precision forward with per-layer runtime bitwidths.
+
+    ``wbits``/``abits`` are f32 vectors of length ``bb.num_layers`` — the
+    exact tensors the Rust coordinator ships after the NAS picks a config.
+    """
+    h = x
+    n = bb.num_layers
+    for i, l in enumerate(bb.layers):
+        w, b = _slice_params(flat, l)
+        wq = fake_quant_signed(w, wbits[i])
+        h = fake_quant_unsigned(h, abits[i]) if i > 0 else h
+        h = _apply_layer(l, h, wq, b, last=(i == n - 1))
+    return h
+
+
+def _hard_mix(logits_row: jnp.ndarray) -> jnp.ndarray:
+    """Straight-through branch weights: forward uses the argmax branch
+    (one-hot), gradients flow through the softmax.
+
+    A pure soft mixture lets the supernet co-adapt to the *average* of all
+    quantization branches, so the cross-entropy stops penalizing cheap
+    branches and the complexity loss drags every layer to the minimum
+    bitwidth (the classic DNAS collapse). Hard selection keeps the CE tied
+    to the configuration that argmax will actually select.
+    """
+    sm = jax.nn.softmax(logits_row)
+    hard = jax.nn.one_hot(jnp.argmax(sm), sm.shape[-1], dtype=sm.dtype)
+    return hard + sm - lax.stop_gradient(sm)
+
+
+def supernet_forward(bb: Backbone, flat: jnp.ndarray,
+                     alpha_w: jnp.ndarray, alpha_a: jnp.ndarray,
+                     x: jnp.ndarray) -> jnp.ndarray:
+    """EdMIPS-style composite forward over quantization branches.
+
+    Weights use the softmax-weighted mix of branches (the efficient
+    factorised form — mix quantized weights, then one convolution);
+    activations use straight-through hard selection (see [`_hard_mix`]),
+    which anchors the search to configurations whose *discrete* selection
+    is actually trainable.
+    """
+    h = x
+    n = bb.num_layers
+    sm_w = jax.nn.softmax(alpha_w, axis=1)  # [L, K]
+    for i, l in enumerate(bb.layers):
+        w, b = _slice_params(flat, l)
+        wq = sum(
+            sm_w[i, j] * fake_quant_signed(w, float(opt))
+            for j, opt in enumerate(OPTIONS)
+        )
+        if i > 0:
+            mix_a = _hard_mix(alpha_a[i])
+            h = sum(
+                mix_a[j] * fake_quant_unsigned(h, float(opt))
+                for j, opt in enumerate(OPTIONS)
+            )
+        h = _apply_layer(l, h, wq, b, last=(i == n - 1))
+    return h
+
+
+# --------------------------------------------------------------------------
+# Losses and train/eval steps
+# --------------------------------------------------------------------------
+
+
+def _ce_and_acc(logits: jnp.ndarray, y: jnp.ndarray):
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y, logits.shape[-1], dtype=jnp.float32)
+    ce = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return ce, acc
+
+
+def make_qat_train_step(bb: Backbone):
+    """(params, mom, x, y, wbits, abits, lr) -> (params', mom', loss, acc).
+
+    Plain SGD+momentum QAT step (paper's final stage before deployment)."""
+
+    def step(flat, mom, x, y, wbits, abits, lr):
+        def loss_fn(p):
+            logits = forward(bb, p, x, wbits, abits)
+            return _ce_and_acc(logits, y)
+
+        (loss, acc), g = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        mom2 = MOMENTUM * mom + g
+        flat2 = flat - lr * mom2
+        return flat2, mom2, loss, acc
+
+    return step
+
+
+def make_eval_step(bb: Backbone):
+    """(params, x, y, wbits, abits) -> (loss, acc)."""
+
+    def step(flat, x, y, wbits, abits):
+        logits = forward(bb, flat, x, wbits, abits)
+        loss, acc = _ce_and_acc(logits, y)
+        return loss, acc
+
+    return step
+
+
+def make_infer(bb: Backbone):
+    """(params, x, wbits, abits) -> logits — batch-1 deployment graph."""
+
+    def run(flat, x, wbits, abits):
+        return forward(bb, flat, x, wbits, abits)
+
+    return run
+
+
+def make_supernet_train_step(bb: Backbone):
+    """The hardware-aware quantization explorer's inner step.
+
+    Signature (all f32 unless noted):
+        (params, mom, alpha_w[L,K], alpha_a[L,K], x, y(int32),
+         cost[L,K,K], lr, lr_alpha, lam)
+        -> (params', mom', alpha_w', alpha_a',
+            loss, acc_loss, comp_loss, acc)
+
+    ``cost[l, i, j]`` is the Layer-3 packing performance model's predicted
+    complexity (Eq. 12) of layer ``l`` at weight-bitwidth ``OPTIONS[i]`` and
+    activation-bitwidth ``OPTIONS[j]``, normalised by Rust. The complexity
+    loss is its bilinear expectation under the branch softmaxes (Eq. 1–2),
+    so its gradient steers the alphas toward bitwidths that are *cheap under
+    SLBC packing*, not merely low.
+    """
+
+    def step(flat, mom, alpha_w, alpha_a, x, y, cost, lr, lr_alpha, lam):
+        def loss_fn(p, aw, aa):
+            logits = supernet_forward(bb, p, aw, aa, x)
+            ce, acc = _ce_and_acc(logits, y)
+            sm_w = jax.nn.softmax(aw, axis=1)
+            sm_a = jax.nn.softmax(aa, axis=1)
+            comp = jnp.sum(jnp.einsum("li,lij,lj->l", sm_w, cost, sm_a))
+            total = ce + lam * comp
+            return total, (ce, lam * comp, acc)
+
+        grads = jax.grad(loss_fn, argnums=(0, 1, 2), has_aux=True)
+        (gp, gw, ga), (ce, comp, acc) = grads(flat, alpha_w, alpha_a)
+        mom2 = MOMENTUM * mom + gp
+        flat2 = flat - lr * mom2
+        aw2 = alpha_w - lr_alpha * gw
+        aa2 = alpha_a - lr_alpha * ga
+        total = ce + comp
+        return flat2, mom2, aw2, aa2, total, ce, comp, acc
+
+    return step

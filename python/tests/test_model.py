@@ -1,0 +1,158 @@
+"""Layer-2 correctness: model shapes, training dynamics, supernet behaviour.
+
+These tests exercise exactly the programs aot.py lowers, so green here means
+the HLO artifacts the Rust coordinator loads compute sensible things."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _batch(bb, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0, 1, (n, bb.input_hw, bb.input_hw, bb.input_c))
+                    .astype(np.float32))
+    y = jnp.asarray(rng.integers(0, bb.num_classes, n).astype(np.int32))
+    return x, y
+
+
+def _bits(bb, b=8.0):
+    return jnp.full((bb.num_layers,), b, jnp.float32)
+
+
+@pytest.fixture(scope="module", params=["vgg_tiny", "mobilenet_tiny"])
+def bb(request):
+    n_classes = 10 if request.param == "vgg_tiny" else 2
+    return M.BACKBONES[request.param](num_classes=n_classes)
+
+
+class TestGeometry:
+    def test_param_offsets_contiguous(self, bb):
+        off = 0
+        for l in bb.layers:
+            assert l.w_offset == off
+            off += l.w_size
+            assert l.b_offset == off
+            off += l.b_size
+        assert bb.param_count == off
+
+    def test_macs_positive(self, bb):
+        assert all(l.macs > 0 for l in bb.layers)
+
+    def test_init_params_shape_and_determinism(self, bb):
+        p1 = M.init_params(bb, seed=0)
+        p2 = M.init_params(bb, seed=0)
+        assert p1.shape == (bb.param_count,)
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+    def test_vgg_fits_stm32_flash_at_8bit(self):
+        vgg = M.vgg_tiny()
+        assert vgg.param_count <= 1024 * 1024  # 1 MB flash at int8
+
+
+class TestForward:
+    def test_logits_shape(self, bb):
+        p = M.init_params(bb)
+        x, _ = _batch(bb, 4)
+        logits = M.forward(bb, p, x, _bits(bb), _bits(bb))
+        assert logits.shape == (4, bb.num_classes)
+
+    def test_8bit_close_to_fp32_behaviour(self, bb):
+        # 8-bit fake-quant should barely move the logits vs 8-bit weights
+        # at different activation widths (monotone degradation).
+        p = M.init_params(bb)
+        x, _ = _batch(bb, 8)
+        l8 = M.forward(bb, p, x, _bits(bb, 8.0), _bits(bb, 8.0))
+        l2 = M.forward(bb, p, x, _bits(bb, 2.0), _bits(bb, 2.0))
+        base = M.forward(bb, p, x, _bits(bb, 8.0), _bits(bb, 8.0))
+        err8 = float(jnp.mean((l8 - base) ** 2))
+        err2 = float(jnp.mean((l2 - base) ** 2))
+        assert err8 <= err2
+
+    def test_mixed_bit_vector_accepted(self, bb):
+        p = M.init_params(bb)
+        x, _ = _batch(bb, 2)
+        wb = jnp.asarray([(2 + i % 7) for i in range(bb.num_layers)], jnp.float32)
+        logits = M.forward(bb, p, x, wb, wb)
+        assert jnp.isfinite(logits).all()
+
+
+class TestQatTraining:
+    def test_loss_decreases(self, bb):
+        step = jax.jit(M.make_qat_train_step(bb))
+        p = M.init_params(bb)
+        mom = jnp.zeros_like(p)
+        x, y = _batch(bb, 32, seed=1)
+        wb, ab = _bits(bb, 4.0), _bits(bb, 4.0)
+        first = None
+        for i in range(30):
+            p, mom, loss, acc = step(p, mom, x, y, wb, ab, jnp.float32(0.05))
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first
+
+    def test_eval_matches_forward(self, bb):
+        ev = jax.jit(M.make_eval_step(bb))
+        p = M.init_params(bb)
+        x, y = _batch(bb, 16)
+        loss, acc = ev(p, x, y, _bits(bb), _bits(bb))
+        assert 0.0 <= float(acc) <= 1.0
+        assert np.isfinite(float(loss))
+
+
+class TestSupernet:
+    def test_step_shapes_and_finiteness(self, bb):
+        L, K = bb.num_layers, len(M.OPTIONS)
+        step = jax.jit(M.make_supernet_train_step(bb))
+        p = M.init_params(bb)
+        mom = jnp.zeros_like(p)
+        aw = jnp.zeros((L, K), jnp.float32)
+        aa = jnp.zeros((L, K), jnp.float32)
+        x, y = _batch(bb, 16, seed=2)
+        cost = jnp.ones((L, K, K), jnp.float32) / (L * K * K)
+        out = step(p, mom, aw, aa, x, y, cost,
+                   jnp.float32(0.05), jnp.float32(0.1), jnp.float32(1.0))
+        p2, mom2, aw2, aa2, loss, ce, comp, acc = out
+        assert aw2.shape == (L, K) and aa2.shape == (L, K)
+        for t in (loss, ce, comp, acc):
+            assert np.isfinite(float(t))
+
+    def test_cost_gradient_steers_alphas(self, bb):
+        # With a cost table that monotonically punishes high bitwidths and
+        # lambda large, alphas must drift toward low-bit options.
+        L, K = bb.num_layers, len(M.OPTIONS)
+        step = jax.jit(M.make_supernet_train_step(bb))
+        p = M.init_params(bb)
+        mom = jnp.zeros_like(p)
+        aw = jnp.zeros((L, K), jnp.float32)
+        aa = jnp.zeros((L, K), jnp.float32)
+        x, y = _batch(bb, 16, seed=3)
+        per_bit = jnp.asarray(M.OPTIONS, jnp.float32)
+        cost = (per_bit[None, :, None] * per_bit[None, None, :]) * jnp.ones((L, 1, 1))
+        cost = cost / jnp.sum(cost)
+        for _ in range(20):
+            p, mom, aw, aa, *_ = step(p, mom, aw, aa, x, y, cost,
+                                      jnp.float32(0.0), jnp.float32(0.5),
+                                      jnp.float32(50.0))
+        # expected bitwidth decreased vs uniform init
+        sm = jax.nn.softmax(aw, axis=1)
+        exp_bits = float(jnp.mean(sm @ per_bit))
+        assert exp_bits < float(jnp.mean(per_bit))
+
+    def test_zero_lambda_reduces_to_accuracy_only(self, bb):
+        L, K = bb.num_layers, len(M.OPTIONS)
+        step = jax.jit(M.make_supernet_train_step(bb))
+        p = M.init_params(bb)
+        mom = jnp.zeros_like(p)
+        aw = jnp.zeros((L, K), jnp.float32)
+        aa = jnp.zeros((L, K), jnp.float32)
+        x, y = _batch(bb, 8, seed=4)
+        cost = jnp.ones((L, K, K), jnp.float32)
+        out = step(p, mom, aw, aa, x, y, cost,
+                   jnp.float32(0.05), jnp.float32(0.1), jnp.float32(0.0))
+        _, _, _, _, loss, ce, comp, _ = out
+        assert float(comp) == 0.0
+        assert abs(float(loss) - float(ce)) < 1e-6

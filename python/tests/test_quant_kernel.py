@@ -1,0 +1,97 @@
+"""Layer-1 correctness: fake-quant Pallas kernels vs the jnp oracle,
+plus STE gradient behaviour (the property QAT relies on)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quant import fake_quant_signed, fake_quant_unsigned
+
+
+def _rand(rng, shape, lo=-3.0, hi=3.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+class TestSignedKernel:
+    @pytest.mark.parametrize("bits", [2.0, 3.0, 4.0, 6.0, 8.0])
+    @pytest.mark.parametrize("shape", [(7,), (4, 5), (2, 3, 3, 4)])
+    def test_matches_reference(self, bits, shape):
+        rng = np.random.default_rng(int(bits) * 10 + len(shape))
+        x = _rand(rng, shape)
+        got = fake_quant_signed(x, bits)
+        want = ref.fake_quant_signed(x, jnp.float32(bits))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_level_count(self):
+        # A b-bit signed quantizer emits at most 2^b - 1 distinct values.
+        rng = np.random.default_rng(0)
+        x = _rand(rng, (4096,))
+        for b in (2, 3, 4):
+            q = np.asarray(fake_quant_signed(x, float(b)))
+            assert len(np.unique(q)) <= 2**b - 1
+
+    def test_idempotent(self):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, (128,))
+        q1 = fake_quant_signed(x, 4.0)
+        q2 = fake_quant_signed(q1, 4.0)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+    def test_ste_gradient_is_identity(self):
+        rng = np.random.default_rng(2)
+        x = _rand(rng, (32,))
+        g = jax.grad(lambda v: jnp.sum(fake_quant_signed(v, 4.0)))(x)
+        np.testing.assert_allclose(np.asarray(g), np.ones(32), atol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(bits=st.integers(2, 8), n=st.integers(1, 300),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_error_bounded_by_half_step(self, bits, n, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (n,))
+        q = np.asarray(fake_quant_signed(x, float(bits)))
+        levels = 2.0 ** (bits - 1) - 1.0
+        scale = max(float(jnp.max(jnp.abs(x))), 1e-8) / levels
+        assert np.max(np.abs(q - np.asarray(x))) <= scale / 2 + 1e-6
+
+
+class TestUnsignedKernel:
+    @pytest.mark.parametrize("bits", [2.0, 4.0, 8.0])
+    def test_matches_reference(self, bits):
+        rng = np.random.default_rng(int(bits))
+        x = _rand(rng, (6, 6))
+        got = fake_quant_unsigned(x, bits)
+        want = ref.fake_quant_unsigned(x, jnp.float32(bits))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_clips_negatives_to_zero(self):
+        x = jnp.asarray([-1.0, -0.5, 0.5, 1.0], jnp.float32)
+        q = np.asarray(fake_quant_unsigned(x, 4.0))
+        assert (q[:2] == 0).all() and (q[2:] > 0).all()
+
+    def test_gradient_gated_at_zero(self):
+        x = jnp.asarray([-1.0, 2.0], jnp.float32)
+        g = jax.grad(lambda v: jnp.sum(fake_quant_unsigned(v, 4.0)))(x)
+        np.testing.assert_allclose(np.asarray(g), [0.0, 1.0], atol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(bits=st.integers(2, 8), n=st.integers(1, 300),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_nonneg_and_bounded(self, bits, n, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, (n,))
+        q = np.asarray(fake_quant_unsigned(x, float(bits)))
+        assert (q >= 0).all()
+        assert float(q.max(initial=0.0)) <= float(jnp.maximum(x, 0).max()) + 1e-5
+
+    def test_more_bits_less_error(self):
+        rng = np.random.default_rng(3)
+        x = jnp.abs(_rand(rng, (2048,)))
+        errs = []
+        for b in (2.0, 4.0, 8.0):
+            q = fake_quant_unsigned(x, b)
+            errs.append(float(jnp.mean((q - x) ** 2)))
+        assert errs[0] > errs[1] > errs[2]

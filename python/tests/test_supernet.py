@@ -1,0 +1,167 @@
+"""Supernet-specific behaviour: the straight-through hard activation
+selection, the DNAS-collapse regression, and the AOT manifest contract.
+
+These pin down exactly the properties the Rust coordinator relies on when
+it drives `supernet_train_step` through PJRT."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _batch(bb, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(
+        rng.uniform(0, 1, (n, bb.input_hw, bb.input_hw, bb.input_c)).astype(np.float32)
+    )
+    y = jnp.asarray(rng.integers(0, bb.num_classes, n).astype(np.int32))
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def bb():
+    return M.BACKBONES["vgg_tiny"](num_classes=10)
+
+
+class TestHardMix:
+    def test_forward_uses_argmax_branch(self):
+        # _hard_mix must return exactly one-hot in the forward pass.
+        logits = jnp.array([0.3, 2.0, -1.0, 0.9])
+        mix = M._hard_mix(logits)
+        np.testing.assert_allclose(np.asarray(mix), [0.0, 1.0, 0.0, 0.0], atol=1e-6)
+
+    def test_gradient_flows_through_softmax(self):
+        # d(mix)/d(logits) must equal the softmax Jacobian row-sums — i.e.
+        # nonzero even though the forward value is a constant one-hot.
+        logits = jnp.array([0.5, 1.5, -0.5])
+
+        def f(lg):
+            return jnp.sum(M._hard_mix(lg) * jnp.array([1.0, 2.0, 3.0]))
+
+        g = jax.grad(f)(logits)
+        assert np.abs(np.asarray(g)).sum() > 1e-3
+
+    def test_supernet_forward_equals_argmax_subnet(self, bb):
+        # With hard activation selection and near-one-hot weight logits,
+        # the supernet forward must equal the plain forward at the argmax
+        # configuration.
+        L, K = bb.num_layers, len(M.OPTIONS)
+        flat = M.init_params(bb, seed=1)
+        x, _ = _batch(bb, 4, seed=2)
+        idx_w = np.array([3] * L)  # 5-bit weights
+        idx_a = np.array([5] * L)  # 7-bit activations
+        aw = np.full((L, K), -40.0, np.float32)
+        aa = np.full((L, K), -40.0, np.float32)
+        aw[np.arange(L), idx_w] = 40.0
+        aa[np.arange(L), idx_a] = 40.0
+        sup = M.supernet_forward(bb, flat, jnp.asarray(aw), jnp.asarray(aa), x)
+        wbits = jnp.asarray([float(M.OPTIONS[i]) for i in idx_w])
+        abits = jnp.asarray([float(M.OPTIONS[i]) for i in idx_a])
+        sub = M.forward(bb, flat, x, wbits, abits)
+        np.testing.assert_allclose(np.asarray(sup), np.asarray(sub), rtol=2e-3, atol=2e-3)
+
+
+class TestCollapseRegression:
+    def test_ce_punishes_low_bit_activation_selection(self, bb):
+        # The DNAS-collapse regression: with hard selection, forcing every
+        # activation branch to 2 bits must *hurt* the CE of a trained net,
+        # giving the alphas a restoring gradient. (A pure soft mixture
+        # fails this: CE goes flat in the alpha_a direction once the net
+        # co-adapts to the branch average.) Train cheaply with the QAT
+        # step at 8-bit, then probe the supernet CE at the two extremes.
+        L, K = bb.num_layers, len(M.OPTIONS)
+        flat = M.init_params(bb, seed=0)
+        mom = jnp.zeros_like(flat)
+        x, y = _batch(bb, 32, seed=3)
+        qat = jax.jit(M.make_qat_train_step(bb))
+        b8 = jnp.full((L,), 8.0)
+        for _ in range(40):  # overfit the fixed batch
+            flat, mom, loss, acc = qat(flat, mom, x, y, b8, b8, 0.02)
+        assert float(acc) > 0.6, f"training probe failed to learn: acc {acc}"
+
+        aw = np.full((L, K), -40.0, np.float32)
+        aw[:, -1] = 40.0  # weights pinned at 8-bit for both probes
+
+        def ce_at(aa_val):
+            logits = M.supernet_forward(bb, flat, jnp.asarray(aw), aa_val, x)
+            logp = jax.nn.log_softmax(logits)
+            onehot = jax.nn.one_hot(y, logits.shape[-1], dtype=jnp.float32)
+            return float(-jnp.mean(jnp.sum(onehot * logp, axis=-1)))
+
+        lo = np.full((L, K), -40.0, np.float32)
+        lo[:, 0] = 40.0  # all 2-bit
+        hi = np.full((L, K), -40.0, np.float32)
+        hi[:, -1] = 40.0  # all 8-bit
+        assert ce_at(jnp.asarray(lo)) > ce_at(jnp.asarray(hi)) + 0.1
+
+    def test_alpha_gradient_nonzero_for_activations(self, bb):
+        L, K = bb.num_layers, len(M.OPTIONS)
+        flat = M.init_params(bb, seed=0)
+        x, y = _batch(bb, 8, seed=4)
+
+        def loss(aa):
+            logits = M.supernet_forward(
+                bb, flat, jnp.zeros((L, K)), aa, x
+            )
+            logp = jax.nn.log_softmax(logits)
+            onehot = jax.nn.one_hot(y, logits.shape[-1], dtype=jnp.float32)
+            return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+        g = jax.grad(loss)(jnp.zeros((L, K)))
+        assert float(jnp.abs(g).sum()) > 0.0
+
+
+class TestManifestContract:
+    """The artifacts directory is the Python↔Rust interchange; verify the
+    manifest matches what this module would produce today."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(self.ART, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts/ not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_options_match(self, manifest):
+        assert manifest["options"] == M.OPTIONS
+
+    @pytest.mark.parametrize("name,classes", [("vgg_tiny", 10), ("mobilenet_tiny", 2)])
+    def test_geometry_matches(self, manifest, name, classes):
+        entry = manifest["backbones"][name]
+        bb = M.BACKBONES[name](num_classes=classes)
+        assert entry["param_count"] == bb.param_count
+        assert entry["num_layers"] == bb.num_layers
+        for got, l in zip(entry["layers"], bb.layers):
+            assert got["name"] == l.name
+            assert got["w_offset"] == l.w_offset
+            assert got["w_size"] == l.w_size
+            assert got["macs"] == l.macs
+
+    @pytest.mark.parametrize("name,classes", [("vgg_tiny", 10), ("mobilenet_tiny", 2)])
+    def test_init_bin_matches_init_params(self, manifest, name, classes):
+        entry = manifest["backbones"][name]
+        path = os.path.join(self.ART, entry["init"])
+        bb = M.BACKBONES[name](num_classes=classes)
+        disk = np.fromfile(path, dtype="<f4")
+        fresh = np.asarray(M.init_params(bb, seed=0))
+        np.testing.assert_allclose(disk, fresh, rtol=1e-6, atol=1e-7)
+
+    @pytest.mark.parametrize(
+        "art", ["qat_step", "eval", "infer", "supernet_step"]
+    )
+    def test_hlo_artifacts_exist_and_parse(self, manifest, art):
+        for name in ("vgg_tiny", "mobilenet_tiny"):
+            rel = manifest["backbones"][name]["artifacts"][art]
+            path = os.path.join(self.ART, rel)
+            assert os.path.exists(path), path
+            head = open(path).read(200)
+            assert "HloModule" in head, f"{path} is not HLO text"

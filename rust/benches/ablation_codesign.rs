@@ -1,0 +1,117 @@
+//! Ablations of MCU-MixQ's design choices (DESIGN.md §8):
+//!
+//! 1. **Adaptive lane/carrier selection (§IV.C)** — cost/MAC of the
+//!    adaptive plan vs each fixed lane configuration across bitwidths.
+//! 2. **Field-stride widening** — minimal-field packing vs the chosen
+//!    wider stride (guard bits buy in-register accumulation).
+//! 3. **Lifetime SRAM planner** — peak arena vs all-buffers-live across
+//!    backbones and bitwidths.
+//! 4. **Packing-reuse sensitivity** — how the amortization constant
+//!    shifts the SLBC cost model.
+//!
+//! Regenerate with `cargo bench --bench ablation_codesign`.
+
+use mcu_mixq::engine::{plan_memory, Graph, PlanStrategy};
+use mcu_mixq::models::{mobilenet_tiny, vgg_tiny};
+use mcu_mixq::quant::BitConfig;
+use mcu_mixq::simd::adaptive::{best_plan, best_plan_with};
+use mcu_mixq::simd::packing::LaneCfg;
+use mcu_mixq::simd::poly::field_width;
+use mcu_mixq::util::bench::Table;
+
+fn main() {
+    // ---- 1. adaptive vs fixed lane configurations ----------------------
+    println!("Ablation 1 — adaptive lane/carrier selection (cost per MAC, k=3):\n");
+    let mut t = Table::new(vec!["bits (w=a)", "4x8b", "2x16b", "1x32b", "64b", "adaptive"]);
+    for bits in 2..=8u32 {
+        let mut row = vec![format!("{bits}")];
+        for cfg in LaneCfg::all() {
+            let c = best_plan_with(&[cfg], bits, bits, 3)
+                .map(|p| format!("{:.3}", p.cost_per_mac))
+                .unwrap_or_else(|| "—".into());
+            row.push(c);
+        }
+        let a = best_plan(bits, bits, 3).unwrap();
+        row.push(format!("{:.3}", a.cost_per_mac));
+        t.row(row);
+    }
+    t.print();
+    for bits in 2..=8u32 {
+        let a = best_plan(bits, bits, 3).unwrap().cost_per_mac;
+        for cfg in LaneCfg::all() {
+            if let Some(p) = best_plan_with(&[cfg], bits, bits, 3) {
+                assert!(a <= p.cost_per_mac + 1e-9, "adaptive must dominate at {bits}b");
+            }
+        }
+    }
+    println!("(adaptive = min over configurations, per §IV.C)\n");
+
+    // ---- 2. field-stride widening ---------------------------------------
+    println!("Ablation 2 — field stride: minimal vs chosen (guard bits buy accumulation):\n");
+    let mut t = Table::new(vec!["bits", "min field", "chosen", "accum depth", "cost/MAC gain"]);
+    for bits in 2..=6u32 {
+        let minf = field_width(bits, bits, 3);
+        let plan = best_plan(bits, bits, 3).unwrap();
+        let min_plan = LaneCfg::all()
+            .into_iter()
+            .filter_map(|c| best_plan_with(&[c], bits, bits, 3))
+            .filter(|p| p.field == field_width(bits, bits, 3))
+            .map(|p| p.cost_per_mac)
+            .fold(f64::INFINITY, f64::min);
+        let gain = if min_plan.is_finite() {
+            format!("{:.2}x", min_plan / plan.cost_per_mac)
+        } else {
+            "n/a".into()
+        };
+        t.row(vec![
+            format!("{bits}"),
+            format!("{minf}"),
+            format!("{}", plan.field),
+            format!("{}", plan.accum_depth),
+            gain,
+        ]);
+    }
+    t.print();
+    println!();
+
+    // ---- 3. memory planner ----------------------------------------------
+    println!("Ablation 3 — lifetime SRAM planner vs all-buffers-live:\n");
+    let mut t = Table::new(vec!["backbone", "bits", "all-live KB", "planned KB", "saving"]);
+    for model in [vgg_tiny(10, 16), mobilenet_tiny(2, 16)] {
+        for bits in [2u8, 4, 8] {
+            let g = Graph::build(&model, &BitConfig::uniform(model.num_layers(), bits));
+            let all = plan_memory(&g, PlanStrategy::AllLive).peak_bytes;
+            let plan = plan_memory(&g, PlanStrategy::Lifetime).peak_bytes;
+            t.row(vec![
+                model.name.clone(),
+                format!("{bits}"),
+                format!("{:.2}", all as f64 / 1024.0),
+                format!("{:.2}", plan as f64 / 1024.0),
+                format!("{:.2}x", all as f64 / plan as f64),
+            ]);
+            assert!(plan < all);
+        }
+    }
+    t.print();
+    println!("(the Table I peak-memory mechanism: TinyEngine/MCU-MixQ plan, libraries don't)\n");
+
+    // ---- 4. packing-reuse sensitivity ------------------------------------
+    println!("Ablation 4 — packing amortization (output-channel reuse of packed rows):");
+    println!(
+        "  PACK_REUSE = {} (see simd::adaptive); with reuse r the packing term\n\
+         \x20 scales as pack_ops/r — at r=1 packing would dominate sub-byte gains,\n\
+         \x20 at r≥4 (any real conv: 16–64 output channels) it is noise.",
+        mcu_mixq::simd::adaptive::PACK_REUSE
+    );
+    for bits in [2u32, 4, 8] {
+        let p = best_plan(bits, bits, 3).unwrap();
+        let pack = p.conv.pack_ops_per_instr() as f64;
+        let macs = p.macs_per_instr as f64;
+        println!(
+            "  {bits}b: pack {pack:.0} ops / {macs:.0} MACs per multiply -> r=1: +{:.2}, r=4: +{:.2}, r=16: +{:.2} cost/MAC",
+            pack / macs,
+            pack / 4.0 / macs,
+            pack / 16.0 / macs
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! Fig. 5 — SLBC speedup over naive and plain-SIMD convolution vs
+//! bitwidth.
+//!
+//! Protocol (paper §V.B): single convolution layers executed at every
+//! bitwidth 2–8; naive and plain-SIMD convolution have no sub-byte
+//! support, so their latency is constant below 8 bits, while SLBC's cost
+//! shrinks with the packing density. The paper reports average speedups
+//! of ≈4× over naive and ≈2× over plain SIMD.
+//!
+//! Regenerate with `cargo bench --bench fig5_slbc_speedup`.
+
+use mcu_mixq::mcu::{Counter, CycleModel};
+use mcu_mixq::models::{vgg_tiny, LayerSpec};
+use mcu_mixq::ops::Method;
+use mcu_mixq::util::bench::Table;
+use mcu_mixq::util::prng::Rng;
+
+fn bench_layer() -> LayerSpec {
+    // VGG-Tiny conv3 geometry (8×8×16 → 8×8×32, 3×3) — a mid-network
+    // conv representative of where MCUs spend their cycles.
+    let mut l = vgg_tiny(10, 16).layers[2].clone();
+    l.macs = l.compute_macs();
+    l
+}
+
+fn run(method: Method, l: &LayerSpec, bits: u8, seed: u64, cm: &CycleModel) -> u64 {
+    let mut rng = Rng::new(seed);
+    let x: Vec<u32> = (0..l.in_elems()).map(|_| rng.below(1 << bits) as u32).collect();
+    let lim = (1i64 << (bits - 1)) - 1;
+    let w: Vec<i32> = (0..l.w_size)
+        .map(|_| (rng.below(2 * lim as u64 + 1) as i64 - lim) as i32)
+        .collect();
+    let mut ctr = Counter::new();
+    method.run_layer(&x, &w, l, bits, bits, &mut ctr);
+    ctr.cycles(cm)
+}
+
+fn main() {
+    let cm = CycleModel::cortex_m7();
+    let l = bench_layer();
+    println!(
+        "Fig. 5 — SLBC speedup over naive / plain-SIMD convolution\n\
+         layer: {} ({}×{}×{} -> {}, k={}, {} MACs)\n",
+        l.name, l.in_h, l.in_w, l.cin, l.cout, l.k, l.macs
+    );
+
+    let mut t = Table::new(vec![
+        "bits", "naive cyc", "simd cyc", "slbc cyc", "vs naive", "vs simd",
+    ]);
+    let mut sp_naive = Vec::new();
+    let mut sp_simd = Vec::new();
+    for bits in 2..=8u8 {
+        let c_naive = run(Method::Naive, &l, bits, 10 + bits as u64, &cm);
+        let c_simd = run(Method::Simd, &l, bits, 20 + bits as u64, &cm);
+        let c_slbc = run(Method::Slbc, &l, bits, 30 + bits as u64, &cm);
+        let rn = c_naive as f64 / c_slbc as f64;
+        let rs = c_simd as f64 / c_slbc as f64;
+        sp_naive.push(rn);
+        sp_simd.push(rs);
+        t.row(vec![
+            format!("{bits}"),
+            format!("{c_naive}"),
+            format!("{c_simd}"),
+            format!("{c_slbc}"),
+            format!("{rn:.2}x"),
+            format!("{rs:.2}x"),
+        ]);
+    }
+    t.print();
+
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "\naverage speedup: {:.2}x over naive (paper: ~4x), {:.2}x over plain SIMD (paper: ~2x)",
+        avg(&sp_naive),
+        avg(&sp_simd)
+    );
+    // Sanity guards: the figure's qualitative claims.
+    assert!(avg(&sp_naive) > avg(&sp_simd), "naive must be the slower baseline");
+    assert!(sp_naive[0] > sp_naive[6], "speedup must grow as bits shrink");
+}

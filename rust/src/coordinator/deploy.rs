@@ -1,0 +1,178 @@
+//! Table I row generation: deploy one trained backbone under every
+//! competitor framework and report peak SRAM / flash / clocks / latency /
+//! accuracy.
+//!
+//! Per method the row uses:
+//!
+//! * the method's **supported quantization** (MCU-MixQ: the searched 2–8
+//!   bit config; CMix-NN / WPC&DDD: the config clamped to {2,4,8};
+//!   TinyEngine / plain-SIMD / naive: uniform int8);
+//! * the method's **deployment style** (lifetime-planned arena vs
+//!   all-buffers-live — [`crate::engine::planner`]);
+//! * a short per-method QAT at its effective bitwidths (every framework
+//!   fine-tunes its own quantization in the paper), evaluated through the
+//!   Layer-2 `eval` program;
+//! * a simulated batch-1 inference for the cycle count.
+
+use crate::engine;
+use crate::mcu::CycleModel;
+use crate::models::ModelDesc;
+use crate::ops::Method;
+use crate::quant::{quantize_model, BitConfig};
+use crate::runtime::{BackboneArtifacts, Runtime};
+use crate::{cycles_to_ms, Result};
+
+use super::qat::{QatCfg, QatRunner};
+
+/// One Table I row.
+#[derive(Debug, Clone)]
+pub struct MethodRow {
+    pub method: Method,
+    pub quantization: String,
+    pub config: BitConfig,
+    pub peak_sram: usize,
+    pub flash_bytes: usize,
+    pub clocks: u64,
+    pub latency_ms: f64,
+    pub accuracy: f32,
+}
+
+/// The effective configuration a method deploys for a searched `cfg`.
+pub fn method_config(method: Method, searched: &BitConfig, num_layers: usize) -> BitConfig {
+    match method {
+        Method::Slbc | Method::RpSlbc => searched.clone(),
+        Method::CmixNn | Method::WpcDdd => searched.to_cmixnn_supported(),
+        Method::TinyEngine | Method::Simd | Method::Naive => BitConfig::uniform(num_layers, 8),
+    }
+}
+
+/// Human label for the quantization column.
+fn quant_label(method: Method) -> String {
+    match method {
+        Method::Slbc | Method::RpSlbc => "Mixed(2-8)".into(),
+        Method::CmixNn | Method::WpcDdd => "Mixed(2,4,8)".into(),
+        _ => "8-bit".into(),
+    }
+}
+
+/// Produce Table I rows for `methods` on one backbone.
+///
+/// `searched` is MCU-MixQ's NAS result; `warm_params` the post-search
+/// parameters (QAT warm start). Each method gets `qat_cfg.steps` of QAT at
+/// its own effective bitwidths before evaluation — mirroring the paper's
+/// "same accuracy constraint" protocol.
+#[allow(clippy::too_many_arguments)]
+pub fn deploy_all_methods(
+    rt: &Runtime,
+    arts: &BackboneArtifacts,
+    model: &ModelDesc,
+    searched: &BitConfig,
+    warm_params: &[f32],
+    methods: &[Method],
+    qat_cfg: &QatCfg,
+    probe_image: &[f32],
+) -> Result<Vec<MethodRow>> {
+    let runner = QatRunner::new(rt, arts, qat_cfg.seed)?;
+    let cycle_model = CycleModel::cortex_m7();
+    let mut rows = Vec::with_capacity(methods.len());
+    for &method in methods {
+        let cfg = method_config(method, searched, model.num_layers());
+        // Fine-tune at the method's own quantization — except when the
+        // effective config IS the searched one: `warm_params` were already
+        // QAT'd there, so deploy them directly (re-training a converged
+        // model from a fresh momentum state can destabilize it).
+        let (qat_params, qat_acc);
+        if cfg == *searched {
+            let (_, acc) = runner.evaluate_params(warm_params, &cfg)?;
+            qat_params = warm_params.to_vec();
+            qat_acc = acc;
+        } else {
+            let qat = runner.run(warm_params, &cfg, qat_cfg)?;
+            qat_params = qat.params;
+            qat_acc = qat.eval_acc;
+        }
+
+        // Engine-side deployment (memory plan + flash + cycles).
+        let quantized = quantize_model(model, &qat_params, &cfg);
+        let graph = engine::Graph::build(model, &cfg);
+        let plan = engine::plan_memory(&graph, engine::planner::strategy_for(method));
+        let codegen = engine::CodegenPlan::generate(model, &cfg, method);
+        let flash = engine::FlashImage::layout(model, &cfg, &quantized, &codegen);
+        let infer = engine::infer(model, &quantized, &cfg, method, probe_image, &cycle_model)?;
+
+        rows.push(MethodRow {
+            method,
+            quantization: quant_label(method),
+            config: cfg,
+            peak_sram: plan.peak_bytes,
+            flash_bytes: flash.total_bytes(),
+            clocks: infer.cycles,
+            latency_ms: cycles_to_ms(infer.cycles),
+            accuracy: qat_acc,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render rows as the Table I layout (used by the bench and the CLI).
+pub fn render_rows(backbone: &str, rows: &[MethodRow]) -> String {
+    use crate::util::bench::Table;
+    let mut t = Table::new(vec![
+        "Backbone",
+        "Method",
+        "Quantization",
+        "Peak Memory",
+        "Flash",
+        "Clocks",
+        "Latency",
+        "Accuracy",
+    ]);
+    for r in rows {
+        t.row(vec![
+            backbone.to_string(),
+            r.method.name().to_string(),
+            r.quantization.clone(),
+            format!("{:.2}KB", r.peak_sram as f64 / 1024.0),
+            format!("{:.2}KB", r.flash_bytes as f64 / 1024.0),
+            format!("{}", r.clocks),
+            format!("{:.1}ms", r.latency_ms),
+            format!("{:.1}%", r.accuracy * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_configs_respect_support() {
+        let searched = BitConfig {
+            wbits: vec![2, 3, 5, 7, 8, 4],
+            abits: vec![3, 4, 5, 6, 7, 8],
+        };
+        for m in Method::ALL {
+            let cfg = method_config(m, &searched, 6);
+            for i in 0..6 {
+                assert!(
+                    m.supports(cfg.wbits[i], cfg.abits[i]),
+                    "{} rejects its own config at layer {i}",
+                    m.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixq_keeps_searched_bits() {
+        let searched = BitConfig {
+            wbits: vec![2, 3, 5],
+            abits: vec![3, 4, 5],
+        };
+        assert_eq!(method_config(Method::RpSlbc, &searched, 3), searched);
+        let clamped = method_config(Method::CmixNn, &searched, 3);
+        assert_eq!(clamped.wbits, vec![2, 4, 8]);
+        assert_eq!(clamped.abits, vec![4, 4, 8]);
+    }
+}

@@ -1,0 +1,99 @@
+//! The Layer-3 coordinator: MCU-MixQ's full workflow (paper Fig. 1).
+//!
+//! ```text
+//! pretrained params ─► supernet search (PJRT, cost table from perf/) ─►
+//!   argmax BitConfig ─► QAT (PJRT) ─► quantize ─► engine deploy ─►
+//!     Table I report
+//! ```
+//!
+//! Everything here runs in Rust; the JAX-authored compute graphs execute
+//! as compiled PJRT programs. Training state (params / momentum / branch
+//! logits) stays in XLA literals across steps — the hot loop never copies
+//! it through host vectors (only per-`log_every` scalars leave the
+//! device).
+//!
+//! * [`search`] — the hardware-aware quantization explorer loop (§III.B);
+//! * [`qat`] — quantization-aware training of the selected sub-net;
+//! * [`deploy`] — Table I row generation over all competitor methods;
+//! * [`pipeline`] — the end-to-end driver used by `examples/deploy_vww.rs`
+//!   and the `mcu-mixq pipeline` CLI.
+
+pub mod deploy;
+pub mod pipeline;
+pub mod qat;
+pub mod search;
+
+pub use deploy::{deploy_all_methods, MethodRow};
+pub use pipeline::{run_pipeline, PipelineCfg, PipelineReport};
+pub use qat::{QatOutcome, QatRunner};
+pub use search::{SearchCfg, SearchOutcome, SupernetSearch};
+
+use crate::datasets::{self, Task};
+use crate::runtime::lit;
+use crate::Result;
+
+/// One logged optimization step (either loop).
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    /// Cross-entropy part (total loss for QAT).
+    pub ce: f32,
+    /// λ-scaled complexity part (0 for QAT).
+    pub comp: f32,
+    pub acc: f32,
+}
+
+/// Deterministic synthetic data feeder: a fresh batch per step, seeded so
+/// every run is reproducible.
+pub struct DataStream {
+    task: Task,
+    hw: usize,
+    batch: usize,
+    seed: u64,
+}
+
+impl DataStream {
+    pub fn new(task: Task, hw: usize, batch: usize, seed: u64) -> Self {
+        DataStream {
+            task,
+            hw,
+            batch,
+            seed,
+        }
+    }
+
+    /// Literals `(x [B,H,W,C] f32, y [B] i32)` for step `step`.
+    pub fn batch_literals(&self, step: usize) -> Result<(xla::Literal, xla::Literal)> {
+        let b = datasets::generate(self.task, self.batch, self.hw, self.seed + step as u64);
+        let x = lit::f32_tensor(
+            &b.images,
+            &[self.batch as i64, self.hw as i64, self.hw as i64, b.c as i64],
+        )?;
+        let y = lit::i32_vec(&b.labels);
+        Ok((x, y))
+    }
+
+    /// A raw batch (for engine-side evaluation on the same distribution).
+    pub fn raw_batch(&self, step: usize) -> datasets::Batch {
+        datasets::generate(self.task, self.batch, self.hw, self.seed + step as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datastream_is_deterministic() {
+        let s1 = DataStream::new(Task::SynthCifar, 16, 4, 9);
+        let s2 = DataStream::new(Task::SynthCifar, 16, 4, 9);
+        let a = s1.raw_batch(3);
+        let b = s2.raw_batch(3);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        // Different steps -> different data.
+        let c = s1.raw_batch(4);
+        assert_ne!(a.labels, c.labels);
+    }
+}

@@ -1,0 +1,133 @@
+//! The end-to-end MCU-MixQ pipeline (paper Fig. 1, left to right).
+//!
+//! `search → select → QAT → deploy → compare`: this is the driver behind
+//! `examples/deploy_vww.rs`, the `mcu-mixq pipeline` CLI command and the
+//! Table I bench. All loss curves are captured so EXPERIMENTS.md can plot
+//! the training dynamics.
+
+use crate::mcu::CycleModel;
+use crate::nas::CostProxy;
+use crate::ops::Method;
+use crate::perf::PerfModel;
+use crate::runtime::{ArtifactStore, Runtime};
+use crate::Result;
+
+use super::deploy::{deploy_all_methods, MethodRow};
+use super::qat::{QatCfg, QatRunner};
+use super::search::{SearchCfg, SupernetSearch};
+use super::StepLog;
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineCfg {
+    pub backbone: String,
+    pub search: SearchCfg,
+    pub qat: QatCfg,
+    /// Methods to deploy for the comparison table.
+    pub methods: Vec<Method>,
+    /// Use the EdMIPS MAC proxy instead of the Eq. 12 model (Fig. 8
+    /// ablation).
+    pub use_edmips_proxy: bool,
+}
+
+impl PipelineCfg {
+    pub fn new(backbone: &str) -> Self {
+        PipelineCfg {
+            backbone: backbone.to_string(),
+            search: SearchCfg::default(),
+            qat: QatCfg::default(),
+            methods: vec![
+                Method::CmixNn,
+                Method::WpcDdd,
+                Method::TinyEngine,
+                Method::RpSlbc,
+            ],
+            use_edmips_proxy: false,
+        }
+    }
+}
+
+/// Everything the pipeline produced.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub backbone: String,
+    pub search_history: Vec<StepLog>,
+    pub searched_wbits: Vec<u8>,
+    pub searched_abits: Vec<u8>,
+    pub final_entropy: f64,
+    pub qat_history: Vec<StepLog>,
+    pub qat_eval_acc: f32,
+    pub rows: Vec<MethodRow>,
+    /// (method, speedup of MCU-MixQ over it) pairs — the headline claims.
+    pub speedups: Vec<(String, f64)>,
+}
+
+/// Run the full pipeline on `store`'s artifacts.
+pub fn run_pipeline(rt: &Runtime, store: &ArtifactStore, cfg: &PipelineCfg) -> Result<PipelineReport> {
+    let arts = store.backbone(&cfg.backbone)?;
+    let model = arts.model.clone();
+
+    // 1. Hardware-aware quantization search.
+    let proxy = if cfg.use_edmips_proxy {
+        CostProxy::EdMipsMacs
+    } else {
+        CostProxy::SimdAware(
+            PerfModel::from_cycles(&CycleModel::cortex_m7()),
+            Method::RpSlbc,
+        )
+    };
+    let search = SupernetSearch::new(rt, &arts, proxy, cfg.search.seed)?;
+    let outcome = search.run(&cfg.search)?;
+
+    // 2. QAT of the selected sub-net.
+    let runner = QatRunner::new(rt, &arts, cfg.qat.seed)?;
+    let qat = runner.run(&outcome.params, &outcome.config, &cfg.qat)?;
+
+    // 3. Deploy every method and compare.
+    let probe = super::DataStream::new(
+        crate::datasets::Task::for_backbone(&model.name),
+        model.input_hw,
+        1,
+        cfg.search.seed + 777,
+    )
+    .raw_batch(0);
+    let rows = deploy_all_methods(
+        rt,
+        &arts,
+        &model,
+        &outcome.config,
+        &qat.params,
+        &cfg.methods,
+        &cfg.qat,
+        probe.image(0),
+    )?;
+
+    // 4. Headline speedups (MCU-MixQ row vs each competitor).
+    let mixq_clocks = rows
+        .iter()
+        .find(|r| matches!(r.method, Method::RpSlbc | Method::Slbc))
+        .map(|r| r.clocks)
+        .unwrap_or(1);
+    let speedups = rows
+        .iter()
+        .filter(|r| !matches!(r.method, Method::RpSlbc | Method::Slbc))
+        .map(|r| {
+            (
+                r.method.name().to_string(),
+                r.clocks as f64 / mixq_clocks as f64,
+            )
+        })
+        .collect();
+
+    Ok(PipelineReport {
+        backbone: cfg.backbone.clone(),
+        search_history: outcome.history,
+        searched_wbits: outcome.config.wbits.clone(),
+        searched_abits: outcome.config.abits.clone(),
+        final_entropy: outcome.final_entropy,
+        qat_history: qat.history,
+        qat_eval_acc: qat.eval_acc,
+        rows,
+        speedups,
+    })
+}

@@ -1,0 +1,136 @@
+//! Quantization-aware training of the selected sub-net (paper Fig. 1,
+//! final stage before deployment).
+//!
+//! Runs the Layer-2 `qat_train_step` program with the *fixed* per-layer
+//! bitwidth tensors chosen by the search, then measures loss/accuracy on a
+//! held-out batch through the `eval` program. As in [`super::search`],
+//! training state stays in PJRT literals across steps.
+
+use anyhow::Context;
+
+use crate::datasets::Task;
+use crate::quant::BitConfig;
+use crate::runtime::{lit, BackboneArtifacts, Program, Runtime};
+use crate::Result;
+
+use super::{DataStream, StepLog};
+
+/// QAT hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct QatCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for QatCfg {
+    fn default() -> Self {
+        QatCfg {
+            steps: 400,
+            lr: 0.01,
+            seed: 4321,
+            log_every: 10,
+        }
+    }
+}
+
+/// QAT result: trained params + history + final eval metrics.
+#[derive(Debug, Clone)]
+pub struct QatOutcome {
+    pub params: Vec<f32>,
+    pub history: Vec<StepLog>,
+    pub eval_loss: f32,
+    pub eval_acc: f32,
+    pub config: BitConfig,
+}
+
+/// QAT + eval driver for one backbone.
+pub struct QatRunner<'rt> {
+    qat: Program,
+    eval: Program,
+    train_stream: DataStream,
+    eval_stream: DataStream,
+    _rt: &'rt Runtime,
+}
+
+impl<'rt> QatRunner<'rt> {
+    pub fn new(rt: &'rt Runtime, arts: &BackboneArtifacts, seed: u64) -> Result<Self> {
+        let task = Task::for_backbone(&arts.model.name);
+        Ok(QatRunner {
+            qat: rt.load_program(&arts.qat_step)?,
+            eval: rt.load_program(&arts.eval)?,
+            train_stream: DataStream::new(task, arts.model.input_hw, arts.train_batch, seed),
+            // Disjoint seed stream for eval data.
+            eval_stream: DataStream::new(
+                task,
+                arts.model.input_hw,
+                arts.eval_batch,
+                seed ^ 0x5eed_0e7a_1u64,
+            ),
+            _rt: rt,
+        })
+    }
+
+    /// Train `init_params` at the fixed `config` for `cfg.steps` steps,
+    /// then evaluate once on a large held-out batch.
+    pub fn run(
+        &self,
+        init_params: &[f32],
+        config: &BitConfig,
+        cfg: &QatCfg,
+    ) -> Result<QatOutcome> {
+        let wb = lit::f32_vec(&config.wbits_f32());
+        let ab = lit::f32_vec(&config.abits_f32());
+        let lr = lit::f32_scalar(cfg.lr);
+        let mut params = lit::f32_vec(init_params);
+        let mut mom = lit::f32_vec(&vec![0.0f32; init_params.len()]);
+
+        let mut history = Vec::new();
+        for step in 0..cfg.steps {
+            let (x, y) = self.train_stream.batch_literals(step)?;
+            let outs = self
+                .qat
+                .run_n(&[&params, &mom, &x, &y, &wb, &ab, &lr], 4)
+                .with_context(|| format!("qat step {step}"))?;
+            let mut it = outs.into_iter();
+            params = it.next().unwrap();
+            mom = it.next().unwrap();
+            let loss = lit::to_f32_scalar(&it.next().unwrap())?;
+            let acc = lit::to_f32_scalar(&it.next().unwrap())?;
+            if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                history.push(StepLog {
+                    step,
+                    loss,
+                    ce: loss,
+                    comp: 0.0,
+                    acc,
+                });
+            }
+        }
+
+        let (eval_loss, eval_acc) = self.evaluate(&params, config)?;
+        Ok(QatOutcome {
+            params: lit::to_f32_vec(&params)?,
+            history,
+            eval_loss,
+            eval_acc,
+            config: config.clone(),
+        })
+    }
+
+    /// Evaluate literal params at `config` on the held-out batch.
+    fn evaluate(&self, params: &xla::Literal, config: &BitConfig) -> Result<(f32, f32)> {
+        let wb = lit::f32_vec(&config.wbits_f32());
+        let ab = lit::f32_vec(&config.abits_f32());
+        let (x, y) = self.eval_stream.batch_literals(0)?;
+        let outs = self.eval.run_n(&[params, &x, &y, &wb, &ab], 2)?;
+        Ok((lit::to_f32_scalar(&outs[0])?, lit::to_f32_scalar(&outs[1])?))
+    }
+
+    /// Evaluate host-side params (used to score *other* methods' effective
+    /// bitwidths for Table I without retraining).
+    pub fn evaluate_params(&self, params: &[f32], config: &BitConfig) -> Result<(f32, f32)> {
+        self.evaluate(&lit::f32_vec(params), config)
+    }
+}

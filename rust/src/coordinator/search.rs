@@ -1,0 +1,163 @@
+//! The hardware-aware quantization explorer loop (paper §III.B).
+//!
+//! Drives the Layer-2 `supernet_train_step` program: per step it feeds a
+//! synthetic batch, the **cost table** (EdMIPS MAC proxy or the SIMD-aware
+//! Eq. 12 model — the HW/SW co-design seam), and the current training
+//! state; the state cycles through PJRT literals without host round-trips.
+//! After `steps` iterations the branch logits are pulled back once and the
+//! final sub-net is selected by argmax.
+
+use anyhow::Context;
+
+use crate::datasets::Task;
+use crate::nas::{self, CostProxy, CostTable, SearchSpace};
+use crate::quant::BitConfig;
+use crate::runtime::{lit, BackboneArtifacts, Program, Runtime};
+use crate::Result;
+
+use super::{DataStream, StepLog};
+
+/// Search hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct SearchCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub lr_alpha: f32,
+    /// Complexity-loss weight λ (Eq. 2).
+    pub lam: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for SearchCfg {
+    fn default() -> Self {
+        SearchCfg {
+            steps: 200,
+            lr: 0.01,
+            lr_alpha: 0.25,
+            lam: 0.3,
+            seed: 1234,
+            log_every: 10,
+        }
+    }
+}
+
+/// Search result: the selected configuration plus full training history.
+#[derive(Debug)]
+pub struct SearchOutcome {
+    pub config: BitConfig,
+    pub history: Vec<StepLog>,
+    pub alpha_w: Vec<f32>,
+    pub alpha_a: Vec<f32>,
+    /// Final supernet params (flat) — the QAT warm start.
+    pub params: Vec<f32>,
+    /// Mean per-layer branch entropy at the end (convergence diagnostic).
+    pub final_entropy: f64,
+    pub proxy_name: &'static str,
+}
+
+/// The supernet search driver for one backbone.
+pub struct SupernetSearch<'rt> {
+    program: Program,
+    space: SearchSpace,
+    table: CostTable,
+    stream: DataStream,
+    num_layers: usize,
+    init_params: Vec<f32>,
+    proxy_name: &'static str,
+    _rt: &'rt Runtime,
+}
+
+impl<'rt> SupernetSearch<'rt> {
+    /// Compile the supernet program and build the cost table under `proxy`.
+    pub fn new(
+        rt: &'rt Runtime,
+        arts: &BackboneArtifacts,
+        proxy: CostProxy,
+        seed: u64,
+    ) -> Result<Self> {
+        let program = rt.load_program(&arts.supernet_step)?;
+        let space = SearchSpace::default();
+        let table = nas::cost_table(&arts.model, &space, proxy);
+        let task = Task::for_backbone(&arts.model.name);
+        let stream = DataStream::new(task, arts.model.input_hw, arts.train_batch, seed);
+        Ok(SupernetSearch {
+            program,
+            space,
+            table,
+            stream,
+            num_layers: arts.model.num_layers(),
+            init_params: arts.load_init_params()?,
+            proxy_name: proxy.name(),
+            _rt: rt,
+        })
+    }
+
+    /// Cost table accessor (logged by examples / benches).
+    pub fn cost_table(&self) -> &CostTable {
+        &self.table
+    }
+
+    /// Run the differentiable search loop.
+    pub fn run(&self, cfg: &SearchCfg) -> Result<SearchOutcome> {
+        let (l, k) = (self.num_layers, self.space.k());
+
+        // Training state as literals; initialized once.
+        let mut params = lit::f32_vec(&self.init_params);
+        let mut mom = lit::f32_vec(&vec![0.0f32; self.init_params.len()]);
+        let mut alpha_w = lit::f32_tensor(&vec![0.0f32; l * k], &[l as i64, k as i64])?;
+        let mut alpha_a = lit::f32_tensor(&vec![0.0f32; l * k], &[l as i64, k as i64])?;
+        let cost = lit::f32_tensor(&self.table.data, &[l as i64, k as i64, k as i64])?;
+        let lr = lit::f32_scalar(cfg.lr);
+        let lr_alpha = lit::f32_scalar(cfg.lr_alpha);
+        let lam = lit::f32_scalar(cfg.lam);
+
+        let mut history = Vec::new();
+        for step in 0..cfg.steps {
+            let (x, y) = self.stream.batch_literals(step)?;
+            let outs = self
+                .program
+                .run_n(
+                    &[
+                        &params, &mom, &alpha_w, &alpha_a, &x, &y, &cost, &lr, &lr_alpha,
+                        &lam,
+                    ],
+                    8,
+                )
+                .with_context(|| format!("supernet step {step}"))?;
+            let mut it = outs.into_iter();
+            params = it.next().unwrap();
+            mom = it.next().unwrap();
+            alpha_w = it.next().unwrap();
+            alpha_a = it.next().unwrap();
+            let loss = lit::to_f32_scalar(&it.next().unwrap())?;
+            let ce = lit::to_f32_scalar(&it.next().unwrap())?;
+            let comp = lit::to_f32_scalar(&it.next().unwrap())?;
+            let acc = lit::to_f32_scalar(&it.next().unwrap())?;
+            if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                history.push(StepLog {
+                    step,
+                    loss,
+                    ce,
+                    comp,
+                    acc,
+                });
+            }
+        }
+
+        let aw = lit::to_f32_vec(&alpha_w)?;
+        let aa = lit::to_f32_vec(&alpha_a)?;
+        let config = nas::select_config(&self.space, &aw, &aa);
+        let final_entropy =
+            (nas::mean_entropy(&aw, k) + nas::mean_entropy(&aa, k)) / 2.0;
+        Ok(SearchOutcome {
+            config,
+            history,
+            alpha_w: aw,
+            alpha_a: aa,
+            params: lit::to_f32_vec(&params)?,
+            final_entropy,
+            proxy_name: self.proxy_name,
+        })
+    }
+}

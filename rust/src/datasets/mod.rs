@@ -1,0 +1,264 @@
+//! Deterministic synthetic datasets (DESIGN.md §3 substitution for
+//! VWW / CIFAR-10, which cannot be downloaded in this environment).
+//!
+//! Both tasks are built so that *accuracy responds to quantization
+//! bitwidth* — the property the NAS experiments need — while remaining
+//! learnable by the tiny backbones within a few hundred SGD steps:
+//!
+//! * **synth-CIFAR** — 10 classes; each class is a fixed smooth random
+//!   template, samples are `mix · template + (1-mix) · noise`.
+//! * **synth-VWW** — 2 classes ("person present?"); positives contain a
+//!   bright localized blob at a random position over a textured
+//!   background, negatives only the background.
+
+use crate::util::prng::Rng;
+
+/// A batch of NHWC f32 images in `[0, 1]` with int32 labels.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub hw: usize,
+    pub c: usize,
+}
+
+impl Batch {
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.hw * self.hw * self.c;
+        &self.images[i * sz..(i + 1) * sz]
+    }
+}
+
+/// Which synthetic task a backbone trains on (Table I pairing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    SynthCifar,
+    SynthVww,
+}
+
+impl Task {
+    pub fn num_classes(&self) -> usize {
+        match self {
+            Task::SynthCifar => 10,
+            Task::SynthVww => 2,
+        }
+    }
+
+    /// Table I pairing: VGG-Tiny ↔ CIFAR-class task, MobileNet-Tiny ↔ VWW.
+    pub fn for_backbone(name: &str) -> Task {
+        if name.contains("mobilenet") {
+            Task::SynthVww
+        } else {
+            Task::SynthCifar
+        }
+    }
+}
+
+/// Smooth a flat HxWxC image in place with a 3x3 box blur (`rounds` times)
+/// to produce low-frequency class templates.
+fn smooth(img: &mut [f32], hw: usize, c: usize, rounds: usize) {
+    let mut tmp = img.to_vec();
+    for _ in 0..rounds {
+        for y in 0..hw {
+            for x in 0..hw {
+                for ch in 0..c {
+                    let mut acc = 0.0;
+                    let mut cnt = 0.0;
+                    for dy in -1i64..=1 {
+                        for dx in -1i64..=1 {
+                            let yy = y as i64 + dy;
+                            let xx = x as i64 + dx;
+                            if yy >= 0 && yy < hw as i64 && xx >= 0 && xx < hw as i64 {
+                                acc += img[(yy as usize * hw + xx as usize) * c + ch];
+                                cnt += 1.0;
+                            }
+                        }
+                    }
+                    tmp[(y * hw + x) * c + ch] = acc / cnt;
+                }
+            }
+        }
+        img.copy_from_slice(&tmp);
+    }
+}
+
+/// The fixed per-class templates of synth-CIFAR.
+///
+/// Templates depend ONLY on the class index (plus a fixed dataset
+/// constant) — never on the per-batch seed — so every batch of the
+/// stream, and the train and eval splits, share one class definition.
+/// (Deriving them from the batch seed would re-randomize the classes
+/// every step and make the task unlearnable.)
+fn cifar_templates(hw: usize, c: usize) -> Vec<Vec<f32>> {
+    (0..10)
+        .map(|class| {
+            let mut rng = Rng::new(0xC1FA_0000 + class as u64);
+            let mut t: Vec<f32> = (0..hw * hw * c).map(|_| rng.f32()).collect();
+            smooth(&mut t, hw, c, 2);
+            // Normalize to full [0,1] contrast.
+            let (mn, mx) = t
+                .iter()
+                .fold((f32::MAX, f32::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+            for v in &mut t {
+                *v = (*v - mn) / (mx - mn + 1e-8);
+            }
+            t
+        })
+        .collect()
+}
+
+/// Generate a synth-CIFAR batch.
+pub fn synth_cifar(n: usize, hw: usize, seed: u64) -> Batch {
+    let c = 3;
+    let templates = cifar_templates(hw, c);
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::with_capacity(n * hw * hw * c);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let class = rng.below(10) as usize;
+        labels.push(class as i32);
+        let mix = rng.f32_range(0.55, 0.8);
+        for &tv in &templates[class] {
+            let noise = rng.f32();
+            images.push((mix * tv + (1.0 - mix) * noise).clamp(0.0, 1.0));
+        }
+    }
+    Batch {
+        images,
+        labels,
+        n,
+        hw,
+        c,
+    }
+}
+
+/// Generate a synth-VWW batch ("is a person-blob present?").
+pub fn synth_vww(n: usize, hw: usize, seed: u64) -> Batch {
+    let c = 3;
+    let mut rng = Rng::new(seed ^ 0x7157_0001);
+    let mut images = Vec::with_capacity(n * hw * hw * c);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let present = rng.below(2) == 1;
+        labels.push(present as i32);
+        // Textured background.
+        let mut img: Vec<f32> = (0..hw * hw * c).map(|_| rng.f32() * 0.5).collect();
+        smooth(&mut img, hw, c, 1);
+        if present {
+            // A bright 2D Gaussian blob ("person") at a random location.
+            let cx = rng.f32_range(0.25, 0.75) * hw as f32;
+            let cy = rng.f32_range(0.25, 0.75) * hw as f32;
+            let sigma = rng.f32_range(0.12, 0.22) * hw as f32;
+            for y in 0..hw {
+                for x in 0..hw {
+                    let d2 = (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2);
+                    let g = (-d2 / (2.0 * sigma * sigma)).exp();
+                    for ch in 0..c {
+                        let v = &mut img[(y * hw + x) * c + ch];
+                        *v = (*v + 0.8 * g).min(1.0);
+                    }
+                }
+            }
+        }
+        images.extend_from_slice(&img);
+    }
+    Batch {
+        images,
+        labels,
+        n,
+        hw,
+        c,
+    }
+}
+
+/// Generate a batch for a task (train/eval splits via distinct seeds).
+pub fn generate(task: Task, n: usize, hw: usize, seed: u64) -> Batch {
+    match task {
+        Task::SynthCifar => synth_cifar(n, hw, seed),
+        Task::SynthVww => synth_vww(n, hw, seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cifar_shapes_and_determinism() {
+        let b1 = synth_cifar(8, 16, 42);
+        let b2 = synth_cifar(8, 16, 42);
+        assert_eq!(b1.images.len(), 8 * 16 * 16 * 3);
+        assert_eq!(b1.labels.len(), 8);
+        assert_eq!(b1.images, b2.images);
+        assert_eq!(b1.labels, b2.labels);
+    }
+
+    #[test]
+    fn different_seeds_different_data() {
+        let b1 = synth_cifar(8, 16, 1);
+        let b2 = synth_cifar(8, 16, 2);
+        assert_ne!(b1.images, b2.images);
+    }
+
+    #[test]
+    fn values_in_unit_interval() {
+        for b in [synth_cifar(16, 16, 7), synth_vww(16, 16, 7)] {
+            assert!(b.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn vww_labels_binary_and_blob_brightens() {
+        let b = synth_vww(64, 16, 3);
+        assert!(b.labels.iter().all(|&l| l == 0 || l == 1));
+        // Positives should be brighter on average than negatives.
+        let mean_of = |lbl: i32| {
+            let mut s = 0.0f64;
+            let mut cnt = 0usize;
+            for i in 0..b.n {
+                if b.labels[i] == lbl {
+                    s += b.image(i).iter().map(|&v| v as f64).sum::<f64>();
+                    cnt += 1;
+                }
+            }
+            s / cnt as f64
+        };
+        assert!(mean_of(1) > mean_of(0));
+    }
+
+    #[test]
+    fn cifar_classes_are_separable_by_template_corr() {
+        // Nearest-template classification should beat chance easily —
+        // i.e. the task is actually learnable.
+        let hw = 16;
+        let b = synth_cifar(64, hw, 9);
+        let templates = cifar_templates(hw, 3);
+        let center = |v: &[f32]| -> Vec<f32> {
+            let m = v.iter().sum::<f32>() / v.len() as f32;
+            v.iter().map(|&x| x - m).collect()
+        };
+        let ctpl: Vec<Vec<f32>> = templates.iter().map(|t| center(t)).collect();
+        let mut correct = 0;
+        for i in 0..b.n {
+            let img = center(b.image(i));
+            let best = (0..10)
+                .max_by(|&a, &c| {
+                    let sa: f32 = ctpl[a].iter().zip(&img).map(|(t, v)| t * v).sum();
+                    let sc: f32 = ctpl[c].iter().zip(&img).map(|(t, v)| t * v).sum();
+                    sa.partial_cmp(&sc).unwrap()
+                })
+                .unwrap();
+            if best as i32 == b.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / b.n as f64 > 0.5, "correct={correct}/64");
+    }
+
+    #[test]
+    fn task_pairing() {
+        assert_eq!(Task::for_backbone("vgg_tiny"), Task::SynthCifar);
+        assert_eq!(Task::for_backbone("mobilenet_tiny"), Task::SynthVww);
+    }
+}

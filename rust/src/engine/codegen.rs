@@ -1,0 +1,146 @@
+//! Kernel specialization (TinyEngine-style code generation, §IV.C).
+//!
+//! TinyEngine emits a specialized kernel per layer instead of calling a
+//! generic library routine: loop bounds become constants, addresses fold,
+//! and branches unroll. MCU-MixQ inherits this and additionally resolves —
+//! at compile time, per convolution — the adaptive SLBC lane plan (lane
+//! size + field stride, paper §IV.C).
+//!
+//! We model the *outcome* of codegen: the per-layer [`KernelChoice`]
+//! (method variant, lane plan, unrolling) used by the executor and the
+//! code-size estimate used by the flash layout. Code-size constants are
+//! calibrated to the published footprints of the respective libraries
+//! (CMSIS-NN ≈ 20 KB runtime, TinyEngine ≈ 40–80 KB generated code for
+//! MCUNet-scale models; Table I shows the same ordering).
+
+use crate::models::{LayerKind, ModelDesc};
+use crate::ops::Method;
+use crate::quant::BitConfig;
+use crate::simd::adaptive::{best_plan, LanePlan};
+
+/// The resolved kernel of one layer.
+#[derive(Debug, Clone)]
+pub struct KernelChoice {
+    pub layer_idx: usize,
+    pub method: Method,
+    /// Adaptive lane plan (SLBC methods only).
+    pub lane_plan: Option<LanePlan>,
+    /// Whether codegen emits an unrolled, shape-specialized loop nest.
+    pub specialized: bool,
+    /// Estimated generated-code bytes for this kernel.
+    pub code_bytes: usize,
+}
+
+/// Per-model codegen result.
+#[derive(Debug, Clone)]
+pub struct CodegenPlan {
+    pub method: Method,
+    pub kernels: Vec<KernelChoice>,
+    /// Fixed runtime footprint (scheduler, requantization, pooling, I/O).
+    pub runtime_bytes: usize,
+}
+
+impl CodegenPlan {
+    /// Resolve every layer's kernel for `method` under `cfg`.
+    pub fn generate(model: &ModelDesc, cfg: &BitConfig, method: Method) -> CodegenPlan {
+        let specialized = matches!(method, Method::TinyEngine | Method::Slbc | Method::RpSlbc);
+        let kernels = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let lane_plan = match method {
+                    Method::Slbc | Method::RpSlbc => {
+                        best_plan(cfg.abits[i] as u32, cfg.wbits[i] as u32, l.k as u32)
+                    }
+                    _ => None,
+                };
+                let base = match l.kind {
+                    LayerKind::Conv => 900,
+                    LayerKind::DwConv => 700,
+                    LayerKind::Dense => 400,
+                };
+                // Specialized kernels cost more flash (unrolled copies),
+                // generic library kernels are shared across layers.
+                let code_bytes = if specialized { base + 600 } else { base / 2 };
+                KernelChoice {
+                    layer_idx: i,
+                    method,
+                    lane_plan,
+                    specialized,
+                    code_bytes,
+                }
+            })
+            .collect();
+        let runtime_bytes = match method {
+            // Generated-code runtimes carry the scheduler + planner glue.
+            Method::TinyEngine | Method::Slbc | Method::RpSlbc => 42 * 1024,
+            // Library runtimes are lean but generic.
+            Method::CmixNn | Method::WpcDdd => 24 * 1024,
+            Method::Naive | Method::Simd => 16 * 1024,
+        };
+        CodegenPlan {
+            method,
+            kernels,
+            runtime_bytes,
+        }
+    }
+
+    /// Total generated/linked code bytes.
+    pub fn code_bytes(&self) -> usize {
+        // Generic library kernels are deduplicated by (kind): only one
+        // copy of each is linked.
+        if self.kernels.first().map(|k| k.specialized).unwrap_or(false) {
+            self.runtime_bytes + self.kernels.iter().map(|k| k.code_bytes).sum::<usize>()
+        } else {
+            let mut seen = std::collections::BTreeSet::new();
+            let mut sum = 0usize;
+            for k in &self.kernels {
+                if seen.insert(k.code_bytes) {
+                    sum += k.code_bytes;
+                }
+            }
+            self.runtime_bytes + sum
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_tiny;
+
+    #[test]
+    fn slbc_kernels_carry_lane_plans() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 3);
+        let plan = CodegenPlan::generate(&m, &cfg, Method::RpSlbc);
+        assert!(plan.kernels.iter().all(|k| k.lane_plan.is_some()));
+        assert!(plan.kernels.iter().all(|k| k.specialized));
+    }
+
+    #[test]
+    fn library_methods_share_kernels() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let spec = CodegenPlan::generate(&m, &cfg, Method::TinyEngine);
+        let lib = CodegenPlan::generate(&m, &cfg, Method::CmixNn);
+        // Specialized codegen linked per layer > shared library kernels.
+        assert!(spec.code_bytes() > lib.code_bytes());
+    }
+
+    #[test]
+    fn lane_plan_adapts_to_bits() {
+        let m = vgg_tiny(10, 16);
+        let cfg2 = BitConfig::uniform(m.num_layers(), 2);
+        let cfg8 = BitConfig::uniform(m.num_layers(), 8);
+        let p2 = CodegenPlan::generate(&m, &cfg2, Method::Slbc);
+        let p8 = CodegenPlan::generate(&m, &cfg8, Method::Slbc);
+        let m2 = p2.kernels[0].lane_plan.unwrap().macs_per_instr;
+        let m8 = p8.kernels[0].lane_plan.unwrap().macs_per_instr;
+        assert!(
+            m2 > m8,
+            "2-bit should pack more MACs/instr ({m2}) than 8-bit ({m8})"
+        );
+    }
+}

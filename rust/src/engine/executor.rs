@@ -1,0 +1,244 @@
+//! Bit-exact integer inference over a deployment graph.
+//!
+//! The executor mirrors the Layer-2 float pipeline (`model.py::forward`)
+//! in integer arithmetic: symmetric weight quantization, unsigned
+//! activation requantization with dynamic range (the integer twin of the
+//! `fake_quant` kernels), ReLU folded into requantization, max-pool and
+//! GAP on quantized activations. Every instruction is charged to a
+//! [`Counter`] through the selected [`Method`]'s kernels, so one inference
+//! yields both the logits and the Table I cycle count.
+
+use anyhow::Result;
+
+use crate::mcu::{Counter, CycleModel};
+use crate::models::ModelDesc;
+use crate::ops::{common, Method};
+use crate::quant::{quantize_acts, BitConfig, QWeights};
+
+/// Outcome of one (batch-1) inference.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    /// Dequantized logits.
+    pub logits: Vec<f32>,
+    /// Argmax class.
+    pub pred: usize,
+    /// Total cycles on the MCU cycle model.
+    pub cycles: u64,
+    /// Full instruction histogram.
+    pub counter: Counter,
+    /// Per-layer cycle breakdown.
+    pub per_layer: Vec<(String, u64)>,
+}
+
+/// Run one image through the quantized model with `method`.
+pub fn infer(
+    model: &ModelDesc,
+    quantized: &[(QWeights, Vec<f32>)],
+    cfg: &BitConfig,
+    method: Method,
+    image: &[f32],
+    cycle_model: &CycleModel,
+) -> Result<InferenceResult> {
+    anyhow::ensure!(
+        image.len() == model.input_hw * model.input_hw * model.input_c,
+        "image size {} != model input {}",
+        image.len(),
+        model.input_hw * model.input_hw * model.input_c
+    );
+    let mut ctr = Counter::new();
+    let mut per_layer = Vec::with_capacity(model.layers.len());
+
+    // Input image quantized to 8-bit (the first layer consumes the raw
+    // image in the float pipeline; int8 input is the standard deployment
+    // contract, cf. TinyEngine).
+    let qin = quantize_acts(image, 8);
+    let mut x = qin.data;
+    let mut a_scale = qin.scale;
+    let mut in_bits = 8u8;
+
+    let n = model.layers.len();
+    let mut logits = Vec::new();
+    for (i, l) in model.layers.iter().enumerate() {
+        let cycles_before = ctr.cycles(cycle_model);
+        // GAP before the classifier (MobileNet-Tiny).
+        if l.gap_before {
+            // x currently holds the previous layer's HWC activations.
+            let (h, w) = prev_hw(model, i);
+            x = common::global_avg_pool(&x, h, w, l.cin, &mut ctr);
+        }
+        let (qw, bias) = &quantized[i];
+        let sf = qw.scale * a_scale;
+        let bias_i: Vec<i64> = bias.iter().map(|&b| (b / sf).round() as i64).collect();
+        let acc = method.run_layer(&x, &qw.data, l, cfg.wbits[i], in_bits, &mut ctr);
+
+        if i + 1 == n {
+            // Final logits: dequantize.
+            logits = acc
+                .iter()
+                .enumerate()
+                .map(|(j, &a)| (a + bias_i[j % l.cout]) as f32 * sf)
+                .collect();
+            per_layer.push((l.name.clone(), ctr.cycles(cycle_model) - cycles_before));
+            break;
+        }
+
+        // Requantize to the next layer's activation width (ReLU folded).
+        let next_bits = cfg.abits[i + 1];
+        // Track the real-unit activation scale for the next layer.
+        let mut maxv = 1i64;
+        for (j, &a) in acc.iter().enumerate() {
+            maxv = maxv.max(a + bias_i[j % l.cout]);
+        }
+        x = common::requantize(&acc, &bias_i, l.cout, next_bits, &mut ctr);
+        a_scale = maxv as f32 * sf / ((1u64 << next_bits) - 1) as f32;
+        in_bits = next_bits;
+
+        if l.pool_after {
+            x = common::maxpool_2x2(&x, l.out_h, l.out_w, l.cout, &mut ctr);
+        }
+        per_layer.push((l.name.clone(), ctr.cycles(cycle_model) - cycles_before));
+    }
+
+    let pred = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok(InferenceResult {
+        logits,
+        pred,
+        cycles: ctr.cycles(cycle_model),
+        counter: ctr,
+        per_layer,
+    })
+}
+
+/// Spatial size of the activations feeding layer `i` (for GAP).
+fn prev_hw(model: &ModelDesc, i: usize) -> (usize, usize) {
+    let prev = &model.layers[i - 1];
+    if prev.pool_after {
+        (prev.out_h / 2, prev.out_w / 2)
+    } else {
+        (prev.out_h, prev.out_w)
+    }
+}
+
+/// Run a batch of images; returns per-image predictions, mean cycles and
+/// accuracy against `labels`.
+pub fn infer_batch(
+    model: &ModelDesc,
+    quantized: &[(QWeights, Vec<f32>)],
+    cfg: &BitConfig,
+    method: Method,
+    images: &[f32],
+    labels: &[i32],
+    cycle_model: &CycleModel,
+) -> Result<(Vec<usize>, f64, f64)> {
+    let img_sz = model.input_hw * model.input_hw * model.input_c;
+    let n = labels.len();
+    anyhow::ensure!(images.len() == n * img_sz, "batch size mismatch");
+    let mut preds = Vec::with_capacity(n);
+    let mut cycles_total = 0u64;
+    let mut correct = 0usize;
+    for i in 0..n {
+        let r = infer(
+            model,
+            quantized,
+            cfg,
+            method,
+            &images[i * img_sz..(i + 1) * img_sz],
+            cycle_model,
+        )?;
+        if r.pred as i32 == labels[i] {
+            correct += 1;
+        }
+        cycles_total += r.cycles;
+        preds.push(r.pred);
+    }
+    Ok((
+        preds,
+        cycles_total as f64 / n as f64,
+        correct as f64 / n as f64,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{mobilenet_tiny, vgg_tiny};
+    use crate::quant::quantize_model;
+    use crate::util::prng::Rng;
+
+    fn setup(model: &ModelDesc, bits: u8, seed: u64) -> (Vec<(QWeights, Vec<f32>)>, BitConfig) {
+        let mut rng = Rng::new(seed);
+        let flat: Vec<f32> = (0..model.param_count).map(|_| rng.normal() * 0.2).collect();
+        let cfg = BitConfig::uniform(model.num_layers(), bits);
+        (quantize_model(model, &flat, &cfg), cfg)
+    }
+
+    #[test]
+    fn infer_runs_both_backbones() {
+        for m in [vgg_tiny(10, 16), mobilenet_tiny(2, 16)] {
+            let (q, cfg) = setup(&m, 4, 1);
+            let img = vec![0.3f32; 16 * 16 * 3];
+            let r = infer(&m, &q, &cfg, Method::RpSlbc, &img, &CycleModel::cortex_m7()).unwrap();
+            assert_eq!(r.logits.len(), m.num_classes);
+            assert!(r.pred < m.num_classes);
+            assert!(r.cycles > 0);
+            assert_eq!(r.per_layer.len(), m.num_layers());
+        }
+    }
+
+    #[test]
+    fn methods_agree_on_prediction_at_8bit() {
+        // All kernels are bit-exact over the same integer pipeline, so at
+        // identical quantization they must produce identical logits.
+        let m = vgg_tiny(10, 16);
+        let (q, cfg) = setup(&m, 8, 2);
+        let mut rng = Rng::new(77);
+        let img: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.f32()).collect();
+        let cm = CycleModel::cortex_m7();
+        let base = infer(&m, &q, &cfg, Method::Naive, &img, &cm).unwrap();
+        for method in [Method::Simd, Method::TinyEngine, Method::Slbc, Method::RpSlbc] {
+            let r = infer(&m, &q, &cfg, method, &img, &cm).unwrap();
+            assert_eq!(r.logits, base.logits, "method {}", method.name());
+        }
+    }
+
+    #[test]
+    fn slbc_cycles_beat_naive() {
+        let m = vgg_tiny(10, 16);
+        let (q, cfg) = setup(&m, 4, 3);
+        let img = vec![0.4f32; 16 * 16 * 3];
+        let cm = CycleModel::cortex_m7();
+        let naive = infer(&m, &q, &cfg, Method::Naive, &img, &cm).unwrap();
+        let slbc = infer(&m, &q, &cfg, Method::Slbc, &img, &cm).unwrap();
+        assert!(
+            slbc.cycles * 2 < naive.cycles,
+            "slbc {} vs naive {}",
+            slbc.cycles,
+            naive.cycles
+        );
+    }
+
+    #[test]
+    fn batch_accuracy_bounds() {
+        let m = vgg_tiny(10, 16);
+        let (q, cfg) = setup(&m, 4, 4);
+        let batch = crate::datasets::synth_cifar(8, 16, 42);
+        let (preds, mean_cycles, acc) = infer_batch(
+            &m,
+            &q,
+            &cfg,
+            Method::Slbc,
+            &batch.images,
+            &batch.labels,
+            &CycleModel::cortex_m7(),
+        )
+        .unwrap();
+        assert_eq!(preds.len(), 8);
+        assert!(mean_cycles > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,255 @@
+//! Inference-graph IR.
+//!
+//! A [`Graph`] is the deployment-time view of a model: one node per
+//! compute step (conv / depthwise conv / dense / max-pool / global-average
+//! -pool), one tensor per intermediate activation. Activation tensors
+//! carry their *quantized, packed* byte sizes — sub-byte activations are
+//! stored packed (`ceil(elems·bits/8)`), which is one of the two levers
+//! (with the planner) behind the Table I peak-memory column.
+
+use crate::models::{LayerSpec, ModelDesc};
+use crate::quant::BitConfig;
+
+/// Graph node operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeOp {
+    /// Convolution / depthwise / dense over `layer_idx` of the model.
+    Layer { layer_idx: usize },
+    /// 2×2 max-pool after `layer_idx`.
+    MaxPool { layer_idx: usize },
+    /// Global average pool before the final dense layer.
+    GlobalAvgPool { layer_idx: usize },
+}
+
+/// One node: consumes `input`, produces `output` (tensor ids).
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub op: NodeOp,
+    pub input: usize,
+    pub output: usize,
+    pub name: String,
+}
+
+/// An activation tensor in the SRAM arena.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub id: usize,
+    /// Element count.
+    pub elems: usize,
+    /// Storage bits per element (activation quantization width; the model
+    /// input stays 8-bit).
+    pub bits: u8,
+    /// First node producing it (`None` for the graph input).
+    pub producer: Option<usize>,
+    /// Last node consuming it (filled by `Graph::build`).
+    pub last_use: usize,
+}
+
+impl TensorInfo {
+    /// Packed byte size in the arena.
+    pub fn bytes(&self) -> usize {
+        (self.elems * self.bits as usize).div_ceil(8)
+    }
+}
+
+/// The deployment graph of one model under one bit configuration.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub tensors: Vec<TensorInfo>,
+    /// Graph input tensor id.
+    pub input: usize,
+    /// Graph output tensor id.
+    pub output: usize,
+}
+
+impl Graph {
+    /// Build the graph of `model` with activation bitwidths from `cfg`.
+    ///
+    /// Activation storage width of a layer's *output* is the consuming
+    /// layer's activation bitwidth (quantize-at-production), except the
+    /// final logits which stay 32-bit.
+    pub fn build(model: &ModelDesc, cfg: &BitConfig) -> Graph {
+        assert_eq!(cfg.num_layers(), model.layers.len());
+        let mut tensors: Vec<TensorInfo> = Vec::new();
+        let mut nodes: Vec<Node> = Vec::new();
+
+        // Input tensor: 8-bit image.
+        let input_elems = model.input_hw * model.input_hw * model.input_c;
+        tensors.push(TensorInfo {
+            id: 0,
+            elems: input_elems,
+            bits: 8,
+            producer: None,
+            last_use: 0,
+        });
+        let mut cur = 0usize;
+
+        let n = model.layers.len();
+        for (i, l) in model.layers.iter().enumerate() {
+            // Optional GAP before a dense layer.
+            if l.gap_before {
+                let t = new_tensor(&mut tensors, l.cin, act_bits(cfg, i, n));
+                push_node(
+                    &mut nodes,
+                    &mut tensors,
+                    NodeOp::GlobalAvgPool { layer_idx: i },
+                    cur,
+                    t,
+                    format!("{}::gap", l.name),
+                );
+                cur = t;
+            }
+            // The layer itself.
+            let out_bits = if i + 1 == n { 32 } else { act_bits(cfg, i + 1, n) };
+            let t = new_tensor(&mut tensors, l.out_elems(), out_bits);
+            push_node(
+                &mut nodes,
+                &mut tensors,
+                NodeOp::Layer { layer_idx: i },
+                cur,
+                t,
+                l.name.clone(),
+            );
+            cur = t;
+            // Optional 2×2 max-pool.
+            if l.pool_after {
+                let pooled = (l.out_h / 2) * (l.out_w / 2) * l.cout;
+                let t = new_tensor(&mut tensors, pooled, out_bits);
+                push_node(
+                    &mut nodes,
+                    &mut tensors,
+                    NodeOp::MaxPool { layer_idx: i },
+                    cur,
+                    t,
+                    format!("{}::pool", l.name),
+                );
+                cur = t;
+            }
+        }
+
+        Graph {
+            input: 0,
+            output: cur,
+            nodes,
+            tensors,
+        }
+    }
+
+    /// Layer spec behind a node (pool nodes reference their source layer).
+    pub fn layer_of<'m>(&self, model: &'m ModelDesc, node: &Node) -> &'m LayerSpec {
+        let idx = match node.op {
+            NodeOp::Layer { layer_idx }
+            | NodeOp::MaxPool { layer_idx }
+            | NodeOp::GlobalAvgPool { layer_idx } => layer_idx,
+        };
+        &model.layers[idx]
+    }
+
+    /// Total bytes if every tensor were live simultaneously (the
+    /// no-planning allocation of library-style deployments).
+    pub fn all_live_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.bytes()).sum()
+    }
+}
+
+fn act_bits(cfg: &BitConfig, layer: usize, n: usize) -> u8 {
+    if layer >= n {
+        32
+    } else {
+        cfg.abits[layer]
+    }
+}
+
+fn new_tensor(tensors: &mut Vec<TensorInfo>, elems: usize, bits: u8) -> usize {
+    let id = tensors.len();
+    tensors.push(TensorInfo {
+        id,
+        elems,
+        bits,
+        producer: None,
+        last_use: 0,
+    });
+    id
+}
+
+fn push_node(
+    nodes: &mut Vec<Node>,
+    tensors: &mut [TensorInfo],
+    op: NodeOp,
+    input: usize,
+    output: usize,
+    name: String,
+) {
+    let id = nodes.len();
+    tensors[output].producer = Some(id);
+    tensors[input].last_use = id;
+    tensors[output].last_use = id; // provisional; later consumers extend it
+    nodes.push(Node {
+        id,
+        op,
+        input,
+        output,
+        name,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{mobilenet_tiny, vgg_tiny};
+
+    #[test]
+    fn vgg_graph_structure() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let g = Graph::build(&m, &cfg);
+        // 6 layers + 3 pools = 9 nodes.
+        assert_eq!(g.nodes.len(), 9);
+        assert_eq!(g.tensors.len(), 10);
+        assert_eq!(g.tensors[g.output].bits, 32); // logits
+    }
+
+    #[test]
+    fn mobilenet_graph_has_gap() {
+        let m = mobilenet_tiny(2, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let g = Graph::build(&m, &cfg);
+        assert!(g
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, NodeOp::GlobalAvgPool { .. })));
+    }
+
+    #[test]
+    fn subbyte_tensors_pack() {
+        let m = vgg_tiny(10, 16);
+        let cfg2 = BitConfig::uniform(m.num_layers(), 2);
+        let cfg8 = BitConfig::uniform(m.num_layers(), 8);
+        let g2 = Graph::build(&m, &cfg2);
+        let g8 = Graph::build(&m, &cfg8);
+        assert!(g2.all_live_bytes() < g8.all_live_bytes());
+        // 2-bit tensor of 100 elems = 25 bytes.
+        let t = TensorInfo {
+            id: 0,
+            elems: 100,
+            bits: 2,
+            producer: None,
+            last_use: 0,
+        };
+        assert_eq!(t.bytes(), 25);
+    }
+
+    #[test]
+    fn lifetimes_are_ordered() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let g = Graph::build(&m, &cfg);
+        for t in &g.tensors {
+            if let Some(p) = t.producer {
+                assert!(t.last_use >= p, "tensor {} dies before birth", t.id);
+            }
+        }
+    }
+}

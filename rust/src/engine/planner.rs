@@ -1,0 +1,201 @@
+//! SRAM arena planning.
+//!
+//! TinyEngine's "model-adaptive memory scheduling" assigns every
+//! activation tensor an offset in one flat arena such that tensors with
+//! overlapping lifetimes never overlap in space; peak memory is the arena
+//! high-water mark instead of the sum of all buffers. We implement the
+//! standard greedy best-fit-by-decreasing-size planner (the same family
+//! as TFLite-Micro's and TinyEngine's planners), plus the baseline
+//! [`PlanStrategy::AllLive`] allocation that library-style deployments
+//! (CMix-NN, WPC&DDD, CMSIS-NN) effectively use — reproducing the Table I
+//! peak-memory gap between the two deployment styles.
+
+use crate::ops::Method;
+
+use super::graph::Graph;
+
+/// Allocation strategy of a deployment framework.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanStrategy {
+    /// Lifetime-aware arena planning (TinyEngine, MCU-MixQ).
+    Lifetime,
+    /// Every buffer statically allocated (CMix-NN / WPC&DDD style).
+    AllLive,
+}
+
+/// Which strategy a Table I method row uses.
+pub fn strategy_for(method: Method) -> PlanStrategy {
+    match method {
+        Method::TinyEngine | Method::Slbc | Method::RpSlbc => PlanStrategy::Lifetime,
+        _ => PlanStrategy::AllLive,
+    }
+}
+
+/// A planned arena: per-tensor offsets plus the peak.
+#[derive(Debug, Clone)]
+pub struct MemoryPlan {
+    /// Byte offset per tensor id (same indexing as `graph.tensors`).
+    pub offsets: Vec<usize>,
+    /// Arena high-water mark in bytes.
+    pub peak_bytes: usize,
+    pub strategy: PlanStrategy,
+}
+
+impl MemoryPlan {
+    /// Check the invariant: tensors with overlapping lifetimes must not
+    /// overlap in arena space (used by tests and debug assertions).
+    pub fn validate(&self, graph: &Graph) -> Result<(), String> {
+        let ts = &graph.tensors;
+        for a in ts {
+            for b in ts {
+                if a.id >= b.id {
+                    continue;
+                }
+                if lifetimes_overlap(graph, a.id, b.id) {
+                    let (ao, bo) = (self.offsets[a.id], self.offsets[b.id]);
+                    let disjoint = ao + a.bytes() <= bo || bo + b.bytes() <= ao;
+                    if !disjoint {
+                        return Err(format!(
+                            "tensors {} and {} overlap in space and time",
+                            a.id, b.id
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Lifetime interval of tensor `id` in node order: `[birth, death]`.
+fn lifetime(graph: &Graph, id: usize) -> (usize, usize) {
+    let t = &graph.tensors[id];
+    // The graph input is live from before node 0.
+    let birth = t.producer.unwrap_or(0);
+    (birth, t.last_use)
+}
+
+fn lifetimes_overlap(graph: &Graph, a: usize, b: usize) -> bool {
+    let (ab, ad) = lifetime(graph, a);
+    let (bb, bd) = lifetime(graph, b);
+    ab <= bd && bb <= ad
+}
+
+/// Plan the activation arena of `graph` under `strategy`.
+pub fn plan_memory(graph: &Graph, strategy: PlanStrategy) -> MemoryPlan {
+    match strategy {
+        PlanStrategy::AllLive => {
+            let mut offsets = vec![0usize; graph.tensors.len()];
+            let mut cur = 0usize;
+            for t in &graph.tensors {
+                offsets[t.id] = cur;
+                cur += t.bytes();
+            }
+            MemoryPlan {
+                offsets,
+                peak_bytes: cur,
+                strategy,
+            }
+        }
+        PlanStrategy::Lifetime => {
+            // Greedy best-fit, largest tensors first.
+            let mut order: Vec<usize> = (0..graph.tensors.len()).collect();
+            order.sort_by_key(|&id| std::cmp::Reverse(graph.tensors[id].bytes()));
+
+            let mut offsets = vec![usize::MAX; graph.tensors.len()];
+            let mut placed: Vec<usize> = Vec::new();
+            let mut peak = 0usize;
+            for &id in &order {
+                let size = graph.tensors[id].bytes();
+                // Collect forbidden intervals from temporally-overlapping,
+                // already-placed tensors.
+                let mut busy: Vec<(usize, usize)> = placed
+                    .iter()
+                    .filter(|&&p| lifetimes_overlap(graph, id, p))
+                    .map(|&p| (offsets[p], offsets[p] + graph.tensors[p].bytes()))
+                    .collect();
+                busy.sort_unstable();
+                // First gap that fits.
+                let mut candidate = 0usize;
+                for &(lo, hi) in &busy {
+                    if candidate + size <= lo {
+                        break;
+                    }
+                    candidate = candidate.max(hi);
+                }
+                offsets[id] = candidate;
+                peak = peak.max(candidate + size);
+                placed.push(id);
+            }
+            let plan = MemoryPlan {
+                offsets,
+                peak_bytes: peak,
+                strategy,
+            };
+            debug_assert!(plan.validate(graph).is_ok());
+            plan
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{mobilenet_tiny, vgg_tiny};
+    use crate::quant::BitConfig;
+
+    #[test]
+    fn lifetime_plan_valid_and_smaller() {
+        for m in [vgg_tiny(10, 16), mobilenet_tiny(2, 16)] {
+            for bits in [2u8, 4, 8] {
+                let cfg = BitConfig::uniform(m.num_layers(), bits);
+                let g = Graph::build(&m, &cfg);
+                let lt = plan_memory(&g, PlanStrategy::Lifetime);
+                let al = plan_memory(&g, PlanStrategy::AllLive);
+                lt.validate(&g).unwrap();
+                al.validate(&g).unwrap();
+                assert!(
+                    lt.peak_bytes < al.peak_bytes,
+                    "{} @{}bit: lifetime {} >= all-live {}",
+                    m.name,
+                    bits,
+                    lt.peak_bytes,
+                    al.peak_bytes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn peak_at_least_live_pair() {
+        // Peak must cover at least the largest producer+consumer pair.
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 8);
+        let g = Graph::build(&m, &cfg);
+        let plan = plan_memory(&g, PlanStrategy::Lifetime);
+        let mut min_needed = 0usize;
+        for n in &g.nodes {
+            let need = g.tensors[n.input].bytes() + g.tensors[n.output].bytes();
+            min_needed = min_needed.max(need);
+        }
+        assert!(plan.peak_bytes >= min_needed);
+    }
+
+    #[test]
+    fn strategies_assigned_per_method() {
+        assert_eq!(strategy_for(Method::RpSlbc), PlanStrategy::Lifetime);
+        assert_eq!(strategy_for(Method::TinyEngine), PlanStrategy::Lifetime);
+        assert_eq!(strategy_for(Method::CmixNn), PlanStrategy::AllLive);
+        assert_eq!(strategy_for(Method::WpcDdd), PlanStrategy::AllLive);
+    }
+
+    #[test]
+    fn subbyte_activations_shrink_peak() {
+        let m = vgg_tiny(10, 16);
+        let g2 = Graph::build(&m, &BitConfig::uniform(m.num_layers(), 2));
+        let g8 = Graph::build(&m, &BitConfig::uniform(m.num_layers(), 8));
+        let p2 = plan_memory(&g2, PlanStrategy::Lifetime).peak_bytes;
+        let p8 = plan_memory(&g8, PlanStrategy::Lifetime).peak_bytes;
+        assert!(p2 < p8, "2-bit {} vs 8-bit {}", p2, p8);
+    }
+}

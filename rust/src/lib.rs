@@ -1,0 +1,67 @@
+//! # MCU-MixQ
+//!
+//! A HW/SW co-optimized mixed-precision neural network (MPNN) design
+//! framework for microcontrollers, reproducing:
+//!
+//! > Gong, Liu, Cheng, Li, Li. *MCU-MixQ: A HW/SW Co-optimized
+//! > Mixed-precision Neural Network Design Framework for MCUs.* (2024)
+//!
+//! The framework has three pillars, mirrored by the module tree:
+//!
+//! 1. **SLBC** — SIMD-based Low-Bitwidth Convolution: multiple sub-byte
+//!    operands are packed *within* each SIMD lane (polynomial-multiplication
+//!    packing), so a single SIMD `MUL` performs many low-bitwidth MACs
+//!    ([`simd`], [`ops`]). The reordered-packing variant (RP-SLBC) merges
+//!    segmentation work across registers, and adaptive lane sizing picks the
+//!    best lane configuration per convolution at compile time.
+//! 2. **Hardware-aware quantization search** — a differentiable NAS
+//!    (EdMIPS-style supernet, built in JAX at Layer 2) whose complexity loss
+//!    is driven by the *packing-aware* performance model of Eq. 12
+//!    ([`perf`], [`nas`], [`coordinator`]).
+//! 3. **Deployment substrate** — a TinyEngine-like inference engine
+//!    ([`engine`]) running on a cycle-approximate Cortex-M7 (ARMv7E-M DSP)
+//!    simulator ([`mcu`]), with model zoo ([`models`]), quantization
+//!    machinery ([`quant`]) and synthetic datasets ([`datasets`]).
+//!
+//! ## Three-layer architecture
+//!
+//! * **Layer 1 (Pallas, build time)** — `python/compile/kernels/slbc.py`
+//!   implements the packed-arithmetic convolution as a Pallas kernel,
+//!   checked against the pure-`jnp` oracle `ref.py`.
+//! * **Layer 2 (JAX, build time)** — `python/compile/model.py` builds the
+//!   mixed-precision CNN and the NAS supernet; `aot.py` lowers train / eval
+//!   steps to HLO text in `artifacts/`.
+//! * **Layer 3 (this crate, run time)** — loads the HLO artifacts through
+//!   PJRT ([`runtime`]) and drives quantization search, QAT and MCU
+//!   deployment without any Python on the hot path.
+
+pub mod coordinator;
+pub mod datasets;
+pub mod engine;
+pub mod mcu;
+pub mod models;
+pub mod nas;
+pub mod ops;
+pub mod perf;
+pub mod quant;
+pub mod runtime;
+pub mod simd;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// STM32F746 (the paper's evaluation platform) clock frequency in Hz.
+pub const STM32F746_CLOCK_HZ: u64 = 216_000_000;
+
+/// STM32F746 SRAM capacity in bytes (320 KB).
+pub const STM32F746_SRAM_BYTES: usize = 320 * 1024;
+
+/// STM32F746 flash capacity in bytes (1 MB).
+pub const STM32F746_FLASH_BYTES: usize = 1024 * 1024;
+
+/// Convert a cycle count on the simulated Cortex-M7 into milliseconds at the
+/// paper's 216 MHz clock.
+pub fn cycles_to_ms(cycles: u64) -> f64 {
+    cycles as f64 / STM32F746_CLOCK_HZ as f64 * 1e3
+}

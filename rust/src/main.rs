@@ -1,0 +1,308 @@
+//! `mcu-mixq` — the MCU-MixQ leader binary.
+//!
+//! Subcommands:
+//!
+//! * `info`                         — artifacts, backbones, calibration
+//! * `search    --backbone B ...`   — hardware-aware quantization search
+//! * `qat       --backbone B ...`   — QAT at a fixed bit configuration
+//! * `pipeline  --backbone B ...`   — full search→QAT→deploy→compare run
+//! * `deploy    --backbone B ...`   — deploy + simulate one method
+//! * `slbc-demo`                    — Layer-1 Pallas kernel vs Rust packing
+//! * `calibrate`                    — fit & report the Eq. 12 coefficients
+//!
+//! Everything runs from the AOT artifacts in `--artifacts DIR`
+//! (default `artifacts/`); Python is never invoked.
+
+use mcu_mixq::coordinator::qat::QatCfg;
+use mcu_mixq::coordinator::{self, PipelineCfg, QatRunner, SearchCfg, SupernetSearch};
+use mcu_mixq::engine;
+use mcu_mixq::mcu::CycleModel;
+use mcu_mixq::nas::CostProxy;
+use mcu_mixq::ops::Method;
+use mcu_mixq::perf::{calibrate_alpha_beta, PerfModel};
+use mcu_mixq::quant::BitConfig;
+use mcu_mixq::runtime::{lit, ArtifactStore, Runtime};
+use mcu_mixq::util::bench::Table;
+use mcu_mixq::util::cli::Args;
+use mcu_mixq::Result;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "info" => cmd_info(args),
+        "search" => cmd_search(args),
+        "qat" => cmd_qat(args),
+        "pipeline" => cmd_pipeline(args),
+        "deploy" => cmd_deploy(args),
+        "slbc-demo" => cmd_slbc_demo(args),
+        "calibrate" => cmd_calibrate(args),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command `{other}`")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "mcu-mixq — HW/SW co-optimized mixed-precision NN framework for MCUs\n\n\
+         USAGE: mcu-mixq <COMMAND> [--artifacts DIR] [options]\n\n\
+         COMMANDS:\n\
+         \x20 info                          show artifacts / backbones / calibration\n\
+         \x20 search   --backbone B         run the quantization explorer\n\
+         \x20          [--steps N] [--lam F] [--proxy simd|edmips]\n\
+         \x20 qat      --backbone B         QAT at fixed bits\n\
+         \x20          [--steps N] [--wbits 4,4,..] [--abits 4,4,..]\n\
+         \x20 pipeline --backbone B         full search→QAT→deploy→compare\n\
+         \x20 deploy   --backbone B         deploy one method\n\
+         \x20          [--method rp-slbc] [--bits 4]\n\
+         \x20 slbc-demo                     run the Layer-1 kernel via PJRT\n\
+         \x20 calibrate                     fit Eq. 12 coefficients"
+    );
+}
+
+fn store(args: &Args) -> Result<ArtifactStore> {
+    ArtifactStore::open(args.str_or("artifacts", "artifacts"))
+}
+
+fn backbone_arg(args: &Args) -> String {
+    args.str_or("backbone", "vgg_tiny")
+}
+
+fn parse_bits(s: &str, n: usize) -> Result<Vec<u8>> {
+    if let Ok(b) = s.parse::<u8>() {
+        return Ok(vec![b; n]);
+    }
+    let v: Vec<u8> = s
+        .split(',')
+        .map(|t| t.trim().parse::<u8>())
+        .collect::<std::result::Result<_, _>>()?;
+    anyhow::ensure!(v.len() == n, "expected {n} bit entries, got {}", v.len());
+    Ok(v)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let rt = Runtime::cpu()?;
+    println!("platform: {} ({} device(s))", rt.platform(), rt.device_count());
+    println!("artifacts: {}", store.dir.display());
+    println!("options: {:?}  momentum: {}", store.options, store.momentum);
+    let mut t = Table::new(vec!["backbone", "layers", "params", "MACs", "train/eval batch"]);
+    for name in store.backbone_names() {
+        let b = store.backbone(&name)?;
+        t.row(vec![
+            name.clone(),
+            format!("{}", b.model.num_layers()),
+            format!("{}", b.model.param_count),
+            format!("{}", b.model.total_macs()),
+            format!("{}/{}", b.train_batch, b.eval_batch),
+        ]);
+    }
+    t.print();
+    let cal = calibrate_alpha_beta(&CycleModel::cortex_m7());
+    println!(
+        "Eq.12 calibration: alpha={:.3} beta={:.3} (max rel err {:.1}% over {} probes)",
+        cal.model.alpha,
+        cal.model.beta,
+        cal.max_rel_err * 100.0,
+        cal.samples
+    );
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let rt = Runtime::cpu()?;
+    let arts = store.backbone(&backbone_arg(args))?;
+    let proxy = match args.str_or("proxy", "simd").as_str() {
+        "edmips" => CostProxy::EdMipsMacs,
+        _ => CostProxy::SimdAware(PerfModel::cortex_m7(), Method::RpSlbc),
+    };
+    let mut cfg = SearchCfg::default();
+    cfg.steps = args.usize_or("steps", cfg.steps);
+    cfg.lam = args.f32_or("lam", cfg.lam);
+    cfg.lr = args.f32_or("lr", cfg.lr);
+    cfg.lr_alpha = args.f32_or("lr-alpha", cfg.lr_alpha);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+
+    println!("searching {} with {} proxy ...", arts.model.name, proxy.name());
+    let search = SupernetSearch::new(&rt, &arts, proxy, cfg.seed)?;
+    let out = search.run(&cfg)?;
+    for log in &out.history {
+        println!(
+            "  step {:>4}  loss {:.4}  ce {:.4}  comp {:.4}  acc {:.3}",
+            log.step, log.loss, log.ce, log.comp, log.acc
+        );
+    }
+    println!("selected wbits: {:?}", out.config.wbits);
+    println!("selected abits: {:?}", out.config.abits);
+    println!(
+        "avg bits: w={:.2} a={:.2}  entropy={:.3}",
+        out.config.avg_wbits(),
+        out.config.avg_abits(),
+        out.final_entropy
+    );
+    Ok(())
+}
+
+fn cmd_qat(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let rt = Runtime::cpu()?;
+    let arts = store.backbone(&backbone_arg(args))?;
+    let n = arts.model.num_layers();
+    let config = BitConfig {
+        wbits: parse_bits(&args.str_or("wbits", "4"), n)?,
+        abits: parse_bits(&args.str_or("abits", "4"), n)?,
+    };
+    let mut cfg = QatCfg::default();
+    cfg.steps = args.usize_or("steps", cfg.steps);
+    cfg.lr = args.f32_or("lr", cfg.lr);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+
+    let runner = QatRunner::new(&rt, &arts, cfg.seed)?;
+    let init = arts.load_init_params()?;
+    println!(
+        "QAT {} at w={:?} a={:?}",
+        arts.model.name, config.wbits, config.abits
+    );
+    let out = runner.run(&init, &config, &cfg)?;
+    for log in &out.history {
+        println!("  step {:>4}  loss {:.4}  acc {:.3}", log.step, log.loss, log.acc);
+    }
+    println!("eval: loss {:.4}  acc {:.3}", out.eval_loss, out.eval_acc);
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let rt = Runtime::cpu()?;
+    let backbone = backbone_arg(args);
+    let mut cfg = PipelineCfg::new(&backbone);
+    cfg.search.steps = args.usize_or("search-steps", cfg.search.steps);
+    cfg.qat.steps = args.usize_or("qat-steps", cfg.qat.steps);
+    cfg.use_edmips_proxy = args.str_or("proxy", "simd") == "edmips";
+
+    let report = coordinator::run_pipeline(&rt, &store, &cfg)?;
+    println!("== search ==");
+    for log in &report.search_history {
+        println!(
+            "  step {:>4}  loss {:.4}  ce {:.4}  comp {:.4}  acc {:.3}",
+            log.step, log.loss, log.ce, log.comp, log.acc
+        );
+    }
+    println!("selected wbits {:?}", report.searched_wbits);
+    println!("selected abits {:?}", report.searched_abits);
+    println!("== qat ==");
+    for log in &report.qat_history {
+        println!("  step {:>4}  loss {:.4}  acc {:.3}", log.step, log.loss, log.acc);
+    }
+    println!("== deployment comparison ==");
+    println!("{}", coordinator::deploy::render_rows(&backbone, &report.rows));
+    for (m, s) in &report.speedups {
+        println!("MCU-MixQ speedup over {m}: {s:.2}x");
+    }
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let arts = store.backbone(&backbone_arg(args))?;
+    let model = arts.model.clone();
+    let method = Method::parse(&args.str_or("method", "rp-slbc"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let n = model.num_layers();
+    let cfg = BitConfig {
+        wbits: parse_bits(&args.str_or("bits", "4"), n)?,
+        abits: parse_bits(&args.str_or("bits", "4"), n)?,
+    };
+    let params = arts.load_init_params()?;
+    let probe = mcu_mixq::datasets::generate(
+        mcu_mixq::datasets::Task::for_backbone(&model.name),
+        1,
+        model.input_hw,
+        7,
+    );
+    let rep = engine::deploy(&model, &params, &cfg, method, probe.image(0))?;
+    println!(
+        "{} via {}: peak {:.2}KB flash {:.2}KB clocks {} latency {:.2}ms",
+        rep.backbone,
+        rep.method.name(),
+        rep.peak_sram as f64 / 1024.0,
+        rep.flash_bytes as f64 / 1024.0,
+        rep.cycles,
+        rep.latency_ms
+    );
+    for (name, cyc) in &rep.per_layer {
+        println!("  {name:<14} {cyc:>10} cycles");
+    }
+    Ok(())
+}
+
+fn cmd_slbc_demo(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let rt = Runtime::cpu()?;
+    let demo = store.slbc_demo()?;
+    let program = rt.load_program(&demo.path)?;
+    println!(
+        "slbc_demo: n={} k={} sx={} sk={} group={} field={} (compiled in {:.2}s)",
+        demo.n,
+        demo.k,
+        demo.sx_bits,
+        demo.sk_bits,
+        demo.group_size,
+        demo.field_width,
+        program.compile_time_s
+    );
+    // Random sub-byte operands, run through the Pallas-lowered HLO.
+    let mut rng = mcu_mixq::util::prng::Rng::new(args.u64_or("seed", 3));
+    let x: Vec<i64> = (0..demo.n).map(|_| rng.below(1 << demo.sx_bits) as i64).collect();
+    let k: Vec<i64> = (0..demo.k).map(|_| rng.below(1 << demo.sk_bits) as i64).collect();
+    let outs = program.run(&[lit::i64_vec(&x), lit::i64_vec(&k)])?;
+    let got = lit::to_i64_vec(&outs[0])?;
+    // Rust-side packed conv oracle.
+    let want = mcu_mixq::simd::poly::conv1d_full_direct(
+        &x.iter().map(|&v| v as u64).collect::<Vec<_>>(),
+        &k.iter().map(|&v| v as u64).collect::<Vec<_>>(),
+    );
+    let want: Vec<i64> = want.iter().map(|&v| v as i64).collect();
+    anyhow::ensure!(got == want, "PJRT result differs from Rust packing oracle");
+    println!(
+        "Layer-1 kernel output matches the Rust packed-arithmetic oracle ({} taps)",
+        got.len()
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(_args: &Args) -> Result<()> {
+    for (name, cm) in [
+        ("cortex-m7", CycleModel::cortex_m7()),
+        ("cortex-m4", CycleModel::cortex_m4()),
+    ] {
+        let cal = calibrate_alpha_beta(&cm);
+        println!(
+            "{name}: alpha={:.4} beta={:.4} scale={:.3} max_rel_err={:.2}% ({} probes)",
+            cal.model.alpha,
+            cal.model.beta,
+            cal.scale,
+            cal.max_rel_err * 100.0,
+            cal.samples
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Fast instruction-class accounting for whole-network simulation.
+//!
+//! The bit-exact operator implementations in [`crate::ops`] compute with
+//! native Rust arithmetic but *charge* every MCU instruction they would
+//! execute to a [`Counter`]. Folding the histogram through the shared
+//! [`CycleModel`](super::cycles::CycleModel) yields the same cycle totals
+//! the interpreter would produce for the equivalent program (validated by
+//! the cross-check tests in `rust/tests/`), at orders of magnitude higher
+//! simulation speed.
+
+use super::cycles::{CycleModel, InstrClass, ALL_CLASSES};
+
+/// Instruction-class histogram.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Counter {
+    pub alu: u64,
+    pub bit: u64,
+    pub mul: u64,
+    pub simd: u64,
+    pub mul_long: u64,
+    pub load: u64,
+    pub store: u64,
+    pub branch_taken: u64,
+    pub branch_not_taken: u64,
+    pub sat: u64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `n` instructions of `class`.
+    #[inline]
+    pub fn charge(&mut self, class: InstrClass, n: u64) {
+        match class {
+            InstrClass::Alu => self.alu += n,
+            InstrClass::Bit => self.bit += n,
+            InstrClass::Mul => self.mul += n,
+            InstrClass::Simd => self.simd += n,
+            InstrClass::MulLong => self.mul_long += n,
+            InstrClass::Load => self.load += n,
+            InstrClass::Store => self.store += n,
+            InstrClass::BranchTaken => self.branch_taken += n,
+            InstrClass::BranchNotTaken => self.branch_not_taken += n,
+            InstrClass::Sat => self.sat += n,
+        }
+    }
+
+    pub fn get(&self, class: InstrClass) -> u64 {
+        match class {
+            InstrClass::Alu => self.alu,
+            InstrClass::Bit => self.bit,
+            InstrClass::Mul => self.mul,
+            InstrClass::Simd => self.simd,
+            InstrClass::MulLong => self.mul_long,
+            InstrClass::Load => self.load,
+            InstrClass::Store => self.store,
+            InstrClass::BranchTaken => self.branch_taken,
+            InstrClass::BranchNotTaken => self.branch_not_taken,
+            InstrClass::Sat => self.sat,
+        }
+    }
+
+    /// Total instruction count.
+    pub fn instructions(&self) -> u64 {
+        ALL_CLASSES.iter().map(|&c| self.get(c)).sum()
+    }
+
+    /// Total cycles under a cycle model.
+    pub fn cycles(&self, model: &CycleModel) -> u64 {
+        ALL_CLASSES
+            .iter()
+            .map(|&c| self.get(c) * model.cost(c))
+            .sum()
+    }
+
+    /// The Eq. 12 decomposition: (C_SISD, C_SIMD, C_bit) — SISD covers
+    /// ALU/MUL/load/store/branch scalar work, SIMD covers the DSP and
+    /// long-multiply classes, bit covers shifts/masks.
+    pub fn eq12_components(&self) -> (u64, u64, u64) {
+        let sisd = self.alu
+            + self.mul
+            + self.load
+            + self.store
+            + self.branch_taken
+            + self.branch_not_taken
+            + self.sat;
+        let simd = self.simd + self.mul_long;
+        let bit = self.bit;
+        (sisd, simd, bit)
+    }
+
+    /// Merge another counter into this one.
+    pub fn merge(&mut self, other: &Counter) {
+        for c in ALL_CLASSES {
+            self.charge(c, other.get(c));
+        }
+    }
+}
+
+impl std::ops::AddAssign<&Counter> for Counter {
+    fn add_assign(&mut self, rhs: &Counter) {
+        self.merge(rhs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_cycles() {
+        let mut c = Counter::new();
+        c.charge(InstrClass::Mul, 10);
+        c.charge(InstrClass::Load, 5);
+        let m = CycleModel::cortex_m7();
+        assert_eq!(c.cycles(&m), 10 * m.mul + 5 * m.load);
+        assert_eq!(c.instructions(), 15);
+    }
+
+    #[test]
+    fn eq12_split() {
+        let mut c = Counter::new();
+        c.charge(InstrClass::Alu, 3);
+        c.charge(InstrClass::Simd, 7);
+        c.charge(InstrClass::Bit, 11);
+        c.charge(InstrClass::MulLong, 2);
+        let (sisd, simd, bit) = c.eq12_components();
+        assert_eq!((sisd, simd, bit), (3, 9, 11));
+    }
+
+    #[test]
+    fn merge_sums_classwise() {
+        let mut a = Counter::new();
+        a.charge(InstrClass::Store, 4);
+        let mut b = Counter::new();
+        b.charge(InstrClass::Store, 6);
+        b.charge(InstrClass::Sat, 1);
+        a += &b;
+        assert_eq!(a.store, 10);
+        assert_eq!(a.sat, 1);
+    }
+}

@@ -1,0 +1,154 @@
+//! ARMv7E-M (Thumb-2 + DSP extension) instruction subset.
+//!
+//! Enough of the ISA to express the neural-network micro-kernels the paper
+//! relies on: scalar ALU/MAC, the DSP dual-MAC family (`SMLAD`/`SMUAD`),
+//! long multiplies (the 64-bit packing carrier), bit-field manipulation
+//! (packing/segmentation), and load/store/branch for loop structure.
+//! Programs are assembled from `Vec<Instr>` with symbolic labels.
+
+/// A core register (r0–r12, sp=13, lr=14, pc=15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Reg(pub u8);
+
+pub const R0: Reg = Reg(0);
+pub const R1: Reg = Reg(1);
+pub const R2: Reg = Reg(2);
+pub const R3: Reg = Reg(3);
+pub const R4: Reg = Reg(4);
+pub const R5: Reg = Reg(5);
+pub const R6: Reg = Reg(6);
+pub const R7: Reg = Reg(7);
+pub const R8: Reg = Reg(8);
+pub const R9: Reg = Reg(9);
+pub const R10: Reg = Reg(10);
+pub const R11: Reg = Reg(11);
+pub const R12: Reg = Reg(12);
+
+/// Flexible second operand: immediate or register.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op2 {
+    Imm(u32),
+    Reg(Reg),
+}
+
+impl From<u32> for Op2 {
+    fn from(v: u32) -> Self {
+        Op2::Imm(v)
+    }
+}
+
+impl From<Reg> for Op2 {
+    fn from(r: Reg) -> Self {
+        Op2::Reg(r)
+    }
+}
+
+/// Branch conditions (subset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Al,
+}
+
+/// The instruction subset. Semantics follow the ARMv7-M ARM; all
+/// arithmetic is 32-bit two's complement unless noted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    // --- data processing -------------------------------------------------
+    Mov(Reg, Op2),
+    /// MOVT-style: set high 16 bits, keep low.
+    Movt(Reg, u32),
+    Add(Reg, Reg, Op2),
+    Sub(Reg, Reg, Op2),
+    Rsb(Reg, Reg, Op2),
+    And(Reg, Reg, Op2),
+    Orr(Reg, Reg, Op2),
+    Eor(Reg, Reg, Op2),
+    Bic(Reg, Reg, Op2),
+    Lsl(Reg, Reg, Op2),
+    Lsr(Reg, Reg, Op2),
+    Asr(Reg, Reg, Op2),
+    /// Unsigned bit-field extract: rd = (rn >> lsb) & ((1<<width)-1).
+    Ubfx(Reg, Reg, u32, u32),
+    /// Signed saturate to `bits`.
+    Ssat(Reg, u32, Reg),
+    /// Unsigned saturate to `bits`.
+    Usat(Reg, u32, Reg),
+    Sxtb(Reg, Reg),
+    Uxtb(Reg, Reg),
+    Sxth(Reg, Reg),
+    Uxth(Reg, Reg),
+
+    // --- multiply family --------------------------------------------------
+    /// rd = rn * rm (low 32 bits).
+    Mul(Reg, Reg, Reg),
+    /// rd = ra + rn * rm.
+    Mla(Reg, Reg, Reg, Reg),
+    /// rd = ra - rn * rm.
+    Mls(Reg, Reg, Reg, Reg),
+    /// (rdhi:rdlo) = rn * rm (unsigned 64).
+    Umull(Reg, Reg, Reg, Reg),
+    /// (rdhi:rdlo) += rn * rm (unsigned 64).
+    Umlal(Reg, Reg, Reg, Reg),
+    /// (rdhi:rdlo) = rn * rm (signed 64).
+    Smull(Reg, Reg, Reg, Reg),
+
+    // --- DSP / SIMD extension ----------------------------------------------
+    /// rd = ra + rn[15:0]*rm[15:0] + rn[31:16]*rm[31:16] (dual 16×16 MAC).
+    Smlad(Reg, Reg, Reg, Reg),
+    /// rd = rn[15:0]*rm[15:0] + rn[31:16]*rm[31:16].
+    Smuad(Reg, Reg, Reg),
+    /// rd = ra + rn[15:0]*rm[15:0].
+    Smlabb(Reg, Reg, Reg, Reg),
+    /// rd = ra + rn[31:16]*rm[31:16].
+    Smlatt(Reg, Reg, Reg, Reg),
+    /// Per-byte unsigned add (no carry across lanes).
+    Uadd8(Reg, Reg, Reg),
+    /// Per-halfword unsigned add.
+    Uadd16(Reg, Reg, Reg),
+    /// Pack halfwords: rd = (rm[15:0] << 16) | rn[15:0].
+    Pkhbt(Reg, Reg, Reg),
+
+    // --- memory -----------------------------------------------------------
+    /// rt = mem32[rn + off].
+    Ldr(Reg, Reg, i32),
+    Ldrb(Reg, Reg, i32),
+    Ldrh(Reg, Reg, i32),
+    Ldrsb(Reg, Reg, i32),
+    Ldrsh(Reg, Reg, i32),
+    Str(Reg, Reg, i32),
+    Strb(Reg, Reg, i32),
+    Strh(Reg, Reg, i32),
+
+    // --- control ----------------------------------------------------------
+    Cmp(Reg, Op2),
+    /// Conditional branch to a label id.
+    B(Cond, usize),
+    /// Pseudo-instruction: label definition (free).
+    Label(usize),
+    Nop,
+    /// Stop execution.
+    Halt,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op2_conversions() {
+        assert_eq!(Op2::from(5u32), Op2::Imm(5));
+        assert_eq!(Op2::from(R3), Op2::Reg(R3));
+    }
+
+    #[test]
+    fn reg_constants() {
+        assert_eq!(R0, Reg(0));
+        assert_eq!(R12, Reg(12));
+    }
+}

@@ -1,0 +1,343 @@
+//! Hand-written ISA-level micro-kernels, executed on the [`Machine`]
+//! interpreter.
+//!
+//! These are the ground-truth tier of the two-level simulation strategy
+//! (DESIGN.md §3): the fast operators in [`crate::ops`] *charge* abstract
+//! instruction counts, while the kernels here actually *execute* the same
+//! inner loops instruction by instruction — scalar int8 MACs, SMLAD
+//! dual-MACs, and the SLBC packed multiply with UBFX segmentation — so
+//! the counter-based accounting can be cross-validated against an
+//! interpreted run (`instruction mix × cycle table` must agree).
+//!
+//! Memory layout convention: operands are preloaded into SRAM
+//! (`SRAM_BASE`), results are read back from registers/SRAM after `Halt`.
+
+use super::isa::{Cond, Instr, Op2};
+use super::isa::{R0, R1, R2, R3, R4, R5, R6, R7, R8};
+use super::machine::{Fault, Machine};
+use super::memory::SRAM_BASE;
+
+/// Emitted program plus the I/O contract of a micro-kernel.
+pub struct MicroKernel {
+    pub program: Vec<Instr>,
+    pub name: &'static str,
+}
+
+/// Scalar int8 dot product (the `Naive` method's inner loop):
+///
+/// * in: `r1` = &a (i8), `r2` = &b (i8), `r3` = n
+/// * out: `r0` = Σ a[i]·b[i]
+pub fn dot_i8() -> MicroKernel {
+    MicroKernel {
+        name: "dot_i8",
+        program: vec![
+            Instr::Mov(R0, Op2::Imm(0)),
+            Instr::Label(0),
+            Instr::Cmp(R3, Op2::Imm(0)),
+            Instr::B(Cond::Le, 1),
+            Instr::Ldrsb(R4, R1, 0),
+            Instr::Ldrsb(R5, R2, 0),
+            Instr::Mla(R0, R4, R5, R0),
+            Instr::Add(R1, R1, Op2::Imm(1)),
+            Instr::Add(R2, R2, Op2::Imm(1)),
+            Instr::Sub(R3, R3, Op2::Imm(1)),
+            Instr::B(Cond::Al, 0),
+            Instr::Label(1),
+            Instr::Halt,
+        ],
+    }
+}
+
+/// SMLAD dual-MAC dot product (the CMSIS-NN/`Simd` inner loop): operands
+/// pre-expanded to i16 pairs.
+///
+/// * in: `r1` = &a (i16), `r2` = &b (i16), `r3` = n/2 (pair count)
+/// * out: `r0` = Σ a[i]·b[i]
+pub fn dot_smlad() -> MicroKernel {
+    MicroKernel {
+        name: "dot_smlad",
+        program: vec![
+            Instr::Mov(R0, Op2::Imm(0)),
+            Instr::Label(0),
+            Instr::Cmp(R3, Op2::Imm(0)),
+            Instr::B(Cond::Le, 1),
+            Instr::Ldr(R4, R1, 0), // two i16 lanes per word
+            Instr::Ldr(R5, R2, 0),
+            Instr::Smlad(R0, R4, R5, R0),
+            Instr::Add(R1, R1, Op2::Imm(4)),
+            Instr::Add(R2, R2, Op2::Imm(4)),
+            Instr::Sub(R3, R3, Op2::Imm(1)),
+            Instr::B(Cond::Al, 0),
+            Instr::Label(1),
+            Instr::Halt,
+        ],
+    }
+}
+
+/// The SLBC packed multiply core (Eq. 3–7 at ISA level), one group:
+/// packs `g` unsigned sub-byte values against packed kernel taps already
+/// living in a register, using one UMULL and UBFX segmentation.
+///
+/// * in: `r1` = &x (u8, `g` values), `r2` = packed kernel (u32),
+///   `r3` = g, `r6` = field stride S (compile-time constant too)
+/// * out: SRAM at `r8`: the `g + k_taps - 1` extracted convolution fields
+///   (u16 each)
+///
+/// The packing loop builds `R4 = Σ x[i] << (i·S)` (LSL+ORR — exactly the
+/// "elements packing" of Alg. 1), then `UMULL R0:R5 = R4 × R2`, then a
+/// UBFX loop slides a 64-bit window extracting one `S`-bit field per
+/// step (the shift+mask sequence SLBC charges as 2 bit-ops per field).
+pub fn slbc_packed_group(s_bits: u32, out_fields: u32) -> MicroKernel {
+    let mut p = vec![
+        // ---- packing: R4 = Σ x[i] << (i*S) ----
+        Instr::Mov(R4, Op2::Imm(0)),
+        Instr::Mov(R5, Op2::Imm(0)), // running shift
+        Instr::Mov(R7, Op2::Reg(R3)),
+        Instr::Label(0),
+        Instr::Cmp(R7, Op2::Imm(0)),
+        Instr::B(Cond::Le, 1),
+        Instr::Ldrb(R0, R1, 0),
+        Instr::Lsl(R0, R0, Op2::Reg(R5)),
+        Instr::Orr(R4, R4, Op2::Reg(R0)),
+        Instr::Add(R5, R5, Op2::Reg(R6)),
+        Instr::Add(R1, R1, Op2::Imm(1)),
+        Instr::Sub(R7, R7, Op2::Imm(1)),
+        Instr::B(Cond::Al, 0),
+        Instr::Label(1),
+        // ---- one wide multiply: R0(lo), R5(hi) = R4 * R2 ----
+        Instr::Umull(R0, R5, R4, R2),
+    ];
+    // ---- segmentation: slide the 64-bit product window S bits per field.
+    for i in 0..out_fields {
+        p.push(Instr::Ubfx(R3, R0, 0, s_bits));
+        p.push(Instr::Strh(R3, R8, (i as i32) * 2));
+        // lo = (lo >> S) | (hi << (32-S)); hi >>= S.
+        p.push(Instr::Lsr(R0, R0, Op2::Imm(s_bits)));
+        p.push(Instr::Mov(R7, Op2::Reg(R5)));
+        p.push(Instr::Lsl(R7, R7, Op2::Imm(32 - s_bits)));
+        p.push(Instr::Orr(R0, R0, Op2::Reg(R7)));
+        p.push(Instr::Lsr(R5, R5, Op2::Imm(s_bits)));
+    }
+    p.push(Instr::Halt);
+    MicroKernel {
+        name: "slbc_packed_group",
+        program: p,
+    }
+}
+
+/// Requantization loop (multiply + shift + saturate + store):
+///
+/// * in: `r1` = &acc (i32), `r2` = multiplier, `r3` = n, `r6` = shift,
+///   `r8` = &out (u8)
+/// * out: out[i] = usat8((acc[i] * m) >> s)
+pub fn requant_loop() -> MicroKernel {
+    MicroKernel {
+        name: "requant_loop",
+        program: vec![
+            Instr::Label(0),
+            Instr::Cmp(R3, Op2::Imm(0)),
+            Instr::B(Cond::Le, 1),
+            Instr::Ldr(R4, R1, 0),
+            Instr::Mul(R4, R4, R2),
+            Instr::Asr(R4, R4, Op2::Reg(R6)),
+            Instr::Usat(R4, 8, R4),
+            Instr::Strb(R4, R8, 0),
+            Instr::Add(R1, R1, Op2::Imm(4)),
+            Instr::Add(R8, R8, Op2::Imm(1)),
+            Instr::Sub(R3, R3, Op2::Imm(1)),
+            Instr::B(Cond::Al, 0),
+            Instr::Label(1),
+            Instr::Halt,
+        ],
+    }
+}
+
+/// Run `dot_i8` on `a`, `b` (preloaded into SRAM) and return
+/// `(result, interpreted cycles)`.
+pub fn run_dot_i8(a: &[i8], b: &[i8]) -> Result<(i32, u64), Fault> {
+    assert_eq!(a.len(), b.len());
+    let mut m = Machine::stm32f746();
+    let abytes: Vec<u8> = a.iter().map(|&v| v as u8).collect();
+    let bbytes: Vec<u8> = b.iter().map(|&v| v as u8).collect();
+    m.mem.load_sram(0, &abytes);
+    m.mem.load_sram(4096, &bbytes);
+    m.set(R1, SRAM_BASE);
+    m.set(R2, SRAM_BASE + 4096);
+    m.set(R3, a.len() as u32);
+    m.load_program(dot_i8().program);
+    m.run(1_000_000)?;
+    Ok((m.get(R0) as i32, m.cycles()))
+}
+
+/// Run `dot_smlad` on i16 operands; `a.len()` must be even.
+pub fn run_dot_smlad(a: &[i16], b: &[i16]) -> Result<(i32, u64), Fault> {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len() % 2, 0);
+    let mut m = Machine::stm32f746();
+    let pack = |v: &[i16]| -> Vec<u8> {
+        v.iter().flat_map(|&x| (x as u16).to_le_bytes()).collect()
+    };
+    m.mem.load_sram(0, &pack(a));
+    m.mem.load_sram(4096, &pack(b));
+    m.set(R1, SRAM_BASE);
+    m.set(R2, SRAM_BASE + 4096);
+    m.set(R3, (a.len() / 2) as u32);
+    m.load_program(dot_smlad().program);
+    m.run(1_000_000)?;
+    Ok((m.get(R0) as i32, m.cycles()))
+}
+
+/// Run the packed-group kernel: x (unsigned sub-byte values), packed
+/// kernel taps, field stride `s_bits`. Returns the extracted fields and
+/// interpreted cycles.
+pub fn run_slbc_packed_group(
+    x: &[u8],
+    taps: &[u8],
+    s_bits: u32,
+) -> Result<(Vec<u16>, u64), Fault> {
+    assert!(s_bits <= 16, "kernel assumes field stride <= 16");
+    assert!(x.len() as u32 * s_bits <= 32, "one 32-bit packing group");
+    let mut m = Machine::stm32f746();
+    m.mem.load_sram(0, x);
+    let packed_k: u32 = taps
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| (t as u32) << (i as u32 * s_bits))
+        .sum();
+    let out_fields = (x.len() + taps.len() - 1) as u32;
+    m.set(R1, SRAM_BASE);
+    m.set(R2, packed_k);
+    m.set(R3, x.len() as u32);
+    m.set(R6, s_bits);
+    m.set(R8, SRAM_BASE + 8192);
+    m.load_program(slbc_packed_group(s_bits, out_fields).program);
+    m.run(1_000_000)?;
+    let mut fields = Vec::with_capacity(out_fields as usize);
+    for i in 0..out_fields {
+        fields.push(m.mem.read_u16(SRAM_BASE + 8192 + i * 2)?);
+    }
+    Ok((fields, m.cycles()))
+}
+
+/// Run the requantization loop.
+pub fn run_requant(acc: &[i32], mult: u32, shift: u32) -> Result<(Vec<u8>, u64), Fault> {
+    let mut m = Machine::stm32f746();
+    let bytes: Vec<u8> = acc.iter().flat_map(|&v| (v as u32).to_le_bytes()).collect();
+    m.mem.load_sram(0, &bytes);
+    m.set(R1, SRAM_BASE);
+    m.set(R2, mult);
+    m.set(R3, acc.len() as u32);
+    m.set(R6, shift);
+    m.set(R8, SRAM_BASE + 8192);
+    m.load_program(requant_loop().program);
+    m.run(1_000_000)?;
+    let mut out = Vec::with_capacity(acc.len());
+    for i in 0..acc.len() as u32 {
+        out.push(m.mem.read_u8(SRAM_BASE + 8192 + i)?);
+    }
+    Ok((out, m.cycles()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcu::{Counter, CycleModel, InstrClass};
+    use crate::util::prng::Rng;
+    use crate::util::prop::check;
+
+    #[test]
+    fn dot_i8_bit_exact() {
+        check("interpreted dot_i8 == rust dot", 25, |rng| {
+            let n = rng.range(1, 64);
+            let a: Vec<i8> = (0..n).map(|_| rng.below(256) as u8 as i8).collect();
+            let b: Vec<i8> = (0..n).map(|_| rng.below(256) as u8 as i8).collect();
+            let want: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+            let (got, cycles) = run_dot_i8(&a, &b).unwrap();
+            assert_eq!(got, want, "n={n}");
+            assert!(cycles > 0);
+        });
+    }
+
+    #[test]
+    fn dot_smlad_bit_exact_and_faster() {
+        let mut rng = Rng::new(4);
+        let n = 32;
+        let a: Vec<i16> = (0..n).map(|_| rng.below(255) as i16 - 127).collect();
+        let b: Vec<i16> = (0..n).map(|_| rng.below(255) as i16 - 127).collect();
+        let want: i32 = a.iter().zip(&b).map(|(&x, &y)| x as i32 * y as i32).sum();
+        let (got, smlad_cycles) = run_dot_smlad(&a, &b).unwrap();
+        assert_eq!(got, want);
+        let a8: Vec<i8> = a.iter().map(|&v| v as i8).collect();
+        let b8: Vec<i8> = b.iter().map(|&v| v as i8).collect();
+        let (_, scalar_cycles) = run_dot_i8(&a8, &b8).unwrap();
+        // Dual-MAC halves the multiply count and quarters the loads, but
+        // loop overhead stays: expect ≥1.5× on this inner loop.
+        assert!(
+            smlad_cycles * 3 < scalar_cycles * 2,
+            "SMLAD {smlad_cycles} vs scalar {scalar_cycles}: dual-MAC must win"
+        );
+    }
+
+    #[test]
+    fn packed_group_realizes_polynomial_convolution() {
+        // The ISA-level proof of Eq. 3–7: UMULL of packed operands, UBFX
+        // segmentation, equals the convolution — with enough guard bits.
+        check("packed group == conv1d_full", 25, |rng| {
+            let sx = rng.range(2, 5) as u32; // value bits
+            let k_taps = rng.range(2, 4);
+            let s_bits = 12u32; // generous stride: no field overflow
+            let g = (32 / s_bits) as usize; // values per 32-bit packing
+            let x: Vec<u8> = (0..g).map(|_| rng.below(1 << sx) as u8).collect();
+            let taps: Vec<u8> = (0..k_taps).map(|_| rng.below(1 << sx) as u8).collect();
+            let (fields, cycles) = run_slbc_packed_group(&x, &taps, s_bits).unwrap();
+            let xu: Vec<u64> = x.iter().map(|&v| v as u64).collect();
+            let tu: Vec<u64> = taps.iter().map(|&v| v as u64).collect();
+            let want = crate::simd::poly::conv1d_full_direct(&xu, &tu);
+            let got: Vec<u64> = fields.iter().map(|&f| f as u64).collect();
+            assert_eq!(got, want, "sx={sx} k={k_taps}");
+            assert!(cycles > 0);
+        });
+    }
+
+    #[test]
+    fn requant_loop_saturates() {
+        let acc = vec![0i32, 100, 1000, -50, 1 << 20];
+        let (out, _) = run_requant(&acc, 3, 4).unwrap();
+        assert_eq!(out[0], 0);
+        assert_eq!(out[1] as u32, (100u32 * 3) >> 4);
+        assert_eq!(out[2], 187); // (3000>>4)=187 < 255
+        assert_eq!(out[3], 0); // negative saturates to 0
+        assert_eq!(out[4], 255); // large saturates to 255
+    }
+
+    #[test]
+    fn interpreted_cycles_match_counter_model() {
+        // The cross-check that justifies the fast counter tier: build the
+        // instruction histogram of dot_i8 analytically and compare its
+        // cycle total with the interpreter's.
+        let n = 24usize;
+        let a = vec![3i8; n];
+        let b = vec![-2i8; n];
+        let (_, interp_cycles) = run_dot_i8(&a, &b).unwrap();
+        let mut c = Counter::new();
+        c.charge(InstrClass::Alu, 1); // acc init
+        // per iteration: cmp, 2 loads, mla, 3 adds/subs, back-branch
+        c.charge(InstrClass::Alu, n as u64); // cmp
+        c.charge(InstrClass::Load, 2 * n as u64);
+        c.charge(InstrClass::Mul, n as u64);
+        c.charge(InstrClass::Alu, 3 * n as u64);
+        c.charge(InstrClass::BranchTaken, n as u64); // loop-back taken
+        c.charge(InstrClass::BranchNotTaken, n as u64); // exit test falls through
+        // final: cmp + exit-branch taken
+        c.charge(InstrClass::Alu, 1);
+        c.charge(InstrClass::BranchTaken, 1);
+        let model = CycleModel::cortex_m7();
+        let predicted = c.cycles(&model);
+        let err = (predicted as f64 - interp_cycles as f64).abs() / interp_cycles as f64;
+        assert!(
+            err < 0.02,
+            "counter model {predicted} vs interpreter {interp_cycles} ({:.1}% off)",
+            err * 100.0
+        );
+    }
+}

@@ -1,0 +1,546 @@
+//! The ARMv7E-M interpreter: registers, flags, memory, cycle accounting.
+//!
+//! Micro-kernels (dot products, packed multiplies, requantization loops)
+//! are written as [`Instr`] programs and executed bit-exactly; the per-
+//! instruction cycle charges use the same [`CycleModel`] as the fast
+//! counters, which is what makes the two tiers cross-checkable.
+
+use super::counter::Counter;
+use super::cycles::{CycleModel, InstrClass};
+use super::isa::{Cond, Instr, Op2, Reg};
+use super::memory::Memory;
+
+/// Execution fault.
+#[derive(Debug, thiserror::Error)]
+pub enum Fault {
+    #[error("memory fault: {0}")]
+    Mem(#[from] super::memory::MemError),
+    #[error("undefined label {0}")]
+    UndefinedLabel(usize),
+    #[error("executed {0} instructions without Halt (runaway?)")]
+    Runaway(u64),
+}
+
+/// Machine state.
+pub struct Machine {
+    pub regs: [u32; 16],
+    pub flag_n: bool,
+    pub flag_z: bool,
+    pub mem: Memory,
+    pub counter: Counter,
+    pub model: CycleModel,
+    program: Vec<Instr>,
+    labels: Vec<Option<usize>>,
+}
+
+impl Machine {
+    /// Machine with STM32F746 memory and the M7 cycle table.
+    pub fn stm32f746() -> Self {
+        Machine::new(Memory::stm32f746(), CycleModel::cortex_m7())
+    }
+
+    pub fn new(mem: Memory, model: CycleModel) -> Self {
+        Machine {
+            regs: [0; 16],
+            flag_n: false,
+            flag_z: false,
+            mem,
+            counter: Counter::new(),
+            model,
+            program: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn set(&mut self, r: Reg, v: u32) {
+        self.regs[r.0 as usize] = v;
+    }
+
+    pub fn get(&self, r: Reg) -> u32 {
+        self.regs[r.0 as usize]
+    }
+
+    /// Load a program, resolving labels.
+    pub fn load_program(&mut self, program: Vec<Instr>) {
+        let max_label = program
+            .iter()
+            .filter_map(|i| match i {
+                Instr::Label(l) | Instr::B(_, l) => Some(*l),
+                _ => None,
+            })
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0);
+        let mut labels = vec![None; max_label];
+        for (pc, i) in program.iter().enumerate() {
+            if let Instr::Label(l) = i {
+                labels[*l] = Some(pc);
+            }
+        }
+        self.program = program;
+        self.labels = labels;
+    }
+
+    /// Total cycles charged so far.
+    pub fn cycles(&self) -> u64 {
+        self.counter.cycles(&self.model)
+    }
+
+    fn op2(&self, o: Op2) -> u32 {
+        match o {
+            Op2::Imm(v) => v,
+            Op2::Reg(r) => self.get(r),
+        }
+    }
+
+    fn set_nz(&mut self, v: u32) {
+        self.flag_n = (v as i32) < 0;
+        self.flag_z = v == 0;
+    }
+
+    /// Run until `Halt` or the step budget is exhausted.
+    pub fn run(&mut self, max_steps: u64) -> Result<(), Fault> {
+        let mut pc = 0usize;
+        let mut steps = 0u64;
+        while pc < self.program.len() {
+            steps += 1;
+            if steps > max_steps {
+                return Err(Fault::Runaway(max_steps));
+            }
+            let instr = self.program[pc];
+            pc += 1;
+            match instr {
+                Instr::Label(_) => {} // free
+                Instr::Nop => self.counter.charge(InstrClass::Alu, 1),
+                Instr::Halt => return Ok(()),
+
+                Instr::Mov(rd, o) => {
+                    let v = self.op2(o);
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+                Instr::Movt(rd, hi) => {
+                    let v = (self.get(rd) & 0xFFFF) | (hi << 16);
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+                Instr::Add(rd, rn, o) => {
+                    let v = self.get(rn).wrapping_add(self.op2(o));
+                    self.set(rd, v);
+                    self.set_nz(v);
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+                Instr::Sub(rd, rn, o) => {
+                    let v = self.get(rn).wrapping_sub(self.op2(o));
+                    self.set(rd, v);
+                    self.set_nz(v);
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+                Instr::Rsb(rd, rn, o) => {
+                    let v = self.op2(o).wrapping_sub(self.get(rn));
+                    self.set(rd, v);
+                    self.set_nz(v);
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+                Instr::And(rd, rn, o) => {
+                    let v = self.get(rn) & self.op2(o);
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Bit, 1);
+                }
+                Instr::Orr(rd, rn, o) => {
+                    let v = self.get(rn) | self.op2(o);
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Bit, 1);
+                }
+                Instr::Eor(rd, rn, o) => {
+                    let v = self.get(rn) ^ self.op2(o);
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Bit, 1);
+                }
+                Instr::Bic(rd, rn, o) => {
+                    let v = self.get(rn) & !self.op2(o);
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Bit, 1);
+                }
+                Instr::Lsl(rd, rn, o) => {
+                    let sh = self.op2(o) & 0xFF;
+                    let v = if sh >= 32 { 0 } else { self.get(rn) << sh };
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Bit, 1);
+                }
+                Instr::Lsr(rd, rn, o) => {
+                    let sh = self.op2(o) & 0xFF;
+                    let v = if sh >= 32 { 0 } else { self.get(rn) >> sh };
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Bit, 1);
+                }
+                Instr::Asr(rd, rn, o) => {
+                    let sh = (self.op2(o) & 0xFF).min(31);
+                    let v = ((self.get(rn) as i32) >> sh) as u32;
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Bit, 1);
+                }
+                Instr::Ubfx(rd, rn, lsb, width) => {
+                    let mask = if width >= 32 {
+                        u32::MAX
+                    } else {
+                        (1u32 << width) - 1
+                    };
+                    self.set(rd, (self.get(rn) >> lsb) & mask);
+                    self.counter.charge(InstrClass::Bit, 1);
+                }
+                Instr::Ssat(rd, bits, rn) => {
+                    let max = (1i32 << (bits - 1)) - 1;
+                    let min = -(1i32 << (bits - 1));
+                    let v = (self.get(rn) as i32).clamp(min, max);
+                    self.set(rd, v as u32);
+                    self.counter.charge(InstrClass::Sat, 1);
+                }
+                Instr::Usat(rd, bits, rn) => {
+                    let max = (1i32 << bits) - 1;
+                    let v = (self.get(rn) as i32).clamp(0, max);
+                    self.set(rd, v as u32);
+                    self.counter.charge(InstrClass::Sat, 1);
+                }
+                Instr::Sxtb(rd, rn) => {
+                    self.set(rd, self.get(rn) as u8 as i8 as i32 as u32);
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+                Instr::Uxtb(rd, rn) => {
+                    self.set(rd, self.get(rn) & 0xFF);
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+                Instr::Sxth(rd, rn) => {
+                    self.set(rd, self.get(rn) as u16 as i16 as i32 as u32);
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+                Instr::Uxth(rd, rn) => {
+                    self.set(rd, self.get(rn) & 0xFFFF);
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+
+                Instr::Mul(rd, rn, rm) => {
+                    let v = self.get(rn).wrapping_mul(self.get(rm));
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Mul, 1);
+                }
+                Instr::Mla(rd, rn, rm, ra) => {
+                    let v = self
+                        .get(ra)
+                        .wrapping_add(self.get(rn).wrapping_mul(self.get(rm)));
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Mul, 1);
+                }
+                Instr::Mls(rd, rn, rm, ra) => {
+                    let v = self
+                        .get(ra)
+                        .wrapping_sub(self.get(rn).wrapping_mul(self.get(rm)));
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Mul, 1);
+                }
+                Instr::Umull(rdlo, rdhi, rn, rm) => {
+                    let p = self.get(rn) as u64 * self.get(rm) as u64;
+                    self.set(rdlo, p as u32);
+                    self.set(rdhi, (p >> 32) as u32);
+                    self.counter.charge(InstrClass::MulLong, 1);
+                }
+                Instr::Umlal(rdlo, rdhi, rn, rm) => {
+                    let acc = ((self.get(rdhi) as u64) << 32) | self.get(rdlo) as u64;
+                    let p = acc.wrapping_add(self.get(rn) as u64 * self.get(rm) as u64);
+                    self.set(rdlo, p as u32);
+                    self.set(rdhi, (p >> 32) as u32);
+                    self.counter.charge(InstrClass::MulLong, 1);
+                }
+                Instr::Smull(rdlo, rdhi, rn, rm) => {
+                    let p = (self.get(rn) as i32 as i64) * (self.get(rm) as i32 as i64);
+                    self.set(rdlo, p as u32);
+                    self.set(rdhi, ((p as u64) >> 32) as u32);
+                    self.counter.charge(InstrClass::MulLong, 1);
+                }
+
+                Instr::Smlad(rd, rn, rm, ra) => {
+                    let n = self.get(rn);
+                    let m = self.get(rm);
+                    let p1 = (n as u16 as i16 as i32) * (m as u16 as i16 as i32);
+                    let p2 = ((n >> 16) as u16 as i16 as i32)
+                        * ((m >> 16) as u16 as i16 as i32);
+                    let v = (self.get(ra) as i32)
+                        .wrapping_add(p1)
+                        .wrapping_add(p2) as u32;
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Simd, 1);
+                }
+                Instr::Smuad(rd, rn, rm) => {
+                    let n = self.get(rn);
+                    let m = self.get(rm);
+                    let p1 = (n as u16 as i16 as i32) * (m as u16 as i16 as i32);
+                    let p2 = ((n >> 16) as u16 as i16 as i32)
+                        * ((m >> 16) as u16 as i16 as i32);
+                    self.set(rd, p1.wrapping_add(p2) as u32);
+                    self.counter.charge(InstrClass::Simd, 1);
+                }
+                Instr::Smlabb(rd, rn, rm, ra) => {
+                    let p = (self.get(rn) as u16 as i16 as i32)
+                        * (self.get(rm) as u16 as i16 as i32);
+                    self.set(rd, (self.get(ra) as i32).wrapping_add(p) as u32);
+                    self.counter.charge(InstrClass::Simd, 1);
+                }
+                Instr::Smlatt(rd, rn, rm, ra) => {
+                    let p = ((self.get(rn) >> 16) as u16 as i16 as i32)
+                        * ((self.get(rm) >> 16) as u16 as i16 as i32);
+                    self.set(rd, (self.get(ra) as i32).wrapping_add(p) as u32);
+                    self.counter.charge(InstrClass::Simd, 1);
+                }
+                Instr::Uadd8(rd, rn, rm) => {
+                    let n = self.get(rn).to_le_bytes();
+                    let m = self.get(rm).to_le_bytes();
+                    let mut out = [0u8; 4];
+                    for i in 0..4 {
+                        out[i] = n[i].wrapping_add(m[i]);
+                    }
+                    self.set(rd, u32::from_le_bytes(out));
+                    self.counter.charge(InstrClass::Simd, 1);
+                }
+                Instr::Uadd16(rd, rn, rm) => {
+                    let n = self.get(rn);
+                    let m = self.get(rm);
+                    let lo = (n as u16).wrapping_add(m as u16) as u32;
+                    let hi = ((n >> 16) as u16).wrapping_add((m >> 16) as u16) as u32;
+                    self.set(rd, (hi << 16) | lo);
+                    self.counter.charge(InstrClass::Simd, 1);
+                }
+                Instr::Pkhbt(rd, rn, rm) => {
+                    let v = (self.get(rn) & 0xFFFF) | (self.get(rm) << 16);
+                    self.set(rd, v);
+                    self.counter.charge(InstrClass::Bit, 1);
+                }
+
+                Instr::Ldr(rt, rn, off) => {
+                    let addr = self.get(rn).wrapping_add(off as u32);
+                    let v = self.mem.read_u32(addr)?;
+                    self.set(rt, v);
+                    self.counter.charge(InstrClass::Load, 1);
+                }
+                Instr::Ldrb(rt, rn, off) => {
+                    let addr = self.get(rn).wrapping_add(off as u32);
+                    let v = self.mem.read_u8(addr)? as u32;
+                    self.set(rt, v);
+                    self.counter.charge(InstrClass::Load, 1);
+                }
+                Instr::Ldrh(rt, rn, off) => {
+                    let addr = self.get(rn).wrapping_add(off as u32);
+                    let v = self.mem.read_u16(addr)? as u32;
+                    self.set(rt, v);
+                    self.counter.charge(InstrClass::Load, 1);
+                }
+                Instr::Ldrsb(rt, rn, off) => {
+                    let addr = self.get(rn).wrapping_add(off as u32);
+                    let v = self.mem.read_u8(addr)? as i8 as i32 as u32;
+                    self.set(rt, v);
+                    self.counter.charge(InstrClass::Load, 1);
+                }
+                Instr::Ldrsh(rt, rn, off) => {
+                    let addr = self.get(rn).wrapping_add(off as u32);
+                    let v = self.mem.read_u16(addr)? as i16 as i32 as u32;
+                    self.set(rt, v);
+                    self.counter.charge(InstrClass::Load, 1);
+                }
+                Instr::Str(rt, rn, off) => {
+                    let addr = self.get(rn).wrapping_add(off as u32);
+                    self.mem.write_u32(addr, self.get(rt))?;
+                    self.counter.charge(InstrClass::Store, 1);
+                }
+                Instr::Strb(rt, rn, off) => {
+                    let addr = self.get(rn).wrapping_add(off as u32);
+                    self.mem.write_u8(addr, self.get(rt) as u8)?;
+                    self.counter.charge(InstrClass::Store, 1);
+                }
+                Instr::Strh(rt, rn, off) => {
+                    let addr = self.get(rn).wrapping_add(off as u32);
+                    self.mem.write_u16(addr, self.get(rt) as u16)?;
+                    self.counter.charge(InstrClass::Store, 1);
+                }
+
+                Instr::Cmp(rn, o) => {
+                    let v = self.get(rn).wrapping_sub(self.op2(o));
+                    // Signed comparison flags via subtraction result.
+                    let a = self.get(rn) as i64;
+                    let b = self.op2(o) as i64;
+                    self.flag_n = (a as i32 as i64) < (b as i32 as i64);
+                    self.flag_z = v == 0;
+                    self.counter.charge(InstrClass::Alu, 1);
+                }
+                Instr::B(cond, label) => {
+                    let taken = match cond {
+                        Cond::Al => true,
+                        Cond::Eq => self.flag_z,
+                        Cond::Ne => !self.flag_z,
+                        Cond::Lt => self.flag_n,
+                        Cond::Le => self.flag_n || self.flag_z,
+                        Cond::Gt => !self.flag_n && !self.flag_z,
+                        Cond::Ge => !self.flag_n || self.flag_z,
+                    };
+                    if taken {
+                        pc = self
+                            .labels
+                            .get(label)
+                            .copied()
+                            .flatten()
+                            .ok_or(Fault::UndefinedLabel(label))?;
+                        self.counter.charge(InstrClass::BranchTaken, 1);
+                    } else {
+                        self.counter.charge(InstrClass::BranchNotTaken, 1);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcu::isa::*;
+    use crate::mcu::memory::SRAM_BASE;
+
+    fn machine() -> Machine {
+        Machine::new(Memory::with_sizes(4096, 4096), CycleModel::cortex_m7())
+    }
+
+    #[test]
+    fn mov_add_loop() {
+        // Sum 1..=10 with a countdown loop.
+        let mut m = machine();
+        m.load_program(vec![
+            Instr::Mov(R0, Op2::Imm(0)),  // acc
+            Instr::Mov(R1, Op2::Imm(10)), // i
+            Instr::Label(0),
+            Instr::Add(R0, R0, Op2::Reg(R1)),
+            Instr::Sub(R1, R1, Op2::Imm(1)),
+            Instr::Cmp(R1, Op2::Imm(0)),
+            Instr::B(Cond::Gt, 0),
+            Instr::Halt,
+        ]);
+        m.run(10_000).unwrap();
+        assert_eq!(m.get(R0), 55);
+        assert!(m.cycles() > 0);
+    }
+
+    #[test]
+    fn smlad_dual_mac() {
+        let mut m = machine();
+        // rn = (3, -2) halfwords, rm = (5, 7): 3*5 + (-2)*7 = 1.
+        let rn = ((-2i16 as u16 as u32) << 16) | 3;
+        let rm = (7u32 << 16) | 5;
+        m.set(R1, rn);
+        m.set(R2, rm);
+        m.set(R3, 100);
+        m.load_program(vec![Instr::Smlad(R0, R1, R2, R3), Instr::Halt]);
+        m.run(10).unwrap();
+        assert_eq!(m.get(R0), 101);
+        assert_eq!(m.counter.simd, 1);
+    }
+
+    #[test]
+    fn umull_umlal_64bit() {
+        let mut m = machine();
+        m.set(R1, 0xFFFF_FFFF);
+        m.set(R2, 2);
+        m.load_program(vec![
+            Instr::Umull(R0, R3, R1, R2), // 0x1_FFFF_FFFE
+            Instr::Umlal(R0, R3, R1, R2), // doubled
+            Instr::Halt,
+        ]);
+        m.run(10).unwrap();
+        let v = ((m.get(R3) as u64) << 32) | m.get(R0) as u64;
+        assert_eq!(v, 0xFFFF_FFFFu64 * 2 * 2);
+    }
+
+    #[test]
+    fn memory_load_store() {
+        let mut m = machine();
+        m.set(R1, SRAM_BASE);
+        m.set(R2, 0x1234_5678);
+        m.load_program(vec![
+            Instr::Str(R2, R1, 8),
+            Instr::Ldr(R0, R1, 8),
+            Instr::Ldrb(R3, R1, 8),
+            Instr::Halt,
+        ]);
+        m.run(10).unwrap();
+        assert_eq!(m.get(R0), 0x1234_5678);
+        assert_eq!(m.get(R3), 0x78);
+    }
+
+    #[test]
+    fn ubfx_extracts_field() {
+        let mut m = machine();
+        m.set(R1, 0b1101_0110_0000);
+        m.load_program(vec![Instr::Ubfx(R0, R1, 5, 4), Instr::Halt]);
+        m.run(10).unwrap();
+        assert_eq!(m.get(R0), 0b1011);
+    }
+
+    #[test]
+    fn usat_clamps() {
+        let mut m = machine();
+        m.set(R1, 300);
+        m.set(R2, (-5i32) as u32);
+        m.load_program(vec![
+            Instr::Usat(R0, 8, R1),
+            Instr::Usat(R3, 8, R2),
+            Instr::Halt,
+        ]);
+        m.run(10).unwrap();
+        assert_eq!(m.get(R0), 255);
+        assert_eq!(m.get(R3), 0);
+    }
+
+    #[test]
+    fn ssat_signed_clamp() {
+        let mut m = machine();
+        m.set(R1, 300);
+        m.set(R2, (-300i32) as u32);
+        m.load_program(vec![
+            Instr::Ssat(R0, 8, R1),
+            Instr::Ssat(R3, 8, R2),
+            Instr::Halt,
+        ]);
+        m.run(10).unwrap();
+        assert_eq!(m.get(R0) as i32, 127);
+        assert_eq!(m.get(R3) as i32, -128);
+    }
+
+    #[test]
+    fn runaway_detection() {
+        let mut m = machine();
+        m.load_program(vec![Instr::Label(0), Instr::B(Cond::Al, 0)]);
+        assert!(matches!(m.run(100), Err(Fault::Runaway(_))));
+    }
+
+    #[test]
+    fn signed_compare_branches() {
+        let mut m = machine();
+        m.set(R1, (-3i32) as u32);
+        m.load_program(vec![
+            Instr::Cmp(R1, Op2::Imm(2)),
+            Instr::B(Cond::Lt, 1),
+            Instr::Mov(R0, Op2::Imm(111)), // skipped
+            Instr::Label(1),
+            Instr::Mov(R2, Op2::Imm(7)),
+            Instr::Halt,
+        ]);
+        m.run(100).unwrap();
+        assert_eq!(m.get(R0), 0);
+        assert_eq!(m.get(R2), 7);
+    }
+
+    #[test]
+    fn flash_write_faults() {
+        let mut m = machine();
+        m.set(R1, crate::mcu::memory::FLASH_BASE);
+        m.load_program(vec![Instr::Str(R1, R1, 0), Instr::Halt]);
+        assert!(m.run(10).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! STM32F746-like memory map: 1 MB flash at `0x0800_0000` (read-only at
+//! run time — weights and constants) and 320 KB SRAM at `0x2000_0000`
+//! (activations, im2col buffers, stack).
+
+/// Base address of flash.
+pub const FLASH_BASE: u32 = 0x0800_0000;
+/// Base address of SRAM.
+pub const SRAM_BASE: u32 = 0x2000_0000;
+
+/// Byte-addressable memory with the two STM32F746 regions.
+#[derive(Debug, Clone)]
+pub struct Memory {
+    flash: Vec<u8>,
+    sram: Vec<u8>,
+}
+
+/// Errors surfaced by the memory system (turned into panics by the
+/// machine — an MCU would hard-fault).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum MemError {
+    #[error("address {0:#010x} is outside flash and SRAM")]
+    Unmapped(u32),
+    #[error("write to read-only flash at {0:#010x}")]
+    FlashWrite(u32),
+}
+
+impl Memory {
+    /// Memory with the paper platform's sizes (1 MB flash, 320 KB SRAM).
+    pub fn stm32f746() -> Self {
+        Memory::with_sizes(crate::STM32F746_FLASH_BYTES, crate::STM32F746_SRAM_BYTES)
+    }
+
+    pub fn with_sizes(flash_bytes: usize, sram_bytes: usize) -> Self {
+        Memory {
+            flash: vec![0; flash_bytes],
+            sram: vec![0; sram_bytes],
+        }
+    }
+
+    pub fn flash_len(&self) -> usize {
+        self.flash.len()
+    }
+
+    pub fn sram_len(&self) -> usize {
+        self.sram.len()
+    }
+
+    fn resolve(&self, addr: u32) -> Result<(bool, usize), MemError> {
+        if addr >= FLASH_BASE && (addr - FLASH_BASE) < self.flash.len() as u32 {
+            Ok((true, (addr - FLASH_BASE) as usize))
+        } else if addr >= SRAM_BASE && (addr - SRAM_BASE) < self.sram.len() as u32 {
+            Ok((false, (addr - SRAM_BASE) as usize))
+        } else {
+            Err(MemError::Unmapped(addr))
+        }
+    }
+
+    pub fn read_u8(&self, addr: u32) -> Result<u8, MemError> {
+        let (is_flash, off) = self.resolve(addr)?;
+        Ok(if is_flash {
+            self.flash[off]
+        } else {
+            self.sram[off]
+        })
+    }
+
+    pub fn read_u16(&self, addr: u32) -> Result<u16, MemError> {
+        Ok(u16::from_le_bytes([
+            self.read_u8(addr)?,
+            self.read_u8(addr.wrapping_add(1))?,
+        ]))
+    }
+
+    pub fn read_u32(&self, addr: u32) -> Result<u32, MemError> {
+        Ok(u32::from_le_bytes([
+            self.read_u8(addr)?,
+            self.read_u8(addr.wrapping_add(1))?,
+            self.read_u8(addr.wrapping_add(2))?,
+            self.read_u8(addr.wrapping_add(3))?,
+        ]))
+    }
+
+    pub fn write_u8(&mut self, addr: u32, v: u8) -> Result<(), MemError> {
+        let (is_flash, off) = self.resolve(addr)?;
+        if is_flash {
+            return Err(MemError::FlashWrite(addr));
+        }
+        self.sram[off] = v;
+        Ok(())
+    }
+
+    pub fn write_u16(&mut self, addr: u32, v: u16) -> Result<(), MemError> {
+        let b = v.to_le_bytes();
+        self.write_u8(addr, b[0])?;
+        self.write_u8(addr.wrapping_add(1), b[1])
+    }
+
+    pub fn write_u32(&mut self, addr: u32, v: u32) -> Result<(), MemError> {
+        let b = v.to_le_bytes();
+        for (i, &byte) in b.iter().enumerate() {
+            self.write_u8(addr.wrapping_add(i as u32), byte)?;
+        }
+        Ok(())
+    }
+
+    /// Program flash contents at build/load time (e.g. weights) — this is
+    /// the flashing tool's path, not a run-time store.
+    pub fn program_flash(&mut self, offset: usize, bytes: &[u8]) {
+        self.flash[offset..offset + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Bulk-load SRAM (e.g. the input image before inference).
+    pub fn load_sram(&mut self, offset: usize, bytes: &[u8]) {
+        self.sram[offset..offset + bytes.len()].copy_from_slice(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sram_roundtrip() {
+        let mut m = Memory::with_sizes(1024, 1024);
+        m.write_u32(SRAM_BASE + 16, 0xDEAD_BEEF).unwrap();
+        assert_eq!(m.read_u32(SRAM_BASE + 16).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(m.read_u8(SRAM_BASE + 16).unwrap(), 0xEF); // little-endian
+    }
+
+    #[test]
+    fn flash_is_read_only() {
+        let mut m = Memory::with_sizes(1024, 1024);
+        assert_eq!(
+            m.write_u8(FLASH_BASE, 1),
+            Err(MemError::FlashWrite(FLASH_BASE))
+        );
+        m.program_flash(0, &[7, 8]);
+        assert_eq!(m.read_u8(FLASH_BASE).unwrap(), 7);
+        assert_eq!(m.read_u8(FLASH_BASE + 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn unmapped_faults() {
+        let m = Memory::with_sizes(16, 16);
+        assert!(m.read_u8(0).is_err());
+        assert!(m.read_u8(SRAM_BASE + 16).is_err());
+    }
+
+    #[test]
+    fn stm32f746_sizes() {
+        let m = Memory::stm32f746();
+        assert_eq!(m.flash_len(), 1024 * 1024);
+        assert_eq!(m.sram_len(), 320 * 1024);
+    }
+}

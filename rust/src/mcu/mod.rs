@@ -1,0 +1,32 @@
+//! Cortex-M7 (ARMv7E-M + DSP extension) substrate simulator.
+//!
+//! The paper evaluates on an STM32F746 (Cortex-M7, 320 KB SRAM, 1 MB flash,
+//! 216 MHz). That hardware is not available here, so this module builds the
+//! closest synthetic equivalent (DESIGN.md §3): a register-level executor
+//! for a realistic ARMv7E-M instruction subset with a per-class cycle model
+//! taken from the Cortex-M7 TRM, plus an SRAM/flash memory map.
+//!
+//! Two usage tiers:
+//!
+//! * [`machine::Machine`] — an actual interpreter: micro-kernels are written
+//!   as instruction programs and executed bit-exactly with cycle
+//!   accounting. Used to validate the cost tables and for the calibration
+//!   of Eq. 12's α/β coefficients ([`crate::perf::calibrate`]).
+//! * [`counter::Counter`] — an instruction-class histogram the full
+//!   convolution operators charge while computing bit-exactly in Rust.
+//!   `cycles()` folds the histogram through the same cycle model, which
+//!   keeps whole-network simulation fast (≥10⁸ simulated MACs/s) while
+//!   staying consistent with the interpreter (cross-checked in tests).
+
+pub mod counter;
+pub mod kernels;
+pub mod cycles;
+pub mod isa;
+pub mod machine;
+pub mod memory;
+
+pub use counter::Counter;
+pub use cycles::{CycleModel, InstrClass};
+pub use isa::{Cond, Instr, Reg};
+pub use machine::Machine;
+pub use memory::Memory;

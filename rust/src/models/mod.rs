@@ -1,0 +1,356 @@
+//! Model zoo: layer geometry shared with the Layer-2 JAX definitions.
+//!
+//! The constructors here mirror `python/compile/model.py` exactly; at run
+//! time the authoritative geometry is loaded from `artifacts/manifest.json`
+//! (written by the AOT path) and cross-checked against these constructors
+//! in tests, so drift between the layers is caught immediately.
+
+use crate::util::json::{Json, JsonError};
+
+/// Layer kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    DwConv,
+    Dense,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Option<LayerKind> {
+        match s {
+            "conv" => Some(LayerKind::Conv),
+            "dwconv" => Some(LayerKind::DwConv),
+            "dense" => Some(LayerKind::Dense),
+            _ => None,
+        }
+    }
+}
+
+/// One quantizable layer (geometry mirror of the Python `LayerSpec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub pool_after: bool,
+    pub gap_before: bool,
+    pub w_offset: usize,
+    pub w_size: usize,
+    pub b_offset: usize,
+    pub b_size: usize,
+    pub macs: u64,
+}
+
+impl LayerSpec {
+    /// MAC count (recomputed; must agree with the manifest).
+    pub fn compute_macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv => {
+                (self.out_h * self.out_w * self.k * self.k * self.cin * self.cout) as u64
+            }
+            LayerKind::DwConv => (self.out_h * self.out_w * self.k * self.k * self.cout) as u64,
+            LayerKind::Dense => (self.cin * self.cout) as u64,
+        }
+    }
+
+    /// Activation output element count (pre-pool).
+    pub fn out_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense => self.cout,
+            _ => self.out_h * self.out_w * self.cout,
+        }
+    }
+
+    /// Activation input element count.
+    pub fn in_elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense => self.cin,
+            _ => self.in_h * self.in_w * self.cin,
+        }
+    }
+
+    /// Weight bytes when stored packed at `bits` per weight (sub-byte
+    /// flash packing, the flash-size lever of Table I).
+    pub fn weight_bytes_at(&self, bits: u8) -> usize {
+        (self.w_size * bits as usize).div_ceil(8) + self.b_size * 4 // biases stay int32
+    }
+}
+
+/// A model family entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDesc {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_c: usize,
+    pub num_classes: usize,
+    pub layers: Vec<LayerSpec>,
+    pub param_count: usize,
+}
+
+impl ModelDesc {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Total flash bytes for the weights under a bit configuration.
+    pub fn weight_flash_bytes(&self, wbits: &[u8]) -> usize {
+        self.layers
+            .iter()
+            .zip(wbits)
+            .map(|(l, &b)| l.weight_bytes_at(b))
+            .sum()
+    }
+}
+
+fn finalize(name: &str, input_hw: usize, input_c: usize, num_classes: usize,
+            mut layers: Vec<LayerSpec>) -> ModelDesc {
+    let mut off = 0usize;
+    for l in &mut layers {
+        l.w_offset = off;
+        l.w_size = match l.kind {
+            LayerKind::Conv => l.k * l.k * l.cin * l.cout,
+            LayerKind::DwConv => l.k * l.k * l.cout,
+            LayerKind::Dense => l.cin * l.cout,
+        };
+        off += l.w_size;
+        l.b_offset = off;
+        l.b_size = l.cout;
+        off += l.b_size;
+        l.macs = l.compute_macs();
+    }
+    ModelDesc {
+        name: name.to_string(),
+        input_hw,
+        input_c,
+        num_classes,
+        layers,
+        param_count: off,
+    }
+}
+
+fn conv(name: &str, cin: usize, cout: usize, k: usize, h: usize, pool: bool) -> LayerSpec {
+    LayerSpec {
+        name: name.into(),
+        kind: LayerKind::Conv,
+        cin,
+        cout,
+        k,
+        stride: 1,
+        in_h: h,
+        in_w: h,
+        out_h: h,
+        out_w: h,
+        pool_after: pool,
+        gap_before: false,
+        w_offset: 0,
+        w_size: 0,
+        b_offset: 0,
+        b_size: 0,
+        macs: 0,
+    }
+}
+
+fn dwconv(name: &str, c: usize, h: usize) -> LayerSpec {
+    LayerSpec {
+        kind: LayerKind::DwConv,
+        cin: c,
+        cout: c,
+        k: 3,
+        ..conv(name, c, c, 3, h, false)
+    }
+}
+
+fn dense(name: &str, cin: usize, cout: usize, gap: bool) -> LayerSpec {
+    LayerSpec {
+        name: name.into(),
+        kind: LayerKind::Dense,
+        cin,
+        cout,
+        k: 1,
+        stride: 1,
+        in_h: 1,
+        in_w: 1,
+        out_h: 1,
+        out_w: 1,
+        pool_after: false,
+        gap_before: gap,
+        w_offset: 0,
+        w_size: 0,
+        b_offset: 0,
+        b_size: 0,
+        macs: 0,
+    }
+}
+
+/// VGG-Tiny (Table I row 1) — mirrors `model.py::vgg_tiny`.
+pub fn vgg_tiny(num_classes: usize, hw: usize) -> ModelDesc {
+    let h = hw;
+    let mut layers = vec![
+        conv("conv1", 3, 16, 3, h, false),
+        conv("conv2", 16, 16, 3, h, true),
+    ];
+    let h2 = h / 2;
+    layers.push(conv("conv3", 16, 32, 3, h2, false));
+    layers.push(conv("conv4", 32, 32, 3, h2, true));
+    let h4 = h2 / 2;
+    layers.push(conv("conv5", 32, 64, 3, h4, true));
+    let h8 = h4 / 2;
+    layers.push(dense("fc", h8 * h8 * 64, num_classes, false));
+    finalize("vgg_tiny", hw, 3, num_classes, layers)
+}
+
+/// MobileNet-Tiny (Table I row 2) — mirrors `model.py::mobilenet_tiny`.
+pub fn mobilenet_tiny(num_classes: usize, hw: usize) -> ModelDesc {
+    let h = hw;
+    let mut layers = vec![
+        conv("conv1", 3, 16, 3, h, false),
+        dwconv("dw1", 16, h),
+        conv("pw1", 16, 32, 1, h, true),
+    ];
+    let h2 = h / 2;
+    layers.push(dwconv("dw2", 32, h2));
+    layers.push(conv("pw2", 32, 64, 1, h2, true));
+    let h4 = h2 / 2;
+    layers.push(dwconv("dw3", 64, h4));
+    layers.push(conv("pw3", 64, 64, 1, h4, false));
+    layers.push(dense("fc", 64, num_classes, true));
+    finalize("mobilenet_tiny", hw, 3, num_classes, layers)
+}
+
+/// Look up a backbone constructor by name (num_classes per Table I).
+pub fn by_name(name: &str) -> Option<ModelDesc> {
+    match name {
+        "vgg_tiny" => Some(vgg_tiny(10, 16)),
+        "mobilenet_tiny" => Some(mobilenet_tiny(2, 16)),
+        _ => None,
+    }
+}
+
+/// Parse a backbone entry of `artifacts/manifest.json`.
+pub fn from_manifest(name: &str, entry: &Json) -> Result<ModelDesc, JsonError> {
+    let layers_json = entry
+        .req("layers")?
+        .as_arr()
+        .ok_or_else(|| JsonError("layers not an array".into()))?;
+    let mut layers = Vec::with_capacity(layers_json.len());
+    for lj in layers_json {
+        let get_usize = |k: &str| -> Result<usize, JsonError> {
+            lj.req(k)?
+                .as_usize()
+                .ok_or_else(|| JsonError(format!("{k} not a number")))
+        };
+        let kind_s = lj
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| JsonError("kind not a string".into()))?;
+        layers.push(LayerSpec {
+            name: lj
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| JsonError("name not a string".into()))?
+                .to_string(),
+            kind: LayerKind::parse(kind_s)
+                .ok_or_else(|| JsonError(format!("unknown kind {kind_s}")))?,
+            cin: get_usize("cin")?,
+            cout: get_usize("cout")?,
+            k: get_usize("k")?,
+            stride: get_usize("stride")?,
+            in_h: get_usize("in_h")?,
+            in_w: get_usize("in_w")?,
+            out_h: get_usize("out_h")?,
+            out_w: get_usize("out_w")?,
+            pool_after: lj.req("pool_after")?.as_bool().unwrap_or(false),
+            gap_before: lj.req("gap_before")?.as_bool().unwrap_or(false),
+            w_offset: get_usize("w_offset")?,
+            w_size: get_usize("w_size")?,
+            b_offset: get_usize("b_offset")?,
+            b_size: get_usize("b_size")?,
+            macs: get_usize("macs")? as u64,
+        });
+    }
+    Ok(ModelDesc {
+        name: name.to_string(),
+        input_hw: entry.req("input_hw")?.as_usize().unwrap_or(16),
+        input_c: entry.req("input_c")?.as_usize().unwrap_or(3),
+        num_classes: entry.req("num_classes")?.as_usize().unwrap_or(10),
+        layers,
+        param_count: entry.req("param_count")?.as_usize().unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg_tiny_geometry() {
+        let m = vgg_tiny(10, 16);
+        assert_eq!(m.num_layers(), 6);
+        assert_eq!(m.layers[0].cin, 3);
+        assert_eq!(m.layers[5].kind, LayerKind::Dense);
+        assert_eq!(m.layers[5].cin, 2 * 2 * 64);
+        // Param count must match the Python side (checked again in the
+        // integration test against the manifest): 37722.
+        assert_eq!(m.param_count, 37_722);
+    }
+
+    #[test]
+    fn mobilenet_tiny_geometry() {
+        let m = mobilenet_tiny(2, 16);
+        assert_eq!(m.num_layers(), 8);
+        assert_eq!(m.param_count, 8_514);
+        assert!(m.layers[7].gap_before);
+    }
+
+    #[test]
+    fn offsets_contiguous() {
+        for m in [vgg_tiny(10, 16), mobilenet_tiny(2, 16)] {
+            let mut off = 0;
+            for l in &m.layers {
+                assert_eq!(l.w_offset, off);
+                off += l.w_size;
+                assert_eq!(l.b_offset, off);
+                off += l.b_size;
+            }
+            assert_eq!(m.param_count, off);
+        }
+    }
+
+    #[test]
+    fn macs_match_recompute() {
+        for m in [vgg_tiny(10, 16), mobilenet_tiny(2, 16)] {
+            for l in &m.layers {
+                assert_eq!(l.macs, l.compute_macs());
+            }
+            assert!(m.total_macs() > 0);
+        }
+    }
+
+    #[test]
+    fn sub_byte_weight_bytes() {
+        let m = vgg_tiny(10, 16);
+        let l = &m.layers[2]; // conv3: 16->32 3x3 = 4608 weights
+        assert_eq!(l.weight_bytes_at(8), 4608 + 32 * 4);
+        assert_eq!(l.weight_bytes_at(4), 2304 + 32 * 4);
+        assert_eq!(l.weight_bytes_at(2), 1152 + 32 * 4);
+    }
+
+    #[test]
+    fn flash_scales_with_bits() {
+        let m = vgg_tiny(10, 16);
+        let f8 = m.weight_flash_bytes(&vec![8; 6]);
+        let f4 = m.weight_flash_bytes(&vec![4; 6]);
+        assert!(f4 < f8);
+    }
+}

@@ -1,0 +1,295 @@
+//! Hardware-aware quantization search (paper §III.B, Fig. 8).
+//!
+//! The differentiable supernet itself lives at Layer 2 (JAX,
+//! `model.py::make_supernet_train_step`) and is executed through PJRT by
+//! the coordinator. This module owns everything *around* that program:
+//!
+//! * the quantization search space `Q` (bitwidth options per layer);
+//! * the **cost tables** `cost[l, i, j]` fed to the supernet's complexity
+//!   loss — either the EdMIPS-style MAC proxy (the Fig. 8 baseline) or the
+//!   SIMD-aware Eq. 12 model of [`crate::perf`] (the paper's contribution);
+//! * branch-logit bookkeeping: softmax, entropy, argmax selection of the
+//!   final [`BitConfig`].
+
+use crate::models::ModelDesc;
+use crate::ops::Method;
+use crate::perf::{mac_proxy, PerfModel};
+use crate::quant::BitConfig;
+
+/// The quantization search space (paper: every bitwidth in `[2, 8]`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SearchSpace {
+    pub options: Vec<u8>,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace {
+            options: vec![2, 3, 4, 5, 6, 7, 8],
+        }
+    }
+}
+
+impl SearchSpace {
+    pub fn k(&self) -> usize {
+        self.options.len()
+    }
+
+    /// Size of the full per-layer design space `(K_w × K_a)^L`.
+    pub fn cardinality(&self, num_layers: usize) -> f64 {
+        ((self.k() * self.k()) as f64).powi(num_layers as i32)
+    }
+}
+
+/// Which complexity signal drives the differentiable search.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CostProxy {
+    /// EdMIPS baseline: bit-weighted MAC count, implementation-blind.
+    EdMipsMacs,
+    /// MCU-MixQ: the Eq. 12 packing-aware model for a target operator
+    /// (normally [`Method::RpSlbc`], the deployed kernel).
+    SimdAware(PerfModel, Method),
+}
+
+impl CostProxy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostProxy::EdMipsMacs => "edmips-macs",
+            CostProxy::SimdAware(..) => "simd-aware-eq12",
+        }
+    }
+
+    fn layer_cost(&self, l: &crate::models::LayerSpec, wb: u8, ab: u8) -> f64 {
+        match self {
+            CostProxy::EdMipsMacs => mac_proxy(l, wb, ab),
+            CostProxy::SimdAware(pm, method) => pm.layer_complexity(l, *method, wb, ab),
+        }
+    }
+}
+
+/// A dense `[L, K, K]` cost table (row-major `l·K·K + i·K + j` with `i`
+/// indexing weight options and `j` activation options), normalized so the
+/// all-8-bit configuration sums to 1 — which makes the supernet's `λ`
+/// comparable across backbones and proxies.
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    pub data: Vec<f32>,
+    pub num_layers: usize,
+    pub k: usize,
+    /// The normalizer: model cost at uniform 8-bit under the same proxy.
+    pub norm: f64,
+}
+
+impl CostTable {
+    pub fn at(&self, l: usize, i: usize, j: usize) -> f32 {
+        self.data[(l * self.k + i) * self.k + j]
+    }
+
+    /// Expected complexity under per-layer branch distributions
+    /// (`softmax(alpha_w)`, `softmax(alpha_a)`, row-major `[L, K]`) — the
+    /// same bilinear form the Layer-2 loss computes; used for logging.
+    pub fn expected(&self, sm_w: &[f32], sm_a: &[f32]) -> f64 {
+        let (lnum, k) = (self.num_layers, self.k);
+        let mut total = 0.0f64;
+        for l in 0..lnum {
+            for i in 0..k {
+                for j in 0..k {
+                    total += sm_w[l * k + i] as f64
+                        * self.at(l, i, j) as f64
+                        * sm_a[l * k + j] as f64;
+                }
+            }
+        }
+        total
+    }
+
+    /// Complexity of a concrete configuration (sum of selected entries).
+    pub fn config_cost(&self, space: &SearchSpace, cfg: &BitConfig) -> f64 {
+        let k = self.k;
+        let idx_of = |b: u8| space.options.iter().position(|&o| o == b).unwrap();
+        (0..self.num_layers)
+            .map(|l| self.at(l, idx_of(cfg.wbits[l]), idx_of(cfg.abits[l])) as f64)
+            .sum::<f64>()
+            * {
+                let _ = k;
+                1.0
+            }
+    }
+}
+
+/// Build the `[L, K, K]` cost table of `model` under `proxy`.
+pub fn cost_table(model: &ModelDesc, space: &SearchSpace, proxy: CostProxy) -> CostTable {
+    let (lnum, k) = (model.num_layers(), space.k());
+    let mut raw = vec![0.0f64; lnum * k * k];
+    for (l, layer) in model.layers.iter().enumerate() {
+        for (i, &wb) in space.options.iter().enumerate() {
+            for (j, &ab) in space.options.iter().enumerate() {
+                raw[(l * k + i) * k + j] = proxy.layer_cost(layer, wb, ab);
+            }
+        }
+    }
+    // Normalizer: the uniform-8-bit model cost (last option is 8).
+    let i8 = space.options.iter().position(|&o| o == 8).unwrap_or(k - 1);
+    let norm: f64 = (0..lnum).map(|l| raw[(l * k + i8) * k + i8]).sum();
+    let norm = if norm > 0.0 { norm } else { 1.0 };
+    CostTable {
+        data: raw.iter().map(|&c| (c / norm) as f32).collect(),
+        num_layers: lnum,
+        k,
+        norm,
+    }
+}
+
+/// Row-wise softmax of `[L, K]` logits.
+pub fn softmax_rows(logits: &[f32], k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; logits.len()];
+    for (row_out, row) in out.chunks_mut(k).zip(logits.chunks(k)) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for (o, &x) in row_out.iter_mut().zip(row) {
+            *o = (x - m).exp();
+            z += *o;
+        }
+        for o in row_out.iter_mut() {
+            *o /= z;
+        }
+    }
+    out
+}
+
+/// Mean per-layer entropy (nats) of branch distributions — the search's
+/// convergence diagnostic logged by the coordinator.
+pub fn mean_entropy(logits: &[f32], k: usize) -> f64 {
+    let sm = softmax_rows(logits, k);
+    let rows = logits.len() / k;
+    let mut h = 0.0f64;
+    for row in sm.chunks(k) {
+        for &p in row {
+            if p > 0.0 {
+                h -= (p as f64) * (p as f64).ln();
+            }
+        }
+    }
+    h / rows as f64
+}
+
+/// Argmax selection of the final sub-net `q*` from trained branch logits
+/// (`alpha_w`, `alpha_a` row-major `[L, K]`).
+pub fn select_config(space: &SearchSpace, alpha_w: &[f32], alpha_a: &[f32]) -> BitConfig {
+    let k = space.k();
+    let pick = |logits: &[f32]| -> Vec<u8> {
+        logits
+            .chunks(k)
+            .map(|row| {
+                let mut best = 0usize;
+                for i in 1..k {
+                    if row[i] > row[best] {
+                        best = i;
+                    }
+                }
+                space.options[best]
+            })
+            .collect()
+    };
+    BitConfig {
+        wbits: pick(alpha_w),
+        abits: pick(alpha_a),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_tiny;
+
+    fn space() -> SearchSpace {
+        SearchSpace::default()
+    }
+
+    #[test]
+    fn table_shape_and_normalization() {
+        let m = vgg_tiny(10, 16);
+        let s = space();
+        let t = cost_table(&m, &s, CostProxy::EdMipsMacs);
+        assert_eq!(t.data.len(), m.num_layers() * s.k() * s.k());
+        // Uniform 8-bit config must cost exactly 1 after normalization.
+        let cfg8 = BitConfig::uniform(m.num_layers(), 8);
+        let c = t.config_cost(&s, &cfg8);
+        assert!((c - 1.0).abs() < 1e-5, "c = {c}");
+    }
+
+    #[test]
+    fn simd_aware_table_monotone_in_bits() {
+        let m = vgg_tiny(10, 16);
+        let s = space();
+        let pm = PerfModel::cortex_m7();
+        let t = cost_table(&m, &s, CostProxy::SimdAware(pm, Method::RpSlbc));
+        for l in 0..t.num_layers {
+            assert!(t.at(l, 0, 0) < t.at(l, s.k() - 1, s.k() - 1));
+        }
+    }
+
+    #[test]
+    fn edmips_and_simd_aware_disagree() {
+        // The whole point of Fig. 8: the proxies rank configs differently.
+        let m = vgg_tiny(10, 16);
+        let s = space();
+        let pm = PerfModel::cortex_m7();
+        let te = cost_table(&m, &s, CostProxy::EdMipsMacs);
+        let ts = cost_table(&m, &s, CostProxy::SimdAware(pm, Method::RpSlbc));
+        // EdMIPS is exactly proportional to wb·ab; Eq. 12 is not. Compare
+        // the (2,8) vs (4,4) ratio on a conv layer: same MAC proxy value,
+        // different packing cost.
+        let l = 2;
+        let i2 = 0; // 2-bit
+        let i4 = 2; // 4-bit
+        let i8 = s.k() - 1;
+        let e_ratio = te.at(l, i2, i8) / te.at(l, i4, i4);
+        let s_ratio = ts.at(l, i2, i8) / ts.at(l, i4, i4);
+        assert!((e_ratio - 1.0).abs() < 1e-4, "edmips ratio {e_ratio}");
+        assert!((s_ratio - 1.0).abs() > 0.02, "simd-aware ratio {s_ratio}");
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let sm = softmax_rows(&[0.0, 1.0, 2.0, -1.0, 0.0, 1.0], 3);
+        for row in sm.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row[2] > row[1] && row[1] > row[0]);
+        }
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        let k = 7;
+        let uniform = vec![0.0f32; 2 * k];
+        let h = mean_entropy(&uniform, k);
+        assert!((h - (k as f64).ln()).abs() < 1e-6);
+        let mut peaked = vec![0.0f32; 2 * k];
+        peaked[0] = 50.0;
+        peaked[k] = 50.0;
+        assert!(mean_entropy(&peaked, k) < 1e-3);
+    }
+
+    #[test]
+    fn select_config_argmax() {
+        let s = space();
+        let k = s.k();
+        let mut aw = vec![0.0f32; 2 * k];
+        let mut aa = vec![0.0f32; 2 * k];
+        aw[3] = 5.0; // layer 0 -> option 3 (5 bits)
+        aw[k + 6] = 5.0; // layer 1 -> option 6 (8 bits)
+        aa[0] = 5.0; // layer 0 -> 2 bits
+        aa[k + 2] = 5.0; // layer 1 -> 4 bits
+        let cfg = select_config(&s, &aw, &aa);
+        assert_eq!(cfg.wbits, vec![5, 8]);
+        assert_eq!(cfg.abits, vec![2, 4]);
+    }
+
+    #[test]
+    fn cardinality_is_astronomical() {
+        let s = space();
+        assert!(s.cardinality(6) > 1e10);
+    }
+}

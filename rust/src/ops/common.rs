@@ -1,0 +1,262 @@
+//! Shared operator pieces: the direct (oracle) convolutions, pooling,
+//! global average pooling and requantization — plus SAME-padding helpers.
+//!
+//! The direct convolutions are the correctness oracle for every method and
+//! the *compute* path for the baselines (whose arithmetic is standard int8
+//! MACs); the SLBC operators compute through the packed domain instead and
+//! are property-tested against these.
+
+use crate::mcu::{Counter, InstrClass};
+use crate::models::{LayerKind, LayerSpec};
+
+/// SAME-padding offset for odd kernels (k=1 → 0, k=3 → 1).
+pub fn pad_of(k: usize) -> i64 {
+    (k as i64 - 1) / 2
+}
+
+/// Direct 2-D convolution, NHWC x HWIO, stride 1, SAME padding, into raw
+/// i64 accumulators. `x` holds unsigned quantized activations, `w` signed
+/// quantized weights.
+pub fn direct_conv2d(x: &[u32], w: &[i32], l: &LayerSpec) -> Vec<i64> {
+    let (h, wd, cin, cout, k) = (l.in_h, l.in_w, l.cin, l.cout, l.k);
+    let pad = pad_of(k);
+    let mut out = vec![0i64; l.out_h * l.out_w * cout];
+    for oy in 0..l.out_h {
+        for ox in 0..l.out_w {
+            for oc in 0..cout {
+                let mut acc = 0i64;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = oy as i64 + ky as i64 - pad;
+                        let ix = ox as i64 + kx as i64 - pad;
+                        if iy < 0 || iy >= h as i64 || ix < 0 || ix >= wd as i64 {
+                            continue;
+                        }
+                        for ic in 0..cin {
+                            let xv = x[(iy as usize * wd + ix as usize) * cin + ic] as i64;
+                            let wv = w[((ky * k + kx) * cin + ic) * cout + oc] as i64;
+                            acc += xv * wv;
+                        }
+                    }
+                }
+                out[(oy * l.out_w + ox) * cout + oc] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Direct depthwise convolution: HWIO weights with I=1, O=channels.
+pub fn direct_dwconv2d(x: &[u32], w: &[i32], l: &LayerSpec) -> Vec<i64> {
+    let (h, wd, c, k) = (l.in_h, l.in_w, l.cout, l.k);
+    let pad = pad_of(k);
+    let mut out = vec![0i64; l.out_h * l.out_w * c];
+    for oy in 0..l.out_h {
+        for ox in 0..l.out_w {
+            for ch in 0..c {
+                let mut acc = 0i64;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = oy as i64 + ky as i64 - pad;
+                        let ix = ox as i64 + kx as i64 - pad;
+                        if iy < 0 || iy >= h as i64 || ix < 0 || ix >= wd as i64 {
+                            continue;
+                        }
+                        let xv = x[(iy as usize * wd + ix as usize) * c + ch] as i64;
+                        let wv = w[(ky * k + kx) * c + ch] as i64;
+                        acc += xv * wv;
+                    }
+                }
+                out[(oy * l.out_w + ox) * c + ch] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Direct dense layer (matvec): `w` is `[cin][cout]`.
+pub fn direct_dense(x: &[u32], w: &[i32], l: &LayerSpec) -> Vec<i64> {
+    let mut out = vec![0i64; l.cout];
+    for (i, &xv) in x.iter().enumerate().take(l.cin) {
+        for oc in 0..l.cout {
+            out[oc] += xv as i64 * w[i * l.cout + oc] as i64;
+        }
+    }
+    out
+}
+
+/// Oracle dispatch by layer kind.
+pub fn direct_layer(x: &[u32], w: &[i32], l: &LayerSpec) -> Vec<i64> {
+    match l.kind {
+        LayerKind::Conv => direct_conv2d(x, w, l),
+        LayerKind::DwConv => direct_dwconv2d(x, w, l),
+        LayerKind::Dense => direct_dense(x, w, l),
+    }
+}
+
+/// 2×2 max-pool (stride 2) over an HWC u32 tensor, charging the MCU cost
+/// (3 compares + 4 loads + 1 store per output).
+pub fn maxpool_2x2(x: &[u32], h: usize, w: usize, c: usize, ctr: &mut Counter) -> Vec<u32> {
+    let oh = h / 2;
+    let ow = w / 2;
+    let mut out = vec![0u32; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut m = 0u32;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        m = m.max(x[((oy * 2 + dy) * w + (ox * 2 + dx)) * c + ch]);
+                    }
+                }
+                out[(oy * ow + ox) * c + ch] = m;
+            }
+        }
+    }
+    let n = (oh * ow * c) as u64;
+    ctr.charge(InstrClass::Load, 4 * n);
+    ctr.charge(InstrClass::Alu, 3 * n); // compares/selects
+    ctr.charge(InstrClass::Store, n);
+    out
+}
+
+/// Global average pool over HW, returning per-channel mean accumulators
+/// (sum and the divisor, to stay in integers).
+pub fn global_avg_pool(x: &[u32], h: usize, w: usize, c: usize, ctr: &mut Counter) -> Vec<u32> {
+    let mut out = vec![0u64; c];
+    for y in 0..h {
+        for xx in 0..w {
+            for ch in 0..c {
+                out[ch] += x[(y * w + xx) * c + ch] as u64;
+            }
+        }
+    }
+    let n = (h * w * c) as u64;
+    ctr.charge(InstrClass::Load, n);
+    ctr.charge(InstrClass::Alu, n);
+    ctr.charge(InstrClass::Store, c as u64);
+    out.iter().map(|&s| (s / (h * w) as u64) as u32).collect()
+}
+
+/// Requantize raw accumulators to unsigned `bits`-bit activations with
+/// ReLU, using a fixed-point multiplier (the standard CMSIS/TinyEngine
+/// scheme: multiply + shift + saturate). Charges 1 MUL + 1 shift + 1 SAT +
+/// 1 store per element. Returns the quantized activations.
+///
+/// The multiplier is chosen from the data range like the dynamic
+/// `fake_quant` scaling (max-abs → full range), so the integer pipeline
+/// tracks the float training pipeline.
+pub fn requantize(acc: &[i64], bias: &[i64], cout: usize, bits: u8, ctr: &mut Counter) -> Vec<u32> {
+    let n_levels = (1u64 << bits) - 1;
+    // Per-tensor max after bias & ReLU.
+    let mut maxv = 1i64;
+    for (i, &a) in acc.iter().enumerate() {
+        let v = a + bias[i % cout];
+        if v > maxv {
+            maxv = v;
+        }
+    }
+    let out: Vec<u32> = acc
+        .iter()
+        .enumerate()
+        .map(|(i, &a)| {
+            let v = (a + bias[i % cout]).max(0);
+            // round(v * n / max) in integer arithmetic.
+            ((v as i128 * n_levels as i128 + (maxv as i128 / 2)) / maxv as i128) as u32
+        })
+        .collect();
+    let n = acc.len() as u64;
+    ctr.charge(InstrClass::Mul, n);
+    ctr.charge(InstrClass::Bit, n);
+    ctr.charge(InstrClass::Sat, n);
+    ctr.charge(InstrClass::Store, n);
+    out
+}
+
+/// Extract one padded input row for channel `ic` at input row `iy`
+/// (zero-padded SAME borders): used by the SLBC row pipeline.
+pub fn padded_row(x: &[u32], l: &LayerSpec, iy: i64, ic: usize, pad: i64) -> Vec<u64> {
+    let w = l.in_w;
+    let cin = l.cin;
+    let mut row = vec![0u64; w + 2 * pad as usize];
+    if iy < 0 || iy >= l.in_h as i64 {
+        return row;
+    }
+    for x_pos in 0..w {
+        row[x_pos + pad as usize] = x[(iy as usize * w + x_pos) * cin + ic] as u64;
+    }
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_tiny;
+
+    fn tiny_conv_layer() -> LayerSpec {
+        let mut l = vgg_tiny(10, 16).layers[0].clone();
+        l.in_h = 4;
+        l.in_w = 4;
+        l.out_h = 4;
+        l.out_w = 4;
+        l.cin = 2;
+        l.cout = 3;
+        l
+    }
+
+    #[test]
+    fn direct_conv_identity_kernel() {
+        // 1x1 kernel with weight 1 on the diagonal reproduces the input.
+        let mut l = tiny_conv_layer();
+        l.k = 1;
+        l.cin = 2;
+        l.cout = 2;
+        let x: Vec<u32> = (0..l.in_h * l.in_w * 2).map(|i| (i % 7) as u32).collect();
+        // w[0][0][ic][oc] = delta(ic, oc)
+        let w = vec![1, 0, 0, 1];
+        let y = direct_conv2d(&x, &w, &l);
+        for (i, &v) in y.iter().enumerate() {
+            assert_eq!(v, x[i] as i64);
+        }
+    }
+
+    #[test]
+    fn maxpool_halves_and_takes_max() {
+        let mut ctr = Counter::new();
+        // 2x2x1 -> 1x1x1
+        let x = vec![1, 5, 3, 2];
+        let y = maxpool_2x2(&x, 2, 2, 1, &mut ctr);
+        assert_eq!(y, vec![5]);
+        assert!(ctr.instructions() > 0);
+    }
+
+    #[test]
+    fn gap_averages() {
+        let mut ctr = Counter::new();
+        let x = vec![2, 4, 6, 8]; // 2x2x1
+        let y = global_avg_pool(&x, 2, 2, 1, &mut ctr);
+        assert_eq!(y, vec![5]);
+    }
+
+    #[test]
+    fn requantize_range_and_relu() {
+        let mut ctr = Counter::new();
+        let acc = vec![-50i64, 0, 120, 240];
+        let bias = vec![0i64];
+        let q = requantize(&acc, &bias, 1, 4, &mut ctr);
+        assert_eq!(q[0], 0); // ReLU clips negatives
+        assert_eq!(q[3], 15); // max maps to full scale
+        assert!(q.iter().all(|&v| v <= 15));
+    }
+
+    #[test]
+    fn padded_row_borders_zero() {
+        let l = tiny_conv_layer();
+        let x: Vec<u32> = (0..l.in_h * l.in_w * l.cin).map(|i| i as u32 + 1).collect();
+        let row = padded_row(&x, &l, -1, 0, 1);
+        assert!(row.iter().all(|&v| v == 0));
+        let row0 = padded_row(&x, &l, 0, 1, 1);
+        assert_eq!(row0[0], 0);
+        assert_eq!(row0[1], x[1] as u64);
+    }
+}

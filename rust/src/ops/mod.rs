@@ -1,0 +1,154 @@
+//! Neural-network operator library on the simulated MCU.
+//!
+//! Every operator computes **bit-exactly** (integer arithmetic identical to
+//! what the MCU would produce) while charging the instructions it would
+//! execute to a [`Counter`](crate::mcu::Counter); cycle totals come from the
+//! shared [`CycleModel`](crate::mcu::CycleModel). The SLBC operators
+//! actually compute *through the packed representation* (via
+//! [`crate::simd`]), so their correctness is the packed-arithmetic
+//! identity itself, not a shortcut.
+//!
+//! Implemented methods (Table I / Fig. 5–7 competitors):
+//!
+//! | method       | packing                      | sub-byte | module |
+//! |--------------|------------------------------|----------|--------|
+//! | `Naive`      | none (SISD int8)             | no       | [`baselines`] |
+//! | `Simd`       | CMSIS-NN SMLAD (int8/16)     | no       | [`baselines`] |
+//! | `CmixNn`     | lane-per-operand + mask unpack| {2,4,8} | [`baselines`] |
+//! | `WpcDdd`     | weight-packed conv (ref [35])| {2,4,8}  | [`baselines`] |
+//! | `TinyEngine` | CMSIS + kernel specialization| int8     | [`baselines`] |
+//! | `Slbc`       | in-lane polynomial packing   | 2–8      | [`slbc`] |
+//! | `RpSlbc`     | + reordered packing (Alg. 2) | 2–8      | [`slbc`] |
+
+pub mod baselines;
+pub mod common;
+pub mod slbc;
+
+use crate::mcu::Counter;
+use crate::models::LayerSpec;
+
+/// Convolution/dense execution method.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Naive,
+    Simd,
+    CmixNn,
+    WpcDdd,
+    TinyEngine,
+    Slbc,
+    RpSlbc,
+}
+
+impl Method {
+    pub const ALL: [Method; 7] = [
+        Method::Naive,
+        Method::Simd,
+        Method::CmixNn,
+        Method::WpcDdd,
+        Method::TinyEngine,
+        Method::Slbc,
+        Method::RpSlbc,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Naive => "naive",
+            Method::Simd => "simd",
+            Method::CmixNn => "cmix-nn",
+            Method::WpcDdd => "wpc-ddd",
+            Method::TinyEngine => "tinyengine",
+            Method::Slbc => "slbc",
+            Method::RpSlbc => "rp-slbc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Which (weight, activation) bitwidths the method's kernels accept.
+    pub fn supports(&self, wbits: u8, abits: u8) -> bool {
+        match self {
+            // No sub-byte support: kernels run everything as int8.
+            Method::Naive | Method::Simd => wbits <= 8 && abits <= 8,
+            Method::TinyEngine => wbits == 8 && abits == 8,
+            Method::CmixNn | Method::WpcDdd => {
+                matches!(wbits, 2 | 4 | 8) && matches!(abits, 2 | 4 | 8)
+            }
+            Method::Slbc | Method::RpSlbc => {
+                (2..=8).contains(&wbits) && (2..=8).contains(&abits)
+            }
+        }
+    }
+
+    /// The *effective* bitwidths the method computes at (baselines round
+    /// sub-byte up to their container).
+    pub fn effective_bits(&self, wbits: u8, abits: u8) -> (u8, u8) {
+        match self {
+            Method::Naive | Method::Simd | Method::TinyEngine => (8, 8),
+            Method::CmixNn | Method::WpcDdd => {
+                let up = |b: u8| if b <= 2 { 2 } else if b <= 4 { 4 } else { 8 };
+                (up(wbits), up(abits))
+            }
+            Method::Slbc | Method::RpSlbc => (wbits, abits),
+        }
+    }
+
+    /// Run a quantized layer bit-exactly, charging `ctr`.
+    ///
+    /// * `x` — input activations, unsigned quantized, NHWC flat
+    ///   (`in_h·in_w·cin`, or `cin` for dense layers);
+    /// * `w` — signed quantized weights, HWIO flat (Python layout);
+    /// * returns raw i64 accumulators (`out_h·out_w·cout`, or `cout`).
+    pub fn run_layer(
+        &self,
+        x: &[u32],
+        w: &[i32],
+        layer: &LayerSpec,
+        wbits: u8,
+        abits: u8,
+        ctr: &mut Counter,
+    ) -> Vec<i64> {
+        match self {
+            Method::Slbc => slbc::run_layer(x, w, layer, wbits, abits, false, ctr),
+            Method::RpSlbc => slbc::run_layer(x, w, layer, wbits, abits, true, ctr),
+            _ => baselines::run_layer(*self, x, w, layer, wbits, abits, ctr),
+        }
+    }
+}
+
+/// Raw-accumulator output of a layer plus the instruction charges.
+pub struct LayerRun {
+    pub out: Vec<i64>,
+    pub counter: Counter,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn support_matrix() {
+        assert!(Method::TinyEngine.supports(8, 8));
+        assert!(!Method::TinyEngine.supports(4, 8));
+        assert!(Method::CmixNn.supports(2, 4));
+        assert!(!Method::CmixNn.supports(3, 4));
+        assert!(Method::Slbc.supports(3, 7));
+        assert!(!Method::Slbc.supports(1, 4));
+    }
+
+    #[test]
+    fn effective_bits_rounding() {
+        assert_eq!(Method::CmixNn.effective_bits(3, 5), (4, 8));
+        assert_eq!(Method::Slbc.effective_bits(3, 5), (3, 5));
+        assert_eq!(Method::Naive.effective_bits(2, 2), (8, 8));
+    }
+}

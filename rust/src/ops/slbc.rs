@@ -1,0 +1,416 @@
+//! The SLBC / RP-SLBC operators (the paper's contribution, §IV).
+//!
+//! These operators *compute through the packed representation* — every
+//! output is produced by packing sub-byte operands into wide registers,
+//! performing one multiply per group and segmenting the product fields
+//! (via [`crate::simd`]) — so correctness here is the packed-arithmetic
+//! identity itself. Signed weights are handled with the standard offset
+//! trick (also used by CMix-NN): `w_u = w + 2^(b-1)` is packed unsigned and
+//! the correction `off · Σ window(x)` is subtracted per output; the window
+//! sums are filter-independent and computed once, amortized over all
+//! output channels.
+//!
+//! Instruction charging follows the adaptive lane plan (§IV.C): multiplies
+//! on the chosen carrier (DSP SIMD / long-multiply), packing amortized over
+//! output-channel reuse, segmentation amortized over the in-register
+//! accumulation depth the guard bits allow, and — for RP-SLBC — the
+//! reordered segmentation costs of Theorem IV.1.
+
+use crate::mcu::{Counter, InstrClass};
+use crate::models::{LayerKind, LayerSpec};
+use crate::simd::adaptive::{best_plan, LanePlan};
+use crate::simd::poly::{dot_group_size, dot_packed, field_width};
+
+use super::common::{pad_of, padded_row};
+
+/// Which instruction class the plan's wide multiply uses.
+fn mul_class(plan: &LanePlan) -> InstrClass {
+    if plan.cfg.register_bits == 64 {
+        InstrClass::MulLong
+    } else if plan.cfg.lanes() > 1 {
+        InstrClass::Simd
+    } else {
+        InstrClass::Mul
+    }
+}
+
+/// Run one layer through SLBC (or RP-SLBC when `reordered`).
+pub fn run_layer(
+    x: &[u32],
+    w: &[i32],
+    layer: &LayerSpec,
+    wbits: u8,
+    abits: u8,
+    reordered: bool,
+    ctr: &mut Counter,
+) -> Vec<i64> {
+    match layer.kind {
+        LayerKind::Dense => dense_slbc(x, w, layer, wbits, abits, ctr),
+        LayerKind::Conv => conv_slbc(x, w, layer, wbits, abits, reordered, false, ctr),
+        LayerKind::DwConv => conv_slbc(x, w, layer, wbits, abits, reordered, true, ctr),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv_slbc(
+    x: &[u32],
+    w: &[i32],
+    l: &LayerSpec,
+    wbits: u8,
+    abits: u8,
+    reordered: bool,
+    depthwise: bool,
+    ctr: &mut Counter,
+) -> Vec<i64> {
+    let k = l.k;
+    let pad = pad_of(k);
+    let padded_w = l.in_w + 2 * pad as usize;
+    let cin_eff = if depthwise { 1 } else { l.cin };
+    let cout = l.cout;
+    let off = 1i64 << (wbits - 1);
+
+    let plan = best_plan(abits as u32, wbits as u32, k as u32)
+        .expect("SLBC plan must exist for 2..=8-bit operands");
+    // Reordering is applied only where it actually reduces segmentation
+    // work (compile-time adaptivity, §IV.C): e.g. single-lane pointwise
+    // plans gain nothing from Theorem IV.1 and keep naive segmentation.
+    let use_rp = reordered
+        && plan
+            .reordered
+            .as_ref()
+            .map(|r| r.seg_ops_per_instr() < plan.conv.seg_ops_per_instr())
+            .unwrap_or(false);
+
+    // ---- pre-pack kernels (reversed taps, offset to unsigned) -----------
+    // krows[oc][ky][ic] = the k unsigned taps, reversed so the packed
+    // polynomial convolution realizes the correlation orientation.
+    let kidx = |ky: usize, kx: usize, ic: usize, oc: usize| -> usize {
+        if depthwise {
+            (ky * k + kx) * cout + oc
+        } else {
+            ((ky * k + kx) * l.cin + ic) * cout + oc
+        }
+    };
+    let mut krows: Vec<Vec<u64>> = Vec::with_capacity(cout * k * cin_eff);
+    for oc in 0..cout {
+        for ky in 0..k {
+            for ic in 0..cin_eff {
+                let taps: Vec<u64> = (0..k)
+                    .rev()
+                    .map(|kx| (w[kidx(ky, kx, ic, oc)] as i64 + off) as u64)
+                    .collect();
+                krows.push(taps);
+            }
+        }
+    }
+    // Kernel packing happens once per layer: 2 bit-ops per tap + a store.
+    ctr.charge(InstrClass::Bit, (cout * k * cin_eff * k * 2) as u64);
+    ctr.charge(InstrClass::Store, (cout * k * cin_eff) as u64);
+
+    let mut out = vec![0i64; l.out_h * l.out_w * cout];
+    let elems_per_mul = plan.conv.elements_per_instr() as usize;
+    let n_mul_per_row = padded_w.div_ceil(elems_per_mul) as u64;
+    let seg_ops = if use_rp {
+        plan.reordered.as_ref().unwrap().seg_ops_per_instr() as u64
+    } else {
+        plan.conv.seg_ops_per_instr() as u64
+    };
+    let fields_per_flush = (plan.conv.spec.group * plan.conv.cfg.lanes()) as u64;
+
+    // Pre-pack every kernel register once per layer (vk broadcast).
+    let vks: Vec<u64> = krows.iter().map(|taps| plan.conv.pack_kernel(taps)).collect();
+
+    // Reused buffers (allocation-free steady state).
+    let n_rows = cin_eff * k;
+    let mut rows: Vec<Vec<u64>> = vec![Vec::new(); n_rows];
+    let mut wsums: Vec<Vec<i64>> = vec![vec![0i64; l.out_w]; n_rows];
+    let mut packs: Vec<Vec<u64>> = vec![Vec::new(); n_rows];
+    let mut row_acc = vec![0i64; padded_w + k - 1];
+
+    // Pack one row into `packs[slot]` for the active pipeline.
+    let rp = plan.reordered.as_ref();
+    let pack_row = |row: &[u64], dst: &mut Vec<u64>| {
+        dst.clear();
+        if use_rp {
+            rp.unwrap().prepack_chunks(row, dst);
+        } else {
+            plan.conv.pack_windows_into(row, dst);
+        }
+    };
+
+    for oy in 0..l.out_h {
+        // Row-level work shared across all output channels: fetch, window
+        // sums, and signal packing (reused by every filter — PACK_REUSE).
+        for ky in 0..k {
+            let iy = oy as i64 + ky as i64 - pad;
+            for ic_slot in 0..cin_eff {
+                // For depthwise the channel is bound per-oc below; slot 0
+                // is refilled inside the oc loop.
+                let row = padded_row(x, l, iy, ic_slot, pad);
+                let ws = &mut wsums[ky * cin_eff + ic_slot];
+                for (ox, wsv) in ws.iter_mut().enumerate() {
+                    *wsv = (0..k).map(|kx| row[ox + kx] as i64).sum();
+                }
+                pack_row(&row, &mut packs[ky * cin_eff + ic_slot]);
+                rows[ky * cin_eff + ic_slot] = row;
+            }
+        }
+        // Charges for the shared row work (amortized over cout):
+        // packed-row loads + signal packing + window sums.
+        let shared_rows = n_rows as u64;
+        ctr.charge(
+            InstrClass::Load,
+            shared_rows * ((padded_w * abits as usize).div_ceil(32)) as u64,
+        );
+        ctr.charge(InstrClass::Bit, shared_rows * (padded_w as u64) * 2);
+        ctr.charge(InstrClass::Alu, shared_rows * (l.out_w as u64) * 2);
+
+        for oc in 0..cout {
+            row_acc.fill(0);
+            let mut muls_done = 0u64;
+            if depthwise {
+                // depthwise: rows/packs for THIS channel.
+                for ky in 0..k {
+                    let iy = oy as i64 + ky as i64 - pad;
+                    let row = padded_row(x, l, iy, oc, pad);
+                    let ws = &mut wsums[ky * cin_eff];
+                    for (ox, wsv) in ws.iter_mut().enumerate() {
+                        *wsv = (0..k).map(|kx| row[ox + kx] as i64).sum();
+                    }
+                    pack_row(&row, &mut packs[ky * cin_eff]);
+                    rows[ky * cin_eff] = row;
+                }
+            }
+            for ky in 0..k {
+                for ic in 0..cin_eff {
+                    let slot = ky * cin_eff + ic;
+                    let vk = vks[(oc * k + ky) * cin_eff + ic];
+                    // The packed computation itself (bit-exact).
+                    if use_rp {
+                        rp.unwrap().conv_prepacked_into(
+                            &packs[slot],
+                            rows[slot].len(),
+                            vk,
+                            &mut row_acc,
+                        );
+                    } else {
+                        plan.conv.conv1d_prepacked_into(&packs[slot], vk, &mut row_acc);
+                    }
+                    muls_done += n_mul_per_row;
+                    // kernel register reload per row-pair.
+                    ctr.charge(InstrClass::Load, 1);
+                }
+            }
+            // Multiply + packed-accumulate charges.
+            ctr.charge(mul_class(&plan), muls_done);
+            ctr.charge(InstrClass::Alu, muls_done);
+            // Segmentation flushes, amortized over the accumulation depth.
+            let flushes = muls_done.div_ceil(plan.accum_depth as u64);
+            ctr.charge(InstrClass::Bit, flushes * seg_ops);
+            ctr.charge(InstrClass::Alu, flushes * fields_per_flush);
+
+            // Write outputs with offset correction.
+            for ox in 0..l.out_w {
+                let raw = row_acc[ox + k - 1];
+                let corr: i64 = (0..n_rows).map(|r| wsums[r][ox]).sum();
+                out[(oy * l.out_w + ox) * cout + oc] = raw - off * corr;
+            }
+            // Correction charges: per output 1 MUL + 1 SUB (window-sum
+            // reduction is shared row work, charged above with k·cin adds
+            // per output once per row group).
+            ctr.charge(InstrClass::Mul, l.out_w as u64);
+            ctr.charge(InstrClass::Alu, l.out_w as u64);
+        }
+        // Window-sum reduction across (cin·k) rows, once per (oy, ox).
+        ctr.charge(InstrClass::Alu, (l.out_w * cin_eff * k) as u64);
+    }
+    out
+}
+
+fn dense_slbc(
+    x: &[u32],
+    w: &[i32],
+    l: &LayerSpec,
+    wbits: u8,
+    abits: u8,
+    ctr: &mut Counter,
+) -> Vec<i64> {
+    let off = 1i64 << (wbits - 1);
+    let a: Vec<u64> = x.iter().take(l.cin).map(|&v| v as u64).collect();
+    let sx: i64 = a.iter().map(|&v| v as i64).sum();
+    let mut out = vec![0i64; l.cout];
+
+    let g = dot_group_size(abits as u32, wbits as u32, 63);
+    let n_groups = (l.cin as u64).div_ceil(g as u64);
+    let s = field_width(abits as u32, wbits as u32, g);
+    let _ = s;
+
+    // Activation packing once, reused by every output neuron.
+    ctr.charge(InstrClass::Bit, 2 * l.cin as u64);
+    ctr.charge(InstrClass::Alu, l.cin as u64); // Σx for the offset fix
+    for oc in 0..l.cout {
+        let b: Vec<u64> = (0..l.cin)
+            .map(|i| (w[i * l.cout + oc] as i64 + off) as u64)
+            .collect();
+        let dot = dot_packed(&a, &b, abits as u32, wbits as u32) as i64;
+        out[oc] = dot - off * sx;
+        // Pre-packed weights stream from flash; one multiply + one
+        // extract (shift+mask) + accumulate per group.
+        ctr.charge(
+            InstrClass::Load,
+            ((l.cin * wbits as usize).div_ceil(32)) as u64,
+        );
+        ctr.charge(InstrClass::MulLong, n_groups);
+        ctr.charge(InstrClass::Bit, 2 * n_groups);
+        ctr.charge(InstrClass::Alu, n_groups + 2); // acc + offset fix
+        ctr.charge(InstrClass::Store, 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcu::CycleModel;
+    use crate::models::{vgg_tiny, LayerKind};
+    use crate::ops::common;
+    use crate::util::prng::Rng;
+    use crate::util::prop::check;
+
+    fn layer(kind: LayerKind, h: usize, cin: usize, cout: usize, k: usize) -> LayerSpec {
+        let mut l = vgg_tiny(10, 16).layers[0].clone();
+        l.kind = kind;
+        l.in_h = h;
+        l.in_w = h;
+        l.out_h = h;
+        l.out_w = h;
+        l.cin = cin;
+        l.cout = cout;
+        l.k = k;
+        l.macs = l.compute_macs();
+        l
+    }
+
+    fn rand_io(l: &LayerSpec, abits: u8, wbits: u8, seed: u64) -> (Vec<u32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let xn = match l.kind {
+            LayerKind::Dense => l.cin,
+            _ => l.in_h * l.in_w * l.cin,
+        };
+        let wn = match l.kind {
+            LayerKind::Conv => l.k * l.k * l.cin * l.cout,
+            LayerKind::DwConv => l.k * l.k * l.cout,
+            LayerKind::Dense => l.cin * l.cout,
+        };
+        let x: Vec<u32> = (0..xn).map(|_| rng.below(1 << abits) as u32).collect();
+        let lim = (1i64 << (wbits - 1)) - 1;
+        let w: Vec<i32> = (0..wn)
+            .map(|_| (rng.below(2 * lim as u64 + 1) as i64 - lim) as i32)
+            .collect();
+        (x, w)
+    }
+
+    #[test]
+    fn slbc_conv_matches_direct() {
+        for (wb, ab) in [(2u8, 2u8), (4, 4), (4, 2), (8, 8), (3, 5)] {
+            let l = layer(LayerKind::Conv, 6, 3, 4, 3);
+            let (x, w) = rand_io(&l, ab, wb, 100 + wb as u64 * 10 + ab as u64);
+            let want = common::direct_conv2d(&x, &w, &l);
+            let mut ctr = Counter::new();
+            let got = run_layer(&x, &w, &l, wb, ab, false, &mut ctr);
+            assert_eq!(got, want, "wb={wb} ab={ab}");
+            assert!(ctr.instructions() > 0);
+        }
+    }
+
+    #[test]
+    fn rp_slbc_conv_matches_direct() {
+        for (wb, ab) in [(2u8, 2u8), (4, 4), (5, 3)] {
+            let l = layer(LayerKind::Conv, 6, 3, 4, 3);
+            let (x, w) = rand_io(&l, ab, wb, 200 + wb as u64);
+            let want = common::direct_conv2d(&x, &w, &l);
+            let mut ctr = Counter::new();
+            let got = run_layer(&x, &w, &l, wb, ab, true, &mut ctr);
+            assert_eq!(got, want, "wb={wb} ab={ab}");
+        }
+    }
+
+    #[test]
+    fn slbc_dwconv_matches_direct() {
+        for (wb, ab) in [(2u8, 4u8), (4, 4), (8, 8)] {
+            let l = layer(LayerKind::DwConv, 6, 8, 8, 3);
+            let (x, w) = rand_io(&l, ab, wb, 300 + wb as u64);
+            let want = common::direct_dwconv2d(&x, &w, &l);
+            let mut ctr = Counter::new();
+            let got = run_layer(&x, &w, &l, wb, ab, false, &mut ctr);
+            assert_eq!(got, want, "wb={wb} ab={ab}");
+        }
+    }
+
+    #[test]
+    fn slbc_dense_matches_direct() {
+        for (wb, ab) in [(2u8, 2u8), (4, 6), (8, 8)] {
+            let l = layer(LayerKind::Dense, 1, 64, 10, 1);
+            let (x, w) = rand_io(&l, ab, wb, 400 + wb as u64);
+            let want = common::direct_dense(&x, &w, &l);
+            let mut ctr = Counter::new();
+            let got = run_layer(&x, &w, &l, wb, ab, false, &mut ctr);
+            assert_eq!(got, want, "wb={wb} ab={ab}");
+        }
+    }
+
+    #[test]
+    fn slbc_property_random_geometry() {
+        check("slbc conv == direct over random geometry", 60, |rng| {
+            let wb = rng.range(2, 9) as u8;
+            let ab = rng.range(2, 9) as u8;
+            let h = rng.range(3, 9);
+            let cin = rng.range(1, 5);
+            let cout = rng.range(1, 5);
+            let rp = rng.below(2) == 1;
+            let l = layer(LayerKind::Conv, h, cin, cout, 3);
+            let mut r = rng.fork(7);
+            let (x, w) = rand_io(&l, ab, wb, r.next_u64());
+            let want = common::direct_conv2d(&x, &w, &l);
+            let mut ctr = Counter::new();
+            let got = run_layer(&x, &w, &l, wb, ab, rp, &mut ctr);
+            assert_eq!(got, want, "wb={wb} ab={ab} h={h} cin={cin} cout={cout}");
+        });
+    }
+
+    #[test]
+    fn slbc_low_bits_cheaper_than_high_bits() {
+        let l = layer(LayerKind::Conv, 8, 8, 8, 3);
+        let model = CycleModel::cortex_m7();
+        let (x2, w2) = rand_io(&l, 2, 2, 1);
+        let mut c2 = Counter::new();
+        run_layer(&x2, &w2, &l, 2, 2, false, &mut c2);
+        let (x8, w8) = rand_io(&l, 8, 8, 2);
+        let mut c8 = Counter::new();
+        run_layer(&x8, &w8, &l, 8, 8, false, &mut c8);
+        assert!(
+            c2.cycles(&model) < c8.cycles(&model),
+            "2-bit {} vs 8-bit {}",
+            c2.cycles(&model),
+            c8.cycles(&model)
+        );
+    }
+
+    #[test]
+    fn rp_slbc_cheaper_than_slbc() {
+        // Fig. 7: reordering reduces segmentation overhead.
+        let l = layer(LayerKind::Conv, 8, 8, 8, 3);
+        let model = CycleModel::cortex_m7();
+        let (x, w) = rand_io(&l, 4, 4, 3);
+        let mut cn = Counter::new();
+        run_layer(&x, &w, &l, 4, 4, false, &mut cn);
+        let mut cr = Counter::new();
+        run_layer(&x, &w, &l, 4, 4, true, &mut cr);
+        assert!(
+            cr.cycles(&model) <= cn.cycles(&model),
+            "rp {} vs naive {}",
+            cr.cycles(&model),
+            cn.cycles(&model)
+        );
+    }
+}

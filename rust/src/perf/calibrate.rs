@@ -1,0 +1,214 @@
+//! Calibration of the Eq. 12 coefficients against the MCU simulator.
+//!
+//! The paper obtains `α` and `β` "with experiments" on the STM32F746; our
+//! substitute testbed is the cycle-approximate simulator, so calibration
+//! runs the bit-exact operators over a probe set of layers/bitwidths,
+//! collects `(C_SISD, C_SIMD, C_bit, cycles)` samples and solves the
+//! intercept-free least-squares system
+//!
+//! ```text
+//! cycles ≈ s·C_SISD + a·C_SIMD + b·C_bit,   α = a/s,  β = b/s
+//! ```
+//!
+//! (linear in `(s, a, b)`). The fit quality (max relative error) is
+//! reported so EXPERIMENTS.md can quote how faithful the Eq. 12 proxy is
+//! on this testbed.
+
+use crate::mcu::{Counter, CycleModel};
+use crate::models::{vgg_tiny, LayerSpec};
+use crate::ops::Method;
+use crate::util::prng::Rng;
+
+use super::PerfModel;
+
+/// Result of a calibration run.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub model: PerfModel,
+    /// Scale factor `s` (cycles per SISD instruction).
+    pub scale: f64,
+    /// Max relative error of `s·C` vs measured cycles over the probe set.
+    pub max_rel_err: f64,
+    /// Number of probe samples used.
+    pub samples: usize,
+}
+
+/// Run `method` on `layer` with fresh random operands and return the
+/// charged instruction histogram.
+pub fn measure_layer(
+    layer: &LayerSpec,
+    method: Method,
+    wbits: u8,
+    abits: u8,
+    seed: u64,
+) -> Counter {
+    let mut rng = Rng::new(seed);
+    let xn = layer.in_elems();
+    let wn = layer.w_size.max(match layer.kind {
+        crate::models::LayerKind::Conv => layer.k * layer.k * layer.cin * layer.cout,
+        crate::models::LayerKind::DwConv => layer.k * layer.k * layer.cout,
+        crate::models::LayerKind::Dense => layer.cin * layer.cout,
+    });
+    let x: Vec<u32> = (0..xn).map(|_| rng.below(1 << abits) as u32).collect();
+    let lim = (1i64 << (wbits - 1)) - 1;
+    let w: Vec<i32> = (0..wn)
+        .map(|_| (rng.below(2 * lim as u64 + 1) as i64 - lim) as i32)
+        .collect();
+    let mut ctr = Counter::new();
+    method.run_layer(&x, &w, layer, wbits, abits, &mut ctr);
+    ctr
+}
+
+/// Default probe set: a few VGG-Tiny-shaped layers shrunk to keep the
+/// calibration fast, crossed with methods and bitwidths.
+fn probe_layers() -> Vec<LayerSpec> {
+    let m = vgg_tiny(10, 16);
+    let mut probes = Vec::new();
+    for (idx, shrink) in [(0usize, 2usize), (2, 2), (5, 1)] {
+        let mut l = m.layers[idx].clone();
+        if l.kind != crate::models::LayerKind::Dense {
+            l.in_h /= shrink;
+            l.in_w /= shrink;
+            l.out_h /= shrink;
+            l.out_w /= shrink;
+        }
+        l.macs = l.compute_macs();
+        probes.push(l);
+    }
+    probes
+}
+
+/// Fit `(α, β)` from operator runs under `cycles`; see module docs.
+pub fn calibrate_alpha_beta(cycles: &CycleModel) -> Calibration {
+    let methods = [Method::Naive, Method::Simd, Method::CmixNn, Method::Slbc, Method::RpSlbc];
+    let bit_pairs: [(u8, u8); 4] = [(2, 2), (4, 4), (8, 8), (4, 8)];
+
+    // Collect samples.
+    let mut rows: Vec<[f64; 3]> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    for (li, layer) in probe_layers().iter().enumerate() {
+        for (mi, &method) in methods.iter().enumerate() {
+            for (bi, &(wb, ab)) in bit_pairs.iter().enumerate() {
+                if !method.supports(wb, ab) {
+                    continue;
+                }
+                let seed = 1000 + (li * 100 + mi * 10 + bi) as u64;
+                let ctr = measure_layer(layer, method, wb, ab, seed);
+                let (sisd, simd, bit) = ctr.eq12_components();
+                rows.push([sisd as f64, simd as f64, bit as f64]);
+                ys.push(ctr.cycles(cycles) as f64);
+            }
+        }
+    }
+
+    // Normal equations for least squares (3 unknowns: s, a, b).
+    let mut ata = [[0.0f64; 3]; 3];
+    let mut atb = [0.0f64; 3];
+    for (r, &y) in rows.iter().zip(&ys) {
+        for i in 0..3 {
+            for j in 0..3 {
+                ata[i][j] += r[i] * r[j];
+            }
+            atb[i] += r[i] * y;
+        }
+    }
+    let coef = solve3(ata, atb).expect("calibration system is well-posed");
+    let (s, a, b) = (coef[0], coef[1], coef[2]);
+    let model = PerfModel {
+        alpha: a / s,
+        beta: b / s,
+    };
+
+    let mut max_rel = 0.0f64;
+    for (r, &y) in rows.iter().zip(&ys) {
+        let pred = s * r[0] + a * r[1] + b * r[2];
+        let rel = ((pred - y) / y).abs();
+        max_rel = max_rel.max(rel);
+    }
+    Calibration {
+        model,
+        scale: s,
+        max_rel_err: max_rel,
+        samples: rows.len(),
+    }
+}
+
+/// Solve a 3×3 linear system by Gaussian elimination with partial pivoting.
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        // Pivot.
+        let piv = (col..3).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in (col + 1)..3 {
+            let f = a[row][col] / a[col][col];
+            for k in col..3 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for row in (0..3).rev() {
+        let mut s = b[row];
+        for k in (row + 1)..3 {
+            s -= a[row][k] * x[k];
+        }
+        x[row] = s / a[row][row];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::predict::predict_layer;
+
+    #[test]
+    fn solve3_identity() {
+        let x = solve3([[1.0, 0.0, 0.0], [0.0, 2.0, 0.0], [0.0, 0.0, 4.0]], [3.0, 4.0, 8.0])
+            .unwrap();
+        assert_eq!(x, [3.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn calibration_recovers_sane_coefficients() {
+        let cal = calibrate_alpha_beta(&CycleModel::cortex_m7());
+        assert!(cal.samples > 20, "samples {}", cal.samples);
+        assert!(cal.model.alpha > 0.0, "alpha {}", cal.model.alpha);
+        assert!(cal.model.beta > 0.0, "beta {}", cal.model.beta);
+        // The fit must explain the probe set well — this is the claim that
+        // the Eq. 12 proxy tracks MCU latency (paper §V.C).
+        assert!(cal.max_rel_err < 0.35, "max rel err {}", cal.max_rel_err);
+    }
+
+    #[test]
+    fn prediction_matches_measurement_exactly() {
+        // predict.rs mirrors ops charging term by term; charging is
+        // geometry-determined, so the histograms must be identical.
+        for layer in probe_layers() {
+            for method in Method::ALL {
+                for (wb, ab) in [(2u8, 2u8), (4, 4), (8, 8), (3, 5)] {
+                    if !method.supports(wb, ab) {
+                        continue;
+                    }
+                    let measured = measure_layer(&layer, method, wb, ab, 7);
+                    let predicted = predict_layer(&layer, method, wb, ab);
+                    assert_eq!(
+                        predicted.counter, measured,
+                        "{} {}x{} on {}",
+                        method.name(),
+                        wb,
+                        ab,
+                        layer.name
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Packing performance prediction (paper §IV.D, Eq. 12).
+//!
+//! The HW/SW co-design loop needs the complexity of every layer at every
+//! `(weight-bits, activation-bits)` pair — `L × K × K` evaluations per
+//! backbone, re-queried as the search anneals. Deploying each candidate on
+//! the (simulated) MCU would be orders of magnitude too slow, so MCU-MixQ
+//! predicts cost analytically:
+//!
+//! ```text
+//! C = C_SISD + α · C_SIMD + β · C_bit            (Eq. 12)
+//! ```
+//!
+//! where the three components are *instruction counts* by class (scalar,
+//! DSP/SIMD and bit-manipulation) derived from the layer geometry and the
+//! operator's kernel structure, and `α`, `β` calibrate the classes' cycle
+//! costs against scalar instructions.
+//!
+//! Fidelity contract: [`predict_layer`] mirrors, term by term, the
+//! instruction charging of the bit-exact operators in [`crate::ops`]; the
+//! agreement is enforced by the [`calibrate`] tests (prediction equals
+//! measurement for the geometry-determined operators). The EdMIPS-style
+//! MAC-count proxy the paper compares against in Fig. 8 is [`mac_proxy`].
+
+pub mod calibrate;
+pub mod roofline;
+pub mod predict;
+
+pub use calibrate::{calibrate_alpha_beta, measure_layer, Calibration};
+pub use predict::{predict_layer, predict_model, PredictedCost};
+
+use crate::mcu::CycleModel;
+use crate::models::{LayerSpec, ModelDesc};
+use crate::ops::Method;
+use crate::quant::BitConfig;
+
+/// The Eq. 12 performance model: proportion coefficients for the SIMD and
+/// bit-operation instruction classes relative to SISD instructions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfModel {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl PerfModel {
+    /// Coefficients implied by a cycle model (the paper obtains them "with
+    /// experiments"; we fit them from the simulator's cycle table — see
+    /// [`calibrate_alpha_beta`] for the measured fit).
+    pub fn from_cycles(m: &CycleModel) -> PerfModel {
+        let (alpha, beta) = m.alpha_beta();
+        PerfModel { alpha, beta }
+    }
+
+    /// Default model: Cortex-M7 coefficients.
+    pub fn cortex_m7() -> PerfModel {
+        PerfModel::from_cycles(&CycleModel::cortex_m7())
+    }
+
+    /// Eq. 12: collapse an instruction-class decomposition into the scalar
+    /// complexity metric.
+    pub fn complexity(&self, sisd: f64, simd: f64, bit: f64) -> f64 {
+        sisd + self.alpha * simd + self.beta * bit
+    }
+
+    /// Predicted complexity of one layer under `method` at `(wbits, abits)`.
+    pub fn layer_complexity(
+        &self,
+        layer: &LayerSpec,
+        method: Method,
+        wbits: u8,
+        abits: u8,
+    ) -> f64 {
+        let p = predict_layer(layer, method, wbits, abits);
+        self.complexity(p.sisd as f64, p.simd as f64, p.bit as f64)
+    }
+
+    /// Predicted complexity of a whole model under a bit configuration.
+    pub fn model_complexity(&self, model: &ModelDesc, method: Method, cfg: &BitConfig) -> f64 {
+        model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| self.layer_complexity(l, method, cfg.wbits[i], cfg.abits[i]))
+            .sum()
+    }
+}
+
+/// The EdMIPS-style complexity proxy the paper's Fig. 8 baseline uses:
+/// effective MACs weighted by `wbits·abits / 64` (bit-operations count of
+/// the multiply), blind to packing/segmentation overheads and to the
+/// non-proportional implementation efficiency of SLBC.
+pub fn mac_proxy(layer: &LayerSpec, wbits: u8, abits: u8) -> f64 {
+    layer.macs as f64 * (wbits as f64 * abits as f64) / 64.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_tiny;
+
+    #[test]
+    fn eq12_linear_form() {
+        let pm = PerfModel { alpha: 2.0, beta: 0.5 };
+        assert_eq!(pm.complexity(10.0, 4.0, 8.0), 10.0 + 8.0 + 4.0);
+    }
+
+    #[test]
+    fn m7_coefficients_positive() {
+        let pm = PerfModel::cortex_m7();
+        assert!(pm.alpha > 0.0 && pm.beta > 0.0);
+    }
+
+    #[test]
+    fn complexity_monotonic_in_bits_for_slbc() {
+        // Fewer bits -> more operands per register -> lower complexity.
+        let pm = PerfModel::cortex_m7();
+        let m = vgg_tiny(10, 16);
+        let l = &m.layers[2];
+        let c2 = pm.layer_complexity(l, Method::Slbc, 2, 2);
+        let c4 = pm.layer_complexity(l, Method::Slbc, 4, 4);
+        let c8 = pm.layer_complexity(l, Method::Slbc, 8, 8);
+        assert!(c2 < c4 && c4 < c8, "c2={c2} c4={c4} c8={c8}");
+    }
+
+    #[test]
+    fn mac_proxy_proportional_to_bit_product() {
+        let m = vgg_tiny(10, 16);
+        let l = &m.layers[0];
+        let p44 = mac_proxy(l, 4, 4);
+        let p88 = mac_proxy(l, 8, 8);
+        assert!((p88 / p44 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_complexity_sums_layers() {
+        let pm = PerfModel::cortex_m7();
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let total = pm.model_complexity(&m, Method::Slbc, &cfg);
+        let by_hand: f64 = m
+            .layers
+            .iter()
+            .map(|l| pm.layer_complexity(l, Method::Slbc, 4, 4))
+            .sum();
+        assert_eq!(total, by_hand);
+    }
+}

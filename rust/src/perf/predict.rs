@@ -1,0 +1,265 @@
+//! Analytic instruction-count prediction per operator (§IV.D).
+//!
+//! Every function here reproduces — term by term — the `Counter` charges of
+//! the corresponding bit-exact operator in [`crate::ops`], but from layer
+//! geometry alone, without touching data. Because the operators' charging
+//! is geometry-determined, prediction is **exact**; the calibration tests
+//! assert `predict == measure` across methods/bitwidths/layer kinds so the
+//! two can never drift apart silently.
+
+use crate::mcu::{Counter, InstrClass};
+use crate::models::{LayerKind, LayerSpec, ModelDesc};
+use crate::ops::Method;
+use crate::quant::BitConfig;
+use crate::simd::adaptive::{best_plan, LanePlan};
+use crate::simd::poly::{dot_group_size, field_width};
+
+/// Predicted instruction mix of one layer execution.
+#[derive(Debug, Clone)]
+pub struct PredictedCost {
+    /// The full predicted instruction-class histogram.
+    pub counter: Counter,
+    /// Eq. 12 components (scalar, SIMD-like, bit-manipulation counts).
+    pub sisd: u64,
+    pub simd: u64,
+    pub bit: u64,
+}
+
+impl PredictedCost {
+    fn from_counter(counter: Counter) -> Self {
+        let (sisd, simd, bit) = counter.eq12_components();
+        PredictedCost {
+            counter,
+            sisd,
+            simd,
+            bit,
+        }
+    }
+}
+
+/// Predict the instruction mix of running `layer` with `method` at
+/// `(wbits, abits)`.
+pub fn predict_layer(layer: &LayerSpec, method: Method, wbits: u8, abits: u8) -> PredictedCost {
+    let mut ctr = Counter::new();
+    match method {
+        Method::Slbc => predict_slbc(layer, wbits, abits, false, &mut ctr),
+        Method::RpSlbc => predict_slbc(layer, wbits, abits, true, &mut ctr),
+        _ => predict_baseline(layer, method, wbits, abits, &mut ctr),
+    }
+    PredictedCost::from_counter(ctr)
+}
+
+/// Predict the summed instruction mix of a whole model.
+pub fn predict_model(model: &ModelDesc, method: Method, cfg: &BitConfig) -> PredictedCost {
+    let mut total = Counter::new();
+    for (i, l) in model.layers.iter().enumerate() {
+        let p = predict_layer(l, method, cfg.wbits[i], cfg.abits[i]);
+        total.merge(&p.counter);
+    }
+    PredictedCost::from_counter(total)
+}
+
+// ---------------------------------------------------------------------------
+// SLBC / RP-SLBC (mirror of ops::slbc::{conv_slbc, dense_slbc})
+// ---------------------------------------------------------------------------
+
+fn mul_class(plan: &LanePlan) -> InstrClass {
+    if plan.cfg.register_bits == 64 {
+        InstrClass::MulLong
+    } else if plan.cfg.lanes() > 1 {
+        InstrClass::Simd
+    } else {
+        InstrClass::Mul
+    }
+}
+
+fn predict_slbc(l: &LayerSpec, wbits: u8, abits: u8, reordered: bool, ctr: &mut Counter) {
+    if l.kind == LayerKind::Dense {
+        return predict_slbc_dense(l, wbits, abits, ctr);
+    }
+    let depthwise = l.kind == LayerKind::DwConv;
+    let k = l.k;
+    let pad = crate::ops::common::pad_of(k);
+    let padded_w = l.in_w + 2 * pad as usize;
+    let cin_eff = if depthwise { 1 } else { l.cin };
+    let cout = l.cout;
+
+    let plan = best_plan(abits as u32, wbits as u32, k as u32)
+        .expect("SLBC plan must exist for 2..=8-bit operands");
+    // Mirror of ops::slbc: reordering only where it wins (§IV.C).
+    let use_rp = reordered
+        && plan
+            .reordered
+            .as_ref()
+            .map(|r| r.seg_ops_per_instr() < plan.conv.seg_ops_per_instr())
+            .unwrap_or(false);
+
+    // Kernel packing, once per layer.
+    ctr.charge(InstrClass::Bit, (cout * k * cin_eff * k * 2) as u64);
+    ctr.charge(InstrClass::Store, (cout * k * cin_eff) as u64);
+
+    let elems_per_mul = plan.conv.elements_per_instr() as usize;
+    let n_mul_per_row = padded_w.div_ceil(elems_per_mul) as u64;
+    let seg_ops = if use_rp {
+        plan.reordered.as_ref().unwrap().seg_ops_per_instr() as u64
+    } else {
+        plan.conv.seg_ops_per_instr() as u64
+    };
+    let fields_per_flush = (plan.conv.spec.group * plan.conv.cfg.lanes()) as u64;
+    let muls_per_oc = (k * cin_eff) as u64 * n_mul_per_row;
+    let flushes = muls_per_oc.div_ceil(plan.accum_depth as u64);
+    let shared_rows = (cin_eff * k) as u64;
+
+    for _oy in 0..l.out_h {
+        // Shared row work.
+        ctr.charge(
+            InstrClass::Load,
+            shared_rows * ((padded_w * abits as usize).div_ceil(32)) as u64,
+        );
+        ctr.charge(InstrClass::Bit, shared_rows * (padded_w as u64) * 2);
+        ctr.charge(InstrClass::Alu, shared_rows * (l.out_w as u64) * 2);
+
+        // Per output channel.
+        let co = cout as u64;
+        ctr.charge(mul_class(&plan), co * muls_per_oc);
+        ctr.charge(InstrClass::Alu, co * muls_per_oc);
+        ctr.charge(InstrClass::Bit, co * flushes * seg_ops);
+        ctr.charge(InstrClass::Alu, co * flushes * fields_per_flush);
+        ctr.charge(InstrClass::Load, co * (k * cin_eff) as u64);
+        ctr.charge(InstrClass::Mul, co * l.out_w as u64);
+        ctr.charge(InstrClass::Alu, co * l.out_w as u64);
+
+        // Window-sum reduction once per (oy, ox).
+        ctr.charge(InstrClass::Alu, (l.out_w * cin_eff * k) as u64);
+    }
+}
+
+fn predict_slbc_dense(l: &LayerSpec, wbits: u8, abits: u8, ctr: &mut Counter) {
+    let g = dot_group_size(abits as u32, wbits as u32, 63);
+    let n_groups = (l.cin as u64).div_ceil(g as u64);
+    let _ = field_width(abits as u32, wbits as u32, g);
+
+    ctr.charge(InstrClass::Bit, 2 * l.cin as u64);
+    ctr.charge(InstrClass::Alu, l.cin as u64);
+    let co = l.cout as u64;
+    ctr.charge(InstrClass::Load, co * ((l.cin * wbits as usize).div_ceil(32)) as u64);
+    ctr.charge(InstrClass::MulLong, co * n_groups);
+    ctr.charge(InstrClass::Bit, co * 2 * n_groups);
+    ctr.charge(InstrClass::Alu, co * (n_groups + 2));
+    ctr.charge(InstrClass::Store, co);
+}
+
+// ---------------------------------------------------------------------------
+// Baselines (mirror of ops::baselines::charge_conv)
+// ---------------------------------------------------------------------------
+
+fn unpack_bit_ops(method: Method, eff_bits: u8) -> u64 {
+    match (method, eff_bits) {
+        (Method::Simd, _) => 4,
+        (Method::TinyEngine, _) => 2,
+        (Method::CmixNn, 8) => 4,
+        (Method::CmixNn, 4) => 8,
+        (Method::CmixNn, 2) => 10,
+        (Method::WpcDdd, 8) => 4,
+        (Method::WpcDdd, 4) => 6,
+        (Method::WpcDdd, 2) => 8,
+        _ => 4,
+    }
+}
+
+fn loads_per_4macs(method: Method, wbits: u8, abits: u8) -> f64 {
+    match method {
+        Method::Naive => 8.0,
+        Method::Simd | Method::TinyEngine => 2.0,
+        Method::CmixNn | Method::WpcDdd => {
+            (4.0 * wbits as f64 / 32.0) + (4.0 * abits as f64 / 32.0)
+        }
+        _ => 2.0,
+    }
+}
+
+fn predict_baseline(l: &LayerSpec, method: Method, wbits: u8, abits: u8, ctr: &mut Counter) {
+    let macs = l.macs;
+    let outputs = l.out_elems() as u64;
+    let (we, ae) = method.effective_bits(wbits, abits);
+    match method {
+        Method::Naive => {
+            ctr.charge(InstrClass::Load, 2 * macs);
+            ctr.charge(InstrClass::Mul, macs);
+            ctr.charge(InstrClass::Alu, macs);
+            ctr.charge(InstrClass::Alu, 3 * outputs);
+            ctr.charge(InstrClass::BranchTaken, outputs);
+        }
+        Method::Simd | Method::TinyEngine | Method::CmixNn | Method::WpcDdd => {
+            let groups = macs.div_ceil(4);
+            ctr.charge(InstrClass::Simd, 2 * groups);
+            ctr.charge(
+                InstrClass::Load,
+                (groups as f64 * loads_per_4macs(method, we, ae)).ceil() as u64,
+            );
+            ctr.charge(InstrClass::Bit, groups * unpack_bit_ops(method, we.max(ae)));
+            if method == Method::WpcDdd {
+                ctr.charge(InstrClass::Load, macs.div_ceil(8));
+            }
+            if matches!(method, Method::CmixNn | Method::WpcDdd) {
+                ctr.charge(InstrClass::Mul, outputs);
+                ctr.charge(InstrClass::Alu, outputs);
+            }
+            let (alu_per_out, branch_per_out) = match method {
+                Method::TinyEngine => (2u64, 1u64),
+                _ => (4, 4),
+            };
+            ctr.charge(InstrClass::Alu, alu_per_out * outputs);
+            ctr.charge(InstrClass::BranchTaken, (branch_per_out * outputs).div_ceil(4));
+        }
+        _ => unreachable!("SLBC predicted in predict_slbc"),
+    }
+    if l.kind == LayerKind::Dense {
+        ctr.charge(InstrClass::Store, outputs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_tiny;
+
+    #[test]
+    fn predictions_nonzero_for_all_methods() {
+        let m = vgg_tiny(10, 16);
+        for l in &m.layers {
+            for method in Method::ALL {
+                let p = predict_layer(l, method, 4, 4);
+                assert!(
+                    p.counter.instructions() > 0,
+                    "{} on {}",
+                    method.name(),
+                    l.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predict_model_is_layer_sum() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let whole = predict_model(&m, Method::Slbc, &cfg);
+        let mut acc = Counter::new();
+        for l in &m.layers {
+            acc.merge(&predict_layer(l, Method::Slbc, 4, 4).counter);
+        }
+        assert_eq!(whole.counter, acc);
+    }
+
+    #[test]
+    fn naive_prediction_closed_form() {
+        let m = vgg_tiny(10, 16);
+        let l = &m.layers[0];
+        let p = predict_layer(l, Method::Naive, 8, 8);
+        let outputs = l.out_elems() as u64;
+        assert_eq!(p.counter.mul, l.macs);
+        assert_eq!(p.counter.load, 2 * l.macs);
+        assert_eq!(p.counter.alu, l.macs + 3 * outputs);
+    }
+}

@@ -1,0 +1,134 @@
+//! Layer-1 (Pallas/TPU) resource estimation — DESIGN.md §Hardware-
+//! Adaptation.
+//!
+//! The Pallas kernels run under `interpret=True` on CPU (the CPU PJRT
+//! plugin cannot execute Mosaic custom-calls), so real-TPU efficiency is
+//! *estimated* from the BlockSpec geometry instead of measured: VMEM
+//! footprint per grid step, arithmetic intensity, and the packed-
+//! multiplier utilization that plays the role the paper gives SIMD lanes.
+//! EXPERIMENTS.md §Perf quotes these numbers.
+
+use crate::models::{LayerSpec, ModelDesc};
+use crate::quant::BitConfig;
+
+/// TPU-generation parameters used for the estimate (v4-like defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct TpuParams {
+    /// VMEM per core, bytes.
+    pub vmem_bytes: usize,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Peak int multiply-accumulate rate of the scalar/vector unit used
+    /// by the packed path, MACs/s.
+    pub peak_macs: f64,
+}
+
+impl Default for TpuParams {
+    fn default() -> Self {
+        TpuParams {
+            vmem_bytes: 16 * 1024 * 1024,
+            hbm_bw: 1.2e12,
+            peak_macs: 2.75e14 / 2.0, // bf16 MXU peak / 2 for int path
+        }
+    }
+}
+
+/// Resource estimate of one layer's Pallas execution.
+#[derive(Debug, Clone)]
+pub struct LayerEstimate {
+    pub name: String,
+    /// Bytes resident in VMEM for one grid step (x tile + w tile + out).
+    pub vmem_per_step: usize,
+    /// Arithmetic intensity (MACs per HBM byte moved).
+    pub intensity: f64,
+    /// Effective MACs per wide multiply after packing.
+    pub packed_macs_per_mul: u32,
+    /// Roofline-limited efficiency in [0,1]: min(1, intensity/critical).
+    pub efficiency: f64,
+}
+
+/// Estimate one layer with the SLBC packing plan at `(wbits, abits)`.
+pub fn estimate_layer(l: &LayerSpec, wbits: u8, abits: u8, tpu: &TpuParams) -> LayerEstimate {
+    // Tile: one output row of all channels + the k input rows feeding it
+    // (the BlockSpec used by python/compile/kernels/slbc.py), packed
+    // sub-byte storage.
+    let in_tile = l.k * l.in_w * l.cin * abits as usize / 8 + 1;
+    let w_tile = l.k * l.k * l.cin * l.cout * wbits as usize / 8 + 1;
+    let out_tile = l.out_w * l.cout * 4;
+    let vmem = in_tile + w_tile + out_tile;
+
+    // HBM traffic per full layer: inputs once, weights once, outputs once.
+    let bytes = l.in_elems() * abits as usize / 8
+        + l.w_size * wbits as usize / 8
+        + l.out_elems() * 4;
+    let intensity = l.macs as f64 / bytes.max(1) as f64;
+
+    let plan = crate::simd::adaptive::best_plan(abits as u32, wbits as u32, l.k as u32);
+    let packed = plan.map(|p| p.macs_per_instr).unwrap_or(1);
+
+    // Critical intensity: MACs/byte where compute == memory time.
+    let critical = tpu.peak_macs / tpu.hbm_bw;
+    let efficiency = (intensity / critical).min(1.0);
+
+    LayerEstimate {
+        name: l.name.clone(),
+        vmem_per_step: vmem,
+        intensity,
+        packed_macs_per_mul: packed,
+        efficiency,
+    }
+}
+
+/// Whole-model estimate under a bit configuration.
+pub fn estimate_model(model: &ModelDesc, cfg: &BitConfig, tpu: &TpuParams) -> Vec<LayerEstimate> {
+    model
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| estimate_layer(l, cfg.wbits[i], cfg.abits[i], tpu))
+        .collect()
+}
+
+/// True iff every layer's working set fits VMEM (the Pallas BlockSpec
+/// feasibility condition).
+pub fn fits_vmem(estimates: &[LayerEstimate], tpu: &TpuParams) -> bool {
+    estimates.iter().all(|e| e.vmem_per_step <= tpu.vmem_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_tiny;
+
+    #[test]
+    fn tiles_fit_vmem_easily() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let est = estimate_model(&m, &cfg, &TpuParams::default());
+        assert!(fits_vmem(&est, &TpuParams::default()));
+        for e in &est {
+            assert!(e.vmem_per_step < 512 * 1024, "{}: {}", e.name, e.vmem_per_step);
+        }
+    }
+
+    #[test]
+    fn lower_bits_raise_intensity() {
+        // Packing the operands shrinks HBM traffic -> higher MACs/byte.
+        let m = vgg_tiny(10, 16);
+        let l = &m.layers[2];
+        let tpu = TpuParams::default();
+        let e2 = estimate_layer(l, 2, 2, &tpu);
+        let e8 = estimate_layer(l, 8, 8, &tpu);
+        assert!(e2.intensity > e8.intensity);
+        assert!(e2.packed_macs_per_mul > e8.packed_macs_per_mul);
+    }
+
+    #[test]
+    fn efficiency_bounded() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        for e in estimate_model(&m, &cfg, &TpuParams::default()) {
+            assert!((0.0..=1.0).contains(&e.efficiency), "{}", e.name);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Quantization machinery: per-layer bit configurations, symmetric weight
+//! quantization and unsigned activation quantization — the integer twin of
+//! the Layer-1 `fake_quant` kernels (same max-abs dynamic scaling), used
+//! when deploying a trained flat parameter vector onto the MCU engine.
+
+use crate::models::ModelDesc;
+
+/// Per-layer weight/activation bitwidths, the NAS search result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitConfig {
+    pub wbits: Vec<u8>,
+    pub abits: Vec<u8>,
+}
+
+impl BitConfig {
+    /// Uniform configuration (e.g. the TinyEngine int8 baseline).
+    pub fn uniform(num_layers: usize, bits: u8) -> Self {
+        BitConfig {
+            wbits: vec![bits; num_layers],
+            abits: vec![bits; num_layers],
+        }
+    }
+
+    /// Clamp every layer into CMix-NN's supported set {2,4,8} (rounding
+    /// up), for baseline comparisons.
+    pub fn to_cmixnn_supported(&self) -> BitConfig {
+        let up = |b: u8| -> u8 {
+            if b <= 2 {
+                2
+            } else if b <= 4 {
+                4
+            } else {
+                8
+            }
+        };
+        BitConfig {
+            wbits: self.wbits.iter().map(|&b| up(b)).collect(),
+            abits: self.abits.iter().map(|&b| up(b)).collect(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.wbits.len()
+    }
+
+    /// Mean weight bitwidth (Fig. 8's y-axis).
+    pub fn avg_wbits(&self) -> f64 {
+        self.wbits.iter().map(|&b| b as f64).sum::<f64>() / self.wbits.len() as f64
+    }
+
+    pub fn avg_abits(&self) -> f64 {
+        self.abits.iter().map(|&b| b as f64).sum::<f64>() / self.abits.len() as f64
+    }
+
+    /// Bits as f32 tensors for the HLO programs.
+    pub fn wbits_f32(&self) -> Vec<f32> {
+        self.wbits.iter().map(|&b| b as f32).collect()
+    }
+
+    pub fn abits_f32(&self) -> Vec<f32> {
+        self.abits.iter().map(|&b| b as f32).collect()
+    }
+}
+
+/// A quantized weight tensor: integer values in `[-2^(b-1)+1, 2^(b-1)-1]`
+/// with a per-tensor scale (symmetric, zero-point-free).
+#[derive(Debug, Clone)]
+pub struct QWeights {
+    pub data: Vec<i32>,
+    pub bits: u8,
+    pub scale: f32,
+}
+
+/// A quantized activation tensor: unsigned `[0, 2^b - 1]` with scale.
+#[derive(Debug, Clone)]
+pub struct QActs {
+    pub data: Vec<u32>,
+    pub bits: u8,
+    pub scale: f32,
+}
+
+/// Symmetric signed quantization with dynamic max-abs scale (mirror of
+/// `kernels/quant.py::fake_quant_signed`).
+pub fn quantize_weights(w: &[f32], bits: u8) -> QWeights {
+    let n = ((1i64 << (bits - 1)) - 1) as f32;
+    let amax = w.iter().fold(1e-8f32, |m, &v| m.max(v.abs()));
+    let scale = amax / n;
+    let data = w
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-n, n) as i32)
+        .collect();
+    QWeights { data, bits, scale }
+}
+
+/// Unsigned activation quantization (mirror of `fake_quant_unsigned`).
+pub fn quantize_acts(x: &[f32], bits: u8) -> QActs {
+    let n = ((1u64 << bits) - 1) as f32;
+    let amax = x.iter().fold(1e-8f32, |m, &v| m.max(v.max(0.0)));
+    let scale = amax / n;
+    let data = x
+        .iter()
+        .map(|&v| (v.max(0.0) / scale).round().clamp(0.0, n) as u32)
+        .collect();
+    QActs { data, bits, scale }
+}
+
+/// Dequantize helper (tests / debugging).
+pub fn dequantize_weights(q: &QWeights) -> Vec<f32> {
+    q.data.iter().map(|&v| v as f32 * q.scale).collect()
+}
+
+/// Extract and quantize every layer's weights from the flat f32 parameter
+/// vector (the QAT training state) according to a [`BitConfig`].
+pub fn quantize_model(
+    model: &ModelDesc,
+    flat: &[f32],
+    cfg: &BitConfig,
+) -> Vec<(QWeights, Vec<f32>)> {
+    assert_eq!(cfg.num_layers(), model.layers.len());
+    model
+        .layers
+        .iter()
+        .zip(&cfg.wbits)
+        .map(|(l, &b)| {
+            let w = &flat[l.w_offset..l.w_offset + l.w_size];
+            let bias = flat[l.b_offset..l.b_offset + l.b_size].to_vec();
+            (quantize_weights(w, b), bias)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::check;
+
+    #[test]
+    fn uniform_config() {
+        let c = BitConfig::uniform(4, 8);
+        assert_eq!(c.wbits, vec![8, 8, 8, 8]);
+        assert_eq!(c.avg_wbits(), 8.0);
+    }
+
+    #[test]
+    fn cmixnn_rounding() {
+        let c = BitConfig {
+            wbits: vec![2, 3, 5, 8],
+            abits: vec![4, 6, 7, 2],
+        };
+        let r = c.to_cmixnn_supported();
+        assert_eq!(r.wbits, vec![2, 4, 8, 8]);
+        assert_eq!(r.abits, vec![4, 8, 8, 2]);
+    }
+
+    #[test]
+    fn weight_quant_range() {
+        check("weights quantize within signed range", 100, |rng| {
+            let bits = rng.range(2, 9) as u8;
+            let n = rng.range(1, 200);
+            let mut r = rng.fork(5);
+            let w: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let q = quantize_weights(&w, bits);
+            let lim = (1i32 << (bits - 1)) - 1;
+            assert!(q.data.iter().all(|&v| v >= -lim && v <= lim));
+        });
+    }
+
+    #[test]
+    fn act_quant_unsigned_range() {
+        check("acts quantize within unsigned range", 100, |rng| {
+            let bits = rng.range(2, 9) as u8;
+            let n = rng.range(1, 200);
+            let mut r = rng.fork(6);
+            let x: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let q = quantize_acts(&x, bits);
+            let lim = (1u64 << bits) - 1;
+            assert!(q.data.iter().all(|&v| (v as u64) <= lim));
+        });
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let mut r = Rng::new(3);
+        let w: Vec<f32> = (0..512).map(|_| r.normal()).collect();
+        let q = quantize_weights(&w, 8);
+        let back = dequantize_weights(&q);
+        for (a, b) in w.iter().zip(&back) {
+            assert!((a - b).abs() <= q.scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn more_bits_smaller_error() {
+        let mut r = Rng::new(4);
+        let w: Vec<f32> = (0..2048).map(|_| r.normal()).collect();
+        let mut errs = Vec::new();
+        for b in [2u8, 4, 8] {
+            let q = quantize_weights(&w, b);
+            let back = dequantize_weights(&q);
+            let mse: f32 = w
+                .iter()
+                .zip(&back)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / w.len() as f32;
+            errs.push(mse);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2]);
+    }
+}

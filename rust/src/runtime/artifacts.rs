@@ -1,0 +1,216 @@
+//! Artifact store: `artifacts/manifest.json` + HLO programs + init params.
+//!
+//! The manifest is written by `python/compile/aot.py` and is the single
+//! source of truth for shapes, flat-parameter offsets and batch sizes; the
+//! Rust model zoo ([`crate::models`]) is cross-checked against it in the
+//! integration tests so the two layers cannot drift silently.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::models::{self, ModelDesc};
+use crate::util::json::Json;
+
+use super::{Program, Runtime};
+
+/// Search-space bitwidth options (must equal `model.OPTIONS` on the JAX
+/// side; verified when the manifest is opened).
+pub const OPTIONS: [u8; 7] = [2, 3, 4, 5, 6, 7, 8];
+
+/// Parsed manifest + artifact directory handle.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    manifest: Json,
+    /// Bitwidth options shared with Layer 2.
+    pub options: Vec<u8>,
+    /// SGD momentum baked into the train-step programs.
+    pub momentum: f64,
+}
+
+impl ArtifactStore {
+    /// Open `dir` (typically `artifacts/`) and parse its manifest.
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let src = fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&src).context("parsing manifest.json")?;
+        let options: Vec<u8> = manifest
+            .req("options")
+            .ok()
+            .and_then(|o| o.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).map(|x| x as u8).collect())
+            .unwrap_or_else(|| OPTIONS.to_vec());
+        anyhow::ensure!(
+            options == OPTIONS,
+            "manifest options {:?} differ from the Rust search space {:?}",
+            options,
+            OPTIONS
+        );
+        let momentum = manifest
+            .get("momentum")
+            .and_then(|m| m.as_f64())
+            .unwrap_or(0.9);
+        Ok(ArtifactStore {
+            dir,
+            manifest,
+            options,
+            momentum,
+        })
+    }
+
+    /// Names of the backbones recorded in the manifest.
+    pub fn backbone_names(&self) -> Vec<String> {
+        match self.manifest.get("backbones") {
+            Some(Json::Obj(map)) => map.iter().map(|(k, _)| k.clone()).collect(),
+            _ => vec![],
+        }
+    }
+
+    /// Load the manifest entry (geometry + artifact paths) of one backbone.
+    pub fn backbone(&self, name: &str) -> Result<BackboneArtifacts> {
+        let entry = self
+            .manifest
+            .req("backbones")
+            .and_then(|b| b.req(name))
+            .with_context(|| format!("backbone {name} not in manifest"))?;
+        let model = models::from_manifest(name, entry)
+            .with_context(|| format!("parsing geometry of {name}"))?;
+        let arts = entry.req("artifacts").context("artifacts entry")?;
+        let art = |key: &str| -> Result<PathBuf> {
+            let rel = arts
+                .req(key)
+                .ok()
+                .and_then(|a| a.as_str().map(str::to_string))
+                .with_context(|| format!("artifact {key} missing for {name}"))?;
+            Ok(self.dir.join(rel))
+        };
+        let init_rel = entry
+            .req("init")
+            .ok()
+            .and_then(|a| a.as_str().map(str::to_string))
+            .with_context(|| format!("init missing for {name}"))?;
+        let get_batch = |key: &str, default: usize| {
+            entry.get(key).and_then(|b| b.as_usize()).unwrap_or(default)
+        };
+        Ok(BackboneArtifacts {
+            model,
+            qat_step: art("qat_step")?,
+            eval: art("eval")?,
+            infer: art("infer")?,
+            supernet_step: art("supernet_step")?,
+            init: self.dir.join(init_rel),
+            train_batch: get_batch("train_batch", 64),
+            eval_batch: get_batch("eval_batch", 256),
+            infer_batch: get_batch("infer_batch", 1),
+        })
+    }
+
+    /// Metadata of the standalone Layer-1 SLBC demo kernel.
+    pub fn slbc_demo(&self) -> Result<SlbcDemoArtifact> {
+        let e = self.manifest.req("slbc_demo").context("slbc_demo entry")?;
+        let get = |k: &str| -> Result<usize> {
+            e.req(k)
+                .ok()
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("slbc_demo.{k}"))
+        };
+        let rel = e
+            .req("artifact")
+            .ok()
+            .and_then(|a| a.as_str().map(str::to_string))
+            .context("slbc_demo.artifact")?;
+        Ok(SlbcDemoArtifact {
+            path: self.dir.join(rel),
+            n: get("n")?,
+            k: get("k")?,
+            sx_bits: get("sx_bits")? as u32,
+            sk_bits: get("sk_bits")? as u32,
+            group_size: get("group_size")? as u32,
+            field_width: get("field_width")? as u32,
+        })
+    }
+}
+
+/// One backbone's artifact bundle (paths + geometry + batch sizes).
+pub struct BackboneArtifacts {
+    pub model: ModelDesc,
+    pub qat_step: PathBuf,
+    pub eval: PathBuf,
+    pub infer: PathBuf,
+    pub supernet_step: PathBuf,
+    pub init: PathBuf,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub infer_batch: usize,
+}
+
+impl BackboneArtifacts {
+    /// Load the He-initialised flat f32 parameter vector (`*_init.bin`).
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let bytes = fs::read(&self.init)
+            .with_context(|| format!("reading {}", self.init.display()))?;
+        anyhow::ensure!(
+            bytes.len() == self.model.param_count * 4,
+            "{}: expected {} f32 ({} bytes), file has {} bytes",
+            self.init.display(),
+            self.model.param_count,
+            self.model.param_count * 4,
+            bytes.len()
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Compile the four programs of this backbone on `rt`.
+    pub fn load_programs(&self, rt: &Runtime) -> Result<BackbonePrograms> {
+        Ok(BackbonePrograms {
+            qat_step: rt.load_program(&self.qat_step)?,
+            eval: rt.load_program(&self.eval)?,
+            infer: rt.load_program(&self.infer)?,
+            supernet_step: rt.load_program(&self.supernet_step)?,
+        })
+    }
+}
+
+/// The compiled programs of one backbone.
+pub struct BackbonePrograms {
+    pub qat_step: Program,
+    pub eval: Program,
+    pub infer: Program,
+    pub supernet_step: Program,
+}
+
+/// Manifest entry for the standalone SLBC kernel artifact.
+pub struct SlbcDemoArtifact {
+    pub path: PathBuf,
+    pub n: usize,
+    pub k: usize,
+    pub sx_bits: u32,
+    pub sk_bits: u32,
+    pub group_size: u32,
+    pub field_width: u32,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full manifest round-trips are integration tests (need artifacts/);
+    // here we only check option invariants.
+
+    #[test]
+    fn options_match_quant_range() {
+        assert_eq!(OPTIONS.first(), Some(&2));
+        assert_eq!(OPTIONS.last(), Some(&8));
+        assert!(OPTIONS.windows(2).all(|w| w[1] == w[0] + 1));
+    }
+}

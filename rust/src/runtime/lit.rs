@@ -1,0 +1,89 @@
+//! Literal construction / extraction helpers around the `xla` crate.
+//!
+//! The Layer-2 programs exchange only four tensor kinds with Rust: f32
+//! arrays (params, images, bitwidths, cost tables, hyper-parameters), i32
+//! labels, i64 packed-SLBC carriers, and f32 scalars. These helpers keep
+//! shape bookkeeping in one place and out of the coordinator loops.
+
+use anyhow::{Context, Result};
+
+/// f32 vector literal of shape `[len]`.
+pub fn f32_vec(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 literal reshaped to `shape` (row-major data).
+pub fn f32_tensor(v: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    anyhow::ensure!(
+        n as usize == v.len(),
+        "shape {:?} wants {} elements, got {}",
+        shape,
+        n,
+        v.len()
+    );
+    xla::Literal::vec1(v)
+        .reshape(shape)
+        .context("reshaping f32 literal")
+}
+
+/// i32 vector literal of shape `[len]`.
+pub fn i32_vec(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// i64 vector literal of shape `[len]` (SLBC packed carriers).
+pub fn i64_vec(v: &[i64]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 scalar literal (hyper-parameters: lr, lambda, ...).
+pub fn f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract a `Vec<f32>` from a literal.
+pub fn to_f32_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().context("literal -> Vec<f32>")
+}
+
+/// Extract a `Vec<i64>` from a literal.
+pub fn to_i64_vec(l: &xla::Literal) -> Result<Vec<i64>> {
+    l.to_vec::<i64>().context("literal -> Vec<i64>")
+}
+
+/// Extract the single f32 element of a scalar literal.
+pub fn to_f32_scalar(l: &xla::Literal) -> Result<f32> {
+    let v = to_f32_vec(l)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = f32_vec(&[1.0, 2.5, -3.0]);
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.5, -3.0]);
+    }
+
+    #[test]
+    fn tensor_shape_checked() {
+        assert!(f32_tensor(&[0.0; 6], &[2, 3]).is_ok());
+        assert!(f32_tensor(&[0.0; 5], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = f32_scalar(0.125);
+        assert_eq!(to_f32_scalar(&l).unwrap(), 0.125);
+    }
+
+    #[test]
+    fn i64_roundtrip() {
+        let l = i64_vec(&[-1, 0, 1 << 40]);
+        assert_eq!(to_i64_vec(&l).unwrap(), vec![-1, 0, 1 << 40]);
+    }
+}

@@ -1,0 +1,141 @@
+//! PJRT runtime: load and execute the AOT artifacts from `artifacts/`.
+//!
+//! This is the only place the crate touches XLA. The interchange format is
+//! HLO **text** (`*.hlo.txt`), not a serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which the bundled
+//! xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+//! reassigns ids and round-trips cleanly.
+//!
+//! All Layer-2 programs were lowered with `return_tuple=True`, so every
+//! execution returns ONE tuple literal which [`Program::run`] decomposes
+//! into its elements.
+//!
+//! Python never runs at this layer: once `make artifacts` has produced the
+//! HLO text + `manifest.json` + `*_init.bin`, the Rust binary is fully
+//! self-contained.
+
+pub mod artifacts;
+pub mod lit;
+
+pub use artifacts::{ArtifactStore, BackboneArtifacts, SlbcDemoArtifact};
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus compile bookkeeping.
+///
+/// Compilation happens once per program ([`Runtime::load_program`]); the
+/// compiled executable is then reused for every step of the search / QAT /
+/// eval loops, so nothing on the hot path re-enters the compiler.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform string, e.g. `"cpu"` (useful for logs / sanity checks).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO text file and compile it into an executable [`Program`].
+    pub fn load_program<P: AsRef<Path>>(&self, path: P) -> Result<Program> {
+        let path = path.as_ref();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "program".into());
+        Ok(Program {
+            exe,
+            name,
+            path: path.to_path_buf(),
+            compile_time_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// One compiled XLA program (e.g. `vgg_tiny_qat_step`).
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact stem, e.g. `vgg_tiny_qat_step.hlo`.
+    pub name: String,
+    /// Source artifact path.
+    pub path: PathBuf,
+    /// Wall-clock seconds spent in `client.compile` (reported by the CLI).
+    pub compile_time_s: f64,
+}
+
+impl Program {
+    /// Execute with literal arguments; decompose the output tuple.
+    ///
+    /// The lowered programs take/return plain arrays; sending literals keeps
+    /// the FFI surface trivial. Buffer copies are negligible next to the
+    /// conv math for our shapes (measured in EXPERIMENTS.md §Perf).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        out.to_tuple()
+            .with_context(|| format!("untupling result of {}", self.name))
+    }
+
+    /// Execute and return exactly `n` outputs (arity check included).
+    pub fn run_n<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+        n: usize,
+    ) -> Result<Vec<xla::Literal>> {
+        let outs = self.run(args)?;
+        anyhow::ensure!(
+            outs.len() == n,
+            "{}: expected {} outputs, got {}",
+            self.name,
+            n,
+            outs.len()
+        );
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime integration tests (they need `artifacts/`) live in
+    // `rust/tests/runtime_integration.rs`; unit tests here cover only the
+    // pure helpers.
+
+    #[test]
+    fn program_name_from_stem() {
+        let p = std::path::Path::new("/x/y/vgg_tiny_eval.hlo.txt");
+        let stem = p.file_stem().unwrap().to_string_lossy();
+        assert_eq!(stem, "vgg_tiny_eval.hlo");
+    }
+}

@@ -1,0 +1,23 @@
+//! SLBC packing mathematics (paper §IV).
+//!
+//! * [`poly`]     — the polynomial-multiplication identity (Eq. 3–7): pack,
+//!   wide-multiply, segment; bit-exact convolution on a u64 carrier.
+//! * [`packing`]  — SIMD-lane-granularity packing (Eq. 8–11): registers with
+//!   configurable lane sizes, per-lane products, cross-lane boundary
+//!   combination — the scheme the MCU operators replay.
+//! * [`reorder`]  — RP-SLBC (Thm. IV.1): the reordered element layout that
+//!   moves overlap from *adjacent lanes* to *corresponding lanes of adjacent
+//!   registers*, enabling local accumulation and cutting segmentation ops to
+//!   `1/(N·L)` of naïve SLBC.
+//! * [`adaptive`] — adaptive lane sizing (§IV.C): choose the lane
+//!   configuration maximizing effective MACs per instruction for each
+//!   convolution's bitwidth pair at compile time.
+
+pub mod adaptive;
+pub mod packing;
+pub mod poly;
+pub mod reorder;
+
+pub use adaptive::{best_plan, LanePlan};
+pub use packing::{LaneCfg, SimdConv};
+pub use poly::{conv1d_full_packed, field_width, group_size, PackSpec};

@@ -1,0 +1,329 @@
+//! Lane-granularity SIMD packing (paper Eq. 8–11, Alg. 1).
+//!
+//! On the Cortex-M7 the "SIMD register" is a 32-bit GPR viewed through the
+//! ARMv7E-M DSP extension as `N_l` lanes of `L_b` bits (2×16 or 4×8), and a
+//! 64-bit view exists through the `UMULL`/`UMLAL`-class long multiplies.
+//! SLBC packs `N_s` sub-byte signal elements *within each lane* and the
+//! whole kernel into every lane (Eq. 8/9); one SIMD multiply then yields,
+//! per lane, the packed convolution fields (Eq. 10). Segmentation (Eq. 11)
+//! must additionally stitch the boundary field of lane `l` to the first
+//! field of lane `l+1` — the overhead RP-SLBC's reordering removes.
+
+use super::poly::{field_width, PackSpec};
+
+/// A SIMD lane configuration of the 32-bit DSP register file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneCfg {
+    /// Bits per register (32 for GPR view, 64 for the long-multiply view).
+    pub register_bits: u32,
+    /// Bits per lane; must divide `register_bits`.
+    pub lane_bits: u32,
+}
+
+impl LaneCfg {
+    pub fn new(register_bits: u32, lane_bits: u32) -> Self {
+        assert!(register_bits % lane_bits == 0, "lanes must tile the register");
+        LaneCfg {
+            register_bits,
+            lane_bits,
+        }
+    }
+
+    /// Number of lanes `N_l`.
+    pub fn lanes(&self) -> u32 {
+        self.register_bits / self.lane_bits
+    }
+
+    /// All configurations the Cortex-M7 DSP view offers (§IV.C's search
+    /// space for adaptive packing).
+    pub fn all() -> Vec<LaneCfg> {
+        vec![
+            LaneCfg::new(32, 8),
+            LaneCfg::new(32, 16),
+            LaneCfg::new(32, 32),
+            LaneCfg::new(64, 64), // UMULL/UMLAL long-multiply path
+        ]
+    }
+}
+
+/// A lane-granularity SLBC convolution plan: how many signal elements fit a
+/// lane, how lanes combine, and the bookkeeping for Eq. 11 segmentation.
+#[derive(Debug, Clone, Copy)]
+pub struct SimdConv {
+    pub cfg: LaneCfg,
+    /// Per-lane packing of the signal (Ns elements) against the kernel.
+    pub spec: PackSpec,
+}
+
+impl SimdConv {
+    /// Build a plan if the kernel fits a lane at these bitwidths.
+    pub fn plan(cfg: LaneCfg, sx_bits: u32, sk_bits: u32, k_taps: u32) -> Option<SimdConv> {
+        let spec = PackSpec::new(sx_bits, sk_bits, k_taps, cfg.lane_bits)?;
+        if spec.group == 0 {
+            return None;
+        }
+        Some(SimdConv { cfg, spec })
+    }
+
+    /// Build a plan with an explicit field stride (see
+    /// [`PackSpec::with_field`] for the accumulation-depth trade-off).
+    pub fn plan_with_field(
+        cfg: LaneCfg,
+        sx_bits: u32,
+        sk_bits: u32,
+        k_taps: u32,
+        field: u32,
+    ) -> Option<SimdConv> {
+        let spec = PackSpec::with_field(sx_bits, sk_bits, k_taps, field, cfg.lane_bits)?;
+        if spec.group == 0 {
+            return None;
+        }
+        Some(SimdConv { cfg, spec })
+    }
+
+    /// Signal elements consumed per SIMD multiply: `N_l · N_s`.
+    pub fn elements_per_instr(&self) -> u32 {
+        self.cfg.lanes() * self.spec.group
+    }
+
+    /// Effective MACs per SIMD multiply: `N_l · N_s · K` (Fig. 6 quantity).
+    pub fn macs_per_instr(&self) -> u32 {
+        self.elements_per_instr() * self.spec.k_taps
+    }
+
+    /// Pack a signal window into one register (Eq. 8): lane `l` holds
+    /// elements `x[l·Ns .. (l+1)·Ns]` in ascending fields.
+    pub fn pack_signal(&self, x: &[u64]) -> u64 {
+        let ns = self.spec.group as usize;
+        let mut reg = 0u64;
+        for l in 0..self.cfg.lanes() as usize {
+            let base = l * ns;
+            if base >= x.len() {
+                break;
+            }
+            let hi = (base + ns).min(x.len());
+            let lane = self.spec.pack_signal(&x[base..hi]);
+            reg |= lane << (l as u32 * self.cfg.lane_bits);
+        }
+        reg
+    }
+
+    /// Pack the kernel broadcast into every lane (Eq. 9).
+    pub fn pack_kernel(&self, k: &[u64]) -> u64 {
+        let lane = self.spec.pack_kernel(k);
+        let mut reg = 0u64;
+        for l in 0..self.cfg.lanes() {
+            reg |= lane << (l * self.cfg.lane_bits);
+        }
+        reg
+    }
+
+    /// The SIMD multiplication of Eq. 10: independent per-lane products,
+    /// each truncated to the lane width (hardware lane semantics).
+    pub fn simd_mul(&self, vs: u64, vk: u64) -> u64 {
+        let lanes = self.cfg.lanes();
+        let lb = self.cfg.lane_bits;
+        let mask = if lb >= 64 { u64::MAX } else { (1u64 << lb) - 1 };
+        let mut out = 0u64;
+        for l in 0..lanes {
+            let a = (vs >> (l * lb)) & mask;
+            let b = (vk >> (l * lb)) & mask;
+            out |= (a.wrapping_mul(b) & mask) << (l * lb);
+        }
+        out
+    }
+
+    /// Segmentation (Eq. 11): extract the convolution contributions of one
+    /// product register and accumulate them into `y` at the window offset.
+    ///
+    /// Lane `l` covers global outputs `[off + l·Ns, off + l·Ns + Ns+K-1)`;
+    /// the top `K-1` fields of lane `l` overlap the first fields of lane
+    /// `l+1` — both are accumulated, which is exactly how the boundary
+    /// elements "jointly form one complete convolution element".
+    pub fn segment_into(&self, product: u64, off: usize, y: &mut [u64]) {
+        let lanes = self.cfg.lanes() as usize;
+        let lb = self.cfg.lane_bits;
+        let ns = self.spec.group as usize;
+        let lane_mask = if lb >= 64 { u64::MAX } else { (1u64 << lb) - 1 };
+        for l in 0..lanes {
+            let lane = (product >> (l as u32 * lb)) & lane_mask;
+            for (f, v) in self.spec.segment(lane).into_iter().enumerate() {
+                let idx = off + l * ns + f;
+                if idx < y.len() {
+                    y[idx] += v;
+                }
+            }
+        }
+    }
+
+    /// Full 1-D convolution through the lane-packed pipeline (Alg. 1):
+    /// pack → SIMD multiply → segment, window by window. Bit-exact with
+    /// direct convolution whenever the plan is valid.
+    pub fn conv1d_full(&self, x: &[u64], k: &[u64]) -> Vec<u64> {
+        assert_eq!(k.len() as u32, self.spec.k_taps);
+        let out_len = x.len() + k.len() - 1;
+        let mut y = vec![0u64; out_len];
+        let vk = self.pack_kernel(k);
+        let step = self.elements_per_instr() as usize;
+        let mut i = 0usize;
+        while i < x.len() {
+            let hi = (i + step).min(x.len());
+            let vs = self.pack_signal(&x[i..hi]);
+            let vp = self.simd_mul(vs, vk);
+            self.segment_into(vp, i, &mut y);
+            i += step;
+        }
+        y
+    }
+
+    /// Pre-pack a signal row into its per-window registers.
+    ///
+    /// Packing depends only on the signal, not the filter, so the result
+    /// is reused across all output channels (the `PACK_REUSE`
+    /// amortization the cost model assumes). Appends into `out`.
+    pub fn pack_windows_into(&self, x: &[u64], out: &mut Vec<u64>) {
+        let step = self.elements_per_instr() as usize;
+        let mut i = 0usize;
+        while i < x.len() {
+            let hi = (i + step).min(x.len());
+            out.push(self.pack_signal(&x[i..hi]));
+            i += step;
+        }
+    }
+
+    /// Segmentation variant accumulating into a signed buffer (the layer
+    /// accumulator) — bit-identical to [`Self::segment_into`].
+    #[inline]
+    pub fn segment_into_i64(&self, product: u64, off: usize, y: &mut [i64]) {
+        let lanes = self.cfg.lanes() as usize;
+        let lb = self.cfg.lane_bits;
+        let ns = self.spec.group as usize;
+        let lane_mask = if lb >= 64 { u64::MAX } else { (1u64 << lb) - 1 };
+        for l in 0..lanes {
+            let lane = (product >> (l as u32 * lb)) & lane_mask;
+            self.spec.segment_each(lane, |f, v| {
+                let idx = off + l * ns + f;
+                if idx < y.len() {
+                    y[idx] += v as i64;
+                }
+            });
+        }
+    }
+
+    /// Multiply prepacked windows against a prepacked kernel register and
+    /// accumulate the segmented fields into `y` (Alg. 1 with the packing
+    /// hoisted out) — the allocation-free hot path of `ops::conv_slbc`.
+    #[inline]
+    pub fn conv1d_prepacked_into(&self, windows: &[u64], vk: u64, y: &mut [i64]) {
+        let step = self.elements_per_instr() as usize;
+        for (wi, &vs) in windows.iter().enumerate() {
+            let vp = self.simd_mul(vs, vk);
+            self.segment_into_i64(vp, wi * step, y);
+        }
+    }
+
+    /// Count of segmentation bit-operations per SIMD multiply in naïve
+    /// SLBC: every field of every lane needs a shift+mask, and lane
+    /// boundaries need an extra cross-lane add (Alg. 1's `vshr`/`vand`/
+    /// `vget` sequence).
+    pub fn seg_ops_per_instr(&self) -> u32 {
+        let fields = self.spec.group + self.spec.k_taps - 1;
+        // shift + and per field per lane, plus the cross-lane boundary fix.
+        self.cfg.lanes() * fields * 2 + (self.cfg.lanes() - 1)
+    }
+
+    /// Packing bit-operations per SIMD multiply (shift+or per element).
+    pub fn pack_ops_per_instr(&self) -> u32 {
+        self.elements_per_instr() * 2
+    }
+}
+
+/// Check that a lane can hold the full kernel at the given widths — the
+/// condition under which SLBC degenerates gracefully (paper assumes
+/// `N_k == k`, i.e. whole kernel per lane).
+pub fn kernel_fits_lane(cfg: LaneCfg, sx_bits: u32, sk_bits: u32, k_taps: u32) -> bool {
+    field_width(sx_bits, sk_bits, k_taps) * k_taps <= cfg.lane_bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::poly::conv1d_full_direct;
+    use crate::util::prop::check;
+
+    #[test]
+    fn lane_cfg_lanes() {
+        assert_eq!(LaneCfg::new(32, 8).lanes(), 4);
+        assert_eq!(LaneCfg::new(32, 16).lanes(), 2);
+        assert_eq!(LaneCfg::new(32, 32).lanes(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lane_cfg_must_tile() {
+        LaneCfg::new(32, 12);
+    }
+
+    #[test]
+    fn plan_2bit_in_16bit_lanes() {
+        // 2b×2b, K=2: S = 2+2+1 = 5; 16-bit lane → 3 fields → Ns = 2.
+        let plan = SimdConv::plan(LaneCfg::new(32, 16), 2, 2, 2).unwrap();
+        assert_eq!(plan.spec.group, 2);
+        assert_eq!(plan.elements_per_instr(), 4);
+        assert_eq!(plan.macs_per_instr(), 8);
+    }
+
+    #[test]
+    fn plan_rejects_oversize_kernel() {
+        assert!(SimdConv::plan(LaneCfg::new(32, 8), 4, 4, 3).is_none());
+    }
+
+    #[test]
+    fn lane_conv_matches_direct_fixed() {
+        let plan = SimdConv::plan(LaneCfg::new(32, 16), 2, 2, 2).unwrap();
+        let x: Vec<u64> = vec![1, 3, 2, 0, 3, 3, 1, 2, 2, 1, 0, 3];
+        let k: Vec<u64> = vec![2, 3];
+        assert_eq!(plan.conv1d_full(&x, &k), conv1d_full_direct(&x, &k));
+    }
+
+    #[test]
+    fn lane_conv_matches_direct_property() {
+        check("lane-packed conv == direct", 300, |rng| {
+            let cfgs = LaneCfg::all();
+            let cfg = cfgs[rng.range(0, cfgs.len())];
+            let sx = rng.range(1, 9) as u32;
+            let sk = rng.range(1, 9) as u32;
+            let kt = rng.range(1, 6) as u32;
+            let plan = match SimdConv::plan(cfg, sx, sk, kt) {
+                Some(p) => p,
+                None => return,
+            };
+            let n = rng.range(1, 64);
+            let mut r = rng.fork(3);
+            let x: Vec<u64> = (0..n).map(|_| r.below(1 << sx)).collect();
+            let k: Vec<u64> = (0..kt).map(|_| r.below(1 << sk)).collect();
+            assert_eq!(plan.conv1d_full(&x, &k), conv1d_full_direct(&x, &k));
+        });
+    }
+
+    #[test]
+    fn simd_mul_truncates_within_lane() {
+        let plan = SimdConv::plan(LaneCfg::new(32, 16), 2, 2, 2).unwrap();
+        // 0xFFFF * 0xFFFF truncated to 16 bits = 0x0001 per lane.
+        let v = plan.simd_mul(0xFFFF_FFFF, 0xFFFF_FFFF);
+        assert_eq!(v, 0x0001_0001);
+    }
+
+    #[test]
+    fn seg_ops_scale_with_lanes_and_fields() {
+        let p16 = SimdConv::plan(LaneCfg::new(32, 16), 2, 2, 2).unwrap();
+        let p32 = SimdConv::plan(LaneCfg::new(32, 32), 2, 2, 2).unwrap();
+        assert!(p16.seg_ops_per_instr() > p32.seg_ops_per_instr());
+    }
+
+    #[test]
+    fn kernel_fits_lane_check() {
+        assert!(kernel_fits_lane(LaneCfg::new(32, 16), 2, 2, 2));
+        assert!(!kernel_fits_lane(LaneCfg::new(32, 8), 8, 8, 3));
+    }
+}

@@ -1,0 +1,377 @@
+//! The polynomial-multiplication packing identity (paper Eq. 3–7).
+//!
+//! For an `sx`-bit sequence `s` and an `sk`-bit kernel `k`:
+//!
+//! ```text
+//! R1 = Σ_i s[i]·2^(i·S)      (Eq. 3, packed signal)
+//! R2 = Σ_j k[j]·2^(j·S)      (Eq. 4, packed kernel)
+//! P  = R1 × R2 = Σ_n y[n]·2^(n·S)   with   y = conv_full(s, k)   (Eq. 5/7)
+//! ```
+//!
+//! provided each field of width `S` can hold the worst-case partial sum —
+//! the *guard-bit* condition `S ≥ sx + sk + ceil(log2(min(G, K)))`.
+//! One wide multiply therefore performs `G·K` MACs, which is the whole
+//! reason SLBC beats lane-per-operand packing (CMix-NN et al.).
+//!
+//! This module is the pure-math mirror of the Layer-1 Pallas kernel
+//! (`python/compile/kernels/slbc.py`) and the ground truth the MCU
+//! operators are property-tested against.
+
+/// Bits usable in the wide carrier. Mirrors the Pallas kernel's int64
+/// carrier (one sign bit reserved). The MCU operators use narrower
+/// carriers via [`group_size_for_register`].
+pub const REGISTER_BITS: u32 = 63;
+
+/// Minimal field stride `S` so packed convolution outputs never carry into
+/// the neighbouring field.
+pub fn field_width(sx_bits: u32, sk_bits: u32, k_taps: u32) -> u32 {
+    assert!(k_taps >= 1, "kernel must have at least one tap");
+    let guard = if k_taps > 1 {
+        (32 - (k_taps - 1).leading_zeros()).max(1)
+    } else {
+        0
+    };
+    sx_bits + sk_bits + guard
+}
+
+/// Signal elements packable per `register_bits`-wide multiply, given that
+/// the product of a `G`-field and a `K`-field word spans `G + K - 1` fields.
+pub fn group_size_for_register(
+    sx_bits: u32,
+    sk_bits: u32,
+    k_taps: u32,
+    register_bits: u32,
+) -> Option<u32> {
+    let s = field_width(sx_bits, sk_bits, k_taps);
+    let fields = register_bits / s;
+    if fields >= k_taps {
+        Some(fields - (k_taps - 1))
+    } else {
+        None
+    }
+}
+
+/// [`group_size_for_register`] on the default 63-bit carrier.
+pub fn group_size(sx_bits: u32, sk_bits: u32, k_taps: u32) -> Option<u32> {
+    group_size_for_register(sx_bits, sk_bits, k_taps, REGISTER_BITS)
+}
+
+/// A validated packing configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackSpec {
+    pub sx_bits: u32,
+    pub sk_bits: u32,
+    pub k_taps: u32,
+    /// Field stride S in bits.
+    pub field: u32,
+    /// Signal elements per multiply (G).
+    pub group: u32,
+    /// Carrier width this spec was sized for.
+    pub register_bits: u32,
+}
+
+impl PackSpec {
+    /// Build a spec for the given bitwidths/taps, or `None` if the
+    /// configuration cannot fit the carrier.
+    pub fn new(sx_bits: u32, sk_bits: u32, k_taps: u32, register_bits: u32) -> Option<Self> {
+        let group = group_size_for_register(sx_bits, sk_bits, k_taps, register_bits)?;
+        Some(PackSpec {
+            sx_bits,
+            sk_bits,
+            k_taps,
+            field: field_width(sx_bits, sk_bits, k_taps),
+            group,
+            register_bits,
+        })
+    }
+
+    /// Build a spec with an explicit (wider-than-minimal) field stride.
+    ///
+    /// A wider field donates its slack to *in-register accumulation*: up to
+    /// [`PackSpec::accum_depth`] products can be summed in the packed
+    /// domain before segmentation, amortizing the extraction cost — the
+    /// ULPPACK-inspired trade §IV.C's adaptive search optimizes over.
+    pub fn with_field(
+        sx_bits: u32,
+        sk_bits: u32,
+        k_taps: u32,
+        field: u32,
+        register_bits: u32,
+    ) -> Option<Self> {
+        if field < field_width(sx_bits, sk_bits, k_taps) {
+            return None;
+        }
+        let fields = register_bits / field;
+        if fields < k_taps {
+            return None;
+        }
+        Some(PackSpec {
+            sx_bits,
+            sk_bits,
+            k_taps,
+            field,
+            group: fields - (k_taps - 1),
+            register_bits,
+        })
+    }
+
+    /// How many packed products can accumulate in-register before any
+    /// field can overflow: `floor((2^S - 1) / (K · x_max · k_max))`.
+    pub fn accum_depth(&self) -> u32 {
+        let per_mul = self.k_taps as u128
+            * ((1u128 << self.sx_bits) - 1)
+            * ((1u128 << self.sk_bits) - 1);
+        if per_mul == 0 {
+            return u32::MAX;
+        }
+        let cap = if self.field >= 64 {
+            u64::MAX as u128
+        } else {
+            (1u128 << self.field) - 1
+        };
+        (cap / per_mul).min(u32::MAX as u128) as u32
+    }
+
+    /// Effective MACs performed by one wide multiply (Fig. 6's quantity).
+    pub fn macs_per_multiply(&self) -> u32 {
+        self.group * self.k_taps
+    }
+
+    /// Pack up to `group` signal values (ascending fields, Eq. 3).
+    pub fn pack_signal(&self, vals: &[u64]) -> u64 {
+        debug_assert!(vals.len() as u32 <= self.group);
+        let mut r = 0u64;
+        for (i, &v) in vals.iter().enumerate() {
+            debug_assert!(v < (1 << self.sx_bits), "signal out of range");
+            r |= v << (i as u32 * self.field);
+        }
+        r
+    }
+
+    /// Pack the kernel taps (ascending fields, Eq. 4).
+    pub fn pack_kernel(&self, taps: &[u64]) -> u64 {
+        debug_assert_eq!(taps.len() as u32, self.k_taps);
+        let mut r = 0u64;
+        for (j, &v) in taps.iter().enumerate() {
+            debug_assert!(v < (1 << self.sk_bits), "kernel tap out of range");
+            r |= v << (j as u32 * self.field);
+        }
+        r
+    }
+
+    /// Extract the `G + K - 1` convolution fields of a product (Eq. 7).
+    pub fn segment(&self, product: u64) -> Vec<u64> {
+        let n_fields = self.group + self.k_taps - 1;
+        let mask = if self.field >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.field) - 1
+        };
+        (0..n_fields)
+            .map(|f| (product >> (f * self.field)) & mask)
+            .collect()
+    }
+
+    /// Allocation-free [`Self::segment`]: calls `f(field_idx, value)` for
+    /// every field of the product (the hot-path variant).
+    #[inline]
+    pub fn segment_each<F: FnMut(usize, u64)>(&self, product: u64, mut f: F) {
+        let n_fields = self.group + self.k_taps - 1;
+        let mask = if self.field >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.field) - 1
+        };
+        for fi in 0..n_fields {
+            f(fi as usize, (product >> (fi * self.field)) & mask);
+        }
+    }
+}
+
+/// Full 1-D convolution of unsigned low-bitwidth sequences via packed
+/// multiplication — the reference implementation of the SLBC arithmetic
+/// (Alg. 1 without the SIMD-lane dimension).
+///
+/// Bit-exact with the naïve `y[n] = Σ_m s[n-m]·k[m]`.
+pub fn conv1d_full_packed(x: &[u64], k: &[u64], sx_bits: u32, sk_bits: u32) -> Vec<u64> {
+    let spec = PackSpec::new(sx_bits, sk_bits, k.len() as u32, REGISTER_BITS)
+        .expect("bitwidth/taps combination does not fit the carrier");
+    let g = spec.group as usize;
+    let out_len = x.len() + k.len() - 1;
+    let mut y = vec![0u64; out_len + g]; // slack for the last group's spill
+    let r2 = spec.pack_kernel(k);
+    let mut i = 0;
+    while i < x.len() {
+        let hi = (i + g).min(x.len());
+        let r1 = spec.pack_signal(&x[i..hi]);
+        let p = r1.wrapping_mul(r2);
+        // Segmentation with overlap accumulation (Eq. 11): fields beyond
+        // this group's span overlap the next group's low outputs.
+        for (f, v) in spec.segment(p).into_iter().enumerate() {
+            y[i + f] += v;
+        }
+        i += g;
+    }
+    y.truncate(out_len);
+    y
+}
+
+/// Naïve direct convolution (the oracle).
+pub fn conv1d_full_direct(x: &[u64], k: &[u64]) -> Vec<u64> {
+    let mut y = vec![0u64; x.len() + k.len() - 1];
+    for (i, &xv) in x.iter().enumerate() {
+        for (j, &kv) in k.iter().enumerate() {
+            y[i + j] += xv * kv;
+        }
+    }
+    y
+}
+
+/// Packed dot product: both operands packed with one reversed so the middle
+/// field of the product accumulates the group's inner product. Used by the
+/// dense-layer/im2col paths; `G` here must satisfy the *dot* guard
+/// (`ceil(log2 G)` extra bits, every field can accumulate up to G terms).
+pub fn dot_packed(a: &[u64], b: &[u64], sa_bits: u32, sb_bits: u32) -> u64 {
+    let g = dot_group_size(sa_bits, sb_bits, REGISTER_BITS);
+    let s = field_width(sa_bits, sb_bits, g);
+    let mask = (1u64 << s) - 1;
+    let mut acc = 0u64;
+    let mut i = 0usize;
+    while i < a.len() {
+        let hi = (i + g as usize).min(a.len());
+        let mut ra = 0u64;
+        let mut rb = 0u64;
+        for (l, j) in (i..hi).enumerate() {
+            ra |= a[j] << (l as u32 * s);
+            rb |= b[j] << ((hi - i - 1 - l) as u32 * s);
+        }
+        // The top field of the (possibly partial) group holds its dot.
+        let mid = (hi - i - 1) as u32 * s;
+        acc += (ra.wrapping_mul(rb) >> mid) & mask;
+        i = hi;
+    }
+    acc
+}
+
+/// Largest dot-product group size for the given operand widths.
+pub fn dot_group_size(sa_bits: u32, sb_bits: u32, register_bits: u32) -> u32 {
+    let mut g = 1u32;
+    loop {
+        let s_next = field_width(sa_bits, sb_bits, g + 1);
+        if (2 * (g + 1) - 1) * s_next > register_bits {
+            return g;
+        }
+        g += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::check;
+
+    fn rand_vec(rng: &mut Rng, n: usize, bits: u32) -> Vec<u64> {
+        (0..n).map(|_| rng.below(1 << bits)).collect()
+    }
+
+    #[test]
+    fn field_width_matches_paper_example() {
+        // 4b × 4b with 5 taps: 4+4+ceil(log2 5) = 11.
+        assert_eq!(field_width(4, 4, 5), 11);
+        assert_eq!(field_width(3, 2, 1), 5);
+    }
+
+    #[test]
+    fn group_size_known_values() {
+        // 2b×2b, 3 taps: S = 2+2+1 = 5? ceil(log2 3)=2 -> S=6; 63/6=10 fields
+        // -> G = 10-2 = 8.
+        assert_eq!(field_width(2, 2, 3), 6);
+        assert_eq!(group_size(2, 2, 3), Some(8));
+        // Oversize config rejected.
+        assert_eq!(group_size_for_register(8, 8, 4, 32), None);
+    }
+
+    #[test]
+    fn packed_conv_matches_direct_exhaustive_small() {
+        // Exhaustive over all 2-bit signals of length 4 with a fixed kernel.
+        let k = vec![3u64, 1, 2];
+        for a in 0..4u64 {
+            for b in 0..4u64 {
+                for c in 0..4u64 {
+                    for d in 0..4u64 {
+                        let x = vec![a, b, c, d];
+                        assert_eq!(
+                            conv1d_full_packed(&x, &k, 2, 2),
+                            conv1d_full_direct(&x, &k)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_conv_worst_case_saturation() {
+        // All operands at their maxima — the guard-bit condition's edge.
+        for (sx, sk, kt) in [(4u32, 4u32, 5usize), (8, 8, 3), (2, 2, 7), (7, 3, 4)] {
+            let x = vec![(1u64 << sx) - 1; 40];
+            let k = vec![(1u64 << sk) - 1; kt];
+            assert_eq!(conv1d_full_packed(&x, &k, sx, sk), conv1d_full_direct(&x, &k));
+        }
+    }
+
+    #[test]
+    fn packed_conv_property_random() {
+        check("packed conv == direct conv", 300, |rng| {
+            let sx = rng.range(1, 9) as u32;
+            let sk = rng.range(1, 9) as u32;
+            let kt = rng.range(1, 10);
+            if group_size(sx, sk, kt as u32).is_none() {
+                return;
+            }
+            let n = rng.range(1, 70);
+            let mut r = rng.fork(1);
+            let x = rand_vec(&mut r, n, sx);
+            let k = rand_vec(&mut r, kt, sk);
+            assert_eq!(conv1d_full_packed(&x, &k, sx, sk), conv1d_full_direct(&x, &k));
+        });
+    }
+
+    #[test]
+    fn dot_packed_property() {
+        check("packed dot == direct dot", 300, |rng| {
+            let sa = rng.range(1, 9) as u32;
+            let sb = rng.range(1, 9) as u32;
+            let n = rng.range(1, 100);
+            let mut r = rng.fork(2);
+            let a = rand_vec(&mut r, n, sa);
+            let b = rand_vec(&mut r, n, sb);
+            let direct: u64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(dot_packed(&a, &b, sa, sb), direct);
+        });
+    }
+
+    #[test]
+    fn macs_per_multiply_increases_at_low_bits() {
+        let m2 = PackSpec::new(2, 2, 3, 63).unwrap().macs_per_multiply();
+        let m8 = PackSpec::new(8, 8, 3, 63).unwrap().macs_per_multiply();
+        assert!(m2 > m8, "2-bit packing must beat 8-bit ({m2} vs {m8})");
+    }
+
+    #[test]
+    fn segment_roundtrip() {
+        let spec = PackSpec::new(3, 3, 2, 63).unwrap();
+        let x: Vec<u64> = vec![5, 1, 7];
+        let r1 = spec.pack_signal(&x);
+        let fields = spec.segment(r1);
+        assert_eq!(&fields[..3], &x[..]);
+    }
+
+    #[test]
+    fn impulse_kernel_identity() {
+        let x: Vec<u64> = (0..20).map(|i| (i * 7 % 16) as u64).collect();
+        let y = conv1d_full_packed(&x, &[1], 4, 1);
+        assert_eq!(y, x);
+    }
+}

@@ -1,0 +1,385 @@
+//! RP-SLBC — reordered packing with local accumulation (paper §IV.B,
+//! Theorem IV.1, Alg. 2).
+//!
+//! Naïve SLBC packs consecutive element chunks into *adjacent lanes of the
+//! same register*, so the overlapping boundary terms of adjacent chunks sit
+//! in neighbouring lanes and each product register needs a full
+//! segmentation pass (shift+mask per field) plus scalar cross-lane fixes.
+//!
+//! RP-SLBC reorders the element stream so consecutive chunks go to
+//! *corresponding lanes of adjacent registers* (chunk `c` → register
+//! `c mod L`, lane `c div L`). Then, between the multiplies of one
+//! L-register round, a single parallel lane-shift aligns the previous
+//! accumulator with the new product and one SIMD add merges them — the
+//! overlap resolves itself inside the accumulator, only the `Ns` freshly
+//! completed fields are extracted per multiply, and the cross-lane scalar
+//! stitching happens once per round instead of once per multiply. For
+//! registers with `L` lanes holding `N` elements each this removes `L`
+//! segmentation passes per `N·L·L` elements — the `1/(N·L)` reduction the
+//! paper claims.
+
+use super::packing::{LaneCfg, SimdConv};
+
+/// Reordered-packing SLBC convolution plan.
+#[derive(Debug, Clone, Copy)]
+pub struct RpConv {
+    pub inner: SimdConv,
+}
+
+impl RpConv {
+    /// Build a reordered plan. Requires the kernel spill to fit within one
+    /// chunk (`K - 1 <= Ns`) so the low `Ns` fields complete after every
+    /// accumulate — the condition under which Alg. 2's local accumulation
+    /// is exact.
+    pub fn plan(cfg: LaneCfg, sx_bits: u32, sk_bits: u32, k_taps: u32) -> Option<RpConv> {
+        Self::from_inner(SimdConv::plan(cfg, sx_bits, sk_bits, k_taps)?)
+    }
+
+    /// Like [`RpConv::plan`] with an explicit field stride (for adaptive
+    /// guard-bit/accumulation trade-offs, §IV.C).
+    pub fn plan_with_field(
+        cfg: LaneCfg,
+        sx_bits: u32,
+        sk_bits: u32,
+        k_taps: u32,
+        field: u32,
+    ) -> Option<RpConv> {
+        Self::from_inner(SimdConv::plan_with_field(cfg, sx_bits, sk_bits, k_taps, field)?)
+    }
+
+    fn from_inner(inner: SimdConv) -> Option<RpConv> {
+        if inner.spec.k_taps > inner.spec.group + 1 {
+            return None;
+        }
+        Some(RpConv { inner })
+    }
+
+    /// The reordering of Theorem IV.1: chunk index → (register, lane).
+    pub fn chunk_position(&self, chunk: usize) -> (usize, usize) {
+        let l = self.inner.cfg.lanes() as usize;
+        (chunk % l, chunk / l)
+    }
+
+    /// Gather the reordered signal group layout: for a round of
+    /// `L` registers, returns `layout[register][lane]` = start element
+    /// index of the chunk packed there (or `None` past the signal's end).
+    pub fn round_layout(&self, round: usize, x_len: usize) -> Vec<Vec<Option<usize>>> {
+        let l = self.inner.cfg.lanes() as usize;
+        let ns = self.inner.spec.group as usize;
+        let chunks_per_round = l * l;
+        let base_chunk = round * chunks_per_round;
+        (0..l)
+            .map(|reg| {
+                (0..l)
+                    .map(|lane| {
+                        let chunk = base_chunk + lane * l + reg;
+                        let start = chunk * ns;
+                        (start < x_len).then_some(start)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Bit-exact full 1-D convolution through the reordered pipeline:
+    /// for each round, L packed multiplies with a lane-parallel
+    /// shift-and-accumulate between them; `Ns` completed fields extracted
+    /// per multiply; round leftovers stitched once at the end.
+    pub fn conv1d_full(&self, x: &[u64], k: &[u64]) -> Vec<u64> {
+        let sc = &self.inner;
+        assert_eq!(k.len() as u32, sc.spec.k_taps);
+        let l = sc.cfg.lanes() as usize;
+        let ns = sc.spec.group as usize;
+        let s = sc.spec.field;
+        let lb = sc.cfg.lane_bits;
+        let lane_mask = if lb >= 64 { u64::MAX } else { (1u64 << lb) - 1 };
+        let field_mask = (1u64 << s) - 1;
+        let out_len = x.len() + k.len() - 1;
+        let mut y = vec![0u64; out_len];
+        let vk = sc.pack_kernel(k);
+
+        let n_chunks = x.len().div_ceil(ns);
+        let rounds = n_chunks.div_ceil(l * l);
+
+        // Lane-parallel right shift by `fields` fields.
+        let lane_shr = |reg: u64, fields: usize| -> u64 {
+            let sh = fields as u32 * s;
+            if sh >= 64 {
+                return 0;
+            }
+            let mut out = 0u64;
+            for lane in 0..l {
+                let v = (reg >> (lane as u32 * lb)) & lane_mask;
+                out |= (v >> sh) << (lane as u32 * lb);
+            }
+            out
+        };
+        // Lane-parallel add (fields are guard-protected, no carries cross).
+        let lane_add = |a: u64, b: u64| -> u64 {
+            let mut out = 0u64;
+            for lane in 0..l {
+                let va = (a >> (lane as u32 * lb)) & lane_mask;
+                let vb = (b >> (lane as u32 * lb)) & lane_mask;
+                out |= ((va + vb) & lane_mask) << (lane as u32 * lb);
+            }
+            out
+        };
+
+        for round in 0..rounds {
+            let layout = self.round_layout(round, x.len());
+            let mut acc = 0u64;
+            for reg in 0..l {
+                // Pack this register: lane `lane` holds its chunk.
+                let mut vs = 0u64;
+                for lane in 0..l {
+                    if let Some(start) = layout[reg][lane] {
+                        let hi = (start + ns).min(x.len());
+                        let packed = sc.spec.pack_signal(&x[start..hi]);
+                        vs |= packed << (lane as u32 * lb);
+                    }
+                }
+                let vp = sc.simd_mul(vs, vk);
+                // Local accumulation: align previous leftovers and merge.
+                acc = lane_add(if reg == 0 { 0 } else { lane_shr(acc, ns) }, vp);
+                // Extract the Ns now-complete low fields of every lane.
+                // Extraction is keyed off the chunk *arithmetic* (not the
+                // layout option) because a lane may still carry the spill
+                // of its previous register's chunk even when this
+                // register's chunk is past the signal's end.
+                for lane in 0..l {
+                    let start = (round * l * l + lane * l + reg) * ns;
+                    if start < x.len() + ns {
+                        let lane_v = (acc >> (lane as u32 * lb)) & lane_mask;
+                        for f in 0..ns {
+                            let idx = start + f;
+                            if idx < y.len() {
+                                y[idx] += (lane_v >> (f as u32 * s)) & field_mask;
+                            }
+                        }
+                    }
+                }
+            }
+            // Round epilogue: the K-1 leftover fields per lane belong to the
+            // chunk after the lane's last chunk of this round (register L-1).
+            let kt = sc.spec.k_taps as usize;
+            for lane in 0..l {
+                if let Some(start) = layout[l - 1][lane] {
+                    let lane_v = (lane_shr(acc, ns) >> (lane as u32 * lb)) & lane_mask;
+                    for f in 0..kt.saturating_sub(1) {
+                        let idx = start + ns + f;
+                        if idx < y.len() {
+                            y[idx] += (lane_v >> (f as u32 * s)) & field_mask;
+                        }
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Pre-pack the signal's chunks once (filter-independent): chunk `c`
+    /// covers `x[c*Ns .. c*Ns+Ns]`; its packed lane value is reused by
+    /// every output channel.
+    pub fn prepack_chunks(&self, x: &[u64], out: &mut Vec<u64>) {
+        let ns = self.inner.spec.group as usize;
+        let mut start = 0usize;
+        while start < x.len() {
+            let hi = (start + ns).min(x.len());
+            out.push(self.inner.spec.pack_signal(&x[start..hi]));
+            start += ns;
+        }
+    }
+
+    /// Allocation-free reordered convolution over prepacked chunks,
+    /// accumulating into a signed layer buffer — bit-identical to
+    /// [`Self::conv1d_full`] (enforced by tests), used by the operator
+    /// hot path.
+    pub fn conv_prepacked_into(&self, chunks: &[u64], x_len: usize, vk: u64, y: &mut [i64]) {
+        let sc = &self.inner;
+        let l = sc.cfg.lanes() as usize;
+        let ns = sc.spec.group as usize;
+        let s = sc.spec.field;
+        let lb = sc.cfg.lane_bits;
+        let lane_mask = if lb >= 64 { u64::MAX } else { (1u64 << lb) - 1 };
+        let field_mask = (1u64 << s) - 1;
+
+        let n_chunks = x_len.div_ceil(ns);
+        let rounds = n_chunks.div_ceil(l * l);
+        let kt = sc.spec.k_taps as usize;
+
+        let lane_shr = |reg: u64, fields: usize| -> u64 {
+            let sh = fields as u32 * s;
+            if sh >= 64 {
+                return 0;
+            }
+            let mut out = 0u64;
+            for lane in 0..l {
+                let v = (reg >> (lane as u32 * lb)) & lane_mask;
+                out |= (v >> sh) << (lane as u32 * lb);
+            }
+            out
+        };
+        let lane_add = |a: u64, b: u64| -> u64 {
+            let mut out = 0u64;
+            for lane in 0..l {
+                let va = (a >> (lane as u32 * lb)) & lane_mask;
+                let vb = (b >> (lane as u32 * lb)) & lane_mask;
+                out |= ((va + vb) & lane_mask) << (lane as u32 * lb);
+            }
+            out
+        };
+
+        for round in 0..rounds {
+            let base_chunk = round * l * l;
+            let mut acc = 0u64;
+            for reg in 0..l {
+                let mut vs = 0u64;
+                for lane in 0..l {
+                    let chunk = base_chunk + lane * l + reg;
+                    if chunk * ns < x_len {
+                        vs |= chunks[chunk] << (lane as u32 * lb);
+                    }
+                }
+                let vp = sc.simd_mul(vs, vk);
+                acc = lane_add(if reg == 0 { 0 } else { lane_shr(acc, ns) }, vp);
+                for lane in 0..l {
+                    let start = (base_chunk + lane * l + reg) * ns;
+                    if start < x_len + ns {
+                        let lane_v = (acc >> (lane as u32 * lb)) & lane_mask;
+                        for f in 0..ns {
+                            let idx = start + f;
+                            if idx < y.len() {
+                                y[idx] += ((lane_v >> (f as u32 * s)) & field_mask) as i64;
+                            }
+                        }
+                    }
+                }
+            }
+            // Round epilogue: K-1 leftover fields per lane.
+            for lane in 0..l {
+                let chunk = base_chunk + lane * l + (l - 1);
+                if chunk * ns < x_len {
+                    let start = chunk * ns;
+                    let lane_v = (lane_shr(acc, ns) >> (lane as u32 * lb)) & lane_mask;
+                    for f in 0..kt.saturating_sub(1) {
+                        let idx = start + ns + f;
+                        if idx < y.len() {
+                            y[idx] += ((lane_v >> (f as u32 * s)) & field_mask) as i64;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Segmentation bit-ops per SIMD multiply under reordered packing:
+    /// one lane-shift + one lane-add for the accumulation, then shift+mask
+    /// per *completed* field only (Ns of them, not Ns+K-1), and no per-
+    /// multiply cross-lane scalar fixes.
+    pub fn seg_ops_per_instr(&self) -> u32 {
+        2 + self.inner.spec.group * 2
+    }
+
+    /// The paper's headline ratio: segmentation overhead relative to naïve
+    /// SLBC (→ `1/(N·L)` asymptotically for the boundary work).
+    pub fn seg_reduction_vs_naive(&self) -> f64 {
+        self.seg_ops_per_instr() as f64 / self.inner.seg_ops_per_instr() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::poly::conv1d_full_direct;
+    use crate::util::prop::check;
+
+    fn cfg16() -> LaneCfg {
+        LaneCfg::new(32, 16)
+    }
+
+    #[test]
+    fn chunk_positions_interleave_registers_first() {
+        let rp = RpConv::plan(cfg16(), 2, 2, 2).unwrap();
+        // L = 2 lanes: chunks 0,1 -> registers 0,1 lane 0; chunks 2,3 ->
+        // registers 0,1 lane 1.
+        assert_eq!(rp.chunk_position(0), (0, 0));
+        assert_eq!(rp.chunk_position(1), (1, 0));
+        assert_eq!(rp.chunk_position(2), (0, 1));
+        assert_eq!(rp.chunk_position(3), (1, 1));
+    }
+
+    #[test]
+    fn reordered_conv_matches_direct_fixed() {
+        let rp = RpConv::plan(cfg16(), 2, 2, 2).unwrap();
+        let x: Vec<u64> = vec![1, 3, 2, 0, 3, 3, 1, 2, 2, 1, 0, 3, 1, 1, 2, 3];
+        let k: Vec<u64> = vec![2, 3];
+        assert_eq!(rp.conv1d_full(&x, &k), conv1d_full_direct(&x, &k));
+    }
+
+    #[test]
+    fn reordered_conv_partial_rounds() {
+        // Lengths that do not fill a round (N*L*L elements) still work.
+        let rp = RpConv::plan(cfg16(), 2, 2, 2).unwrap();
+        for n in 1..20 {
+            let x: Vec<u64> = (0..n).map(|i| (i % 4) as u64).collect();
+            let k: Vec<u64> = vec![1, 2];
+            assert_eq!(rp.conv1d_full(&x, &k), conv1d_full_direct(&x, &k), "n={n}");
+        }
+    }
+
+    #[test]
+    fn reordered_conv_property() {
+        check("reordered conv == direct", 300, |rng| {
+            let cfgs = LaneCfg::all();
+            let cfg = cfgs[rng.range(0, cfgs.len())];
+            let sx = rng.range(1, 9) as u32;
+            let sk = rng.range(1, 9) as u32;
+            let kt = rng.range(1, 6) as u32;
+            let rp = match RpConv::plan(cfg, sx, sk, kt) {
+                Some(p) => p,
+                None => return,
+            };
+            let n = rng.range(1, 80);
+            let mut r = rng.fork(4);
+            let x: Vec<u64> = (0..n).map(|_| r.below(1 << sx)).collect();
+            let k: Vec<u64> = (0..kt).map(|_| r.below(1 << sk)).collect();
+            assert_eq!(rp.conv1d_full(&x, &k), conv1d_full_direct(&x, &k));
+        });
+    }
+
+    #[test]
+    fn rp_plan_rejects_wide_kernels() {
+        // K > Ns + 1 breaks the local-accumulation completeness condition.
+        // 8b x 8b in a 32-bit lane: S = 17 with 2 taps -> Ns = 0/invalid.
+        assert!(RpConv::plan(LaneCfg::new(32, 8), 4, 4, 3).is_none());
+    }
+
+    #[test]
+    fn seg_ops_strictly_fewer_than_naive() {
+        for (sx, sk, kt) in [(2u32, 2u32, 2u32), (2, 4, 2), (3, 3, 2)] {
+            for cfg in LaneCfg::all() {
+                if let Some(rp) = RpConv::plan(cfg, sx, sk, kt) {
+                    // Strict win whenever there is more than one lane (the
+                    // cross-lane stitching disappears); equality is the
+                    // best possible for single-lane views, where RP's gain
+                    // comes from accumulation-depth amortization instead.
+                    if cfg.lanes() > 1 {
+                        assert!(
+                            rp.seg_ops_per_instr() < rp.inner.seg_ops_per_instr(),
+                            "cfg={cfg:?} sx={sx} sk={sk} kt={kt}"
+                        );
+                    } else {
+                        assert!(rp.seg_ops_per_instr() <= rp.inner.seg_ops_per_instr());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seg_reduction_below_one() {
+        let rp = RpConv::plan(cfg16(), 2, 2, 2).unwrap();
+        let r = rp.seg_reduction_vs_naive();
+        assert!(r < 1.0 && r > 0.0);
+    }
+}

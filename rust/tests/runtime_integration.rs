@@ -1,0 +1,172 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `artifacts/` (produced by `make artifacts`); they verify the
+//! Python→Rust interchange: manifest geometry equals the Rust model zoo,
+//! every HLO program compiles and runs, and the Layer-1 Pallas kernel
+//! agrees with the Rust packed-arithmetic implementation.
+
+use mcu_mixq::models;
+use mcu_mixq::runtime::{lit, ArtifactStore, Runtime};
+use mcu_mixq::simd::poly;
+use mcu_mixq::util::prng::Rng;
+
+fn store() -> ArtifactStore {
+    ArtifactStore::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts/ missing — run `make artifacts`")
+}
+
+#[test]
+fn manifest_matches_rust_model_zoo() {
+    let store = store();
+    for name in ["vgg_tiny", "mobilenet_tiny"] {
+        let arts = store.backbone(name).unwrap();
+        let rust_model = models::by_name(name).unwrap();
+        assert_eq!(arts.model.num_layers(), rust_model.num_layers(), "{name}");
+        assert_eq!(arts.model.param_count, rust_model.param_count, "{name}");
+        for (a, b) in arts.model.layers.iter().zip(&rust_model.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind, "{name}:{}", a.name);
+            assert_eq!(a.cin, b.cin, "{name}:{}", a.name);
+            assert_eq!(a.cout, b.cout, "{name}:{}", a.name);
+            assert_eq!(a.w_offset, b.w_offset, "{name}:{}", a.name);
+            assert_eq!(a.w_size, b.w_size, "{name}:{}", a.name);
+            assert_eq!(a.macs, b.macs, "{name}:{}", a.name);
+        }
+    }
+}
+
+#[test]
+fn init_params_load_and_have_sane_stats() {
+    let store = store();
+    for name in ["vgg_tiny", "mobilenet_tiny"] {
+        let arts = store.backbone(name).unwrap();
+        let p = arts.load_init_params().unwrap();
+        assert_eq!(p.len(), arts.model.param_count);
+        let mean = p.iter().sum::<f32>() / p.len() as f32;
+        let var = p.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / p.len() as f32;
+        assert!(mean.abs() < 0.05, "{name}: mean {mean}");
+        assert!(var > 1e-4 && var < 1.0, "{name}: var {var}");
+        assert!(p.iter().all(|x| x.is_finite()), "{name}: non-finite init");
+    }
+}
+
+#[test]
+fn all_programs_compile() {
+    let store = store();
+    let rt = Runtime::cpu().unwrap();
+    for name in ["vgg_tiny", "mobilenet_tiny"] {
+        let arts = store.backbone(name).unwrap();
+        let progs = arts.load_programs(&rt).unwrap();
+        assert!(progs.qat_step.compile_time_s > 0.0);
+        assert!(progs.eval.compile_time_s > 0.0);
+        assert!(progs.infer.compile_time_s > 0.0);
+        assert!(progs.supernet_step.compile_time_s > 0.0);
+    }
+}
+
+#[test]
+fn infer_program_runs_and_returns_logits() {
+    let store = store();
+    let rt = Runtime::cpu().unwrap();
+    let arts = store.backbone("vgg_tiny").unwrap();
+    let prog = rt.load_program(&arts.infer).unwrap();
+    let params = lit::f32_vec(&arts.load_init_params().unwrap());
+    let hw = arts.model.input_hw;
+    let img = vec![0.5f32; hw * hw * arts.model.input_c];
+    let x = lit::f32_tensor(&img, &[1, hw as i64, hw as i64, 3]).unwrap();
+    let wb = lit::f32_vec(&vec![8.0f32; arts.model.num_layers()]);
+    let ab = lit::f32_vec(&vec![8.0f32; arts.model.num_layers()]);
+    let outs = prog.run(&[&params, &x, &wb, &ab]).unwrap();
+    let logits = lit::to_f32_vec(&outs[0]).unwrap();
+    assert_eq!(logits.len(), arts.model.num_classes);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn infer_bitwidth_tensors_change_logits() {
+    // The runtime-bitwidth design: one artifact serves every quantization
+    // config, and the config actually matters.
+    let store = store();
+    let rt = Runtime::cpu().unwrap();
+    let arts = store.backbone("vgg_tiny").unwrap();
+    let prog = rt.load_program(&arts.infer).unwrap();
+    let params = lit::f32_vec(&arts.load_init_params().unwrap());
+    let hw = arts.model.input_hw;
+    let mut rng = Rng::new(3);
+    let img: Vec<f32> = (0..hw * hw * 3).map(|_| rng.f32()).collect();
+    let x = lit::f32_tensor(&img, &[1, hw as i64, hw as i64, 3]).unwrap();
+    let l = arts.model.num_layers();
+    let run_at = |bits: f32| {
+        let wb = lit::f32_vec(&vec![bits; l]);
+        let ab = lit::f32_vec(&vec![bits; l]);
+        let outs = prog.run(&[&params, &x, &wb, &ab]).unwrap();
+        lit::to_f32_vec(&outs[0]).unwrap()
+    };
+    let l8 = run_at(8.0);
+    let l2 = run_at(2.0);
+    assert_ne!(l8, l2, "bitwidth tensors must affect the computation");
+}
+
+#[test]
+fn slbc_demo_kernel_matches_rust_packing() {
+    // Layer-1 (Pallas, via HLO) vs Layer-3 (Rust simd::poly): the same
+    // packed-arithmetic convolution, two implementations, one answer.
+    let store = store();
+    let rt = Runtime::cpu().unwrap();
+    let demo = store.slbc_demo().unwrap();
+    let prog = rt.load_program(&demo.path).unwrap();
+    for seed in [1u64, 7, 42] {
+        let mut rng = Rng::new(seed);
+        let x: Vec<i64> = (0..demo.n).map(|_| rng.below(1 << demo.sx_bits) as i64).collect();
+        let k: Vec<i64> = (0..demo.k).map(|_| rng.below(1 << demo.sk_bits) as i64).collect();
+        let outs = prog.run(&[lit::i64_vec(&x), lit::i64_vec(&k)]).unwrap();
+        let got = lit::to_i64_vec(&outs[0]).unwrap();
+        let xu: Vec<u64> = x.iter().map(|&v| v as u64).collect();
+        let ku: Vec<u64> = k.iter().map(|&v| v as u64).collect();
+        let direct: Vec<i64> = poly::conv1d_full_direct(&xu, &ku)
+            .iter()
+            .map(|&v| v as i64)
+            .collect();
+        let packed: Vec<i64> = poly::conv1d_full_packed(&xu, &ku, demo.sx_bits, demo.sk_bits)
+            .iter()
+            .map(|&v| v as i64)
+            .collect();
+        assert_eq!(got, direct, "seed {seed}: HLO vs direct");
+        assert_eq!(got, packed, "seed {seed}: HLO vs rust packed");
+    }
+}
+
+#[test]
+fn eval_program_accuracy_at_chance_for_init() {
+    // Untrained params ⇒ accuracy ≈ chance on the 10-class task.
+    let store = store();
+    let rt = Runtime::cpu().unwrap();
+    let arts = store.backbone("vgg_tiny").unwrap();
+    let prog = rt.load_program(&arts.eval).unwrap();
+    let params = lit::f32_vec(&arts.load_init_params().unwrap());
+    let batch = mcu_mixq::datasets::generate(
+        mcu_mixq::datasets::Task::SynthCifar,
+        arts.eval_batch,
+        arts.model.input_hw,
+        99,
+    );
+    let x = lit::f32_tensor(
+        &batch.images,
+        &[
+            arts.eval_batch as i64,
+            arts.model.input_hw as i64,
+            arts.model.input_hw as i64,
+            3,
+        ],
+    )
+    .unwrap();
+    let y = lit::i32_vec(&batch.labels);
+    let l = arts.model.num_layers();
+    let wb = lit::f32_vec(&vec![8.0f32; l]);
+    let ab = lit::f32_vec(&vec![8.0f32; l]);
+    let outs = prog.run_n(&[&params, &x, &y, &wb, &ab], 2).unwrap();
+    let loss = lit::to_f32_scalar(&outs[0]).unwrap();
+    let acc = lit::to_f32_scalar(&outs[1]).unwrap();
+    assert!(loss > 1.5 && loss < 4.0, "init loss {loss}");
+    assert!(acc < 0.35, "init acc {acc} should be near chance");
+}
