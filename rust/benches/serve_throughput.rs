@@ -1,0 +1,111 @@
+//! Serving-throughput trajectory bench.
+//!
+//! Replays the canonical mixed-fleet scenario (vgg_tiny on RP-SLBC +
+//! mobilenet_tiny on int8 TinyEngine, 320 requests, 4 × STM32F746) and
+//! emits one JSON summary line — requests/s in virtual MCU time, p95
+//! latency, cache hit rate, compile count — so future PRs can track the
+//! serving trajectory alongside the fig5–fig8 benches. A second
+//! no-batching replay quantifies the dynamic-batching win.
+//!
+//! Regenerate with `cargo bench --bench serve_throughput`.
+
+use std::collections::BTreeMap;
+
+use mcu_mixq::ops::Method;
+use mcu_mixq::serve::{self, BatcherCfg, ServeCfg, TraceCfg, Workload};
+use mcu_mixq::util::bench::Bench;
+use mcu_mixq::util::json::Json;
+
+fn workloads() -> Vec<Workload> {
+    vec![
+        Workload::synth("vgg_tiny", Method::RpSlbc, 4, 101).unwrap(),
+        Workload::synth("mobilenet_tiny", Method::TinyEngine, 8, 102).unwrap(),
+    ]
+}
+
+fn main() -> mcu_mixq::Result<()> {
+    let requests = std::env::var("MCU_MIXQ_SERVE_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(320usize);
+    let ws = workloads();
+    // ~3 ms mean offered gap: enough pressure that batching matters, not
+    // enough to saturate four devices.
+    let trace = serve::synth_trace(&TraceCfg::new(requests, 648_000, 42), ws.len());
+    let cfg = ServeCfg::default();
+
+    println!(
+        "serve_throughput — {} requests, {} devices, mixed fleet\n",
+        requests, cfg.devices
+    );
+    let report = serve::run_trace(&ws, &trace, &cfg)?;
+    println!("{}", report.render());
+
+    // Same trace with batching disabled (batch = 1, no wait window).
+    let solo_cfg = ServeCfg {
+        batcher: BatcherCfg {
+            max_batch: 1,
+            max_wait_cycles: 1,
+            max_queue: cfg.batcher.max_queue,
+        },
+        ..cfg.clone()
+    };
+    let solo = serve::run_trace(&ws, &trace, &solo_cfg)?;
+    let batch_speedup = solo.makespan_cycles as f64 / report.makespan_cycles as f64;
+    println!(
+        "dynamic batching: makespan {} vs unbatched {} cycles ({batch_speedup:.3}x)\n",
+        report.makespan_cycles, solo.makespan_cycles
+    );
+
+    // Host-side simulation speed (wall clock), for the record.
+    let t = Bench::new(0, 3).run("replay", || {
+        serve::run_trace(&ws, &trace, &cfg).expect("replay")
+    });
+    println!("host replay wall time: {}", t.mean_human());
+
+    let mut o = BTreeMap::new();
+    o.insert("bench".into(), Json::Str("serve_throughput".into()));
+    o.insert("requests".into(), Json::Num(requests as f64));
+    o.insert("devices".into(), Json::Num(cfg.devices as f64));
+    o.insert("completed".into(), Json::Num(report.completed as f64));
+    o.insert("throughput_rps".into(), Json::Num(report.throughput_rps));
+    o.insert("p50_ms".into(), Json::Num(report.latency.p50_ms));
+    o.insert("p95_ms".into(), Json::Num(report.latency.p95_ms));
+    o.insert("p99_ms".into(), Json::Num(report.latency.p99_ms));
+    o.insert("cache_hit_rate".into(), Json::Num(report.cache.hit_rate()));
+    o.insert(
+        "engine_compiles".into(),
+        Json::Num(report.engine_compiles as f64),
+    );
+    o.insert("batch_speedup".into(), Json::Num(batch_speedup));
+    o.insert("sim_wall_ms".into(), Json::Num(t.mean_ns / 1e6));
+    println!("{}", Json::Obj(o).to_string_compact());
+
+    // Qualitative guards the trajectory must keep.
+    assert!(report.completed > 0, "no requests served");
+    assert_eq!(
+        report.cache.compiles, 2,
+        "exactly one compilation per served model"
+    );
+    assert!(
+        report.cache.hit_rate() > 0.9,
+        "sustained traffic must hit the artifact cache ({:.2})",
+        report.cache.hit_rate()
+    );
+    assert!(
+        report.latency.p50_ms <= report.latency.p95_ms
+            && report.latency.p95_ms <= report.latency.p99_ms,
+        "percentiles must be ordered"
+    );
+    // Batching always saves device work (same inference cycles, fewer
+    // per-invocation overheads); makespan can tie under light load, so
+    // the guard is on total busy cycles.
+    let busy = |r: &serve::ServeReport| -> u64 { r.per_device.iter().map(|d| d.busy_cycles).sum() };
+    assert!(
+        busy(&report) <= busy(&solo),
+        "batched fleet must not do more device work ({} vs {})",
+        busy(&report),
+        busy(&solo)
+    );
+    Ok(())
+}

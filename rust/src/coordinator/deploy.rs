@@ -15,10 +15,9 @@
 //! * a simulated batch-1 inference for the cycle count.
 
 use crate::engine;
-use crate::mcu::CycleModel;
 use crate::models::ModelDesc;
 use crate::ops::Method;
-use crate::quant::{quantize_model, BitConfig};
+use crate::quant::BitConfig;
 use crate::runtime::{BackboneArtifacts, Runtime};
 use crate::{cycles_to_ms, Result};
 
@@ -73,7 +72,6 @@ pub fn deploy_all_methods(
     probe_image: &[f32],
 ) -> Result<Vec<MethodRow>> {
     let runner = QatRunner::new(rt, arts, qat_cfg.seed)?;
-    let cycle_model = CycleModel::cortex_m7();
     let mut rows = Vec::with_capacity(methods.len());
     for &method in methods {
         let cfg = method_config(method, searched, model.num_layers());
@@ -92,20 +90,19 @@ pub fn deploy_all_methods(
             qat_acc = qat.eval_acc;
         }
 
-        // Engine-side deployment (memory plan + flash + cycles).
-        let quantized = quantize_model(model, &qat_params, &cfg);
-        let graph = engine::Graph::build(model, &cfg);
-        let plan = engine::plan_memory(&graph, engine::planner::strategy_for(method));
-        let codegen = engine::CodegenPlan::generate(model, &cfg, method);
-        let flash = engine::FlashImage::layout(model, &cfg, &quantized, &codegen);
-        let infer = engine::infer(model, &quantized, &cfg, method, probe_image, &cycle_model)?;
+        // Engine-side deployment (memory plan + flash + cycles), built
+        // once through the compile path and executed on the artifact.
+        // Unbounded: the comparison table reports over-budget methods in
+        // its peak-memory column instead of failing the whole table.
+        let compiled = engine::CompiledModel::compile_unbounded(model, &qat_params, &cfg, method);
+        let infer = compiled.run(probe_image)?;
 
         rows.push(MethodRow {
             method,
             quantization: quant_label(method),
             config: cfg,
-            peak_sram: plan.peak_bytes,
-            flash_bytes: flash.total_bytes(),
+            peak_sram: compiled.peak_sram(),
+            flash_bytes: compiled.flash_bytes(),
             clocks: infer.cycles,
             latency_ms: cycles_to_ms(infer.cycles),
             accuracy: qat_acc,

@@ -86,6 +86,22 @@ impl CodegenPlan {
         }
     }
 
+    /// Mean MACs per SIMD multiply across layers with a lane plan (1.0
+    /// for methods without in-lane packing). The serving stats report
+    /// this per model as the packing-density headline.
+    pub fn mean_macs_per_instr(&self) -> f64 {
+        let plans: Vec<u32> = self
+            .kernels
+            .iter()
+            .filter_map(|k| k.lane_plan.map(|p| p.macs_per_instr))
+            .collect();
+        if plans.is_empty() {
+            1.0
+        } else {
+            plans.iter().map(|&m| m as f64).sum::<f64>() / plans.len() as f64
+        }
+    }
+
     /// Total generated/linked code bytes.
     pub fn code_bytes(&self) -> usize {
         // Generic library kernels are deduplicated by (kind): only one
@@ -127,6 +143,16 @@ mod tests {
         let lib = CodegenPlan::generate(&m, &cfg, Method::CmixNn);
         // Specialized codegen linked per layer > shared library kernels.
         assert!(spec.code_bytes() > lib.code_bytes());
+    }
+
+    #[test]
+    fn packing_density_summary() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 2);
+        let slbc = CodegenPlan::generate(&m, &cfg, Method::RpSlbc);
+        let lib = CodegenPlan::generate(&m, &cfg, Method::CmixNn);
+        assert!(slbc.mean_macs_per_instr() > 1.0);
+        assert_eq!(lib.mean_macs_per_instr(), 1.0);
     }
 
     #[test]

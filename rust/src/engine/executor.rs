@@ -124,6 +124,38 @@ fn prev_hw(model: &ModelDesc, i: usize) -> (usize, usize) {
     }
 }
 
+/// Run a batch of images, returning the full per-image results (logits,
+/// cycle counts, instruction histograms). The serving layer uses this to
+/// charge each request its own virtual-time latency.
+pub fn infer_batch_detailed(
+    model: &ModelDesc,
+    quantized: &[(QWeights, Vec<f32>)],
+    cfg: &BitConfig,
+    method: Method,
+    images: &[f32],
+    cycle_model: &CycleModel,
+) -> Result<Vec<InferenceResult>> {
+    let img_sz = model.input_hw * model.input_hw * model.input_c;
+    anyhow::ensure!(
+        img_sz > 0 && images.len() % img_sz == 0,
+        "batch bytes {} not a multiple of image size {}",
+        images.len(),
+        img_sz
+    );
+    (0..images.len() / img_sz)
+        .map(|i| {
+            infer(
+                model,
+                quantized,
+                cfg,
+                method,
+                &images[i * img_sz..(i + 1) * img_sz],
+                cycle_model,
+            )
+        })
+        .collect()
+}
+
 /// Run a batch of images; returns per-image predictions, mean cycles and
 /// accuracy against `labels`.
 pub fn infer_batch(
@@ -138,24 +170,14 @@ pub fn infer_batch(
     let img_sz = model.input_hw * model.input_hw * model.input_c;
     let n = labels.len();
     anyhow::ensure!(images.len() == n * img_sz, "batch size mismatch");
-    let mut preds = Vec::with_capacity(n);
-    let mut cycles_total = 0u64;
-    let mut correct = 0usize;
-    for i in 0..n {
-        let r = infer(
-            model,
-            quantized,
-            cfg,
-            method,
-            &images[i * img_sz..(i + 1) * img_sz],
-            cycle_model,
-        )?;
-        if r.pred as i32 == labels[i] {
-            correct += 1;
-        }
-        cycles_total += r.cycles;
-        preds.push(r.pred);
-    }
+    let results = infer_batch_detailed(model, quantized, cfg, method, images, cycle_model)?;
+    let cycles_total: u64 = results.iter().map(|r| r.cycles).sum();
+    let correct = results
+        .iter()
+        .zip(labels)
+        .filter(|(r, &y)| r.pred as i32 == y)
+        .count();
+    let preds = results.iter().map(|r| r.pred).collect();
     Ok((
         preds,
         cycles_total as f64 / n as f64,

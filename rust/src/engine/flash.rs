@@ -101,6 +101,18 @@ impl FlashImage {
     pub fn weight_bytes(&self) -> usize {
         self.records.iter().map(|r| r.weights_len + r.bias_len).sum()
     }
+
+    /// Does every layer of the image round-trip bit-exactly to
+    /// `quantized`? `CompiledModel::compile` debug-asserts this, proving
+    /// the artifact the registry caches is faithful to the weights it was
+    /// built from.
+    pub fn matches(&self, quantized: &[(QWeights, Vec<f32>)]) -> bool {
+        self.records.len() == quantized.len()
+            && quantized
+                .iter()
+                .enumerate()
+                .all(|(i, (qw, _))| self.unpack_weights(i) == qw.data)
+    }
 }
 
 /// Pack signed `bits`-wide values little-endian into a bit stream
@@ -185,6 +197,11 @@ mod tests {
         for (i, (qw, _)) in q.iter().enumerate() {
             assert_eq!(img.unpack_weights(i), qw.data, "layer {i}");
         }
+        assert!(img.matches(&q));
+        // Any payload corruption in a weight region must be detected.
+        let mut bad = img.clone();
+        bad.payload[bad.records[0].weights_off] ^= 1;
+        assert!(!bad.matches(&q));
     }
 
     #[test]

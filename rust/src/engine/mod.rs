@@ -19,7 +19,12 @@
 //! * [`executor`] — bit-exact integer inference over the graph, charging
 //!   every instruction to the MCU cycle model.
 //!
-//! The [`deploy`] entry point ties these together and produces the
+//! Compilation and execution are split, mirroring real MCU deployment
+//! stacks: [`CompiledModel::compile`] does the one-time work (graph,
+//! memory plan, quantized params, codegen plan, flash image) and
+//! [`CompiledModel::run`] is the cheap per-inference path the serving
+//! layer ([`crate::serve`]) reuses across requests. The [`deploy`] entry
+//! point is a thin compile-then-run wrapper that produces the
 //! [`DeployReport`] rows of Table I.
 
 pub mod codegen;
@@ -29,15 +34,17 @@ pub mod graph;
 pub mod planner;
 
 pub use codegen::{CodegenPlan, KernelChoice};
-pub use executor::{infer, infer_batch, InferenceResult};
+pub use executor::{infer, infer_batch, infer_batch_detailed, InferenceResult};
 pub use flash::FlashImage;
 pub use graph::{Graph, Node, NodeOp, TensorInfo};
 pub use planner::{plan_memory, MemoryPlan, PlanStrategy};
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::mcu::CycleModel;
 use crate::models::ModelDesc;
 use crate::ops::Method;
-use crate::quant::{quantize_model, BitConfig};
+use crate::quant::{quantize_model, BitConfig, QWeights};
 use crate::{cycles_to_ms, Result};
 
 /// Everything Table I reports for one (backbone, method, config) triple.
@@ -58,8 +65,156 @@ pub struct DeployReport {
     pub per_layer: Vec<(String, u64)>,
 }
 
+/// Global count of [`CompiledModel::compile`] invocations. The serving
+/// registry's compile-once guarantee is verified against this counter
+/// (tests and `bench-serve` assert one compilation per distinct model).
+static COMPILE_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Number of model compilations performed by this process so far.
+pub fn compile_count() -> u64 {
+    COMPILE_COUNT.load(Ordering::Relaxed)
+}
+
+/// The one-time compilation product for one (model, config, method)
+/// triple: everything `deploy` used to rebuild per call, built once and
+/// reusable across arbitrarily many [`run`](CompiledModel::run) calls.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    pub model: ModelDesc,
+    pub cfg: BitConfig,
+    pub method: Method,
+    pub graph: Graph,
+    pub plan: MemoryPlan,
+    pub quantized: Vec<(QWeights, Vec<f32>)>,
+    pub codegen: CodegenPlan,
+    pub flash: FlashImage,
+    pub cycle_model: CycleModel,
+}
+
+impl CompiledModel {
+    /// Build the full deployment artifact. The SRAM-capacity check runs
+    /// immediately after memory planning, so oversized models fail fast
+    /// without paying for quantization, codegen or a simulated inference.
+    pub fn compile(
+        model: &ModelDesc,
+        flat_params: &[f32],
+        cfg: &BitConfig,
+        method: Method,
+    ) -> Result<CompiledModel> {
+        let strategy = planner::strategy_for(method);
+        let graph = Graph::build(model, cfg);
+        let plan = plan_memory(&graph, strategy);
+        anyhow::ensure!(
+            plan.fits(crate::STM32F746_SRAM_BYTES),
+            "{}: activation arena {}B exceeds STM32F746 SRAM",
+            model.name,
+            plan.peak_bytes
+        );
+        Ok(Self::finish(model, flat_params, cfg, method, graph, plan))
+    }
+
+    /// Build without the SRAM-capacity gate. Comparison tables (Table I)
+    /// want a row even for deployments that exceed the budget — the
+    /// peak-memory column is exactly where the violation shows.
+    pub fn compile_unbounded(
+        model: &ModelDesc,
+        flat_params: &[f32],
+        cfg: &BitConfig,
+        method: Method,
+    ) -> CompiledModel {
+        let strategy = planner::strategy_for(method);
+        let graph = Graph::build(model, cfg);
+        let plan = plan_memory(&graph, strategy);
+        Self::finish(model, flat_params, cfg, method, graph, plan)
+    }
+
+    fn finish(
+        model: &ModelDesc,
+        flat_params: &[f32],
+        cfg: &BitConfig,
+        method: Method,
+        graph: Graph,
+        plan: MemoryPlan,
+    ) -> CompiledModel {
+        let quantized = quantize_model(model, flat_params, cfg);
+        let codegen = CodegenPlan::generate(model, cfg, method);
+        let flash = FlashImage::layout(model, cfg, &quantized, &codegen);
+        debug_assert!(
+            flash.matches(&quantized),
+            "flash image must round-trip the quantized weights"
+        );
+        COMPILE_COUNT.fetch_add(1, Ordering::Relaxed);
+        CompiledModel {
+            model: model.clone(),
+            cfg: cfg.clone(),
+            method,
+            graph,
+            plan,
+            quantized,
+            codegen,
+            flash,
+            cycle_model: CycleModel::cortex_m7(),
+        }
+    }
+
+    /// Execute one inference on the precompiled artifact (the cheap path:
+    /// no graph/plan/quantize/codegen/flash work).
+    pub fn run(&self, image: &[f32]) -> Result<InferenceResult> {
+        infer(
+            &self.model,
+            &self.quantized,
+            &self.cfg,
+            self.method,
+            image,
+            &self.cycle_model,
+        )
+    }
+
+    /// Execute a batch of images, returning every per-image result.
+    pub fn run_batch(&self, images: &[f32]) -> Result<Vec<InferenceResult>> {
+        infer_batch_detailed(
+            &self.model,
+            &self.quantized,
+            &self.cfg,
+            self.method,
+            images,
+            &self.cycle_model,
+        )
+    }
+
+    /// Peak SRAM of the planned activation arena (bytes).
+    pub fn peak_sram(&self) -> usize {
+        self.plan.peak_bytes
+    }
+
+    /// Total flash footprint (packed weights + metadata + code).
+    pub fn flash_bytes(&self) -> usize {
+        self.flash.total_bytes()
+    }
+
+    /// Run one inference and assemble the Table I row for it.
+    pub fn report(&self, image: &[f32]) -> Result<DeployReport> {
+        let result = self.run(image)?;
+        Ok(DeployReport {
+            backbone: self.model.name.clone(),
+            method: self.method,
+            config: self.cfg.clone(),
+            peak_sram: self.peak_sram(),
+            flash_bytes: self.flash_bytes(),
+            cycles: result.cycles,
+            latency_ms: cycles_to_ms(result.cycles),
+            per_layer: result.per_layer,
+        })
+    }
+}
+
 /// Deploy `model` (trained flat f32 params) with `method` under `cfg`,
 /// running one inference on `image` to obtain the cycle/memory numbers.
+///
+/// Thin wrapper over [`CompiledModel::compile`] + [`CompiledModel::report`];
+/// callers that run more than one inference should hold on to the
+/// [`CompiledModel`] (or use [`crate::serve::Registry`]) instead of
+/// calling this repeatedly.
 pub fn deploy(
     model: &ModelDesc,
     flat_params: &[f32],
@@ -67,33 +222,7 @@ pub fn deploy(
     method: Method,
     image: &[f32],
 ) -> Result<DeployReport> {
-    let strategy = planner::strategy_for(method);
-    let graph = Graph::build(model, cfg);
-    let plan = plan_memory(&graph, strategy);
-    let quantized = quantize_model(model, flat_params, cfg);
-    let codegen = CodegenPlan::generate(model, cfg, method);
-    let flash = FlashImage::layout(model, cfg, &quantized, &codegen);
-    let cycle_model = CycleModel::cortex_m7();
-
-    let result = infer(model, &quantized, cfg, method, image, &cycle_model)?;
-
-    anyhow::ensure!(
-        plan.peak_bytes <= crate::STM32F746_SRAM_BYTES,
-        "{}: activation arena {}B exceeds STM32F746 SRAM",
-        model.name,
-        plan.peak_bytes
-    );
-
-    Ok(DeployReport {
-        backbone: model.name.clone(),
-        method,
-        config: cfg.clone(),
-        peak_sram: plan.peak_bytes,
-        flash_bytes: flash.total_bytes(),
-        cycles: result.cycles,
-        latency_ms: cycles_to_ms(result.cycles),
-        per_layer: result.per_layer,
-    })
+    CompiledModel::compile(model, flat_params, cfg, method)?.report(image)
 }
 
 #[cfg(test)]
@@ -137,5 +266,58 @@ mod tests {
             mixq.cycles,
             tiny.cycles
         );
+    }
+
+    #[test]
+    fn compile_once_run_many() {
+        let m = vgg_tiny(10, 16);
+        let params = fake_params(m.param_count);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let before = compile_count();
+        let cm = CompiledModel::compile(&m, &params, &cfg, Method::RpSlbc).unwrap();
+        // The counter is global (other test threads may also compile), so
+        // only monotonicity is asserted here; strict per-model equality is
+        // checked single-threaded in `bench-serve` and the serve tests.
+        assert!(compile_count() > before);
+        let img = vec![0.5f32; 16 * 16 * 3];
+        let a = cm.run(&img).unwrap();
+        let b = cm.run(&img).unwrap();
+        // Reusing the artifact stays bit-exact + cycle-exact.
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.per_layer, b.per_layer);
+    }
+
+    #[test]
+    fn oversized_model_fails_fast_without_inference() {
+        // 128×128 input under all-live allocation blows the 320 KB SRAM
+        // budget; compile must reject it before any simulated inference.
+        let m = vgg_tiny(10, 128);
+        let params = fake_params(m.param_count);
+        let cfg = BitConfig::uniform(m.num_layers(), 8);
+        let err = CompiledModel::compile(&m, &params, &cfg, Method::CmixNn)
+            .err()
+            .expect("oversized model must be rejected");
+        assert!(format!("{err:#}").contains("exceeds STM32F746 SRAM"));
+        // The unbounded path still builds the artifact so comparison
+        // tables can report the violation in their peak-memory column.
+        let cm = CompiledModel::compile_unbounded(&m, &params, &cfg, Method::CmixNn);
+        assert!(cm.peak_sram() > crate::STM32F746_SRAM_BYTES);
+    }
+
+    #[test]
+    fn batch_run_matches_single_runs() {
+        let m = vgg_tiny(10, 16);
+        let params = fake_params(m.param_count);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let cm = CompiledModel::compile(&m, &params, &cfg, Method::Slbc).unwrap();
+        let batch = crate::datasets::synth_cifar(3, 16, 7);
+        let detailed = cm.run_batch(&batch.images).unwrap();
+        assert_eq!(detailed.len(), 3);
+        for (i, r) in detailed.iter().enumerate() {
+            let single = cm.run(batch.image(i)).unwrap();
+            assert_eq!(r.logits, single.logits, "image {i}");
+            assert_eq!(r.cycles, single.cycles, "image {i}");
+        }
     }
 }

@@ -42,6 +42,13 @@ pub struct MemoryPlan {
 }
 
 impl MemoryPlan {
+    /// Does the planned arena fit in `sram_bytes`? Deployment rejects the
+    /// model up front when this fails; the serving layer's admission
+    /// control also consults it per device.
+    pub fn fits(&self, sram_bytes: usize) -> bool {
+        self.peak_bytes <= sram_bytes
+    }
+
     /// Check the invariant: tensors with overlapping lifetimes must not
     /// overlap in arena space (used by tests and debug assertions).
     pub fn validate(&self, graph: &Graph) -> Result<(), String> {
@@ -179,6 +186,16 @@ mod tests {
             min_needed = min_needed.max(need);
         }
         assert!(plan.peak_bytes >= min_needed);
+    }
+
+    #[test]
+    fn fits_is_peak_comparison() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 8);
+        let g = Graph::build(&m, &cfg);
+        let p = plan_memory(&g, PlanStrategy::Lifetime);
+        assert!(p.fits(p.peak_bytes));
+        assert!(!p.fits(p.peak_bytes - 1));
     }
 
     #[test]

@@ -22,6 +22,15 @@
 //!    ([`engine`]) running on a cycle-approximate Cortex-M7 (ARMv7E-M DSP)
 //!    simulator ([`mcu`]), with model zoo ([`models`]), quantization
 //!    machinery ([`quant`]) and synthetic datasets ([`datasets`]).
+//! 4. **Serving layer** — the production-scale pillar on top of the
+//!    engine's compile/run split ([`engine::CompiledModel`]): a
+//!    multi-tenant model registry with a compile-once LRU artifact cache
+//!    ([`serve::registry`]), a pool of simulated Cortex-M7 devices
+//!    ([`serve::fleet`]), dynamic batching with admission control
+//!    ([`serve::batcher`]) and virtual-time latency/throughput reporting
+//!    ([`serve::stats`]) — driven by the `serve` / `bench-serve` CLI
+//!    subcommands over deterministic synthetic traces
+//!    ([`serve::trace`]).
 //!
 //! ## Three-layer architecture
 //!
@@ -45,6 +54,7 @@ pub mod ops;
 pub mod perf;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod simd;
 pub mod util;
 

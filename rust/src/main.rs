@@ -7,11 +7,15 @@
 //! * `qat       --backbone B ...`   — QAT at a fixed bit configuration
 //! * `pipeline  --backbone B ...`   — full search→QAT→deploy→compare run
 //! * `deploy    --backbone B ...`   — deploy + simulate one method
+//! * `serve     --mix M ...`        — replay a request trace on an MCU fleet
+//! * `bench-serve`                  — fixed-protocol serving benchmark (JSON)
 //! * `slbc-demo`                    — Layer-1 Pallas kernel vs Rust packing
 //! * `calibrate`                    — fit & report the Eq. 12 coefficients
 //!
-//! Everything runs from the AOT artifacts in `--artifacts DIR`
-//! (default `artifacts/`); Python is never invoked.
+//! The search/QAT/pipeline commands run from the AOT artifacts in
+//! `--artifacts DIR` (default `artifacts/`); Python is never invoked.
+//! `serve` and `bench-serve` need neither artifacts nor PJRT: workloads
+//! deploy zoo backbones with seeded synthetic parameters.
 
 use mcu_mixq::coordinator::qat::QatCfg;
 use mcu_mixq::coordinator::{self, PipelineCfg, QatRunner, SearchCfg, SupernetSearch};
@@ -22,6 +26,7 @@ use mcu_mixq::ops::Method;
 use mcu_mixq::perf::{calibrate_alpha_beta, PerfModel};
 use mcu_mixq::quant::BitConfig;
 use mcu_mixq::runtime::{lit, ArtifactStore, Runtime};
+use mcu_mixq::serve::{self, ServeCfg, ServeReport, TraceCfg, Workload};
 use mcu_mixq::util::bench::Table;
 use mcu_mixq::util::cli::Args;
 use mcu_mixq::Result;
@@ -46,6 +51,8 @@ fn run(args: &Args) -> Result<()> {
         "qat" => cmd_qat(args),
         "pipeline" => cmd_pipeline(args),
         "deploy" => cmd_deploy(args),
+        "serve" => cmd_serve(args),
+        "bench-serve" => cmd_bench_serve(args),
         "slbc-demo" => cmd_slbc_demo(args),
         "calibrate" => cmd_calibrate(args),
         "" | "help" | "--help" => {
@@ -72,6 +79,14 @@ fn print_help() {
          \x20 pipeline --backbone B         full search→QAT→deploy→compare\n\
          \x20 deploy   --backbone B         deploy one method\n\
          \x20          [--method rp-slbc] [--bits 4]\n\
+         \x20 serve                         replay a request trace on an MCU fleet\n\
+         \x20          [--mix backbone:method:bits[:weight],...]\n\
+         \x20          [--requests N] [--devices N] [--mean-gap-ms F]\n\
+         \x20          [--batch N] [--wait-ms F] [--queue N] [--depth N]\n\
+         \x20          [--cache N] [--seed S] [--json]\n\
+         \x20 bench-serve                   fixed-protocol serving benchmark:\n\
+         \x20                               >=200-request mixed trace, >=4 devices,\n\
+         \x20                               prints tables + one JSON summary line\n\
          \x20 slbc-demo                     run the Layer-1 kernel via PJRT\n\
          \x20 calibrate                     fit Eq. 12 coefficients"
     );
@@ -286,6 +301,110 @@ fn cmd_slbc_demo(args: &Args) -> Result<()> {
         "Layer-1 kernel output matches the Rust packed-arithmetic oracle ({} taps)",
         got.len()
     );
+    Ok(())
+}
+
+/// Parse a `--mix` spec: comma-separated `backbone:method:bits[:weight]`
+/// entries, each becoming one served workload with seeded synthetic
+/// parameters.
+fn parse_mix(spec: &str) -> Result<(Vec<Workload>, Vec<f64>)> {
+    let mut workloads = Vec::new();
+    let mut weights = Vec::new();
+    for (i, entry) in spec.split(',').enumerate() {
+        let parts: Vec<&str> = entry.trim().split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 3 || parts.len() == 4,
+            "mix entry `{entry}` is not backbone:method:bits[:weight]"
+        );
+        let method = Method::parse(parts[1])
+            .ok_or_else(|| anyhow::anyhow!("unknown method `{}` in mix", parts[1]))?;
+        let bits: u8 = parts[2].parse()?;
+        let weight: f64 = if parts.len() == 4 { parts[3].parse()? } else { 1.0 };
+        anyhow::ensure!(weight > 0.0, "mix weight must be positive in `{entry}`");
+        workloads.push(Workload::synth(parts[0], method, bits, 1000 + i as u64)?);
+        weights.push(weight);
+    }
+    Ok((workloads, weights))
+}
+
+/// Shared serve/bench-serve scenario runner: build the mix + trace from
+/// args (with per-command defaults), replay, print the report tables.
+fn run_serve_scenario(
+    args: &Args,
+    default_requests: usize,
+    default_devices: usize,
+) -> Result<ServeReport> {
+    let mix = args.str_or("mix", "vgg_tiny:rp-slbc:4,mobilenet_tiny:tinyengine:8");
+    let (workloads, weights) = parse_mix(&mix)?;
+
+    let requests = args.usize_or("requests", default_requests);
+    let mean_gap_ms = args.f32_or("mean-gap-ms", 5.0) as f64;
+    let mean_gap_cycles =
+        (mean_gap_ms * mcu_mixq::STM32F746_CLOCK_HZ as f64 / 1e3).max(1.0) as u64;
+    let mut tcfg = TraceCfg::new(requests, mean_gap_cycles, args.u64_or("seed", 42));
+    tcfg.weights = weights;
+    let trace = serve::synth_trace(&tcfg, workloads.len());
+
+    let mut cfg = ServeCfg::default();
+    cfg.devices = args.usize_or("devices", default_devices);
+    cfg.max_queue_depth = args.usize_or("depth", cfg.max_queue_depth);
+    cfg.cache_capacity = args.usize_or("cache", cfg.cache_capacity);
+    cfg.batcher.max_batch = args.usize_or("batch", cfg.batcher.max_batch);
+    let wait_ms = args.f32_or("wait-ms", 2.0) as f64;
+    cfg.batcher.max_wait_cycles =
+        (wait_ms * mcu_mixq::STM32F746_CLOCK_HZ as f64 / 1e3).max(1.0) as u64;
+    cfg.batcher.max_queue = args.usize_or("queue", cfg.batcher.max_queue);
+
+    println!(
+        "serving {} model(s) on {} device(s): {} requests, mean gap {:.2}ms, batch<= {}, wait {:.2}ms\n",
+        workloads.len(),
+        cfg.devices,
+        requests,
+        mean_gap_ms,
+        cfg.batcher.max_batch,
+        wait_ms
+    );
+    let report = serve::run_trace(&workloads, &trace, &cfg)?;
+    println!("{}", report.render());
+    Ok(report)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let report = run_serve_scenario(args, 128, 4)?;
+    if args.bool_or("json", false) {
+        println!("{}", report.to_json().to_string_compact());
+    }
+    Ok(())
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let report = run_serve_scenario(args, 256, 4)?;
+    println!("{}", report.to_json().to_string_compact());
+
+    // Fixed-protocol guarantees (this process is single-threaded, so the
+    // global compile counter is exact here).
+    anyhow::ensure!(report.requests >= 200, "bench-serve needs >= 200 requests");
+    anyhow::ensure!(
+        report.per_device.len() >= 4,
+        "bench-serve needs >= 4 devices"
+    );
+    anyhow::ensure!(report.completed > 0, "no request completed");
+    anyhow::ensure!(
+        report.engine_compiles == report.cache.compiles,
+        "every engine compilation must come from the registry ({} vs {})",
+        report.engine_compiles,
+        report.cache.compiles
+    );
+    for m in &report.per_model {
+        anyhow::ensure!(
+            m.requests == 0 || m.cache_hits > 1,
+            "{}: compile-once not amortized (requests {}, cache hits {})",
+            m.label,
+            m.requests,
+            m.cache_hits
+        );
+    }
+    println!("\nbench-serve OK: compile-once + >1 cache hit per served model verified");
     Ok(())
 }
 

@@ -1,0 +1,250 @@
+//! Bounded request queue with per-model dynamic batching.
+//!
+//! Requests for the same [`ModelKey`](super::ModelKey) that arrive within
+//! a waiting window are coalesced into one device invocation, amortizing
+//! the per-invocation overhead (scheduler entry, activation-arena setup,
+//! weight-pointer DMA programming) across the batch. Two admission limits
+//! apply: the global bounded queue (`max_queue`, arrivals beyond it are
+//! shed) and the per-batch size cap (`max_batch`, a full queue flushes
+//! immediately instead of waiting out the window).
+//!
+//! Everything is virtual-time: a batch's `ready` cycle is the moment its
+//! flush condition held — the arrival that filled it, or the oldest
+//! member's deadline — so downstream scheduling is exact and
+//! deterministic.
+
+use std::collections::VecDeque;
+
+/// Per-invocation overhead charged once per batch (cycles): scheduler
+/// entry, arena setup and DMA programming — the fixed cost dynamic
+/// batching amortizes. ≈50 µs at 216 MHz.
+pub const BATCH_OVERHEAD_CYCLES: u64 = 10_800;
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatcherCfg {
+    /// Most images coalesced into one invocation.
+    pub max_batch: usize,
+    /// Longest a request may wait for co-batching partners (cycles).
+    /// ≈2 ms at 216 MHz by default.
+    pub max_wait_cycles: u64,
+    /// Bounded total queue: arrivals beyond this are shed.
+    pub max_queue: usize,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        BatcherCfg {
+            max_batch: 8,
+            max_wait_cycles: 432_000,
+            max_queue: 64,
+        }
+    }
+}
+
+/// One admitted request waiting to be batched.
+#[derive(Debug, Clone)]
+pub struct PendingRequest {
+    pub id: usize,
+    /// Index into the workload/key table.
+    pub key_idx: usize,
+    /// Arrival cycle.
+    pub arrival: u64,
+    /// Input image (NHWC flat).
+    pub image: Vec<f32>,
+}
+
+/// A flushed batch, ready to execute at `ready`.
+#[derive(Debug, Clone)]
+pub struct ReadyBatch {
+    pub key_idx: usize,
+    /// Virtual cycle the flush condition held.
+    pub ready: u64,
+    pub requests: Vec<PendingRequest>,
+}
+
+/// The per-model waiting queues.
+pub struct Batcher {
+    cfg: BatcherCfg,
+    queues: Vec<VecDeque<PendingRequest>>,
+    /// Requests shed by the bounded queue.
+    pub shed: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherCfg, num_keys: usize) -> Batcher {
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        assert!(cfg.max_queue >= 1, "max_queue must be >= 1");
+        Batcher {
+            cfg,
+            queues: (0..num_keys).map(|_| VecDeque::new()).collect(),
+            shed: 0,
+        }
+    }
+
+    /// Total queued requests across models.
+    pub fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Admit a request, or shed it when the bounded queue is full.
+    /// Returns whether the request was admitted. Flush due batches (via
+    /// [`pop_due`](Batcher::pop_due)) *before* offering an arrival so the
+    /// bound applies to genuinely concurrent work.
+    pub fn offer(&mut self, req: PendingRequest) -> bool {
+        if self.queued() >= self.cfg.max_queue {
+            self.shed += 1;
+            return false;
+        }
+        self.queues[req.key_idx].push_back(req);
+        debug_assert!(self.queued() <= self.cfg.max_queue, "bounded queue invariant");
+        true
+    }
+
+    /// Flush every batch whose condition holds at virtual time `now`:
+    /// full (`max_batch` members, ready = the filling arrival) or
+    /// expired (oldest member waited `max_wait_cycles`, ready = its
+    /// deadline). Batches come out in key order, oldest first.
+    pub fn pop_due(&mut self, now: u64) -> Vec<ReadyBatch> {
+        let mut out = Vec::new();
+        for (key_idx, q) in self.queues.iter_mut().enumerate() {
+            loop {
+                let full = q.len() >= self.cfg.max_batch;
+                let expired = q
+                    .front()
+                    .map(|r| r.arrival + self.cfg.max_wait_cycles <= now)
+                    .unwrap_or(false);
+                if !full && !expired {
+                    break;
+                }
+                let take = q.len().min(self.cfg.max_batch);
+                let requests: Vec<PendingRequest> = q.drain(..take).collect();
+                let ready = if requests.len() == self.cfg.max_batch {
+                    // The arrival that completed the batch triggered it.
+                    requests.last().expect("non-empty batch").arrival
+                } else {
+                    requests.first().expect("non-empty batch").arrival
+                        + self.cfg.max_wait_cycles
+                };
+                out.push(ReadyBatch {
+                    key_idx,
+                    ready,
+                    requests,
+                });
+            }
+        }
+        out
+    }
+
+    /// Flush everything still queued (end of trace), each remaining
+    /// group becoming one batch per `max_batch` slice — full slices were
+    /// ready when their last member arrived, partial ones at their
+    /// oldest member's deadline.
+    pub fn drain_all(&mut self) -> Vec<ReadyBatch> {
+        let mut out = Vec::new();
+        for (key_idx, q) in self.queues.iter_mut().enumerate() {
+            while !q.is_empty() {
+                let take = q.len().min(self.cfg.max_batch);
+                let requests: Vec<PendingRequest> = q.drain(..take).collect();
+                let ready = if requests.len() == self.cfg.max_batch {
+                    requests.last().expect("non-empty batch").arrival
+                } else {
+                    requests.first().expect("non-empty batch").arrival
+                        + self.cfg.max_wait_cycles
+                };
+                out.push(ReadyBatch {
+                    key_idx,
+                    ready,
+                    requests,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, key_idx: usize, arrival: u64) -> PendingRequest {
+        PendingRequest {
+            id,
+            key_idx,
+            arrival,
+            image: Vec::new(),
+        }
+    }
+
+    fn cfg(max_batch: usize, max_wait: u64, max_queue: usize) -> BatcherCfg {
+        BatcherCfg {
+            max_batch,
+            max_wait_cycles: max_wait,
+            max_queue,
+        }
+    }
+
+    #[test]
+    fn full_batch_flushes_at_filling_arrival() {
+        let mut b = Batcher::new(cfg(3, 1000, 16), 1);
+        b.offer(req(0, 0, 10));
+        b.offer(req(1, 0, 20));
+        b.offer(req(2, 0, 30));
+        let due = b.pop_due(30);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].requests.len(), 3);
+        assert_eq!(due[0].ready, 30, "ready when the third request landed");
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn window_expiry_flushes_partial_batch() {
+        let mut b = Batcher::new(cfg(8, 1000, 16), 1);
+        b.offer(req(0, 0, 100));
+        b.offer(req(1, 0, 400));
+        assert!(b.pop_due(1099).is_empty(), "window still open");
+        let due = b.pop_due(1100);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].requests.len(), 2);
+        assert_eq!(due[0].ready, 1100, "oldest member's deadline");
+    }
+
+    #[test]
+    fn keys_batch_independently() {
+        let mut b = Batcher::new(cfg(2, 1000, 16), 2);
+        b.offer(req(0, 0, 10));
+        b.offer(req(1, 1, 15));
+        b.offer(req(2, 0, 20));
+        let due = b.pop_due(20);
+        // Key 0 filled (2 members); key 1 still waiting.
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].key_idx, 0);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn bounded_queue_sheds() {
+        let mut b = Batcher::new(cfg(8, 1000, 2), 1);
+        assert!(b.offer(req(0, 0, 1)));
+        assert!(b.offer(req(1, 0, 2)));
+        assert!(!b.offer(req(2, 0, 3)), "third concurrent request is shed");
+        assert_eq!(b.shed, 1);
+        assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn drain_flushes_leftovers_in_slices() {
+        let mut b = Batcher::new(cfg(2, 1000, 16), 1);
+        for i in 0..5 {
+            b.offer(req(i, 0, i as u64));
+        }
+        // Two full batches flush on demand; one leftover drains.
+        let due = b.pop_due(4);
+        assert_eq!(due.len(), 2);
+        let rest = b.drain_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].requests.len(), 1);
+        assert_eq!(rest[0].ready, 4 + 1000);
+        assert_eq!(b.queued(), 0);
+    }
+}

@@ -1,0 +1,262 @@
+//! A pool of simulated MCU devices executing batches in virtual time.
+//!
+//! Every device is a serial Cortex-M7-class executor with its own SRAM
+//! budget, cumulative instruction [`Counter`] and a virtual-time timeline
+//! (`busy_until`, in cycles). The fleet schedules round-robin across
+//! devices, skipping devices whose model doesn't fit in SRAM, and applies
+//! backpressure when every eligible device already holds
+//! `max_queue_depth` unfinished batches: the dispatch is delayed (in
+//! virtual time) until a slot frees, never reordered.
+
+use crate::mcu::Counter;
+
+/// Hardware parameters of one simulated device.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceCfg {
+    pub sram_bytes: usize,
+    pub clock_hz: u64,
+}
+
+impl Default for DeviceCfg {
+    fn default() -> Self {
+        DeviceCfg::stm32f746()
+    }
+}
+
+impl DeviceCfg {
+    /// The paper's evaluation platform (320 KB SRAM, 216 MHz).
+    pub fn stm32f746() -> DeviceCfg {
+        DeviceCfg {
+            sram_bytes: crate::STM32F746_SRAM_BYTES,
+            clock_hz: crate::STM32F746_CLOCK_HZ,
+        }
+    }
+}
+
+/// One simulated device and its accounting.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub cfg: DeviceCfg,
+    /// Virtual cycle at which the device has drained everything
+    /// dispatched to it so far.
+    pub busy_until: u64,
+    /// Finish times of dispatched batches (pruned lazily).
+    inflight: Vec<u64>,
+    /// Cumulative instruction histogram of everything run here.
+    pub counter: Counter,
+    /// Total busy cycles (sum of dispatched batch costs).
+    pub busy_cycles: u64,
+    pub batches: u64,
+    pub images: u64,
+}
+
+impl Device {
+    fn new(id: usize, cfg: DeviceCfg) -> Device {
+        Device {
+            id,
+            cfg,
+            busy_until: 0,
+            inflight: Vec::new(),
+            counter: Counter::new(),
+            busy_cycles: 0,
+            batches: 0,
+            images: 0,
+        }
+    }
+
+    /// Unfinished batches at virtual time `now`.
+    pub fn queue_depth(&self, now: u64) -> usize {
+        self.inflight.iter().filter(|&&f| f > now).count()
+    }
+
+    /// Fraction of `[0, horizon]` this device spent executing.
+    pub fn utilization(&self, horizon_cycles: u64) -> f64 {
+        if horizon_cycles == 0 {
+            0.0
+        } else {
+            self.busy_cycles as f64 / horizon_cycles as f64
+        }
+    }
+
+    /// Earliest in-flight finish strictly after `now` (for backpressure).
+    fn next_free(&self, now: u64) -> Option<u64> {
+        self.inflight.iter().copied().filter(|&f| f > now).min()
+    }
+}
+
+/// Where and when a batch landed.
+#[derive(Debug, Clone, Copy)]
+pub struct Dispatch {
+    pub device: usize,
+    /// Virtual cycle execution began (>= ready time).
+    pub start: u64,
+    /// Virtual cycle the batch completed.
+    pub finish: u64,
+}
+
+/// The device pool plus the round-robin cursor.
+pub struct Fleet {
+    pub devices: Vec<Device>,
+    rr_next: usize,
+    pub max_queue_depth: usize,
+}
+
+impl Fleet {
+    pub fn new(n: usize, cfg: DeviceCfg, max_queue_depth: usize) -> Fleet {
+        assert!(n >= 1, "fleet needs at least one device");
+        assert!(max_queue_depth >= 1, "queue depth cap must be >= 1");
+        Fleet {
+            devices: (0..n).map(|i| Device::new(i, cfg)).collect(),
+            rr_next: 0,
+            max_queue_depth,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Can any device hold a model with this arena peak? (Admission
+    /// control consults this at request arrival.)
+    pub fn fits_anywhere(&self, peak_sram: usize) -> bool {
+        self.devices.iter().any(|d| peak_sram <= d.cfg.sram_bytes)
+    }
+
+    /// Dispatch a batch that becomes ready at `ready` and costs
+    /// `cost_cycles`, round-robin over devices with enough SRAM. When all
+    /// eligible devices are at the queue-depth cap, virtual time advances
+    /// to the earliest in-flight completion and scheduling retries —
+    /// backpressure, not reordering.
+    ///
+    /// Returns `None` only when no device's SRAM fits the model (callers
+    /// should have rejected such requests at admission).
+    pub fn dispatch(
+        &mut self,
+        ready: u64,
+        cost_cycles: u64,
+        peak_sram: usize,
+        images: u64,
+        counter: &Counter,
+    ) -> Option<Dispatch> {
+        if !self.fits_anywhere(peak_sram) {
+            return None;
+        }
+        let n = self.devices.len();
+        let mut now = ready;
+        loop {
+            for off in 0..n {
+                let idx = (self.rr_next + off) % n;
+                let d = &mut self.devices[idx];
+                if peak_sram > d.cfg.sram_bytes {
+                    continue;
+                }
+                if d.queue_depth(now) >= self.max_queue_depth {
+                    continue;
+                }
+                self.rr_next = (idx + 1) % n;
+                let start = now.max(d.busy_until);
+                let finish = start + cost_cycles;
+                d.busy_until = finish;
+                d.inflight.retain(|&f| f > now);
+                d.inflight.push(finish);
+                d.counter.merge(counter);
+                d.busy_cycles += cost_cycles;
+                d.batches += 1;
+                d.images += images;
+                return Some(Dispatch {
+                    device: idx,
+                    start,
+                    finish,
+                });
+            }
+            // Everyone eligible is saturated: wait for the earliest
+            // completion among devices that could host this model.
+            let wake = self
+                .devices
+                .iter()
+                .filter(|d| peak_sram <= d.cfg.sram_bytes)
+                .filter_map(|d| d.next_free(now))
+                .min()?;
+            now = wake;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cheap_counter() -> Counter {
+        let mut c = Counter::new();
+        c.charge(crate::mcu::InstrClass::Alu, 10);
+        c
+    }
+
+    #[test]
+    fn round_robin_spreads_batches() {
+        let mut fleet = Fleet::new(3, DeviceCfg::stm32f746(), 4);
+        for _ in 0..6 {
+            fleet.dispatch(0, 1000, 1024, 1, &cheap_counter()).unwrap();
+        }
+        for d in &fleet.devices {
+            assert_eq!(d.batches, 2, "device {} load", d.id);
+        }
+    }
+
+    #[test]
+    fn serial_device_queues_in_virtual_time() {
+        let mut fleet = Fleet::new(1, DeviceCfg::stm32f746(), 8);
+        let a = fleet.dispatch(0, 500, 1024, 1, &cheap_counter()).unwrap();
+        let b = fleet.dispatch(0, 500, 1024, 1, &cheap_counter()).unwrap();
+        assert_eq!(a.finish, 500);
+        assert_eq!(b.start, 500, "second batch waits for the first");
+        assert_eq!(b.finish, 1000);
+        assert_eq!(fleet.devices[0].queue_depth(250), 2);
+        assert_eq!(fleet.devices[0].queue_depth(750), 1);
+        assert_eq!(fleet.devices[0].queue_depth(1000), 0);
+    }
+
+    #[test]
+    fn backpressure_delays_when_depth_capped() {
+        let mut fleet = Fleet::new(1, DeviceCfg::stm32f746(), 2);
+        fleet.dispatch(0, 100, 1024, 1, &cheap_counter()).unwrap();
+        fleet.dispatch(0, 100, 1024, 1, &cheap_counter()).unwrap();
+        // Depth cap reached at t=0; the third batch must wait until the
+        // first finishes (t=100) before it may even enqueue.
+        let c = fleet.dispatch(0, 100, 1024, 1, &cheap_counter()).unwrap();
+        assert_eq!(c.start, 200, "starts after the backlog drains");
+        assert_eq!(c.finish, 300);
+    }
+
+    #[test]
+    fn sram_gate_rejects_oversized_models() {
+        let small = DeviceCfg {
+            sram_bytes: 10 * 1024,
+            clock_hz: crate::STM32F746_CLOCK_HZ,
+        };
+        let mut fleet = Fleet::new(2, small, 4);
+        assert!(!fleet.fits_anywhere(64 * 1024));
+        assert!(fleet
+            .dispatch(0, 100, 64 * 1024, 1, &cheap_counter())
+            .is_none());
+        assert!(fleet.dispatch(0, 100, 8 * 1024, 1, &cheap_counter()).is_some());
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut fleet = Fleet::new(2, DeviceCfg::stm32f746(), 4);
+        fleet.dispatch(0, 300, 1024, 3, &cheap_counter()).unwrap();
+        fleet.dispatch(0, 200, 1024, 2, &cheap_counter()).unwrap();
+        let total_busy: u64 = fleet.devices.iter().map(|d| d.busy_cycles).sum();
+        let total_images: u64 = fleet.devices.iter().map(|d| d.images).sum();
+        assert_eq!(total_busy, 500);
+        assert_eq!(total_images, 5);
+        assert!(fleet.devices[0].utilization(1000) > 0.0);
+        assert_eq!(fleet.devices[0].counter.alu, 10);
+    }
+}

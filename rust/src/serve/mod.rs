@@ -1,0 +1,496 @@
+//! Multi-model MCU-fleet inference serving.
+//!
+//! The engine's compile/run split ([`crate::engine::CompiledModel`])
+//! makes sustained traffic expressible: compile each served model once,
+//! then replay a request trace against a pool of simulated Cortex-M7
+//! devices entirely in virtual time. The pipeline is
+//!
+//! ```text
+//! trace ─► admission (SRAM / bounded queue) ─► batcher (per-model
+//!   dynamic batching) ─► fleet (round-robin over serial devices,
+//!     queue-depth backpressure) ─► stats (p50/p95/p99, throughput)
+//! ```
+//!
+//! * [`registry`] — multi-tenant model registry with an LRU
+//!   compile-once artifact cache;
+//! * [`fleet`] — the device pool: per-device SRAM budget, cycle
+//!   [`Counter`](crate::mcu::Counter) and virtual-time timeline;
+//! * [`batcher`] — bounded request queue + dynamic batching window;
+//! * [`stats`] — latency/throughput/cache reporting (tables + JSON);
+//! * [`trace`] — deterministic synthetic request traces.
+//!
+//! Everything is deterministic: a (workloads, trace, config) triple
+//! always produces the same report, so serving numbers are comparable
+//! across PRs the same way the fig5–fig8 benches are.
+
+pub mod batcher;
+pub mod fleet;
+pub mod registry;
+pub mod stats;
+pub mod trace;
+
+pub use batcher::{Batcher, BatcherCfg, PendingRequest, ReadyBatch, BATCH_OVERHEAD_CYCLES};
+pub use fleet::{Device, DeviceCfg, Dispatch, Fleet};
+pub use registry::{ModelKey, Registry, RegistryStats};
+pub use stats::{DeviceStats, LatencySummary, ModelStats, ServeReport};
+pub use trace::{synth_trace, TraceCfg, TraceRequest};
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::datasets::{self, Task};
+use crate::engine::{self, CompiledModel};
+use crate::mcu::Counter;
+use crate::models::{self, ModelDesc};
+use crate::ops::Method;
+use crate::quant::BitConfig;
+use crate::util::prng::Rng;
+use crate::Result;
+
+/// One served tenant: the model identity plus the trained parameters it
+/// deploys with.
+pub struct Workload {
+    pub key: ModelKey,
+    pub model: ModelDesc,
+    pub params: Vec<f32>,
+}
+
+impl Workload {
+    pub fn new(model: ModelDesc, method: Method, cfg: BitConfig, params: Vec<f32>) -> Workload {
+        Workload {
+            key: ModelKey::new(&model.name, method, cfg),
+            model,
+            params,
+        }
+    }
+
+    /// A workload over a zoo backbone with seeded synthetic parameters
+    /// and a uniform bit configuration — lets the serving path run
+    /// without AOT artifacts or a PJRT runtime.
+    pub fn synth(backbone: &str, method: Method, bits: u8, seed: u64) -> Result<Workload> {
+        let model = models::by_name(backbone)
+            .ok_or_else(|| anyhow::anyhow!("unknown backbone `{backbone}`"))?;
+        anyhow::ensure!(
+            method.supports(bits, bits),
+            "{} does not support w{bits}a{bits}",
+            method.name()
+        );
+        let mut rng = Rng::new(seed);
+        let params: Vec<f32> = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+        let cfg = BitConfig::uniform(model.num_layers(), bits);
+        Ok(Workload::new(model, method, cfg, params))
+    }
+}
+
+/// Serving-stack configuration.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Fleet size.
+    pub devices: usize,
+    /// Per-device hardware parameters.
+    pub device: DeviceCfg,
+    /// Unfinished batches one device may hold before backpressure.
+    pub max_queue_depth: usize,
+    pub batcher: BatcherCfg,
+    /// Registry LRU capacity (compiled artifacts held at once).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            devices: 4,
+            device: DeviceCfg::stm32f746(),
+            max_queue_depth: 4,
+            batcher: BatcherCfg::default(),
+            cache_capacity: 8,
+        }
+    }
+}
+
+/// Per-model accumulator while replaying.
+#[derive(Default, Clone)]
+struct ModelAcc {
+    requests: u64,
+    batches: u64,
+    cycles: u64,
+}
+
+/// Dispatch a set of flushed batches in ready-time order (ties broken
+/// by key index, then queue order). `pop_due` yields batches grouped by
+/// key; without the sort a later-ready batch could jump the device
+/// queue ahead of an earlier-ready one and skew the latency tail.
+fn exec_batches(
+    mut batches: Vec<ReadyBatch>,
+    pinned: &[Option<Arc<CompiledModel>>],
+    fleet: &mut Fleet,
+    latencies: &mut Vec<u64>,
+    accs: &mut [ModelAcc],
+    makespan: &mut u64,
+) -> Result<()> {
+    batches.sort_by_key(|b| (b.ready, b.key_idx));
+    for batch in batches {
+        let art = pinned[batch.key_idx]
+            .clone()
+            .expect("queued request implies a compiled artifact");
+        exec_batch(
+            &batch,
+            &art,
+            fleet,
+            latencies,
+            &mut accs[batch.key_idx],
+            makespan,
+        )?;
+    }
+    Ok(())
+}
+
+/// Execute one flushed batch: run every image on the compiled artifact,
+/// dispatch the total cost to the fleet, and charge each member request
+/// its virtual-time latency.
+fn exec_batch(
+    batch: &ReadyBatch,
+    art: &CompiledModel,
+    fleet: &mut Fleet,
+    latencies: &mut Vec<u64>,
+    acc: &mut ModelAcc,
+    makespan: &mut u64,
+) -> Result<()> {
+    let mut run_cycles = 0u64;
+    let mut ctr = Counter::new();
+    for r in &batch.requests {
+        let res = art.run(&r.image)?;
+        run_cycles += res.cycles;
+        ctr.merge(&res.counter);
+    }
+    let cost = BATCH_OVERHEAD_CYCLES + run_cycles;
+    let disp = fleet
+        .dispatch(
+            batch.ready,
+            cost,
+            art.peak_sram(),
+            batch.requests.len() as u64,
+            &ctr,
+        )
+        .ok_or_else(|| {
+            anyhow::anyhow!("no device fits {}B arena (admission should reject)", art.peak_sram())
+        })?;
+    for r in &batch.requests {
+        latencies.push(disp.finish.saturating_sub(r.arrival));
+    }
+    acc.requests += batch.requests.len() as u64;
+    acc.batches += 1;
+    acc.cycles += cost;
+    *makespan = (*makespan).max(disp.finish);
+    Ok(())
+}
+
+/// Replay `trace` over `workloads` with the serving stack in `cfg`,
+/// producing the full [`ServeReport`].
+pub fn run_trace(
+    workloads: &[Workload],
+    trace: &[TraceRequest],
+    cfg: &ServeCfg,
+) -> Result<ServeReport> {
+    anyhow::ensure!(!workloads.is_empty(), "serving needs at least one workload");
+    let wall0 = Instant::now();
+    let compiles0 = engine::compile_count();
+
+    let mut registry = Registry::new(cfg.cache_capacity);
+    let mut fleet = Fleet::new(cfg.devices, cfg.device, cfg.max_queue_depth);
+    let mut batcher = Batcher::new(cfg.batcher.clone(), workloads.len());
+
+    // Artifacts pinned for execution even if the LRU evicts them between
+    // requests (the registry still tracks the recompilations).
+    let mut pinned: Vec<Option<Arc<CompiledModel>>> = vec![None; workloads.len()];
+    let mut latencies: Vec<u64> = Vec::new();
+    let mut accs: Vec<ModelAcc> = vec![ModelAcc::default(); workloads.len()];
+    let mut rejected_sram = 0u64;
+    let mut makespan = 0u64;
+
+    // Replay in arrival order (stable on id for equal arrivals).
+    let mut order: Vec<&TraceRequest> = trace.iter().collect();
+    order.sort_by_key(|r| (r.arrival, r.id));
+
+    for req in order {
+        anyhow::ensure!(
+            req.key_idx < workloads.len(),
+            "trace request {} references workload {} of {}",
+            req.id,
+            req.key_idx,
+            workloads.len()
+        );
+        // Flush whatever became due before this arrival.
+        exec_batches(
+            batcher.pop_due(req.arrival),
+            &pinned,
+            &mut fleet,
+            &mut latencies,
+            &mut accs,
+            &mut makespan,
+        )?;
+
+        // Compile-on-first-use through the registry (hits are counted
+        // per request, which is what makes compile-once observable).
+        let w = &workloads[req.key_idx];
+        let art = registry.get_or_compile(&w.key, || {
+            CompiledModel::compile(&w.model, &w.params, &w.key.cfg, w.key.method)
+        })?;
+        pinned[req.key_idx] = Some(art.clone());
+
+        // Admission control: SRAM, then the bounded queue.
+        if !fleet.fits_anywhere(art.peak_sram()) {
+            rejected_sram += 1;
+            continue;
+        }
+        let image = datasets::generate(
+            Task::for_backbone(&w.model.name),
+            1,
+            w.model.input_hw,
+            req.seed,
+        )
+        .images;
+        batcher.offer(PendingRequest {
+            id: req.id,
+            key_idx: req.key_idx,
+            arrival: req.arrival,
+            image,
+        });
+        // A batch this arrival filled is ready right now — flush it
+        // rather than letting it sit out the waiting window.
+        exec_batches(
+            batcher.pop_due(req.arrival),
+            &pinned,
+            &mut fleet,
+            &mut latencies,
+            &mut accs,
+            &mut makespan,
+        )?;
+    }
+
+    // End of trace: drain the remaining partial batches.
+    exec_batches(
+        batcher.drain_all(),
+        &pinned,
+        &mut fleet,
+        &mut latencies,
+        &mut accs,
+        &mut makespan,
+    )?;
+
+    let completed = latencies.len();
+    let virtual_s = makespan as f64 / crate::STM32F746_CLOCK_HZ as f64;
+    let throughput_rps = if virtual_s > 0.0 {
+        completed as f64 / virtual_s
+    } else {
+        0.0
+    };
+    let hits = registry.per_model_hits();
+    let per_model = workloads
+        .iter()
+        .enumerate()
+        .zip(&accs)
+        .map(|((i, w), acc)| {
+            let label = w.key.label();
+            let cache_hits = hits
+                .iter()
+                .find(|(l, _)| *l == label)
+                .map(|(_, h)| *h)
+                .unwrap_or(0);
+            let (peak_sram, flash_bytes, macs_per_instr) = pinned[i]
+                .as_ref()
+                .map(|a| {
+                    (
+                        a.peak_sram(),
+                        a.flash_bytes(),
+                        a.codegen.mean_macs_per_instr(),
+                    )
+                })
+                .unwrap_or((0, 0, 0.0));
+            ModelStats {
+                label,
+                requests: acc.requests,
+                batches: acc.batches,
+                cycles: acc.cycles,
+                cache_hits,
+                peak_sram,
+                flash_bytes,
+                macs_per_instr,
+            }
+        })
+        .collect();
+    let per_device = fleet
+        .devices
+        .iter()
+        .map(|d| DeviceStats {
+            id: d.id,
+            batches: d.batches,
+            images: d.images,
+            busy_cycles: d.busy_cycles,
+            utilization: d.utilization(makespan),
+        })
+        .collect();
+
+    Ok(ServeReport {
+        requests: trace.len(),
+        completed,
+        rejected_queue: batcher.shed,
+        rejected_sram,
+        makespan_cycles: makespan,
+        throughput_rps,
+        latency: LatencySummary::from_cycles(&latencies),
+        per_model,
+        per_device,
+        cache: registry.stats().clone(),
+        engine_compiles: engine::compile_count() - compiles0,
+        wall_s: wall0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mobilenet_pair() -> Vec<Workload> {
+        vec![
+            Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 21).unwrap(),
+            Workload::synth("mobilenet_tiny", Method::TinyEngine, 8, 22).unwrap(),
+        ]
+    }
+
+    fn small_cfg() -> ServeCfg {
+        ServeCfg {
+            devices: 2,
+            max_queue_depth: 2,
+            ..ServeCfg::default()
+        }
+    }
+
+    #[test]
+    fn mixed_trace_completes_and_compiles_once() {
+        let workloads = mobilenet_pair();
+        let trace = synth_trace(&TraceCfg::new(24, 500_000, 5), workloads.len());
+        let rep = run_trace(&workloads, &trace, &small_cfg()).unwrap();
+
+        assert_eq!(rep.requests, 24);
+        assert_eq!(
+            rep.completed as u64 + rep.rejected_queue + rep.rejected_sram,
+            24,
+            "every request accounted for"
+        );
+        assert!(rep.completed > 0);
+        // One registry lookup per request; compile-once per distinct model.
+        assert_eq!(rep.cache.hits + rep.cache.misses, 24);
+        assert_eq!(rep.cache.compiles, rep.cache.misses);
+        assert!(rep.cache.compiles <= workloads.len() as u64);
+        // Latency and throughput sanity.
+        assert!(rep.latency.p50_ms > 0.0);
+        assert!(rep.latency.p50_ms <= rep.latency.p95_ms);
+        assert!(rep.latency.p95_ms <= rep.latency.p99_ms);
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.makespan_cycles > 0);
+        // Per-model accounting covers every completed request.
+        let sum: u64 = rep.per_model.iter().map(|m| m.requests).sum();
+        assert_eq!(sum, rep.completed as u64);
+        // Fleet accounting agrees.
+        let images: u64 = rep.per_device.iter().map(|d| d.images).sum();
+        assert_eq!(images, rep.completed as u64);
+    }
+
+    #[test]
+    fn batching_amortizes_invocation_overhead() {
+        let workloads = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 3).unwrap()];
+        let mk_trace = |gap: u64| -> Vec<TraceRequest> {
+            (0..8)
+                .map(|id| TraceRequest {
+                    id,
+                    arrival: id as u64 * gap,
+                    key_idx: 0,
+                    seed: 1000 + id as u64, // same inputs in both traces
+                })
+                .collect()
+        };
+        let cfg = ServeCfg {
+            devices: 1,
+            ..ServeCfg::default()
+        };
+        // Burst: all 8 arrive within the batching window -> one batch.
+        let burst = run_trace(&workloads, &mk_trace(1), &cfg).unwrap();
+        // Spread: 10 ms apart -> every request rides alone.
+        let spread = run_trace(&workloads, &mk_trace(2_160_000), &cfg).unwrap();
+
+        assert_eq!(burst.completed, 8);
+        assert_eq!(spread.completed, 8);
+        assert_eq!(burst.per_model[0].batches, 1);
+        assert_eq!(spread.per_model[0].batches, 8);
+        assert!(burst.per_model[0].mean_batch() > spread.per_model[0].mean_batch());
+        // Identical inference work; the difference is exactly the seven
+        // saved per-invocation overheads.
+        assert_eq!(
+            spread.per_model[0].cycles - burst.per_model[0].cycles,
+            7 * BATCH_OVERHEAD_CYCLES
+        );
+    }
+
+    #[test]
+    fn bounded_queue_sheds_under_burst() {
+        let workloads = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 4).unwrap()];
+        let trace: Vec<TraceRequest> = (0..10)
+            .map(|id| TraceRequest {
+                id,
+                arrival: 0,
+                key_idx: 0,
+                seed: id as u64,
+            })
+            .collect();
+        let cfg = ServeCfg {
+            devices: 1,
+            batcher: BatcherCfg {
+                max_batch: 4,
+                max_wait_cycles: 432_000,
+                max_queue: 2,
+            },
+            ..ServeCfg::default()
+        };
+        let rep = run_trace(&workloads, &trace, &cfg).unwrap();
+        // Queue holds 2; everything else in the simultaneous burst sheds
+        // (the window never expires at t=0 and 2 < max_batch).
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.rejected_queue, 8);
+        assert_eq!(rep.requests, 10);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let workloads = mobilenet_pair();
+        let trace = synth_trace(&TraceCfg::new(16, 300_000, 9), workloads.len());
+        let a = run_trace(&workloads, &trace, &small_cfg()).unwrap();
+        let b = run_trace(&workloads, &trace, &small_cfg()).unwrap();
+        assert_eq!(a.makespan_cycles, b.makespan_cycles);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.latency.p99_ms, b.latency.p99_ms);
+        assert_eq!(a.latency.mean_ms, b.latency.mean_ms);
+        assert_eq!(a.cache.hits, b.cache.hits);
+        let ca: Vec<u64> = a.per_model.iter().map(|m| m.cycles).collect();
+        let cb: Vec<u64> = b.per_model.iter().map(|m| m.cycles).collect();
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn sram_admission_rejects_oversized_tenant() {
+        // A fleet of tiny devices cannot host the model at all.
+        let workloads = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 6).unwrap()];
+        let trace = synth_trace(&TraceCfg::new(5, 100_000, 2), 1);
+        let cfg = ServeCfg {
+            devices: 2,
+            device: DeviceCfg {
+                sram_bytes: 16, // nothing fits
+                clock_hz: crate::STM32F746_CLOCK_HZ,
+            },
+            ..ServeCfg::default()
+        };
+        let rep = run_trace(&workloads, &trace, &cfg).unwrap();
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.rejected_sram, 5);
+    }
+}

@@ -1,0 +1,271 @@
+//! Multi-tenant model registry with a compile-once artifact cache.
+//!
+//! A serving deployment hosts many (backbone, method, bit-config) tenants
+//! but compiles each at most once: the registry maps a [`ModelKey`] to an
+//! `Arc<CompiledModel>` under an LRU policy, so sustained traffic pays
+//! only [`CompiledModel::run`](crate::engine::CompiledModel::run) per
+//! request. Hit/miss/compile/eviction counters make the compile-once
+//! guarantee observable (cross-checked against
+//! [`crate::engine::compile_count`] in tests and `bench-serve`).
+
+use std::sync::Arc;
+
+use crate::engine::CompiledModel;
+use crate::ops::Method;
+use crate::quant::BitConfig;
+use crate::Result;
+
+/// Identity of one served model: the triple Table I rows are keyed by.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelKey {
+    pub backbone: String,
+    pub method: Method,
+    pub cfg: BitConfig,
+}
+
+impl ModelKey {
+    pub fn new(backbone: &str, method: Method, cfg: BitConfig) -> ModelKey {
+        ModelKey {
+            backbone: backbone.to_string(),
+            method,
+            cfg,
+        }
+    }
+
+    /// Human label, e.g. `vgg_tiny/rp-slbc/w4.0a4.0`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/w{:.1}a{:.1}",
+            self.backbone,
+            self.method.name(),
+            self.cfg.avg_wbits(),
+            self.cfg.avg_abits()
+        )
+    }
+}
+
+/// Cache effectiveness counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegistryStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub compiles: u64,
+    pub evictions: u64,
+}
+
+impl RegistryStats {
+    /// Hits over lookups (0 when the registry was never queried).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct CacheEntry {
+    key: ModelKey,
+    model: Arc<CompiledModel>,
+    last_use: u64,
+}
+
+/// LRU cache of compiled deployment artifacts.
+///
+/// Entries are kept in a flat `Vec` (tenant counts are small and
+/// `BitConfig` is not hashable); recency is a logical clock bumped per
+/// lookup, which keeps eviction order deterministic. Per-model hit
+/// counts live outside the entries so eviction never loses them.
+pub struct Registry {
+    capacity: usize,
+    clock: u64,
+    entries: Vec<CacheEntry>,
+    stats: RegistryStats,
+    /// Lifetime hits per model label (first-hit order, survives
+    /// eviction and re-insertion).
+    hits_by_label: Vec<(String, u64)>,
+}
+
+impl Registry {
+    /// A registry holding at most `capacity` compiled models.
+    pub fn new(capacity: usize) -> Registry {
+        assert!(capacity >= 1, "registry capacity must be >= 1");
+        Registry {
+            capacity,
+            clock: 0,
+            entries: Vec::new(),
+            stats: RegistryStats::default(),
+            hits_by_label: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: &ModelKey) -> bool {
+        self.entries.iter().any(|e| e.key == *key)
+    }
+
+    /// Fetch the artifact for `key`, compiling (through `build`) only on
+    /// a miss. Evicts the least-recently-used entry when full.
+    pub fn get_or_compile<F>(&mut self, key: &ModelKey, build: F) -> Result<Arc<CompiledModel>>
+    where
+        F: FnOnce() -> Result<CompiledModel>,
+    {
+        self.clock += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == *key) {
+            e.last_use = self.clock;
+            self.stats.hits += 1;
+            let model = e.model.clone();
+            let label = key.label();
+            match self.hits_by_label.iter_mut().find(|(l, _)| *l == label) {
+                Some((_, h)) => *h += 1,
+                None => self.hits_by_label.push((label, 1)),
+            }
+            return Ok(model);
+        }
+        self.stats.misses += 1;
+        let model = Arc::new(build()?);
+        self.stats.compiles += 1;
+        if self.entries.len() == self.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+                .expect("capacity >= 1 so the cache is non-empty");
+            self.entries.remove(lru);
+            self.stats.evictions += 1;
+        }
+        self.entries.push(CacheEntry {
+            key: key.clone(),
+            model: model.clone(),
+            last_use: self.clock,
+        });
+        Ok(model)
+    }
+
+    pub fn stats(&self) -> &RegistryStats {
+        &self.stats
+    }
+
+    /// Lifetime per-model hit counts `(label, hits)` in first-hit order.
+    /// Counts survive eviction and re-insertion, so they always reflect
+    /// the true amortization of each model's compilations.
+    pub fn per_model_hits(&self) -> Vec<(String, u64)> {
+        self.hits_by_label.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine;
+    use crate::models::mobilenet_tiny;
+    use crate::util::prng::Rng;
+
+    fn key(bits: u8, method: Method) -> ModelKey {
+        let m = mobilenet_tiny(2, 16);
+        ModelKey::new(&m.name, method, BitConfig::uniform(m.num_layers(), bits))
+    }
+
+    fn build(bits: u8, method: Method) -> Result<CompiledModel> {
+        let m = mobilenet_tiny(2, 16);
+        let mut rng = Rng::new(11);
+        let params: Vec<f32> = (0..m.param_count).map(|_| rng.normal() * 0.1).collect();
+        CompiledModel::compile(&m, &params, &BitConfig::uniform(m.num_layers(), bits), method)
+    }
+
+    #[test]
+    fn hit_avoids_recompilation() {
+        let mut reg = Registry::new(4);
+        let k = key(4, Method::RpSlbc);
+        // Count actual constructions through the closure (the global
+        // engine::compile_count is shared across test threads, so it is
+        // only checked for monotonicity here).
+        let built = std::cell::Cell::new(0u32);
+        let before = engine::compile_count();
+        for _ in 0..3 {
+            reg.get_or_compile(&k, || {
+                built.set(built.get() + 1);
+                build(4, Method::RpSlbc)
+            })
+            .unwrap();
+        }
+        assert_eq!(built.get(), 1, "the artifact must be compiled exactly once");
+        assert!(engine::compile_count() > before);
+        assert_eq!(reg.stats().compiles, 1);
+        assert_eq!(reg.stats().hits, 2);
+        assert_eq!(reg.stats().misses, 1);
+        assert_eq!(reg.per_model_hits(), vec![(k.label(), 2)]);
+    }
+
+    #[test]
+    fn distinct_keys_compile_separately() {
+        let mut reg = Registry::new(4);
+        reg.get_or_compile(&key(4, Method::RpSlbc), || build(4, Method::RpSlbc))
+            .unwrap();
+        reg.get_or_compile(&key(8, Method::TinyEngine), || build(8, Method::TinyEngine))
+            .unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.stats().compiles, 2);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut reg = Registry::new(2);
+        let (k2, k4, k8) = (
+            key(2, Method::RpSlbc),
+            key(4, Method::RpSlbc),
+            key(8, Method::RpSlbc),
+        );
+        reg.get_or_compile(&k2, || build(2, Method::RpSlbc)).unwrap();
+        reg.get_or_compile(&k4, || build(4, Method::RpSlbc)).unwrap();
+        // Touch k2 so k4 becomes the LRU, then insert k8.
+        reg.get_or_compile(&k2, || build(2, Method::RpSlbc)).unwrap();
+        reg.get_or_compile(&k8, || build(8, Method::RpSlbc)).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert!(reg.contains(&k2));
+        assert!(!reg.contains(&k4), "LRU entry must be evicted");
+        assert!(reg.contains(&k8));
+        assert_eq!(reg.stats().evictions, 1);
+        // Re-fetching the evicted key recompiles.
+        reg.get_or_compile(&k4, || build(4, Method::RpSlbc)).unwrap();
+        assert_eq!(reg.stats().compiles, 4);
+    }
+
+    #[test]
+    fn per_model_hits_survive_eviction() {
+        let mut reg = Registry::new(1);
+        let (k2, k4) = (key(2, Method::RpSlbc), key(4, Method::RpSlbc));
+        reg.get_or_compile(&k2, || build(2, Method::RpSlbc)).unwrap();
+        reg.get_or_compile(&k2, || build(2, Method::RpSlbc)).unwrap(); // hit
+        reg.get_or_compile(&k4, || build(4, Method::RpSlbc)).unwrap(); // evicts k2
+        reg.get_or_compile(&k2, || build(2, Method::RpSlbc)).unwrap(); // recompile
+        reg.get_or_compile(&k2, || build(2, Method::RpSlbc)).unwrap(); // hit again
+        assert!(!reg.contains(&k4));
+        let hits = reg.per_model_hits();
+        let k2_hits = hits.iter().find(|(l, _)| *l == k2.label()).map(|(_, h)| *h);
+        // Both hits survive the eviction + re-insertion cycle.
+        assert_eq!(k2_hits, Some(2));
+        assert_eq!(reg.stats().evictions, 2);
+        assert_eq!(reg.stats().compiles, 3);
+    }
+
+    #[test]
+    fn hit_rate_bounds() {
+        let mut reg = Registry::new(2);
+        assert_eq!(reg.stats().hit_rate(), 0.0);
+        let k = key(4, Method::Slbc);
+        reg.get_or_compile(&k, || build(4, Method::Slbc)).unwrap();
+        reg.get_or_compile(&k, || build(4, Method::Slbc)).unwrap();
+        assert_eq!(reg.stats().hit_rate(), 0.5);
+    }
+}

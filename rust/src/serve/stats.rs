@@ -1,0 +1,321 @@
+//! Virtual-time serving metrics: request latency percentiles, fleet
+//! throughput, per-model and per-device accounting, and the cache
+//! effectiveness counters — renderable as aligned tables (CLI) or one
+//! JSON object (trend tracking across PRs).
+//!
+//! All latencies are *virtual MCU time*: cycles between a request's
+//! arrival and its batch's completion on a device, converted at the
+//! paper's 216 MHz clock. Wall-clock appears only as `wall_s`, the host
+//! time spent simulating.
+
+use std::collections::BTreeMap;
+
+use crate::cycles_to_ms;
+use crate::util::bench::{percentile, Table};
+use crate::util::json::Json;
+
+use super::registry::RegistryStats;
+
+/// Latency distribution summary (milliseconds of virtual MCU time).
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    /// Summarize request latencies given in cycles.
+    pub fn from_cycles(latencies: &[u64]) -> LatencySummary {
+        if latencies.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut ms: Vec<f64> = latencies.iter().map(|&c| cycles_to_ms(c)).collect();
+        ms.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        LatencySummary {
+            p50_ms: percentile(&ms, 0.50),
+            p95_ms: percentile(&ms, 0.95),
+            p99_ms: percentile(&ms, 0.99),
+            mean_ms: ms.iter().sum::<f64>() / ms.len() as f64,
+            max_ms: *ms.last().expect("non-empty"),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("p50_ms".into(), Json::Num(self.p50_ms));
+        o.insert("p95_ms".into(), Json::Num(self.p95_ms));
+        o.insert("p99_ms".into(), Json::Num(self.p99_ms));
+        o.insert("mean_ms".into(), Json::Num(self.mean_ms));
+        o.insert("max_ms".into(), Json::Num(self.max_ms));
+        Json::Obj(o)
+    }
+}
+
+/// Accounting for one served model.
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub label: String,
+    pub requests: u64,
+    pub batches: u64,
+    /// Total device cycles spent on this model (incl. batch overhead).
+    pub cycles: u64,
+    pub cache_hits: u64,
+    pub peak_sram: usize,
+    pub flash_bytes: usize,
+    /// Packing density of the compiled kernels (MACs per SIMD multiply).
+    pub macs_per_instr: f64,
+}
+
+impl ModelStats {
+    /// Mean images per device invocation — the dynamic-batching win.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Accounting for one fleet device.
+#[derive(Debug, Clone)]
+pub struct DeviceStats {
+    pub id: usize,
+    pub batches: u64,
+    pub images: u64,
+    pub busy_cycles: u64,
+    /// Busy fraction of the whole makespan.
+    pub utilization: f64,
+}
+
+/// Everything one trace replay produced.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Requests in the trace.
+    pub requests: usize,
+    /// Requests that completed an inference.
+    pub completed: usize,
+    /// Requests shed by the bounded queue.
+    pub rejected_queue: u64,
+    /// Requests rejected because no device's SRAM fits their model.
+    pub rejected_sram: u64,
+    /// Virtual cycle the last batch finished.
+    pub makespan_cycles: u64,
+    /// Completed requests per second of virtual MCU time.
+    pub throughput_rps: f64,
+    pub latency: LatencySummary,
+    pub per_model: Vec<ModelStats>,
+    pub per_device: Vec<DeviceStats>,
+    pub cache: RegistryStats,
+    /// `engine::compile_count` delta over the replay (compile-once proof).
+    pub engine_compiles: u64,
+    /// Host wall-clock seconds spent simulating.
+    pub wall_s: f64,
+}
+
+impl ServeReport {
+    /// Virtual seconds from first arrival epoch (cycle 0) to makespan.
+    pub fn virtual_s(&self) -> f64 {
+        self.makespan_cycles as f64 / crate::STM32F746_CLOCK_HZ as f64
+    }
+
+    /// Render the summary + per-model + per-device tables.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests {}  completed {}  shed(queue) {}  rejected(sram) {}\n",
+            self.requests, self.completed, self.rejected_queue, self.rejected_sram
+        ));
+        out.push_str(&format!(
+            "virtual time {:.3}s  throughput {:.1} req/s  latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms (mean {:.2}ms, max {:.2}ms)\n",
+            self.virtual_s(),
+            self.throughput_rps,
+            self.latency.p50_ms,
+            self.latency.p95_ms,
+            self.latency.p99_ms,
+            self.latency.mean_ms,
+            self.latency.max_ms
+        ));
+        out.push_str(&format!(
+            "artifact cache: {} hits / {} misses ({:.0}% hit rate), {} compiles, {} evictions (engine compile count +{})\n\n",
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.hit_rate() * 100.0,
+            self.cache.compiles,
+            self.cache.evictions,
+            self.engine_compiles
+        ));
+
+        let mut mt = Table::new(vec![
+            "model", "requests", "batches", "mean batch", "cycles", "cache hits", "peak SRAM",
+            "flash", "MACs/instr",
+        ]);
+        for m in &self.per_model {
+            mt.row(vec![
+                m.label.clone(),
+                format!("{}", m.requests),
+                format!("{}", m.batches),
+                format!("{:.2}", m.mean_batch()),
+                format!("{}", m.cycles),
+                format!("{}", m.cache_hits),
+                format!("{:.1}KB", m.peak_sram as f64 / 1024.0),
+                format!("{:.1}KB", m.flash_bytes as f64 / 1024.0),
+                format!("{:.2}", m.macs_per_instr),
+            ]);
+        }
+        out.push_str(&mt.render());
+        out.push('\n');
+
+        let mut dt = Table::new(vec!["device", "batches", "images", "busy cycles", "util"]);
+        for d in &self.per_device {
+            dt.row(vec![
+                format!("mcu{}", d.id),
+                format!("{}", d.batches),
+                format!("{}", d.images),
+                format!("{}", d.busy_cycles),
+                format!("{:.1}%", d.utilization * 100.0),
+            ]);
+        }
+        out.push_str(&dt.render());
+        out
+    }
+
+    /// One JSON object for machine consumption (bench trend lines).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("requests".into(), Json::Num(self.requests as f64));
+        o.insert("completed".into(), Json::Num(self.completed as f64));
+        o.insert(
+            "rejected_queue".into(),
+            Json::Num(self.rejected_queue as f64),
+        );
+        o.insert("rejected_sram".into(), Json::Num(self.rejected_sram as f64));
+        o.insert(
+            "makespan_cycles".into(),
+            Json::Num(self.makespan_cycles as f64),
+        );
+        o.insert("virtual_s".into(), Json::Num(self.virtual_s()));
+        o.insert("throughput_rps".into(), Json::Num(self.throughput_rps));
+        o.insert("latency".into(), self.latency.to_json());
+        o.insert(
+            "cache_hit_rate".into(),
+            Json::Num(self.cache.hit_rate()),
+        );
+        o.insert("cache_hits".into(), Json::Num(self.cache.hits as f64));
+        o.insert(
+            "cache_compiles".into(),
+            Json::Num(self.cache.compiles as f64),
+        );
+        o.insert(
+            "engine_compiles".into(),
+            Json::Num(self.engine_compiles as f64),
+        );
+        o.insert("wall_s".into(), Json::Num(self.wall_s));
+        let models: Vec<Json> = self
+            .per_model
+            .iter()
+            .map(|m| {
+                let mut mo = BTreeMap::new();
+                mo.insert("model".into(), Json::Str(m.label.clone()));
+                mo.insert("requests".into(), Json::Num(m.requests as f64));
+                mo.insert("batches".into(), Json::Num(m.batches as f64));
+                mo.insert("mean_batch".into(), Json::Num(m.mean_batch()));
+                mo.insert("cycles".into(), Json::Num(m.cycles as f64));
+                mo.insert("cache_hits".into(), Json::Num(m.cache_hits as f64));
+                mo.insert("peak_sram".into(), Json::Num(m.peak_sram as f64));
+                mo.insert("flash_bytes".into(), Json::Num(m.flash_bytes as f64));
+                mo.insert("macs_per_instr".into(), Json::Num(m.macs_per_instr));
+                Json::Obj(mo)
+            })
+            .collect();
+        o.insert("per_model".into(), Json::Arr(models));
+        let devices: Vec<Json> = self
+            .per_device
+            .iter()
+            .map(|d| {
+                let mut obj = BTreeMap::new();
+                obj.insert("device".into(), Json::Num(d.id as f64));
+                obj.insert("batches".into(), Json::Num(d.batches as f64));
+                obj.insert("images".into(), Json::Num(d.images as f64));
+                obj.insert("busy_cycles".into(), Json::Num(d.busy_cycles as f64));
+                obj.insert("utilization".into(), Json::Num(d.utilization));
+                Json::Obj(obj)
+            })
+            .collect();
+        o.insert("per_device".into(), Json::Arr(devices));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_summary_orders_percentiles() {
+        let lat: Vec<u64> = (1..=100).map(|i| i * 216_000).collect(); // 1..100 ms
+        let s = LatencySummary::from_cycles(&lat);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms);
+        assert!(s.p99_ms <= s.max_ms);
+        assert!((s.p50_ms - 50.5).abs() < 0.6, "p50 {}", s.p50_ms);
+        assert!((s.max_ms - 100.0).abs() < 1e-6);
+        assert!((s.mean_ms - 50.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_latencies_are_zero() {
+        let s = LatencySummary::from_cycles(&[]);
+        assert_eq!(s.p99_ms, 0.0);
+        assert_eq!(s.mean_ms, 0.0);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let rep = ServeReport {
+            requests: 10,
+            completed: 9,
+            rejected_queue: 1,
+            rejected_sram: 0,
+            makespan_cycles: 216_000_000,
+            throughput_rps: 9.0,
+            latency: LatencySummary::from_cycles(&[216_000, 432_000]),
+            per_model: vec![ModelStats {
+                label: "vgg_tiny/rp-slbc/w4.0a4.0".into(),
+                requests: 9,
+                batches: 3,
+                cycles: 1000,
+                cache_hits: 8,
+                peak_sram: 2048,
+                flash_bytes: 4096,
+                macs_per_instr: 3.5,
+            }],
+            per_device: vec![DeviceStats {
+                id: 0,
+                batches: 3,
+                images: 9,
+                busy_cycles: 1000,
+                utilization: 0.5,
+            }],
+            cache: RegistryStats {
+                hits: 8,
+                misses: 1,
+                compiles: 1,
+                evictions: 0,
+            },
+            engine_compiles: 1,
+            wall_s: 0.01,
+        };
+        let txt = rep.render();
+        assert!(txt.contains("throughput"));
+        assert!(txt.contains("vgg_tiny/rp-slbc"));
+        assert!(txt.contains("mcu0"));
+        let js = rep.to_json().to_string_compact();
+        assert!(js.contains("\"throughput_rps\":9"));
+        assert!(js.contains("\"per_model\""));
+        assert!((rep.virtual_s() - 1.0).abs() < 1e-9);
+        assert_eq!(rep.per_model[0].mean_batch(), 3.0);
+    }
+}

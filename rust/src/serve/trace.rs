@@ -1,0 +1,138 @@
+//! Deterministic synthetic request traces.
+//!
+//! A trace is a sequence of (arrival cycle, model, input seed) triples:
+//! arrivals follow a Poisson process (exponential inter-arrival times at
+//! a configurable mean), the model of each request is drawn from a
+//! weighted mix, and every request carries a fork of the trace PRNG so
+//! its input image is reproducible independently of processing order.
+
+use crate::util::prng::Rng;
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub id: usize,
+    /// Arrival time in virtual cycles (non-decreasing along the trace).
+    pub arrival: u64,
+    /// Index into the workload table of the replay.
+    pub key_idx: usize,
+    /// Seed for this request's synthetic input image.
+    pub seed: u64,
+}
+
+/// Trace-generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceCfg {
+    pub requests: usize,
+    /// Mean inter-arrival gap in cycles (Poisson process). At 216 MHz,
+    /// 2_160_000 cycles ≈ one request every 10 ms ≈ 100 req/s offered.
+    pub mean_gap_cycles: u64,
+    /// Relative traffic weight per workload (index-aligned; empty =
+    /// uniform).
+    pub weights: Vec<f64>,
+    pub seed: u64,
+}
+
+impl TraceCfg {
+    pub fn new(requests: usize, mean_gap_cycles: u64, seed: u64) -> TraceCfg {
+        TraceCfg {
+            requests,
+            mean_gap_cycles,
+            weights: Vec::new(),
+            seed,
+        }
+    }
+}
+
+/// Generate a synthetic trace over `num_keys` workloads.
+pub fn synth_trace(cfg: &TraceCfg, num_keys: usize) -> Vec<TraceRequest> {
+    assert!(num_keys >= 1, "trace needs at least one workload");
+    let weights: Vec<f64> = if cfg.weights.is_empty() {
+        vec![1.0; num_keys]
+    } else {
+        assert_eq!(cfg.weights.len(), num_keys, "one weight per workload");
+        cfg.weights.clone()
+    };
+    let wsum: f64 = weights.iter().sum();
+    assert!(wsum > 0.0, "weights must not all be zero");
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0u64;
+    (0..cfg.requests)
+        .map(|id| {
+            // Exponential inter-arrival (clamped away from ln(0)).
+            let u = (rng.f32() as f64).max(1e-7);
+            let gap = (-u.ln() * cfg.mean_gap_cycles as f64) as u64;
+            t = t.saturating_add(gap);
+            // Weighted model pick.
+            let mut pick = rng.f32() as f64 * wsum;
+            let mut key_idx = num_keys - 1;
+            for (i, w) in weights.iter().enumerate() {
+                if pick < *w {
+                    key_idx = i;
+                    break;
+                }
+                pick -= w;
+            }
+            TraceRequest {
+                id,
+                arrival: t,
+                key_idx,
+                seed: rng.next_u64(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let cfg = TraceCfg::new(50, 100_000, 42);
+        let a = synth_trace(&cfg, 2);
+        let b = synth_trace(&cfg, 2);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.key_idx, y.key_idx);
+            assert_eq!(x.seed, y.seed);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival, "arrivals must be sorted");
+        }
+    }
+
+    #[test]
+    fn mean_gap_tracks_config() {
+        let cfg = TraceCfg::new(2000, 1_000_000, 7);
+        let tr = synth_trace(&cfg, 1);
+        let span = tr.last().unwrap().arrival as f64;
+        let mean_gap = span / tr.len() as f64;
+        // Exponential mean should land near the configured gap.
+        assert!(
+            (0.8..1.2).contains(&(mean_gap / 1_000_000.0)),
+            "mean gap {mean_gap}"
+        );
+    }
+
+    #[test]
+    fn weighted_mix_respected() {
+        let mut cfg = TraceCfg::new(3000, 1000, 9);
+        cfg.weights = vec![3.0, 1.0];
+        let tr = synth_trace(&cfg, 2);
+        let heavy = tr.iter().filter(|r| r.key_idx == 0).count() as f64;
+        let frac = heavy / tr.len() as f64;
+        assert!((0.68..0.82).contains(&frac), "mix fraction {frac}");
+    }
+
+    #[test]
+    fn request_seeds_differ() {
+        let tr = synth_trace(&TraceCfg::new(20, 1000, 3), 1);
+        let mut seeds: Vec<u64> = tr.iter().map(|r| r.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 20, "every request gets its own input seed");
+    }
+}

