@@ -25,7 +25,7 @@ fn main() {
     let mut t = Table::new(vec!["bits (w=a)", "4x8b", "2x16b", "1x32b", "64b", "adaptive"]);
     for bits in 2..=8u32 {
         let mut row = vec![format!("{bits}")];
-        for cfg in LaneCfg::all() {
+        for &cfg in LaneCfg::all() {
             let c = best_plan_with(&[cfg], bits, bits, 3)
                 .map(|p| format!("{:.3}", p.cost_per_mac))
                 .unwrap_or_else(|| "—".into());
@@ -38,7 +38,7 @@ fn main() {
     t.print();
     for bits in 2..=8u32 {
         let a = best_plan(bits, bits, 3).unwrap().cost_per_mac;
-        for cfg in LaneCfg::all() {
+        for &cfg in LaneCfg::all() {
             if let Some(p) = best_plan_with(&[cfg], bits, bits, 3) {
                 assert!(a <= p.cost_per_mac + 1e-9, "adaptive must dominate at {bits}b");
             }
@@ -53,8 +53,8 @@ fn main() {
         let minf = field_width(bits, bits, 3);
         let plan = best_plan(bits, bits, 3).unwrap();
         let min_plan = LaneCfg::all()
-            .into_iter()
-            .filter_map(|c| best_plan_with(&[c], bits, bits, 3))
+            .iter()
+            .filter_map(|&c| best_plan_with(&[c], bits, bits, 3))
             .filter(|p| p.field == field_width(bits, bits, 3))
             .map(|p| p.cost_per_mac)
             .fold(f64::INFINITY, f64::min);

@@ -1,0 +1,46 @@
+//! Conv hot-path throughput bench (per-PR trend line).
+//!
+//! Measures the rolling-row SLBC pipeline (pre-packed kernels + reusable
+//! scratch — the steady state of a serve request) against the pre-PR
+//! operator retained in `ops::slbc::legacy`, reporting host ns/layer and
+//! modeled cycles per method and bitwidth, plus one JSON summary line.
+//!
+//! Acceptance guard: ≥ 2× mean host-side throughput on stride-1 k=3 conv
+//! layers. Smoke mode (`MCU_MIXQ_SMOKE=1`) keeps the trend line cheap and
+//! swaps the guard for the deterministic modeled-cycle invariant —
+//! single-repeat wall-clock means on tiny layers are too noisy to gate on.
+//!
+//! Regenerate with `cargo bench --bench conv_hotpath`.
+
+use mcu_mixq::perf::conv_hotpath::{run, ConvBenchCfg};
+
+fn main() {
+    let smoke = std::env::var("MCU_MIXQ_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let mut cfg = if smoke {
+        ConvBenchCfg::smoke()
+    } else {
+        ConvBenchCfg::default()
+    };
+    if let Ok(r) = std::env::var("MCU_MIXQ_BENCH_REPEATS") {
+        if let Ok(n) = r.parse() {
+            cfg.repeats = n;
+        }
+    }
+
+    println!("conv_hotpath — rolling-row SLBC pipeline vs pre-PR operator\n");
+    let rep = run(&cfg);
+    print!("{}", rep.render());
+    let sp = rep.mean_speedup_conv3x3();
+    println!(
+        "\nmean host speedup on stride-1 k=3 convs: {sp:.2}x  (modeled cycle ratio {:.3}x)",
+        rep.mean_cycle_ratio()
+    );
+    println!("{}", rep.to_json().to_string_compact());
+
+    // The acceptance guard of the rolling-row refactor: deterministic
+    // cycle invariant always, the >= 2x wall-clock bar in full mode only.
+    rep.check_cycle_invariant().expect("cycle invariant");
+    if !smoke {
+        rep.check_speedup(2.0).expect("speedup acceptance");
+    }
+}

@@ -7,6 +7,12 @@
 //! @216 MHz and accuracy. The paper's headline: 2.1× over CMix-NN, 1.4×
 //! over TinyEngine(MCUNet) at the same resource/accuracy constraints.
 //!
+//! Artifact reuse: each method's row is produced from **one**
+//! `CompiledModel` (compile → run on the artifact, `deploy_all_methods`),
+//! so no per-trial recompilation happens anywhere in this protocol; the
+//! pre-packed kernel registers of the SLBC rows ride along in the
+//! artifact's `KernelCache`.
+//!
 //! Needs `artifacts/`. Step counts can be overridden with
 //! `MCU_MIXQ_SEARCH_STEPS` / `MCU_MIXQ_QAT_STEPS`.
 //!

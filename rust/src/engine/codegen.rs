@@ -23,8 +23,14 @@ use crate::simd::adaptive::{best_plan, LanePlan};
 pub struct KernelChoice {
     pub layer_idx: usize,
     pub method: Method,
-    /// Adaptive lane plan (SLBC methods only).
+    /// Adaptive lane plan (SLBC methods only), resolved through the
+    /// memoized `best_plan` search — one search per distinct
+    /// `(abits, wbits, k)` triple per process, not one per layer.
     pub lane_plan: Option<LanePlan>,
+    /// Whether the emitted kernel actually uses RP-SLBC's reordered
+    /// segmentation: compile-time adaptivity keeps naive segmentation
+    /// where Theorem IV.1 buys nothing (mirrors `ops::slbc`).
+    pub uses_reordering: bool,
     /// Whether codegen emits an unrolled, shape-specialized loop nest.
     pub specialized: bool,
     /// Estimated generated-code bytes for this kernel.
@@ -55,6 +61,11 @@ impl CodegenPlan {
                     }
                     _ => None,
                 };
+                let uses_reordering = method == Method::RpSlbc
+                    && lane_plan
+                        .as_ref()
+                        .map(|p| p.reordering_wins())
+                        .unwrap_or(false);
                 let base = match l.kind {
                     LayerKind::Conv => 900,
                     LayerKind::DwConv => 700,
@@ -67,6 +78,7 @@ impl CodegenPlan {
                     layer_idx: i,
                     method,
                     lane_plan,
+                    uses_reordering,
                     specialized,
                     code_bytes,
                 }
@@ -133,6 +145,27 @@ mod tests {
         let plan = CodegenPlan::generate(&m, &cfg, Method::RpSlbc);
         assert!(plan.kernels.iter().all(|k| k.lane_plan.is_some()));
         assert!(plan.kernels.iter().all(|k| k.specialized));
+    }
+
+    #[test]
+    fn reordering_flag_mirrors_operator_adaptivity() {
+        let m = vgg_tiny(10, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 2);
+        // Naive SLBC never reorders.
+        let slbc = CodegenPlan::generate(&m, &cfg, Method::Slbc);
+        assert!(slbc.kernels.iter().all(|k| !k.uses_reordering));
+        // RP-SLBC at 2-bit: the dense sub-byte fields make Theorem IV.1
+        // profitable on the conv layers.
+        let rp = CodegenPlan::generate(&m, &cfg, Method::RpSlbc);
+        assert!(rp.kernels.iter().any(|k| k.uses_reordering));
+        // The flag is only ever set where a reordered plan exists and wins.
+        for k in &rp.kernels {
+            if k.uses_reordering {
+                let p = k.lane_plan.as_ref().unwrap();
+                let r = p.reordered.as_ref().unwrap();
+                assert!(r.seg_ops_per_instr() < p.conv.seg_ops_per_instr());
+            }
+        }
     }
 
     #[test]

@@ -10,9 +10,10 @@
 
 use anyhow::Result;
 
+use super::KernelCache;
 use crate::mcu::{Counter, CycleModel};
 use crate::models::ModelDesc;
-use crate::ops::{common, Method};
+use crate::ops::{common, slbc, Method};
 use crate::quant::{quantize_acts, BitConfig, QWeights};
 
 /// Outcome of one (batch-1) inference.
@@ -30,7 +31,10 @@ pub struct InferenceResult {
     pub per_layer: Vec<(String, u64)>,
 }
 
-/// Run one image through the quantized model with `method`.
+/// Run one image through the quantized model with `method`, re-packing
+/// SLBC kernel registers on the fly. Repeated inference should go through
+/// [`infer_with_kernels`] (what [`super::CompiledModel::run`] does) so the
+/// packing happens once at compile time.
 pub fn infer(
     model: &ModelDesc,
     quantized: &[(QWeights, Vec<f32>)],
@@ -38,6 +42,23 @@ pub fn infer(
     method: Method,
     image: &[f32],
     cycle_model: &CycleModel,
+) -> Result<InferenceResult> {
+    infer_with_kernels(model, quantized, cfg, method, image, cycle_model, None)
+}
+
+/// [`infer`] over an optional pre-packed [`KernelCache`]: layers with a
+/// cached kernel skip host-side packing entirely (charging is identical —
+/// the modeled MCU streams packed registers from flash either way, so
+/// cached and uncached runs stay cycle-exact with each other).
+#[allow(clippy::too_many_arguments)]
+pub fn infer_with_kernels(
+    model: &ModelDesc,
+    quantized: &[(QWeights, Vec<f32>)],
+    cfg: &BitConfig,
+    method: Method,
+    image: &[f32],
+    cycle_model: &CycleModel,
+    kernels: Option<&KernelCache>,
 ) -> Result<InferenceResult> {
     anyhow::ensure!(
         image.len() == model.input_hw * model.input_hw * model.input_c,
@@ -54,11 +75,13 @@ pub fn infer(
     let qin = quantize_acts(image, 8);
     let mut x = qin.data;
     let mut a_scale = qin.scale;
-    let mut in_bits = 8u8;
 
     let n = model.layers.len();
     let mut logits = Vec::new();
     for (i, l) in model.layers.iter().enumerate() {
+        // The activation width this layer consumes — the same derivation
+        // KernelCache::build packs for (single source of truth).
+        let in_bits = super::layer_in_bits(cfg, i);
         let cycles_before = ctr.cycles(cycle_model);
         // GAP before the classifier (MobileNet-Tiny).
         if l.gap_before {
@@ -69,7 +92,18 @@ pub fn infer(
         let (qw, bias) = &quantized[i];
         let sf = qw.scale * a_scale;
         let bias_i: Vec<i64> = bias.iter().map(|&b| (b / sf).round() as i64).collect();
-        let acc = method.run_layer(&x, &qw.data, l, cfg.wbits[i], in_bits, &mut ctr);
+        let acc = match kernels.and_then(|kc| kc.layer(i)) {
+            Some(lk) => {
+                debug_assert_eq!(
+                    lk.bits(),
+                    (cfg.wbits[i], in_bits),
+                    "cached kernel packed for different bitwidths ({})",
+                    l.name
+                );
+                slbc::run_layer_cached(&x, l, lk, &mut ctr)
+            }
+            None => method.run_layer(&x, &qw.data, l, cfg.wbits[i], in_bits, &mut ctr),
+        };
 
         if i + 1 == n {
             // Final logits: dequantize.
@@ -91,7 +125,6 @@ pub fn infer(
         }
         x = common::requantize(&acc, &bias_i, l.cout, next_bits, &mut ctr);
         a_scale = maxv as f32 * sf / ((1u64 << next_bits) - 1) as f32;
-        in_bits = next_bits;
 
         if l.pool_after {
             x = common::maxpool_2x2(&x, l.out_h, l.out_w, l.cout, &mut ctr);
@@ -135,6 +168,20 @@ pub fn infer_batch_detailed(
     images: &[f32],
     cycle_model: &CycleModel,
 ) -> Result<Vec<InferenceResult>> {
+    infer_batch_with_kernels(model, quantized, cfg, method, images, cycle_model, None)
+}
+
+/// [`infer_batch_detailed`] over an optional pre-packed [`KernelCache`].
+#[allow(clippy::too_many_arguments)]
+pub fn infer_batch_with_kernels(
+    model: &ModelDesc,
+    quantized: &[(QWeights, Vec<f32>)],
+    cfg: &BitConfig,
+    method: Method,
+    images: &[f32],
+    cycle_model: &CycleModel,
+    kernels: Option<&KernelCache>,
+) -> Result<Vec<InferenceResult>> {
     let img_sz = model.input_hw * model.input_hw * model.input_c;
     anyhow::ensure!(
         img_sz > 0 && images.len() % img_sz == 0,
@@ -144,13 +191,14 @@ pub fn infer_batch_detailed(
     );
     (0..images.len() / img_sz)
         .map(|i| {
-            infer(
+            infer_with_kernels(
                 model,
                 quantized,
                 cfg,
                 method,
                 &images[i * img_sz..(i + 1) * img_sz],
                 cycle_model,
+                kernels,
             )
         })
         .collect()

@@ -21,9 +21,12 @@
 //!
 //! Compilation and execution are split, mirroring real MCU deployment
 //! stacks: [`CompiledModel::compile`] does the one-time work (graph,
-//! memory plan, quantized params, codegen plan, flash image) and
+//! memory plan, quantized params, codegen plan, flash image, and the
+//! [`KernelCache`] of pre-packed SLBC kernel registers) and
 //! [`CompiledModel::run`] is the cheap per-inference path the serving
-//! layer ([`crate::serve`]) reuses across requests. The [`deploy`] entry
+//! layer ([`crate::serve`]) reuses across requests — zero kernel
+//! re-packing per request, enforced by tests against
+//! [`crate::ops::slbc::kernel_pack_count`]. The [`deploy`] entry
 //! point is a thin compile-then-run wrapper that produces the
 //! [`DeployReport`] rows of Table I.
 
@@ -34,7 +37,10 @@ pub mod graph;
 pub mod planner;
 
 pub use codegen::{CodegenPlan, KernelChoice};
-pub use executor::{infer, infer_batch, infer_batch_detailed, InferenceResult};
+pub use executor::{
+    infer, infer_batch, infer_batch_detailed, infer_batch_with_kernels, infer_with_kernels,
+    InferenceResult,
+};
 pub use flash::FlashImage;
 pub use graph::{Graph, Node, NodeOp, TensorInfo};
 pub use planner::{plan_memory, MemoryPlan, PlanStrategy};
@@ -43,6 +49,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::mcu::CycleModel;
 use crate::models::ModelDesc;
+use crate::ops::slbc::LayerKernel;
 use crate::ops::Method;
 use crate::quant::{quantize_model, BitConfig, QWeights};
 use crate::{cycles_to_ms, Result};
@@ -75,6 +82,77 @@ pub fn compile_count() -> u64 {
     COMPILE_COUNT.load(Ordering::Relaxed)
 }
 
+/// Activation bitwidth layer `i` consumes at run time: the executor feeds
+/// layer 0 the 8-bit quantized input image (the standard deployment
+/// contract, cf. TinyEngine); every later layer consumes its own
+/// configured activation width. The single source of truth shared by the
+/// executor's dispatch and [`KernelCache::build`] — the packed plan must
+/// match the runtime width exactly.
+pub(crate) fn layer_in_bits(cfg: &BitConfig, i: usize) -> u8 {
+    if i == 0 {
+        8
+    } else {
+        cfg.abits[i]
+    }
+}
+
+/// Per-layer pre-packed SLBC kernel state (packed kernel registers + the
+/// memoized lane plan, each entry keyed by its layer's shape and
+/// `(wbits, abits)` pair), built once at compile time so repeated
+/// inference never re-packs weights — the register-file-resident packing
+/// discipline of CMix-NN-class kernels, hoisted to deploy time.
+///
+/// Baseline (non-SLBC) methods carry an empty cache: their kernels hold
+/// no packed state. The zero-repack guarantee is observable through
+/// [`crate::ops::slbc::kernel_pack_count`].
+#[derive(Debug, Clone, Default)]
+pub struct KernelCache {
+    layers: Vec<Option<LayerKernel>>,
+}
+
+impl KernelCache {
+    /// Pre-pack every layer's kernel registers for an SLBC method; empty
+    /// for methods without packed kernel state.
+    pub fn build(
+        model: &ModelDesc,
+        quantized: &[(QWeights, Vec<f32>)],
+        cfg: &BitConfig,
+        method: Method,
+    ) -> KernelCache {
+        let reordered = match method {
+            Method::Slbc => false,
+            Method::RpSlbc => true,
+            _ => return KernelCache::default(),
+        };
+        let layers = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let abits = layer_in_bits(cfg, i);
+                Some(LayerKernel::build(
+                    &quantized[i].0.data,
+                    l,
+                    cfg.wbits[i],
+                    abits,
+                    reordered,
+                ))
+            })
+            .collect();
+        KernelCache { layers }
+    }
+
+    /// The pre-packed kernel of layer `i`, if this method carries one.
+    pub fn layer(&self, i: usize) -> Option<&LayerKernel> {
+        self.layers.get(i).and_then(|o| o.as_ref())
+    }
+
+    /// Number of layers with pre-packed kernel state.
+    pub fn packed_layers(&self) -> usize {
+        self.layers.iter().filter(|o| o.is_some()).count()
+    }
+}
+
 /// The one-time compilation product for one (model, config, method)
 /// triple: everything `deploy` used to rebuild per call, built once and
 /// reusable across arbitrarily many [`run`](CompiledModel::run) calls.
@@ -89,6 +167,9 @@ pub struct CompiledModel {
     pub codegen: CodegenPlan,
     pub flash: FlashImage,
     pub cycle_model: CycleModel,
+    /// Pre-packed SLBC kernel registers (empty for baseline methods):
+    /// the run path streams these instead of re-packing per inference.
+    pub kernels: KernelCache,
 }
 
 impl CompiledModel {
@@ -143,6 +224,7 @@ impl CompiledModel {
             flash.matches(&quantized),
             "flash image must round-trip the quantized weights"
         );
+        let kernels = KernelCache::build(model, &quantized, cfg, method);
         COMPILE_COUNT.fetch_add(1, Ordering::Relaxed);
         CompiledModel {
             model: model.clone(),
@@ -154,31 +236,35 @@ impl CompiledModel {
             codegen,
             flash,
             cycle_model: CycleModel::cortex_m7(),
+            kernels,
         }
     }
 
     /// Execute one inference on the precompiled artifact (the cheap path:
-    /// no graph/plan/quantize/codegen/flash work).
+    /// no graph/plan/quantize/codegen/flash work, and — for SLBC methods —
+    /// no kernel re-packing: the [`KernelCache`] registers are streamed).
     pub fn run(&self, image: &[f32]) -> Result<InferenceResult> {
-        infer(
+        executor::infer_with_kernels(
             &self.model,
             &self.quantized,
             &self.cfg,
             self.method,
             image,
             &self.cycle_model,
+            Some(&self.kernels),
         )
     }
 
     /// Execute a batch of images, returning every per-image result.
     pub fn run_batch(&self, images: &[f32]) -> Result<Vec<InferenceResult>> {
-        infer_batch_detailed(
+        executor::infer_batch_with_kernels(
             &self.model,
             &self.quantized,
             &self.cfg,
             self.method,
             images,
             &self.cycle_model,
+            Some(&self.kernels),
         )
     }
 
@@ -286,6 +372,45 @@ mod tests {
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.per_layer, b.per_layer);
+    }
+
+    #[test]
+    fn repeated_runs_never_repack_kernels() {
+        // The KernelCache acceptance guarantee: once compiled, inference
+        // performs zero kernel-register packing — host-side packing is
+        // compile-time work, observable through the global pack counter.
+        let m = vgg_tiny(10, 16);
+        let params = fake_params(m.param_count);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let cm = CompiledModel::compile(&m, &params, &cfg, Method::RpSlbc).unwrap();
+        assert_eq!(cm.kernels.packed_layers(), m.num_layers());
+        let img = vec![0.5f32; 16 * 16 * 3];
+        // The pack counter is thread-local, so this thread's snapshot is
+        // immune to parallel test threads compiling their own models.
+        let a = cm.run(&img).unwrap();
+        let before = crate::ops::slbc::kernel_pack_count();
+        for _ in 0..3 {
+            let b = cm.run(&img).unwrap();
+            assert_eq!(a.logits, b.logits);
+            assert_eq!(a.cycles, b.cycles);
+        }
+        assert_eq!(
+            crate::ops::slbc::kernel_pack_count(),
+            before,
+            "CompiledModel::run must not re-pack kernel registers"
+        );
+    }
+
+    #[test]
+    fn baseline_methods_carry_empty_kernel_cache() {
+        let m = vgg_tiny(10, 16);
+        let params = fake_params(m.param_count);
+        let cfg = BitConfig::uniform(m.num_layers(), 8);
+        let cm = CompiledModel::compile(&m, &params, &cfg, Method::TinyEngine).unwrap();
+        assert_eq!(cm.kernels.packed_layers(), 0);
+        // The empty cache must not break the run path.
+        let img = vec![0.5f32; 16 * 16 * 3];
+        assert!(cm.run(&img).is_ok());
     }
 
     #[test]

@@ -53,6 +53,7 @@ fn run(args: &Args) -> Result<()> {
         "deploy" => cmd_deploy(args),
         "serve" => cmd_serve(args),
         "bench-serve" => cmd_bench_serve(args),
+        "bench-conv" => cmd_bench_conv(args),
         "slbc-demo" => cmd_slbc_demo(args),
         "calibrate" => cmd_calibrate(args),
         "" | "help" | "--help" => {
@@ -87,6 +88,9 @@ fn print_help() {
          \x20 bench-serve                   fixed-protocol serving benchmark:\n\
          \x20                               >=200-request mixed trace, >=4 devices,\n\
          \x20                               prints tables + one JSON summary line\n\
+         \x20 bench-conv                    conv hot-path benchmark (rolling-row\n\
+         \x20                               pipeline vs pre-PR operator):\n\
+         \x20                               [--smoke] [--repeats N] [--out FILE]\n\
          \x20 slbc-demo                     run the Layer-1 kernel via PJRT\n\
          \x20 calibrate                     fit Eq. 12 coefficients"
     );
@@ -405,6 +409,48 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         );
     }
     println!("\nbench-serve OK: compile-once + >1 cache hit per served model verified");
+    Ok(())
+}
+
+/// Conv hot-path benchmark: rolling-row pipeline (pre-packed kernels +
+/// reusable scratch) vs the pre-PR operator, host ns/layer + modeled
+/// cycles per method and bitwidth. `--smoke` runs the cheap CI protocol;
+/// `--out FILE` additionally writes the JSON trend line to a file so the
+/// workflow can archive the trajectory per PR.
+fn cmd_bench_conv(args: &Args) -> Result<()> {
+    let smoke = args.bool_or("smoke", false);
+    let mut cfg = if smoke {
+        mcu_mixq::perf::conv_hotpath::ConvBenchCfg::smoke()
+    } else {
+        mcu_mixq::perf::conv_hotpath::ConvBenchCfg::default()
+    };
+    cfg.repeats = args.usize_or("repeats", cfg.repeats);
+
+    println!(
+        "bench-conv — rolling-row SLBC pipeline vs pre-PR operator ({} mode, {} repeat(s))\n",
+        if smoke { "smoke" } else { "full" },
+        cfg.repeats
+    );
+    let rep = mcu_mixq::perf::conv_hotpath::run(&cfg);
+    print!("{}", rep.render());
+    let sp = rep.mean_speedup_conv3x3();
+    println!(
+        "\nmean host speedup on stride-1 k=3 convs: {sp:.2}x  (modeled cycle ratio {:.3}x)",
+        rep.mean_cycle_ratio()
+    );
+    let json = rep.to_json().to_string_compact();
+    println!("{json}");
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{json}\n"))?;
+        println!("wrote {path}");
+    }
+    // Deterministic gate always; the wall-clock acceptance bar (>= 2x on
+    // stride-1 k=3 convs, the PR criterion) only in full mode — single-
+    // repeat smoke timings are recorded, not enforced.
+    rep.check_cycle_invariant().map_err(|e| anyhow::anyhow!(e))?;
+    if !smoke {
+        rep.check_speedup(2.0).map_err(|e| anyhow::anyhow!(e))?;
+    }
     Ok(())
 }
 

@@ -176,16 +176,56 @@ pub fn requantize(acc: &[i64], bias: &[i64], cout: usize, bits: u8, ctr: &mut Co
 /// Extract one padded input row for channel `ic` at input row `iy`
 /// (zero-padded SAME borders): used by the SLBC row pipeline.
 pub fn padded_row(x: &[u32], l: &LayerSpec, iy: i64, ic: usize, pad: i64) -> Vec<u64> {
+    let mut row = vec![0u64; l.in_w + 2 * pad as usize];
+    padded_row_into(x, l, iy, ic, pad, &mut row);
+    row
+}
+
+/// Allocation-free [`padded_row`]: writes the padded row into `row` (a
+/// ring-buffer slot of the rolling-row conv pipeline). `row` must already
+/// have length `in_w + 2·pad`.
+#[inline]
+pub fn padded_row_into(x: &[u32], l: &LayerSpec, iy: i64, ic: usize, pad: i64, row: &mut [u64]) {
     let w = l.in_w;
     let cin = l.cin;
-    let mut row = vec![0u64; w + 2 * pad as usize];
+    debug_assert_eq!(row.len(), w + 2 * pad as usize);
+    row.fill(0);
     if iy < 0 || iy >= l.in_h as i64 {
-        return row;
+        return;
     }
     for x_pos in 0..w {
         row[x_pos + pad as usize] = x[(iy as usize * w + x_pos) * cin + ic] as u64;
     }
-    row
+}
+
+/// Seeded random operands for one layer at the given bitwidths: unsigned
+/// `abits`-bit activations and signed `wbits`-bit weights in the
+/// symmetric range `±(2^(w-1) - 1)` (the quantizer's range). The single
+/// generator shared by the operator tests, the golden suite and the conv
+/// hot-path bench, so all of them exercise identically distributed
+/// operands.
+pub fn rand_layer_operands(
+    l: &LayerSpec,
+    wbits: u8,
+    abits: u8,
+    seed: u64,
+) -> (Vec<u32>, Vec<i32>) {
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let xn = match l.kind {
+        LayerKind::Dense => l.cin,
+        _ => l.in_h * l.in_w * l.cin,
+    };
+    let wn = match l.kind {
+        LayerKind::Conv => l.k * l.k * l.cin * l.cout,
+        LayerKind::DwConv => l.k * l.k * l.cout,
+        LayerKind::Dense => l.cin * l.cout,
+    };
+    let x: Vec<u32> = (0..xn).map(|_| rng.below(1 << abits) as u32).collect();
+    let lim = (1i64 << (wbits - 1)) - 1;
+    let w: Vec<i32> = (0..wn)
+        .map(|_| (rng.below(2 * lim as u64 + 1) as i64 - lim) as i32)
+        .collect();
+    (x, w)
 }
 
 #[cfg(test)]

@@ -100,6 +100,11 @@ impl Method {
     ///   (`in_h·in_w·cin`, or `cin` for dense layers);
     /// * `w` — signed quantized weights, HWIO flat (Python layout);
     /// * returns raw i64 accumulators (`out_h·out_w·cout`, or `cout`).
+    ///
+    /// SLBC methods pack their kernel registers on the fly here; repeated
+    /// inference should run through [`slbc::run_layer_cached`] with a
+    /// pre-built [`slbc::LayerKernel`] (the engine's `KernelCache` path),
+    /// which charges identically but re-packs nothing.
     pub fn run_layer(
         &self,
         x: &[u32],

@@ -10,18 +10,62 @@
 //! sums are filter-independent and computed once, amortized over all
 //! output channels.
 //!
-//! Instruction charging follows the adaptive lane plan (§IV.C): multiplies
-//! on the chosen carrier (DSP SIMD / long-multiply), packing amortized over
-//! output-channel reuse, segmentation amortized over the in-register
-//! accumulation depth the guard bits allow, and — for RP-SLBC — the
-//! reordered segmentation costs of Theorem IV.1.
+//! # The rolling-row pipeline
+//!
+//! The conv hot path is a **rolling-row pipeline** (the row-reuse
+//! discipline of CMix-NN-class kernels): consecutive stride-1 output rows
+//! share `k-1` of their `k` input rows, so the per-row work — fetch into
+//! the padded staging row, window sums, signal packing — runs **once per
+//! input row**, not once per output row that consumes it. The packed rows
+//! live in a ring buffer keyed by `(iy + pad) mod k`; advancing to the
+//! next output row fetches exactly one new row per channel and overwrites
+//! the slot of the row that just fell out of the window.
+//!
+//! All intermediate state lives in a [`ConvScratch`] of *flat, strided*
+//! buffers (`rows` / `wsums` / `packs` / `corr` / `row_acc`) reused across
+//! calls through a thread-local, so the steady state performs no heap
+//! allocation beyond the layer's output vector.
+//!
+//! Kernel registers are pre-packed once per layer into a [`LayerKernel`]
+//! (conv: reversed offset taps broadcast per [`LanePlan`]; dense: the
+//! reversed-group weight registers of `dot_pack_b`). The engine's
+//! `KernelCache` builds these at compile time, so repeated
+//! `CompiledModel::run` calls perform **zero kernel re-packing** — the
+//! host-side [`kernel_pack_count`] counter observes this guarantee.
+//!
+//! # Charging rules
+//!
+//! Instruction charging follows the adaptive lane plan (§IV.C) and, since
+//! the rolling-row refactor, what the pipeline actually executes:
+//!
+//! * **row work is charged once per fetched row** — `chan · (out_h + k - 1)`
+//!   rows per layer, not `chan · k` per output row — covering the packed
+//!   row loads, the signal packing and the window sums;
+//! * **depthwise rows are charged per channel**: each of the `cout · (out_h
+//!   + k - 1)` per-channel rows pays fetch/pack/window-sum exactly once
+//!   (the pre-refactor operator charged only a channel-0 prefetch and
+//!   never the per-channel re-packing it actually performed), and the
+//!   window-sum *reduction* is charged per output channel because each
+//!   depthwise channel owns its correction row;
+//! * multiplies go to the plan's carrier class, segmentation flushes are
+//!   amortized over the in-register accumulation depth, and kernel-register
+//!   streaming charges stay per inference — the *modeled* MCU always
+//!   streams its packed registers from flash, so cached and uncached host
+//!   paths produce identical cycle totals (the compile/run-split
+//!   equivalence tests pin this).
+//!
+//! [`crate::perf::predict`] mirrors these rules term by term; the
+//! counter-equivalence tests keep the two from drifting apart.
+
+use std::cell::{Cell, RefCell};
 
 use crate::mcu::{Counter, InstrClass};
 use crate::models::{LayerKind, LayerSpec};
 use crate::simd::adaptive::{best_plan, LanePlan};
-use crate::simd::poly::{dot_group_size, dot_packed, field_width};
+use crate::simd::poly::{dot_group_size, dot_pack_a_into, dot_pack_b, dot_packed_prepacked};
+use crate::simd::reorder::RpConv;
 
-use super::common::{pad_of, padded_row};
+use super::common::{pad_of, padded_row_into};
 
 /// Which instruction class the plan's wide multiply uses.
 fn mul_class(plan: &LanePlan) -> InstrClass {
@@ -34,7 +78,211 @@ fn mul_class(plan: &LanePlan) -> InstrClass {
     }
 }
 
-/// Run one layer through SLBC (or RP-SLBC when `reordered`).
+thread_local! {
+    /// Host-side count of kernel-register packing events (conv
+    /// `pack_kernel` registers and dense `dot_pack_b` registers built).
+    /// Thread-local so the zero-repack assertions observe exactly the
+    /// current thread's work (parallel test threads compile models too).
+    static KERNEL_PACKS: Cell<u64> = Cell::new(0);
+}
+
+/// Number of kernel registers packed *by the current thread* so far. The
+/// engine's compile/run split asserts repeated `CompiledModel::run` calls
+/// leave this unchanged (packing is compile-time work).
+pub fn kernel_pack_count() -> u64 {
+    KERNEL_PACKS.with(|c| c.get())
+}
+
+fn note_kernel_packs(n: u64) {
+    KERNEL_PACKS.with(|c| c.set(c.get() + n));
+}
+
+/// Pre-packed kernel state of one convolution layer: the resolved lane
+/// plan plus every output channel's packed kernel registers.
+#[derive(Debug, Clone)]
+pub struct ConvKernel {
+    pub plan: LanePlan,
+    /// Whether the reordered (RP-SLBC) segmentation is actually used —
+    /// compile-time adaptivity keeps naive segmentation where reordering
+    /// does not reduce work (§IV.C).
+    pub use_rp: bool,
+    /// Signed-weight offset `2^(wbits-1)`.
+    pub off: i64,
+    pub depthwise: bool,
+    pub wbits: u8,
+    pub abits: u8,
+    /// `vks[(oc·k + ky)·chan_eff + ic]` — packed (reversed, offset)
+    /// kernel rows broadcast across lanes.
+    pub vks: Vec<u64>,
+}
+
+impl ConvKernel {
+    pub fn build(
+        w: &[i32],
+        l: &LayerSpec,
+        wbits: u8,
+        abits: u8,
+        reordered: bool,
+        depthwise: bool,
+    ) -> ConvKernel {
+        let k = l.k;
+        let cout = l.cout;
+        let chan_eff = if depthwise { 1 } else { l.cin };
+        let off = 1i64 << (wbits - 1);
+        let plan = best_plan(abits as u32, wbits as u32, k as u32)
+            .expect("SLBC plan must exist for 2..=8-bit operands");
+        // Reordering is applied only where it actually reduces segmentation
+        // work (compile-time adaptivity, §IV.C).
+        let use_rp = reordered && plan.reordering_wins();
+
+        // krows[oc][ky][ic] = the k unsigned taps, reversed so the packed
+        // polynomial convolution realizes the correlation orientation.
+        let kidx = |ky: usize, kx: usize, ic: usize, oc: usize| -> usize {
+            if depthwise {
+                (ky * k + kx) * cout + oc
+            } else {
+                ((ky * k + kx) * l.cin + ic) * cout + oc
+            }
+        };
+        let mut taps = vec![0u64; k];
+        let mut vks = Vec::with_capacity(cout * k * chan_eff);
+        for oc in 0..cout {
+            for ky in 0..k {
+                for ic in 0..chan_eff {
+                    for (ti, kx) in (0..k).rev().enumerate() {
+                        taps[ti] = (w[kidx(ky, kx, ic, oc)] as i64 + off) as u64;
+                    }
+                    vks.push(plan.conv.pack_kernel(&taps));
+                }
+            }
+        }
+        note_kernel_packs(vks.len() as u64);
+        ConvKernel {
+            plan,
+            use_rp,
+            off,
+            depthwise,
+            wbits,
+            abits,
+            vks,
+        }
+    }
+}
+
+/// Pre-packed kernel state of one dense layer: every output neuron's
+/// weight vector offset to unsigned and packed into dot-product registers.
+#[derive(Debug, Clone)]
+pub struct DenseKernel {
+    pub off: i64,
+    pub wbits: u8,
+    pub abits: u8,
+    /// `b_regs[oc·regs_per_oc ..][..regs_per_oc]` — `dot_pack_b` registers.
+    pub b_regs: Vec<u64>,
+    pub regs_per_oc: usize,
+}
+
+impl DenseKernel {
+    pub fn build(w: &[i32], l: &LayerSpec, wbits: u8, abits: u8) -> DenseKernel {
+        let off = 1i64 << (wbits - 1);
+        let g = dot_group_size(abits as u32, wbits as u32, 63) as usize;
+        let regs_per_oc = l.cin.div_ceil(g);
+        let mut b = vec![0u64; l.cin];
+        let mut b_regs = Vec::with_capacity(l.cout * regs_per_oc);
+        for oc in 0..l.cout {
+            for (i, bv) in b.iter_mut().enumerate() {
+                *bv = (w[i * l.cout + oc] as i64 + off) as u64;
+            }
+            b_regs.extend_from_slice(&dot_pack_b(&b, abits as u32, wbits as u32));
+        }
+        note_kernel_packs(b_regs.len() as u64);
+        DenseKernel {
+            off,
+            wbits,
+            abits,
+            b_regs,
+            regs_per_oc,
+        }
+    }
+}
+
+/// The compile-time product for one SLBC layer: packed kernel registers
+/// plus the resolved plan, reusable across arbitrarily many inferences.
+#[derive(Debug, Clone)]
+pub enum LayerKernel {
+    Conv(ConvKernel),
+    Dense(DenseKernel),
+}
+
+impl LayerKernel {
+    /// Build the packed kernel state for `layer` at `(wbits, abits)`.
+    pub fn build(w: &[i32], layer: &LayerSpec, wbits: u8, abits: u8, reordered: bool) -> LayerKernel {
+        match layer.kind {
+            LayerKind::Dense => LayerKernel::Dense(DenseKernel::build(w, layer, wbits, abits)),
+            LayerKind::Conv => {
+                LayerKernel::Conv(ConvKernel::build(w, layer, wbits, abits, reordered, false))
+            }
+            LayerKind::DwConv => {
+                LayerKernel::Conv(ConvKernel::build(w, layer, wbits, abits, reordered, true))
+            }
+        }
+    }
+
+    /// The `(wbits, abits)` pair this kernel was packed for.
+    pub fn bits(&self) -> (u8, u8) {
+        match self {
+            LayerKernel::Conv(c) => (c.wbits, c.abits),
+            LayerKernel::Dense(d) => (d.wbits, d.abits),
+        }
+    }
+}
+
+/// Reusable flat buffers of the rolling-row conv pipeline (plus the dense
+/// staging buffers). All buffers are strided views indexed by ring slot;
+/// `ensure` resizes them for a layer shape without shedding capacity, so
+/// the steady state is allocation-free.
+#[derive(Debug, Default)]
+pub struct ConvScratch {
+    /// `rows[slot·padded_w ..][..padded_w]` — padded staging rows.
+    rows: Vec<u64>,
+    /// `wsums[slot·out_w ..][..out_w]` — per-row window sums.
+    wsums: Vec<i64>,
+    /// `packs[slot·regs_per_row ..][..regs_per_row]` — packed row registers.
+    packs: Vec<u64>,
+    /// Correction row `Σ_rows wsums` for the current window.
+    corr: Vec<i64>,
+    /// Full-convolution accumulator of one output row.
+    row_acc: Vec<i64>,
+    /// Dense: activations widened to u64.
+    dense_a: Vec<u64>,
+    /// Dense: packed activation registers (`dot_pack_a`).
+    a_regs: Vec<u64>,
+}
+
+impl ConvScratch {
+    pub fn new() -> ConvScratch {
+        ConvScratch::default()
+    }
+
+    fn ensure(&mut self, slots: usize, padded_w: usize, out_w: usize, regs_per_row: usize, acc_len: usize) {
+        self.rows.resize(slots * padded_w, 0);
+        self.wsums.resize(slots * out_w, 0);
+        self.packs.resize(slots * regs_per_row, 0);
+        self.corr.resize(out_w, 0);
+        self.row_acc.resize(acc_len, 0);
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch: `CompiledModel::run` is `&self` (artifacts are
+    /// shared through the serve registry), so the mutable pipeline state
+    /// lives thread-locally rather than in the artifact.
+    static SCRATCH: RefCell<ConvScratch> = RefCell::new(ConvScratch::new());
+}
+
+/// Run one layer through SLBC (or RP-SLBC when `reordered`), packing the
+/// kernel registers on the fly. Callers running a layer more than once
+/// should build a [`LayerKernel`] and use [`run_layer_cached`] (the
+/// engine's `KernelCache` does this automatically).
 pub fn run_layer(
     x: &[u32],
     w: &[i32],
@@ -44,165 +292,197 @@ pub fn run_layer(
     reordered: bool,
     ctr: &mut Counter,
 ) -> Vec<i64> {
-    match layer.kind {
-        LayerKind::Dense => dense_slbc(x, w, layer, wbits, abits, ctr),
-        LayerKind::Conv => conv_slbc(x, w, layer, wbits, abits, reordered, false, ctr),
-        LayerKind::DwConv => conv_slbc(x, w, layer, wbits, abits, reordered, true, ctr),
+    let kern = LayerKernel::build(w, layer, wbits, abits, reordered);
+    run_layer_cached(x, layer, &kern, ctr)
+}
+
+/// Run one layer over a pre-packed [`LayerKernel`]: the allocation-free,
+/// zero-repacking hot path of repeated inference. Charges exactly what
+/// [`run_layer`] charges (the modeled MCU streams packed registers either
+/// way); only the *host-side* packing work is skipped.
+pub fn run_layer_cached(
+    x: &[u32],
+    layer: &LayerSpec,
+    kern: &LayerKernel,
+    ctr: &mut Counter,
+) -> Vec<i64> {
+    SCRATCH.with(|s| run_layer_with_scratch(x, layer, kern, ctr, &mut s.borrow_mut()))
+}
+
+/// [`run_layer_cached`] over a caller-owned [`ConvScratch`] (benches that
+/// want scratch reuse without the thread-local indirection).
+pub fn run_layer_with_scratch(
+    x: &[u32],
+    layer: &LayerSpec,
+    kern: &LayerKernel,
+    ctr: &mut Counter,
+    scratch: &mut ConvScratch,
+) -> Vec<i64> {
+    match (layer.kind, kern) {
+        (LayerKind::Dense, LayerKernel::Dense(dk)) => dense_slbc_core(x, layer, dk, ctr, scratch),
+        (LayerKind::Conv | LayerKind::DwConv, LayerKernel::Conv(ck)) => {
+            conv_slbc_core(x, layer, ck, ctr, scratch)
+        }
+        _ => panic!("layer kernel kind does not match layer {}", layer.name),
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn conv_slbc(
+/// The rolling-row conv pipeline (see the module docs for the design and
+/// the charging rules).
+fn conv_slbc_core(
     x: &[u32],
-    w: &[i32],
     l: &LayerSpec,
-    wbits: u8,
-    abits: u8,
-    reordered: bool,
-    depthwise: bool,
+    kern: &ConvKernel,
     ctr: &mut Counter,
+    s: &mut ConvScratch,
 ) -> Vec<i64> {
     let k = l.k;
     let pad = pad_of(k);
     let padded_w = l.in_w + 2 * pad as usize;
-    let cin_eff = if depthwise { 1 } else { l.cin };
+    let out_w = l.out_w;
+    let depthwise = kern.depthwise;
+    // Ring channels: depthwise rows are per output channel, regular convs
+    // share every input channel's rows across all output channels.
+    let chan = if depthwise { l.cout } else { l.cin };
+    let chan_eff = if depthwise { 1 } else { l.cin };
     let cout = l.cout;
-    let off = 1i64 << (wbits - 1);
+    let off = kern.off;
+    let plan = &kern.plan;
+    let use_rp = kern.use_rp;
+    let conv_plan = plan.conv; // Copy — keeps closure captures borrow-free
+    let rp_plan: Option<RpConv> = plan.reordered;
 
-    let plan = best_plan(abits as u32, wbits as u32, k as u32)
-        .expect("SLBC plan must exist for 2..=8-bit operands");
-    // Reordering is applied only where it actually reduces segmentation
-    // work (compile-time adaptivity, §IV.C): e.g. single-lane pointwise
-    // plans gain nothing from Theorem IV.1 and keep naive segmentation.
-    let use_rp = reordered
-        && plan
-            .reordered
-            .as_ref()
-            .map(|r| r.seg_ops_per_instr() < plan.conv.seg_ops_per_instr())
-            .unwrap_or(false);
-
-    // ---- pre-pack kernels (reversed taps, offset to unsigned) -----------
-    // krows[oc][ky][ic] = the k unsigned taps, reversed so the packed
-    // polynomial convolution realizes the correlation orientation.
-    let kidx = |ky: usize, kx: usize, ic: usize, oc: usize| -> usize {
-        if depthwise {
-            (ky * k + kx) * cout + oc
-        } else {
-            ((ky * k + kx) * l.cin + ic) * cout + oc
-        }
+    let elems_per_mul = conv_plan.elements_per_instr() as usize;
+    let regs_per_row = if use_rp {
+        rp_plan.as_ref().unwrap().n_chunks(padded_w)
+    } else {
+        conv_plan.n_regs(padded_w)
     };
-    let mut krows: Vec<Vec<u64>> = Vec::with_capacity(cout * k * cin_eff);
-    for oc in 0..cout {
-        for ky in 0..k {
-            for ic in 0..cin_eff {
-                let taps: Vec<u64> = (0..k)
-                    .rev()
-                    .map(|kx| (w[kidx(ky, kx, ic, oc)] as i64 + off) as u64)
-                    .collect();
-                krows.push(taps);
-            }
-        }
-    }
-    // Kernel packing happens once per layer: 2 bit-ops per tap + a store.
-    ctr.charge(InstrClass::Bit, (cout * k * cin_eff * k * 2) as u64);
-    ctr.charge(InstrClass::Store, (cout * k * cin_eff) as u64);
+    let acc_len = padded_w + k - 1;
+    let slots = k * chan;
+    s.ensure(slots, padded_w, out_w, regs_per_row, acc_len);
 
-    let mut out = vec![0i64; l.out_h * l.out_w * cout];
-    let elems_per_mul = plan.conv.elements_per_instr() as usize;
     let n_mul_per_row = padded_w.div_ceil(elems_per_mul) as u64;
     let seg_ops = if use_rp {
-        plan.reordered.as_ref().unwrap().seg_ops_per_instr() as u64
+        rp_plan.as_ref().unwrap().seg_ops_per_instr() as u64
     } else {
-        plan.conv.seg_ops_per_instr() as u64
+        conv_plan.seg_ops_per_instr() as u64
     };
-    let fields_per_flush = (plan.conv.spec.group * plan.conv.cfg.lanes()) as u64;
+    let fields_per_flush = (conv_plan.spec.group * conv_plan.cfg.lanes()) as u64;
+    let row_load = ((padded_w * kern.abits as usize).div_ceil(32)) as u64;
 
-    // Pre-pack every kernel register once per layer (vk broadcast).
-    let vks: Vec<u64> = krows.iter().map(|taps| plan.conv.pack_kernel(taps)).collect();
+    // Kernel-register streaming: 2 bit-ops per tap + a store per register,
+    // once per layer invocation (identical for cached and uncached runs —
+    // the modeled flash image stores packed registers either way).
+    ctr.charge(InstrClass::Bit, (cout * k * chan_eff * k * 2) as u64);
+    ctr.charge(InstrClass::Store, (cout * k * chan_eff) as u64);
 
-    // Reused buffers (allocation-free steady state).
-    let n_rows = cin_eff * k;
-    let mut rows: Vec<Vec<u64>> = vec![Vec::new(); n_rows];
-    let mut wsums: Vec<Vec<i64>> = vec![vec![0i64; l.out_w]; n_rows];
-    let mut packs: Vec<Vec<u64>> = vec![Vec::new(); n_rows];
-    let mut row_acc = vec![0i64; padded_w + k - 1];
-
-    // Pack one row into `packs[slot]` for the active pipeline.
-    let rp = plan.reordered.as_ref();
-    let pack_row = |row: &[u64], dst: &mut Vec<u64>| {
-        dst.clear();
-        if use_rp {
-            rp.unwrap().prepack_chunks(row, dst);
-        } else {
-            plan.conv.pack_windows_into(row, dst);
-        }
-    };
-
-    for oy in 0..l.out_h {
-        // Row-level work shared across all output channels: fetch, window
-        // sums, and signal packing (reused by every filter — PACK_REUSE).
-        for ky in 0..k {
-            let iy = oy as i64 + ky as i64 - pad;
-            for ic_slot in 0..cin_eff {
-                // For depthwise the channel is bound per-oc below; slot 0
-                // is refilled inside the oc loop.
-                let row = padded_row(x, l, iy, ic_slot, pad);
-                let ws = &mut wsums[ky * cin_eff + ic_slot];
-                for (ox, wsv) in ws.iter_mut().enumerate() {
-                    *wsv = (0..k).map(|kx| row[ox + kx] as i64).sum();
-                }
-                pack_row(&row, &mut packs[ky * cin_eff + ic_slot]);
-                rows[ky * cin_eff + ic_slot] = row;
+    // Fetch one padded row into its ring slot: staging copy, window sums,
+    // signal packing — charged once, reused by every output row and every
+    // filter that consumes it (PACK_REUSE + row reuse).
+    let fetch_row = |s: &mut ConvScratch, ctr: &mut Counter, iy: i64, c: usize| {
+        let slot = ((iy + pad) as usize % k) * chan + c;
+        let row_off = slot * padded_w;
+        padded_row_into(x, l, iy, c, pad, &mut s.rows[row_off..row_off + padded_w]);
+        {
+            let (rows, wsums) = (&s.rows, &mut s.wsums);
+            let row = &rows[row_off..row_off + padded_w];
+            let ws = &mut wsums[slot * out_w..(slot + 1) * out_w];
+            for (ox, wsv) in ws.iter_mut().enumerate() {
+                *wsv = row[ox..ox + k].iter().map(|&v| v as i64).sum::<i64>();
             }
         }
-        // Charges for the shared row work (amortized over cout):
-        // packed-row loads + signal packing + window sums.
-        let shared_rows = n_rows as u64;
-        ctr.charge(
-            InstrClass::Load,
-            shared_rows * ((padded_w * abits as usize).div_ceil(32)) as u64,
-        );
-        ctr.charge(InstrClass::Bit, shared_rows * (padded_w as u64) * 2);
-        ctr.charge(InstrClass::Alu, shared_rows * (l.out_w as u64) * 2);
+        {
+            let (rows, packs) = (&s.rows, &mut s.packs);
+            let row = &rows[row_off..row_off + padded_w];
+            let dst = &mut packs[slot * regs_per_row..(slot + 1) * regs_per_row];
+            if use_rp {
+                rp_plan.as_ref().unwrap().prepack_chunks_to(row, dst);
+            } else {
+                conv_plan.pack_windows_to(row, dst);
+            }
+        }
+        ctr.charge(InstrClass::Load, row_load);
+        ctr.charge(InstrClass::Bit, 2 * padded_w as u64);
+        ctr.charge(InstrClass::Alu, 2 * out_w as u64);
+    };
+
+    let mut out = vec![0i64; l.out_h * out_w * cout];
+    for oy in 0..l.out_h {
+        // Rolling fetch: the first output row fills the ring, every later
+        // one replaces exactly the row that left the window.
+        let top = oy as i64 - pad;
+        let bot = top + k as i64 - 1;
+        let fetch_from = if oy == 0 { top } else { bot };
+        for iy in fetch_from..=bot {
+            for c in 0..chan {
+                fetch_row(&mut *s, &mut *ctr, iy, c);
+            }
+        }
+
+        if !depthwise {
+            // Shared correction row: Σ over all k·cin ring rows — identical
+            // for every output channel, so computed (and charged) once per
+            // output row.
+            let (corr, wsums) = (&mut s.corr, &s.wsums);
+            corr.fill(0);
+            for slot in 0..slots {
+                let ws = &wsums[slot * out_w..(slot + 1) * out_w];
+                for (cv, &wv) in corr.iter_mut().zip(ws) {
+                    *cv += wv;
+                }
+            }
+            ctr.charge(InstrClass::Alu, (out_w * chan * k) as u64);
+        }
 
         for oc in 0..cout {
-            row_acc.fill(0);
-            let mut muls_done = 0u64;
             if depthwise {
-                // depthwise: rows/packs for THIS channel.
+                // Per-channel correction: each depthwise channel owns its
+                // k window-sum rows, so the reduction is charged per oc.
+                let (corr, wsums) = (&mut s.corr, &s.wsums);
+                corr.fill(0);
                 for ky in 0..k {
                     let iy = oy as i64 + ky as i64 - pad;
-                    let row = padded_row(x, l, iy, oc, pad);
-                    let ws = &mut wsums[ky * cin_eff];
-                    for (ox, wsv) in ws.iter_mut().enumerate() {
-                        *wsv = (0..k).map(|kx| row[ox + kx] as i64).sum();
+                    let slot = ((iy + pad) as usize % k) * chan + oc;
+                    let ws = &wsums[slot * out_w..(slot + 1) * out_w];
+                    for (cv, &wv) in corr.iter_mut().zip(ws) {
+                        *cv += wv;
                     }
-                    pack_row(&row, &mut packs[ky * cin_eff]);
-                    rows[ky * cin_eff] = row;
                 }
+                ctr.charge(InstrClass::Alu, (out_w * k) as u64);
             }
+
+            s.row_acc.fill(0);
+            let mut muls_done = 0u64;
             for ky in 0..k {
-                for ic in 0..cin_eff {
-                    let slot = ky * cin_eff + ic;
-                    let vk = vks[(oc * k + ky) * cin_eff + ic];
+                let iy = oy as i64 + ky as i64 - pad;
+                let slot_y = (iy + pad) as usize % k;
+                for ic in 0..chan_eff {
+                    let c = if depthwise { oc } else { ic };
+                    let slot = slot_y * chan + c;
+                    let vk = kern.vks[(oc * k + ky) * chan_eff + ic];
                     // The packed computation itself (bit-exact).
                     if use_rp {
-                        rp.unwrap().conv_prepacked_into(
-                            &packs[slot],
-                            rows[slot].len(),
+                        rp_plan.as_ref().unwrap().conv_prepacked_into(
+                            &s.packs[slot * regs_per_row..(slot + 1) * regs_per_row],
+                            padded_w,
                             vk,
-                            &mut row_acc,
+                            &mut s.row_acc,
                         );
                     } else {
-                        plan.conv.conv1d_prepacked_into(&packs[slot], vk, &mut row_acc);
+                        conv_plan.conv1d_prepacked_into(
+                            &s.packs[slot * regs_per_row..(slot + 1) * regs_per_row],
+                            vk,
+                            &mut s.row_acc,
+                        );
                     }
                     muls_done += n_mul_per_row;
-                    // kernel register reload per row-pair.
-                    ctr.charge(InstrClass::Load, 1);
                 }
             }
+            // Kernel register reload per row-pair.
+            ctr.charge(InstrClass::Load, (k * chan_eff) as u64);
             // Multiply + packed-accumulate charges.
-            ctr.charge(mul_class(&plan), muls_done);
+            ctr.charge(mul_class(plan), muls_done);
             ctr.charge(InstrClass::Alu, muls_done);
             // Segmentation flushes, amortized over the accumulation depth.
             let flushes = muls_done.div_ceil(plan.accum_depth as u64);
@@ -210,50 +490,46 @@ fn conv_slbc(
             ctr.charge(InstrClass::Alu, flushes * fields_per_flush);
 
             // Write outputs with offset correction.
-            for ox in 0..l.out_w {
-                let raw = row_acc[ox + k - 1];
-                let corr: i64 = (0..n_rows).map(|r| wsums[r][ox]).sum();
-                out[(oy * l.out_w + ox) * cout + oc] = raw - off * corr;
+            for ox in 0..out_w {
+                let raw = s.row_acc[ox + k - 1];
+                out[(oy * out_w + ox) * cout + oc] = raw - off * s.corr[ox];
             }
-            // Correction charges: per output 1 MUL + 1 SUB (window-sum
-            // reduction is shared row work, charged above with k·cin adds
-            // per output once per row group).
-            ctr.charge(InstrClass::Mul, l.out_w as u64);
-            ctr.charge(InstrClass::Alu, l.out_w as u64);
+            // Correction charges: per output 1 MUL + 1 SUB (the window-sum
+            // reduction is charged above — shared for regular convs,
+            // per-channel for depthwise).
+            ctr.charge(InstrClass::Mul, out_w as u64);
+            ctr.charge(InstrClass::Alu, out_w as u64);
         }
-        // Window-sum reduction across (cin·k) rows, once per (oy, ox).
-        ctr.charge(InstrClass::Alu, (l.out_w * cin_eff * k) as u64);
     }
     out
 }
 
-fn dense_slbc(
+fn dense_slbc_core(
     x: &[u32],
-    w: &[i32],
     l: &LayerSpec,
-    wbits: u8,
-    abits: u8,
+    kern: &DenseKernel,
     ctr: &mut Counter,
+    s: &mut ConvScratch,
 ) -> Vec<i64> {
-    let off = 1i64 << (wbits - 1);
-    let a: Vec<u64> = x.iter().take(l.cin).map(|&v| v as u64).collect();
-    let sx: i64 = a.iter().map(|&v| v as i64).sum();
-    let mut out = vec![0i64; l.cout];
+    let off = kern.off;
+    let (wbits, abits) = (kern.wbits, kern.abits);
+    s.dense_a.clear();
+    s.dense_a.extend(x.iter().take(l.cin).map(|&v| v as u64));
+    let sx: i64 = s.dense_a.iter().map(|&v| v as i64).sum();
+    // Activation packing once, reused by every output neuron.
+    dot_pack_a_into(&s.dense_a, abits as u32, wbits as u32, &mut s.a_regs);
 
     let g = dot_group_size(abits as u32, wbits as u32, 63);
     let n_groups = (l.cin as u64).div_ceil(g as u64);
-    let s = field_width(abits as u32, wbits as u32, g);
-    let _ = s;
+    let mut out = vec![0i64; l.cout];
 
-    // Activation packing once, reused by every output neuron.
     ctr.charge(InstrClass::Bit, 2 * l.cin as u64);
     ctr.charge(InstrClass::Alu, l.cin as u64); // Σx for the offset fix
-    for oc in 0..l.cout {
-        let b: Vec<u64> = (0..l.cin)
-            .map(|i| (w[i * l.cout + oc] as i64 + off) as u64)
-            .collect();
-        let dot = dot_packed(&a, &b, abits as u32, wbits as u32) as i64;
-        out[oc] = dot - off * sx;
+    for (oc, o) in out.iter_mut().enumerate() {
+        let b_regs = &kern.b_regs[oc * kern.regs_per_oc..(oc + 1) * kern.regs_per_oc];
+        let dot =
+            dot_packed_prepacked(&s.a_regs, b_regs, l.cin, abits as u32, wbits as u32) as i64;
+        *o = dot - off * sx;
         // Pre-packed weights stream from flash; one multiply + one
         // extract (shift+mask) + accumulate per group.
         ctr.charge(
@@ -268,13 +544,229 @@ fn dense_slbc(
     out
 }
 
+/// The pre-rolling-pipeline operator, retained verbatim (arithmetic *and*
+/// charging) as the perf baseline of the `conv_hotpath` bench and as a
+/// second correctness oracle for the new pipeline. Re-fetches and re-packs
+/// every input row for every output row, allocates nested `Vec`s in the
+/// steady state, and re-packs all kernel registers on every call — exactly
+/// what each serve request paid before the rolling-row refactor.
+pub mod legacy {
+    use super::*;
+    use crate::ops::common::padded_row;
+    use crate::simd::poly::dot_packed;
+
+    /// Pre-PR `run_layer` (see the module docs of [`self`]).
+    pub fn run_layer(
+        x: &[u32],
+        w: &[i32],
+        layer: &LayerSpec,
+        wbits: u8,
+        abits: u8,
+        reordered: bool,
+        ctr: &mut Counter,
+    ) -> Vec<i64> {
+        match layer.kind {
+            LayerKind::Dense => dense_slbc(x, w, layer, wbits, abits, ctr),
+            LayerKind::Conv => conv_slbc(x, w, layer, wbits, abits, reordered, false, ctr),
+            LayerKind::DwConv => conv_slbc(x, w, layer, wbits, abits, reordered, true, ctr),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn conv_slbc(
+        x: &[u32],
+        w: &[i32],
+        l: &LayerSpec,
+        wbits: u8,
+        abits: u8,
+        reordered: bool,
+        depthwise: bool,
+        ctr: &mut Counter,
+    ) -> Vec<i64> {
+        let k = l.k;
+        let pad = pad_of(k);
+        let padded_w = l.in_w + 2 * pad as usize;
+        let cin_eff = if depthwise { 1 } else { l.cin };
+        let cout = l.cout;
+        let off = 1i64 << (wbits - 1);
+
+        let plan = best_plan(abits as u32, wbits as u32, k as u32)
+            .expect("SLBC plan must exist for 2..=8-bit operands");
+        // Deliberately NOT `LanePlan::reordering_wins`: this module is the
+        // frozen pre-PR baseline, inlined predicate and all.
+        let use_rp = reordered
+            && plan
+                .reordered
+                .as_ref()
+                .map(|r| r.seg_ops_per_instr() < plan.conv.seg_ops_per_instr())
+                .unwrap_or(false);
+
+        let kidx = |ky: usize, kx: usize, ic: usize, oc: usize| -> usize {
+            if depthwise {
+                (ky * k + kx) * cout + oc
+            } else {
+                ((ky * k + kx) * l.cin + ic) * cout + oc
+            }
+        };
+        let mut krows: Vec<Vec<u64>> = Vec::with_capacity(cout * k * cin_eff);
+        for oc in 0..cout {
+            for ky in 0..k {
+                for ic in 0..cin_eff {
+                    let taps: Vec<u64> = (0..k)
+                        .rev()
+                        .map(|kx| (w[kidx(ky, kx, ic, oc)] as i64 + off) as u64)
+                        .collect();
+                    krows.push(taps);
+                }
+            }
+        }
+        ctr.charge(InstrClass::Bit, (cout * k * cin_eff * k * 2) as u64);
+        ctr.charge(InstrClass::Store, (cout * k * cin_eff) as u64);
+
+        let mut out = vec![0i64; l.out_h * l.out_w * cout];
+        let elems_per_mul = plan.conv.elements_per_instr() as usize;
+        let n_mul_per_row = padded_w.div_ceil(elems_per_mul) as u64;
+        let seg_ops = if use_rp {
+            plan.reordered.as_ref().unwrap().seg_ops_per_instr() as u64
+        } else {
+            plan.conv.seg_ops_per_instr() as u64
+        };
+        let fields_per_flush = (plan.conv.spec.group * plan.conv.cfg.lanes()) as u64;
+
+        let vks: Vec<u64> = krows.iter().map(|taps| plan.conv.pack_kernel(taps)).collect();
+
+        let n_rows = cin_eff * k;
+        let mut rows: Vec<Vec<u64>> = vec![Vec::new(); n_rows];
+        let mut wsums: Vec<Vec<i64>> = vec![vec![0i64; l.out_w]; n_rows];
+        let mut packs: Vec<Vec<u64>> = vec![Vec::new(); n_rows];
+        let mut row_acc = vec![0i64; padded_w + k - 1];
+
+        let rp = plan.reordered.as_ref();
+        let pack_row = |row: &[u64], dst: &mut Vec<u64>| {
+            dst.clear();
+            if use_rp {
+                rp.unwrap().prepack_chunks(row, dst);
+            } else {
+                plan.conv.pack_windows_into(row, dst);
+            }
+        };
+
+        for oy in 0..l.out_h {
+            for ky in 0..k {
+                let iy = oy as i64 + ky as i64 - pad;
+                for ic_slot in 0..cin_eff {
+                    let row = padded_row(x, l, iy, ic_slot, pad);
+                    let ws = &mut wsums[ky * cin_eff + ic_slot];
+                    for (ox, wsv) in ws.iter_mut().enumerate() {
+                        *wsv = (0..k).map(|kx| row[ox + kx] as i64).sum();
+                    }
+                    pack_row(&row, &mut packs[ky * cin_eff + ic_slot]);
+                    rows[ky * cin_eff + ic_slot] = row;
+                }
+            }
+            let shared_rows = n_rows as u64;
+            ctr.charge(
+                InstrClass::Load,
+                shared_rows * ((padded_w * abits as usize).div_ceil(32)) as u64,
+            );
+            ctr.charge(InstrClass::Bit, shared_rows * (padded_w as u64) * 2);
+            ctr.charge(InstrClass::Alu, shared_rows * (l.out_w as u64) * 2);
+
+            for oc in 0..cout {
+                row_acc.fill(0);
+                let mut muls_done = 0u64;
+                if depthwise {
+                    for ky in 0..k {
+                        let iy = oy as i64 + ky as i64 - pad;
+                        let row = padded_row(x, l, iy, oc, pad);
+                        let ws = &mut wsums[ky * cin_eff];
+                        for (ox, wsv) in ws.iter_mut().enumerate() {
+                            *wsv = (0..k).map(|kx| row[ox + kx] as i64).sum();
+                        }
+                        pack_row(&row, &mut packs[ky * cin_eff]);
+                        rows[ky * cin_eff] = row;
+                    }
+                }
+                for ky in 0..k {
+                    for ic in 0..cin_eff {
+                        let slot = ky * cin_eff + ic;
+                        let vk = vks[(oc * k + ky) * cin_eff + ic];
+                        if use_rp {
+                            rp.unwrap().conv_prepacked_into(
+                                &packs[slot],
+                                rows[slot].len(),
+                                vk,
+                                &mut row_acc,
+                            );
+                        } else {
+                            plan.conv.conv1d_prepacked_into(&packs[slot], vk, &mut row_acc);
+                        }
+                        muls_done += n_mul_per_row;
+                        ctr.charge(InstrClass::Load, 1);
+                    }
+                }
+                ctr.charge(super::mul_class(&plan), muls_done);
+                ctr.charge(InstrClass::Alu, muls_done);
+                let flushes = muls_done.div_ceil(plan.accum_depth as u64);
+                ctr.charge(InstrClass::Bit, flushes * seg_ops);
+                ctr.charge(InstrClass::Alu, flushes * fields_per_flush);
+
+                for ox in 0..l.out_w {
+                    let raw = row_acc[ox + k - 1];
+                    let corr: i64 = (0..n_rows).map(|r| wsums[r][ox]).sum();
+                    out[(oy * l.out_w + ox) * cout + oc] = raw - off * corr;
+                }
+                ctr.charge(InstrClass::Mul, l.out_w as u64);
+                ctr.charge(InstrClass::Alu, l.out_w as u64);
+            }
+            ctr.charge(InstrClass::Alu, (l.out_w * cin_eff * k) as u64);
+        }
+        out
+    }
+
+    fn dense_slbc(
+        x: &[u32],
+        w: &[i32],
+        l: &LayerSpec,
+        wbits: u8,
+        abits: u8,
+        ctr: &mut Counter,
+    ) -> Vec<i64> {
+        let off = 1i64 << (wbits - 1);
+        let a: Vec<u64> = x.iter().take(l.cin).map(|&v| v as u64).collect();
+        let sx: i64 = a.iter().map(|&v| v as i64).sum();
+        let mut out = vec![0i64; l.cout];
+
+        let g = dot_group_size(abits as u32, wbits as u32, 63);
+        let n_groups = (l.cin as u64).div_ceil(g as u64);
+
+        ctr.charge(InstrClass::Bit, 2 * l.cin as u64);
+        ctr.charge(InstrClass::Alu, l.cin as u64);
+        for (oc, o) in out.iter_mut().enumerate() {
+            let b: Vec<u64> = (0..l.cin)
+                .map(|i| (w[i * l.cout + oc] as i64 + off) as u64)
+                .collect();
+            let dot = dot_packed(&a, &b, abits as u32, wbits as u32) as i64;
+            *o = dot - off * sx;
+            ctr.charge(
+                InstrClass::Load,
+                ((l.cin * wbits as usize).div_ceil(32)) as u64,
+            );
+            ctr.charge(InstrClass::MulLong, n_groups);
+            ctr.charge(InstrClass::Bit, 2 * n_groups);
+            ctr.charge(InstrClass::Alu, n_groups + 2);
+            ctr.charge(InstrClass::Store, 1);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mcu::CycleModel;
     use crate::models::{vgg_tiny, LayerKind};
     use crate::ops::common;
-    use crate::util::prng::Rng;
     use crate::util::prop::check;
 
     fn layer(kind: LayerKind, h: usize, cin: usize, cout: usize, k: usize) -> LayerSpec {
@@ -292,22 +784,7 @@ mod tests {
     }
 
     fn rand_io(l: &LayerSpec, abits: u8, wbits: u8, seed: u64) -> (Vec<u32>, Vec<i32>) {
-        let mut rng = Rng::new(seed);
-        let xn = match l.kind {
-            LayerKind::Dense => l.cin,
-            _ => l.in_h * l.in_w * l.cin,
-        };
-        let wn = match l.kind {
-            LayerKind::Conv => l.k * l.k * l.cin * l.cout,
-            LayerKind::DwConv => l.k * l.k * l.cout,
-            LayerKind::Dense => l.cin * l.cout,
-        };
-        let x: Vec<u32> = (0..xn).map(|_| rng.below(1 << abits) as u32).collect();
-        let lim = (1i64 << (wbits - 1)) - 1;
-        let w: Vec<i32> = (0..wn)
-            .map(|_| (rng.below(2 * lim as u64 + 1) as i64 - lim) as i32)
-            .collect();
-        (x, w)
+        common::rand_layer_operands(l, wbits, abits, seed)
     }
 
     #[test]
@@ -379,6 +856,73 @@ mod tests {
     }
 
     #[test]
+    fn rolling_pipeline_matches_legacy_operator() {
+        // The refactor must not change a single output bit relative to the
+        // pre-PR operator, across kinds and reordering.
+        for (kind, cin, cout) in [
+            (LayerKind::Conv, 3, 5),
+            (LayerKind::DwConv, 6, 6),
+            (LayerKind::Dense, 40, 7),
+        ] {
+            for rp in [false, true] {
+                for (wb, ab) in [(2u8, 2u8), (4, 4), (3, 6), (8, 8)] {
+                    let l = layer(kind, 7, cin, cout, if kind == LayerKind::Dense { 1 } else { 3 });
+                    let (x, w) = rand_io(&l, ab, wb, 77 + wb as u64 * 3 + ab as u64);
+                    let mut c_new = Counter::new();
+                    let got = run_layer(&x, &w, &l, wb, ab, rp, &mut c_new);
+                    let mut c_old = Counter::new();
+                    let want = legacy::run_layer(&x, &w, &l, wb, ab, rp, &mut c_old);
+                    assert_eq!(got, want, "{kind:?} rp={rp} wb={wb} ab={ab}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_buffer_wraparound_odd_widths() {
+        // Odd/prime widths exercise partial final packing groups and the
+        // ring slot wraparound at every (iy + pad) % k phase.
+        for h in [3usize, 5, 7, 9, 11] {
+            for k in [1usize, 3, 5] {
+                if k > h {
+                    continue;
+                }
+                let l = layer(LayerKind::Conv, h, 2, 3, k);
+                let (x, w) = rand_io(&l, 3, 3, 500 + (h * 10 + k) as u64);
+                let want = common::direct_conv2d(&x, &w, &l);
+                let mut ctr = Counter::new();
+                let got = run_layer(&x, &w, &l, 3, 3, false, &mut ctr);
+                assert_eq!(got, want, "h={h} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_kernel_runs_without_repacking() {
+        let l = layer(LayerKind::Conv, 6, 3, 4, 3);
+        let (x, w) = rand_io(&l, 4, 4, 900);
+        let kern = LayerKernel::build(&w, &l, 4, 4, true);
+        let mut c1 = Counter::new();
+        let first = run_layer_cached(&x, &l, &kern, &mut c1);
+        let packs_after_first = kernel_pack_count();
+        let mut c2 = Counter::new();
+        let again = run_layer_cached(&x, &l, &kern, &mut c2);
+        assert_eq!(first, again);
+        assert_eq!(c1, c2, "cached runs must charge identically");
+        assert_eq!(
+            kernel_pack_count(),
+            packs_after_first,
+            "cached runs must not re-pack kernel registers"
+        );
+        // The uncached entry point does pack.
+        let mut c3 = Counter::new();
+        let uncached = run_layer(&x, &w, &l, 4, 4, true, &mut c3);
+        assert_eq!(uncached, first);
+        assert_eq!(c3, c1, "cached and uncached paths charge identically");
+        assert!(kernel_pack_count() > packs_after_first);
+    }
+
+    #[test]
     fn slbc_low_bits_cheaper_than_high_bits() {
         let l = layer(LayerKind::Conv, 8, 8, 8, 3);
         let model = CycleModel::cortex_m7();
@@ -411,6 +955,31 @@ mod tests {
             "rp {} vs naive {}",
             cr.cycles(&model),
             cn.cycles(&model)
+        );
+    }
+
+    #[test]
+    fn rolling_row_work_amortized_vs_legacy() {
+        // The rolling pipeline fetches/packs each input row once, so its
+        // charged row work (loads + packing bit-ops) must undercut the
+        // legacy operator's once-per-output-row charging on stride-1 convs.
+        let l = layer(LayerKind::Conv, 8, 4, 4, 3);
+        let (x, w) = rand_io(&l, 4, 4, 4);
+        let mut c_new = Counter::new();
+        run_layer(&x, &w, &l, 4, 4, false, &mut c_new);
+        let mut c_old = Counter::new();
+        legacy::run_layer(&x, &w, &l, 4, 4, false, &mut c_old);
+        assert!(
+            c_new.load < c_old.load,
+            "row loads must amortize: {} vs {}",
+            c_new.load,
+            c_old.load
+        );
+        assert!(
+            c_new.bit < c_old.bit,
+            "row packing must amortize: {} vs {}",
+            c_new.bit,
+            c_old.bit
         );
     }
 }

@@ -1,0 +1,309 @@
+//! Conv hot-path trend line: host-side throughput and modeled cycles of
+//! the SLBC operator stack, per method and bitwidth.
+//!
+//! This is the repo's first conv-kernel perf trajectory (the fig5–fig8
+//! benches track *modeled* MCU cycles; serving tracks virtual-time
+//! throughput — neither watches the host-side cost of the operator
+//! itself, which is what bounds simulation and serving speed). The
+//! protocol compares, on a fixed layer set:
+//!
+//! * the **rolling-row pipeline** over a pre-packed
+//!   [`LayerKernel`](crate::ops::slbc::LayerKernel) and caller-owned
+//!   [`ConvScratch`](crate::ops::slbc::ConvScratch) — the steady state a
+//!   serve request pays after this PR;
+//! * the **legacy operator** ([`crate::ops::slbc::legacy`]) — the
+//!   re-fetch/re-pack-per-output-row implementation each request paid
+//!   before it (retained verbatim for exactly this comparison).
+//!
+//! Both are bit-exact with the direct-convolution oracle, so the ratio is
+//! pure pipeline overhead. Results are emitted as an aligned table plus a
+//! single JSON line in the same style as `serve_throughput`, consumed by
+//! `benches/conv_hotpath.rs` and the `bench-conv` CLI subcommand (CI runs
+//! the latter in smoke mode and archives the JSON per PR).
+
+use std::collections::BTreeMap;
+
+use crate::mcu::{Counter, CycleModel};
+use crate::models::{LayerKind, LayerSpec};
+use crate::ops::slbc::{self, ConvScratch, LayerKernel};
+use crate::util::bench::{human_ns, Bench, Table};
+use crate::util::json::Json;
+
+/// Bench configuration.
+#[derive(Debug, Clone)]
+pub struct ConvBenchCfg {
+    /// Timed iterations per case.
+    pub repeats: usize,
+    /// Warmup iterations per case.
+    pub warmup: usize,
+    /// Smoke mode: small shapes, minimal repeats (CI trend line).
+    pub smoke: bool,
+}
+
+impl Default for ConvBenchCfg {
+    fn default() -> Self {
+        ConvBenchCfg {
+            repeats: 20,
+            warmup: 3,
+            smoke: false,
+        }
+    }
+}
+
+impl ConvBenchCfg {
+    pub fn smoke() -> Self {
+        ConvBenchCfg {
+            repeats: 1,
+            warmup: 1,
+            smoke: true,
+        }
+    }
+}
+
+/// One measured (layer, method, bitwidth) case.
+#[derive(Debug, Clone)]
+pub struct ConvCase {
+    pub layer: String,
+    pub kind: LayerKind,
+    pub k: usize,
+    pub method: &'static str,
+    pub wbits: u8,
+    pub abits: u8,
+    /// Host ns per layer, rolling-row pipeline over a cached kernel.
+    pub host_ns: f64,
+    /// Host ns per layer, pre-PR operator (per-request packing).
+    pub host_ns_legacy: f64,
+    /// Modeled cycles per layer, rolling-row charging.
+    pub cycles: u64,
+    /// Modeled cycles per layer, pre-PR charging.
+    pub cycles_legacy: u64,
+}
+
+impl ConvCase {
+    pub fn speedup(&self) -> f64 {
+        self.host_ns_legacy / self.host_ns.max(1e-9)
+    }
+}
+
+/// Whole-run report.
+#[derive(Debug, Clone)]
+pub struct ConvHotpathReport {
+    pub cases: Vec<ConvCase>,
+    pub smoke: bool,
+}
+
+/// The fixed layer set: stride-1 k=3 convs of both backbone families
+/// (where the paper's speedup claim lives), a depthwise layer (the
+/// charging-fix target) and a pointwise conv (k=1, single-row ring).
+fn bench_layers(smoke: bool) -> Vec<LayerSpec> {
+    let hw = if smoke { 6 } else { 12 };
+    let (c_small, c_mid) = if smoke { (4, 8) } else { (8, 16) };
+    let mk = |name: &str, kind: LayerKind, cin: usize, cout: usize, k: usize| -> LayerSpec {
+        let mut l = crate::models::vgg_tiny(10, 16).layers[0].clone();
+        l.name = name.into();
+        l.kind = kind;
+        l.cin = cin;
+        l.cout = cout;
+        l.k = k;
+        l.in_h = hw;
+        l.in_w = hw;
+        l.out_h = hw;
+        l.out_w = hw;
+        l.macs = l.compute_macs();
+        l
+    };
+    vec![
+        mk("conv3x3_a", LayerKind::Conv, c_small, c_mid, 3),
+        mk("conv3x3_b", LayerKind::Conv, c_mid, c_mid, 3),
+        mk("dwconv3x3", LayerKind::DwConv, c_mid, c_mid, 3),
+        mk("pwconv1x1", LayerKind::Conv, c_mid, c_mid, 1),
+    ]
+}
+
+/// Run the protocol.
+pub fn run(cfg: &ConvBenchCfg) -> ConvHotpathReport {
+    let cm = CycleModel::cortex_m7();
+    let bench = Bench::new(cfg.warmup, cfg.repeats.max(1));
+    let bit_pairs: &[(u8, u8)] = if cfg.smoke {
+        &[(2, 2), (4, 4)]
+    } else {
+        &[(2, 2), (4, 4), (8, 8), (4, 8)]
+    };
+    let mut cases = Vec::new();
+    for l in bench_layers(cfg.smoke) {
+        for &(wb, ab) in bit_pairs {
+            for (method, reordered) in [("slbc", false), ("rp-slbc", true)] {
+                let (x, w) =
+                    crate::ops::common::rand_layer_operands(&l, wb, ab, 40 + wb as u64 * 5 + ab as u64);
+                let kern = LayerKernel::build(&w, &l, wb, ab, reordered);
+                let mut scratch = ConvScratch::new();
+
+                // Bit-exactness guard: the two operators must agree before
+                // their speeds are compared.
+                let mut c_new = Counter::new();
+                let got =
+                    slbc::run_layer_with_scratch(&x, &l, &kern, &mut c_new, &mut scratch);
+                let mut c_old = Counter::new();
+                let want = slbc::legacy::run_layer(&x, &w, &l, wb, ab, reordered, &mut c_old);
+                assert_eq!(got, want, "{} {method} w{wb}a{ab}: operators disagree", l.name);
+
+                let t_new = bench.run("rolling", || {
+                    let mut ctr = Counter::new();
+                    slbc::run_layer_with_scratch(&x, &l, &kern, &mut ctr, &mut scratch)
+                });
+                let t_old = bench.run("legacy", || {
+                    let mut ctr = Counter::new();
+                    slbc::legacy::run_layer(&x, &w, &l, wb, ab, reordered, &mut ctr)
+                });
+                cases.push(ConvCase {
+                    layer: l.name.clone(),
+                    kind: l.kind,
+                    k: l.k,
+                    method,
+                    wbits: wb,
+                    abits: ab,
+                    host_ns: t_new.mean_ns,
+                    host_ns_legacy: t_old.mean_ns,
+                    cycles: c_new.cycles(&cm),
+                    cycles_legacy: c_old.cycles(&cm),
+                });
+            }
+        }
+    }
+    ConvHotpathReport {
+        cases,
+        smoke: cfg.smoke,
+    }
+}
+
+impl ConvHotpathReport {
+    /// Mean host-side speedup over the stride-1 k=3 regular conv cases —
+    /// the acceptance headline.
+    pub fn mean_speedup_conv3x3(&self) -> f64 {
+        let v: Vec<f64> = self
+            .cases
+            .iter()
+            .filter(|c| c.kind == LayerKind::Conv && c.k == 3)
+            .map(|c| c.speedup())
+            .collect();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+
+    /// Mean modeled-cycle ratio (legacy / rolling) over all cases: > 1
+    /// where the amortized charging pays off, exactly 1 where a layer has
+    /// no row reuse to exploit (k=1), and < 1 for depthwise layers, whose
+    /// per-channel row work the legacy operator never charged.
+    pub fn mean_cycle_ratio(&self) -> f64 {
+        let v: Vec<f64> = self
+            .cases
+            .iter()
+            .map(|c| c.cycles_legacy as f64 / c.cycles.max(1) as f64)
+            .collect();
+        v.iter().sum::<f64>() / v.len().max(1) as f64
+    }
+
+    /// Deterministic acceptance gate (safe for single-repeat smoke runs):
+    /// the rolling pipeline must never charge more modeled cycles than
+    /// the pre-PR operator on regular convs — row work only amortizes.
+    pub fn check_cycle_invariant(&self) -> Result<(), String> {
+        for c in self.cases.iter().filter(|c| c.kind == LayerKind::Conv) {
+            if c.cycles > c.cycles_legacy {
+                return Err(format!(
+                    "{} {}: rolling pipeline charges more than the pre-PR operator ({} vs {})",
+                    c.layer, c.method, c.cycles, c.cycles_legacy
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Wall-clock acceptance gate (full mode only — single-repeat means
+    /// are too noisy to fail a build over): mean host speedup on stride-1
+    /// k=3 convs must reach `min`.
+    pub fn check_speedup(&self, min: f64) -> Result<(), String> {
+        let sp = self.mean_speedup_conv3x3();
+        if sp < min {
+            Err(format!(
+                "mean k=3 conv host speedup {sp:.2}x below the required {min:.1}x"
+            ))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Aligned table of every case.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "layer", "method", "w", "a", "host/layer", "legacy", "speedup", "cycles",
+            "legacy cyc",
+        ]);
+        for c in &self.cases {
+            t.row(vec![
+                c.layer.clone(),
+                c.method.to_string(),
+                format!("{}", c.wbits),
+                format!("{}", c.abits),
+                human_ns(c.host_ns),
+                human_ns(c.host_ns_legacy),
+                format!("{:.2}x", c.speedup()),
+                format!("{}", c.cycles),
+                format!("{}", c.cycles_legacy),
+            ]);
+        }
+        t.render()
+    }
+
+    /// One-line JSON summary (the per-PR trend record).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("conv_hotpath".into()));
+        o.insert("smoke".into(), Json::Bool(self.smoke));
+        o.insert(
+            "mean_speedup_conv3x3".into(),
+            Json::Num(self.mean_speedup_conv3x3()),
+        );
+        o.insert("mean_cycle_ratio".into(), Json::Num(self.mean_cycle_ratio()));
+        let cases: Vec<Json> = self
+            .cases
+            .iter()
+            .map(|c| {
+                let mut e = BTreeMap::new();
+                e.insert("layer".into(), Json::Str(c.layer.clone()));
+                e.insert("method".into(), Json::Str(c.method.into()));
+                e.insert("wbits".into(), Json::Num(c.wbits as f64));
+                e.insert("abits".into(), Json::Num(c.abits as f64));
+                e.insert("host_ns".into(), Json::Num(c.host_ns));
+                e.insert("host_ns_legacy".into(), Json::Num(c.host_ns_legacy));
+                e.insert("speedup".into(), Json::Num(c.speedup()));
+                e.insert("cycles".into(), Json::Num(c.cycles as f64));
+                e.insert("cycles_legacy".into(), Json::Num(c.cycles_legacy as f64));
+                Json::Obj(e)
+            })
+            .collect();
+        o.insert("cases".into(), Json::Arr(cases));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_run_produces_consistent_report() {
+        let rep = run(&ConvBenchCfg::smoke());
+        assert!(!rep.cases.is_empty());
+        for c in &rep.cases {
+            assert!(c.host_ns > 0.0 && c.host_ns_legacy > 0.0, "{}", c.layer);
+            assert!(c.cycles > 0 && c.cycles_legacy > 0, "{}", c.layer);
+        }
+        // The shared deterministic gate every entry point enforces.
+        rep.check_cycle_invariant().unwrap();
+        let json = rep.to_json().to_string_compact();
+        assert!(json.contains("conv_hotpath"));
+        assert!(json.contains("mean_speedup_conv3x3"));
+    }
+}

@@ -22,6 +22,7 @@
 //! MAC-count proxy the paper compares against in Fig. 8 is [`mac_proxy`].
 
 pub mod calibrate;
+pub mod conv_hotpath;
 pub mod roofline;
 pub mod predict;
 

@@ -60,7 +60,7 @@ pub fn predict_model(model: &ModelDesc, method: Method, cfg: &BitConfig) -> Pred
 }
 
 // ---------------------------------------------------------------------------
-// SLBC / RP-SLBC (mirror of ops::slbc::{conv_slbc, dense_slbc})
+// SLBC / RP-SLBC (mirror of the rolling-row pipeline in ops::slbc)
 // ---------------------------------------------------------------------------
 
 fn mul_class(plan: &LanePlan) -> InstrClass {
@@ -81,22 +81,31 @@ fn predict_slbc(l: &LayerSpec, wbits: u8, abits: u8, reordered: bool, ctr: &mut 
     let k = l.k;
     let pad = crate::ops::common::pad_of(k);
     let padded_w = l.in_w + 2 * pad as usize;
+    // Ring channels vs kernel channels (mirror of the rolling-row core).
+    let chan = if depthwise { l.cout } else { l.cin };
     let cin_eff = if depthwise { 1 } else { l.cin };
     let cout = l.cout;
 
     let plan = best_plan(abits as u32, wbits as u32, k as u32)
         .expect("SLBC plan must exist for 2..=8-bit operands");
     // Mirror of ops::slbc: reordering only where it wins (§IV.C).
-    let use_rp = reordered
-        && plan
-            .reordered
-            .as_ref()
-            .map(|r| r.seg_ops_per_instr() < plan.conv.seg_ops_per_instr())
-            .unwrap_or(false);
+    let use_rp = reordered && plan.reordering_wins();
 
-    // Kernel packing, once per layer.
+    // Kernel-register streaming, once per layer.
     ctr.charge(InstrClass::Bit, (cout * k * cin_eff * k * 2) as u64);
     ctr.charge(InstrClass::Store, (cout * k * cin_eff) as u64);
+
+    // Rolling-row work, charged once per fetched row: every channel of the
+    // ring fetches `out_h + k - 1` distinct (padded) input rows per layer,
+    // each paying the packed-row load, the signal packing and the window
+    // sums exactly once.
+    let rows_fetched = (chan * (l.out_h + k - 1)) as u64;
+    ctr.charge(
+        InstrClass::Load,
+        rows_fetched * ((padded_w * abits as usize).div_ceil(32)) as u64,
+    );
+    ctr.charge(InstrClass::Bit, rows_fetched * (padded_w as u64) * 2);
+    ctr.charge(InstrClass::Alu, rows_fetched * (l.out_w as u64) * 2);
 
     let elems_per_mul = plan.conv.elements_per_instr() as usize;
     let n_mul_per_row = padded_w.div_ceil(elems_per_mul) as u64;
@@ -108,17 +117,8 @@ fn predict_slbc(l: &LayerSpec, wbits: u8, abits: u8, reordered: bool, ctr: &mut 
     let fields_per_flush = (plan.conv.spec.group * plan.conv.cfg.lanes()) as u64;
     let muls_per_oc = (k * cin_eff) as u64 * n_mul_per_row;
     let flushes = muls_per_oc.div_ceil(plan.accum_depth as u64);
-    let shared_rows = (cin_eff * k) as u64;
 
     for _oy in 0..l.out_h {
-        // Shared row work.
-        ctr.charge(
-            InstrClass::Load,
-            shared_rows * ((padded_w * abits as usize).div_ceil(32)) as u64,
-        );
-        ctr.charge(InstrClass::Bit, shared_rows * (padded_w as u64) * 2);
-        ctr.charge(InstrClass::Alu, shared_rows * (l.out_w as u64) * 2);
-
         // Per output channel.
         let co = cout as u64;
         ctr.charge(mul_class(&plan), co * muls_per_oc);
@@ -129,8 +129,14 @@ fn predict_slbc(l: &LayerSpec, wbits: u8, abits: u8, reordered: bool, ctr: &mut 
         ctr.charge(InstrClass::Mul, co * l.out_w as u64);
         ctr.charge(InstrClass::Alu, co * l.out_w as u64);
 
-        // Window-sum reduction once per (oy, ox).
-        ctr.charge(InstrClass::Alu, (l.out_w * cin_eff * k) as u64);
+        // Window-sum reduction: shared across output channels for regular
+        // convs (the correction row is filter-independent), per output
+        // channel for depthwise (each channel owns its window sums).
+        if depthwise {
+            ctr.charge(InstrClass::Alu, (cout * l.out_w * k) as u64);
+        } else {
+            ctr.charge(InstrClass::Alu, (l.out_w * l.cin * k) as u64);
+        }
     }
 }
 

@@ -7,6 +7,13 @@
 //! request. Hit/miss/compile/eviction counters make the compile-once
 //! guarantee observable (cross-checked against
 //! [`crate::engine::compile_count`] in tests and `bench-serve`).
+//!
+//! Since the rolling-row conv refactor, the cached artifact also carries
+//! the engine's [`KernelCache`](crate::engine::KernelCache) of pre-packed
+//! SLBC kernel registers, so a registry hit serves requests with **zero
+//! kernel re-packing** — compilation cost *and* packing cost amortize
+//! across the tenant's whole request stream (asserted below against
+//! [`crate::ops::slbc::kernel_pack_count`]).
 
 use std::sync::Arc;
 
@@ -257,6 +264,30 @@ mod tests {
         assert_eq!(k2_hits, Some(2));
         assert_eq!(reg.stats().evictions, 2);
         assert_eq!(reg.stats().compiles, 3);
+    }
+
+    #[test]
+    fn registry_hits_serve_prepacked_kernels() {
+        // A registry hit must hand back an artifact whose kernel registers
+        // are already packed; serving requests from it re-packs nothing.
+        let mut reg = Registry::new(2);
+        let k = key(4, Method::RpSlbc);
+        let m = mobilenet_tiny(2, 16);
+        reg.get_or_compile(&k, || build(4, Method::RpSlbc)).unwrap();
+        let art = reg.get_or_compile(&k, || build(4, Method::RpSlbc)).unwrap();
+        assert_eq!(art.kernels.packed_layers(), m.num_layers());
+        let img = vec![0.4f32; m.input_hw * m.input_hw * m.input_c];
+        let first = art.run(&img).unwrap();
+        let packs = crate::ops::slbc::kernel_pack_count();
+        for _ in 0..2 {
+            let again = art.run(&img).unwrap();
+            assert_eq!(first.logits, again.logits);
+        }
+        assert_eq!(
+            crate::ops::slbc::kernel_pack_count(),
+            packs,
+            "serving from a registry hit must not re-pack kernels"
+        );
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //! amortized instruction cost per MAC.
 //!
 //! The cost model here is the single source of truth shared by the SLBC
-//! operators ([`crate::ops::conv_slbc`]), the Eq. 12 performance model
+//! operators ([`crate::ops::slbc`]), the Eq. 12 performance model
 //! ([`crate::perf`]) and the Fig. 5/6 benches.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
 
 use super::packing::{LaneCfg, SimdConv};
 use super::reorder::RpConv;
@@ -41,6 +44,19 @@ pub struct LanePlan {
 }
 
 impl LanePlan {
+    /// Whether RP-SLBC's reordered segmentation actually reduces work for
+    /// this plan (compile-time adaptivity, §IV.C): e.g. single-lane
+    /// pointwise plans gain nothing from Theorem IV.1 and keep naive
+    /// segmentation. The single source of truth for the operator
+    /// ([`crate::ops::slbc`]), its charging mirror
+    /// ([`crate::perf::predict`]) and codegen's kernel flag.
+    pub fn reordering_wins(&self) -> bool {
+        self.reordered
+            .as_ref()
+            .map(|r| r.seg_ops_per_instr() < self.conv.seg_ops_per_instr())
+            .unwrap_or(false)
+    }
+
     fn build(cfg: LaneCfg, sx: u32, sk: u32, k_taps: u32, field: u32) -> Option<LanePlan> {
         let conv = SimdConv::plan_with_field(cfg, sx, sk, k_taps, field)?;
         let reordered = RpConv::plan_with_field(cfg, sx, sk, k_taps, field);
@@ -65,12 +81,29 @@ impl LanePlan {
     }
 }
 
+/// Memo table for [`best_plan`]: the plan search enumerates every
+/// `(lane cfg, field stride)` pair, and it used to run afresh for every
+/// layer of every compile *and* every `run_layer` call. The result is a
+/// pure function of `(sx, sk, k_taps)` over a tiny domain (bitwidths 2–8,
+/// a handful of tap counts), so each triple is resolved exactly once per
+/// process.
+fn plan_memo() -> &'static Mutex<HashMap<(u32, u32, u32), Option<LanePlan>>> {
+    static MEMO: OnceLock<Mutex<HashMap<(u32, u32, u32), Option<LanePlan>>>> = OnceLock::new();
+    MEMO.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
 /// Pick the best `(lane size, field stride)` for a convolution with
 /// `sx`-bit activations, `sk`-bit weights and `k_taps` kernel taps.
 /// Returns `None` only when no configuration fits (the operator then falls
-/// back to the plain-SIMD int8 path).
+/// back to the plain-SIMD int8 path). Memoized per `(sx, sk, k_taps)`.
 pub fn best_plan(sx: u32, sk: u32, k_taps: u32) -> Option<LanePlan> {
-    best_plan_with(&LaneCfg::all(), sx, sk, k_taps)
+    let key = (sx, sk, k_taps);
+    if let Some(p) = plan_memo().lock().unwrap().get(&key) {
+        return *p;
+    }
+    let p = best_plan_with(LaneCfg::all(), sx, sk, k_taps);
+    plan_memo().lock().unwrap().insert(key, p);
+    p
 }
 
 /// [`best_plan`] restricted to a caller-chosen set of lane configurations.
@@ -118,7 +151,8 @@ pub fn slbc_equivalent_ops(wbits: u32, abits: u32, k_taps: u32) -> f64 {
 /// wider datapath adaptive packing also exploits.
 pub fn slbc_equivalent_ops_simd32(wbits: u32, abits: u32, k_taps: u32) -> f64 {
     let cfgs: Vec<LaneCfg> = LaneCfg::all()
-        .into_iter()
+        .iter()
+        .copied()
         .filter(|c| c.register_bits == 32)
         .collect();
     best_plan_with(&cfgs, abits, wbits, k_taps)
@@ -163,6 +197,23 @@ mod tests {
         for w in 2..=8u32 {
             for a in 2..=8u32 {
                 assert!(best_plan(a, w, 3).is_some(), "w={w} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn memoized_plan_is_stable_and_matches_search() {
+        // The memo must return exactly what the underlying search returns,
+        // call after call (the conv pipeline builds kernel caches from it).
+        for (a, w, k) in [(2u32, 2u32, 3u32), (4, 4, 3), (8, 8, 3), (3, 5, 1)] {
+            let fresh = best_plan_with(LaneCfg::all(), a, w, k).unwrap();
+            for _ in 0..3 {
+                let memo = best_plan(a, w, k).unwrap();
+                assert_eq!(memo.cfg, fresh.cfg, "a={a} w={w} k={k}");
+                assert_eq!(memo.field, fresh.field);
+                assert_eq!(memo.accum_depth, fresh.accum_depth);
+                assert_eq!(memo.macs_per_instr, fresh.macs_per_instr);
+                assert!((memo.cost_per_mac - fresh.cost_per_mac).abs() < 1e-12);
             }
         }
     }

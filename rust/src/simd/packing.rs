@@ -35,14 +35,19 @@ impl LaneCfg {
     }
 
     /// All configurations the Cortex-M7 DSP view offers (§IV.C's search
-    /// space for adaptive packing).
-    pub fn all() -> Vec<LaneCfg> {
-        vec![
-            LaneCfg::new(32, 8),
-            LaneCfg::new(32, 16),
-            LaneCfg::new(32, 32),
-            LaneCfg::new(64, 64), // UMULL/UMLAL long-multiply path
-        ]
+    /// space for adaptive packing). A `'static` table: the adaptive-plan
+    /// search runs per layer, so the search space must not be re-allocated
+    /// per query.
+    pub const ALL: [LaneCfg; 4] = [
+        LaneCfg { register_bits: 32, lane_bits: 8 },
+        LaneCfg { register_bits: 32, lane_bits: 16 },
+        LaneCfg { register_bits: 32, lane_bits: 32 },
+        // UMULL/UMLAL long-multiply path.
+        LaneCfg { register_bits: 64, lane_bits: 64 },
+    ];
+
+    pub fn all() -> &'static [LaneCfg] {
+        &Self::ALL
     }
 }
 
@@ -176,6 +181,13 @@ impl SimdConv {
         y
     }
 
+    /// Number of window registers [`Self::pack_windows_into`] produces for
+    /// an `n`-element row — the per-row stride of the flat packed buffers
+    /// the rolling-row conv pipeline holds.
+    pub fn n_regs(&self, n: usize) -> usize {
+        n.div_ceil(self.elements_per_instr() as usize)
+    }
+
     /// Pre-pack a signal row into its per-window registers.
     ///
     /// Packing depends only on the signal, not the filter, so the result
@@ -187,6 +199,23 @@ impl SimdConv {
         while i < x.len() {
             let hi = (i + step).min(x.len());
             out.push(self.pack_signal(&x[i..hi]));
+            i += step;
+        }
+    }
+
+    /// Allocation-free [`Self::pack_windows_into`]: writes the
+    /// [`Self::n_regs`]`(x.len())` window registers into `out` (a slot of a
+    /// flat, strided buffer) instead of appending to a `Vec`.
+    #[inline]
+    pub fn pack_windows_to(&self, x: &[u64], out: &mut [u64]) {
+        let step = self.elements_per_instr() as usize;
+        debug_assert_eq!(out.len(), self.n_regs(x.len()));
+        let mut i = 0usize;
+        let mut r = 0usize;
+        while i < x.len() {
+            let hi = (i + step).min(x.len());
+            out[r] = self.pack_signal(&x[i..hi]);
+            r += 1;
             i += step;
         }
     }
@@ -312,6 +341,20 @@ mod tests {
         // 0xFFFF * 0xFFFF truncated to 16 bits = 0x0001 per lane.
         let v = plan.simd_mul(0xFFFF_FFFF, 0xFFFF_FFFF);
         assert_eq!(v, 0x0001_0001);
+    }
+
+    #[test]
+    fn pack_windows_flat_matches_vec_variant() {
+        let plan = SimdConv::plan(LaneCfg::new(32, 16), 2, 2, 2).unwrap();
+        for n in 1..40usize {
+            let x: Vec<u64> = (0..n).map(|i| (i % 4) as u64).collect();
+            let mut v = Vec::new();
+            plan.pack_windows_into(&x, &mut v);
+            assert_eq!(v.len(), plan.n_regs(n), "n={n}");
+            let mut flat = vec![0u64; plan.n_regs(n)];
+            plan.pack_windows_to(&x, &mut flat);
+            assert_eq!(v, flat, "n={n}");
+        }
     }
 
     #[test]

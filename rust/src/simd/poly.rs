@@ -253,6 +253,87 @@ pub fn dot_packed(a: &[u64], b: &[u64], sa_bits: u32, sb_bits: u32) -> u64 {
     acc
 }
 
+/// Pack the signal-side operand of [`dot_packed`] into one register per
+/// group (ascending fields). The packing depends only on the operand and
+/// the bitwidth pair, so the result is reusable across every weight vector
+/// dotted against it (one packing per dense layer, not per output neuron).
+pub fn dot_pack_a(a: &[u64], sa_bits: u32, sb_bits: u32) -> Vec<u64> {
+    let mut regs = Vec::with_capacity(a.len().div_ceil(dot_group_size(
+        sa_bits,
+        sb_bits,
+        REGISTER_BITS,
+    ) as usize));
+    dot_pack_a_into(a, sa_bits, sb_bits, &mut regs);
+    regs
+}
+
+/// Allocation-free [`dot_pack_a`]: clears `out` and fills it with the
+/// packed signal registers (capacity is retained across calls — the dense
+/// hot path's steady state).
+pub fn dot_pack_a_into(a: &[u64], sa_bits: u32, sb_bits: u32, out: &mut Vec<u64>) {
+    let g = dot_group_size(sa_bits, sb_bits, REGISTER_BITS) as usize;
+    let s = field_width(sa_bits, sb_bits, g as u32);
+    out.clear();
+    let mut i = 0usize;
+    while i < a.len() {
+        let hi = (i + g).min(a.len());
+        let mut ra = 0u64;
+        for (l, j) in (i..hi).enumerate() {
+            ra |= a[j] << (l as u32 * s);
+        }
+        out.push(ra);
+        i = hi;
+    }
+}
+
+/// Pack the weight-side operand of [`dot_packed`] into one register per
+/// group (descending fields, the reversal that turns the product's middle
+/// field into the group's inner product). Deploy-time work: the packed
+/// registers are what a real flash image stores, so repeated inference
+/// never re-packs them (see the engine's `KernelCache`).
+pub fn dot_pack_b(b: &[u64], sa_bits: u32, sb_bits: u32) -> Vec<u64> {
+    let g = dot_group_size(sa_bits, sb_bits, REGISTER_BITS) as usize;
+    let s = field_width(sa_bits, sb_bits, g as u32);
+    let mut regs = Vec::with_capacity(b.len().div_ceil(g));
+    let mut i = 0usize;
+    while i < b.len() {
+        let hi = (i + g).min(b.len());
+        let mut rb = 0u64;
+        for (l, j) in (i..hi).enumerate() {
+            rb |= b[j] << ((hi - i - 1 - l) as u32 * s);
+        }
+        regs.push(rb);
+        i = hi;
+    }
+    regs
+}
+
+/// [`dot_packed`] over operands prepacked by [`dot_pack_a`] /
+/// [`dot_pack_b`]; `n` is the original (unpacked) operand length, needed
+/// to locate the partial last group's dot field. Bit-identical to
+/// [`dot_packed`] (enforced by tests).
+pub fn dot_packed_prepacked(
+    a_regs: &[u64],
+    b_regs: &[u64],
+    n: usize,
+    sa_bits: u32,
+    sb_bits: u32,
+) -> u64 {
+    let g = dot_group_size(sa_bits, sb_bits, REGISTER_BITS) as usize;
+    let s = field_width(sa_bits, sb_bits, g as u32);
+    let mask = (1u64 << s) - 1;
+    debug_assert_eq!(a_regs.len(), n.div_ceil(g));
+    debug_assert_eq!(b_regs.len(), n.div_ceil(g));
+    let mut acc = 0u64;
+    for (gi, (&ra, &rb)) in a_regs.iter().zip(b_regs).enumerate() {
+        // The top field of the (possibly partial) group holds its dot.
+        let len = (n - gi * g).min(g);
+        let mid = (len - 1) as u32 * s;
+        acc += (ra.wrapping_mul(rb) >> mid) & mask;
+    }
+    acc
+}
+
 /// Largest dot-product group size for the given operand widths.
 pub fn dot_group_size(sa_bits: u32, sb_bits: u32, register_bits: u32) -> u32 {
     let mut g = 1u32;
@@ -349,6 +430,22 @@ mod tests {
             let b = rand_vec(&mut r, n, sb);
             let direct: u64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert_eq!(dot_packed(&a, &b, sa, sb), direct);
+        });
+    }
+
+    #[test]
+    fn dot_prepacked_matches_direct() {
+        check("prepacked dot == direct dot", 200, |rng| {
+            let sa = rng.range(1, 9) as u32;
+            let sb = rng.range(1, 9) as u32;
+            let n = rng.range(1, 100);
+            let mut r = rng.fork(5);
+            let a = rand_vec(&mut r, n, sa);
+            let b = rand_vec(&mut r, n, sb);
+            let direct: u64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let a_regs = dot_pack_a(&a, sa, sb);
+            let b_regs = dot_pack_b(&b, sa, sb);
+            assert_eq!(dot_packed_prepacked(&a_regs, &b_regs, n, sa, sb), direct);
         });
     }
 

@@ -177,6 +177,13 @@ impl RpConv {
         y
     }
 
+    /// Number of chunks [`Self::prepack_chunks`] produces for an
+    /// `n`-element row — the per-row stride of the flat packed buffers the
+    /// rolling-row conv pipeline holds.
+    pub fn n_chunks(&self, n: usize) -> usize {
+        n.div_ceil(self.inner.spec.group as usize)
+    }
+
     /// Pre-pack the signal's chunks once (filter-independent): chunk `c`
     /// covers `x[c*Ns .. c*Ns+Ns]`; its packed lane value is reused by
     /// every output channel.
@@ -186,6 +193,23 @@ impl RpConv {
         while start < x.len() {
             let hi = (start + ns).min(x.len());
             out.push(self.inner.spec.pack_signal(&x[start..hi]));
+            start += ns;
+        }
+    }
+
+    /// Allocation-free [`Self::prepack_chunks`]: writes the
+    /// [`Self::n_chunks`]`(x.len())` packed chunks into `out` (a slot of a
+    /// flat, strided buffer) instead of appending to a `Vec`.
+    #[inline]
+    pub fn prepack_chunks_to(&self, x: &[u64], out: &mut [u64]) {
+        let ns = self.inner.spec.group as usize;
+        debug_assert_eq!(out.len(), self.n_chunks(x.len()));
+        let mut start = 0usize;
+        let mut c = 0usize;
+        while start < x.len() {
+            let hi = (start + ns).min(x.len());
+            out[c] = self.inner.spec.pack_signal(&x[start..hi]);
+            c += 1;
             start += ns;
         }
     }
@@ -348,6 +372,20 @@ mod tests {
     }
 
     #[test]
+    fn prepack_chunks_flat_matches_vec_variant() {
+        let rp = RpConv::plan(cfg16(), 2, 2, 2).unwrap();
+        for n in 1..40usize {
+            let x: Vec<u64> = (0..n).map(|i| ((i * 3) % 4) as u64).collect();
+            let mut v = Vec::new();
+            rp.prepack_chunks(&x, &mut v);
+            assert_eq!(v.len(), rp.n_chunks(n), "n={n}");
+            let mut flat = vec![0u64; rp.n_chunks(n)];
+            rp.prepack_chunks_to(&x, &mut flat);
+            assert_eq!(v, flat, "n={n}");
+        }
+    }
+
+    #[test]
     fn rp_plan_rejects_wide_kernels() {
         // K > Ns + 1 breaks the local-accumulation completeness condition.
         // 8b x 8b in a 32-bit lane: S = 17 with 2 taps -> Ns = 0/invalid.
@@ -357,7 +395,7 @@ mod tests {
     #[test]
     fn seg_ops_strictly_fewer_than_naive() {
         for (sx, sk, kt) in [(2u32, 2u32, 2u32), (2, 4, 2), (3, 3, 2)] {
-            for cfg in LaneCfg::all() {
+            for &cfg in LaneCfg::all() {
                 if let Some(rp) = RpConv::plan(cfg, sx, sk, kt) {
                     // Strict win whenever there is more than one lane (the
                     // cross-lane stitching disappears); equality is the

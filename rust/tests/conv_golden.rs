@@ -1,0 +1,177 @@
+//! Golden suite for the rolling-row SLBC pipeline.
+//!
+//! 1. **Bit-exactness** against the direct (naive) oracle for every
+//!    `(wbits, abits)` pair in 2..=8, across Conv / DwConv / Dense, both
+//!    packing orders, on odd widths that exercise the ring-buffer
+//!    wraparound and partial packing groups.
+//! 2. **Counter equivalence**: modeled instruction histograms (and thus
+//!    cycle totals) of the operators must match the analytic predictor
+//!    term by term on a fixed layer set — the regression pin for the
+//!    rolling-row charging rules (row work amortized across output rows,
+//!    depthwise charged per channel).
+//! 3. **Cached = uncached**: the `KernelCache` path must be bit- and
+//!    cycle-identical to on-the-fly packing.
+//!
+//! Pure Rust — needs neither `artifacts/` nor a PJRT runtime.
+
+use mcu_mixq::mcu::{Counter, CycleModel};
+use mcu_mixq::models::{vgg_tiny, LayerKind, LayerSpec};
+use mcu_mixq::ops::Method;
+use mcu_mixq::ops::{common, slbc};
+use mcu_mixq::perf::predict_layer;
+
+fn layer(kind: LayerKind, h: usize, cin: usize, cout: usize, k: usize) -> LayerSpec {
+    let mut l = vgg_tiny(10, 16).layers[0].clone();
+    l.kind = kind;
+    l.in_h = h;
+    l.in_w = h;
+    l.out_h = h;
+    l.out_w = h;
+    l.cin = cin;
+    l.cout = cout;
+    l.k = k;
+    l.macs = l.compute_macs();
+    l
+}
+
+fn rand_io(l: &LayerSpec, abits: u8, wbits: u8, seed: u64) -> (Vec<u32>, Vec<i32>) {
+    common::rand_layer_operands(l, wbits, abits, seed)
+}
+
+fn oracle(x: &[u32], w: &[i32], l: &LayerSpec) -> Vec<i64> {
+    match l.kind {
+        LayerKind::Conv => common::direct_conv2d(x, w, l),
+        LayerKind::DwConv => common::direct_dwconv2d(x, w, l),
+        LayerKind::Dense => common::direct_dense(x, w, l),
+    }
+}
+
+#[test]
+fn golden_bit_exactness_full_bitwidth_grid() {
+    // Odd spatial width (7) exercises partial packing groups at every row
+    // end; k=3 rolls the ring through all three phases.
+    for kind in [LayerKind::Conv, LayerKind::DwConv, LayerKind::Dense] {
+        let l = match kind {
+            LayerKind::Conv => layer(kind, 7, 2, 3, 3),
+            LayerKind::DwConv => layer(kind, 7, 3, 3, 3),
+            LayerKind::Dense => layer(kind, 1, 19, 5, 1),
+        };
+        for wb in 2..=8u8 {
+            for ab in 2..=8u8 {
+                let (x, w) = rand_io(&l, ab, wb, 7000 + wb as u64 * 16 + ab as u64);
+                let want = oracle(&x, &w, &l);
+                for rp in [false, true] {
+                    let mut ctr = Counter::new();
+                    let got = slbc::run_layer(&x, &w, &l, wb, ab, rp, &mut ctr);
+                    assert_eq!(got, want, "{kind:?} w{wb}a{ab} rp={rp}");
+                    assert!(ctr.instructions() > 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_ring_wraparound_widths() {
+    // Widths around the packing group boundaries (the ring slots wrap at
+    // (iy + pad) % k while the packer straddles partial groups).
+    for h in [3usize, 5, 7, 9, 11, 13] {
+        for rp in [false, true] {
+            let l = layer(LayerKind::Conv, h, 3, 2, 3);
+            let (x, w) = rand_io(&l, 5, 3, 8000 + h as u64);
+            let want = common::direct_conv2d(&x, &w, &l);
+            let mut ctr = Counter::new();
+            let got = slbc::run_layer(&x, &w, &l, 3, 5, rp, &mut ctr);
+            assert_eq!(got, want, "h={h} rp={rp}");
+        }
+    }
+}
+
+/// The fixed layer set of the counter-equivalence pin: representative
+/// shapes of both backbone families (regular conv, depthwise, pointwise,
+/// dense) at sizes small enough to run the whole grid quickly.
+fn pinned_layers() -> Vec<LayerSpec> {
+    vec![
+        layer(LayerKind::Conv, 8, 3, 4, 3),
+        layer(LayerKind::Conv, 6, 4, 4, 1),
+        layer(LayerKind::DwConv, 8, 6, 6, 3),
+        layer(LayerKind::Dense, 1, 48, 10, 1),
+    ]
+}
+
+#[test]
+fn counter_equivalence_pins_cycle_totals() {
+    // predict.rs mirrors the rolling-row charging term by term, from
+    // geometry alone. Any change to either side breaks this pin — which
+    // is the point: modeled cycle totals cannot drift silently.
+    let cm = CycleModel::cortex_m7();
+    for l in pinned_layers() {
+        for method in [Method::Slbc, Method::RpSlbc] {
+            for (wb, ab) in [(2u8, 2u8), (4, 4), (8, 8), (3, 5), (4, 8)] {
+                let (x, w) = rand_io(&l, ab, wb, 9000 + wb as u64 * 8 + ab as u64);
+                let mut measured = Counter::new();
+                method.run_layer(&x, &w, &l, wb, ab, &mut measured);
+                let predicted = predict_layer(&l, method, wb, ab);
+                assert_eq!(
+                    predicted.counter,
+                    measured,
+                    "{} {} w{wb}a{ab}: histogram drift",
+                    l.name,
+                    method.name()
+                );
+                assert_eq!(
+                    predicted.counter.cycles(&cm),
+                    measured.cycles(&cm),
+                    "{} {} w{wb}a{ab}: cycle drift",
+                    l.name,
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_kernel_bit_and_cycle_identical_to_uncached() {
+    for l in pinned_layers() {
+        for rp in [false, true] {
+            let (wb, ab) = (4u8, 4u8);
+            let (x, w) = rand_io(&l, ab, wb, 4242);
+            let kern = slbc::LayerKernel::build(&w, &l, wb, ab, rp);
+            let mut c_cached = Counter::new();
+            let cached = slbc::run_layer_cached(&x, &l, &kern, &mut c_cached);
+            let mut c_fresh = Counter::new();
+            let fresh = slbc::run_layer(&x, &w, &l, wb, ab, rp, &mut c_fresh);
+            assert_eq!(cached, fresh, "{} rp={rp}", l.name);
+            assert_eq!(c_cached, c_fresh, "{} rp={rp}: charging drift", l.name);
+        }
+    }
+}
+
+#[test]
+fn depthwise_charging_counts_per_channel_rows() {
+    // The depthwise fix: row work scales with the channel count (each
+    // channel's rows are fetched/packed once), where the legacy operator
+    // charged only the channel-0 prefetch regardless of cout.
+    let narrow = layer(LayerKind::DwConv, 8, 4, 4, 3);
+    let wide = layer(LayerKind::DwConv, 8, 16, 16, 3);
+    let (xn, wn) = rand_io(&narrow, 4, 4, 1);
+    let (xw, ww) = rand_io(&wide, 4, 4, 2);
+    let mut c_narrow = Counter::new();
+    slbc::run_layer(&xn, &wn, &narrow, 4, 4, false, &mut c_narrow);
+    let mut c_wide = Counter::new();
+    slbc::run_layer(&xw, &ww, &wide, 4, 4, false, &mut c_wide);
+    // 4x the channels ⇒ 4x the charged row loads (row geometry is equal).
+    assert_eq!(c_wide.load, 4 * c_narrow.load, "row loads must scale with channels");
+
+    // And the legacy operator undercharged: same wide layer, legacy
+    // charges strictly fewer loads than the honest per-channel pipeline.
+    let mut c_legacy = Counter::new();
+    slbc::legacy::run_layer(&xw, &ww, &wide, 4, 4, false, &mut c_legacy);
+    assert!(
+        c_wide.load > c_legacy.load,
+        "depthwise fix must charge the per-channel rows ({} vs legacy {})",
+        c_wide.load,
+        c_legacy.load
+    );
+}
