@@ -1,18 +1,27 @@
 //! Serving-throughput trajectory bench.
 //!
-//! Replays the canonical mixed-fleet scenario (vgg_tiny on RP-SLBC +
-//! mobilenet_tiny on int8 TinyEngine, 320 requests, 4 × STM32F746) and
-//! emits one JSON summary line — requests/s in virtual MCU time, p95
-//! latency, cache hit rate, compile count — so future PRs can track the
-//! serving trajectory alongside the fig5–fig8 benches. A second
-//! no-batching replay quantifies the dynamic-batching win.
+//! Two protocols in one run:
+//!
+//! 1. **Canonical replay** (unchanged since PR 1): the mixed-fleet
+//!    scenario (vgg_tiny on RP-SLBC + mobilenet_tiny on int8 TinyEngine,
+//!    320 requests, 4 × STM32F746, round-robin) plus a no-batching
+//!    replay quantifying the dynamic-batching win — the long-running
+//!    trend line.
+//! 2. **Scheduler × fleet matrix** (scheduler-refactor PR): the same
+//!    tenant pair under a Zipf-skewed, deadline-classed trace, replayed
+//!    over an all-M7 and an m7:2,m4:2 fleet with each placement policy.
+//!    Emits one JSON `rows` array (throughput, p95, deadline misses per
+//!    cell) and asserts the SLO-aware policy strictly reduces deadline
+//!    misses vs round-robin on the heterogeneous fleet.
 //!
 //! Regenerate with `cargo bench --bench serve_throughput`.
 
 use std::collections::BTreeMap;
 
 use mcu_mixq::ops::Method;
-use mcu_mixq::serve::{self, BatcherCfg, ServeCfg, TraceCfg, Workload};
+use mcu_mixq::serve::{
+    self, BatcherCfg, DeviceCfg, SchedulerKind, ServeCfg, ServeReport, TraceCfg, Workload,
+};
 use mcu_mixq::util::bench::Bench;
 use mcu_mixq::util::json::Json;
 
@@ -36,7 +45,8 @@ fn main() -> mcu_mixq::Result<()> {
 
     println!(
         "serve_throughput — {} requests, {} devices, mixed fleet\n",
-        requests, cfg.devices
+        requests,
+        cfg.fleet.len()
     );
     let report = serve::run_trace(&ws, &trace, &cfg)?;
     println!("{}", report.render());
@@ -57,6 +67,69 @@ fn main() -> mcu_mixq::Result<()> {
         report.makespan_cycles, solo.makespan_cycles
     );
 
+    // ------------------------------------------------------------------
+    // Scheduler × fleet matrix under deadline pressure: Zipf-skewed
+    // tenants, 60% interactive / 25% standard / 15% batch classes, and a
+    // tighter offered gap so queueing actually threatens deadlines.
+    // ------------------------------------------------------------------
+    let slo_trace = serve::synth_trace(
+        &TraceCfg::new(requests, 432_000, 43)
+            .with_skew(1.0)
+            .with_slo([0.60, 0.25, 0.15]),
+        ws.len(),
+    );
+    let fleets: [(&str, Vec<DeviceCfg>); 2] = [
+        ("m7:4", vec![DeviceCfg::stm32f746(); 4]),
+        (
+            "m7:2,m4:2",
+            vec![
+                DeviceCfg::stm32f746(),
+                DeviceCfg::stm32f746(),
+                DeviceCfg::stm32f446(),
+                DeviceCfg::stm32f446(),
+            ],
+        ),
+    ];
+    let mut rows: Vec<Json> = Vec::new();
+    let mut misses: BTreeMap<(String, &'static str), u64> = BTreeMap::new();
+    println!("scheduler x fleet matrix (skewed deadline trace):");
+    for (fleet_name, fleet) in &fleets {
+        for kind in SchedulerKind::ALL {
+            let cell_cfg = ServeCfg {
+                fleet: fleet.clone(),
+                scheduler: kind,
+                ..ServeCfg::default()
+            };
+            let rep: ServeReport = serve::run_trace(&ws, &slo_trace, &cell_cfg)?;
+            println!(
+                "  fleet {:>9}  sched {:>12}  completed {:>3}  throughput {:>7.1} rps  p95 {:>7.2} ms  deadline misses {:>3}",
+                fleet_name,
+                kind.name(),
+                rep.completed,
+                rep.throughput_rps,
+                rep.latency.p95_ms,
+                rep.deadline_misses
+            );
+            misses.insert((fleet_name.to_string(), kind.name()), rep.deadline_misses);
+            let mut row = BTreeMap::new();
+            row.insert("fleet".into(), Json::Str(fleet_name.to_string()));
+            row.insert("sched".into(), Json::Str(kind.name().into()));
+            row.insert("completed".into(), Json::Num(rep.completed as f64));
+            row.insert("throughput_rps".into(), Json::Num(rep.throughput_rps));
+            row.insert("p95_ms".into(), Json::Num(rep.latency.p95_ms));
+            row.insert(
+                "deadline_misses".into(),
+                Json::Num(rep.deadline_misses as f64),
+            );
+            row.insert(
+                "makespan_cycles".into(),
+                Json::Num(rep.makespan_cycles as f64),
+            );
+            rows.push(Json::Obj(row));
+        }
+    }
+    println!();
+
     // Host-side simulation speed (wall clock), for the record.
     let t = Bench::new(0, 3).run("replay", || {
         serve::run_trace(&ws, &trace, &cfg).expect("replay")
@@ -66,7 +139,7 @@ fn main() -> mcu_mixq::Result<()> {
     let mut o = BTreeMap::new();
     o.insert("bench".into(), Json::Str("serve_throughput".into()));
     o.insert("requests".into(), Json::Num(requests as f64));
-    o.insert("devices".into(), Json::Num(cfg.devices as f64));
+    o.insert("devices".into(), Json::Num(cfg.fleet.len() as f64));
     o.insert("completed".into(), Json::Num(report.completed as f64));
     o.insert("throughput_rps".into(), Json::Num(report.throughput_rps));
     o.insert("p50_ms".into(), Json::Num(report.latency.p50_ms));
@@ -79,6 +152,7 @@ fn main() -> mcu_mixq::Result<()> {
     );
     o.insert("batch_speedup".into(), Json::Num(batch_speedup));
     o.insert("sim_wall_ms".into(), Json::Num(t.mean_ns / 1e6));
+    o.insert("rows".into(), Json::Arr(rows));
     println!("{}", Json::Obj(o).to_string_compact());
 
     // Qualitative guards the trajectory must keep.
@@ -106,6 +180,19 @@ fn main() -> mcu_mixq::Result<()> {
         "batched fleet must not do more device work ({} vs {})",
         busy(&report),
         busy(&solo)
+    );
+    // Scheduler-refactor acceptance: on the heterogeneous fleet under
+    // deadline pressure, SLO-aware placement strictly reduces deadline
+    // misses vs round-robin.
+    let rr = misses[&("m7:2,m4:2".to_string(), "round-robin")];
+    let slo = misses[&("m7:2,m4:2".to_string(), "slo-aware")];
+    assert!(
+        rr > 0,
+        "scenario must create deadline pressure under round-robin (rr misses {rr})"
+    );
+    assert!(
+        slo < rr,
+        "slo-aware must strictly reduce deadline misses ({slo} vs {rr})"
     );
     Ok(())
 }

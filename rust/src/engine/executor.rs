@@ -13,6 +13,7 @@ use anyhow::Result;
 use super::KernelCache;
 use crate::mcu::{Counter, CycleModel};
 use crate::models::ModelDesc;
+use crate::ops::slbc::ConvScratch;
 use crate::ops::{common, slbc, Method};
 use crate::quant::{quantize_acts, BitConfig, QWeights};
 
@@ -60,6 +61,26 @@ pub fn infer_with_kernels(
     cycle_model: &CycleModel,
     kernels: Option<&KernelCache>,
 ) -> Result<InferenceResult> {
+    infer_with_kernels_scratch(model, quantized, cfg, method, image, cycle_model, kernels, None)
+}
+
+/// [`infer_with_kernels`] over a caller-owned [`ConvScratch`]: cached
+/// layers reuse the given scratch instead of the global thread-local,
+/// so callers that own their workers (the serving layer) keep pipeline
+/// state private per worker. `None` falls back to the thread-local.
+/// Results are identical either way — the scratch only holds transient
+/// per-layer buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn infer_with_kernels_scratch(
+    model: &ModelDesc,
+    quantized: &[(QWeights, Vec<f32>)],
+    cfg: &BitConfig,
+    method: Method,
+    image: &[f32],
+    cycle_model: &CycleModel,
+    kernels: Option<&KernelCache>,
+    mut scratch: Option<&mut ConvScratch>,
+) -> Result<InferenceResult> {
     anyhow::ensure!(
         image.len() == model.input_hw * model.input_hw * model.input_c,
         "image size {} != model input {}",
@@ -100,7 +121,10 @@ pub fn infer_with_kernels(
                     "cached kernel packed for different bitwidths ({})",
                     l.name
                 );
-                slbc::run_layer_cached(&x, l, lk, &mut ctr)
+                match scratch.as_deref_mut() {
+                    Some(s) => slbc::run_layer_with_scratch(&x, l, lk, &mut ctr, s),
+                    None => slbc::run_layer_cached(&x, l, lk, &mut ctr),
+                }
             }
             None => method.run_layer(&x, &qw.data, l, cfg.wbits[i], in_bits, &mut ctr),
         };
@@ -290,6 +314,34 @@ mod tests {
             slbc.cycles,
             naive.cycles
         );
+    }
+
+    #[test]
+    fn caller_owned_scratch_matches_thread_local() {
+        let m = vgg_tiny(10, 16);
+        let (q, cfg) = setup(&m, 4, 9);
+        let kernels = KernelCache::build(&m, &q, &cfg, Method::RpSlbc);
+        let img = vec![0.35f32; 16 * 16 * 3];
+        let cm = CycleModel::cortex_m7();
+        let via_tls =
+            infer_with_kernels(&m, &q, &cfg, Method::RpSlbc, &img, &cm, Some(&kernels)).unwrap();
+        let mut scratch = ConvScratch::new();
+        for _ in 0..2 {
+            let via_own = infer_with_kernels_scratch(
+                &m,
+                &q,
+                &cfg,
+                Method::RpSlbc,
+                &img,
+                &cm,
+                Some(&kernels),
+                Some(&mut scratch),
+            )
+            .unwrap();
+            assert_eq!(via_own.logits, via_tls.logits);
+            assert_eq!(via_own.cycles, via_tls.cycles);
+            assert_eq!(via_own.counter, via_tls.counter);
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub mod planner;
 pub use codegen::{CodegenPlan, KernelChoice};
 pub use executor::{
     infer, infer_batch, infer_batch_detailed, infer_batch_with_kernels, infer_with_kernels,
-    InferenceResult,
+    infer_with_kernels_scratch, InferenceResult,
 };
 pub use flash::FlashImage;
 pub use graph::{Graph, Node, NodeOp, TensorInfo};
@@ -252,6 +252,28 @@ impl CompiledModel {
             image,
             &self.cycle_model,
             Some(&self.kernels),
+        )
+    }
+
+    /// [`run`](CompiledModel::run) with a caller-owned
+    /// [`ConvScratch`](crate::ops::slbc::ConvScratch) instead of the
+    /// global thread-local — what serve workers use so concurrent fleet
+    /// simulations never share pipeline state. Bit- and cycle-identical
+    /// to [`run`](CompiledModel::run).
+    pub fn run_with_scratch(
+        &self,
+        image: &[f32],
+        scratch: &mut crate::ops::slbc::ConvScratch,
+    ) -> Result<InferenceResult> {
+        executor::infer_with_kernels_scratch(
+            &self.model,
+            &self.quantized,
+            &self.cfg,
+            self.method,
+            image,
+            &self.cycle_model,
+            Some(&self.kernels),
+            Some(scratch),
         )
     }
 

@@ -25,12 +25,14 @@
 //! 4. **Serving layer** — the production-scale pillar on top of the
 //!    engine's compile/run split ([`engine::CompiledModel`]): a
 //!    multi-tenant model registry with a compile-once LRU artifact cache
-//!    ([`serve::registry`]), a pool of simulated Cortex-M7 devices
-//!    ([`serve::fleet`]), dynamic batching with admission control
-//!    ([`serve::batcher`]) and virtual-time latency/throughput reporting
-//!    ([`serve::stats`]) — driven by the `serve` / `bench-serve` CLI
-//!    subcommands over deterministic synthetic traces
-//!    ([`serve::trace`]).
+//!    and cross-tenant weight sharing ([`serve::registry`]), a
+//!    heterogeneous pool of simulated M7/M4-class devices
+//!    ([`serve::fleet`]) under pluggable SLO-aware scheduling policies
+//!    ([`serve::sched`]), dynamic batching with admission control
+//!    ([`serve::batcher`]) and virtual-time latency/throughput/deadline
+//!    reporting ([`serve::stats`]) — driven by the `serve` /
+//!    `bench-serve` CLI subcommands over deterministic synthetic or
+//!    file-recorded traces ([`serve::trace`]).
 //!
 //! ## Three-layer architecture
 //!
@@ -70,8 +72,20 @@ pub const STM32F746_SRAM_BYTES: usize = 320 * 1024;
 /// STM32F746 flash capacity in bytes (1 MB).
 pub const STM32F746_FLASH_BYTES: usize = 1024 * 1024;
 
+/// STM32F446 (Cortex-M4 class, the heterogeneous-fleet companion part)
+/// clock frequency in Hz.
+pub const STM32F446_CLOCK_HZ: u64 = 180_000_000;
+
+/// STM32F446 SRAM capacity in bytes (128 KB).
+pub const STM32F446_SRAM_BYTES: usize = 128 * 1024;
+
+/// STM32F446 flash capacity in bytes (512 KB).
+pub const STM32F446_FLASH_BYTES: usize = 512 * 1024;
+
 /// Convert a cycle count on the simulated Cortex-M7 into milliseconds at the
-/// paper's 216 MHz clock.
+/// paper's 216 MHz clock. This is also the conversion for the serving
+/// layer's virtual timeline, which is denominated in 216 MHz reference
+/// cycles regardless of each device's own clock.
 pub fn cycles_to_ms(cycles: u64) -> f64 {
     cycles as f64 / STM32F746_CLOCK_HZ as f64 * 1e3
 }

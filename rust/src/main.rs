@@ -26,7 +26,7 @@ use mcu_mixq::ops::Method;
 use mcu_mixq::perf::{calibrate_alpha_beta, PerfModel};
 use mcu_mixq::quant::BitConfig;
 use mcu_mixq::runtime::{lit, ArtifactStore, Runtime};
-use mcu_mixq::serve::{self, ServeCfg, ServeReport, TraceCfg, Workload};
+use mcu_mixq::serve::{self, DeviceCfg, SchedulerKind, ServeCfg, ServeReport, TraceCfg, Workload};
 use mcu_mixq::util::bench::Table;
 use mcu_mixq::util::cli::Args;
 use mcu_mixq::Result;
@@ -82,12 +82,17 @@ fn print_help() {
          \x20          [--method rp-slbc] [--bits 4]\n\
          \x20 serve                         replay a request trace on an MCU fleet\n\
          \x20          [--mix backbone:method:bits[:weight],...]\n\
+         \x20          [--fleet m7:4,m4:4] [--sched rr|least|slo]\n\
          \x20          [--requests N] [--devices N] [--mean-gap-ms F]\n\
+         \x20          [--skew F] [--slo-mix I,S,B]\n\
+         \x20          [--trace-file IN.json] [--dump-trace OUT.json]\n\
          \x20          [--batch N] [--wait-ms F] [--queue N] [--depth N]\n\
          \x20          [--cache N] [--seed S] [--json]\n\
          \x20 bench-serve                   fixed-protocol serving benchmark:\n\
          \x20                               >=200-request mixed trace, >=4 devices,\n\
          \x20                               prints tables + one JSON summary line\n\
+         \x20                               (same fleet/sched/trace flags as serve,\n\
+         \x20                               plus [--out FILE] for the JSON line)\n\
          \x20 bench-conv                    conv hot-path benchmark (rolling-row\n\
          \x20                               pipeline vs pre-PR operator):\n\
          \x20                               [--smoke] [--repeats N] [--out FILE]\n\
@@ -331,8 +336,44 @@ fn parse_mix(spec: &str) -> Result<(Vec<Workload>, Vec<f64>)> {
     Ok((workloads, weights))
 }
 
-/// Shared serve/bench-serve scenario runner: build the mix + trace from
-/// args (with per-command defaults), replay, print the report tables.
+/// Parse a `--fleet` spec: comma-separated `class[:count]` entries with
+/// class one of `m7`/`stm32f746` or `m4`/`stm32f446`, e.g. `m7:4,m4:4`.
+fn parse_fleet(spec: &str) -> Result<Vec<DeviceCfg>> {
+    let mut fleet = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (class, count) = match entry.split_once(':') {
+            Some((c, n)) => (c, n.trim().parse::<usize>()?),
+            None => (entry, 1),
+        };
+        let cfg = DeviceCfg::parse_class(class)
+            .ok_or_else(|| anyhow::anyhow!("unknown device class `{class}` in fleet spec"))?;
+        anyhow::ensure!(count >= 1, "device count must be >= 1 in `{entry}`");
+        fleet.extend(std::iter::repeat(cfg).take(count));
+    }
+    anyhow::ensure!(!fleet.is_empty(), "fleet spec `{spec}` names no devices");
+    Ok(fleet)
+}
+
+/// Parse a `--slo-mix` spec: three comma-separated weights for the
+/// interactive, standard and batch deadline classes.
+fn parse_slo_mix(spec: &str) -> Result<Vec<f64>> {
+    let v: Vec<f64> = spec
+        .split(',')
+        .map(|t| t.trim().parse::<f64>())
+        .collect::<std::result::Result<_, _>>()?;
+    anyhow::ensure!(v.len() == 3, "--slo-mix wants interactive,standard,batch weights");
+    anyhow::ensure!(v.iter().all(|w| *w >= 0.0) && v.iter().sum::<f64>() > 0.0,
+        "--slo-mix weights must be non-negative and not all zero");
+    Ok(v)
+}
+
+/// Shared serve/bench-serve scenario runner: build the mix + fleet +
+/// scheduler + trace from args (with per-command defaults), replay,
+/// print the report tables.
 fn run_serve_scenario(
     args: &Args,
     default_requests: usize,
@@ -341,16 +382,14 @@ fn run_serve_scenario(
     let mix = args.str_or("mix", "vgg_tiny:rp-slbc:4,mobilenet_tiny:tinyengine:8");
     let (workloads, weights) = parse_mix(&mix)?;
 
-    let requests = args.usize_or("requests", default_requests);
-    let mean_gap_ms = args.f32_or("mean-gap-ms", 5.0) as f64;
-    let mean_gap_cycles =
-        (mean_gap_ms * mcu_mixq::STM32F746_CLOCK_HZ as f64 / 1e3).max(1.0) as u64;
-    let mut tcfg = TraceCfg::new(requests, mean_gap_cycles, args.u64_or("seed", 42));
-    tcfg.weights = weights;
-    let trace = serve::synth_trace(&tcfg, workloads.len());
-
     let mut cfg = ServeCfg::default();
-    cfg.devices = args.usize_or("devices", default_devices);
+    cfg.fleet = match args.get("fleet") {
+        Some(spec) => parse_fleet(spec)?,
+        None => vec![DeviceCfg::stm32f746(); args.usize_or("devices", default_devices)],
+    };
+    let sched_spec = args.str_or("sched", "rr");
+    cfg.scheduler = SchedulerKind::parse(&sched_spec)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheduler `{sched_spec}` (rr|least|slo)"))?;
     cfg.max_queue_depth = args.usize_or("depth", cfg.max_queue_depth);
     cfg.cache_capacity = args.usize_or("cache", cfg.cache_capacity);
     cfg.batcher.max_batch = args.usize_or("batch", cfg.batcher.max_batch);
@@ -359,12 +398,54 @@ fn run_serve_scenario(
         (wait_ms * mcu_mixq::STM32F746_CLOCK_HZ as f64 / 1e3).max(1.0) as u64;
     cfg.batcher.max_queue = args.usize_or("queue", cfg.batcher.max_queue);
 
+    let trace = match args.get("trace-file") {
+        Some(path) => {
+            let t = serve::load_trace(path)?;
+            println!("replaying {} recorded request(s) from {path}", t.len());
+            t
+        }
+        None => {
+            let requests = args.usize_or("requests", default_requests);
+            let mean_gap_ms = args.f32_or("mean-gap-ms", 5.0) as f64;
+            let mean_gap_cycles =
+                (mean_gap_ms * mcu_mixq::STM32F746_CLOCK_HZ as f64 / 1e3).max(1.0) as u64;
+            let mut tcfg = TraceCfg::new(requests, mean_gap_cycles, args.u64_or("seed", 42));
+            let skew = args.f32_or("skew", 0.0) as f64;
+            if skew > 0.0 {
+                // Zipf skew generates the tenant weights itself, so it
+                // cannot be combined with explicit per-entry weights.
+                anyhow::ensure!(
+                    weights.iter().all(|w| *w == 1.0),
+                    "--skew conflicts with explicit :weight entries in --mix"
+                );
+                tcfg.tenant_skew = skew;
+            } else {
+                tcfg.weights = weights;
+            }
+            if let Some(slo) = args.get("slo-mix") {
+                tcfg.slo_weights = parse_slo_mix(slo)?;
+            }
+            serve::synth_trace(&tcfg, workloads.len())
+        }
+    };
+    if let Some(path) = args.get("dump-trace") {
+        serve::save_trace(path, &trace)?;
+        println!("wrote {} request(s) to {path}", trace.len());
+    }
+
+    let m4s = cfg
+        .fleet
+        .iter()
+        .filter(|d| d.class == serve::DeviceClass::M4)
+        .count();
     println!(
-        "serving {} model(s) on {} device(s): {} requests, mean gap {:.2}ms, batch<= {}, wait {:.2}ms\n",
+        "serving {} model(s) on {} device(s) ({} m7 + {} m4, {} scheduler): {} requests, batch<= {}, wait {:.2}ms\n",
         workloads.len(),
-        cfg.devices,
-        requests,
-        mean_gap_ms,
+        cfg.fleet.len(),
+        cfg.fleet.len() - m4s,
+        m4s,
+        cfg.scheduler.name(),
+        trace.len(),
         cfg.batcher.max_batch,
         wait_ms
     );
@@ -383,7 +464,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_bench_serve(args: &Args) -> Result<()> {
     let report = run_serve_scenario(args, 256, 4)?;
-    println!("{}", report.to_json().to_string_compact());
+    let json = report.to_json().to_string_compact();
+    println!("{json}");
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{json}\n"))?;
+        println!("wrote {path}");
+    }
 
     // Fixed-protocol guarantees (this process is single-threaded, so the
     // global compile counter is exact here).

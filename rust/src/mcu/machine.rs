@@ -39,6 +39,14 @@ impl Machine {
         Machine::new(Memory::stm32f746(), CycleModel::cortex_m7())
     }
 
+    /// Machine with STM32F446 memory and the M4 cycle table — the
+    /// slower, smaller device class of heterogeneous fleet simulations
+    /// (same ISA subset; long multiplies cost more, and the part runs at
+    /// 180 MHz with 128 KB SRAM).
+    pub fn stm32f446() -> Self {
+        Machine::new(Memory::stm32f446(), CycleModel::cortex_m4())
+    }
+
     pub fn new(mem: Memory, model: CycleModel) -> Self {
         Machine {
             regs: [0; 16],
@@ -455,6 +463,26 @@ mod tests {
         m.run(10).unwrap();
         let v = ((m.get(R3) as u64) << 32) | m.get(R0) as u64;
         assert_eq!(v, 0xFFFF_FFFFu64 * 2 * 2);
+    }
+
+    #[test]
+    fn m4_machine_is_bit_exact_but_slower_on_long_multiplies() {
+        let prog = vec![
+            Instr::Mov(R1, Op2::Imm(7)),
+            Instr::Mov(R2, Op2::Imm(9)),
+            Instr::Umull(R0, R3, R1, R2),
+            Instr::Halt,
+        ];
+        let mut m7 = Machine::stm32f746();
+        m7.load_program(prog.clone());
+        m7.run(10).unwrap();
+        let mut m4 = Machine::stm32f446();
+        m4.load_program(prog);
+        m4.run(10).unwrap();
+        assert_eq!(m7.get(R0), 63);
+        assert_eq!(m4.get(R0), 63, "device classes stay bit-exact");
+        assert!(m4.cycles() > m7.cycles(), "M4 long multiplies cost more");
+        assert!(m4.mem.sram_len() < m7.mem.sram_len(), "M4 part has less SRAM");
     }
 
     #[test]

@@ -30,6 +30,12 @@ impl Memory {
         Memory::with_sizes(crate::STM32F746_FLASH_BYTES, crate::STM32F746_SRAM_BYTES)
     }
 
+    /// Memory with the M4-class companion part's sizes (512 KB flash,
+    /// 128 KB SRAM) used by heterogeneous-fleet simulation.
+    pub fn stm32f446() -> Self {
+        Memory::with_sizes(crate::STM32F446_FLASH_BYTES, crate::STM32F446_SRAM_BYTES)
+    }
+
     pub fn with_sizes(flash_bytes: usize, sram_bytes: usize) -> Self {
         Memory {
             flash: vec![0; flash_bytes],

@@ -50,6 +50,10 @@ pub struct PendingRequest {
     pub key_idx: usize,
     /// Arrival cycle.
     pub arrival: u64,
+    /// Scheduling priority (higher = more urgent; 0 = best effort).
+    pub priority: u8,
+    /// Absolute SLO deadline (timeline cycles; `u64::MAX` = none).
+    pub deadline: u64,
     /// Input image (NHWC flat).
     pub image: Vec<f32>,
 }
@@ -61,6 +65,14 @@ pub struct ReadyBatch {
     /// Virtual cycle the flush condition held.
     pub ready: u64,
     pub requests: Vec<PendingRequest>,
+}
+
+impl ReadyBatch {
+    /// Batch priority: the most urgent member's class (dispatch ordering
+    /// breaks same-ready ties in favor of higher priority).
+    pub fn priority(&self) -> u8 {
+        self.requests.iter().map(|r| r.priority).max().unwrap_or(0)
+    }
 }
 
 /// The per-model waiting queues.
@@ -172,8 +184,23 @@ mod tests {
             id,
             key_idx,
             arrival,
+            priority: 0,
+            deadline: u64::MAX,
             image: Vec::new(),
         }
+    }
+
+    #[test]
+    fn batch_priority_is_the_most_urgent_member() {
+        let mut b = Batcher::new(cfg(4, 1000, 16), 1);
+        b.offer(req(0, 0, 1));
+        b.offer(PendingRequest {
+            priority: 2,
+            ..req(1, 0, 2)
+        });
+        let due = b.drain_all();
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].priority(), 2);
     }
 
     fn cfg(max_batch: usize, max_wait: u64, max_queue: usize) -> BatcherCfg {
@@ -230,6 +257,64 @@ mod tests {
         assert!(!b.offer(req(2, 0, 3)), "third concurrent request is shed");
         assert_eq!(b.shed, 1);
         assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn shed_starts_exactly_at_max_queue() {
+        // The bound is inclusive: request `max_queue` is admitted,
+        // request `max_queue + 1` is shed, and a flush reopens capacity.
+        let mut b = Batcher::new(cfg(8, 1_000_000, 3), 2);
+        assert!(b.offer(req(0, 0, 0)));
+        assert!(b.offer(req(1, 1, 0)));
+        assert!(b.offer(req(2, 0, 0)), "bound counts the whole queue, not one key");
+        assert!(!b.offer(req(3, 1, 0)));
+        assert_eq!((b.queued(), b.shed), (3, 1));
+        // Draining key 0 frees two slots; admissions resume.
+        let due = b.drain_all();
+        assert_eq!(due.iter().map(|d| d.requests.len()).sum::<usize>(), 3);
+        assert!(b.offer(req(4, 0, 10)));
+        assert_eq!(b.shed, 1, "shed count is cumulative, not reset by drain");
+    }
+
+    #[test]
+    fn flush_on_full_precedes_deadline_flush_of_younger_requests() {
+        // Key 0 fills (flush-on-full, ready = filling arrival); key 1's
+        // lone older request must still flush at its own deadline, not
+        // ride along early. pop_due returns both; ready times order them.
+        let mut b = Batcher::new(cfg(2, 1000, 16), 2);
+        b.offer(req(0, 1, 5)); // oldest overall, alone on key 1
+        b.offer(req(1, 0, 600));
+        b.offer(req(2, 0, 900)); // fills key 0
+        let due = b.pop_due(1100);
+        assert_eq!(due.len(), 2);
+        let full = due.iter().find(|d| d.key_idx == 0).unwrap();
+        let expired = due.iter().find(|d| d.key_idx == 1).unwrap();
+        assert_eq!(full.ready, 900, "full batch ready at the filling arrival");
+        assert_eq!(expired.ready, 5 + 1000, "partial batch ready at its deadline");
+        // The full batch became ready before the older request's window
+        // closed — downstream ready-time ordering places it first.
+        assert!(full.ready < expired.ready);
+    }
+
+    #[test]
+    fn zero_wait_window_flushes_every_arrival_alone() {
+        // max_wait_cycles = 0 degenerates to no batching: each arrival's
+        // window has already expired by its own arrival cycle.
+        let mut b = Batcher::new(cfg(8, 0, 16), 1);
+        b.offer(req(0, 0, 100));
+        let due = b.pop_due(100);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].requests.len(), 1);
+        assert_eq!(due[0].ready, 100, "zero-wait batch is ready on arrival");
+        b.offer(req(1, 0, 100));
+        b.offer(req(2, 0, 101));
+        // Both pending windows are expired at t=101; they flush as one
+        // batch per pop (queue order preserved).
+        let due = b.pop_due(101);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].requests.len(), 2);
+        assert_eq!(due[0].ready, 100);
+        assert_eq!(b.queued(), 0);
     }
 
     #[test]

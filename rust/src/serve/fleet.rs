@@ -1,20 +1,53 @@
-//! A pool of simulated MCU devices executing batches in virtual time.
+//! A heterogeneous pool of simulated MCU devices executing batches in
+//! virtual time.
 //!
-//! Every device is a serial Cortex-M7-class executor with its own SRAM
-//! budget, cumulative instruction [`Counter`] and a virtual-time timeline
-//! (`busy_until`, in cycles). The fleet schedules round-robin across
-//! devices, skipping devices whose model doesn't fit in SRAM, and applies
-//! backpressure when every eligible device already holds
-//! `max_queue_depth` unfinished batches: the dispatch is delayed (in
-//! virtual time) until a slot frees, never reordered.
+//! Every device is a serial executor with its own SRAM budget, clock,
+//! per-class [`CycleModel`], cumulative instruction [`Counter`] and a
+//! virtual-time timeline (`busy_until`). The timeline is denominated in
+//! **reference cycles** of the paper platform's 216 MHz Cortex-M7 clock:
+//! a batch that costs `c` cycles *on its device's cycle model* occupies
+//! `c · 216 MHz / device clock` reference cycles of the shared timeline,
+//! so latencies from M4- and M7-class devices are directly comparable
+//! (and an all-M7 fleet reproduces the homogeneous timeline bit-for-bit).
+//!
+//! Placement policy lives outside the fleet: a
+//! [`Scheduler`](super::sched::Scheduler) picks the device, the fleet
+//! [`commit`](Fleet::commit)s the batch and keeps the accounting. The
+//! fleet still owns backpressure mechanics ([`Fleet::next_wake`]): when
+//! every eligible device is at the queue-depth cap, virtual time advances
+//! to the earliest in-flight completion and placement retries — delayed,
+//! never reordered.
 
-use crate::mcu::Counter;
+use super::batcher::BATCH_OVERHEAD_CYCLES;
+use crate::mcu::{Counter, CycleModel};
+
+/// Device class label (reporting + fleet-spec parsing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    /// Cortex-M7 class (STM32F746 profile).
+    M7,
+    /// Cortex-M4 class (STM32F446 profile).
+    M4,
+}
+
+impl DeviceClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceClass::M7 => "m7",
+            DeviceClass::M4 => "m4",
+        }
+    }
+}
 
 /// Hardware parameters of one simulated device.
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceCfg {
+    pub class: DeviceClass,
     pub sram_bytes: usize,
     pub clock_hz: u64,
+    /// Per-class instruction costs of this device — batch costs are
+    /// priced with the *target* device's table, not a global one.
+    pub cycle_model: CycleModel,
 }
 
 impl Default for DeviceCfg {
@@ -24,13 +57,79 @@ impl Default for DeviceCfg {
 }
 
 impl DeviceCfg {
-    /// The paper's evaluation platform (320 KB SRAM, 216 MHz).
+    /// The paper's evaluation platform (Cortex-M7, 320 KB SRAM, 216 MHz).
     pub fn stm32f746() -> DeviceCfg {
         DeviceCfg {
+            class: DeviceClass::M7,
             sram_bytes: crate::STM32F746_SRAM_BYTES,
             clock_hz: crate::STM32F746_CLOCK_HZ,
+            cycle_model: CycleModel::cortex_m7(),
         }
     }
+
+    /// An STM32F446-class companion part (Cortex-M4, 128 KB SRAM,
+    /// 180 MHz, 4-cycle long multiplies) — the "just enough data width"
+    /// end of a heterogeneous extreme-edge fleet.
+    pub fn stm32f446() -> DeviceCfg {
+        DeviceCfg {
+            class: DeviceClass::M4,
+            sram_bytes: crate::STM32F446_SRAM_BYTES,
+            clock_hz: crate::STM32F446_CLOCK_HZ,
+            cycle_model: CycleModel::cortex_m4(),
+        }
+    }
+
+    /// Parse a single fleet-spec class token (`m7`, `m4`, or the full
+    /// part names).
+    pub fn parse_class(s: &str) -> Option<DeviceCfg> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "m7" | "stm32f746" => Some(DeviceCfg::stm32f746()),
+            "m4" | "stm32f446" => Some(DeviceCfg::stm32f446()),
+            _ => None,
+        }
+    }
+
+    /// Cycles one batch costs *on this device*: the per-invocation
+    /// overhead plus the instruction histogram priced by this device's
+    /// cycle table.
+    pub fn batch_cycles(&self, ctr: &Counter) -> u64 {
+        BATCH_OVERHEAD_CYCLES + ctr.cycles(&self.cycle_model)
+    }
+
+    /// Convert device cycles to shared-timeline reference cycles
+    /// (216 MHz), rounding up so slower clocks never under-account. The
+    /// reference-clock device maps identically, which is what keeps an
+    /// all-M7 fleet bit-compatible with the homogeneous timeline.
+    pub fn to_timeline(&self, device_cycles: u64) -> u64 {
+        if self.clock_hz == crate::STM32F746_CLOCK_HZ {
+            return device_cycles;
+        }
+        let num = device_cycles as u128 * crate::STM32F746_CLOCK_HZ as u128;
+        num.div_ceil(self.clock_hz as u128) as u64
+    }
+
+    /// Shared-timeline cost of one batch on this device.
+    pub fn timeline_cost(&self, ctr: &Counter) -> u64 {
+        self.to_timeline(self.batch_cycles(ctr))
+    }
+}
+
+/// One flushed batch from the scheduler's point of view: everything a
+/// placement policy may consult, with the execution work already
+/// summarized as an instruction histogram (so each candidate device can
+/// price it with its own cycle model).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchWork<'a> {
+    /// Virtual cycle the batch became ready.
+    pub ready: u64,
+    /// Merged instruction histogram of every member inference.
+    pub counter: &'a Counter,
+    /// Activation-arena peak of the batch's model (bytes).
+    pub peak_sram: usize,
+    /// Member count (images).
+    pub images: u64,
+    /// Absolute member deadlines (timeline cycles; `u64::MAX` = none).
+    pub deadlines: &'a [u64],
 }
 
 /// One simulated device and its accounting.
@@ -38,14 +137,14 @@ impl DeviceCfg {
 pub struct Device {
     pub id: usize,
     pub cfg: DeviceCfg,
-    /// Virtual cycle at which the device has drained everything
+    /// Virtual timeline cycle at which the device has drained everything
     /// dispatched to it so far.
     pub busy_until: u64,
     /// Finish times of dispatched batches (pruned lazily).
     inflight: Vec<u64>,
     /// Cumulative instruction histogram of everything run here.
     pub counter: Counter,
-    /// Total busy cycles (sum of dispatched batch costs).
+    /// Total busy timeline cycles (sum of dispatched batch costs).
     pub busy_cycles: u64,
     pub batches: u64,
     pub images: u64,
@@ -89,28 +188,40 @@ impl Device {
 #[derive(Debug, Clone, Copy)]
 pub struct Dispatch {
     pub device: usize,
-    /// Virtual cycle execution began (>= ready time).
+    /// Virtual timeline cycle execution began (>= ready time).
     pub start: u64,
-    /// Virtual cycle the batch completed.
+    /// Virtual timeline cycle the batch completed.
     pub finish: u64,
+    /// Cost in the target device's own cycles.
+    pub device_cycles: u64,
+    /// Cost in shared-timeline reference cycles.
+    pub timeline_cycles: u64,
 }
 
-/// The device pool plus the round-robin cursor.
+/// The heterogeneous device pool (mechanics only — policy is a
+/// [`Scheduler`](super::sched::Scheduler)).
 pub struct Fleet {
     pub devices: Vec<Device>,
-    rr_next: usize,
     pub max_queue_depth: usize,
 }
 
 impl Fleet {
-    pub fn new(n: usize, cfg: DeviceCfg, max_queue_depth: usize) -> Fleet {
-        assert!(n >= 1, "fleet needs at least one device");
+    pub fn new(cfgs: Vec<DeviceCfg>, max_queue_depth: usize) -> Fleet {
+        assert!(!cfgs.is_empty(), "fleet needs at least one device");
         assert!(max_queue_depth >= 1, "queue depth cap must be >= 1");
         Fleet {
-            devices: (0..n).map(|i| Device::new(i, cfg)).collect(),
-            rr_next: 0,
+            devices: cfgs
+                .into_iter()
+                .enumerate()
+                .map(|(i, cfg)| Device::new(i, cfg))
+                .collect(),
             max_queue_depth,
         }
+    }
+
+    /// A fleet of `n` identical devices.
+    pub fn homogeneous(n: usize, cfg: DeviceCfg, max_queue_depth: usize) -> Fleet {
+        Fleet::new(vec![cfg; n], max_queue_depth)
     }
 
     pub fn len(&self) -> usize {
@@ -127,62 +238,48 @@ impl Fleet {
         self.devices.iter().any(|d| peak_sram <= d.cfg.sram_bytes)
     }
 
-    /// Dispatch a batch that becomes ready at `ready` and costs
-    /// `cost_cycles`, round-robin over devices with enough SRAM. When all
-    /// eligible devices are at the queue-depth cap, virtual time advances
-    /// to the earliest in-flight completion and scheduling retries —
-    /// backpressure, not reordering.
-    ///
-    /// Returns `None` only when no device's SRAM fits the model (callers
-    /// should have rejected such requests at admission).
-    pub fn dispatch(
-        &mut self,
-        ready: u64,
-        cost_cycles: u64,
-        peak_sram: usize,
-        images: u64,
-        counter: &Counter,
-    ) -> Option<Dispatch> {
-        if !self.fits_anywhere(peak_sram) {
-            return None;
-        }
-        let n = self.devices.len();
-        let mut now = ready;
-        loop {
-            for off in 0..n {
-                let idx = (self.rr_next + off) % n;
-                let d = &mut self.devices[idx];
-                if peak_sram > d.cfg.sram_bytes {
-                    continue;
-                }
-                if d.queue_depth(now) >= self.max_queue_depth {
-                    continue;
-                }
-                self.rr_next = (idx + 1) % n;
-                let start = now.max(d.busy_until);
-                let finish = start + cost_cycles;
-                d.busy_until = finish;
-                d.inflight.retain(|&f| f > now);
-                d.inflight.push(finish);
-                d.counter.merge(counter);
-                d.busy_cycles += cost_cycles;
-                d.batches += 1;
-                d.images += images;
-                return Some(Dispatch {
-                    device: idx,
-                    start,
-                    finish,
-                });
-            }
-            // Everyone eligible is saturated: wait for the earliest
-            // completion among devices that could host this model.
-            let wake = self
-                .devices
-                .iter()
-                .filter(|d| peak_sram <= d.cfg.sram_bytes)
-                .filter_map(|d| d.next_free(now))
-                .min()?;
-            now = wake;
+    /// Is device `idx` placeable at `now`: enough SRAM and below the
+    /// queue-depth cap. The eligibility contract every scheduler's
+    /// `pick` must respect.
+    pub fn eligible(&self, idx: usize, now: u64, peak_sram: usize) -> bool {
+        let d = &self.devices[idx];
+        peak_sram <= d.cfg.sram_bytes && d.queue_depth(now) < self.max_queue_depth
+    }
+
+    /// Earliest in-flight completion strictly after `now` among devices
+    /// whose SRAM could host the model — where backpressure resumes when
+    /// every eligible device is saturated.
+    pub fn next_wake(&self, now: u64, peak_sram: usize) -> Option<u64> {
+        self.devices
+            .iter()
+            .filter(|d| peak_sram <= d.cfg.sram_bytes)
+            .filter_map(|d| d.next_free(now))
+            .min()
+    }
+
+    /// Commit `work` to device `idx` at virtual time `now` (chosen by a
+    /// scheduler), updating the device timeline and accounting. `now`
+    /// must satisfy [`eligible`](Fleet::eligible).
+    pub fn commit(&mut self, idx: usize, now: u64, work: &BatchWork) -> Dispatch {
+        let d = &mut self.devices[idx];
+        debug_assert!(work.peak_sram <= d.cfg.sram_bytes, "scheduler placed an oversized model");
+        let device_cycles = d.cfg.batch_cycles(work.counter);
+        let timeline_cycles = d.cfg.to_timeline(device_cycles);
+        let start = now.max(d.busy_until);
+        let finish = start + timeline_cycles;
+        d.busy_until = finish;
+        d.inflight.retain(|&f| f > now);
+        d.inflight.push(finish);
+        d.counter.merge(work.counter);
+        d.busy_cycles += timeline_cycles;
+        d.batches += 1;
+        d.images += work.images;
+        Dispatch {
+            device: idx,
+            start,
+            finish,
+            device_cycles,
+            timeline_cycles,
         }
     }
 }
@@ -190,73 +287,111 @@ impl Fleet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mcu::InstrClass;
 
     fn cheap_counter() -> Counter {
         let mut c = Counter::new();
-        c.charge(crate::mcu::InstrClass::Alu, 10);
+        c.charge(InstrClass::Alu, 10);
         c
     }
 
+    fn work<'a>(ready: u64, ctr: &'a Counter, deadlines: &'a [u64]) -> BatchWork<'a> {
+        BatchWork {
+            ready,
+            counter: ctr,
+            peak_sram: 1024,
+            images: 1,
+            deadlines,
+        }
+    }
+
     #[test]
-    fn round_robin_spreads_batches() {
-        let mut fleet = Fleet::new(3, DeviceCfg::stm32f746(), 4);
-        for _ in 0..6 {
-            fleet.dispatch(0, 1000, 1024, 1, &cheap_counter()).unwrap();
-        }
-        for d in &fleet.devices {
-            assert_eq!(d.batches, 2, "device {} load", d.id);
-        }
+    fn m7_timeline_is_identity() {
+        let cfg = DeviceCfg::stm32f746();
+        assert_eq!(cfg.to_timeline(12_345), 12_345);
+        let ctr = cheap_counter();
+        assert_eq!(cfg.batch_cycles(&ctr), BATCH_OVERHEAD_CYCLES + 10);
+        assert_eq!(cfg.timeline_cost(&ctr), BATCH_OVERHEAD_CYCLES + 10);
+    }
+
+    #[test]
+    fn m4_is_strictly_slower_on_the_shared_timeline() {
+        let m7 = DeviceCfg::stm32f746();
+        let m4 = DeviceCfg::stm32f446();
+        // Same ALU-only histogram: identical device cycles, but the
+        // slower clock stretches the timeline cost.
+        let ctr = cheap_counter();
+        assert_eq!(m4.batch_cycles(&ctr), m7.batch_cycles(&ctr));
+        assert!(m4.timeline_cost(&ctr) > m7.timeline_cost(&ctr));
+        // Long multiplies additionally cost more device cycles on M4.
+        let mut heavy = Counter::new();
+        heavy.charge(InstrClass::MulLong, 100);
+        assert!(m4.batch_cycles(&heavy) > m7.batch_cycles(&heavy));
+    }
+
+    #[test]
+    fn timeline_conversion_rounds_up() {
+        let m4 = DeviceCfg::stm32f446();
+        // 1 device cycle at 180 MHz is 1.2 reference cycles -> 2.
+        assert_eq!(m4.to_timeline(1), 2);
+        // 5 device cycles is exactly 6 reference cycles.
+        assert_eq!(m4.to_timeline(5), 6);
+        assert_eq!(m4.to_timeline(0), 0);
+    }
+
+    #[test]
+    fn parse_class_accepts_aliases() {
+        assert_eq!(DeviceCfg::parse_class("m7").unwrap().class, DeviceClass::M7);
+        assert_eq!(DeviceCfg::parse_class("STM32F446").unwrap().class, DeviceClass::M4);
+        assert!(DeviceCfg::parse_class("m33").is_none());
     }
 
     #[test]
     fn serial_device_queues_in_virtual_time() {
-        let mut fleet = Fleet::new(1, DeviceCfg::stm32f746(), 8);
-        let a = fleet.dispatch(0, 500, 1024, 1, &cheap_counter()).unwrap();
-        let b = fleet.dispatch(0, 500, 1024, 1, &cheap_counter()).unwrap();
-        assert_eq!(a.finish, 500);
-        assert_eq!(b.start, 500, "second batch waits for the first");
-        assert_eq!(b.finish, 1000);
-        assert_eq!(fleet.devices[0].queue_depth(250), 2);
-        assert_eq!(fleet.devices[0].queue_depth(750), 1);
-        assert_eq!(fleet.devices[0].queue_depth(1000), 0);
+        let mut fleet = Fleet::homogeneous(1, DeviceCfg::stm32f746(), 8);
+        let ctr = cheap_counter();
+        let cost = DeviceCfg::stm32f746().timeline_cost(&ctr);
+        let a = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        let b = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        assert_eq!(a.finish, cost);
+        assert_eq!(b.start, cost, "second batch waits for the first");
+        assert_eq!(b.finish, 2 * cost);
+        assert_eq!(fleet.devices[0].queue_depth(cost / 2), 2);
+        assert_eq!(fleet.devices[0].queue_depth(cost + 1), 1);
+        assert_eq!(fleet.devices[0].queue_depth(2 * cost), 0);
     }
 
     #[test]
-    fn backpressure_delays_when_depth_capped() {
-        let mut fleet = Fleet::new(1, DeviceCfg::stm32f746(), 2);
-        fleet.dispatch(0, 100, 1024, 1, &cheap_counter()).unwrap();
-        fleet.dispatch(0, 100, 1024, 1, &cheap_counter()).unwrap();
-        // Depth cap reached at t=0; the third batch must wait until the
-        // first finishes (t=100) before it may even enqueue.
-        let c = fleet.dispatch(0, 100, 1024, 1, &cheap_counter()).unwrap();
-        assert_eq!(c.start, 200, "starts after the backlog drains");
-        assert_eq!(c.finish, 300);
-    }
-
-    #[test]
-    fn sram_gate_rejects_oversized_models() {
-        let small = DeviceCfg {
-            sram_bytes: 10 * 1024,
-            clock_hz: crate::STM32F746_CLOCK_HZ,
-        };
-        let mut fleet = Fleet::new(2, small, 4);
-        assert!(!fleet.fits_anywhere(64 * 1024));
-        assert!(fleet
-            .dispatch(0, 100, 64 * 1024, 1, &cheap_counter())
-            .is_none());
-        assert!(fleet.dispatch(0, 100, 8 * 1024, 1, &cheap_counter()).is_some());
+    fn eligibility_gates_sram_and_depth() {
+        let mut small = DeviceCfg::stm32f746();
+        small.sram_bytes = 10 * 1024;
+        let mut fleet = Fleet::new(vec![small, DeviceCfg::stm32f746()], 1);
+        // Device 0 lacks SRAM for a 64 KB arena; device 1 fits.
+        assert!(!fleet.eligible(0, 0, 64 * 1024));
+        assert!(fleet.eligible(1, 0, 64 * 1024));
+        assert!(fleet.fits_anywhere(64 * 1024));
+        assert!(!fleet.fits_anywhere(512 * 1024));
+        // Fill device 1 to the depth cap; it becomes ineligible until
+        // its batch completes.
+        let ctr = cheap_counter();
+        let d = fleet.commit(1, 0, &work(0, &ctr, &[]));
+        assert!(!fleet.eligible(1, 0, 64 * 1024));
+        assert_eq!(fleet.next_wake(0, 64 * 1024), Some(d.finish));
+        assert!(fleet.eligible(1, d.finish, 64 * 1024));
     }
 
     #[test]
     fn accounting_accumulates() {
-        let mut fleet = Fleet::new(2, DeviceCfg::stm32f746(), 4);
-        fleet.dispatch(0, 300, 1024, 3, &cheap_counter()).unwrap();
-        fleet.dispatch(0, 200, 1024, 2, &cheap_counter()).unwrap();
+        let mut fleet = Fleet::homogeneous(2, DeviceCfg::stm32f746(), 4);
+        let ctr = cheap_counter();
+        let a = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        let b = fleet.commit(1, 0, &work(0, &ctr, &[]));
         let total_busy: u64 = fleet.devices.iter().map(|d| d.busy_cycles).sum();
         let total_images: u64 = fleet.devices.iter().map(|d| d.images).sum();
-        assert_eq!(total_busy, 500);
-        assert_eq!(total_images, 5);
-        assert!(fleet.devices[0].utilization(1000) > 0.0);
+        assert_eq!(total_busy, a.timeline_cycles + b.timeline_cycles);
+        assert_eq!(total_images, 2);
+        assert!(fleet.devices[0].utilization(1_000_000) > 0.0);
         assert_eq!(fleet.devices[0].counter.alu, 10);
+        assert_eq!(a.device_cycles, BATCH_OVERHEAD_CYCLES + 10);
     }
 }

@@ -1,39 +1,59 @@
-//! Multi-model MCU-fleet inference serving.
+//! Multi-model MCU-fleet inference serving over heterogeneous devices.
 //!
 //! The engine's compile/run split ([`crate::engine::CompiledModel`])
 //! makes sustained traffic expressible: compile each served model once,
-//! then replay a request trace against a pool of simulated Cortex-M7
-//! devices entirely in virtual time. The pipeline is
+//! then replay a request trace against a pool of simulated MCUs entirely
+//! in virtual time. Since the scheduler refactor the pipeline is a
+//! policy framework rather than a fixed pool:
 //!
 //! ```text
-//! trace ─► admission (SRAM / bounded queue) ─► batcher (per-model
-//!   dynamic batching) ─► fleet (round-robin over serial devices,
-//!     queue-depth backpressure) ─► stats (p50/p95/p99, throughput)
+//! trace (priority/deadline classes, replayable from JSON)
+//!   ─► admission (SRAM / bounded queue)
+//!     ─► batcher (per-model dynamic batching)
+//!       ─► scheduler (pluggable policy: round-robin | least-loaded |
+//!            slo-aware, each pricing batches with the TARGET device's
+//!            cycle model)
+//!         ─► fleet (heterogeneous M7/M4 devices: per-device SRAM,
+//!              clock and cycle table; shared 216 MHz reference
+//!              timeline; queue-depth backpressure)
+//!           ─► stats (p50/p95/p99, throughput, deadline misses)
 //! ```
 //!
 //! * [`registry`] — multi-tenant model registry with an LRU
-//!   compile-once artifact cache;
-//! * [`fleet`] — the device pool: per-device SRAM budget, cycle
+//!   compile-once artifact cache and cross-tenant weight sharing
+//!   (identical-params tenants collapse onto one artifact);
+//! * [`fleet`] — the device pool mechanics: per-device SRAM budget,
+//!   clock, [`CycleModel`](crate::mcu::CycleModel), cycle
 //!   [`Counter`](crate::mcu::Counter) and virtual-time timeline;
+//! * [`sched`] — the [`Scheduler`] trait and the three built-in
+//!   placement policies;
 //! * [`batcher`] — bounded request queue + dynamic batching window;
-//! * [`stats`] — latency/throughput/cache reporting (tables + JSON);
-//! * [`trace`] — deterministic synthetic request traces.
+//! * [`stats`] — latency/throughput/SLO/cache reporting (tables + JSON);
+//! * [`trace`] — deterministic synthetic request traces with deadline
+//!   classes, (de)serializable for recorded-trace replay.
 //!
 //! Everything is deterministic: a (workloads, trace, config) triple
 //! always produces the same report, so serving numbers are comparable
-//! across PRs the same way the fig5–fig8 benches are.
+//! across PRs the same way the fig5–fig8 benches are. Each replay owns
+//! its conv scratch ([`crate::ops::slbc::ConvScratch`]), so concurrent
+//! fleet simulations never share mutable pipeline state.
 
 pub mod batcher;
 pub mod fleet;
 pub mod registry;
+pub mod sched;
 pub mod stats;
 pub mod trace;
 
 pub use batcher::{Batcher, BatcherCfg, PendingRequest, ReadyBatch, BATCH_OVERHEAD_CYCLES};
-pub use fleet::{Device, DeviceCfg, Dispatch, Fleet};
-pub use registry::{ModelKey, Registry, RegistryStats};
+pub use fleet::{BatchWork, Device, DeviceCfg, DeviceClass, Dispatch, Fleet};
+pub use registry::{hash_params, ModelKey, Registry, RegistryStats};
+pub use sched::{LeastLoaded, RoundRobin, Scheduler, SchedulerKind, SloAware};
 pub use stats::{DeviceStats, LatencySummary, ModelStats, ServeReport};
-pub use trace::{synth_trace, TraceCfg, TraceRequest};
+pub use trace::{
+    load_trace, save_trace, synth_trace, trace_from_json, trace_to_json, SloClass, TraceCfg,
+    TraceRequest,
+};
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -42,13 +62,16 @@ use crate::datasets::{self, Task};
 use crate::engine::{self, CompiledModel};
 use crate::mcu::Counter;
 use crate::models::{self, ModelDesc};
+use crate::ops::slbc::ConvScratch;
 use crate::ops::Method;
 use crate::quant::BitConfig;
 use crate::util::prng::Rng;
 use crate::Result;
 
 /// One served tenant: the model identity plus the trained parameters it
-/// deploys with.
+/// deploys with. Tenants with identical `(backbone, method, bits)` and
+/// identical parameters hash to the same [`ModelKey`] and share one
+/// compiled artifact in the registry.
 pub struct Workload {
     pub key: ModelKey,
     pub model: ModelDesc,
@@ -58,7 +81,7 @@ pub struct Workload {
 impl Workload {
     pub fn new(model: ModelDesc, method: Method, cfg: BitConfig, params: Vec<f32>) -> Workload {
         Workload {
-            key: ModelKey::new(&model.name, method, cfg),
+            key: ModelKey::with_params(&model.name, method, cfg, &params),
             model,
             params,
         }
@@ -85,10 +108,11 @@ impl Workload {
 /// Serving-stack configuration.
 #[derive(Debug, Clone)]
 pub struct ServeCfg {
-    /// Fleet size.
-    pub devices: usize,
-    /// Per-device hardware parameters.
-    pub device: DeviceCfg,
+    /// Per-device hardware profiles — one entry per fleet device, mixed
+    /// classes welcome.
+    pub fleet: Vec<DeviceCfg>,
+    /// Batch-placement policy.
+    pub scheduler: SchedulerKind,
     /// Unfinished batches one device may hold before backpressure.
     pub max_queue_depth: usize,
     pub batcher: BatcherCfg,
@@ -99,11 +123,21 @@ pub struct ServeCfg {
 impl Default for ServeCfg {
     fn default() -> Self {
         ServeCfg {
-            devices: 4,
-            device: DeviceCfg::stm32f746(),
+            fleet: vec![DeviceCfg::stm32f746(); 4],
+            scheduler: SchedulerKind::RoundRobin,
             max_queue_depth: 4,
             batcher: BatcherCfg::default(),
             cache_capacity: 8,
+        }
+    }
+}
+
+impl ServeCfg {
+    /// Convenience: the default stack over `n` M7-class devices.
+    pub fn homogeneous(n: usize) -> ServeCfg {
+        ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746(); n],
+            ..ServeCfg::default()
         }
     }
 }
@@ -114,74 +148,80 @@ struct ModelAcc {
     requests: u64,
     batches: u64,
     cycles: u64,
+    deadline_misses: u64,
 }
 
-/// Dispatch a set of flushed batches in ready-time order (ties broken
-/// by key index, then queue order). `pop_due` yields batches grouped by
-/// key; without the sort a later-ready batch could jump the device
-/// queue ahead of an earlier-ready one and skew the latency tail.
+/// Everything `exec_batch` mutates, bundled so the replay loop stays
+/// readable.
+struct ReplayState<'a> {
+    sched: &'a mut dyn Scheduler,
+    fleet: &'a mut Fleet,
+    scratch: &'a mut ConvScratch,
+    latencies: Vec<u64>,
+    accs: Vec<ModelAcc>,
+    deadline_misses: u64,
+    makespan: u64,
+}
+
+/// Dispatch a set of flushed batches in ready-time order (same-ready
+/// ties broken by batch priority — most urgent member first — then key
+/// index, then queue order). `pop_due` yields batches grouped by key;
+/// without the sort a later-ready batch could jump the device queue
+/// ahead of an earlier-ready one and skew the latency tail. Priority
+/// only reorders genuinely concurrent batches, so best-effort traces
+/// (uniform priority) keep the original ordering exactly.
 fn exec_batches(
     mut batches: Vec<ReadyBatch>,
     pinned: &[Option<Arc<CompiledModel>>],
-    fleet: &mut Fleet,
-    latencies: &mut Vec<u64>,
-    accs: &mut [ModelAcc],
-    makespan: &mut u64,
+    st: &mut ReplayState,
 ) -> Result<()> {
-    batches.sort_by_key(|b| (b.ready, b.key_idx));
+    batches.sort_by_key(|b| (b.ready, std::cmp::Reverse(b.priority()), b.key_idx));
     for batch in batches {
         let art = pinned[batch.key_idx]
             .clone()
             .expect("queued request implies a compiled artifact");
-        exec_batch(
-            &batch,
-            &art,
-            fleet,
-            latencies,
-            &mut accs[batch.key_idx],
-            makespan,
-        )?;
+        exec_batch(&batch, &art, st)?;
     }
     Ok(())
 }
 
-/// Execute one flushed batch: run every image on the compiled artifact,
-/// dispatch the total cost to the fleet, and charge each member request
-/// its virtual-time latency.
-fn exec_batch(
-    batch: &ReadyBatch,
-    art: &CompiledModel,
-    fleet: &mut Fleet,
-    latencies: &mut Vec<u64>,
-    acc: &mut ModelAcc,
-    makespan: &mut u64,
-) -> Result<()> {
-    let mut run_cycles = 0u64;
+/// Execute one flushed batch: run every image on the compiled artifact
+/// (collecting the instruction histogram), let the scheduler place the
+/// batch on a device — which prices it with its *own* cycle model — and
+/// charge each member request its virtual-time latency and deadline
+/// outcome.
+fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> Result<()> {
     let mut ctr = Counter::new();
     for r in &batch.requests {
-        let res = art.run(&r.image)?;
-        run_cycles += res.cycles;
+        let res = art.run_with_scratch(&r.image, &mut *st.scratch)?;
         ctr.merge(&res.counter);
     }
-    let cost = BATCH_OVERHEAD_CYCLES + run_cycles;
-    let disp = fleet
-        .dispatch(
-            batch.ready,
-            cost,
-            art.peak_sram(),
-            batch.requests.len() as u64,
-            &ctr,
+    let deadlines: Vec<u64> = batch.requests.iter().map(|r| r.deadline).collect();
+    let work = BatchWork {
+        ready: batch.ready,
+        counter: &ctr,
+        peak_sram: art.peak_sram(),
+        images: batch.requests.len() as u64,
+        deadlines: &deadlines,
+    };
+    let disp = st.sched.place(&work, &mut *st.fleet).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no device fits {}B arena (admission should reject)",
+            art.peak_sram()
         )
-        .ok_or_else(|| {
-            anyhow::anyhow!("no device fits {}B arena (admission should reject)", art.peak_sram())
-        })?;
+    })?;
+    let acc = &mut st.accs[batch.key_idx];
     for r in &batch.requests {
-        latencies.push(disp.finish.saturating_sub(r.arrival));
+        st.latencies.push(disp.finish.saturating_sub(r.arrival));
+        if disp.finish > r.deadline {
+            acc.deadline_misses += 1;
+            st.deadline_misses += 1;
+        }
     }
     acc.requests += batch.requests.len() as u64;
     acc.batches += 1;
-    acc.cycles += cost;
-    *makespan = (*makespan).max(disp.finish);
+    acc.cycles += disp.device_cycles;
+    st.makespan = st.makespan.max(disp.finish);
     Ok(())
 }
 
@@ -197,16 +237,31 @@ pub fn run_trace(
     let compiles0 = engine::compile_count();
 
     let mut registry = Registry::new(cfg.cache_capacity);
-    let mut fleet = Fleet::new(cfg.devices, cfg.device, cfg.max_queue_depth);
+    let mut fleet = Fleet::new(cfg.fleet.clone(), cfg.max_queue_depth);
     let mut batcher = Batcher::new(cfg.batcher.clone(), workloads.len());
+    let mut sched = cfg.scheduler.build();
+    // Per-worker conv scratch: this replay's pipeline state is private,
+    // so concurrent fleet simulations never contend on a shared
+    // thread-local (ROADMAP PR-2 follow-up).
+    let mut scratch = ConvScratch::new();
+    let mut st = ReplayState {
+        sched: sched.as_mut(),
+        fleet: &mut fleet,
+        scratch: &mut scratch,
+        latencies: Vec::new(),
+        accs: vec![ModelAcc::default(); workloads.len()],
+        deadline_misses: 0,
+        makespan: 0,
+    };
 
     // Artifacts pinned for execution even if the LRU evicts them between
     // requests (the registry still tracks the recompilations).
     let mut pinned: Vec<Option<Arc<CompiledModel>>> = vec![None; workloads.len()];
-    let mut latencies: Vec<u64> = Vec::new();
-    let mut accs: Vec<ModelAcc> = vec![ModelAcc::default(); workloads.len()];
     let mut rejected_sram = 0u64;
-    let mut makespan = 0u64;
+    // Cache hits attributed per tenant (identical-params tenants share a
+    // registry entry, so the registry's own per-label counts would blur
+    // them together).
+    let mut tenant_hits: Vec<u64> = vec![0; workloads.len()];
 
     // Replay in arrival order (stable on id for equal arrivals).
     let mut order: Vec<&TraceRequest> = trace.iter().collect();
@@ -221,25 +276,23 @@ pub fn run_trace(
             workloads.len()
         );
         // Flush whatever became due before this arrival.
-        exec_batches(
-            batcher.pop_due(req.arrival),
-            &pinned,
-            &mut fleet,
-            &mut latencies,
-            &mut accs,
-            &mut makespan,
-        )?;
+        exec_batches(batcher.pop_due(req.arrival), &pinned, &mut st)?;
 
         // Compile-on-first-use through the registry (hits are counted
-        // per request, which is what makes compile-once observable).
+        // per request, which is what makes compile-once — and, across
+        // identical-params tenants, weight sharing — observable).
         let w = &workloads[req.key_idx];
-        let art = registry.get_or_compile(&w.key, || {
+        let hits_before = registry.stats().hits;
+        let art = registry.get_or_compile_for(req.key_idx, &w.key, || {
             CompiledModel::compile(&w.model, &w.params, &w.key.cfg, w.key.method)
         })?;
+        if registry.stats().hits > hits_before {
+            tenant_hits[req.key_idx] += 1;
+        }
         pinned[req.key_idx] = Some(art.clone());
 
         // Admission control: SRAM, then the bounded queue.
-        if !fleet.fits_anywhere(art.peak_sram()) {
+        if !st.fleet.fits_anywhere(art.peak_sram()) {
             rejected_sram += 1;
             continue;
         }
@@ -254,30 +307,25 @@ pub fn run_trace(
             id: req.id,
             key_idx: req.key_idx,
             arrival: req.arrival,
+            priority: req.priority(),
+            deadline: req.deadline,
             image,
         });
         // A batch this arrival filled is ready right now — flush it
         // rather than letting it sit out the waiting window.
-        exec_batches(
-            batcher.pop_due(req.arrival),
-            &pinned,
-            &mut fleet,
-            &mut latencies,
-            &mut accs,
-            &mut makespan,
-        )?;
+        exec_batches(batcher.pop_due(req.arrival), &pinned, &mut st)?;
     }
 
     // End of trace: drain the remaining partial batches.
-    exec_batches(
-        batcher.drain_all(),
-        &pinned,
-        &mut fleet,
-        &mut latencies,
-        &mut accs,
-        &mut makespan,
-    )?;
+    exec_batches(batcher.drain_all(), &pinned, &mut st)?;
 
+    let ReplayState {
+        latencies,
+        accs,
+        deadline_misses,
+        makespan,
+        ..
+    } = st;
     let completed = latencies.len();
     let virtual_s = makespan as f64 / crate::STM32F746_CLOCK_HZ as f64;
     let throughput_rps = if virtual_s > 0.0 {
@@ -285,18 +333,13 @@ pub fn run_trace(
     } else {
         0.0
     };
-    let hits = registry.per_model_hits();
     let per_model = workloads
         .iter()
         .enumerate()
         .zip(&accs)
         .map(|((i, w), acc)| {
             let label = w.key.label();
-            let cache_hits = hits
-                .iter()
-                .find(|(l, _)| *l == label)
-                .map(|(_, h)| *h)
-                .unwrap_or(0);
+            let cache_hits = tenant_hits[i];
             let (peak_sram, flash_bytes, macs_per_instr) = pinned[i]
                 .as_ref()
                 .map(|a| {
@@ -312,6 +355,7 @@ pub fn run_trace(
                 requests: acc.requests,
                 batches: acc.batches,
                 cycles: acc.cycles,
+                deadline_misses: acc.deadline_misses,
                 cache_hits,
                 peak_sram,
                 flash_bytes,
@@ -324,6 +368,7 @@ pub fn run_trace(
         .iter()
         .map(|d| DeviceStats {
             id: d.id,
+            class: d.cfg.class.name().to_string(),
             batches: d.batches,
             images: d.images,
             busy_cycles: d.busy_cycles,
@@ -332,10 +377,12 @@ pub fn run_trace(
         .collect();
 
     Ok(ServeReport {
+        scheduler: cfg.scheduler.name().to_string(),
         requests: trace.len(),
         completed,
         rejected_queue: batcher.shed,
         rejected_sram,
+        deadline_misses,
         makespan_cycles: makespan,
         throughput_rps,
         latency: LatencySummary::from_cycles(&latencies),
@@ -350,6 +397,7 @@ pub fn run_trace(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mcu::CycleModel;
 
     fn mobilenet_pair() -> Vec<Workload> {
         vec![
@@ -360,7 +408,7 @@ mod tests {
 
     fn small_cfg() -> ServeCfg {
         ServeCfg {
-            devices: 2,
+            fleet: vec![DeviceCfg::stm32f746(); 2],
             max_queue_depth: 2,
             ..ServeCfg::default()
         }
@@ -383,18 +431,25 @@ mod tests {
         assert_eq!(rep.cache.hits + rep.cache.misses, 24);
         assert_eq!(rep.cache.compiles, rep.cache.misses);
         assert!(rep.cache.compiles <= workloads.len() as u64);
+        // No SLO classes in this trace: no deadline pressure.
+        assert_eq!(rep.deadline_misses, 0);
+        assert_eq!(rep.scheduler, "round-robin");
         // Latency and throughput sanity.
         assert!(rep.latency.p50_ms > 0.0);
         assert!(rep.latency.p50_ms <= rep.latency.p95_ms);
         assert!(rep.latency.p95_ms <= rep.latency.p99_ms);
         assert!(rep.throughput_rps > 0.0);
         assert!(rep.makespan_cycles > 0);
-        // Per-model accounting covers every completed request.
+        // Per-model accounting covers every completed request, and
+        // per-tenant cache hits sum to the registry total.
         let sum: u64 = rep.per_model.iter().map(|m| m.requests).sum();
         assert_eq!(sum, rep.completed as u64);
+        let hit_sum: u64 = rep.per_model.iter().map(|m| m.cache_hits).sum();
+        assert_eq!(hit_sum, rep.cache.hits);
         // Fleet accounting agrees.
         let images: u64 = rep.per_device.iter().map(|d| d.images).sum();
         assert_eq!(images, rep.completed as u64);
+        assert!(rep.per_device.iter().all(|d| d.class == "m7"));
     }
 
     #[test]
@@ -402,18 +457,11 @@ mod tests {
         let workloads = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 3).unwrap()];
         let mk_trace = |gap: u64| -> Vec<TraceRequest> {
             (0..8)
-                .map(|id| TraceRequest {
-                    id,
-                    arrival: id as u64 * gap,
-                    key_idx: 0,
-                    seed: 1000 + id as u64, // same inputs in both traces
-                })
+                // same inputs in both traces
+                .map(|id| TraceRequest::best_effort(id, id as u64 * gap, 0, 1000 + id as u64))
                 .collect()
         };
-        let cfg = ServeCfg {
-            devices: 1,
-            ..ServeCfg::default()
-        };
+        let cfg = ServeCfg::homogeneous(1);
         // Burst: all 8 arrive within the batching window -> one batch.
         let burst = run_trace(&workloads, &mk_trace(1), &cfg).unwrap();
         // Spread: 10 ms apart -> every request rides alone.
@@ -436,15 +484,10 @@ mod tests {
     fn bounded_queue_sheds_under_burst() {
         let workloads = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 4).unwrap()];
         let trace: Vec<TraceRequest> = (0..10)
-            .map(|id| TraceRequest {
-                id,
-                arrival: 0,
-                key_idx: 0,
-                seed: id as u64,
-            })
+            .map(|id| TraceRequest::best_effort(id, 0, 0, id as u64))
             .collect();
         let cfg = ServeCfg {
-            devices: 1,
+            fleet: vec![DeviceCfg::stm32f746()],
             batcher: BatcherCfg {
                 max_batch: 4,
                 max_wait_cycles: 432_000,
@@ -481,16 +524,467 @@ mod tests {
         // A fleet of tiny devices cannot host the model at all.
         let workloads = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 6).unwrap()];
         let trace = synth_trace(&TraceCfg::new(5, 100_000, 2), 1);
+        let tiny = DeviceCfg {
+            sram_bytes: 16, // nothing fits
+            ..DeviceCfg::stm32f746()
+        };
         let cfg = ServeCfg {
-            devices: 2,
-            device: DeviceCfg {
-                sram_bytes: 16, // nothing fits
-                clock_hz: crate::STM32F746_CLOCK_HZ,
-            },
+            fleet: vec![tiny; 2],
             ..ServeCfg::default()
         };
         let rep = run_trace(&workloads, &trace, &cfg).unwrap();
         assert_eq!(rep.completed, 0);
         assert_eq!(rep.rejected_sram, 5);
+    }
+
+    // ------------------------------------------------------------------
+    // Regression pin: the pre-scheduler homogeneous pipeline, transcribed
+    // from the seed (global M7 cycle model, inline round-robin dispatch).
+    // `RoundRobin` over an all-M7 fleet must reproduce it bit-for-bit.
+    // ------------------------------------------------------------------
+
+    struct LegacyDev {
+        busy_until: u64,
+        inflight: Vec<u64>,
+        busy: u64,
+        batches: u64,
+        images: u64,
+    }
+
+    fn legacy_dispatch(
+        devs: &mut [LegacyDev],
+        rr_next: &mut usize,
+        depth: usize,
+        ready: u64,
+        cost: u64,
+        images: u64,
+    ) -> u64 {
+        let n = devs.len();
+        let mut now = ready;
+        loop {
+            for off in 0..n {
+                let idx = (*rr_next + off) % n;
+                let d = &mut devs[idx];
+                if d.inflight.iter().filter(|&&f| f > now).count() >= depth {
+                    continue;
+                }
+                *rr_next = (idx + 1) % n;
+                let start = now.max(d.busy_until);
+                let finish = start + cost;
+                d.busy_until = finish;
+                d.inflight.retain(|&f| f > now);
+                d.inflight.push(finish);
+                d.busy += cost;
+                d.batches += 1;
+                d.images += images;
+                return finish;
+            }
+            now = devs
+                .iter()
+                .flat_map(|d| d.inflight.iter().copied())
+                .filter(|&f| f > now)
+                .min()
+                .expect("saturated fleet has in-flight work");
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn legacy_exec(
+        mut batches: Vec<ReadyBatch>,
+        pinned: &[Option<Arc<CompiledModel>>],
+        devs: &mut [LegacyDev],
+        rr_next: &mut usize,
+        depth: usize,
+        latencies: &mut Vec<u64>,
+        makespan: &mut u64,
+    ) {
+        batches.sort_by_key(|b| (b.ready, b.key_idx));
+        for batch in batches {
+            let art = pinned[batch.key_idx].clone().unwrap();
+            let mut run_cycles = 0u64;
+            for r in &batch.requests {
+                run_cycles += art.run(&r.image).unwrap().cycles;
+            }
+            let cost = BATCH_OVERHEAD_CYCLES + run_cycles;
+            let finish = legacy_dispatch(
+                devs,
+                rr_next,
+                depth,
+                batch.ready,
+                cost,
+                batch.requests.len() as u64,
+            );
+            for r in &batch.requests {
+                latencies.push(finish.saturating_sub(r.arrival));
+            }
+            *makespan = (*makespan).max(finish);
+        }
+    }
+
+    /// Returns (makespan, latencies, per-device (batches, images, busy),
+    /// shed).
+    fn legacy_round_robin_replay(
+        workloads: &[Workload],
+        trace: &[TraceRequest],
+        cfg: &ServeCfg,
+    ) -> (u64, Vec<u64>, Vec<(u64, u64, u64)>, u64) {
+        let mut registry = Registry::new(cfg.cache_capacity);
+        let mut batcher = Batcher::new(cfg.batcher.clone(), workloads.len());
+        let mut devs: Vec<LegacyDev> = (0..cfg.fleet.len())
+            .map(|_| LegacyDev {
+                busy_until: 0,
+                inflight: Vec::new(),
+                busy: 0,
+                batches: 0,
+                images: 0,
+            })
+            .collect();
+        let mut rr_next = 0usize;
+        let depth = cfg.max_queue_depth;
+        let mut pinned: Vec<Option<Arc<CompiledModel>>> = vec![None; workloads.len()];
+        let mut latencies = Vec::new();
+        let mut makespan = 0u64;
+
+        let mut order: Vec<&TraceRequest> = trace.iter().collect();
+        order.sort_by_key(|r| (r.arrival, r.id));
+        for req in order {
+            legacy_exec(
+                batcher.pop_due(req.arrival),
+                &pinned,
+                &mut devs,
+                &mut rr_next,
+                depth,
+                &mut latencies,
+                &mut makespan,
+            );
+            let w = &workloads[req.key_idx];
+            let art = registry
+                .get_or_compile(&w.key, || {
+                    CompiledModel::compile(&w.model, &w.params, &w.key.cfg, w.key.method)
+                })
+                .unwrap();
+            pinned[req.key_idx] = Some(art.clone());
+            assert!(art.peak_sram() <= crate::STM32F746_SRAM_BYTES);
+            let image = datasets::generate(
+                Task::for_backbone(&w.model.name),
+                1,
+                w.model.input_hw,
+                req.seed,
+            )
+            .images;
+            batcher.offer(PendingRequest {
+                id: req.id,
+                key_idx: req.key_idx,
+                arrival: req.arrival,
+                priority: req.priority(),
+                deadline: req.deadline,
+                image,
+            });
+            legacy_exec(
+                batcher.pop_due(req.arrival),
+                &pinned,
+                &mut devs,
+                &mut rr_next,
+                depth,
+                &mut latencies,
+                &mut makespan,
+            );
+        }
+        legacy_exec(
+            batcher.drain_all(),
+            &pinned,
+            &mut devs,
+            &mut rr_next,
+            depth,
+            &mut latencies,
+            &mut makespan,
+        );
+        let per_dev = devs.iter().map(|d| (d.batches, d.images, d.busy)).collect();
+        (makespan, latencies, per_dev, batcher.shed)
+    }
+
+    #[test]
+    fn round_robin_on_all_m7_matches_legacy_pipeline_bit_for_bit() {
+        let workloads = mobilenet_pair();
+        let trace = synth_trace(&TraceCfg::new(48, 400_000, 17), workloads.len());
+        let cfg = ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746(); 3],
+            max_queue_depth: 2,
+            ..ServeCfg::default()
+        };
+        let rep = run_trace(&workloads, &trace, &cfg).unwrap();
+        let (makespan, latencies, per_dev, shed) =
+            legacy_round_robin_replay(&workloads, &trace, &cfg);
+
+        assert_eq!(rep.makespan_cycles, makespan);
+        assert_eq!(rep.rejected_queue, shed);
+        assert_eq!(rep.completed, latencies.len());
+        let want = LatencySummary::from_cycles(&latencies);
+        assert_eq!(rep.latency.p50_ms, want.p50_ms);
+        assert_eq!(rep.latency.p95_ms, want.p95_ms);
+        assert_eq!(rep.latency.p99_ms, want.p99_ms);
+        assert_eq!(rep.latency.mean_ms, want.mean_ms);
+        assert_eq!(rep.latency.max_ms, want.max_ms);
+        for (d, (batches, images, busy)) in rep.per_device.iter().zip(&per_dev) {
+            assert_eq!(d.batches, *batches, "device {} batches", d.id);
+            assert_eq!(d.images, *images, "device {} images", d.id);
+            assert_eq!(d.busy_cycles, *busy, "device {} busy cycles", d.id);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_is_slower_than_all_m7() {
+        let workloads = vec![Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 21).unwrap()];
+        let trace = synth_trace(&TraceCfg::new(32, 500_000, 8), 1);
+        // A deep queue cap keeps every device always eligible, so the
+        // round-robin assignment sequence is identical across the two
+        // fleets and the comparison isolates per-device pricing.
+        let homo = ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746(); 2],
+            max_queue_depth: 64,
+            ..ServeCfg::default()
+        };
+        let hetero = ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746(), DeviceCfg::stm32f446()],
+            max_queue_depth: 64,
+            ..ServeCfg::default()
+        };
+        let a = run_trace(&workloads, &trace, &homo).unwrap();
+        let b = run_trace(&workloads, &trace, &hetero).unwrap();
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.per_device[1].batches, b.per_device[1].batches);
+        assert!(b.per_device[1].busy_cycles > a.per_device[1].busy_cycles,
+            "the M4 slot pays more timeline cycles for the same batches");
+        assert!(b.makespan_cycles >= a.makespan_cycles);
+        assert!(b.latency.mean_ms >= a.latency.mean_ms);
+        assert_eq!(b.per_device[0].class, "m7");
+        assert_eq!(b.per_device[1].class, "m4");
+        // The model must actually fit the smaller part for this test to
+        // exercise heterogeneous dispatch.
+        assert!(b.per_device[1].images > 0);
+    }
+
+    #[test]
+    fn slo_aware_strictly_beats_round_robin_on_hetero_deadlines() {
+        // Constructed two-request scenario over [M7, M4]: round-robin
+        // blindly alternates onto the M4 and misses the interactive
+        // deadline; the SLO-aware policy predicts the miss with the M4's
+        // own cycle model and keeps the request on the (busy) M7, which
+        // still meets it.
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 21).unwrap()];
+        let art =
+            CompiledModel::compile(&ws[0].model, &ws[0].params, &ws[0].key.cfg, ws[0].key.method)
+                .unwrap();
+        assert!(
+            art.peak_sram() <= crate::STM32F446_SRAM_BYTES,
+            "model must fit the M4 for the scenario to bite"
+        );
+        let img = datasets::generate(
+            Task::for_backbone(&ws[0].model.name),
+            1,
+            ws[0].model.input_hw,
+            777,
+        )
+        .images;
+        let res = art.run(&img).unwrap();
+        let m7 = DeviceCfg::stm32f746();
+        let m4 = DeviceCfg::stm32f446();
+        let c7 = m7.timeline_cost(&res.counter);
+        let c4 = m4.timeline_cost(&res.counter);
+        assert!(c4 > c7, "the M4 must be strictly slower on the timeline");
+
+        let trace = vec![
+            TraceRequest {
+                id: 0,
+                arrival: 0,
+                key_idx: 0,
+                seed: 777,
+                class: SloClass::Batch,
+                deadline: u64::MAX,
+            },
+            TraceRequest {
+                id: 1,
+                arrival: c7,
+                key_idx: 0,
+                seed: 777,
+                class: SloClass::Interactive,
+                deadline: 2 * c7,
+            },
+        ];
+        let mk = |scheduler: SchedulerKind| ServeCfg {
+            fleet: vec![m7, m4],
+            scheduler,
+            max_queue_depth: 8,
+            batcher: BatcherCfg {
+                max_batch: 1,
+                max_wait_cycles: 0,
+                max_queue: 64,
+            },
+            cache_capacity: 8,
+        };
+        let rr = run_trace(&ws, &trace, &mk(SchedulerKind::RoundRobin)).unwrap();
+        let slo = run_trace(&ws, &trace, &mk(SchedulerKind::SloAware)).unwrap();
+        assert_eq!(rr.completed, 2);
+        assert_eq!(slo.completed, 2);
+        assert_eq!(rr.deadline_misses, 1, "round-robin sends the tight request to the M4");
+        assert_eq!(slo.deadline_misses, 0, "slo-aware keeps it on the M7");
+        assert_eq!(slo.per_model[0].deadline_misses, 0);
+        assert_eq!(rr.per_model[0].deadline_misses, 1);
+    }
+
+    #[test]
+    fn higher_priority_batch_dispatches_first_on_ready_ties() {
+        // Two tenants' partial batches expire at the same virtual cycle
+        // on a single device; the interactive one must run first even
+        // though its tenant index sorts later. Its deadline is exactly
+        // first-place finish, so a key-ordered dispatch would miss it.
+        let ws = vec![
+            Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 33).unwrap(),
+            Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 33).unwrap(),
+        ];
+        let art =
+            CompiledModel::compile(&ws[0].model, &ws[0].params, &ws[0].key.cfg, ws[0].key.method)
+                .unwrap();
+        let img = datasets::generate(
+            Task::for_backbone(&ws[0].model.name),
+            1,
+            ws[0].model.input_hw,
+            777,
+        )
+        .images;
+        let res = art.run(&img).unwrap();
+        let cost = DeviceCfg::stm32f746().timeline_cost(&res.counter);
+        let wait = 432_000u64;
+
+        let trace = vec![
+            TraceRequest {
+                id: 0,
+                arrival: 0,
+                key_idx: 0,
+                seed: 777,
+                class: SloClass::Batch,
+                deadline: u64::MAX,
+            },
+            TraceRequest {
+                id: 1,
+                arrival: 0,
+                key_idx: 1,
+                seed: 777,
+                class: SloClass::Interactive,
+                deadline: wait + cost,
+            },
+        ];
+        let cfg = ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746()],
+            batcher: BatcherCfg {
+                max_batch: 8,
+                max_wait_cycles: wait,
+                max_queue: 64,
+            },
+            ..ServeCfg::default()
+        };
+        let rep = run_trace(&ws, &trace, &cfg).unwrap();
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.makespan_cycles, wait + 2 * cost);
+        assert_eq!(
+            rep.deadline_misses, 0,
+            "the interactive batch must win the same-ready tie"
+        );
+    }
+
+    #[test]
+    fn least_loaded_balances_like_round_robin_on_uniform_load() {
+        let workloads = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 12).unwrap()];
+        let trace = synth_trace(&TraceCfg::new(20, 100_000, 6), 1);
+        let cfg = ServeCfg {
+            scheduler: SchedulerKind::LeastLoaded,
+            ..ServeCfg::homogeneous(2)
+        };
+        let rep = run_trace(&workloads, &trace, &cfg).unwrap();
+        assert_eq!(rep.scheduler, "least-loaded");
+        assert_eq!(rep.completed as u64 + rep.rejected_queue, 20);
+        // Both devices share the work (least-loaded alternates as each
+        // dispatch makes the chosen device the busier one).
+        assert!(rep.per_device.iter().all(|d| d.batches > 0));
+    }
+
+    #[test]
+    fn identical_param_tenants_share_one_artifact_in_replay() {
+        // Two tenants, same backbone/method/bits AND same synth seed:
+        // identical parameters, one shared compiled artifact.
+        let ws = vec![
+            Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 33).unwrap(),
+            Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 33).unwrap(),
+        ];
+        assert_eq!(ws[0].key, ws[1].key, "identical tenants must key identically");
+        let trace: Vec<TraceRequest> = (0..8)
+            .map(|id| TraceRequest::best_effort(id, id as u64 * 1_000_000, id % 2, 50 + id as u64))
+            .collect();
+        let rep = run_trace(&ws, &trace, &ServeCfg::homogeneous(2)).unwrap();
+        assert_eq!(rep.cache.compiles, 1, "one compilation serves both tenants");
+        assert_eq!(rep.cache.misses, 1);
+        assert_eq!(rep.cache.hits, 7);
+        // Tenant 0's first lookup compiled the entry; tenant 1's four
+        // requests all hit it cross-tenant.
+        assert_eq!(rep.cache.shared_hits, 4);
+        assert_eq!(rep.completed, 8);
+        // Hits are attributed per tenant even though the two tenants
+        // share one registry entry (and one label).
+        assert_eq!(rep.per_model[0].cache_hits, 3);
+        assert_eq!(rep.per_model[1].cache_hits, 4);
+    }
+
+    #[test]
+    fn recorded_trace_replays_identically_from_file() {
+        let workloads = mobilenet_pair();
+        let cfg = ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746(), DeviceCfg::stm32f446()],
+            scheduler: SchedulerKind::SloAware,
+            ..ServeCfg::default()
+        };
+        let trace = synth_trace(
+            &TraceCfg::new(24, 350_000, 19).with_skew(1.0).with_slo([1.0, 1.0, 1.0]),
+            workloads.len(),
+        );
+        let path = std::env::temp_dir().join("mcu_mixq_serve_trace_replay.json");
+        save_trace(&path, &trace).unwrap();
+        let loaded = load_trace(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(trace, loaded);
+
+        let a = run_trace(&workloads, &trace, &cfg).unwrap();
+        let b = run_trace(&workloads, &loaded, &cfg).unwrap();
+        assert_eq!(a.makespan_cycles, b.makespan_cycles);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.deadline_misses, b.deadline_misses);
+        assert_eq!(a.latency.p99_ms, b.latency.p99_ms);
+    }
+
+    #[test]
+    fn concurrent_replays_with_private_scratch_stay_deterministic() {
+        // Each replay owns its ConvScratch, so simulations running on
+        // different threads (or interleaved on a pool) must agree with a
+        // sequential run exactly.
+        fn replay() -> (u64, f64, usize) {
+            let ws = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 7).unwrap()];
+            let trace = synth_trace(&TraceCfg::new(10, 150_000, 4), 1);
+            let rep = run_trace(&ws, &trace, &ServeCfg::homogeneous(2)).unwrap();
+            (rep.makespan_cycles, rep.latency.p99_ms, rep.completed)
+        }
+        let base = replay();
+        let handles: Vec<_> = (0..2).map(|_| std::thread::spawn(replay)).collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), base);
+        }
+    }
+
+    #[test]
+    fn device_cycle_models_are_per_class() {
+        let m7 = DeviceCfg::stm32f746();
+        let m4 = DeviceCfg::stm32f446();
+        assert_eq!(m7.cycle_model, CycleModel::cortex_m7());
+        assert_eq!(m4.cycle_model, CycleModel::cortex_m4());
+        assert!(m4.sram_bytes < m7.sram_bytes);
+        assert!(m4.clock_hz < m7.clock_hz);
     }
 }

@@ -8,6 +8,12 @@
 //! guarantee observable (cross-checked against
 //! [`crate::engine::compile_count`] in tests and `bench-serve`).
 //!
+//! Keys carry a parameter fingerprint ([`hash_params`]), so *distinct
+//! tenants* deploying the same `(backbone, method, bits)` with identical
+//! trained weights collapse onto one cached artifact — cross-tenant
+//! weight sharing, surfaced by [`RegistryStats::shared_hits`] — while
+//! same-triple tenants with different weights stay separate.
+//!
 //! Since the rolling-row conv refactor, the cached artifact also carries
 //! the engine's [`KernelCache`](crate::engine::KernelCache) of pre-packed
 //! SLBC kernel registers, so a registry hit serves requests with **zero
@@ -22,12 +28,30 @@ use crate::ops::Method;
 use crate::quant::BitConfig;
 use crate::Result;
 
-/// Identity of one served model: the triple Table I rows are keyed by.
+/// FNV-1a over the raw bit patterns of the trained parameters — the
+/// weight-sharing fingerprint: tenants whose params hash identically
+/// (and match on backbone/method/bits) deploy one shared artifact.
+pub fn hash_params(params: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for p in params {
+        for b in p.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Identity of one served model: the triple Table I rows are keyed by,
+/// plus the parameter fingerprint that gates cross-tenant weight sharing.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelKey {
     pub backbone: String,
     pub method: Method,
     pub cfg: BitConfig,
+    /// [`hash_params`] of the deployed parameters (0 when unknown —
+    /// such keys only share with other unknown-params keys).
+    pub params_hash: u64,
 }
 
 impl ModelKey {
@@ -36,6 +60,16 @@ impl ModelKey {
             backbone: backbone.to_string(),
             method,
             cfg,
+            params_hash: 0,
+        }
+    }
+
+    /// Key with the parameter fingerprint filled in (what
+    /// [`Workload`](super::Workload) construction uses).
+    pub fn with_params(backbone: &str, method: Method, cfg: BitConfig, params: &[f32]) -> ModelKey {
+        ModelKey {
+            params_hash: hash_params(params),
+            ..ModelKey::new(backbone, method, cfg)
         }
     }
 
@@ -58,6 +92,9 @@ pub struct RegistryStats {
     pub misses: u64,
     pub compiles: u64,
     pub evictions: u64,
+    /// Hits served to a tenant other than the one whose lookup compiled
+    /// the artifact — the cross-tenant weight-sharing win.
+    pub shared_hits: u64,
 }
 
 impl RegistryStats {
@@ -76,6 +113,9 @@ struct CacheEntry {
     key: ModelKey,
     model: Arc<CompiledModel>,
     last_use: u64,
+    /// Tenant whose lookup compiled this entry (for shared-hit
+    /// attribution).
+    owner_tenant: usize,
 }
 
 /// LRU cache of compiled deployment artifacts.
@@ -121,7 +161,26 @@ impl Registry {
 
     /// Fetch the artifact for `key`, compiling (through `build`) only on
     /// a miss. Evicts the least-recently-used entry when full.
+    /// Single-tenant convenience over
+    /// [`get_or_compile_for`](Registry::get_or_compile_for).
     pub fn get_or_compile<F>(&mut self, key: &ModelKey, build: F) -> Result<Arc<CompiledModel>>
+    where
+        F: FnOnce() -> Result<CompiledModel>,
+    {
+        self.get_or_compile_for(0, key, build)
+    }
+
+    /// [`get_or_compile`](Registry::get_or_compile) with tenant
+    /// attribution: a hit served to a tenant other than the entry's
+    /// compiler counts as a *shared* hit — tenants deploying the same
+    /// `(backbone, method, bits)` with identical parameters collapse to
+    /// one artifact, and `shared_hits` makes the collapse observable.
+    pub fn get_or_compile_for<F>(
+        &mut self,
+        tenant: usize,
+        key: &ModelKey,
+        build: F,
+    ) -> Result<Arc<CompiledModel>>
     where
         F: FnOnce() -> Result<CompiledModel>,
     {
@@ -129,6 +188,9 @@ impl Registry {
         if let Some(e) = self.entries.iter_mut().find(|e| e.key == *key) {
             e.last_use = self.clock;
             self.stats.hits += 1;
+            if e.owner_tenant != tenant {
+                self.stats.shared_hits += 1;
+            }
             let model = e.model.clone();
             let label = key.label();
             match self.hits_by_label.iter_mut().find(|(l, _)| *l == label) {
@@ -155,6 +217,7 @@ impl Registry {
             key: key.clone(),
             model: model.clone(),
             last_use: self.clock,
+            owner_tenant: tenant,
         });
         Ok(model)
     }
@@ -288,6 +351,65 @@ mod tests {
             packs,
             "serving from a registry hit must not re-pack kernels"
         );
+    }
+
+    #[test]
+    fn identical_params_share_one_artifact_across_tenants() {
+        let m = mobilenet_tiny(2, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let mut rng = Rng::new(55);
+        let params: Vec<f32> = (0..m.param_count).map(|_| rng.normal() * 0.1).collect();
+        let shared_key = ModelKey::with_params(&m.name, Method::RpSlbc, cfg.clone(), &params);
+
+        let mut reg = Registry::new(4);
+        let built = std::cell::Cell::new(0u32);
+        let fetch = |tenant: usize, reg: &mut Registry| {
+            reg.get_or_compile_for(tenant, &shared_key, || {
+                built.set(built.get() + 1);
+                CompiledModel::compile(&m, &params, &cfg, Method::RpSlbc)
+            })
+            .unwrap()
+        };
+        let a = fetch(0, &mut reg);
+        let b = fetch(1, &mut reg); // other tenant, same weights
+        let c = fetch(0, &mut reg); // owner again
+        assert_eq!(built.get(), 1, "identical tenants share one compilation");
+        assert!(Arc::ptr_eq(&a, &b) && Arc::ptr_eq(&b, &c), "one shared artifact");
+        assert_eq!(reg.stats().compiles, 1);
+        assert_eq!(reg.stats().hits, 2);
+        assert_eq!(reg.stats().shared_hits, 1, "only the foreign tenant's hit is shared");
+    }
+
+    #[test]
+    fn differing_params_do_not_share() {
+        let m = mobilenet_tiny(2, 16);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let mk_params = |seed: u64| -> Vec<f32> {
+            let mut rng = Rng::new(seed);
+            (0..m.param_count).map(|_| rng.normal() * 0.1).collect()
+        };
+        let (pa, pb) = (mk_params(1), mk_params(2));
+        let ka = ModelKey::with_params(&m.name, Method::RpSlbc, cfg.clone(), &pa);
+        let kb = ModelKey::with_params(&m.name, Method::RpSlbc, cfg.clone(), &pb);
+        assert_ne!(ka, kb, "same triple, different weights: distinct keys");
+
+        let mut reg = Registry::new(4);
+        reg.get_or_compile_for(0, &ka, || CompiledModel::compile(&m, &pa, &cfg, Method::RpSlbc))
+            .unwrap();
+        reg.get_or_compile_for(1, &kb, || CompiledModel::compile(&m, &pb, &cfg, Method::RpSlbc))
+            .unwrap();
+        assert_eq!(reg.stats().compiles, 2, "different weights compile separately");
+        assert_eq!(reg.stats().shared_hits, 0);
+    }
+
+    #[test]
+    fn hash_params_is_stable_and_discriminating() {
+        let a = vec![0.1f32, -0.2, 0.3];
+        let b = vec![0.1f32, -0.2, 0.3];
+        let c = vec![0.1f32, -0.2, 0.4];
+        assert_eq!(hash_params(&a), hash_params(&b));
+        assert_ne!(hash_params(&a), hash_params(&c));
+        assert_ne!(hash_params(&a), hash_params(&a[..2]));
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Pluggable batch-placement policies over a heterogeneous [`Fleet`].
+//!
+//! The serving pipeline hands every flushed batch to a [`Scheduler`],
+//! which decides *where* it runs; the fleet keeps the mechanics (virtual
+//! timeline, queue-depth backpressure, accounting). Policies see the
+//! batch as a [`BatchWork`]: an instruction histogram each candidate
+//! device prices with its own [`CycleModel`](crate::mcu::CycleModel),
+//! plus the members' absolute deadlines.
+//!
+//! Three built-in policies:
+//!
+//! * [`RoundRobin`] — the original homogeneous-fleet behavior: a cursor
+//!   walks the pool, skipping ineligible devices. On an all-M7 fleet the
+//!   produced timeline is bit-identical to the pre-scheduler pipeline
+//!   (pinned by a regression test in [`super`]).
+//! * [`LeastLoaded`] — earliest `busy_until` among eligible devices;
+//!   naturally shifts work toward faster devices as queues build.
+//! * [`SloAware`] — per-candidate predicted finish via the *device's
+//!   own* cycle model and clock; picks the device minimizing predicted
+//!   deadline misses, breaking ties by earliest finish. Deadline-miss
+//!   counts surface in [`ServeReport`](super::ServeReport).
+//!
+//! All policies share the same backpressure discipline through the
+//! provided [`Scheduler::place`]: when no device is eligible, virtual
+//! time advances to the fleet's next in-flight completion and the pick
+//! retries — batches are delayed, never reordered.
+
+use super::fleet::{BatchWork, Dispatch, Fleet};
+
+/// A batch-placement policy.
+pub trait Scheduler {
+    /// Policy name (reports, CLI).
+    fn name(&self) -> &'static str;
+
+    /// Pick an [eligible](Fleet::eligible) device for `work` at virtual
+    /// time `now`, or `None` when every SRAM-capable device is at the
+    /// queue-depth cap (placement will retry at the fleet's next wake).
+    /// Implementations must only return eligible device indices.
+    fn pick(&mut self, now: u64, work: &BatchWork, fleet: &Fleet) -> Option<usize>;
+
+    /// Place `work` on the fleet: retry `pick` under the shared
+    /// backpressure discipline, then commit. Returns `None` only when no
+    /// device's SRAM fits the model (callers should have rejected such
+    /// requests at admission).
+    fn place(&mut self, work: &BatchWork, fleet: &mut Fleet) -> Option<Dispatch> {
+        if !fleet.fits_anywhere(work.peak_sram) {
+            return None;
+        }
+        let mut now = work.ready;
+        loop {
+            if let Some(idx) = self.pick(now, work, fleet) {
+                return Some(fleet.commit(idx, now, work));
+            }
+            // Everyone eligible is saturated: wait for the earliest
+            // completion among devices that could host this model.
+            now = fleet.next_wake(now, work.peak_sram)?;
+        }
+    }
+}
+
+/// The original policy: a cursor walks the pool, first eligible device
+/// wins, cursor advances past it.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Scheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, now: u64, work: &BatchWork, fleet: &Fleet) -> Option<usize> {
+        let n = fleet.len();
+        for off in 0..n {
+            let idx = (self.next + off) % n;
+            if fleet.eligible(idx, now, work.peak_sram) {
+                self.next = (idx + 1) % n;
+                return Some(idx);
+            }
+        }
+        None
+    }
+}
+
+/// Earliest `busy_until` among eligible devices (ties to the lowest id).
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl Scheduler for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick(&mut self, now: u64, work: &BatchWork, fleet: &Fleet) -> Option<usize> {
+        (0..fleet.len())
+            .filter(|&i| fleet.eligible(i, now, work.peak_sram))
+            .min_by_key(|&i| (fleet.devices[i].busy_until, i))
+    }
+}
+
+/// Deadline-aware placement: predict each eligible device's finish time
+/// for this batch with that device's cycle model + clock, count the
+/// member deadlines the prediction would miss, and take the device with
+/// the fewest predicted misses (ties: earliest predicted finish, then
+/// lowest id). Devices without deadline pressure degrade to fastest-
+/// finish placement, which keeps batch-class traffic off the critical
+/// path of interactive tenants.
+#[derive(Debug, Default)]
+pub struct SloAware;
+
+impl Scheduler for SloAware {
+    fn name(&self) -> &'static str {
+        "slo-aware"
+    }
+
+    fn pick(&mut self, now: u64, work: &BatchWork, fleet: &Fleet) -> Option<usize> {
+        (0..fleet.len())
+            .filter(|&i| fleet.eligible(i, now, work.peak_sram))
+            .min_by_key(|&i| {
+                let d = &fleet.devices[i];
+                let finish = now.max(d.busy_until) + d.cfg.timeline_cost(work.counter);
+                let misses = work
+                    .deadlines
+                    .iter()
+                    .filter(|&&dl| finish > dl)
+                    .count();
+                (misses, finish, i)
+            })
+    }
+}
+
+/// Scheduler selector: the configuration-level name of a policy
+/// ([`ServeCfg`](super::ServeCfg) holds one; [`build`](SchedulerKind::build)
+/// instantiates fresh policy state per replay).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    RoundRobin,
+    LeastLoaded,
+    SloAware,
+}
+
+impl SchedulerKind {
+    pub const ALL: [SchedulerKind; 3] = [
+        SchedulerKind::RoundRobin,
+        SchedulerKind::LeastLoaded,
+        SchedulerKind::SloAware,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::RoundRobin => "round-robin",
+            SchedulerKind::LeastLoaded => "least-loaded",
+            SchedulerKind::SloAware => "slo-aware",
+        }
+    }
+
+    /// Parse a CLI spelling (`rr`, `least`, `slo`, or the full names).
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(SchedulerKind::RoundRobin),
+            "least" | "least-loaded" | "leastloaded" => Some(SchedulerKind::LeastLoaded),
+            "slo" | "slo-aware" | "sloaware" => Some(SchedulerKind::SloAware),
+            _ => None,
+        }
+    }
+
+    /// Fresh policy state for one replay.
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::RoundRobin => Box::new(RoundRobin::new()),
+            SchedulerKind::LeastLoaded => Box::new(LeastLoaded),
+            SchedulerKind::SloAware => Box::new(SloAware),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcu::{Counter, InstrClass};
+    use crate::serve::fleet::DeviceCfg;
+
+    fn ctr(alu: u64) -> Counter {
+        let mut c = Counter::new();
+        c.charge(InstrClass::Alu, alu);
+        c
+    }
+
+    fn work<'a>(ready: u64, c: &'a Counter, deadlines: &'a [u64]) -> BatchWork<'a> {
+        BatchWork {
+            ready,
+            counter: c,
+            peak_sram: 1024,
+            images: 1,
+            deadlines,
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_batches() {
+        let mut fleet = Fleet::homogeneous(3, DeviceCfg::stm32f746(), 4);
+        let mut rr = RoundRobin::new();
+        let c = ctr(10);
+        for _ in 0..6 {
+            rr.place(&work(0, &c, &[]), &mut fleet).unwrap();
+        }
+        for d in &fleet.devices {
+            assert_eq!(d.batches, 2, "device {} load", d.id);
+        }
+    }
+
+    #[test]
+    fn round_robin_skips_ineligible_and_backpressures() {
+        let mut fleet = Fleet::homogeneous(1, DeviceCfg::stm32f746(), 2);
+        let mut rr = RoundRobin::new();
+        let c = ctr(100);
+        let cost = DeviceCfg::stm32f746().timeline_cost(&c);
+        rr.place(&work(0, &c, &[]), &mut fleet).unwrap();
+        rr.place(&work(0, &c, &[]), &mut fleet).unwrap();
+        // Depth cap reached at t=0; the third batch must wait until the
+        // first finishes before it may even enqueue.
+        let third = rr.place(&work(0, &c, &[]), &mut fleet).unwrap();
+        assert_eq!(third.start, 2 * cost, "starts after the backlog drains");
+        assert_eq!(third.finish, 3 * cost);
+    }
+
+    #[test]
+    fn sram_gate_rejects_oversized_models() {
+        let mut small = DeviceCfg::stm32f746();
+        small.sram_bytes = 10 * 1024;
+        let mut fleet = Fleet::homogeneous(2, small, 4);
+        let c = ctr(10);
+        let mut rr = RoundRobin::new();
+        let oversized = BatchWork {
+            peak_sram: 64 * 1024,
+            ..work(0, &c, &[])
+        };
+        assert!(rr.place(&oversized, &mut fleet).is_none());
+        assert!(rr.place(&work(0, &c, &[]), &mut fleet).is_some());
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_devices() {
+        let mut fleet = Fleet::homogeneous(2, DeviceCfg::stm32f746(), 8);
+        let mut ll = LeastLoaded;
+        let heavy = ctr(1_000_000);
+        let light = ctr(10);
+        // Load device 0 heavily.
+        let first = ll.place(&work(0, &heavy, &[]), &mut fleet).unwrap();
+        assert_eq!(first.device, 0, "ties break to the lowest id");
+        // The next three light batches all belong on the idle device 1
+        // until its backlog passes device 0's.
+        let second = ll.place(&work(0, &light, &[]), &mut fleet).unwrap();
+        assert_eq!(second.device, 1);
+        let third = ll.place(&work(0, &light, &[]), &mut fleet).unwrap();
+        assert_eq!(third.device, 1, "device 1 still drains earlier");
+    }
+
+    #[test]
+    fn slo_aware_routes_tight_deadlines_to_the_device_that_meets_them() {
+        // One M7 + one M4 on long-multiply-heavy work: the M4 prices
+        // MULL at 4 cycles and runs a slower clock, so the same batch
+        // costs far more shared-timeline cycles there.
+        let m7 = DeviceCfg::stm32f746();
+        let m4 = DeviceCfg::stm32f446();
+        let mut fleet = Fleet::new(vec![m7, m4], 8);
+        let mut c = Counter::new();
+        c.charge(InstrClass::MulLong, 1_000_000);
+        let c7 = m7.timeline_cost(&c);
+        let c4 = m4.timeline_cost(&c);
+        assert!(c4 > 2 * c7, "M4 must cost over 2x on this histogram");
+        let mut slo = SloAware;
+        // First batch: both idle, zero misses everywhere, earliest
+        // finish picks the M7.
+        let no_deadline = [u64::MAX];
+        let first = slo.place(&work(0, &c, &no_deadline), &mut fleet).unwrap();
+        assert_eq!(first.device, 0);
+        // Second batch arrives immediately with a deadline only the
+        // (busy) M7 can still meet: queueing behind the first batch
+        // finishes at 2*c7 <= dl, while the idle M4 would finish at
+        // c4 > dl.
+        let dl = [c4 - 1];
+        let second = slo.place(&work(0, &c, &dl), &mut fleet).unwrap();
+        assert_eq!(second.device, 0, "deadline-tight batch routes to the M7");
+        // No-deadline work degrades to earliest predicted finish.
+        let third = slo.place(&work(0, &c, &no_deadline), &mut fleet).unwrap();
+        let expect = if 3 * c7 <= c4 { 0 } else { 1 };
+        assert_eq!(third.device, expect);
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(SchedulerKind::parse("rr"), Some(SchedulerKind::RoundRobin));
+        assert_eq!(SchedulerKind::parse("least"), Some(SchedulerKind::LeastLoaded));
+        assert_eq!(SchedulerKind::parse("SLO"), Some(SchedulerKind::SloAware));
+        assert_eq!(SchedulerKind::parse("fifo"), None);
+        for kind in SchedulerKind::ALL {
+            assert_eq!(kind.build().name(), kind.name());
+        }
+    }
+}

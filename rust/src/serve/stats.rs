@@ -60,8 +60,11 @@ pub struct ModelStats {
     pub label: String,
     pub requests: u64,
     pub batches: u64,
-    /// Total device cycles spent on this model (incl. batch overhead).
+    /// Total device cycles spent on this model (incl. batch overhead),
+    /// in each executing device's own cycles.
     pub cycles: u64,
+    /// Completed requests that finished past their SLO deadline.
+    pub deadline_misses: u64,
     pub cache_hits: u64,
     pub peak_sram: usize,
     pub flash_bytes: usize,
@@ -84,8 +87,11 @@ impl ModelStats {
 #[derive(Debug, Clone)]
 pub struct DeviceStats {
     pub id: usize,
+    /// Device class label (`m7`, `m4`).
+    pub class: String,
     pub batches: u64,
     pub images: u64,
+    /// Busy time in shared-timeline reference cycles.
     pub busy_cycles: u64,
     /// Busy fraction of the whole makespan.
     pub utilization: f64,
@@ -94,6 +100,8 @@ pub struct DeviceStats {
 /// Everything one trace replay produced.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Scheduling policy that placed the batches.
+    pub scheduler: String,
     /// Requests in the trace.
     pub requests: usize,
     /// Requests that completed an inference.
@@ -102,6 +110,8 @@ pub struct ServeReport {
     pub rejected_queue: u64,
     /// Requests rejected because no device's SRAM fits their model.
     pub rejected_sram: u64,
+    /// Completed requests that finished past their SLO deadline.
+    pub deadline_misses: u64,
     /// Virtual cycle the last batch finished.
     pub makespan_cycles: u64,
     /// Completed requests per second of virtual MCU time.
@@ -126,8 +136,13 @@ impl ServeReport {
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests {}  completed {}  shed(queue) {}  rejected(sram) {}\n",
-            self.requests, self.completed, self.rejected_queue, self.rejected_sram
+            "scheduler {}  requests {}  completed {}  shed(queue) {}  rejected(sram) {}  deadline misses {}\n",
+            self.scheduler,
+            self.requests,
+            self.completed,
+            self.rejected_queue,
+            self.rejected_sram,
+            self.deadline_misses
         ));
         out.push_str(&format!(
             "virtual time {:.3}s  throughput {:.1} req/s  latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms (mean {:.2}ms, max {:.2}ms)\n",
@@ -140,18 +155,19 @@ impl ServeReport {
             self.latency.max_ms
         ));
         out.push_str(&format!(
-            "artifact cache: {} hits / {} misses ({:.0}% hit rate), {} compiles, {} evictions (engine compile count +{})\n\n",
+            "artifact cache: {} hits / {} misses ({:.0}% hit rate), {} shared hits, {} compiles, {} evictions (engine compile count +{})\n\n",
             self.cache.hits,
             self.cache.misses,
             self.cache.hit_rate() * 100.0,
+            self.cache.shared_hits,
             self.cache.compiles,
             self.cache.evictions,
             self.engine_compiles
         ));
 
         let mut mt = Table::new(vec![
-            "model", "requests", "batches", "mean batch", "cycles", "cache hits", "peak SRAM",
-            "flash", "MACs/instr",
+            "model", "requests", "batches", "mean batch", "cycles", "misses", "cache hits",
+            "peak SRAM", "flash", "MACs/instr",
         ]);
         for m in &self.per_model {
             mt.row(vec![
@@ -160,6 +176,7 @@ impl ServeReport {
                 format!("{}", m.batches),
                 format!("{:.2}", m.mean_batch()),
                 format!("{}", m.cycles),
+                format!("{}", m.deadline_misses),
                 format!("{}", m.cache_hits),
                 format!("{:.1}KB", m.peak_sram as f64 / 1024.0),
                 format!("{:.1}KB", m.flash_bytes as f64 / 1024.0),
@@ -169,10 +186,13 @@ impl ServeReport {
         out.push_str(&mt.render());
         out.push('\n');
 
-        let mut dt = Table::new(vec!["device", "batches", "images", "busy cycles", "util"]);
+        let mut dt = Table::new(vec![
+            "device", "class", "batches", "images", "busy cycles", "util",
+        ]);
         for d in &self.per_device {
             dt.row(vec![
                 format!("mcu{}", d.id),
+                d.class.clone(),
                 format!("{}", d.batches),
                 format!("{}", d.images),
                 format!("{}", d.busy_cycles),
@@ -186,6 +206,7 @@ impl ServeReport {
     /// One JSON object for machine consumption (bench trend lines).
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
+        o.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
         o.insert("requests".into(), Json::Num(self.requests as f64));
         o.insert("completed".into(), Json::Num(self.completed as f64));
         o.insert(
@@ -193,6 +214,10 @@ impl ServeReport {
             Json::Num(self.rejected_queue as f64),
         );
         o.insert("rejected_sram".into(), Json::Num(self.rejected_sram as f64));
+        o.insert(
+            "deadline_misses".into(),
+            Json::Num(self.deadline_misses as f64),
+        );
         o.insert(
             "makespan_cycles".into(),
             Json::Num(self.makespan_cycles as f64),
@@ -205,6 +230,10 @@ impl ServeReport {
             Json::Num(self.cache.hit_rate()),
         );
         o.insert("cache_hits".into(), Json::Num(self.cache.hits as f64));
+        o.insert(
+            "cache_shared_hits".into(),
+            Json::Num(self.cache.shared_hits as f64),
+        );
         o.insert(
             "cache_compiles".into(),
             Json::Num(self.cache.compiles as f64),
@@ -224,6 +253,10 @@ impl ServeReport {
                 mo.insert("batches".into(), Json::Num(m.batches as f64));
                 mo.insert("mean_batch".into(), Json::Num(m.mean_batch()));
                 mo.insert("cycles".into(), Json::Num(m.cycles as f64));
+                mo.insert(
+                    "deadline_misses".into(),
+                    Json::Num(m.deadline_misses as f64),
+                );
                 mo.insert("cache_hits".into(), Json::Num(m.cache_hits as f64));
                 mo.insert("peak_sram".into(), Json::Num(m.peak_sram as f64));
                 mo.insert("flash_bytes".into(), Json::Num(m.flash_bytes as f64));
@@ -238,6 +271,7 @@ impl ServeReport {
             .map(|d| {
                 let mut obj = BTreeMap::new();
                 obj.insert("device".into(), Json::Num(d.id as f64));
+                obj.insert("class".into(), Json::Str(d.class.clone()));
                 obj.insert("batches".into(), Json::Num(d.batches as f64));
                 obj.insert("images".into(), Json::Num(d.images as f64));
                 obj.insert("busy_cycles".into(), Json::Num(d.busy_cycles as f64));
@@ -275,10 +309,12 @@ mod tests {
     #[test]
     fn report_renders_and_serializes() {
         let rep = ServeReport {
+            scheduler: "slo-aware".into(),
             requests: 10,
             completed: 9,
             rejected_queue: 1,
             rejected_sram: 0,
+            deadline_misses: 2,
             makespan_cycles: 216_000_000,
             throughput_rps: 9.0,
             latency: LatencySummary::from_cycles(&[216_000, 432_000]),
@@ -287,6 +323,7 @@ mod tests {
                 requests: 9,
                 batches: 3,
                 cycles: 1000,
+                deadline_misses: 2,
                 cache_hits: 8,
                 peak_sram: 2048,
                 flash_bytes: 4096,
@@ -294,6 +331,7 @@ mod tests {
             }],
             per_device: vec![DeviceStats {
                 id: 0,
+                class: "m4".into(),
                 batches: 3,
                 images: 9,
                 busy_cycles: 1000,
@@ -304,6 +342,7 @@ mod tests {
                 misses: 1,
                 compiles: 1,
                 evictions: 0,
+                shared_hits: 0,
             },
             engine_compiles: 1,
             wall_s: 0.01,
@@ -312,9 +351,14 @@ mod tests {
         assert!(txt.contains("throughput"));
         assert!(txt.contains("vgg_tiny/rp-slbc"));
         assert!(txt.contains("mcu0"));
+        assert!(txt.contains("slo-aware"));
+        assert!(txt.contains("m4"));
         let js = rep.to_json().to_string_compact();
         assert!(js.contains("\"throughput_rps\":9"));
         assert!(js.contains("\"per_model\""));
+        assert!(js.contains("\"scheduler\":\"slo-aware\""));
+        assert!(js.contains("\"deadline_misses\":2"));
+        assert!(js.contains("\"class\":\"m4\""));
         assert!((rep.virtual_s() - 1.0).abs() < 1e-9);
         assert_eq!(rep.per_model[0].mean_batch(), 3.0);
     }

@@ -1,15 +1,88 @@
-//! Deterministic synthetic request traces.
+//! Deterministic synthetic request traces, with latency objectives and
+//! file round-tripping.
 //!
-//! A trace is a sequence of (arrival cycle, model, input seed) triples:
-//! arrivals follow a Poisson process (exponential inter-arrival times at
-//! a configurable mean), the model of each request is drawn from a
-//! weighted mix, and every request carries a fork of the trace PRNG so
-//! its input image is reproducible independently of processing order.
+//! A trace is a sequence of (arrival cycle, model, SLO class, input seed)
+//! tuples: arrivals follow a Poisson process (exponential inter-arrival
+//! times at a configurable mean), the model of each request is drawn from
+//! a weighted — optionally Zipf-skewed — tenant mix, and every request
+//! carries a fork of the trace PRNG so its input image is reproducible
+//! independently of processing order. Each request also carries an
+//! [`SloClass`] that fixes its priority and absolute deadline; class
+//! draws use a PRNG stream separate from the arrival stream, so enabling
+//! deadlines never perturbs arrival times.
+//!
+//! Traces round-trip through JSON ([`trace_to_json`] / [`trace_from_json`],
+//! [`save_trace`] / [`load_trace`]), so `serve --trace-file x.json`
+//! replays a recorded trace deterministically on any fleet/scheduler
+//! combination.
 
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
 use crate::util::prng::Rng;
+use crate::Result;
+
+/// Latency objective class of one request. Priorities order the classes
+/// (higher = more urgent); deadlines are relative to arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloClass {
+    /// Tight interactive objective (20 ms).
+    Interactive,
+    /// Standard online objective (100 ms).
+    Standard,
+    /// Best-effort batch work: no deadline.
+    Batch,
+}
+
+impl SloClass {
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interactive" => Some(SloClass::Interactive),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Scheduling priority (higher = more urgent).
+    pub fn priority(&self) -> u8 {
+        match self {
+            SloClass::Interactive => 2,
+            SloClass::Standard => 1,
+            SloClass::Batch => 0,
+        }
+    }
+
+    /// Deadline relative to arrival, in 216 MHz reference cycles
+    /// (`u64::MAX` = none).
+    pub fn relative_deadline_cycles(&self) -> u64 {
+        match self {
+            // 20 ms and 100 ms at the 216 MHz reference clock.
+            SloClass::Interactive => 4_320_000,
+            SloClass::Standard => 21_600_000,
+            SloClass::Batch => u64::MAX,
+        }
+    }
+
+    /// Absolute deadline for a request arriving at `arrival`.
+    pub fn deadline_at(&self, arrival: u64) -> u64 {
+        arrival.saturating_add(self.relative_deadline_cycles())
+    }
+}
 
 /// One request in a trace.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TraceRequest {
     pub id: usize,
     /// Arrival time in virtual cycles (non-decreasing along the trace).
@@ -18,6 +91,29 @@ pub struct TraceRequest {
     pub key_idx: usize,
     /// Seed for this request's synthetic input image.
     pub seed: u64,
+    /// Latency objective class.
+    pub class: SloClass,
+    /// Absolute deadline in timeline cycles (`u64::MAX` = none).
+    pub deadline: u64,
+}
+
+impl TraceRequest {
+    /// A best-effort request (no deadline) — the pre-SLO trace shape.
+    pub fn best_effort(id: usize, arrival: u64, key_idx: usize, seed: u64) -> TraceRequest {
+        TraceRequest {
+            id,
+            arrival,
+            key_idx,
+            seed,
+            class: SloClass::Batch,
+            deadline: u64::MAX,
+        }
+    }
+
+    /// Scheduling priority of this request's class.
+    pub fn priority(&self) -> u8 {
+        self.class.priority()
+    }
 }
 
 /// Trace-generation parameters.
@@ -28,8 +124,17 @@ pub struct TraceCfg {
     /// 2_160_000 cycles ≈ one request every 10 ms ≈ 100 req/s offered.
     pub mean_gap_cycles: u64,
     /// Relative traffic weight per workload (index-aligned; empty =
-    /// uniform).
+    /// uniform unless `tenant_skew` is set).
     pub weights: Vec<f64>,
+    /// Zipf-style tenant skew: when `weights` is empty and this is > 0,
+    /// tenant `i` receives weight `1 / (i+1)^tenant_skew` — a few heavy
+    /// tenants and a long tail, the realistic multi-tenant shape.
+    pub tenant_skew: f64,
+    /// Relative draw weight of each [`SloClass`] in
+    /// [`SloClass::ALL`] order (interactive, standard, batch). Empty =
+    /// every request is best-effort `Batch` (no deadlines), which keeps
+    /// legacy traces byte-identical.
+    pub slo_weights: Vec<f64>,
     pub seed: u64,
 }
 
@@ -39,24 +144,64 @@ impl TraceCfg {
             requests,
             mean_gap_cycles,
             weights: Vec::new(),
+            tenant_skew: 0.0,
+            slo_weights: Vec::new(),
             seed,
         }
     }
+
+    /// Builder: Zipf tenant skew.
+    pub fn with_skew(mut self, skew: f64) -> TraceCfg {
+        self.tenant_skew = skew;
+        self
+    }
+
+    /// Builder: deadline-class mix (interactive, standard, batch).
+    pub fn with_slo(mut self, weights: [f64; 3]) -> TraceCfg {
+        self.slo_weights = weights.to_vec();
+        self
+    }
+}
+
+/// Weighted index draw: `pick` uniform in `[0, sum)` walks the weights.
+fn weighted_pick(weights: &[f64], u: f64) -> usize {
+    let wsum: f64 = weights.iter().sum();
+    let mut pick = u * wsum;
+    let mut idx = weights.len() - 1;
+    for (i, w) in weights.iter().enumerate() {
+        if pick < *w {
+            idx = i;
+            break;
+        }
+        pick -= w;
+    }
+    idx
 }
 
 /// Generate a synthetic trace over `num_keys` workloads.
 pub fn synth_trace(cfg: &TraceCfg, num_keys: usize) -> Vec<TraceRequest> {
     assert!(num_keys >= 1, "trace needs at least one workload");
-    let weights: Vec<f64> = if cfg.weights.is_empty() {
-        vec![1.0; num_keys]
-    } else {
+    let weights: Vec<f64> = if !cfg.weights.is_empty() {
         assert_eq!(cfg.weights.len(), num_keys, "one weight per workload");
         cfg.weights.clone()
+    } else if cfg.tenant_skew > 0.0 {
+        (0..num_keys)
+            .map(|i| 1.0 / ((i + 1) as f64).powf(cfg.tenant_skew))
+            .collect()
+    } else {
+        vec![1.0; num_keys]
     };
     let wsum: f64 = weights.iter().sum();
     assert!(wsum > 0.0, "weights must not all be zero");
+    if !cfg.slo_weights.is_empty() {
+        assert_eq!(cfg.slo_weights.len(), SloClass::ALL.len(), "one weight per SLO class");
+        assert!(cfg.slo_weights.iter().sum::<f64>() > 0.0, "SLO weights must not all be zero");
+    }
 
     let mut rng = Rng::new(cfg.seed);
+    // Separate stream for class draws: enabling deadlines must not
+    // perturb the arrival/seed stream of an existing trace config.
+    let mut class_rng = Rng::new(cfg.seed ^ 0x510_C1A5_5E5_u64);
     let mut t = 0u64;
     (0..cfg.requests)
         .map(|id| {
@@ -64,24 +209,99 @@ pub fn synth_trace(cfg: &TraceCfg, num_keys: usize) -> Vec<TraceRequest> {
             let u = (rng.f32() as f64).max(1e-7);
             let gap = (-u.ln() * cfg.mean_gap_cycles as f64) as u64;
             t = t.saturating_add(gap);
-            // Weighted model pick.
-            let mut pick = rng.f32() as f64 * wsum;
-            let mut key_idx = num_keys - 1;
-            for (i, w) in weights.iter().enumerate() {
-                if pick < *w {
-                    key_idx = i;
-                    break;
-                }
-                pick -= w;
-            }
+            let key_idx = weighted_pick(&weights, rng.f32() as f64);
+            let class = if cfg.slo_weights.is_empty() {
+                SloClass::Batch
+            } else {
+                SloClass::ALL[weighted_pick(&cfg.slo_weights, class_rng.f32() as f64)]
+            };
             TraceRequest {
                 id,
                 arrival: t,
                 key_idx,
                 seed: rng.next_u64(),
+                class,
+                deadline: class.deadline_at(t),
             }
         })
         .collect()
+}
+
+fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    let f = v
+        .get(key)
+        .ok_or_else(|| anyhow::anyhow!("trace request missing `{key}`"))?;
+    match f {
+        Json::Num(n) => Ok(*n as u64),
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("trace `{key}` = `{s}`: {e}")),
+        _ => anyhow::bail!("trace `{key}` must be a number or numeric string"),
+    }
+}
+
+/// Serialize a trace to JSON. `arrival` fits a JSON double for any
+/// realistic horizon; full-range `u64` fields (`seed`, `deadline`) are
+/// written as decimal strings so they round-trip losslessly.
+pub fn trace_to_json(trace: &[TraceRequest]) -> Json {
+    let requests: Vec<Json> = trace
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("id".into(), Json::Num(r.id as f64));
+            o.insert("arrival".into(), Json::Num(r.arrival as f64));
+            o.insert("key_idx".into(), Json::Num(r.key_idx as f64));
+            o.insert("seed".into(), Json::Str(r.seed.to_string()));
+            o.insert("class".into(), Json::Str(r.class.name().into()));
+            o.insert("deadline".into(), Json::Str(r.deadline.to_string()));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut o = BTreeMap::new();
+    o.insert("version".into(), Json::Num(1.0));
+    o.insert("requests".into(), Json::Arr(requests));
+    Json::Obj(o)
+}
+
+/// Parse a trace from its JSON form.
+pub fn trace_from_json(js: &Json) -> Result<Vec<TraceRequest>> {
+    let requests = js
+        .get("requests")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("trace file has no `requests` array"))?;
+    requests
+        .iter()
+        .map(|v| {
+            let class_name = v
+                .get("class")
+                .and_then(|c| c.as_str())
+                .unwrap_or("batch");
+            let class = SloClass::parse(class_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown SLO class `{class_name}`"))?;
+            Ok(TraceRequest {
+                id: u64_field(v, "id")? as usize,
+                arrival: u64_field(v, "arrival")?,
+                key_idx: u64_field(v, "key_idx")? as usize,
+                seed: u64_field(v, "seed")?,
+                class,
+                deadline: u64_field(v, "deadline")?,
+            })
+        })
+        .collect()
+}
+
+/// Write a trace to `path` as JSON.
+pub fn save_trace<P: AsRef<Path>>(path: P, trace: &[TraceRequest]) -> Result<()> {
+    std::fs::write(path.as_ref(), trace_to_json(trace).to_string_compact())?;
+    Ok(())
+}
+
+/// Load a trace previously written by [`save_trace`] (or hand-recorded
+/// in the same schema).
+pub fn load_trace<P: AsRef<Path>>(path: P) -> Result<Vec<TraceRequest>> {
+    let src = std::fs::read_to_string(path.as_ref())?;
+    let js = Json::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?;
+    trace_from_json(&js)
 }
 
 #[cfg(test)]
@@ -95,13 +315,13 @@ mod tests {
         let b = synth_trace(&cfg, 2);
         assert_eq!(a.len(), 50);
         for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.arrival, y.arrival);
-            assert_eq!(x.key_idx, y.key_idx);
-            assert_eq!(x.seed, y.seed);
+            assert_eq!(x, y);
         }
         for w in a.windows(2) {
             assert!(w[0].arrival <= w[1].arrival, "arrivals must be sorted");
         }
+        // No SLO mix configured: everything is best-effort.
+        assert!(a.iter().all(|r| r.class == SloClass::Batch && r.deadline == u64::MAX));
     }
 
     #[test]
@@ -134,5 +354,64 @@ mod tests {
         seeds.sort_unstable();
         seeds.dedup();
         assert_eq!(seeds.len(), 20, "every request gets its own input seed");
+    }
+
+    #[test]
+    fn tenant_skew_concentrates_traffic() {
+        let cfg = TraceCfg::new(4000, 1000, 5).with_skew(1.2);
+        let tr = synth_trace(&cfg, 4);
+        let counts: Vec<usize> = (0..4)
+            .map(|k| tr.iter().filter(|r| r.key_idx == k).count())
+            .collect();
+        assert!(counts[0] > counts[1] && counts[1] > counts[3], "skew {counts:?}");
+        assert!(counts[0] as f64 / tr.len() as f64 > 0.35, "head tenant share");
+    }
+
+    #[test]
+    fn slo_mix_draws_every_class_without_perturbing_arrivals() {
+        let base = TraceCfg::new(600, 50_000, 11);
+        let plain = synth_trace(&base, 2);
+        let slo = synth_trace(&base.clone().with_slo([2.0, 1.0, 1.0]), 2);
+        for (p, s) in plain.iter().zip(&slo) {
+            assert_eq!(p.arrival, s.arrival, "class draws must not shift arrivals");
+            assert_eq!(p.key_idx, s.key_idx);
+            assert_eq!(p.seed, s.seed);
+        }
+        for class in SloClass::ALL {
+            assert!(
+                slo.iter().filter(|r| r.class == class).count() > 0,
+                "class {} never drawn",
+                class.name()
+            );
+        }
+        // Deadlines are consistent with class + arrival.
+        for r in &slo {
+            assert_eq!(r.deadline, r.class.deadline_at(r.arrival));
+        }
+        let interactive = slo.iter().find(|r| r.class == SloClass::Interactive).unwrap();
+        assert_eq!(interactive.deadline, interactive.arrival + 4_320_000);
+        assert_eq!(interactive.priority(), 2);
+    }
+
+    #[test]
+    fn trace_round_trips_through_json() {
+        let cfg = TraceCfg::new(40, 75_000, 13).with_skew(0.8).with_slo([1.0, 1.0, 1.0]);
+        let tr = synth_trace(&cfg, 3);
+        let js = trace_to_json(&tr);
+        let back = trace_from_json(&js).unwrap();
+        assert_eq!(tr, back, "JSON round-trip must be lossless");
+        // And through a file (including full-range u64 seeds).
+        let path = std::env::temp_dir().join("mcu_mixq_trace_roundtrip.json");
+        save_trace(&path, &tr).unwrap();
+        let loaded = load_trace(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(tr, loaded);
+    }
+
+    #[test]
+    fn trace_from_json_rejects_garbage() {
+        assert!(trace_from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(r#"{"requests":[{"id":0,"arrival":5,"key_idx":0,"seed":"1","class":"warp","deadline":"9"}]}"#).unwrap();
+        assert!(trace_from_json(&bad).is_err());
     }
 }
