@@ -13,6 +13,14 @@
 //!    Emits one JSON `rows` array (throughput, p95, deadline misses per
 //!    cell) and asserts the SLO-aware policy strictly reduces deadline
 //!    misses vs round-robin on the heterogeneous fleet.
+//! 3. **Overload matrix** (overload-resilience PR): a bursty trace
+//!    (32-deep synchronized arrival spikes) against a tightly bounded
+//!    queue on the m7:2,m4:2 fleet, replayed under FIFO shedding and
+//!    under class-aware admission (± preemption + work stealing). Emits
+//!    an `overload` JSON array (shed-inclusive per-class misses,
+//!    preempt/split/migration counters) and asserts class-aware
+//!    admission + preemption strictly cut interactive-class misses vs
+//!    FIFO shedding.
 //!
 //! Regenerate with `cargo bench --bench serve_throughput`.
 
@@ -20,7 +28,8 @@ use std::collections::BTreeMap;
 
 use mcu_mixq::ops::Method;
 use mcu_mixq::serve::{
-    self, BatcherCfg, DeviceCfg, SchedulerKind, ServeCfg, ServeReport, TraceCfg, Workload,
+    self, AdmissionKind, BatcherCfg, DeviceCfg, SchedulerKind, ServeCfg, ServeReport, TraceCfg,
+    Workload,
 };
 use mcu_mixq::util::bench::Bench;
 use mcu_mixq::util::json::Json;
@@ -57,6 +66,7 @@ fn main() -> mcu_mixq::Result<()> {
             max_batch: 1,
             max_wait_cycles: 1,
             max_queue: cfg.batcher.max_queue,
+            ..BatcherCfg::default()
         },
         ..cfg.clone()
     };
@@ -130,6 +140,90 @@ fn main() -> mcu_mixq::Result<()> {
     }
     println!();
 
+    // ------------------------------------------------------------------
+    // Overload matrix: 32-deep synchronized arrival bursts against a
+    // queue bounded at 8 on the heterogeneous fleet. FIFO shedding
+    // drops whatever arrives late — including interactive deadlines —
+    // while class-aware admission evicts best-effort work first, and
+    // preemption + stealing keep the surviving interactive requests
+    // ahead of their deadlines.
+    // ------------------------------------------------------------------
+    let burst_trace = serve::synth_trace(
+        &TraceCfg::new(requests, 432_000, 44)
+            .with_skew(1.0)
+            .with_slo([0.5, 0.2, 0.3])
+            .with_burst(64, 32),
+        ws.len(),
+    );
+    let overload_fleet = vec![
+        DeviceCfg::stm32f746(),
+        DeviceCfg::stm32f746(),
+        DeviceCfg::stm32f446(),
+        DeviceCfg::stm32f446(),
+    ];
+    let overload_cells: [(&str, AdmissionKind, bool, bool); 3] = [
+        ("fifo", AdmissionKind::Fifo, false, false),
+        ("class", AdmissionKind::ClassAware, false, false),
+        ("class+preempt+steal", AdmissionKind::ClassAware, true, true),
+    ];
+    let mut overload_rows: Vec<Json> = Vec::new();
+    let mut interactive_misses: BTreeMap<&'static str, u64> = BTreeMap::new();
+    println!("overload matrix (m7:2,m4:2, burst trace, queue<=8):");
+    for (label, admission, preempt, steal) in overload_cells {
+        let cell_cfg = ServeCfg {
+            fleet: overload_fleet.clone(),
+            scheduler: SchedulerKind::SloAware,
+            batcher: BatcherCfg {
+                max_batch: 16,
+                max_wait_cycles: 432_000,
+                max_queue: 8,
+                admission,
+                preempt,
+            },
+            steal,
+            ..ServeCfg::default()
+        };
+        let rep = serve::run_trace(&ws, &burst_trace, &cell_cfg)?;
+        assert_eq!(
+            rep.completed as u64 + rep.rejected_queue + rep.rejected_sram,
+            burst_trace.len() as u64,
+            "overload cell `{label}` must conserve requests"
+        );
+        println!(
+            "  {:>19}  completed {:>3}  shed int/std/batch {:>3}/{:>3}/{:>3}  interactive misses {:>3}  preempt {:>3}  splits {:>3}  migrations {:>3}",
+            label,
+            rep.completed,
+            rep.shed_by_class[0],
+            rep.shed_by_class[1],
+            rep.shed_by_class[2],
+            rep.class_misses(0),
+            rep.preempt_flushes,
+            rep.batch_splits,
+            rep.migrations
+        );
+        interactive_misses.insert(label, rep.class_misses(0));
+        let mut row = BTreeMap::new();
+        row.insert("admission".into(), Json::Str(label.into()));
+        row.insert("steal".into(), Json::Num(if steal { 1.0 } else { 0.0 }));
+        row.insert("preempt".into(), Json::Num(if preempt { 1.0 } else { 0.0 }));
+        row.insert("completed".into(), Json::Num(rep.completed as f64));
+        row.insert("shed_interactive".into(), Json::Num(rep.shed_by_class[0] as f64));
+        row.insert("shed_standard".into(), Json::Num(rep.shed_by_class[1] as f64));
+        row.insert("shed_batch".into(), Json::Num(rep.shed_by_class[2] as f64));
+        row.insert(
+            "interactive_misses".into(),
+            Json::Num(rep.class_misses(0) as f64),
+        );
+        row.insert("total_misses".into(), Json::Num(rep.total_misses() as f64));
+        row.insert("preempt_flushes".into(), Json::Num(rep.preempt_flushes as f64));
+        row.insert("batch_splits".into(), Json::Num(rep.batch_splits as f64));
+        row.insert("migrations".into(), Json::Num(rep.migrations as f64));
+        row.insert("p95_ms".into(), Json::Num(rep.latency.p95_ms));
+        row.insert("throughput_rps".into(), Json::Num(rep.throughput_rps));
+        overload_rows.push(Json::Obj(row));
+    }
+    println!();
+
     // Host-side simulation speed (wall clock), for the record.
     let t = Bench::new(0, 3).run("replay", || {
         serve::run_trace(&ws, &trace, &cfg).expect("replay")
@@ -153,6 +247,7 @@ fn main() -> mcu_mixq::Result<()> {
     o.insert("batch_speedup".into(), Json::Num(batch_speedup));
     o.insert("sim_wall_ms".into(), Json::Num(t.mean_ns / 1e6));
     o.insert("rows".into(), Json::Arr(rows));
+    o.insert("overload".into(), Json::Arr(overload_rows));
     println!("{}", Json::Obj(o).to_string_compact());
 
     // Qualitative guards the trajectory must keep.
@@ -193,6 +288,20 @@ fn main() -> mcu_mixq::Result<()> {
     assert!(
         slo < rr,
         "slo-aware must strictly reduce deadline misses ({slo} vs {rr})"
+    );
+    // Overload-resilience acceptance: under the burst trace, FIFO
+    // shedding must actually lose interactive deadlines, and class-aware
+    // admission + preemption (+ stealing) must strictly cut the
+    // shed-inclusive interactive miss count.
+    let fifo_int = interactive_misses["fifo"];
+    let resilient_int = interactive_misses["class+preempt+steal"];
+    assert!(
+        fifo_int > 0,
+        "burst scenario must cost FIFO interactive deadlines (got {fifo_int})"
+    );
+    assert!(
+        resilient_int < fifo_int,
+        "class admission + preemption must strictly cut interactive misses ({resilient_int} vs {fifo_int})"
     );
     Ok(())
 }

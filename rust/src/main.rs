@@ -26,7 +26,9 @@ use mcu_mixq::ops::Method;
 use mcu_mixq::perf::{calibrate_alpha_beta, PerfModel};
 use mcu_mixq::quant::BitConfig;
 use mcu_mixq::runtime::{lit, ArtifactStore, Runtime};
-use mcu_mixq::serve::{self, DeviceCfg, SchedulerKind, ServeCfg, ServeReport, TraceCfg, Workload};
+use mcu_mixq::serve::{
+    self, AdmissionKind, DeviceCfg, SchedulerKind, ServeCfg, ServeReport, TraceCfg, Workload,
+};
 use mcu_mixq::util::bench::Table;
 use mcu_mixq::util::cli::Args;
 use mcu_mixq::Result;
@@ -83,8 +85,9 @@ fn print_help() {
          \x20 serve                         replay a request trace on an MCU fleet\n\
          \x20          [--mix backbone:method:bits[:weight],...]\n\
          \x20          [--fleet m7:4,m4:4] [--sched rr|least|slo]\n\
+         \x20          [--admission fifo|class] [--preempt] [--steal]\n\
          \x20          [--requests N] [--devices N] [--mean-gap-ms F]\n\
-         \x20          [--skew F] [--slo-mix I,S,B]\n\
+         \x20          [--skew F] [--slo-mix I,S,B] [--burst P,S]\n\
          \x20          [--trace-file IN.json] [--dump-trace OUT.json]\n\
          \x20          [--batch N] [--wait-ms F] [--queue N] [--depth N]\n\
          \x20          [--cache N] [--seed S] [--json]\n\
@@ -371,6 +374,19 @@ fn parse_slo_mix(spec: &str) -> Result<Vec<f64>> {
     Ok(v)
 }
 
+/// Parse a `--burst` spec: `period,size` — every `period` requests,
+/// `size` extra requests arrive simultaneously with the period leader.
+fn parse_burst(spec: &str) -> Result<(usize, usize)> {
+    let (p, s) = spec
+        .split_once(',')
+        .ok_or_else(|| anyhow::anyhow!("--burst wants period,size (e.g. 64,32)"))?;
+    let period: usize = p.trim().parse()?;
+    let size: usize = s.trim().parse()?;
+    anyhow::ensure!(period > 0, "--burst period must be positive");
+    anyhow::ensure!(size >= 1 && size < period, "--burst size must be in 1..period");
+    Ok((period, size))
+}
+
 /// Shared serve/bench-serve scenario runner: build the mix + fleet +
 /// scheduler + trace from args (with per-command defaults), replay,
 /// print the report tables.
@@ -390,6 +406,11 @@ fn run_serve_scenario(
     let sched_spec = args.str_or("sched", "rr");
     cfg.scheduler = SchedulerKind::parse(&sched_spec)
         .ok_or_else(|| anyhow::anyhow!("unknown scheduler `{sched_spec}` (rr|least|slo)"))?;
+    let adm_spec = args.str_or("admission", "fifo");
+    cfg.batcher.admission = AdmissionKind::parse(&adm_spec)
+        .ok_or_else(|| anyhow::anyhow!("unknown admission policy `{adm_spec}` (fifo|class)"))?;
+    cfg.batcher.preempt = args.bool_or("preempt", false);
+    cfg.steal = args.bool_or("steal", false);
     cfg.max_queue_depth = args.usize_or("depth", cfg.max_queue_depth);
     cfg.cache_capacity = args.usize_or("cache", cfg.cache_capacity);
     cfg.batcher.max_batch = args.usize_or("batch", cfg.batcher.max_batch);
@@ -425,6 +446,12 @@ fn run_serve_scenario(
             if let Some(slo) = args.get("slo-mix") {
                 tcfg.slo_weights = parse_slo_mix(slo)?;
             }
+            if let Some(burst) = args.get("burst") {
+                // parse_burst pre-validates with a friendly error; the
+                // builder's own asserts stay the single semantic gate.
+                let (period, size) = parse_burst(burst)?;
+                tcfg = tcfg.with_burst(period, size);
+            }
             serve::synth_trace(&tcfg, workloads.len())
         }
     };
@@ -439,12 +466,15 @@ fn run_serve_scenario(
         .filter(|d| d.class == serve::DeviceClass::M4)
         .count();
     println!(
-        "serving {} model(s) on {} device(s) ({} m7 + {} m4, {} scheduler): {} requests, batch<= {}, wait {:.2}ms\n",
+        "serving {} model(s) on {} device(s) ({} m7 + {} m4, {} scheduler, {} admission{}{}): {} requests, batch<= {}, wait {:.2}ms\n",
         workloads.len(),
         cfg.fleet.len(),
         cfg.fleet.len() - m4s,
         m4s,
         cfg.scheduler.name(),
+        cfg.batcher.admission.name(),
+        if cfg.batcher.preempt { ", preempt" } else { "" },
+        if cfg.steal { ", steal" } else { "" },
         trace.len(),
         cfg.batcher.max_batch,
         wait_ms
@@ -479,6 +509,15 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         "bench-serve needs >= 4 devices"
     );
     anyhow::ensure!(report.completed > 0, "no request completed");
+    anyhow::ensure!(
+        report.completed as u64 + report.rejected_queue + report.rejected_sram
+            == report.requests as u64,
+        "request conservation violated ({} completed + {} shed + {} sram != {})",
+        report.completed,
+        report.rejected_queue,
+        report.rejected_sram,
+        report.requests
+    );
     anyhow::ensure!(
         report.engine_compiles == report.cache.compiles,
         "every engine compilation must come from the registry ({} vs {})",

@@ -1,16 +1,42 @@
-//! Bounded request queue with per-model dynamic batching.
+//! Bounded request queue with per-model dynamic batching, class-aware
+//! admission and deadline-driven preemption.
 //!
 //! Requests for the same [`ModelKey`](super::ModelKey) that arrive within
 //! a waiting window are coalesced into one device invocation, amortizing
 //! the per-invocation overhead (scheduler entry, activation-arena setup,
 //! weight-pointer DMA programming) across the batch. Two admission limits
-//! apply: the global bounded queue (`max_queue`, arrivals beyond it are
-//! shed) and the per-batch size cap (`max_batch`, a full queue flushes
-//! immediately instead of waiting out the window).
+//! apply: the global bounded queue (`max_queue`) and the per-batch size
+//! cap (`max_batch`, a full queue flushes immediately instead of waiting
+//! out the window).
+//!
+//! Overload behavior is policy-selectable ([`AdmissionKind`]):
+//!
+//! * [`Fifo`](AdmissionKind::Fifo) — the original discipline: arrivals
+//!   beyond `max_queue` are shed regardless of SLO class.
+//! * [`ClassAware`](AdmissionKind::ClassAware) — a full queue sheds
+//!   best-effort/batch-class work first: an arriving request evicts the
+//!   lowest-priority (then youngest) queued request strictly below its
+//!   own class, and is only shed itself when no such victim exists.
+//!
+//! Sheds are counted per class (and per deadline-carrying class), so a
+//! shed request with an SLO deadline is never silently dropped from miss
+//! accounting.
+//!
+//! With `preempt` enabled the batcher additionally reacts to deadlines:
+//! an arriving request whose deadline cannot survive waiting out the
+//! window (given the per-model cost estimate installed via
+//! [`set_est_cost`](Batcher::set_est_cost)) triggers a *preemptive
+//! flush* — the next [`pop_due`](Batcher::pop_due) pulls it, alone or
+//! with same-or-higher-class partners, ahead of the window. Flushed
+//! batches that mix deadline-critical and deferrable members can further
+//! be split in two by [`split_critical`](Batcher::split_critical), at
+//! the price of one extra per-invocation overhead for the deferred half.
 //!
 //! Everything is virtual-time: a batch's `ready` cycle is the moment its
-//! flush condition held — the arrival that filled it, or the oldest
-//! member's deadline — so downstream scheduling is exact and
+//! flush condition held — the arrival that filled it, the oldest
+//! member's window expiry (clamped to the last member's arrival, so a
+//! batch is never ready before a member exists), or the arrival that
+//! triggered a preemptive flush — so downstream scheduling is exact and
 //! deterministic.
 
 use std::collections::VecDeque;
@@ -19,6 +45,49 @@ use std::collections::VecDeque;
 /// entry, arena setup and DMA programming — the fixed cost dynamic
 /// batching amortizes. ≈50 µs at 216 MHz.
 pub const BATCH_OVERHEAD_CYCLES: u64 = 10_800;
+
+/// Class index (0 = interactive, 1 = standard, 2 = batch/best-effort)
+/// from a scheduling priority (2 = interactive .. 0 = best effort).
+/// Shed and miss accounting is reported in class-index order.
+pub fn class_index(priority: u8) -> usize {
+    2usize.saturating_sub(priority.min(2) as usize)
+}
+
+/// Overload admission policy of the bounded queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionKind {
+    /// Shed whatever arrives once the queue is full, regardless of class.
+    Fifo,
+    /// Shed best-effort/batch-class work first: a full queue evicts the
+    /// lowest-priority queued request strictly below the arrival's class.
+    ClassAware,
+}
+
+impl Default for AdmissionKind {
+    fn default() -> Self {
+        AdmissionKind::Fifo
+    }
+}
+
+impl AdmissionKind {
+    pub const ALL: [AdmissionKind; 2] = [AdmissionKind::Fifo, AdmissionKind::ClassAware];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionKind::Fifo => "fifo",
+            AdmissionKind::ClassAware => "class",
+        }
+    }
+
+    /// Parse a CLI spelling (`fifo`, `class`, `class-aware`).
+    pub fn parse(s: &str) -> Option<AdmissionKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fifo" => Some(AdmissionKind::Fifo),
+            "class" | "class-aware" | "classaware" => Some(AdmissionKind::ClassAware),
+            _ => None,
+        }
+    }
+}
 
 /// Batching policy.
 #[derive(Debug, Clone)]
@@ -30,6 +99,11 @@ pub struct BatcherCfg {
     pub max_wait_cycles: u64,
     /// Bounded total queue: arrivals beyond this are shed.
     pub max_queue: usize,
+    /// Overload shedding discipline.
+    pub admission: AdmissionKind,
+    /// Deadline-driven preemption: flush window-doomed requests ahead of
+    /// the window and allow critical/deferrable batch splitting.
+    pub preempt: bool,
 }
 
 impl Default for BatcherCfg {
@@ -38,6 +112,8 @@ impl Default for BatcherCfg {
             max_batch: 8,
             max_wait_cycles: 432_000,
             max_queue: 64,
+            admission: AdmissionKind::Fifo,
+            preempt: false,
         }
     }
 }
@@ -79,8 +155,24 @@ impl ReadyBatch {
 pub struct Batcher {
     cfg: BatcherCfg,
     queues: Vec<VecDeque<PendingRequest>>,
-    /// Requests shed by the bounded queue.
+    /// Per-key estimated timeline cost `(batch overhead, per image)` on
+    /// the fastest fleet device — the preemption doom test's yardstick.
+    est: Vec<Option<(u64, u64)>>,
+    /// Keys holding a window-doomed request: the next `pop_due` flushes
+    /// that class (and above) ahead of the window. Stores the doomed
+    /// request's priority.
+    urgent: Vec<Option<u8>>,
+    /// Requests shed by the bounded queue (either discipline).
     pub shed: u64,
+    /// Sheds by class (interactive, standard, batch — `class_index`).
+    pub shed_by_class: [u64; 3],
+    /// Deadline-carrying sheds by class: every one of these is an SLO
+    /// miss the completed-request accounting would otherwise hide.
+    pub shed_deadline_by_class: [u64; 3],
+    /// Preemptive (ahead-of-window) flushes performed.
+    pub preempt_flushes: u64,
+    /// Flushed batches split into critical + deferrable halves.
+    pub splits: u64,
 }
 
 impl Batcher {
@@ -90,7 +182,13 @@ impl Batcher {
         Batcher {
             cfg,
             queues: (0..num_keys).map(|_| VecDeque::new()).collect(),
+            est: vec![None; num_keys],
+            urgent: vec![None; num_keys],
             shed: 0,
+            shed_by_class: [0; 3],
+            shed_deadline_by_class: [0; 3],
+            preempt_flushes: 0,
+            splits: 0,
         }
     }
 
@@ -99,28 +197,152 @@ impl Batcher {
         self.queues.iter().map(|q| q.len()).sum()
     }
 
-    /// Admit a request, or shed it when the bounded queue is full.
-    /// Returns whether the request was admitted. Flush due batches (via
+    /// Install the estimated timeline cost of serving `key_idx`: the
+    /// per-batch base overhead and the per-image increment, both on the
+    /// fastest fleet device. Enables the preemption doom test.
+    pub fn set_est_cost(&mut self, key_idx: usize, base: u64, per_image: u64) {
+        self.est[key_idx] = Some((base, per_image));
+    }
+
+    fn count_shed(&mut self, r: &PendingRequest) {
+        self.shed += 1;
+        let c = class_index(r.priority);
+        self.shed_by_class[c] += 1;
+        if r.deadline != u64::MAX {
+            self.shed_deadline_by_class[c] += 1;
+        }
+    }
+
+    /// Lowest-priority queued request strictly below `priority` —
+    /// the class-aware eviction victim. Ties prefer the youngest
+    /// (latest-arrival, then highest-id) request: it has sunk the least
+    /// waiting time.
+    fn victim_below(&self, priority: u8) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize, u8, u64, usize)> = None;
+        for (k, q) in self.queues.iter().enumerate() {
+            for (pos, r) in q.iter().enumerate() {
+                if r.priority >= priority {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((_, _, bp, ba, bid)) => {
+                        (r.priority, std::cmp::Reverse(r.arrival), std::cmp::Reverse(r.id))
+                            < (bp, std::cmp::Reverse(ba), std::cmp::Reverse(bid))
+                    }
+                };
+                if better {
+                    best = Some((k, pos, r.priority, r.arrival, r.id));
+                }
+            }
+        }
+        best.map(|(k, pos, ..)| (k, pos))
+    }
+
+    /// Would waiting out the window doom this request's deadline? Uses
+    /// the optimistic per-key cost estimate (fastest device, current
+    /// co-batch size); without an estimate the test is inert. An arrival
+    /// that *fills* the batch is never doomed — the full batch flushes
+    /// right now anyway, carrying every member, so a class-filtered
+    /// preemptive flush would only strand lower-class partners.
+    fn window_doomed(&self, req: &PendingRequest) -> bool {
+        if req.deadline == u64::MAX {
+            return false;
+        }
+        let Some((base, per_image)) = self.est[req.key_idx] else {
+            return false;
+        };
+        let q = &self.queues[req.key_idx];
+        if q.len() + 1 >= self.cfg.max_batch {
+            return false;
+        }
+        let oldest = q.front().map_or(req.arrival, |r| r.arrival);
+        let expiry = oldest.saturating_add(self.cfg.max_wait_cycles);
+        let members = q.len() as u64 + 1;
+        expiry
+            .saturating_add(base)
+            .saturating_add(per_image.saturating_mul(members))
+            > req.deadline
+    }
+
+    /// Admit a request, or shed (FIFO) / evict a lower-class victim
+    /// (class-aware) when the bounded queue is full. Returns whether the
+    /// request was admitted. Flush due batches (via
     /// [`pop_due`](Batcher::pop_due)) *before* offering an arrival so the
     /// bound applies to genuinely concurrent work.
     pub fn offer(&mut self, req: PendingRequest) -> bool {
         if self.queued() >= self.cfg.max_queue {
-            self.shed += 1;
-            return false;
+            let victim = match self.cfg.admission {
+                AdmissionKind::Fifo => None,
+                AdmissionKind::ClassAware => self.victim_below(req.priority),
+            };
+            match victim {
+                Some((k, pos)) => {
+                    let evicted = self.queues[k].remove(pos).expect("victim position valid");
+                    self.count_shed(&evicted);
+                }
+                None => {
+                    self.count_shed(&req);
+                    return false;
+                }
+            }
+        }
+        if self.cfg.preempt && self.window_doomed(&req) {
+            let u = &mut self.urgent[req.key_idx];
+            *u = Some(u.map_or(req.priority, |p| p.max(req.priority)));
         }
         self.queues[req.key_idx].push_back(req);
         debug_assert!(self.queued() <= self.cfg.max_queue, "bounded queue invariant");
         true
     }
 
+    /// Ready cycle of a flushed slice: a full batch was triggered by the
+    /// arrival that filled it; a partial one by its oldest member's
+    /// window expiry, clamped to the last member's arrival (a batch can
+    /// never be ready before a member exists — with `max_wait_cycles =
+    /// 0` the unclamped expiry *predates* later members).
+    fn slice_ready(&self, requests: &[PendingRequest]) -> u64 {
+        let last_arrival = requests.last().expect("non-empty batch").arrival;
+        if requests.len() == self.cfg.max_batch {
+            last_arrival
+        } else {
+            (requests.first().expect("non-empty batch").arrival + self.cfg.max_wait_cycles)
+                .max(last_arrival)
+        }
+    }
+
     /// Flush every batch whose condition holds at virtual time `now`:
-    /// full (`max_batch` members, ready = the filling arrival) or
-    /// expired (oldest member waited `max_wait_cycles`, ready = its
-    /// deadline). Batches come out in key order, oldest first.
+    /// full (`max_batch` members, ready = the filling arrival), expired
+    /// (oldest member waited `max_wait_cycles`, ready = its window expiry
+    /// clamped to the last member's arrival), or preemptively urgent
+    /// (a window-doomed member's class flushes immediately at `now`,
+    /// leaving lower-class members queued). Batches come out in key
+    /// order, oldest first.
     pub fn pop_due(&mut self, now: u64) -> Vec<ReadyBatch> {
         let mut out = Vec::new();
-        for (key_idx, q) in self.queues.iter_mut().enumerate() {
+        for key_idx in 0..self.queues.len() {
+            if let Some(prio) = self.urgent[key_idx].take() {
+                let mut taken = Vec::new();
+                let mut kept = VecDeque::new();
+                for r in self.queues[key_idx].drain(..) {
+                    if r.priority >= prio && taken.len() < self.cfg.max_batch {
+                        taken.push(r);
+                    } else {
+                        kept.push_back(r);
+                    }
+                }
+                self.queues[key_idx] = kept;
+                if !taken.is_empty() {
+                    self.preempt_flushes += 1;
+                    out.push(ReadyBatch {
+                        key_idx,
+                        ready: now,
+                        requests: taken,
+                    });
+                }
+            }
             loop {
+                let q = &self.queues[key_idx];
                 let full = q.len() >= self.cfg.max_batch;
                 let expired = q
                     .front()
@@ -130,14 +352,9 @@ impl Batcher {
                     break;
                 }
                 let take = q.len().min(self.cfg.max_batch);
-                let requests: Vec<PendingRequest> = q.drain(..take).collect();
-                let ready = if requests.len() == self.cfg.max_batch {
-                    // The arrival that completed the batch triggered it.
-                    requests.last().expect("non-empty batch").arrival
-                } else {
-                    requests.first().expect("non-empty batch").arrival
-                        + self.cfg.max_wait_cycles
-                };
+                let requests: Vec<PendingRequest> =
+                    self.queues[key_idx].drain(..take).collect();
+                let ready = self.slice_ready(&requests);
                 out.push(ReadyBatch {
                     key_idx,
                     ready,
@@ -151,23 +368,73 @@ impl Batcher {
     /// Flush everything still queued (end of trace), each remaining
     /// group becoming one batch per `max_batch` slice — full slices were
     /// ready when their last member arrived, partial ones at their
-    /// oldest member's deadline.
+    /// oldest member's window expiry (clamped to the last arrival).
     pub fn drain_all(&mut self) -> Vec<ReadyBatch> {
         let mut out = Vec::new();
-        for (key_idx, q) in self.queues.iter_mut().enumerate() {
-            while !q.is_empty() {
-                let take = q.len().min(self.cfg.max_batch);
-                let requests: Vec<PendingRequest> = q.drain(..take).collect();
-                let ready = if requests.len() == self.cfg.max_batch {
-                    requests.last().expect("non-empty batch").arrival
-                } else {
-                    requests.first().expect("non-empty batch").arrival
-                        + self.cfg.max_wait_cycles
-                };
+        for key_idx in 0..self.queues.len() {
+            while !self.queues[key_idx].is_empty() {
+                let take = self.queues[key_idx].len().min(self.cfg.max_batch);
+                let requests: Vec<PendingRequest> =
+                    self.queues[key_idx].drain(..take).collect();
+                let ready = self.slice_ready(&requests);
                 out.push(ReadyBatch {
                     key_idx,
                     ready,
                     requests,
+                });
+            }
+        }
+        out
+    }
+
+    /// Split flushed batches that mix deadline-critical members (riding
+    /// the full batch is predicted to miss their deadline) with
+    /// deferrable ones. The critical half keeps the batch's ready cycle
+    /// and dispatches with fewer riders; the deferrable half pays one
+    /// extra per-invocation overhead. Batches without a cost estimate,
+    /// with fewer than two members, or homogeneous in criticality pass
+    /// through untouched (member order preserved).
+    pub fn split_critical(&mut self, batches: Vec<ReadyBatch>) -> Vec<ReadyBatch> {
+        let mut out = Vec::with_capacity(batches.len());
+        for b in batches {
+            let Some((base, per_image)) = self.est[b.key_idx] else {
+                out.push(b);
+                continue;
+            };
+            if b.requests.len() < 2 {
+                out.push(b);
+                continue;
+            }
+            let full_finish = b
+                .ready
+                .saturating_add(base)
+                .saturating_add(per_image.saturating_mul(b.requests.len() as u64));
+            let ReadyBatch {
+                key_idx,
+                ready,
+                requests,
+            } = b;
+            let (critical, deferrable): (Vec<PendingRequest>, Vec<PendingRequest>) = requests
+                .into_iter()
+                .partition(|r| r.deadline != u64::MAX && full_finish > r.deadline);
+            if critical.is_empty() || deferrable.is_empty() {
+                let requests = if critical.is_empty() { deferrable } else { critical };
+                out.push(ReadyBatch {
+                    key_idx,
+                    ready,
+                    requests,
+                });
+            } else {
+                self.splits += 1;
+                out.push(ReadyBatch {
+                    key_idx,
+                    ready,
+                    requests: critical,
+                });
+                out.push(ReadyBatch {
+                    key_idx,
+                    ready,
+                    requests: deferrable,
                 });
             }
         }
@@ -190,6 +457,23 @@ mod tests {
         }
     }
 
+    fn classed(id: usize, key_idx: usize, arrival: u64, priority: u8, deadline: u64) -> PendingRequest {
+        PendingRequest {
+            priority,
+            deadline,
+            ..req(id, key_idx, arrival)
+        }
+    }
+
+    fn cfg(max_batch: usize, max_wait: u64, max_queue: usize) -> BatcherCfg {
+        BatcherCfg {
+            max_batch,
+            max_wait_cycles: max_wait,
+            max_queue,
+            ..BatcherCfg::default()
+        }
+    }
+
     #[test]
     fn batch_priority_is_the_most_urgent_member() {
         let mut b = Batcher::new(cfg(4, 1000, 16), 1);
@@ -201,14 +485,6 @@ mod tests {
         let due = b.drain_all();
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].priority(), 2);
-    }
-
-    fn cfg(max_batch: usize, max_wait: u64, max_queue: usize) -> BatcherCfg {
-        BatcherCfg {
-            max_batch,
-            max_wait_cycles: max_wait,
-            max_queue,
-        }
     }
 
     #[test]
@@ -233,7 +509,7 @@ mod tests {
         let due = b.pop_due(1100);
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].requests.len(), 2);
-        assert_eq!(due[0].ready, 1100, "oldest member's deadline");
+        assert_eq!(due[0].ready, 1100, "oldest member's window expiry");
     }
 
     #[test]
@@ -256,6 +532,8 @@ mod tests {
         assert!(b.offer(req(1, 0, 2)));
         assert!(!b.offer(req(2, 0, 3)), "third concurrent request is shed");
         assert_eq!(b.shed, 1);
+        assert_eq!(b.shed_by_class, [0, 0, 1], "best-effort shed lands in the batch class");
+        assert_eq!(b.shed_deadline_by_class, [0, 0, 0], "no deadline was lost");
         assert_eq!(b.queued(), 2);
     }
 
@@ -279,8 +557,9 @@ mod tests {
     #[test]
     fn flush_on_full_precedes_deadline_flush_of_younger_requests() {
         // Key 0 fills (flush-on-full, ready = filling arrival); key 1's
-        // lone older request must still flush at its own deadline, not
-        // ride along early. pop_due returns both; ready times order them.
+        // lone older request must still flush at its own window expiry,
+        // not ride along early. pop_due returns both; ready times order
+        // them.
         let mut b = Batcher::new(cfg(2, 1000, 16), 2);
         b.offer(req(0, 1, 5)); // oldest overall, alone on key 1
         b.offer(req(1, 0, 600));
@@ -290,7 +569,7 @@ mod tests {
         let full = due.iter().find(|d| d.key_idx == 0).unwrap();
         let expired = due.iter().find(|d| d.key_idx == 1).unwrap();
         assert_eq!(full.ready, 900, "full batch ready at the filling arrival");
-        assert_eq!(expired.ready, 5 + 1000, "partial batch ready at its deadline");
+        assert_eq!(expired.ready, 5 + 1000, "partial batch ready at its window expiry");
         // The full batch became ready before the older request's window
         // closed — downstream ready-time ordering places it first.
         assert!(full.ready < expired.ready);
@@ -309,12 +588,39 @@ mod tests {
         b.offer(req(1, 0, 100));
         b.offer(req(2, 0, 101));
         // Both pending windows are expired at t=101; they flush as one
-        // batch per pop (queue order preserved).
+        // batch per pop (queue order preserved). The batch cannot be
+        // ready before its last member exists: ready clamps to 101, not
+        // the oldest member's (already-expired) window at 100.
         let due = b.pop_due(101);
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].requests.len(), 2);
-        assert_eq!(due[0].ready, 100);
+        assert_eq!(due[0].ready, 101, "ready clamps to the last member's arrival");
         assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn expired_ready_never_predates_a_member_arrival() {
+        // Regression (ISSUE 4): with a zero-wait window, a two-member
+        // batch used to flush at ready = 100 even though its second
+        // member only arrives at cycle 101.
+        let mut b = Batcher::new(cfg(8, 0, 16), 1);
+        b.offer(req(0, 0, 100));
+        b.offer(req(1, 0, 101));
+        let due = b.pop_due(101);
+        assert_eq!(due.len(), 1);
+        let batch = &due[0];
+        assert!(
+            batch.requests.iter().all(|r| r.arrival <= batch.ready),
+            "no member may arrive after the batch's ready cycle"
+        );
+        assert_eq!(batch.ready, 101);
+        // drain_all obeys the same clamp.
+        let mut b = Batcher::new(cfg(8, 0, 16), 1);
+        b.offer(req(0, 0, 100));
+        b.offer(req(1, 0, 105));
+        let rest = b.drain_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].ready, 105);
     }
 
     #[test]
@@ -331,5 +637,188 @@ mod tests {
         assert_eq!(rest[0].requests.len(), 1);
         assert_eq!(rest[0].ready, 4 + 1000);
         assert_eq!(b.queued(), 0);
+    }
+
+    // ------------------------------------------------------------------
+    // Class-aware admission
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn class_admission_evicts_batch_class_before_interactive() {
+        let mut b = Batcher::new(
+            BatcherCfg {
+                admission: AdmissionKind::ClassAware,
+                ..cfg(8, 1_000_000, 2)
+            },
+            1,
+        );
+        assert!(b.offer(classed(0, 0, 0, 0, u64::MAX))); // batch class
+        assert!(b.offer(classed(1, 0, 0, 0, u64::MAX))); // batch class
+        // Interactive arrival at a full queue evicts the youngest
+        // batch-class request instead of being shed itself.
+        assert!(b.offer(classed(2, 0, 1, 2, 5_000)));
+        assert_eq!(b.shed, 1);
+        assert_eq!(b.shed_by_class, [0, 0, 1], "a batch-class victim was shed");
+        assert_eq!(b.queued(), 2);
+        let due = b.drain_all();
+        let ids: Vec<usize> = due.iter().flat_map(|d| d.requests.iter().map(|r| r.id)).collect();
+        assert!(ids.contains(&2), "the interactive request survived");
+        assert!(!ids.contains(&1), "the youngest batch-class request was evicted");
+    }
+
+    #[test]
+    fn class_admission_sheds_incoming_when_no_lower_class_exists() {
+        let mut b = Batcher::new(
+            BatcherCfg {
+                admission: AdmissionKind::ClassAware,
+                ..cfg(8, 1_000_000, 2)
+            },
+            1,
+        );
+        assert!(b.offer(classed(0, 0, 0, 2, 100)));
+        assert!(b.offer(classed(1, 0, 0, 2, 100)));
+        // Same-class arrival cannot evict: eviction requires a victim
+        // strictly below the arrival's priority.
+        assert!(!b.offer(classed(2, 0, 0, 2, 100)));
+        assert_eq!(b.shed_by_class, [1, 0, 0]);
+        assert_eq!(
+            b.shed_deadline_by_class,
+            [1, 0, 0],
+            "the shed interactive request carried a deadline"
+        );
+        // And a batch-class arrival at a full interactive queue sheds too.
+        assert!(!b.offer(classed(3, 0, 0, 0, u64::MAX)));
+        assert_eq!(b.shed_by_class, [1, 0, 1]);
+    }
+
+    #[test]
+    fn fifo_admission_sheds_incoming_regardless_of_class() {
+        let mut b = Batcher::new(cfg(8, 1_000_000, 2), 1);
+        assert!(b.offer(classed(0, 0, 0, 0, u64::MAX)));
+        assert!(b.offer(classed(1, 0, 0, 0, u64::MAX)));
+        assert!(!b.offer(classed(2, 0, 1, 2, 5_000)), "FIFO sheds the interactive arrival");
+        assert_eq!(b.shed_by_class, [1, 0, 0]);
+        assert_eq!(b.shed_deadline_by_class, [1, 0, 0]);
+    }
+
+    // ------------------------------------------------------------------
+    // Preemptive flush + batch splitting
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn preemptive_flush_pulls_doomed_interactive_ahead_of_window() {
+        let mut b = Batcher::new(
+            BatcherCfg {
+                preempt: true,
+                ..cfg(8, 10_000, 16)
+            },
+            1,
+        );
+        b.set_est_cost(0, 1_000, 500);
+        // A batch-class request opens the window at t=0.
+        b.offer(classed(0, 0, 0, 0, u64::MAX));
+        // Interactive arrival at t=100 whose deadline (5_000) dies before
+        // the window expiry (10_000): flush it now, leaving the
+        // batch-class member to wait out its window.
+        b.offer(classed(1, 0, 100, 2, 5_000));
+        let due = b.pop_due(100);
+        assert_eq!(due.len(), 1, "only the urgent class flushes");
+        assert_eq!(due[0].ready, 100, "preemptive flush is ready at the triggering arrival");
+        assert_eq!(due[0].requests.len(), 1);
+        assert_eq!(due[0].requests[0].id, 1);
+        assert_eq!(b.preempt_flushes, 1);
+        assert_eq!(b.queued(), 1, "the batch-class member stays queued");
+        // The leftover still flushes at its own window expiry.
+        let rest = b.pop_due(10_000);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].requests[0].id, 0);
+    }
+
+    #[test]
+    fn preemptive_flush_takes_same_class_partners() {
+        let mut b = Batcher::new(
+            BatcherCfg {
+                preempt: true,
+                ..cfg(8, 10_000, 16)
+            },
+            1,
+        );
+        b.set_est_cost(0, 1_000, 500);
+        b.offer(classed(0, 0, 0, 2, u64::MAX - 1)); // interactive, relaxed deadline
+        b.offer(classed(1, 0, 0, 0, u64::MAX)); // batch class
+        b.offer(classed(2, 0, 50, 2, 4_000)); // doomed interactive
+        let due = b.pop_due(50);
+        assert_eq!(due.len(), 1);
+        let ids: Vec<usize> = due[0].requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2], "same-class partners ride the preemptive flush in order");
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn no_preemption_without_estimate_or_flag() {
+        // Without a cost estimate the doom test is inert.
+        let mut b = Batcher::new(
+            BatcherCfg {
+                preempt: true,
+                ..cfg(8, 10_000, 16)
+            },
+            1,
+        );
+        b.offer(classed(0, 0, 0, 2, 1));
+        assert!(b.pop_due(0).is_empty(), "no estimate, no preemptive flush");
+        // With the flag off the estimate alone does nothing.
+        let mut b = Batcher::new(cfg(8, 10_000, 16), 1);
+        b.set_est_cost(0, 1_000, 500);
+        b.offer(classed(0, 0, 0, 2, 1));
+        assert!(b.pop_due(0).is_empty(), "preemption is opt-in");
+    }
+
+    #[test]
+    fn split_critical_divides_mixed_batches_only() {
+        let mut b = Batcher::new(
+            BatcherCfg {
+                preempt: true,
+                ..cfg(8, 1_000, 16)
+            },
+            1,
+        );
+        b.set_est_cost(0, 1_000, 500);
+        // ready 0 + base 1000 + 3*500 = 2500 predicted full-batch finish.
+        let batch = ReadyBatch {
+            key_idx: 0,
+            ready: 0,
+            requests: vec![
+                classed(0, 0, 0, 0, u64::MAX),   // deferrable
+                classed(1, 0, 0, 2, 2_000),      // critical (2000 < 2500)
+                classed(2, 0, 0, 1, 10_000),     // deferrable (deadline safe)
+            ],
+        };
+        let out = b.split_critical(vec![batch]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(b.splits, 1);
+        assert_eq!(out[0].requests.len(), 1, "critical half leads");
+        assert_eq!(out[0].requests[0].id, 1);
+        assert_eq!(out[1].requests.len(), 2, "deferrable half keeps member order");
+        assert_eq!(out[1].requests[0].id, 0);
+        assert_eq!(out[0].ready, out[1].ready, "both halves keep the flush cycle");
+
+        // Homogeneous batches pass through untouched.
+        let safe = ReadyBatch {
+            key_idx: 0,
+            ready: 0,
+            requests: vec![classed(3, 0, 0, 0, u64::MAX), classed(4, 0, 0, 0, u64::MAX)],
+        };
+        let out = b.split_critical(vec![safe]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].requests.len(), 2);
+        assert_eq!(b.splits, 1, "no additional split");
+    }
+
+    #[test]
+    fn class_index_maps_priorities() {
+        assert_eq!(class_index(2), 0, "interactive");
+        assert_eq!(class_index(1), 1, "standard");
+        assert_eq!(class_index(0), 2, "batch");
+        assert_eq!(class_index(9), 0, "priorities clamp to interactive");
     }
 }

@@ -17,6 +17,25 @@
 //! every eligible device is at the queue-depth cap, virtual time advances
 //! to the earliest in-flight completion and placement retries — delayed,
 //! never reordered.
+//!
+//! # Work stealing
+//!
+//! With [`steal`](Fleet::steal) enabled, a commit is *deferred*: the
+//! batch becomes a migratable [`PendingBatch`] on the target device's
+//! queue instead of an immutable timeline entry, and its final placement
+//! is a [`Resolution`] looked up after the replay. At every dispatch
+//! step [`advance`](Fleet::advance) resolves batches whose start time
+//! has passed (a started batch is pinned to its device), then
+//! [`rebalance`](Fleet::rebalance) lets each drained, idle device steal
+//! the latest-deadline pending batch from the most-backlogged
+//! SRAM-compatible victim — but only when the thief would strictly
+//! finish it earlier, so migration never worsens a batch. Migrations are
+//! counted per thief device and surfaced in
+//! [`DeviceStats`](super::stats::DeviceStats). With stealing off the
+//! eager path is byte-identical to the pre-steal fleet (the RoundRobin /
+//! all-M7 regression pin).
+
+use std::collections::VecDeque;
 
 use super::batcher::BATCH_OVERHEAD_CYCLES;
 use crate::mcu::{Counter, CycleModel};
@@ -132,15 +151,48 @@ pub struct BatchWork<'a> {
     pub deadlines: &'a [u64],
 }
 
+/// A committed-but-not-started batch (steal mode): a migratable queue
+/// entry carrying everything needed to price and start it later, on
+/// whichever device ends up running it.
+#[derive(Debug, Clone)]
+pub struct PendingBatch {
+    /// Resolution handle returned to the committer.
+    pub ticket: usize,
+    /// Earliest cycle the batch may start (its commit — or steal —
+    /// time, whichever is later).
+    pub ready: u64,
+    /// Owned instruction histogram (priced by the final device).
+    pub counter: Counter,
+    pub peak_sram: usize,
+    pub images: u64,
+    /// Most urgent member deadline (`u64::MAX` = none). The steal pass
+    /// migrates the *latest*-deadline batch first — the safest cargo.
+    pub min_deadline: u64,
+}
+
+/// Final placement of one deferred batch (steal mode).
+#[derive(Debug, Clone, Copy)]
+pub struct Resolution {
+    pub device: usize,
+    pub start: u64,
+    pub finish: u64,
+    /// Cost in the executing device's own cycles.
+    pub device_cycles: u64,
+    /// Cost in shared-timeline reference cycles.
+    pub timeline_cycles: u64,
+}
+
 /// One simulated device and its accounting.
 #[derive(Debug, Clone)]
 pub struct Device {
     pub id: usize,
     pub cfg: DeviceCfg,
     /// Virtual timeline cycle at which the device has drained everything
-    /// dispatched to it so far.
+    /// dispatched to it so far (projected over the pending queue in
+    /// steal mode).
     pub busy_until: u64,
-    /// Finish times of dispatched batches (pruned lazily).
+    /// Finish times of dispatched batches (pruned lazily; projected for
+    /// pending batches in steal mode).
     inflight: Vec<u64>,
     /// Cumulative instruction histogram of everything run here.
     pub counter: Counter,
@@ -148,6 +200,16 @@ pub struct Device {
     pub busy_cycles: u64,
     pub batches: u64,
     pub images: u64,
+    /// Pending batches this device stole from backlogged neighbors.
+    pub migrations: u64,
+    /// Resolved timeline: when every *started* batch is done (steal
+    /// mode; the eager path never reads it).
+    free_at: u64,
+    /// Committed-but-not-started batches (steal mode only).
+    queue: VecDeque<PendingBatch>,
+    /// Finish times of started-but-possibly-unfinished batches (steal
+    /// mode; pruned as virtual time advances).
+    resolved_open: Vec<u64>,
 }
 
 impl Device {
@@ -161,12 +223,21 @@ impl Device {
             busy_cycles: 0,
             batches: 0,
             images: 0,
+            migrations: 0,
+            free_at: 0,
+            queue: VecDeque::new(),
+            resolved_open: Vec::new(),
         }
     }
 
-    /// Unfinished batches at virtual time `now`.
+    /// Unfinished batches at virtual time `now` (running + pending).
     pub fn queue_depth(&self, now: u64) -> usize {
         self.inflight.iter().filter(|&&f| f > now).count()
+    }
+
+    /// Committed-but-not-started batches (steal mode).
+    pub fn pending_len(&self) -> usize {
+        self.queue.len()
     }
 
     /// Fraction of `[0, horizon]` this device spent executing.
@@ -182,20 +253,48 @@ impl Device {
     fn next_free(&self, now: u64) -> Option<u64> {
         self.inflight.iter().copied().filter(|&f| f > now).min()
     }
+
+    /// Timeline cost of one pending batch on this device.
+    fn pending_cost(&self, pb: &PendingBatch) -> u64 {
+        self.cfg.timeline_cost(&pb.counter)
+    }
+
+    /// The single source of truth for the pending-queue timeline walk
+    /// (steal mode): projected finish times in queue order, each batch
+    /// starting at `max(its ready, predecessor finish)` from the
+    /// resolved backlog. `advance` resolves fronts with the same start
+    /// rule, so projections and resolutions cannot diverge.
+    fn projected_finishes(&self) -> Vec<u64> {
+        let mut t = self.free_at;
+        self.queue
+            .iter()
+            .map(|pb| {
+                let start = pb.ready.max(t);
+                t = start + self.pending_cost(pb);
+                t
+            })
+            .collect()
+    }
 }
 
 /// Where and when a batch landed.
 #[derive(Debug, Clone, Copy)]
 pub struct Dispatch {
     pub device: usize,
-    /// Virtual timeline cycle execution began (>= ready time).
+    /// Virtual timeline cycle execution began (>= ready time). Projected
+    /// when `ticket` is set.
     pub start: u64,
-    /// Virtual timeline cycle the batch completed.
+    /// Virtual timeline cycle the batch completed. Projected when
+    /// `ticket` is set.
     pub finish: u64,
     /// Cost in the target device's own cycles.
     pub device_cycles: u64,
     /// Cost in shared-timeline reference cycles.
     pub timeline_cycles: u64,
+    /// Steal mode: the batch is pending and may migrate; its final
+    /// placement is [`Fleet::resolution`]`(ticket)` after
+    /// [`Fleet::finalize`]. `None` = eager commit, fields are final.
+    pub ticket: Option<usize>,
 }
 
 /// The heterogeneous device pool (mechanics only — policy is a
@@ -203,6 +302,10 @@ pub struct Dispatch {
 pub struct Fleet {
     pub devices: Vec<Device>,
     pub max_queue_depth: usize,
+    /// Deferred-commit mode: batches stay migratable until started.
+    pub steal: bool,
+    /// Final placements by ticket (steal mode).
+    resolutions: Vec<Option<Resolution>>,
 }
 
 impl Fleet {
@@ -216,6 +319,8 @@ impl Fleet {
                 .map(|(i, cfg)| Device::new(i, cfg))
                 .collect(),
             max_queue_depth,
+            steal: false,
+            resolutions: Vec::new(),
         }
     }
 
@@ -259,8 +364,14 @@ impl Fleet {
 
     /// Commit `work` to device `idx` at virtual time `now` (chosen by a
     /// scheduler), updating the device timeline and accounting. `now`
-    /// must satisfy [`eligible`](Fleet::eligible).
+    /// must satisfy [`eligible`](Fleet::eligible). In steal mode the
+    /// commit is deferred: the batch joins the device's migratable
+    /// pending queue and the returned [`Dispatch`] carries a `ticket`
+    /// plus *projected* times.
     pub fn commit(&mut self, idx: usize, now: u64, work: &BatchWork) -> Dispatch {
+        if self.steal {
+            return self.commit_deferred(idx, now, work);
+        }
         let d = &mut self.devices[idx];
         debug_assert!(work.peak_sram <= d.cfg.sram_bytes, "scheduler placed an oversized model");
         let device_cycles = d.cfg.batch_cycles(work.counter);
@@ -280,7 +391,192 @@ impl Fleet {
             finish,
             device_cycles,
             timeline_cycles,
+            ticket: None,
         }
+    }
+
+    fn commit_deferred(&mut self, idx: usize, now: u64, work: &BatchWork) -> Dispatch {
+        let ticket = self.resolutions.len();
+        self.resolutions.push(None);
+        {
+            let d = &mut self.devices[idx];
+            debug_assert!(
+                work.peak_sram <= d.cfg.sram_bytes,
+                "scheduler placed an oversized model"
+            );
+            d.queue.push_back(PendingBatch {
+                ticket,
+                ready: now,
+                counter: work.counter.clone(),
+                peak_sram: work.peak_sram,
+                images: work.images,
+                min_deadline: work.deadlines.iter().copied().min().unwrap_or(u64::MAX),
+            });
+        }
+        self.recompute_projection(idx);
+        let d = &self.devices[idx];
+        let device_cycles = d.cfg.batch_cycles(work.counter);
+        let timeline_cycles = d.cfg.to_timeline(device_cycles);
+        Dispatch {
+            device: idx,
+            start: d.busy_until - timeline_cycles,
+            finish: d.busy_until,
+            device_cycles,
+            timeline_cycles,
+            ticket: Some(ticket),
+        }
+    }
+
+    /// Rebuild a device's projected timeline (`busy_until`, `inflight`)
+    /// from its resolved backlog plus pending queue (steal mode).
+    fn recompute_projection(&mut self, idx: usize) {
+        let finishes = self.devices[idx].projected_finishes();
+        let d = &mut self.devices[idx];
+        d.busy_until = finishes.last().copied().unwrap_or(d.free_at);
+        let mut inflight = d.resolved_open.clone();
+        inflight.extend(&finishes);
+        d.inflight = inflight;
+    }
+
+    /// Resolve every pending batch whose start time has passed by `now`:
+    /// a started batch is pinned to its device, priced with that
+    /// device's cycle model, and accounted. No-op outside steal mode.
+    pub fn advance(&mut self, now: u64) {
+        if !self.steal {
+            return;
+        }
+        for i in 0..self.devices.len() {
+            loop {
+                let (ticket, res) = {
+                    let d = &mut self.devices[i];
+                    let Some(front) = d.queue.front() else { break };
+                    let start = front.ready.max(d.free_at);
+                    if start > now {
+                        break;
+                    }
+                    let pb = d.queue.pop_front().expect("front exists");
+                    let device_cycles = d.cfg.batch_cycles(&pb.counter);
+                    let timeline_cycles = d.cfg.to_timeline(device_cycles);
+                    let finish = start + timeline_cycles;
+                    d.free_at = finish;
+                    d.counter.merge(&pb.counter);
+                    d.busy_cycles += timeline_cycles;
+                    d.batches += 1;
+                    d.images += pb.images;
+                    d.resolved_open.push(finish);
+                    (
+                        pb.ticket,
+                        Resolution {
+                            device: i,
+                            start,
+                            finish,
+                            device_cycles,
+                            timeline_cycles,
+                        },
+                    )
+                };
+                self.resolutions[ticket] = Some(res);
+            }
+            self.devices[i].resolved_open.retain(|&f| f > now);
+            self.recompute_projection(i);
+        }
+    }
+
+    /// Projected in-situ finish of the pending batch at `pos` in device
+    /// `idx`'s queue (steal mode) — same walk the projections use.
+    fn projected_finish(&self, idx: usize, pos: usize) -> u64 {
+        let d = &self.devices[idx];
+        d.projected_finishes().get(pos).copied().unwrap_or(d.free_at)
+    }
+
+    /// One work-stealing pass at virtual time `now` (call after
+    /// [`advance`](Fleet::advance)): each drained, idle device — in id
+    /// order — may steal one pending batch. The victim is the
+    /// most-backlogged device holding a batch that fits the thief's
+    /// SRAM (deepest pending queue, then latest projected drain, then
+    /// lowest id); the cargo is the victim's latest-deadline such batch;
+    /// and the steal only happens when the thief would strictly finish
+    /// it earlier than it would finish in place. Returns the number of
+    /// migrations performed. No-op outside steal mode.
+    pub fn rebalance(&mut self, now: u64) -> u64 {
+        if !self.steal {
+            return 0;
+        }
+        let n = self.devices.len();
+        let mut stolen = 0u64;
+        for thief in 0..n {
+            let idle =
+                self.devices[thief].queue.is_empty() && self.devices[thief].free_at <= now;
+            if !idle {
+                continue;
+            }
+            let thief_sram = self.devices[thief].cfg.sram_bytes;
+            let mut victims: Vec<usize> = (0..n)
+                .filter(|&v| v != thief && !self.devices[v].queue.is_empty())
+                .collect();
+            victims.sort_by_key(|&v| {
+                (
+                    std::cmp::Reverse(self.devices[v].queue.len()),
+                    std::cmp::Reverse(self.devices[v].busy_until),
+                    v,
+                )
+            });
+            for v in victims {
+                // Latest-deadline pending batch that fits the thief
+                // (ties take the one deepest in the queue: it would
+                // start last in place).
+                let mut cand: Option<(usize, u64)> = None;
+                for (pos, pb) in self.devices[v].queue.iter().enumerate() {
+                    if pb.peak_sram > thief_sram {
+                        continue;
+                    }
+                    match cand {
+                        Some((_, best)) if pb.min_deadline < best => {}
+                        _ => cand = Some((pos, pb.min_deadline)),
+                    }
+                }
+                let Some((pos, _)) = cand else { continue };
+                let in_situ_finish = self.projected_finish(v, pos);
+                let pb_ready = self.devices[v].queue[pos].ready;
+                let tcfg = self.devices[thief].cfg;
+                let thief_start = now.max(pb_ready).max(self.devices[thief].free_at);
+                let thief_finish =
+                    thief_start + tcfg.timeline_cost(&self.devices[v].queue[pos].counter);
+                if thief_finish >= in_situ_finish {
+                    continue;
+                }
+                let mut pb = self.devices[v]
+                    .queue
+                    .remove(pos)
+                    .expect("candidate position valid");
+                // A steal decided at `now` cannot start retroactively.
+                pb.ready = pb.ready.max(now);
+                self.devices[thief].queue.push_back(pb);
+                self.devices[thief].migrations += 1;
+                self.recompute_projection(v);
+                self.recompute_projection(thief);
+                stolen += 1;
+                break;
+            }
+        }
+        stolen
+    }
+
+    /// Resolve every still-pending batch (end of replay, steal mode).
+    pub fn finalize(&mut self) {
+        self.advance(u64::MAX);
+    }
+
+    /// Final placement of a deferred batch; `None` until the batch has
+    /// been resolved by [`advance`](Fleet::advance) /
+    /// [`finalize`](Fleet::finalize).
+    pub fn resolution(&self, ticket: usize) -> Option<Resolution> {
+        self.resolutions.get(ticket).copied().flatten()
+    }
+
+    /// Total migrations across the fleet.
+    pub fn migrations(&self) -> u64 {
+        self.devices.iter().map(|d| d.migrations).sum()
     }
 }
 
@@ -393,5 +689,127 @@ mod tests {
         assert!(fleet.devices[0].utilization(1_000_000) > 0.0);
         assert_eq!(fleet.devices[0].counter.alu, 10);
         assert_eq!(a.device_cycles, BATCH_OVERHEAD_CYCLES + 10);
+    }
+
+    // ------------------------------------------------------------------
+    // Work-stealing (deferred commit) mode
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn deferred_single_device_matches_eager_timeline() {
+        // With no steal opportunity (one device), the deferred timeline
+        // must resolve to exactly the eager one.
+        let ctr = cheap_counter();
+        let mut eager = Fleet::homogeneous(1, DeviceCfg::stm32f746(), 8);
+        let e1 = eager.commit(0, 0, &work(0, &ctr, &[]));
+        let e2 = eager.commit(0, 0, &work(0, &ctr, &[]));
+
+        let mut def = Fleet::homogeneous(1, DeviceCfg::stm32f746(), 8);
+        def.steal = true;
+        let d1 = def.commit(0, 0, &work(0, &ctr, &[]));
+        let d2 = def.commit(0, 0, &work(0, &ctr, &[]));
+        assert_eq!(def.devices[0].pending_len(), 2);
+        assert_eq!(def.devices[0].batches, 0, "accounting defers until start");
+        def.finalize();
+        let r1 = def.resolution(d1.ticket.unwrap()).unwrap();
+        let r2 = def.resolution(d2.ticket.unwrap()).unwrap();
+        assert_eq!((r1.start, r1.finish), (e1.start, e1.finish));
+        assert_eq!((r2.start, r2.finish), (e2.start, e2.finish));
+        assert_eq!(r1.device_cycles, e1.device_cycles);
+        // Projected dispatch fields matched the final resolution here.
+        assert_eq!(d2.finish, r2.finish);
+        assert_eq!(def.devices[0].batches, eager.devices[0].batches);
+        assert_eq!(def.devices[0].busy_cycles, eager.devices[0].busy_cycles);
+        assert_eq!(def.devices[0].counter, eager.devices[0].counter);
+    }
+
+    #[test]
+    fn idle_device_steals_pending_batch_and_conserves_counters() {
+        let ctr = cheap_counter();
+        let cost = DeviceCfg::stm32f746().timeline_cost(&ctr);
+        let mut fleet = Fleet::homogeneous(2, DeviceCfg::stm32f746(), 8);
+        fleet.steal = true;
+        // Both batches pile onto device 0; device 1 never gets work.
+        let a = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        let b = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        // A dispatch step mid-first-batch: batch A has started (pinned),
+        // batch B is still pending — device 1 is idle and steals it.
+        let now = 1;
+        fleet.advance(now);
+        assert_eq!(fleet.devices[0].pending_len(), 1, "A started, B pending");
+        let stolen = fleet.rebalance(now);
+        assert_eq!(stolen, 1);
+        assert_eq!(fleet.devices[1].migrations, 1);
+        assert_eq!(fleet.migrations(), 1);
+        fleet.finalize();
+        let ra = fleet.resolution(a.ticket.unwrap()).unwrap();
+        let rb = fleet.resolution(b.ticket.unwrap()).unwrap();
+        assert_eq!(ra.device, 0);
+        assert_eq!(rb.device, 1, "B migrated to the idle device");
+        assert_eq!(rb.start, now, "a steal decided at `now` cannot start earlier");
+        assert_eq!(rb.finish, now + cost);
+        assert!(rb.finish < 2 * cost, "migration strictly beat the in-situ finish");
+        // The batch's work is bit-identical wherever it ran: each device
+        // holds exactly one batch's histogram, and the totals conserve.
+        assert_eq!(fleet.devices[0].counter, ctr);
+        assert_eq!(fleet.devices[1].counter, ctr);
+        assert_eq!(fleet.devices[0].batches + fleet.devices[1].batches, 2);
+        assert_eq!(fleet.devices[0].images + fleet.devices[1].images, 2);
+        assert_eq!(rb.device_cycles, ra.device_cycles, "same histogram, same class, same price");
+    }
+
+    #[test]
+    fn steal_respects_thief_sram() {
+        let ctr = cheap_counter();
+        let mut small = DeviceCfg::stm32f746();
+        small.sram_bytes = 512; // cannot host the 1024 B arena
+        let mut fleet = Fleet::new(vec![DeviceCfg::stm32f746(), small], 8);
+        fleet.steal = true;
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        fleet.advance(1);
+        assert_eq!(fleet.rebalance(1), 0, "the small device cannot steal an oversized batch");
+        assert_eq!(fleet.migrations(), 0);
+    }
+
+    #[test]
+    fn steal_prefers_the_latest_deadline_batch() {
+        let ctr = cheap_counter();
+        let mut fleet = Fleet::homogeneous(2, DeviceCfg::stm32f746(), 8);
+        fleet.steal = true;
+        let running = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        let tight = fleet.commit(0, 0, &work(0, &ctr, &[1_000_000]));
+        let loose = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        fleet.advance(1);
+        assert_eq!(fleet.rebalance(1), 1);
+        fleet.finalize();
+        assert_eq!(fleet.resolution(running.ticket.unwrap()).unwrap().device, 0);
+        assert_eq!(
+            fleet.resolution(loose.ticket.unwrap()).unwrap().device,
+            1,
+            "the no-deadline batch is the safest cargo"
+        );
+        assert_eq!(
+            fleet.resolution(tight.ticket.unwrap()).unwrap().device,
+            0,
+            "the deadline-critical batch stays put (and now starts earlier)"
+        );
+    }
+
+    #[test]
+    fn no_steal_when_in_situ_finish_is_not_beaten() {
+        // The victim's pending batch would finish in place at the same
+        // cycle the (equal-speed) thief could — no churn.
+        let ctr = cheap_counter();
+        let cost = DeviceCfg::stm32f746().timeline_cost(&ctr);
+        let mut fleet = Fleet::homogeneous(2, DeviceCfg::stm32f746(), 8);
+        fleet.steal = true;
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        // At now = cost the first batch just finished; the second starts
+        // immediately in place, so a steal cannot strictly improve it.
+        fleet.advance(cost);
+        assert_eq!(fleet.devices[0].pending_len(), 0, "both batches started back-to-back");
+        assert_eq!(fleet.rebalance(cost), 0);
     }
 }

@@ -7,16 +7,28 @@
 //! policy framework rather than a fixed pool:
 //!
 //! ```text
-//! trace (priority/deadline classes, replayable from JSON)
-//!   ─► admission (SRAM / bounded queue)
-//!     ─► batcher (per-model dynamic batching)
+//! trace (priority/deadline classes, overload bursts, replayable
+//!        from JSON)
+//!   ─► admission (SRAM gate + bounded queue; FIFO or class-aware
+//!        shedding — overload evicts best-effort work first, with
+//!        per-class shed counters so lost deadlines stay visible)
+//!     ─► batcher (per-model dynamic batching; with preemption on,
+//!          window-doomed interactive requests flush ahead of the
+//!          window and mixed flushed batches split into
+//!          deadline-critical + deferrable halves)
 //!       ─► scheduler (pluggable policy: round-robin | least-loaded |
 //!            slo-aware, each pricing batches with the TARGET device's
-//!            cycle model)
+//!            cycle model; every placement is a dispatch step that, in
+//!            steal mode, resolves started batches and lets drained
+//!            devices steal pending work)
 //!         ─► fleet (heterogeneous M7/M4 devices: per-device SRAM,
 //!              clock and cycle table; shared 216 MHz reference
-//!              timeline; queue-depth backpressure)
-//!           ─► stats (p50/p95/p99, throughput, deadline misses)
+//!              timeline; queue-depth backpressure; in steal mode,
+//!              committed-but-not-started batches are migratable queue
+//!              entries with per-device migration accounting)
+//!           ─► stats (p50/p95/p99, throughput from the first arrival
+//!                epoch, deadline + shed-SLO misses per class,
+//!                migrations)
 //! ```
 //!
 //! * [`registry`] — multi-tenant model registry with an LRU
@@ -24,13 +36,16 @@
 //!   (identical-params tenants collapse onto one artifact);
 //! * [`fleet`] — the device pool mechanics: per-device SRAM budget,
 //!   clock, [`CycleModel`](crate::mcu::CycleModel), cycle
-//!   [`Counter`](crate::mcu::Counter) and virtual-time timeline;
+//!   [`Counter`](crate::mcu::Counter), virtual-time timeline and the
+//!   work-stealing pending queues;
 //! * [`sched`] — the [`Scheduler`] trait and the three built-in
 //!   placement policies;
-//! * [`batcher`] — bounded request queue + dynamic batching window;
+//! * [`batcher`] — bounded request queue + dynamic batching window,
+//!   class-aware admission and deadline-driven preemption;
 //! * [`stats`] — latency/throughput/SLO/cache reporting (tables + JSON);
 //! * [`trace`] — deterministic synthetic request traces with deadline
-//!   classes, (de)serializable for recorded-trace replay.
+//!   classes and overload bursts, (de)serializable for recorded-trace
+//!   replay.
 //!
 //! Everything is deterministic: a (workloads, trace, config) triple
 //! always produces the same report, so serving numbers are comparable
@@ -45,8 +60,13 @@ pub mod sched;
 pub mod stats;
 pub mod trace;
 
-pub use batcher::{Batcher, BatcherCfg, PendingRequest, ReadyBatch, BATCH_OVERHEAD_CYCLES};
-pub use fleet::{BatchWork, Device, DeviceCfg, DeviceClass, Dispatch, Fleet};
+pub use batcher::{
+    class_index, AdmissionKind, Batcher, BatcherCfg, PendingRequest, ReadyBatch,
+    BATCH_OVERHEAD_CYCLES,
+};
+pub use fleet::{
+    BatchWork, Device, DeviceCfg, DeviceClass, Dispatch, Fleet, PendingBatch, Resolution,
+};
 pub use registry::{hash_params, ModelKey, Registry, RegistryStats};
 pub use sched::{LeastLoaded, RoundRobin, Scheduler, SchedulerKind, SloAware};
 pub use stats::{DeviceStats, LatencySummary, ModelStats, ServeReport};
@@ -118,6 +138,10 @@ pub struct ServeCfg {
     pub batcher: BatcherCfg,
     /// Registry LRU capacity (compiled artifacts held at once).
     pub cache_capacity: usize,
+    /// Work-stealing rebalance: committed-but-not-started batches stay
+    /// migratable, and drained devices steal from backlogged neighbors
+    /// at each dispatch step.
+    pub steal: bool,
 }
 
 impl Default for ServeCfg {
@@ -128,6 +152,7 @@ impl Default for ServeCfg {
             max_queue_depth: 4,
             batcher: BatcherCfg::default(),
             cache_capacity: 8,
+            steal: false,
         }
     }
 }
@@ -151,6 +176,16 @@ struct ModelAcc {
     deadline_misses: u64,
 }
 
+/// One request whose batch is still migratable (steal mode): its
+/// latency and deadline outcome resolve only after the fleet finalizes.
+struct DeferredReq {
+    ticket: usize,
+    arrival: u64,
+    deadline: u64,
+    class_idx: usize,
+    key_idx: usize,
+}
+
 /// Everything `exec_batch` mutates, bundled so the replay loop stays
 /// readable.
 struct ReplayState<'a> {
@@ -160,7 +195,12 @@ struct ReplayState<'a> {
     latencies: Vec<u64>,
     accs: Vec<ModelAcc>,
     deadline_misses: u64,
+    miss_by_class: [u64; 3],
     makespan: u64,
+    /// Steal mode: per-request outcomes awaiting fleet resolution.
+    deferred_reqs: Vec<DeferredReq>,
+    /// Steal mode: per-batch (ticket, key) pairs awaiting resolution.
+    deferred_batches: Vec<(usize, usize)>,
 }
 
 /// Dispatch a set of flushed batches in ready-time order (same-ready
@@ -189,7 +229,8 @@ fn exec_batches(
 /// (collecting the instruction histogram), let the scheduler place the
 /// batch on a device — which prices it with its *own* cycle model — and
 /// charge each member request its virtual-time latency and deadline
-/// outcome.
+/// outcome. In steal mode the placement is a migratable ticket: latency
+/// and deadline accounting defer until the fleet finalizes.
 fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> Result<()> {
     let mut ctr = Counter::new();
     for r in &batch.requests {
@@ -211,18 +252,60 @@ fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> 
         )
     })?;
     let acc = &mut st.accs[batch.key_idx];
+    acc.requests += batch.requests.len() as u64;
+    acc.batches += 1;
+    if let Some(ticket) = disp.ticket {
+        // Migratable: final device, finish time and pricing arrive with
+        // the fleet's resolution.
+        for r in &batch.requests {
+            st.deferred_reqs.push(DeferredReq {
+                ticket,
+                arrival: r.arrival,
+                deadline: r.deadline,
+                class_idx: class_index(r.priority),
+                key_idx: batch.key_idx,
+            });
+        }
+        st.deferred_batches.push((ticket, batch.key_idx));
+        return Ok(());
+    }
     for r in &batch.requests {
         st.latencies.push(disp.finish.saturating_sub(r.arrival));
         if disp.finish > r.deadline {
             acc.deadline_misses += 1;
             st.deadline_misses += 1;
+            st.miss_by_class[class_index(r.priority)] += 1;
         }
     }
-    acc.requests += batch.requests.len() as u64;
-    acc.batches += 1;
     acc.cycles += disp.device_cycles;
     st.makespan = st.makespan.max(disp.finish);
     Ok(())
+}
+
+/// Resolve every deferred (steal-mode) batch after the fleet finalizes:
+/// charge latencies, deadline outcomes and the final device's pricing.
+fn resolve_deferred(st: &mut ReplayState) {
+    st.fleet.finalize();
+    for (ticket, key_idx) in std::mem::take(&mut st.deferred_batches) {
+        let res = st
+            .fleet
+            .resolution(ticket)
+            .expect("finalized fleet resolves every ticket");
+        st.accs[key_idx].cycles += res.device_cycles;
+        st.makespan = st.makespan.max(res.finish);
+    }
+    for dr in std::mem::take(&mut st.deferred_reqs) {
+        let res = st
+            .fleet
+            .resolution(dr.ticket)
+            .expect("finalized fleet resolves every ticket");
+        st.latencies.push(res.finish.saturating_sub(dr.arrival));
+        if res.finish > dr.deadline {
+            st.accs[dr.key_idx].deadline_misses += 1;
+            st.deadline_misses += 1;
+            st.miss_by_class[dr.class_idx] += 1;
+        }
+    }
 }
 
 /// Replay `trace` over `workloads` with the serving stack in `cfg`,
@@ -238,6 +321,7 @@ pub fn run_trace(
 
     let mut registry = Registry::new(cfg.cache_capacity);
     let mut fleet = Fleet::new(cfg.fleet.clone(), cfg.max_queue_depth);
+    fleet.steal = cfg.steal;
     let mut batcher = Batcher::new(cfg.batcher.clone(), workloads.len());
     let mut sched = cfg.scheduler.build();
     // Per-worker conv scratch: this replay's pipeline state is private,
@@ -251,21 +335,30 @@ pub fn run_trace(
         latencies: Vec::new(),
         accs: vec![ModelAcc::default(); workloads.len()],
         deadline_misses: 0,
+        miss_by_class: [0; 3],
         makespan: 0,
+        deferred_reqs: Vec::new(),
+        deferred_batches: Vec::new(),
     };
 
     // Artifacts pinned for execution even if the LRU evicts them between
     // requests (the registry still tracks the recompilations).
     let mut pinned: Vec<Option<Arc<CompiledModel>>> = vec![None; workloads.len()];
     let mut rejected_sram = 0u64;
+    let mut sram_deadline_by_class = [0u64; 3];
     // Cache hits attributed per tenant (identical-params tenants share a
     // registry entry, so the registry's own per-label counts would blur
     // them together).
     let mut tenant_hits: Vec<u64> = vec![0; workloads.len()];
+    // Preemption wants a per-model cost yardstick before the first
+    // inference runs: installed once per key from the analytic Eq. 12
+    // predictor, priced optimistically (fastest fleet device).
+    let mut est_installed: Vec<bool> = vec![false; workloads.len()];
 
     // Replay in arrival order (stable on id for equal arrivals).
     let mut order: Vec<&TraceRequest> = trace.iter().collect();
     order.sort_by_key(|r| (r.arrival, r.id));
+    let first_arrival = order.first().map(|r| r.arrival).unwrap_or(0);
 
     for req in order {
         anyhow::ensure!(
@@ -276,7 +369,11 @@ pub fn run_trace(
             workloads.len()
         );
         // Flush whatever became due before this arrival.
-        exec_batches(batcher.pop_due(req.arrival), &pinned, &mut st)?;
+        let mut due = batcher.pop_due(req.arrival);
+        if cfg.batcher.preempt {
+            due = batcher.split_critical(due);
+        }
+        exec_batches(due, &pinned, &mut st)?;
 
         // Compile-on-first-use through the registry (hits are counted
         // per request, which is what makes compile-once — and, across
@@ -290,10 +387,31 @@ pub fn run_trace(
             tenant_hits[req.key_idx] += 1;
         }
         pinned[req.key_idx] = Some(art.clone());
+        if cfg.batcher.preempt && !est_installed[req.key_idx] {
+            let p = crate::perf::predict_model(&w.model, w.key.method, &w.key.cfg);
+            let base = cfg
+                .fleet
+                .iter()
+                .map(|d| d.to_timeline(BATCH_OVERHEAD_CYCLES))
+                .min()
+                .unwrap_or(BATCH_OVERHEAD_CYCLES);
+            let per_image = cfg
+                .fleet
+                .iter()
+                .map(|d| d.to_timeline(p.counter.cycles(&d.cycle_model)))
+                .min()
+                .unwrap_or(0);
+            batcher.set_est_cost(req.key_idx, base, per_image);
+            est_installed[req.key_idx] = true;
+        }
 
-        // Admission control: SRAM, then the bounded queue.
+        // Admission control: SRAM, then the bounded queue. A rejected
+        // request's deadline is a lost SLO, not a vanished request.
         if !st.fleet.fits_anywhere(art.peak_sram()) {
             rejected_sram += 1;
+            if req.deadline != u64::MAX {
+                sram_deadline_by_class[class_index(req.priority())] += 1;
+            }
             continue;
         }
         let image = datasets::generate(
@@ -313,21 +431,36 @@ pub fn run_trace(
         });
         // A batch this arrival filled is ready right now — flush it
         // rather than letting it sit out the waiting window.
-        exec_batches(batcher.pop_due(req.arrival), &pinned, &mut st)?;
+        let mut due = batcher.pop_due(req.arrival);
+        if cfg.batcher.preempt {
+            due = batcher.split_critical(due);
+        }
+        exec_batches(due, &pinned, &mut st)?;
     }
 
     // End of trace: drain the remaining partial batches.
-    exec_batches(batcher.drain_all(), &pinned, &mut st)?;
+    let mut rest = batcher.drain_all();
+    if cfg.batcher.preempt {
+        rest = batcher.split_critical(rest);
+    }
+    exec_batches(rest, &pinned, &mut st)?;
+    // Steal mode: pending batches resolve now; latencies, deadline
+    // outcomes and final-device pricing land with the resolutions.
+    if cfg.steal {
+        resolve_deferred(&mut st);
+    }
 
     let ReplayState {
         latencies,
         accs,
         deadline_misses,
+        miss_by_class,
         makespan,
         ..
     } = st;
     let completed = latencies.len();
-    let virtual_s = makespan as f64 / crate::STM32F746_CLOCK_HZ as f64;
+    let span_cycles = makespan.saturating_sub(first_arrival);
+    let virtual_s = span_cycles as f64 / crate::STM32F746_CLOCK_HZ as f64;
     let throughput_rps = if virtual_s > 0.0 {
         completed as f64 / virtual_s
     } else {
@@ -372,17 +505,29 @@ pub fn run_trace(
             batches: d.batches,
             images: d.images,
             busy_cycles: d.busy_cycles,
-            utilization: d.utilization(makespan),
+            // Same epoch as throughput: a recorded trace whose arrivals
+            // start late must not deflate utilization either.
+            utilization: d.utilization(span_cycles),
+            migrations: d.migrations,
         })
         .collect();
 
     Ok(ServeReport {
         scheduler: cfg.scheduler.name().to_string(),
+        admission: cfg.batcher.admission.name().to_string(),
         requests: trace.len(),
         completed,
         rejected_queue: batcher.shed,
+        shed_by_class: batcher.shed_by_class,
+        shed_deadline_by_class: batcher.shed_deadline_by_class,
         rejected_sram,
+        sram_deadline_by_class,
         deadline_misses,
+        miss_by_class,
+        preempt_flushes: batcher.preempt_flushes,
+        batch_splits: batcher.splits,
+        migrations: fleet.migrations(),
+        first_arrival_cycles: first_arrival,
         makespan_cycles: makespan,
         throughput_rps,
         latency: LatencySummary::from_cycles(&latencies),
@@ -492,6 +637,7 @@ mod tests {
                 max_batch: 4,
                 max_wait_cycles: 432_000,
                 max_queue: 2,
+                ..BatcherCfg::default()
             },
             ..ServeCfg::default()
         };
@@ -535,6 +681,20 @@ mod tests {
         let rep = run_trace(&workloads, &trace, &cfg).unwrap();
         assert_eq!(rep.completed, 0);
         assert_eq!(rep.rejected_sram, 5);
+        // Best-effort trace: no deadlines were lost to the SRAM gate.
+        assert_eq!(rep.sram_deadline_misses(), 0);
+        assert_eq!(rep.total_misses(), 0);
+
+        // Deadline-classed traffic against the same gate: every lost
+        // deadline must surface as an SLO miss (the SRAM-side twin of
+        // the shed-accounting bugfix).
+        let classed = synth_trace(&TraceCfg::new(5, 100_000, 2).with_slo([1.0, 0.0, 0.0]), 1);
+        let rep = run_trace(&workloads, &classed, &cfg).unwrap();
+        assert_eq!(rep.rejected_sram, 5);
+        assert_eq!(rep.sram_deadline_by_class, [5, 0, 0]);
+        assert_eq!(rep.sram_deadline_misses(), 5);
+        assert_eq!(rep.class_misses(0), 5);
+        assert_eq!(rep.total_misses(), 5, "the SRAM gate cannot hide lost deadlines");
     }
 
     // ------------------------------------------------------------------
@@ -819,8 +979,9 @@ mod tests {
                 max_batch: 1,
                 max_wait_cycles: 0,
                 max_queue: 64,
+                ..BatcherCfg::default()
             },
-            cache_capacity: 8,
+            ..ServeCfg::default()
         };
         let rr = run_trace(&ws, &trace, &mk(SchedulerKind::RoundRobin)).unwrap();
         let slo = run_trace(&ws, &trace, &mk(SchedulerKind::SloAware)).unwrap();
@@ -880,6 +1041,7 @@ mod tests {
                 max_batch: 8,
                 max_wait_cycles: wait,
                 max_queue: 64,
+                ..BatcherCfg::default()
             },
             ..ServeCfg::default()
         };
@@ -986,5 +1148,272 @@ mod tests {
         assert_eq!(m4.cycle_model, CycleModel::cortex_m4());
         assert!(m4.sram_bytes < m7.sram_bytes);
         assert!(m4.clock_hz < m7.clock_hz);
+    }
+
+    // ------------------------------------------------------------------
+    // Overload resilience: class-aware admission, preemption, stealing
+    // ------------------------------------------------------------------
+
+    /// An overload burst of 6 batch-class + 4 interactive requests, all
+    /// at t=0, against a queue bounded at 4.
+    fn overload_trace() -> Vec<TraceRequest> {
+        let mut trace: Vec<TraceRequest> = (0..6)
+            .map(|id| TraceRequest::best_effort(id, 0, 0, 100 + id as u64))
+            .collect();
+        for id in 6..10 {
+            trace.push(TraceRequest {
+                id,
+                arrival: 0,
+                key_idx: 0,
+                seed: 100 + id as u64,
+                class: SloClass::Interactive,
+                deadline: 1 << 40, // generous: any completion meets it
+            });
+        }
+        trace
+    }
+
+    fn overload_cfg(admission: AdmissionKind) -> ServeCfg {
+        ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746(); 2],
+            batcher: BatcherCfg {
+                max_batch: 16,
+                max_wait_cycles: 1000,
+                max_queue: 4,
+                admission,
+                preempt: false,
+            },
+            ..ServeCfg::default()
+        }
+    }
+
+    #[test]
+    fn class_admission_sheds_batch_class_first_under_overload() {
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 4).unwrap()];
+        let trace = overload_trace();
+        let fifo = run_trace(&ws, &trace, &overload_cfg(AdmissionKind::Fifo)).unwrap();
+        let class = run_trace(&ws, &trace, &overload_cfg(AdmissionKind::ClassAware)).unwrap();
+
+        // FIFO sheds arrival order: the late-arriving interactive burst
+        // loses its deadlines while the earlier batch-class work rides.
+        assert_eq!(fifo.admission, "fifo");
+        assert_eq!(fifo.completed, 4);
+        assert_eq!(fifo.rejected_queue, 6);
+        assert_eq!(fifo.shed_by_class, [4, 0, 2]);
+        assert_eq!(fifo.shed_deadline_by_class, [4, 0, 0]);
+        assert_eq!(fifo.class_misses(0), 4, "four interactive deadlines lost to shedding");
+
+        // Class-aware admission evicts batch-class work instead: every
+        // interactive request survives and meets its deadline.
+        assert_eq!(class.admission, "class");
+        assert_eq!(class.completed, 4);
+        assert_eq!(class.rejected_queue, 6);
+        assert_eq!(class.shed_by_class, [0, 0, 6]);
+        assert_eq!(class.shed_deadline_by_class, [0, 0, 0]);
+        assert_eq!(class.class_misses(0), 0);
+        assert!(
+            class.class_misses(0) < fifo.class_misses(0),
+            "class-aware admission strictly cuts interactive misses"
+        );
+
+        // Both disciplines conserve requests.
+        for rep in [&fifo, &class] {
+            assert_eq!(
+                rep.completed as u64 + rep.rejected_queue + rep.rejected_sram,
+                trace.len() as u64
+            );
+            assert_eq!(rep.shed_by_class.iter().sum::<u64>(), rep.rejected_queue);
+        }
+    }
+
+    #[test]
+    fn shed_deadline_requests_surface_as_slo_misses() {
+        // Regression (ISSUE 4): `rejected_queue = batcher.shed` used to
+        // be the only trace a shed deadline left — overload *improved*
+        // the reported miss rate. Deadline-carrying sheds now count.
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 4).unwrap()];
+        let rep = run_trace(&ws, &overload_trace(), &overload_cfg(AdmissionKind::Fifo)).unwrap();
+        assert_eq!(rep.deadline_misses, 0, "every *completed* request met its deadline");
+        assert_eq!(rep.shed_deadline_misses(), 4);
+        assert_eq!(rep.total_misses(), 4, "overload can no longer hide misses");
+    }
+
+    #[test]
+    fn throughput_is_measured_from_the_first_arrival() {
+        // Regression (ISSUE 4): a recorded trace whose arrivals start
+        // late used to deflate throughput (makespan measured from cycle
+        // 0). A pure time shift must not change throughput or latency.
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 4).unwrap()];
+        let mk = |shift: u64| -> Vec<TraceRequest> {
+            (0..6)
+                .map(|id| {
+                    TraceRequest::best_effort(id, shift + id as u64 * 100_000, 0, 300 + id as u64)
+                })
+                .collect()
+        };
+        let cfg = ServeCfg::homogeneous(2);
+        let base = run_trace(&ws, &mk(0), &cfg).unwrap();
+        let late = run_trace(&ws, &mk(5_000_000_000), &cfg).unwrap();
+        assert_eq!(late.first_arrival_cycles, 5_000_000_000);
+        assert_eq!(base.span_cycles(), late.span_cycles());
+        assert_eq!(base.throughput_rps, late.throughput_rps);
+        assert!(late.throughput_rps > 0.0);
+        assert_eq!(base.latency.mean_ms, late.latency.mean_ms);
+        assert_eq!(base.latency.p99_ms, late.latency.p99_ms);
+        // Device utilization shares the first-arrival epoch, so it is
+        // shift-invariant too.
+        for (a, b) in base.per_device.iter().zip(&late.per_device) {
+            assert_eq!(a.utilization, b.utilization, "device {} utilization", a.id);
+        }
+        assert_eq!(
+            late.makespan_cycles,
+            base.makespan_cycles + 5_000_000_000,
+            "the timeline itself shifts; only the span is invariant"
+        );
+    }
+
+    #[test]
+    fn preemptive_flush_beats_deadline_for_lone_interactive_request() {
+        // One interactive request whose deadline dies before its waiting
+        // window would expire: without preemption it flushes at the
+        // window and misses; with preemption it flushes on arrival and
+        // meets the deadline.
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 21).unwrap()];
+        let art =
+            CompiledModel::compile(&ws[0].model, &ws[0].params, &ws[0].key.cfg, ws[0].key.method)
+                .unwrap();
+        let img = datasets::generate(
+            Task::for_backbone(&ws[0].model.name),
+            1,
+            ws[0].model.input_hw,
+            777,
+        )
+        .images;
+        let cost = DeviceCfg::stm32f746().timeline_cost(&art.run(&img).unwrap().counter);
+        let wait = 2 * cost;
+        let trace = vec![TraceRequest {
+            id: 0,
+            arrival: 0,
+            key_idx: 0,
+            seed: 777,
+            class: SloClass::Interactive,
+            deadline: wait, // window expiry alone already spends it all
+        }];
+        let mk = |preempt: bool| ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746()],
+            batcher: BatcherCfg {
+                max_batch: 8,
+                max_wait_cycles: wait,
+                max_queue: 64,
+                admission: AdmissionKind::Fifo,
+                preempt,
+            },
+            ..ServeCfg::default()
+        };
+        let lazy = run_trace(&ws, &trace, &mk(false)).unwrap();
+        assert_eq!(lazy.completed, 1);
+        assert_eq!(lazy.deadline_misses, 1, "waiting out the window misses");
+        assert_eq!(lazy.miss_by_class, [1, 0, 0]);
+        assert_eq!(lazy.preempt_flushes, 0);
+
+        let eager = run_trace(&ws, &trace, &mk(true)).unwrap();
+        assert_eq!(eager.completed, 1);
+        assert_eq!(eager.deadline_misses, 0, "the preemptive flush meets the deadline");
+        assert_eq!(eager.preempt_flushes, 1);
+        assert_eq!(eager.makespan_cycles, cost, "dispatched at arrival, not at the window");
+    }
+
+    #[test]
+    fn steal_mode_conserves_results_and_stays_deterministic() {
+        // Work stealing may re-place batches but must not change *what*
+        // was computed: same completions, same per-model request
+        // counts, same fleet-wide image totals — and the replay stays
+        // bit-reproducible.
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 21).unwrap()];
+        let trace = synth_trace(
+            &TraceCfg::new(24, 100_000, 5)
+                .with_slo([1.0, 1.0, 1.0])
+                .with_burst(8, 4),
+            1,
+        );
+        let mk = |steal: bool| ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746(), DeviceCfg::stm32f446()],
+            scheduler: SchedulerKind::LeastLoaded,
+            steal,
+            ..ServeCfg::default()
+        };
+        let plain = run_trace(&ws, &trace, &mk(false)).unwrap();
+        let stealing = run_trace(&ws, &trace, &mk(true)).unwrap();
+        assert_eq!(plain.completed, stealing.completed);
+        assert_eq!(plain.rejected_queue, stealing.rejected_queue);
+        assert_eq!(plain.per_model[0].requests, stealing.per_model[0].requests);
+        assert_eq!(plain.per_model[0].batches, stealing.per_model[0].batches);
+        let images = |r: &ServeReport| r.per_device.iter().map(|d| d.images).sum::<u64>();
+        assert_eq!(images(&plain), images(&stealing));
+        assert_eq!(plain.migrations, 0, "stealing off migrates nothing");
+
+        let again = run_trace(&ws, &trace, &mk(true)).unwrap();
+        assert_eq!(stealing.makespan_cycles, again.makespan_cycles);
+        assert_eq!(stealing.migrations, again.migrations);
+        assert_eq!(stealing.latency.p99_ms, again.latency.p99_ms);
+        assert_eq!(stealing.deadline_misses, again.deadline_misses);
+        for (a, b) in stealing.per_device.iter().zip(&again.per_device) {
+            assert_eq!(a.batches, b.batches);
+            assert_eq!(a.migrations, b.migrations);
+        }
+    }
+
+    #[test]
+    fn every_policy_combination_conserves_requests() {
+        // Property-style sweep: scheduler x admission x steal (with
+        // preemption on) must account for every trace request exactly
+        // once — completed, queue-shed, or SRAM-rejected.
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 4).unwrap()];
+        let trace = synth_trace(
+            &TraceCfg::new(14, 80_000, 9)
+                .with_slo([1.0, 1.0, 1.0])
+                .with_burst(7, 5),
+            1,
+        );
+        for sched in SchedulerKind::ALL {
+            for admission in AdmissionKind::ALL {
+                for steal in [false, true] {
+                    let cfg = ServeCfg {
+                        fleet: vec![DeviceCfg::stm32f746(), DeviceCfg::stm32f446()],
+                        scheduler: sched,
+                        batcher: BatcherCfg {
+                            max_batch: 4,
+                            max_wait_cycles: 432_000,
+                            max_queue: 6,
+                            admission,
+                            preempt: true,
+                        },
+                        steal,
+                        ..ServeCfg::default()
+                    };
+                    let rep = run_trace(&ws, &trace, &cfg).unwrap();
+                    let label = format!(
+                        "sched {} admission {} steal {}",
+                        sched.name(),
+                        admission.name(),
+                        steal
+                    );
+                    assert_eq!(
+                        rep.completed as u64 + rep.rejected_queue + rep.rejected_sram,
+                        trace.len() as u64,
+                        "conservation violated under {label}"
+                    );
+                    assert_eq!(
+                        rep.shed_by_class.iter().sum::<u64>(),
+                        rep.rejected_queue,
+                        "per-class shed accounting out of sync under {label}"
+                    );
+                    let images: u64 = rep.per_device.iter().map(|d| d.images).sum();
+                    assert_eq!(images, rep.completed as u64, "fleet images mismatch under {label}");
+                    let reqs: u64 = rep.per_model.iter().map(|m| m.requests).sum();
+                    assert_eq!(reqs, rep.completed as u64, "per-model mismatch under {label}");
+                }
+            }
+        }
     }
 }

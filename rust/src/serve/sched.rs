@@ -24,6 +24,15 @@
 //! provided [`Scheduler::place`]: when no device is eligible, virtual
 //! time advances to the fleet's next in-flight completion and the pick
 //! retries — batches are delayed, never reordered.
+//!
+//! `place` is also the fleet's *dispatch step*: in work-stealing mode
+//! ([`Fleet::steal`]) every placement first
+//! [`advance`](Fleet::advance)s the fleet (started batches resolve and
+//! pin to their device) and then [`rebalance`](Fleet::rebalance)s it
+//! (drained devices steal the latest-deadline pending batch from the
+//! most-backlogged SRAM-compatible neighbor). Both calls are no-ops
+//! with stealing off, which is what keeps the RoundRobin / all-M7
+//! timeline bit-identical to the pre-steal pipeline.
 
 use super::fleet::{BatchWork, Dispatch, Fleet};
 
@@ -48,6 +57,10 @@ pub trait Scheduler {
         }
         let mut now = work.ready;
         loop {
+            // Dispatch step: resolve started batches, then let drained
+            // devices steal pending work (no-ops unless `fleet.steal`).
+            fleet.advance(now);
+            fleet.rebalance(now);
             if let Some(idx) = self.pick(now, work, fleet) {
                 return Some(fleet.commit(idx, now, work));
             }

@@ -93,8 +93,11 @@ pub struct DeviceStats {
     pub images: u64,
     /// Busy time in shared-timeline reference cycles.
     pub busy_cycles: u64,
-    /// Busy fraction of the whole makespan.
+    /// Busy fraction of the active span (first arrival → makespan).
     pub utilization: f64,
+    /// Pending batches this device stole from backlogged neighbors
+    /// (work-stealing mode).
+    pub migrations: u64,
 }
 
 /// Everything one trace replay produced.
@@ -102,16 +105,37 @@ pub struct DeviceStats {
 pub struct ServeReport {
     /// Scheduling policy that placed the batches.
     pub scheduler: String,
+    /// Overload admission policy of the bounded queue.
+    pub admission: String,
     /// Requests in the trace.
     pub requests: usize,
     /// Requests that completed an inference.
     pub completed: usize,
     /// Requests shed by the bounded queue.
     pub rejected_queue: u64,
+    /// Sheds by SLO class (interactive, standard, batch).
+    pub shed_by_class: [u64; 3],
+    /// Deadline-carrying sheds by class — every one is an SLO miss that
+    /// the completed-request accounting alone would hide.
+    pub shed_deadline_by_class: [u64; 3],
     /// Requests rejected because no device's SRAM fits their model.
     pub rejected_sram: u64,
+    /// Deadline-carrying SRAM rejections by class — like queue sheds,
+    /// these are lost SLOs, not vanished requests.
+    pub sram_deadline_by_class: [u64; 3],
     /// Completed requests that finished past their SLO deadline.
     pub deadline_misses: u64,
+    /// Completed-late requests by SLO class (interactive, standard,
+    /// batch).
+    pub miss_by_class: [u64; 3],
+    /// Preemptive (ahead-of-window) batcher flushes.
+    pub preempt_flushes: u64,
+    /// Flushed batches split into critical + deferrable halves.
+    pub batch_splits: u64,
+    /// Pending batches migrated between devices by work stealing.
+    pub migrations: u64,
+    /// Arrival cycle of the earliest trace request (throughput epoch).
+    pub first_arrival_cycles: u64,
     /// Virtual cycle the last batch finished.
     pub makespan_cycles: u64,
     /// Completed requests per second of virtual MCU time.
@@ -127,22 +151,69 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
-    /// Virtual seconds from first arrival epoch (cycle 0) to makespan.
+    /// Active span in cycles: first arrival to last completion. Traces
+    /// whose arrivals start late (recorded-trace replays) would deflate
+    /// throughput if measured from cycle 0.
+    pub fn span_cycles(&self) -> u64 {
+        self.makespan_cycles.saturating_sub(self.first_arrival_cycles)
+    }
+
+    /// Virtual seconds from the first arrival epoch to makespan.
     pub fn virtual_s(&self) -> f64 {
-        self.makespan_cycles as f64 / crate::STM32F746_CLOCK_HZ as f64
+        self.span_cycles() as f64 / crate::STM32F746_CLOCK_HZ as f64
+    }
+
+    /// Shed requests that carried an SLO deadline — misses the bounded
+    /// queue caused.
+    pub fn shed_deadline_misses(&self) -> u64 {
+        self.shed_deadline_by_class.iter().sum()
+    }
+
+    /// SRAM-rejected requests that carried an SLO deadline.
+    pub fn sram_deadline_misses(&self) -> u64 {
+        self.sram_deadline_by_class.iter().sum()
+    }
+
+    /// Every SLO miss: completed-late plus deadline-carrying sheds and
+    /// SRAM rejections — admission cannot hide a lost deadline anywhere.
+    pub fn total_misses(&self) -> u64 {
+        self.deadline_misses + self.shed_deadline_misses() + self.sram_deadline_misses()
+    }
+
+    /// Per-class SLO misses, rejection-inclusive (0 = interactive,
+    /// 1 = standard, 2 = batch).
+    pub fn class_misses(&self, class_idx: usize) -> u64 {
+        self.miss_by_class[class_idx]
+            + self.shed_deadline_by_class[class_idx]
+            + self.sram_deadline_by_class[class_idx]
     }
 
     /// Render the summary + per-model + per-device tables.
     pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "scheduler {}  requests {}  completed {}  shed(queue) {}  rejected(sram) {}  deadline misses {}\n",
+            "scheduler {}  admission {}  requests {}  completed {}  shed(queue) {}  rejected(sram) {}  deadline misses {}\n",
             self.scheduler,
+            self.admission,
             self.requests,
             self.completed,
             self.rejected_queue,
             self.rejected_sram,
             self.deadline_misses
+        ));
+        out.push_str(&format!(
+            "shed by class int/std/batch {}/{}/{} ({} deadline-carrying, {} lost to the SRAM gate)  late by class {}/{}/{}  preempt flushes {}  batch splits {}  migrations {}\n",
+            self.shed_by_class[0],
+            self.shed_by_class[1],
+            self.shed_by_class[2],
+            self.shed_deadline_misses(),
+            self.sram_deadline_misses(),
+            self.miss_by_class[0],
+            self.miss_by_class[1],
+            self.miss_by_class[2],
+            self.preempt_flushes,
+            self.batch_splits,
+            self.migrations
         ));
         out.push_str(&format!(
             "virtual time {:.3}s  throughput {:.1} req/s  latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms (mean {:.2}ms, max {:.2}ms)\n",
@@ -187,7 +258,7 @@ impl ServeReport {
         out.push('\n');
 
         let mut dt = Table::new(vec![
-            "device", "class", "batches", "images", "busy cycles", "util",
+            "device", "class", "batches", "images", "busy cycles", "util", "stolen",
         ]);
         for d in &self.per_device {
             dt.row(vec![
@@ -197,6 +268,7 @@ impl ServeReport {
                 format!("{}", d.images),
                 format!("{}", d.busy_cycles),
                 format!("{:.1}%", d.utilization * 100.0),
+                format!("{}", d.migrations),
             ]);
         }
         out.push_str(&dt.render());
@@ -207,11 +279,46 @@ impl ServeReport {
     pub fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
         o.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
+        o.insert("admission".into(), Json::Str(self.admission.clone()));
         o.insert("requests".into(), Json::Num(self.requests as f64));
         o.insert("completed".into(), Json::Num(self.completed as f64));
         o.insert(
             "rejected_queue".into(),
             Json::Num(self.rejected_queue as f64),
+        );
+        let classes = ["interactive", "standard", "batch"];
+        for (i, name) in classes.iter().enumerate() {
+            o.insert(
+                format!("shed_{name}"),
+                Json::Num(self.shed_by_class[i] as f64),
+            );
+            o.insert(
+                format!("late_{name}"),
+                Json::Num(self.miss_by_class[i] as f64),
+            );
+        }
+        o.insert(
+            "shed_deadline_misses".into(),
+            Json::Num(self.shed_deadline_misses() as f64),
+        );
+        o.insert(
+            "sram_deadline_misses".into(),
+            Json::Num(self.sram_deadline_misses() as f64),
+        );
+        o.insert(
+            "interactive_misses".into(),
+            Json::Num(self.class_misses(0) as f64),
+        );
+        o.insert("total_misses".into(), Json::Num(self.total_misses() as f64));
+        o.insert(
+            "preempt_flushes".into(),
+            Json::Num(self.preempt_flushes as f64),
+        );
+        o.insert("batch_splits".into(), Json::Num(self.batch_splits as f64));
+        o.insert("migrations".into(), Json::Num(self.migrations as f64));
+        o.insert(
+            "first_arrival_cycles".into(),
+            Json::Num(self.first_arrival_cycles as f64),
         );
         o.insert("rejected_sram".into(), Json::Num(self.rejected_sram as f64));
         o.insert(
@@ -276,6 +383,7 @@ impl ServeReport {
                 obj.insert("images".into(), Json::Num(d.images as f64));
                 obj.insert("busy_cycles".into(), Json::Num(d.busy_cycles as f64));
                 obj.insert("utilization".into(), Json::Num(d.utilization));
+                obj.insert("migrations".into(), Json::Num(d.migrations as f64));
                 Json::Obj(obj)
             })
             .collect();
@@ -306,15 +414,23 @@ mod tests {
         assert_eq!(s.mean_ms, 0.0);
     }
 
-    #[test]
-    fn report_renders_and_serializes() {
-        let rep = ServeReport {
+    fn sample_report() -> ServeReport {
+        ServeReport {
             scheduler: "slo-aware".into(),
+            admission: "class".into(),
             requests: 10,
             completed: 9,
             rejected_queue: 1,
-            rejected_sram: 0,
+            shed_by_class: [1, 0, 0],
+            shed_deadline_by_class: [1, 0, 0],
+            rejected_sram: 1,
+            sram_deadline_by_class: [0, 1, 0],
             deadline_misses: 2,
+            miss_by_class: [1, 1, 0],
+            preempt_flushes: 1,
+            batch_splits: 1,
+            migrations: 2,
+            first_arrival_cycles: 0,
             makespan_cycles: 216_000_000,
             throughput_rps: 9.0,
             latency: LatencySummary::from_cycles(&[216_000, 432_000]),
@@ -336,6 +452,7 @@ mod tests {
                 images: 9,
                 busy_cycles: 1000,
                 utilization: 0.5,
+                migrations: 2,
             }],
             cache: RegistryStats {
                 hits: 8,
@@ -346,20 +463,60 @@ mod tests {
             },
             engine_compiles: 1,
             wall_s: 0.01,
-        };
+        }
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let rep = sample_report();
         let txt = rep.render();
         assert!(txt.contains("throughput"));
         assert!(txt.contains("vgg_tiny/rp-slbc"));
         assert!(txt.contains("mcu0"));
         assert!(txt.contains("slo-aware"));
+        assert!(txt.contains("admission class"));
+        assert!(txt.contains("migrations 2"));
         assert!(txt.contains("m4"));
         let js = rep.to_json().to_string_compact();
         assert!(js.contains("\"throughput_rps\":9"));
         assert!(js.contains("\"per_model\""));
         assert!(js.contains("\"scheduler\":\"slo-aware\""));
+        assert!(js.contains("\"admission\":\"class\""));
         assert!(js.contains("\"deadline_misses\":2"));
+        assert!(js.contains("\"shed_interactive\":1"));
+        assert!(js.contains("\"interactive_misses\":2"));
+        assert!(js.contains("\"sram_deadline_misses\":1"));
+        assert!(js.contains("\"total_misses\":4"));
+        assert!(js.contains("\"migrations\":2"));
         assert!(js.contains("\"class\":\"m4\""));
         assert!((rep.virtual_s() - 1.0).abs() < 1e-9);
         assert_eq!(rep.per_model[0].mean_batch(), 3.0);
+    }
+
+    #[test]
+    fn shed_deadlines_count_toward_slo_misses() {
+        let rep = sample_report();
+        assert_eq!(rep.shed_deadline_misses(), 1);
+        assert_eq!(rep.sram_deadline_misses(), 1);
+        assert_eq!(
+            rep.total_misses(),
+            4,
+            "2 completed-late + 1 deadline-carrying shed + 1 SRAM-rejected"
+        );
+        // Interactive: 1 late + 1 shed-with-deadline; standard: 1 late +
+        // 1 lost to the SRAM gate.
+        assert_eq!(rep.class_misses(0), 2);
+        assert_eq!(rep.class_misses(1), 2);
+        assert_eq!(rep.class_misses(2), 0);
+    }
+
+    #[test]
+    fn virtual_span_starts_at_first_arrival() {
+        let mut rep = sample_report();
+        // A recorded trace whose first request arrives half a virtual
+        // second in: the active span is what throughput divides by.
+        rep.first_arrival_cycles = 108_000_000;
+        assert_eq!(rep.span_cycles(), 108_000_000);
+        assert!((rep.virtual_s() - 0.5).abs() < 1e-9);
     }
 }

@@ -135,6 +135,14 @@ pub struct TraceCfg {
     /// every request is best-effort `Batch` (no deadlines), which keeps
     /// legacy traces byte-identical.
     pub slo_weights: Vec<f64>,
+    /// Overload-burst synthesis: every `burst_period` requests, the
+    /// `burst_size` requests *after* the period leader collapse their
+    /// inter-arrival gaps to zero, arriving simultaneously with it — a
+    /// `burst_size + 1`-deep spike that stresses admission control.
+    /// `0` disables bursts and keeps legacy traces byte-identical.
+    pub burst_period: usize,
+    /// Requests piled onto each burst leader (see `burst_period`).
+    pub burst_size: usize,
     pub seed: u64,
 }
 
@@ -146,6 +154,8 @@ impl TraceCfg {
             weights: Vec::new(),
             tenant_skew: 0.0,
             slo_weights: Vec::new(),
+            burst_period: 0,
+            burst_size: 0,
             seed,
         }
     }
@@ -159,6 +169,19 @@ impl TraceCfg {
     /// Builder: deadline-class mix (interactive, standard, batch).
     pub fn with_slo(mut self, weights: [f64; 3]) -> TraceCfg {
         self.slo_weights = weights.to_vec();
+        self
+    }
+
+    /// Builder: overload bursts — every `period` requests, `size`
+    /// requests arrive simultaneously with the period leader.
+    pub fn with_burst(mut self, period: usize, size: usize) -> TraceCfg {
+        assert!(period > 0, "burst period must be positive");
+        assert!(
+            size >= 1 && size < period,
+            "burst size must be in 1..period"
+        );
+        self.burst_period = period;
+        self.burst_size = size;
         self
     }
 }
@@ -205,10 +228,16 @@ pub fn synth_trace(cfg: &TraceCfg, num_keys: usize) -> Vec<TraceRequest> {
     let mut t = 0u64;
     (0..cfg.requests)
         .map(|id| {
-            // Exponential inter-arrival (clamped away from ln(0)).
+            // Exponential inter-arrival (clamped away from ln(0)). The
+            // draw always happens — burst mode only overrides the gap,
+            // so the tenant/seed streams stay aligned with the
+            // non-burst trace.
             let u = (rng.f32() as f64).max(1e-7);
             let gap = (-u.ln() * cfg.mean_gap_cycles as f64) as u64;
-            t = t.saturating_add(gap);
+            let in_burst = cfg.burst_period > 0
+                && id % cfg.burst_period != 0
+                && id % cfg.burst_period <= cfg.burst_size;
+            t = t.saturating_add(if in_burst { 0 } else { gap });
             let key_idx = weighted_pick(&weights, rng.f32() as f64);
             let class = if cfg.slo_weights.is_empty() {
                 SloClass::Batch
@@ -391,6 +420,37 @@ mod tests {
         let interactive = slo.iter().find(|r| r.class == SloClass::Interactive).unwrap();
         assert_eq!(interactive.deadline, interactive.arrival + 4_320_000);
         assert_eq!(interactive.priority(), 2);
+    }
+
+    #[test]
+    fn burst_knob_creates_simultaneous_spikes_without_perturbing_the_rest() {
+        let base = TraceCfg::new(40, 50_000, 21);
+        let plain = synth_trace(&base, 2);
+        let burst = synth_trace(&base.clone().with_burst(10, 4), 2);
+        // Same tenant/seed streams: only arrival times change.
+        for (p, b) in plain.iter().zip(&burst) {
+            assert_eq!(p.key_idx, b.key_idx);
+            assert_eq!(p.seed, b.seed);
+        }
+        // Every burst leader is joined by `burst_size` simultaneous
+        // arrivals.
+        for leader in (0..40).step_by(10) {
+            for member in leader + 1..=leader + 4 {
+                assert_eq!(
+                    burst[member].arrival, burst[leader].arrival,
+                    "request {member} must arrive with its burst leader {leader}"
+                );
+            }
+            if leader + 5 < 40 {
+                assert!(
+                    burst[leader + 5].arrival >= burst[leader].arrival,
+                    "post-burst arrivals resume the Poisson process"
+                );
+            }
+        }
+        // period 0 (the default) is byte-identical to the legacy shape.
+        let again = synth_trace(&base, 2);
+        assert_eq!(plain, again);
     }
 
     #[test]
