@@ -7,12 +7,17 @@
 //!    320 requests, 4 × STM32F746, round-robin) plus a no-batching
 //!    replay quantifying the dynamic-batching win — the long-running
 //!    trend line.
-//! 2. **Scheduler × fleet matrix** (scheduler-refactor PR): the same
-//!    tenant pair under a Zipf-skewed, deadline-classed trace, replayed
-//!    over an all-M7 and an m7:2,m4:2 fleet with each placement policy.
-//!    Emits one JSON `rows` array (throughput, p95, deadline misses per
-//!    cell) and asserts the SLO-aware policy strictly reduces deadline
-//!    misses vs round-robin on the heterogeneous fleet.
+//! 2. **Scheduler × fleet matrix** (scheduler-refactor PR, energy rows
+//!    added with the `Target` layer): the same tenant pair under a
+//!    Zipf-skewed, deadline-classed trace, replayed over an all-M7 and
+//!    an m7:2,m4:2 fleet with each placement policy — now including
+//!    `energy-aware`. Emits one JSON `rows` array (throughput, p95,
+//!    deadline misses, total joules and joules/inference per cell) plus
+//!    an `energy_rows` array (per device-class joules for each hetero
+//!    cell), and asserts (a) the SLO-aware policy strictly reduces
+//!    deadline misses vs round-robin on the heterogeneous fleet, and
+//!    (b) the energy-aware policy strictly reduces total joules vs
+//!    SLO-aware there without increasing interactive-class SLO misses.
 //! 3. **Overload matrix** (overload-resilience PR): a bursty trace
 //!    (32-deep synchronized arrival spikes) against a tightly bounded
 //!    queue on the m7:2,m4:2 fleet, replayed under FIFO shedding and
@@ -101,7 +106,10 @@ fn main() -> mcu_mixq::Result<()> {
         ),
     ];
     let mut rows: Vec<Json> = Vec::new();
+    let mut energy_rows: Vec<Json> = Vec::new();
     let mut misses: BTreeMap<(String, &'static str), u64> = BTreeMap::new();
+    let mut interactive: BTreeMap<(String, &'static str), u64> = BTreeMap::new();
+    let mut joules: BTreeMap<(String, &'static str), f64> = BTreeMap::new();
     println!("scheduler x fleet matrix (skewed deadline trace):");
     for (fleet_name, fleet) in &fleets {
         for kind in SchedulerKind::ALL {
@@ -112,15 +120,18 @@ fn main() -> mcu_mixq::Result<()> {
             };
             let rep: ServeReport = serve::run_trace(&ws, &slo_trace, &cell_cfg)?;
             println!(
-                "  fleet {:>9}  sched {:>12}  completed {:>3}  throughput {:>7.1} rps  p95 {:>7.2} ms  deadline misses {:>3}",
+                "  fleet {:>9}  sched {:>12}  completed {:>3}  throughput {:>7.1} rps  p95 {:>7.2} ms  deadline misses {:>3}  energy {:>8.3} mJ",
                 fleet_name,
                 kind.name(),
                 rep.completed,
                 rep.throughput_rps,
                 rep.latency.p95_ms,
-                rep.deadline_misses
+                rep.deadline_misses,
+                rep.total_joules * 1e3
             );
             misses.insert((fleet_name.to_string(), kind.name()), rep.deadline_misses);
+            interactive.insert((fleet_name.to_string(), kind.name()), rep.class_misses(0));
+            joules.insert((fleet_name.to_string(), kind.name()), rep.total_joules);
             let mut row = BTreeMap::new();
             row.insert("fleet".into(), Json::Str(fleet_name.to_string()));
             row.insert("sched".into(), Json::Str(kind.name().into()));
@@ -132,10 +143,50 @@ fn main() -> mcu_mixq::Result<()> {
                 Json::Num(rep.deadline_misses as f64),
             );
             row.insert(
+                "interactive_misses".into(),
+                Json::Num(rep.class_misses(0) as f64),
+            );
+            row.insert(
                 "makespan_cycles".into(),
                 Json::Num(rep.makespan_cycles as f64),
             );
+            row.insert("total_joules".into(), Json::Num(rep.total_joules));
+            row.insert(
+                "joules_per_inference".into(),
+                Json::Num(rep.joules_per_inference()),
+            );
             rows.push(Json::Obj(row));
+
+            // Per device-class energy rows for the heterogeneous fleet:
+            // where each policy actually spends its joules.
+            if fleet_name == &"m7:2,m4:2" {
+                let mut by_class: BTreeMap<String, (f64, u64)> = BTreeMap::new();
+                for d in &rep.per_device {
+                    let e = by_class.entry(d.class.clone()).or_insert((0.0, 0));
+                    e.0 += d.joules;
+                    e.1 += d.images;
+                }
+                for (class, (j, images)) in by_class {
+                    println!(
+                        "      class {:>3}  sched {:>12}  images {:>4}  energy {:>8.3} mJ",
+                        class,
+                        kind.name(),
+                        images,
+                        j * 1e3
+                    );
+                    let mut er = BTreeMap::new();
+                    er.insert("fleet".into(), Json::Str(fleet_name.to_string()));
+                    er.insert("sched".into(), Json::Str(kind.name().into()));
+                    er.insert("class".into(), Json::Str(class));
+                    er.insert("joules".into(), Json::Num(j));
+                    er.insert("images".into(), Json::Num(images as f64));
+                    er.insert(
+                        "joules_per_inference".into(),
+                        Json::Num(if images == 0 { 0.0 } else { j / images as f64 }),
+                    );
+                    energy_rows.push(Json::Obj(er));
+                }
+            }
         }
     }
     println!();
@@ -247,6 +298,7 @@ fn main() -> mcu_mixq::Result<()> {
     o.insert("batch_speedup".into(), Json::Num(batch_speedup));
     o.insert("sim_wall_ms".into(), Json::Num(t.mean_ns / 1e6));
     o.insert("rows".into(), Json::Arr(rows));
+    o.insert("energy_rows".into(), Json::Arr(energy_rows));
     o.insert("overload".into(), Json::Arr(overload_rows));
     println!("{}", Json::Obj(o).to_string_compact());
 
@@ -288,6 +340,22 @@ fn main() -> mcu_mixq::Result<()> {
     assert!(
         slo < rr,
         "slo-aware must strictly reduce deadline misses ({slo} vs {rr})"
+    );
+    // Energy-aware placement acceptance: on the heterogeneous fleet it
+    // must strictly cut total joules vs slo-aware — by routing the
+    // deadline-free share of the trace onto the efficient M4s — without
+    // increasing the interactive-class (shed-inclusive) miss count.
+    let slo_j = joules[&("m7:2,m4:2".to_string(), "slo-aware")];
+    let energy_j = joules[&("m7:2,m4:2".to_string(), "energy-aware")];
+    assert!(
+        energy_j < slo_j,
+        "energy-aware must strictly reduce fleet joules ({energy_j} vs {slo_j})"
+    );
+    let slo_int = interactive[&("m7:2,m4:2".to_string(), "slo-aware")];
+    let energy_int = interactive[&("m7:2,m4:2".to_string(), "energy-aware")];
+    assert!(
+        energy_int <= slo_int,
+        "energy savings must not cost interactive SLOs ({energy_int} vs {slo_int})"
     );
     // Overload-resilience acceptance: under the burst trace, FIFO
     // shedding must actually lose interactive deadlines, and class-aware

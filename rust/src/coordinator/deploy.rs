@@ -19,7 +19,8 @@ use crate::models::ModelDesc;
 use crate::ops::Method;
 use crate::quant::BitConfig;
 use crate::runtime::{BackboneArtifacts, Runtime};
-use crate::{cycles_to_ms, Result};
+use crate::target::Target;
+use crate::Result;
 
 use super::qat::{QatCfg, QatRunner};
 
@@ -31,8 +32,12 @@ pub struct MethodRow {
     pub config: BitConfig,
     pub peak_sram: usize,
     pub flash_bytes: usize,
+    /// Cycles in the deployment target's own cycle table.
     pub clocks: u64,
+    /// Milliseconds at the deployment target's clock.
     pub latency_ms: f64,
+    /// Joules per inference on the deployment target.
+    pub joules: f64,
     pub accuracy: f32,
 }
 
@@ -70,6 +75,7 @@ pub fn deploy_all_methods(
     methods: &[Method],
     qat_cfg: &QatCfg,
     probe_image: &[f32],
+    target: &Target,
 ) -> Result<Vec<MethodRow>> {
     let runner = QatRunner::new(rt, arts, qat_cfg.seed)?;
     let mut rows = Vec::with_capacity(methods.len());
@@ -94,7 +100,8 @@ pub fn deploy_all_methods(
         // once through the compile path and executed on the artifact.
         // Unbounded: the comparison table reports over-budget methods in
         // its peak-memory column instead of failing the whole table.
-        let compiled = engine::CompiledModel::compile_unbounded(model, &qat_params, &cfg, method);
+        let compiled =
+            engine::CompiledModel::compile_unbounded_for(model, &qat_params, &cfg, method, target);
         let infer = compiled.run(probe_image)?;
 
         rows.push(MethodRow {
@@ -104,7 +111,8 @@ pub fn deploy_all_methods(
             peak_sram: compiled.peak_sram(),
             flash_bytes: compiled.flash_bytes(),
             clocks: infer.cycles,
-            latency_ms: cycles_to_ms(infer.cycles),
+            latency_ms: target.seconds(infer.cycles) * 1e3,
+            joules: target.joules(&infer.counter),
             accuracy: qat_acc,
         });
     }
@@ -122,6 +130,7 @@ pub fn render_rows(backbone: &str, rows: &[MethodRow]) -> String {
         "Flash",
         "Clocks",
         "Latency",
+        "Energy",
         "Accuracy",
     ]);
     for r in rows {
@@ -133,6 +142,7 @@ pub fn render_rows(backbone: &str, rows: &[MethodRow]) -> String {
             format!("{:.2}KB", r.flash_bytes as f64 / 1024.0),
             format!("{}", r.clocks),
             format!("{:.1}ms", r.latency_ms),
+            format!("{:.2}mJ", r.joules * 1e3),
             format!("{:.1}%", r.accuracy * 100.0),
         ]);
     }

@@ -5,11 +5,11 @@
 //! Table I bench. All loss curves are captured so EXPERIMENTS.md can plot
 //! the training dynamics.
 
-use crate::mcu::CycleModel;
 use crate::nas::CostProxy;
 use crate::ops::Method;
 use crate::perf::PerfModel;
 use crate::runtime::{ArtifactStore, Runtime};
+use crate::target::Target;
 use crate::Result;
 
 use super::deploy::{deploy_all_methods, MethodRow};
@@ -21,6 +21,11 @@ use super::StepLog;
 #[derive(Debug, Clone)]
 pub struct PipelineCfg {
     pub backbone: String,
+    /// Deployment target, resolved by name through the
+    /// [`Target`] registry (`stm32f746`/`m7`, `stm32f446`/`m4`). Drives
+    /// the search proxy's cycle model and the comparison table's
+    /// cycle/latency/energy pricing.
+    pub target: String,
     pub search: SearchCfg,
     pub qat: QatCfg,
     /// Methods to deploy for the comparison table.
@@ -34,6 +39,7 @@ impl PipelineCfg {
     pub fn new(backbone: &str) -> Self {
         PipelineCfg {
             backbone: backbone.to_string(),
+            target: "stm32f746".to_string(),
             search: SearchCfg::default(),
             qat: QatCfg::default(),
             methods: vec![
@@ -66,15 +72,14 @@ pub struct PipelineReport {
 pub fn run_pipeline(rt: &Runtime, store: &ArtifactStore, cfg: &PipelineCfg) -> Result<PipelineReport> {
     let arts = store.backbone(&cfg.backbone)?;
     let model = arts.model.clone();
+    let target = Target::resolve(&cfg.target)?;
 
-    // 1. Hardware-aware quantization search.
+    // 1. Hardware-aware quantization search, priced for the deployment
+    // target's core.
     let proxy = if cfg.use_edmips_proxy {
         CostProxy::EdMipsMacs
     } else {
-        CostProxy::SimdAware(
-            PerfModel::from_cycles(&CycleModel::cortex_m7()),
-            Method::RpSlbc,
-        )
+        CostProxy::SimdAware(PerfModel::for_target(target), Method::RpSlbc)
     };
     let search = SupernetSearch::new(rt, &arts, proxy, cfg.search.seed)?;
     let outcome = search.run(&cfg.search)?;
@@ -100,6 +105,7 @@ pub fn run_pipeline(rt: &Runtime, store: &ArtifactStore, cfg: &PipelineCfg) -> R
         &cfg.methods,
         &cfg.qat,
         probe.image(0),
+        target,
     )?;
 
     // 4. Headline speedups (MCU-MixQ row vs each competitor).

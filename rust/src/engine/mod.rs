@@ -47,12 +47,12 @@ pub use planner::{plan_memory, MemoryPlan, PlanStrategy};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::mcu::CycleModel;
 use crate::models::ModelDesc;
 use crate::ops::slbc::LayerKernel;
 use crate::ops::Method;
 use crate::quant::{quantize_model, BitConfig, QWeights};
-use crate::{cycles_to_ms, Result};
+use crate::target::Target;
+use crate::Result;
 
 /// Everything Table I reports for one (backbone, method, config) triple.
 #[derive(Debug, Clone)]
@@ -60,14 +60,18 @@ pub struct DeployReport {
     pub backbone: String,
     pub method: Method,
     pub config: BitConfig,
+    /// Registry name of the target the model was compiled for.
+    pub target: String,
     /// Peak SRAM of the activation arena (bytes).
     pub peak_sram: usize,
     /// Flash usage: packed weights + biases + scales + generated code.
     pub flash_bytes: usize,
-    /// Cycles for one inference (batch 1).
+    /// Cycles for one inference (batch 1), in the target's own cycles.
     pub cycles: u64,
-    /// Milliseconds at the paper's 216 MHz clock.
+    /// Milliseconds at the target's clock.
     pub latency_ms: f64,
+    /// Joules for one inference on the target (dynamic + static).
+    pub joules: f64,
     /// Per-layer cycle breakdown (layer name, cycles).
     pub per_layer: Vec<(String, u64)>,
 }
@@ -166,32 +170,52 @@ pub struct CompiledModel {
     pub quantized: Vec<(QWeights, Vec<f32>)>,
     pub codegen: CodegenPlan,
     pub flash: FlashImage,
-    pub cycle_model: CycleModel,
+    /// The deployment target this artifact was compiled for — the
+    /// single source of the SRAM gate, the executor's cycle table and
+    /// the energy pricing in [`report`](CompiledModel::report).
+    pub target: Target,
     /// Pre-packed SLBC kernel registers (empty for baseline methods):
     /// the run path streams these instead of re-packing per inference.
     pub kernels: KernelCache,
 }
 
 impl CompiledModel {
-    /// Build the full deployment artifact. The SRAM-capacity check runs
-    /// immediately after memory planning, so oversized models fail fast
-    /// without paying for quantization, codegen or a simulated inference.
+    /// Build the full deployment artifact for the default target (the
+    /// paper platform, registry name `stm32f746`).
     pub fn compile(
         model: &ModelDesc,
         flat_params: &[f32],
         cfg: &BitConfig,
         method: Method,
     ) -> Result<CompiledModel> {
+        Self::compile_for(model, flat_params, cfg, method, &Target::stm32f746())
+    }
+
+    /// Build the full deployment artifact *for a target*: the memory
+    /// plan is gated on the target's SRAM capacity and inference is
+    /// priced with the target's cycle table. The SRAM-capacity check
+    /// runs immediately after memory planning, so oversized models fail
+    /// fast without paying for quantization, codegen or a simulated
+    /// inference.
+    pub fn compile_for(
+        model: &ModelDesc,
+        flat_params: &[f32],
+        cfg: &BitConfig,
+        method: Method,
+        target: &Target,
+    ) -> Result<CompiledModel> {
         let strategy = planner::strategy_for(method);
         let graph = Graph::build(model, cfg);
         let plan = plan_memory(&graph, strategy);
         anyhow::ensure!(
-            plan.fits(crate::STM32F746_SRAM_BYTES),
-            "{}: activation arena {}B exceeds STM32F746 SRAM",
+            plan.fits(target.sram_bytes),
+            "{}: activation arena {}B exceeds {} SRAM ({}B)",
             model.name,
-            plan.peak_bytes
+            plan.peak_bytes,
+            target.name,
+            target.sram_bytes
         );
-        Ok(Self::finish(model, flat_params, cfg, method, graph, plan))
+        Ok(Self::finish(model, flat_params, cfg, method, graph, plan, target))
     }
 
     /// Build without the SRAM-capacity gate. Comparison tables (Table I)
@@ -203,12 +227,25 @@ impl CompiledModel {
         cfg: &BitConfig,
         method: Method,
     ) -> CompiledModel {
+        Self::compile_unbounded_for(model, flat_params, cfg, method, &Target::stm32f746())
+    }
+
+    /// [`compile_unbounded`](CompiledModel::compile_unbounded) for an
+    /// explicit target.
+    pub fn compile_unbounded_for(
+        model: &ModelDesc,
+        flat_params: &[f32],
+        cfg: &BitConfig,
+        method: Method,
+        target: &Target,
+    ) -> CompiledModel {
         let strategy = planner::strategy_for(method);
         let graph = Graph::build(model, cfg);
         let plan = plan_memory(&graph, strategy);
-        Self::finish(model, flat_params, cfg, method, graph, plan)
+        Self::finish(model, flat_params, cfg, method, graph, plan, target)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn finish(
         model: &ModelDesc,
         flat_params: &[f32],
@@ -216,6 +253,7 @@ impl CompiledModel {
         method: Method,
         graph: Graph,
         plan: MemoryPlan,
+        target: &Target,
     ) -> CompiledModel {
         let quantized = quantize_model(model, flat_params, cfg);
         let codegen = CodegenPlan::generate(model, cfg, method);
@@ -235,7 +273,7 @@ impl CompiledModel {
             quantized,
             codegen,
             flash,
-            cycle_model: CycleModel::cortex_m7(),
+            target: *target,
             kernels,
         }
     }
@@ -250,7 +288,7 @@ impl CompiledModel {
             &self.cfg,
             self.method,
             image,
-            &self.cycle_model,
+            &self.target.cycle_model,
             Some(&self.kernels),
         )
     }
@@ -271,7 +309,7 @@ impl CompiledModel {
             &self.cfg,
             self.method,
             image,
-            &self.cycle_model,
+            &self.target.cycle_model,
             Some(&self.kernels),
             Some(scratch),
         )
@@ -285,7 +323,7 @@ impl CompiledModel {
             &self.cfg,
             self.method,
             images,
-            &self.cycle_model,
+            &self.target.cycle_model,
             Some(&self.kernels),
         )
     }
@@ -300,17 +338,21 @@ impl CompiledModel {
         self.flash.total_bytes()
     }
 
-    /// Run one inference and assemble the Table I row for it.
+    /// Run one inference and assemble the Table I row for it: cycles
+    /// from the target's cycle table, latency at the target's clock,
+    /// joules from the target's energy model.
     pub fn report(&self, image: &[f32]) -> Result<DeployReport> {
         let result = self.run(image)?;
         Ok(DeployReport {
             backbone: self.model.name.clone(),
             method: self.method,
             config: self.cfg.clone(),
+            target: self.target.name.to_string(),
             peak_sram: self.peak_sram(),
             flash_bytes: self.flash_bytes(),
             cycles: result.cycles,
-            latency_ms: cycles_to_ms(result.cycles),
+            latency_ms: self.target.seconds(result.cycles) * 1e3,
+            joules: self.target.joules(&result.counter),
             per_layer: result.per_layer,
         })
     }
@@ -331,6 +373,20 @@ pub fn deploy(
     image: &[f32],
 ) -> Result<DeployReport> {
     CompiledModel::compile(model, flat_params, cfg, method)?.report(image)
+}
+
+/// [`deploy`] against an explicit [`Target`] (resolved by name through
+/// [`Target::lookup`] at the CLI): SRAM gate, cycle pricing, latency
+/// clock and energy model all come from the target.
+pub fn deploy_for(
+    model: &ModelDesc,
+    flat_params: &[f32],
+    cfg: &BitConfig,
+    method: Method,
+    image: &[f32],
+    target: &Target,
+) -> Result<DeployReport> {
+    CompiledModel::compile_for(model, flat_params, cfg, method, target)?.report(image)
 }
 
 #[cfg(test)]
@@ -445,11 +501,46 @@ mod tests {
         let err = CompiledModel::compile(&m, &params, &cfg, Method::CmixNn)
             .err()
             .expect("oversized model must be rejected");
-        assert!(format!("{err:#}").contains("exceeds STM32F746 SRAM"));
+        assert!(format!("{err:#}").contains("exceeds stm32f746 SRAM"));
         // The unbounded path still builds the artifact so comparison
         // tables can report the violation in their peak-memory column.
         let cm = CompiledModel::compile_unbounded(&m, &params, &cfg, Method::CmixNn);
         assert!(cm.peak_sram() > crate::STM32F746_SRAM_BYTES);
+    }
+
+    #[test]
+    fn compile_for_target_prices_with_the_target_models() {
+        let m = vgg_tiny(10, 16);
+        let params = fake_params(m.param_count);
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let m7 = Target::lookup("m7").unwrap();
+        let m4 = Target::lookup("m4").unwrap();
+        let a = CompiledModel::compile_for(&m, &params, &cfg, Method::RpSlbc, m7).unwrap();
+        let b = CompiledModel::compile_for(&m, &params, &cfg, Method::RpSlbc, m4).unwrap();
+        let img = vec![0.5f32; 16 * 16 * 3];
+        let ra = a.report(&img).unwrap();
+        let rb = b.report(&img).unwrap();
+        assert_eq!(ra.target, "stm32f746");
+        assert_eq!(rb.target, "stm32f446");
+        // Same computation, device-specific pricing: the M4 never runs
+        // it in fewer cycles, always in more wall-clock, and always for
+        // fewer joules.
+        let run_a = a.run(&img).unwrap();
+        let run_b = b.run(&img).unwrap();
+        assert_eq!(run_a.logits, run_b.logits, "bit-exact across targets");
+        assert_eq!(run_a.counter, run_b.counter, "same instruction histogram");
+        assert!(rb.cycles >= ra.cycles);
+        assert!(rb.latency_ms > ra.latency_ms, "slower clock, longer latency");
+        assert!(rb.joules < ra.joules, "smaller core, fewer joules");
+        assert!(ra.joules > 0.0);
+
+        // The SRAM gate is the *target's* gate, not a global constant.
+        let mut tiny = *m7;
+        tiny.sram_bytes = 16;
+        let err = CompiledModel::compile_for(&m, &params, &cfg, Method::RpSlbc, &tiny)
+            .err()
+            .expect("16B SRAM must reject everything");
+        assert!(format!("{err:#}").contains("exceeds stm32f746 SRAM"));
     }
 
     #[test]

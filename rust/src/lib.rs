@@ -33,6 +33,12 @@
 //!    reporting ([`serve::stats`]) — driven by the `serve` /
 //!    `bench-serve` CLI subcommands over deterministic synthetic or
 //!    file-recorded traces ([`serve::trace`]).
+//! 5. **Target layer** — the unified device description ([`target`]):
+//!    a named-target registry (`stm32f746`/`m7`, `stm32f446`/`m4`)
+//!    owning clocks, memory maps, cycle tables and [`target::EnergyModel`]s,
+//!    consumed by the engine (compile-for-target), the Eq. 12 predictor
+//!    (cycles *and* joules) and the serving fleet (energy-aware
+//!    placement).
 //!
 //! ## Three-layer architecture
 //!
@@ -58,29 +64,18 @@ pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod simd;
+pub mod target;
 pub mod util;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
 
-/// STM32F746 (the paper's evaluation platform) clock frequency in Hz.
-pub const STM32F746_CLOCK_HZ: u64 = 216_000_000;
-
-/// STM32F746 SRAM capacity in bytes (320 KB).
-pub const STM32F746_SRAM_BYTES: usize = 320 * 1024;
-
-/// STM32F746 flash capacity in bytes (1 MB).
-pub const STM32F746_FLASH_BYTES: usize = 1024 * 1024;
-
-/// STM32F446 (Cortex-M4 class, the heterogeneous-fleet companion part)
-/// clock frequency in Hz.
-pub const STM32F446_CLOCK_HZ: u64 = 180_000_000;
-
-/// STM32F446 SRAM capacity in bytes (128 KB).
-pub const STM32F446_SRAM_BYTES: usize = 128 * 1024;
-
-/// STM32F446 flash capacity in bytes (512 KB).
-pub const STM32F446_FLASH_BYTES: usize = 512 * 1024;
+// Device constants live in the [`target`] registry (the single source of
+// truth for clocks/SRAM/flash); these are compatibility re-exports.
+pub use target::{
+    STM32F446_CLOCK_HZ, STM32F446_FLASH_BYTES, STM32F446_SRAM_BYTES, STM32F746_CLOCK_HZ,
+    STM32F746_FLASH_BYTES, STM32F746_SRAM_BYTES,
+};
 
 /// Convert a cycle count on the simulated Cortex-M7 into milliseconds at the
 /// paper's 216 MHz clock. This is also the conversion for the serving

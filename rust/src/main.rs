@@ -29,6 +29,7 @@ use mcu_mixq::runtime::{lit, ArtifactStore, Runtime};
 use mcu_mixq::serve::{
     self, AdmissionKind, DeviceCfg, SchedulerKind, ServeCfg, ServeReport, TraceCfg, Workload,
 };
+use mcu_mixq::target::Target;
 use mcu_mixq::util::bench::Table;
 use mcu_mixq::util::cli::Args;
 use mcu_mixq::Result;
@@ -80,11 +81,12 @@ fn print_help() {
          \x20 qat      --backbone B         QAT at fixed bits\n\
          \x20          [--steps N] [--wbits 4,4,..] [--abits 4,4,..]\n\
          \x20 pipeline --backbone B         full search→QAT→deploy→compare\n\
+         \x20          [--target stm32f746]\n\
          \x20 deploy   --backbone B         deploy one method\n\
-         \x20          [--method rp-slbc] [--bits 4]\n\
+         \x20          [--method rp-slbc] [--bits 4] [--target stm32f746]\n\
          \x20 serve                         replay a request trace on an MCU fleet\n\
          \x20          [--mix backbone:method:bits[:weight],...]\n\
-         \x20          [--fleet m7:4,m4:4] [--sched rr|least|slo]\n\
+         \x20          [--fleet m7:4,m4:4] [--sched rr|least|slo|energy]\n\
          \x20          [--admission fifo|class] [--preempt] [--steal]\n\
          \x20          [--requests N] [--devices N] [--mean-gap-ms F]\n\
          \x20          [--skew F] [--slo-mix I,S,B] [--burst P,S]\n\
@@ -101,6 +103,25 @@ fn print_help() {
          \x20                               [--smoke] [--repeats N] [--out FILE]\n\
          \x20 slbc-demo                     run the Layer-1 kernel via PJRT\n\
          \x20 calibrate                     fit Eq. 12 coefficients"
+    );
+    // Target lines come from the registry itself, so the help can never
+    // drift from the constants it documents.
+    println!("\nTARGETS (named device registry; `--target`, `--fleet` entries):");
+    for t in &mcu_mixq::target::REGISTRY {
+        println!(
+            "  {:<9} | {:<2}  {:>3} MHz  {:>3} KB SRAM  {:>4} KB flash",
+            t.name,
+            t.class.name(),
+            t.clock_hz / 1_000_000,
+            t.sram_bytes / 1024,
+            t.flash_bytes / 1024
+        );
+    }
+    println!(
+        "\nSCHEDULERS (`--sched`): rr (round-robin), least (least-loaded),\n\
+         \x20 slo (deadline-miss-minimizing), energy (minimize predicted\n\
+         \x20 joules subject to deadlines — deadline-free work routes to\n\
+         \x20 the most energy-efficient device class)"
     );
 }
 
@@ -221,6 +242,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let rt = Runtime::cpu()?;
     let backbone = backbone_arg(args);
     let mut cfg = PipelineCfg::new(&backbone);
+    cfg.target = parse_target(args)?.name.to_string();
     cfg.search.steps = args.usize_or("search-steps", cfg.search.steps);
     cfg.qat.steps = args.usize_or("qat-steps", cfg.qat.steps);
     cfg.use_edmips_proxy = args.str_or("proxy", "simd") == "edmips";
@@ -259,21 +281,24 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         abits: parse_bits(&args.str_or("bits", "4"), n)?,
     };
     let params = arts.load_init_params()?;
+    let target = parse_target(args)?;
     let probe = mcu_mixq::datasets::generate(
         mcu_mixq::datasets::Task::for_backbone(&model.name),
         1,
         model.input_hw,
         7,
     );
-    let rep = engine::deploy(&model, &params, &cfg, method, probe.image(0))?;
+    let rep = engine::deploy_for(&model, &params, &cfg, method, probe.image(0), target)?;
     println!(
-        "{} via {}: peak {:.2}KB flash {:.2}KB clocks {} latency {:.2}ms",
+        "{} via {} on {}: peak {:.2}KB flash {:.2}KB clocks {} latency {:.2}ms energy {:.2}mJ",
         rep.backbone,
         rep.method.name(),
+        rep.target,
         rep.peak_sram as f64 / 1024.0,
         rep.flash_bytes as f64 / 1024.0,
         rep.cycles,
-        rep.latency_ms
+        rep.latency_ms,
+        rep.joules * 1e3
     );
     for (name, cyc) in &rep.per_layer {
         println!("  {name:<14} {cyc:>10} cycles");
@@ -339,26 +364,17 @@ fn parse_mix(spec: &str) -> Result<(Vec<Workload>, Vec<f64>)> {
     Ok((workloads, weights))
 }
 
-/// Parse a `--fleet` spec: comma-separated `class[:count]` entries with
-/// class one of `m7`/`stm32f746` or `m4`/`stm32f446`, e.g. `m7:4,m4:4`.
+/// Parse a `--fleet` spec: comma-separated `target[:count]` entries,
+/// e.g. `m7:4,m4:4` — a delegation to the [`Target`] registry, whose
+/// errors name the offending token and the known target names.
 fn parse_fleet(spec: &str) -> Result<Vec<DeviceCfg>> {
-    let mut fleet = Vec::new();
-    for entry in spec.split(',') {
-        let entry = entry.trim();
-        if entry.is_empty() {
-            continue;
-        }
-        let (class, count) = match entry.split_once(':') {
-            Some((c, n)) => (c, n.trim().parse::<usize>()?),
-            None => (entry, 1),
-        };
-        let cfg = DeviceCfg::parse_class(class)
-            .ok_or_else(|| anyhow::anyhow!("unknown device class `{class}` in fleet spec"))?;
-        anyhow::ensure!(count >= 1, "device count must be >= 1 in `{entry}`");
-        fleet.extend(std::iter::repeat(cfg).take(count));
-    }
-    anyhow::ensure!(!fleet.is_empty(), "fleet spec `{spec}` names no devices");
-    Ok(fleet)
+    Target::parse_fleet(spec)
+}
+
+/// Resolve a `--target` argument through the registry, with the known
+/// names in the error.
+fn parse_target(args: &Args) -> Result<&'static Target> {
+    Target::resolve(&args.str_or("target", "stm32f746"))
 }
 
 /// Parse a `--slo-mix` spec: three comma-separated weights for the
@@ -404,8 +420,9 @@ fn run_serve_scenario(
         None => vec![DeviceCfg::stm32f746(); args.usize_or("devices", default_devices)],
     };
     let sched_spec = args.str_or("sched", "rr");
-    cfg.scheduler = SchedulerKind::parse(&sched_spec)
-        .ok_or_else(|| anyhow::anyhow!("unknown scheduler `{sched_spec}` (rr|least|slo)"))?;
+    cfg.scheduler = SchedulerKind::parse(&sched_spec).ok_or_else(|| {
+        anyhow::anyhow!("unknown scheduler `{sched_spec}` (rr|least|slo|energy)")
+    })?;
     let adm_spec = args.str_or("admission", "fifo");
     cfg.batcher.admission = AdmissionKind::parse(&adm_spec)
         .ok_or_else(|| anyhow::anyhow!("unknown admission policy `{adm_spec}` (fifo|class)"))?;

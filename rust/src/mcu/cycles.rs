@@ -66,7 +66,7 @@ impl CycleModel {
     /// multiply, ~2-cycle loads from DTCM/SRAM (no cache miss modelling —
     /// the evaluation working sets fit SRAM), 1-cycle stores (write
     /// buffer), taken branches cost the ~2-cycle refill on top.
-    pub fn cortex_m7() -> Self {
+    pub const fn cortex_m7() -> Self {
         CycleModel {
             alu: 1,
             bit: 1,
@@ -83,7 +83,7 @@ impl CycleModel {
 
     /// Cortex-M4 (for sensitivity studies): 1-cycle ALU, 1-cycle DSP,
     /// 3–5 cycle long multiplies, 2-cycle loads.
-    pub fn cortex_m4() -> Self {
+    pub const fn cortex_m4() -> Self {
         CycleModel {
             alu: 1,
             bit: 1,

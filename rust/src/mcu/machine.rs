@@ -34,17 +34,23 @@ pub struct Machine {
 }
 
 impl Machine {
-    /// Machine with STM32F746 memory and the M7 cycle table.
-    pub fn stm32f746() -> Self {
-        Machine::new(Memory::stm32f746(), CycleModel::cortex_m7())
+    /// Machine configured for a [`Target`](crate::target::Target): the
+    /// target's memory map plus its cycle table.
+    pub fn for_target(t: &crate::target::Target) -> Self {
+        Machine::new(Memory::for_target(t), t.cycle_model)
     }
 
-    /// Machine with STM32F446 memory and the M4 cycle table — the
-    /// slower, smaller device class of heterogeneous fleet simulations
-    /// (same ISA subset; long multiplies cost more, and the part runs at
-    /// 180 MHz with 128 KB SRAM).
+    /// Machine for the `stm32f746` registry target (M7 profile).
+    pub fn stm32f746() -> Self {
+        Machine::for_target(&crate::target::Target::stm32f746())
+    }
+
+    /// Machine for the `stm32f446` registry target — the slower, smaller
+    /// device class of heterogeneous fleet simulations (same ISA subset;
+    /// long multiplies cost more, and the part runs a slower clock with
+    /// less SRAM).
     pub fn stm32f446() -> Self {
-        Machine::new(Memory::stm32f446(), CycleModel::cortex_m4())
+        Machine::for_target(&crate::target::Target::stm32f446())
     }
 
     pub fn new(mem: Memory, model: CycleModel) -> Self {

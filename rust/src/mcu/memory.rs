@@ -25,15 +25,22 @@ pub enum MemError {
 }
 
 impl Memory {
-    /// Memory with the paper platform's sizes (1 MB flash, 320 KB SRAM).
-    pub fn stm32f746() -> Self {
-        Memory::with_sizes(crate::STM32F746_FLASH_BYTES, crate::STM32F746_SRAM_BYTES)
+    /// Memory sized for a [`Target`](crate::target::Target)'s flash and
+    /// SRAM capacities.
+    pub fn for_target(t: &crate::target::Target) -> Self {
+        Memory::with_sizes(t.flash_bytes, t.sram_bytes)
     }
 
-    /// Memory with the M4-class companion part's sizes (512 KB flash,
-    /// 128 KB SRAM) used by heterogeneous-fleet simulation.
+    /// Memory with the `stm32f746` registry target's sizes (the paper
+    /// platform: 1 MB flash, 320 KB SRAM).
+    pub fn stm32f746() -> Self {
+        Memory::for_target(&crate::target::Target::stm32f746())
+    }
+
+    /// Memory with the `stm32f446` registry target's sizes (the M4-class
+    /// companion part) used by heterogeneous-fleet simulation.
     pub fn stm32f446() -> Self {
-        Memory::with_sizes(crate::STM32F446_FLASH_BYTES, crate::STM32F446_SRAM_BYTES)
+        Memory::for_target(&crate::target::Target::stm32f446())
     }
 
     pub fn with_sizes(flash_bytes: usize, sram_bytes: usize) -> Self {

@@ -56,6 +56,13 @@ impl PerfModel {
         PerfModel::from_cycles(&CycleModel::cortex_m7())
     }
 
+    /// Coefficients for a named [`Target`](crate::target::Target) — the
+    /// registry-routed way to build the Eq. 12 model for whatever core
+    /// the pipeline is deploying to.
+    pub fn for_target(t: &crate::target::Target) -> PerfModel {
+        PerfModel::from_cycles(&t.cycle_model)
+    }
+
     /// Eq. 12: collapse an instruction-class decomposition into the scalar
     /// complexity metric.
     pub fn complexity(&self, sisd: f64, simd: f64, bit: f64) -> f64 {

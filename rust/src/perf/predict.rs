@@ -35,6 +35,21 @@ impl PredictedCost {
             bit,
         }
     }
+
+    /// Price the predicted histogram in a target's cycles — identical
+    /// to folding `self.counter` through the target's cycle table (the
+    /// pre-`Target` pricing path), pinned by the `target_api` tests on
+    /// the fig5/fig6 operand sets.
+    pub fn cycles_on(&self, target: &crate::target::Target) -> u64 {
+        target.cycles(&self.counter)
+    }
+
+    /// Price the predicted histogram in joules on a target: dynamic
+    /// per-instruction energy plus static power over the predicted
+    /// execution time.
+    pub fn joules_on(&self, target: &crate::target::Target) -> f64 {
+        target.joules(&self.counter)
+    }
 }
 
 /// Predict the instruction mix of running `layer` with `method` at

@@ -1,8 +1,10 @@
 //! A heterogeneous pool of simulated MCU devices executing batches in
 //! virtual time.
 //!
-//! Every device is a serial executor with its own SRAM budget, clock,
-//! per-class [`CycleModel`], cumulative instruction [`Counter`] and a
+//! Every device is a serial executor described by a [`Target`] (SRAM
+//! budget, clock, per-class [`CycleModel`](crate::mcu::CycleModel) and
+//! [`EnergyModel`](crate::target::EnergyModel)), with a cumulative
+//! instruction [`Counter`] and a
 //! virtual-time timeline (`busy_until`). The timeline is denominated in
 //! **reference cycles** of the paper platform's 216 MHz Cortex-M7 clock:
 //! a batch that costs `c` cycles *on its device's cycle model* occupies
@@ -38,74 +40,25 @@
 use std::collections::VecDeque;
 
 use super::batcher::BATCH_OVERHEAD_CYCLES;
-use crate::mcu::{Counter, CycleModel};
+use crate::mcu::Counter;
+use crate::target::Target;
 
-/// Device class label (reporting + fleet-spec parsing).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DeviceClass {
-    /// Cortex-M7 class (STM32F746 profile).
-    M7,
-    /// Cortex-M4 class (STM32F446 profile).
-    M4,
-}
+pub use crate::target::DeviceClass;
 
-impl DeviceClass {
-    pub fn name(&self) -> &'static str {
-        match self {
-            DeviceClass::M7 => "m7",
-            DeviceClass::M4 => "m4",
-        }
-    }
-}
+/// Hardware parameters of one simulated device — an alias of the
+/// unified [`Target`] type: the registry ([`Target::lookup`],
+/// [`Target::parse_fleet`]) is the single source of device constants,
+/// and the fleet prices batches with `target.cycle_model` /
+/// `target.energy_model` directly.
+pub type DeviceCfg = Target;
 
-/// Hardware parameters of one simulated device.
-#[derive(Debug, Clone, Copy)]
-pub struct DeviceCfg {
-    pub class: DeviceClass,
-    pub sram_bytes: usize,
-    pub clock_hz: u64,
-    /// Per-class instruction costs of this device — batch costs are
-    /// priced with the *target* device's table, not a global one.
-    pub cycle_model: CycleModel,
-}
-
-impl Default for DeviceCfg {
-    fn default() -> Self {
-        DeviceCfg::stm32f746()
-    }
-}
-
-impl DeviceCfg {
-    /// The paper's evaluation platform (Cortex-M7, 320 KB SRAM, 216 MHz).
-    pub fn stm32f746() -> DeviceCfg {
-        DeviceCfg {
-            class: DeviceClass::M7,
-            sram_bytes: crate::STM32F746_SRAM_BYTES,
-            clock_hz: crate::STM32F746_CLOCK_HZ,
-            cycle_model: CycleModel::cortex_m7(),
-        }
-    }
-
-    /// An STM32F446-class companion part (Cortex-M4, 128 KB SRAM,
-    /// 180 MHz, 4-cycle long multiplies) — the "just enough data width"
-    /// end of a heterogeneous extreme-edge fleet.
-    pub fn stm32f446() -> DeviceCfg {
-        DeviceCfg {
-            class: DeviceClass::M4,
-            sram_bytes: crate::STM32F446_SRAM_BYTES,
-            clock_hz: crate::STM32F446_CLOCK_HZ,
-            cycle_model: CycleModel::cortex_m4(),
-        }
-    }
-
+/// Serving-layer pricing on top of [`Target`]: batch overhead, the
+/// shared reference timeline, and per-batch energy.
+impl Target {
     /// Parse a single fleet-spec class token (`m7`, `m4`, or the full
-    /// part names).
+    /// part names) — a delegation to the [`Target`] registry.
     pub fn parse_class(s: &str) -> Option<DeviceCfg> {
-        match s.trim().to_ascii_lowercase().as_str() {
-            "m7" | "stm32f746" => Some(DeviceCfg::stm32f746()),
-            "m4" | "stm32f446" => Some(DeviceCfg::stm32f446()),
-            _ => None,
-        }
+        Target::lookup(s).copied()
     }
 
     /// Cycles one batch costs *on this device*: the per-invocation
@@ -130,6 +83,14 @@ impl DeviceCfg {
     /// Shared-timeline cost of one batch on this device.
     pub fn timeline_cost(&self, ctr: &Counter) -> u64 {
         self.to_timeline(self.batch_cycles(ctr))
+    }
+
+    /// Predicted energy of one batch on this device: dynamic energy of
+    /// the histogram plus static power over the batch's execution time
+    /// (inference + invocation overhead) at this device's clock.
+    pub fn batch_joules(&self, ctr: &Counter) -> f64 {
+        self.energy_model.dynamic_joules(ctr)
+            + self.energy_model.static_watts() * self.seconds(self.batch_cycles(ctr))
     }
 }
 
@@ -247,6 +208,17 @@ impl Device {
         } else {
             self.busy_cycles as f64 / horizon_cycles as f64
         }
+    }
+
+    /// Total energy this device spent executing: dynamic energy of the
+    /// cumulative instruction histogram plus static power over its busy
+    /// time. Busy time is exact in the shared reference timeline
+    /// (reference cycles / 216 MHz = seconds, whatever the device's own
+    /// clock), so the static term needs no per-device conversion.
+    pub fn joules(&self) -> f64 {
+        self.cfg.energy_model.dynamic_joules(&self.counter)
+            + self.cfg.energy_model.static_watts()
+                * (self.busy_cycles as f64 / crate::STM32F746_CLOCK_HZ as f64)
     }
 
     /// Earliest in-flight finish strictly after `now` (for backpressure).
@@ -633,6 +605,32 @@ mod tests {
         // 5 device cycles is exactly 6 reference cycles.
         assert_eq!(m4.to_timeline(5), 6);
         assert_eq!(m4.to_timeline(0), 0);
+    }
+
+    #[test]
+    fn m4_batch_is_cheaper_in_joules_despite_costing_more_timeline() {
+        let ctr = cheap_counter();
+        let m7 = DeviceCfg::stm32f746();
+        let m4 = DeviceCfg::stm32f446();
+        assert!(m4.timeline_cost(&ctr) > m7.timeline_cost(&ctr));
+        assert!(
+            m4.batch_joules(&ctr) < m7.batch_joules(&ctr),
+            "m4 {} J vs m7 {} J",
+            m4.batch_joules(&ctr),
+            m7.batch_joules(&ctr)
+        );
+    }
+
+    #[test]
+    fn device_energy_accounts_dynamic_plus_static() {
+        let mut fleet = Fleet::homogeneous(1, DeviceCfg::stm32f746(), 8);
+        let ctr = cheap_counter();
+        assert_eq!(fleet.devices[0].joules(), 0.0, "idle device spends nothing");
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        let j = fleet.devices[0].joules();
+        assert!(j > 0.0);
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        assert!(fleet.devices[0].joules() > j, "energy is cumulative");
     }
 
     #[test]

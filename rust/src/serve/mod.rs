@@ -17,28 +17,33 @@
 //!          window and mixed flushed batches split into
 //!          deadline-critical + deferrable halves)
 //!       ─► scheduler (pluggable policy: round-robin | least-loaded |
-//!            slo-aware, each pricing batches with the TARGET device's
-//!            cycle model; every placement is a dispatch step that, in
-//!            steal mode, resolves started batches and lets drained
-//!            devices steal pending work)
-//!         ─► fleet (heterogeneous M7/M4 devices: per-device SRAM,
-//!              clock and cycle table; shared 216 MHz reference
-//!              timeline; queue-depth backpressure; in steal mode,
-//!              committed-but-not-started batches are migratable queue
-//!              entries with per-device migration accounting)
+//!            slo-aware | energy-aware, each pricing batches with the
+//!            target device's own cycle AND energy models; every
+//!            placement is a dispatch step that, in steal mode, resolves
+//!            started batches and lets drained devices steal pending
+//!            work)
+//!         ─► fleet (heterogeneous devices, each described by one
+//!              [`Target`](crate::target::Target) from the named
+//!              registry — SRAM, clock, cycle table, energy model;
+//!              shared 216 MHz reference timeline; queue-depth
+//!              backpressure; in steal mode, committed-but-not-started
+//!              batches are migratable queue entries with per-device
+//!              migration accounting)
 //!           ─► stats (p50/p95/p99, throughput from the first arrival
 //!                epoch, deadline + shed-SLO misses per class,
-//!                migrations)
+//!                migrations, joules per device and per inference)
 //! ```
 //!
 //! * [`registry`] — multi-tenant model registry with an LRU
 //!   compile-once artifact cache and cross-tenant weight sharing
 //!   (identical-params tenants collapse onto one artifact);
-//! * [`fleet`] — the device pool mechanics: per-device SRAM budget,
-//!   clock, [`CycleModel`](crate::mcu::CycleModel), cycle
-//!   [`Counter`](crate::mcu::Counter), virtual-time timeline and the
+//! * [`fleet`] — the device pool mechanics: each device is a
+//!   [`Target`](crate::target::Target) (SRAM budget, clock,
+//!   [`CycleModel`](crate::mcu::CycleModel),
+//!   [`EnergyModel`](crate::target::EnergyModel)) plus a cycle
+//!   [`Counter`](crate::mcu::Counter), a virtual-time timeline and the
 //!   work-stealing pending queues;
-//! * [`sched`] — the [`Scheduler`] trait and the three built-in
+//! * [`sched`] — the [`Scheduler`] trait and the four built-in
 //!   placement policies;
 //! * [`batcher`] — bounded request queue + dynamic batching window,
 //!   class-aware admission and deadline-driven preemption;
@@ -68,7 +73,7 @@ pub use fleet::{
     BatchWork, Device, DeviceCfg, DeviceClass, Dispatch, Fleet, PendingBatch, Resolution,
 };
 pub use registry::{hash_params, ModelKey, Registry, RegistryStats};
-pub use sched::{LeastLoaded, RoundRobin, Scheduler, SchedulerKind, SloAware};
+pub use sched::{EnergyAware, LeastLoaded, RoundRobin, Scheduler, SchedulerKind, SloAware};
 pub use stats::{DeviceStats, LatencySummary, ModelStats, ServeReport};
 pub use trace::{
     load_trace, save_trace, synth_trace, trace_from_json, trace_to_json, SloClass, TraceCfg,
@@ -496,7 +501,7 @@ pub fn run_trace(
             }
         })
         .collect();
-    let per_device = fleet
+    let per_device: Vec<DeviceStats> = fleet
         .devices
         .iter()
         .map(|d| DeviceStats {
@@ -509,8 +514,10 @@ pub fn run_trace(
             // start late must not deflate utilization either.
             utilization: d.utilization(span_cycles),
             migrations: d.migrations,
+            joules: d.joules(),
         })
         .collect();
+    let total_joules: f64 = per_device.iter().map(|d| d.joules).sum();
 
     Ok(ServeReport {
         scheduler: cfg.scheduler.name().to_string(),
@@ -530,6 +537,7 @@ pub fn run_trace(
         first_arrival_cycles: first_arrival,
         makespan_cycles: makespan,
         throughput_rps,
+        total_joules,
         latency: LatencySummary::from_cycles(&latencies),
         per_model,
         per_device,
@@ -595,6 +603,12 @@ mod tests {
         let images: u64 = rep.per_device.iter().map(|d| d.images).sum();
         assert_eq!(images, rep.completed as u64);
         assert!(rep.per_device.iter().all(|d| d.class == "m7"));
+        // Energy accounting: completed work costs joules, and the fleet
+        // total is the per-device sum.
+        assert!(rep.total_joules > 0.0);
+        assert!(rep.joules_per_inference() > 0.0);
+        let dev_sum: f64 = rep.per_device.iter().map(|d| d.joules).sum();
+        assert!((rep.total_joules - dev_sum).abs() < 1e-12);
     }
 
     #[test]
@@ -991,6 +1005,53 @@ mod tests {
         assert_eq!(slo.deadline_misses, 0, "slo-aware keeps it on the M7");
         assert_eq!(slo.per_model[0].deadline_misses, 0);
         assert_eq!(rr.per_model[0].deadline_misses, 1);
+    }
+
+    #[test]
+    fn energy_aware_cuts_fleet_joules_without_new_misses() {
+        // Two best-effort requests over [M7, M4]: SLO-aware placement
+        // chases the earliest finish (the M7 at least once), while
+        // energy-aware placement routes deadline-free work to the
+        // cheaper-in-joules M4 — strictly reducing fleet energy with
+        // zero deadline impact (nothing here carries one).
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::RpSlbc, 4, 21).unwrap()];
+        let trace = vec![
+            TraceRequest::best_effort(0, 0, 0, 777),
+            TraceRequest::best_effort(1, 0, 0, 778),
+        ];
+        let mk = |scheduler: SchedulerKind| ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746(), DeviceCfg::stm32f446()],
+            scheduler,
+            max_queue_depth: 8,
+            batcher: BatcherCfg {
+                max_batch: 1,
+                max_wait_cycles: 0,
+                max_queue: 64,
+                ..BatcherCfg::default()
+            },
+            ..ServeCfg::default()
+        };
+        let slo = run_trace(&ws, &trace, &mk(SchedulerKind::SloAware)).unwrap();
+        let energy = run_trace(&ws, &trace, &mk(SchedulerKind::EnergyAware)).unwrap();
+        assert_eq!(slo.completed, 2);
+        assert_eq!(energy.completed, 2);
+        assert_eq!(energy.scheduler, "energy-aware");
+        // SLO-aware sends the first (idle-fleet) batch to the faster
+        // M7; energy-aware concentrates both on the efficient M4.
+        assert!(slo.per_device[0].images >= 1, "slo-aware uses the M7");
+        assert_eq!(energy.per_device[1].images, 2, "energy-aware uses the M4");
+        assert_eq!(energy.per_device[0].images, 0);
+        assert!(
+            energy.total_joules < slo.total_joules,
+            "energy {} J vs slo {} J",
+            energy.total_joules,
+            slo.total_joules
+        );
+        // No deadline was traded away for the savings.
+        assert_eq!(slo.total_misses(), 0);
+        assert_eq!(energy.total_misses(), 0);
+        // The saving shows up per inference too.
+        assert!(energy.joules_per_inference() < slo.joules_per_inference());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! device prices with its own [`CycleModel`](crate::mcu::CycleModel),
 //! plus the members' absolute deadlines.
 //!
-//! Three built-in policies:
+//! Four built-in policies:
 //!
 //! * [`RoundRobin`] — the original homogeneous-fleet behavior: a cursor
 //!   walks the pool, skipping ineligible devices. On an all-M7 fleet the
@@ -19,6 +19,14 @@
 //!   own* cycle model and clock; picks the device minimizing predicted
 //!   deadline misses, breaking ties by earliest finish. Deadline-miss
 //!   counts surface in [`ServeReport`](super::ServeReport).
+//! * [`EnergyAware`] — minimizes predicted energy *subject to
+//!   deadlines*: same predicted-miss primary key as [`SloAware`], but
+//!   zero-miss ties break to the device whose
+//!   [`EnergyModel`](crate::target::EnergyModel) prices the batch
+//!   cheapest (then earliest finish). Deadline-free work concentrates on
+//!   the most efficient device class (the M4s), with queue-depth
+//!   backpressure spilling overflow; deadline work takes a faster
+//!   device only when the efficient one would miss.
 //!
 //! All policies share the same backpressure discipline through the
 //! provided [`Scheduler::place`]: when no device is eligible, virtual
@@ -118,6 +126,18 @@ impl Scheduler for LeastLoaded {
     }
 }
 
+/// Predicted (deadline misses, finish cycle) of `work` on device `i`:
+/// the batch priced with that device's own cycle model + clock, started
+/// at the later of `now` and the device's drain. The shared primary key
+/// of [`SloAware`] and [`EnergyAware`] — one formula, so the two
+/// policies can never drift on what "meets the deadlines" means.
+fn predicted(fleet: &Fleet, i: usize, now: u64, work: &BatchWork) -> (usize, u64) {
+    let d = &fleet.devices[i];
+    let finish = now.max(d.busy_until) + d.cfg.timeline_cost(work.counter);
+    let misses = work.deadlines.iter().filter(|&&dl| finish > dl).count();
+    (misses, finish)
+}
+
 /// Deadline-aware placement: predict each eligible device's finish time
 /// for this batch with that device's cycle model + clock, count the
 /// member deadlines the prediction would miss, and take the device with
@@ -137,15 +157,39 @@ impl Scheduler for SloAware {
         (0..fleet.len())
             .filter(|&i| fleet.eligible(i, now, work.peak_sram))
             .min_by_key(|&i| {
-                let d = &fleet.devices[i];
-                let finish = now.max(d.busy_until) + d.cfg.timeline_cost(work.counter);
-                let misses = work
-                    .deadlines
-                    .iter()
-                    .filter(|&&dl| finish > dl)
-                    .count();
+                let (misses, finish) = predicted(fleet, i, now, work);
                 (misses, finish, i)
             })
+    }
+}
+
+/// Energy-aware placement: never accept a predicted deadline miss to
+/// save energy (the miss count is the primary key, exactly as in
+/// [`SloAware`]), but among devices that meet every member deadline,
+/// take the one that executes the batch for the fewest predicted joules
+/// — dynamic energy of the histogram plus static power over the batch's
+/// runtime, both priced with the candidate device's own
+/// [`Target`](crate::target::Target) models. Ties (same energy, e.g.
+/// same-class devices) break to earliest predicted finish, then lowest
+/// id.
+#[derive(Debug, Default)]
+pub struct EnergyAware;
+
+impl Scheduler for EnergyAware {
+    fn name(&self) -> &'static str {
+        "energy-aware"
+    }
+
+    fn pick(&mut self, now: u64, work: &BatchWork, fleet: &Fleet) -> Option<usize> {
+        (0..fleet.len())
+            .filter(|&i| fleet.eligible(i, now, work.peak_sram))
+            .map(|i| {
+                let (misses, finish) = predicted(fleet, i, now, work);
+                let joules = fleet.devices[i].cfg.batch_joules(work.counter);
+                (misses, joules, finish, i)
+            })
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(_, _, _, i)| i)
     }
 }
 
@@ -157,13 +201,15 @@ pub enum SchedulerKind {
     RoundRobin,
     LeastLoaded,
     SloAware,
+    EnergyAware,
 }
 
 impl SchedulerKind {
-    pub const ALL: [SchedulerKind; 3] = [
+    pub const ALL: [SchedulerKind; 4] = [
         SchedulerKind::RoundRobin,
         SchedulerKind::LeastLoaded,
         SchedulerKind::SloAware,
+        SchedulerKind::EnergyAware,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -171,15 +217,18 @@ impl SchedulerKind {
             SchedulerKind::RoundRobin => "round-robin",
             SchedulerKind::LeastLoaded => "least-loaded",
             SchedulerKind::SloAware => "slo-aware",
+            SchedulerKind::EnergyAware => "energy-aware",
         }
     }
 
-    /// Parse a CLI spelling (`rr`, `least`, `slo`, or the full names).
+    /// Parse a CLI spelling (`rr`, `least`, `slo`, `energy`, or the
+    /// full names).
     pub fn parse(s: &str) -> Option<SchedulerKind> {
         match s.trim().to_ascii_lowercase().as_str() {
             "rr" | "round-robin" | "roundrobin" => Some(SchedulerKind::RoundRobin),
             "least" | "least-loaded" | "leastloaded" => Some(SchedulerKind::LeastLoaded),
             "slo" | "slo-aware" | "sloaware" => Some(SchedulerKind::SloAware),
+            "energy" | "energy-aware" | "energyaware" => Some(SchedulerKind::EnergyAware),
             _ => None,
         }
     }
@@ -190,6 +239,7 @@ impl SchedulerKind {
             SchedulerKind::RoundRobin => Box::new(RoundRobin::new()),
             SchedulerKind::LeastLoaded => Box::new(LeastLoaded),
             SchedulerKind::SloAware => Box::new(SloAware),
+            SchedulerKind::EnergyAware => Box::new(EnergyAware),
         }
     }
 }
@@ -313,9 +363,53 @@ mod tests {
         assert_eq!(SchedulerKind::parse("rr"), Some(SchedulerKind::RoundRobin));
         assert_eq!(SchedulerKind::parse("least"), Some(SchedulerKind::LeastLoaded));
         assert_eq!(SchedulerKind::parse("SLO"), Some(SchedulerKind::SloAware));
+        assert_eq!(SchedulerKind::parse("energy"), Some(SchedulerKind::EnergyAware));
         assert_eq!(SchedulerKind::parse("fifo"), None);
         for kind in SchedulerKind::ALL {
             assert_eq!(kind.build().name(), kind.name());
         }
+    }
+
+    #[test]
+    fn energy_aware_routes_deadline_free_work_to_the_efficient_device() {
+        // [M7, M4], both idle, no deadlines: SloAware takes the faster
+        // M7; EnergyAware takes the cheaper-in-joules M4 — and keeps
+        // taking it while its queue still meets the (absent) deadlines.
+        let m7 = DeviceCfg::stm32f746();
+        let m4 = DeviceCfg::stm32f446();
+        let c = ctr(1000);
+        assert!(m4.batch_joules(&c) < m7.batch_joules(&c));
+        let mut fleet = Fleet::new(vec![m7, m4], 8);
+        let mut ea = EnergyAware;
+        let first = ea.place(&work(0, &c, &[]), &mut fleet).unwrap();
+        assert_eq!(first.device, 1, "idle fleet: energy picks the M4");
+        let second = ea.place(&work(0, &c, &[]), &mut fleet).unwrap();
+        assert_eq!(second.device, 1, "energy is state-independent; M4 again");
+
+        let mut slo_fleet = Fleet::new(vec![m7, m4], 8);
+        let mut slo = SloAware;
+        let slo_first = slo.place(&work(0, &c, &[]), &mut slo_fleet).unwrap();
+        assert_eq!(slo_first.device, 0, "slo-aware picks the faster M7");
+    }
+
+    #[test]
+    fn energy_aware_never_trades_a_deadline_for_joules() {
+        // A deadline only the M7 can meet: the energy policy must route
+        // to the M7 even though the M4 would be cheaper.
+        let m7 = DeviceCfg::stm32f746();
+        let m4 = DeviceCfg::stm32f446();
+        let c = ctr(1_000_000);
+        let c7 = m7.timeline_cost(&c);
+        let c4 = m4.timeline_cost(&c);
+        assert!(c4 > c7);
+        let mut fleet = Fleet::new(vec![m7, m4], 8);
+        let mut ea = EnergyAware;
+        let dl = [c7]; // exactly the M7's idle finish; the M4 misses it
+        let d = ea.place(&work(0, &c, &dl), &mut fleet).unwrap();
+        assert_eq!(d.device, 0, "deadline pressure overrides energy");
+        // A relaxed deadline both devices meet goes back to the M4.
+        let loose = [10 * c4];
+        let d = ea.place(&work(0, &c, &loose), &mut fleet).unwrap();
+        assert_eq!(d.device, 1);
     }
 }

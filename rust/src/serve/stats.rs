@@ -98,6 +98,21 @@ pub struct DeviceStats {
     /// Pending batches this device stole from backlogged neighbors
     /// (work-stealing mode).
     pub migrations: u64,
+    /// Energy this device spent executing (dynamic instruction energy
+    /// plus static power over busy time), in joules — priced by the
+    /// device target's [`EnergyModel`](crate::target::EnergyModel).
+    pub joules: f64,
+}
+
+impl DeviceStats {
+    /// Mean energy per image executed on this device.
+    pub fn joules_per_inference(&self) -> f64 {
+        if self.images == 0 {
+            0.0
+        } else {
+            self.joules / self.images as f64
+        }
+    }
 }
 
 /// Everything one trace replay produced.
@@ -140,6 +155,8 @@ pub struct ServeReport {
     pub makespan_cycles: u64,
     /// Completed requests per second of virtual MCU time.
     pub throughput_rps: f64,
+    /// Total fleet energy over the replay (sum of per-device joules).
+    pub total_joules: f64,
     pub latency: LatencySummary,
     pub per_model: Vec<ModelStats>,
     pub per_device: Vec<DeviceStats>,
@@ -188,6 +205,15 @@ impl ServeReport {
             + self.sram_deadline_by_class[class_idx]
     }
 
+    /// Mean fleet energy per completed inference, in joules.
+    pub fn joules_per_inference(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.total_joules / self.completed as f64
+        }
+    }
+
     /// Render the summary + per-model + per-device tables.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -226,6 +252,11 @@ impl ServeReport {
             self.latency.max_ms
         ));
         out.push_str(&format!(
+            "energy {:.3} mJ total, {:.4} mJ/inference\n",
+            self.total_joules * 1e3,
+            self.joules_per_inference() * 1e3
+        ));
+        out.push_str(&format!(
             "artifact cache: {} hits / {} misses ({:.0}% hit rate), {} shared hits, {} compiles, {} evictions (engine compile count +{})\n\n",
             self.cache.hits,
             self.cache.misses,
@@ -258,7 +289,7 @@ impl ServeReport {
         out.push('\n');
 
         let mut dt = Table::new(vec![
-            "device", "class", "batches", "images", "busy cycles", "util", "stolen",
+            "device", "class", "batches", "images", "busy cycles", "util", "stolen", "energy",
         ]);
         for d in &self.per_device {
             dt.row(vec![
@@ -269,6 +300,7 @@ impl ServeReport {
                 format!("{}", d.busy_cycles),
                 format!("{:.1}%", d.utilization * 100.0),
                 format!("{}", d.migrations),
+                format!("{:.3}mJ", d.joules * 1e3),
             ]);
         }
         out.push_str(&dt.render());
@@ -331,6 +363,11 @@ impl ServeReport {
         );
         o.insert("virtual_s".into(), Json::Num(self.virtual_s()));
         o.insert("throughput_rps".into(), Json::Num(self.throughput_rps));
+        o.insert("total_joules".into(), Json::Num(self.total_joules));
+        o.insert(
+            "joules_per_inference".into(),
+            Json::Num(self.joules_per_inference()),
+        );
         o.insert("latency".into(), self.latency.to_json());
         o.insert(
             "cache_hit_rate".into(),
@@ -384,6 +421,11 @@ impl ServeReport {
                 obj.insert("busy_cycles".into(), Json::Num(d.busy_cycles as f64));
                 obj.insert("utilization".into(), Json::Num(d.utilization));
                 obj.insert("migrations".into(), Json::Num(d.migrations as f64));
+                obj.insert("joules".into(), Json::Num(d.joules));
+                obj.insert(
+                    "joules_per_inference".into(),
+                    Json::Num(d.joules_per_inference()),
+                );
                 Json::Obj(obj)
             })
             .collect();
@@ -433,6 +475,7 @@ mod tests {
             first_arrival_cycles: 0,
             makespan_cycles: 216_000_000,
             throughput_rps: 9.0,
+            total_joules: 18.0,
             latency: LatencySummary::from_cycles(&[216_000, 432_000]),
             per_model: vec![ModelStats {
                 label: "vgg_tiny/rp-slbc/w4.0a4.0".into(),
@@ -453,6 +496,7 @@ mod tests {
                 busy_cycles: 1000,
                 utilization: 0.5,
                 migrations: 2,
+                joules: 18.0,
             }],
             cache: RegistryStats {
                 hits: 8,
@@ -489,8 +533,13 @@ mod tests {
         assert!(js.contains("\"total_misses\":4"));
         assert!(js.contains("\"migrations\":2"));
         assert!(js.contains("\"class\":\"m4\""));
+        assert!(js.contains("\"total_joules\":18"));
+        assert!(js.contains("\"joules_per_inference\":2"));
+        assert!(txt.contains("mJ/inference"));
         assert!((rep.virtual_s() - 1.0).abs() < 1e-9);
         assert_eq!(rep.per_model[0].mean_batch(), 3.0);
+        assert_eq!(rep.joules_per_inference(), 2.0);
+        assert_eq!(rep.per_device[0].joules_per_inference(), 2.0);
     }
 
     #[test]

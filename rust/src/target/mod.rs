@@ -1,0 +1,505 @@
+//! The unified device-description layer: one [`Target`] type that owns
+//! everything the rest of the framework needs to know about an MCU —
+//! ISA/cycle table, memory capacities, clock, device class and an
+//! [`EnergyModel`] — plus the named-target registry every string→device
+//! resolution goes through.
+//!
+//! Before this module existed the repo described "what device am I
+//! compiling/pricing/serving for?" four different ways (`Machine`
+//! constructors, `Memory` constructors, per-device `CycleModel`s and the
+//! serving layer's `DeviceCfg`), each carrying its own copy of the same
+//! clock/SRAM/flash literals. Those constants now live **here and only
+//! here**; every other site is a one-line delegation:
+//!
+//! * [`crate::mcu::Machine::stm32f746`] → [`Target::lookup`] + the
+//!   target's memory map and cycle table;
+//! * [`crate::mcu::Memory::stm32f746`] → [`Memory::for_target`];
+//! * `serve::DeviceCfg` is a type alias of [`Target`] (the fleet prices
+//!   batches with `target.cycle_model` and `target.energy_model`);
+//! * [`crate::engine::CompiledModel::compile_for`] gates the memory plan
+//!   against `target.sram_bytes` and prices inference with
+//!   `target.cycle_model`;
+//! * [`crate::perf`] predictions price to cycles *and joules* against a
+//!   `&Target` ([`crate::perf::PredictedCost::cycles_on`] /
+//!   [`joules_on`](crate::perf::PredictedCost::joules_on)).
+//!
+//! # Energy
+//!
+//! The [`EnergyModel`] mirrors the [`CycleModel`] shape: a per-
+//! [`InstrClass`] dynamic energy (picojoules per executed instruction)
+//! plus a static/leakage power term, so any instruction [`Counter`]
+//! histogram prices to joules exactly the way it already prices to
+//! cycles. The M4-class part spends fewer joules than the M7 on every
+//! instruction class (smaller core, lower clock/voltage) even where it
+//! spends more cycles — which is what makes energy-aware placement
+//! ([`crate::serve::sched::EnergyAware`]) a real trade-off instead of a
+//! latency re-ranking.
+
+use crate::mcu::counter::Counter;
+use crate::mcu::cycles::{CycleModel, InstrClass, ALL_CLASSES};
+use crate::Result;
+
+/// STM32F746 (the paper's evaluation platform) clock frequency in Hz.
+pub const STM32F746_CLOCK_HZ: u64 = 216_000_000;
+
+/// STM32F746 SRAM capacity in bytes (320 KB).
+pub const STM32F746_SRAM_BYTES: usize = 320 * 1024;
+
+/// STM32F746 flash capacity in bytes (1 MB).
+pub const STM32F746_FLASH_BYTES: usize = 1024 * 1024;
+
+/// STM32F446 (Cortex-M4 class, the heterogeneous-fleet companion part)
+/// clock frequency in Hz.
+pub const STM32F446_CLOCK_HZ: u64 = 180_000_000;
+
+/// STM32F446 SRAM capacity in bytes (128 KB).
+pub const STM32F446_SRAM_BYTES: usize = 128 * 1024;
+
+/// STM32F446 flash capacity in bytes (512 KB).
+pub const STM32F446_FLASH_BYTES: usize = 512 * 1024;
+
+/// Device class label (reporting + fleet-spec parsing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    /// Cortex-M7 class (STM32F746 profile).
+    M7,
+    /// Cortex-M4 class (STM32F446 profile).
+    M4,
+}
+
+impl DeviceClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceClass::M7 => "m7",
+            DeviceClass::M4 => "m4",
+        }
+    }
+}
+
+/// Per-instruction-class dynamic energy (picojoules per executed
+/// instruction) plus static power — the energy twin of [`CycleModel`].
+///
+/// Folding a [`Counter`] through the table yields dynamic energy; the
+/// static term charges leakage/always-on power over the execution time
+/// implied by the paired cycle model and clock. Absolute values are
+/// datasheet-order estimates (run-mode current × supply voltage,
+/// apportioned by instruction latency); what the framework relies on is
+/// the *relative* structure: joules grow monotonically with work, and
+/// the smaller M4 core spends less energy per instruction than the M7
+/// on every class — including the 4-cycle long multiplies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    pub alu_pj: f64,
+    pub bit_pj: f64,
+    pub mul_pj: f64,
+    pub simd_pj: f64,
+    pub mul_long_pj: f64,
+    pub load_pj: f64,
+    pub store_pj: f64,
+    pub branch_taken_pj: f64,
+    pub branch_not_taken_pj: f64,
+    pub sat_pj: f64,
+    /// Static/leakage power in milliwatts, charged over busy time.
+    pub static_mw: f64,
+}
+
+impl EnergyModel {
+    /// Cortex-M7 @ STM32F746: ~1.5 nJ per single-cycle instruction at
+    /// 216 MHz run mode, loads/branches pro-rated by their cycle cost.
+    pub const fn cortex_m7() -> Self {
+        EnergyModel {
+            alu_pj: 1500.0,
+            bit_pj: 1500.0,
+            mul_pj: 1700.0,
+            simd_pj: 1900.0,
+            mul_long_pj: 2100.0,
+            load_pj: 3100.0,
+            store_pj: 1700.0,
+            branch_taken_pj: 3900.0,
+            branch_not_taken_pj: 1500.0,
+            sat_pj: 1600.0,
+            static_mw: 40.0,
+        }
+    }
+
+    /// Cortex-M4 @ STM32F446: the smaller core burns roughly half the
+    /// charge per instruction; even the 4-cycle long multiply lands
+    /// below the M7's single-cycle one in total energy.
+    pub const fn cortex_m4() -> Self {
+        EnergyModel {
+            alu_pj: 700.0,
+            bit_pj: 700.0,
+            mul_pj: 800.0,
+            simd_pj: 900.0,
+            mul_long_pj: 1900.0,
+            load_pj: 1450.0,
+            store_pj: 800.0,
+            branch_taken_pj: 1850.0,
+            branch_not_taken_pj: 700.0,
+            sat_pj: 750.0,
+            static_mw: 16.0,
+        }
+    }
+
+    /// Dynamic energy of one instruction of a class, in picojoules.
+    pub fn instr_pj(&self, class: InstrClass) -> f64 {
+        match class {
+            InstrClass::Alu => self.alu_pj,
+            InstrClass::Bit => self.bit_pj,
+            InstrClass::Mul => self.mul_pj,
+            InstrClass::Simd => self.simd_pj,
+            InstrClass::MulLong => self.mul_long_pj,
+            InstrClass::Load => self.load_pj,
+            InstrClass::Store => self.store_pj,
+            InstrClass::BranchTaken => self.branch_taken_pj,
+            InstrClass::BranchNotTaken => self.branch_not_taken_pj,
+            InstrClass::Sat => self.sat_pj,
+        }
+    }
+
+    /// Dynamic energy of a whole instruction histogram, in joules.
+    pub fn dynamic_joules(&self, ctr: &Counter) -> f64 {
+        ALL_CLASSES
+            .iter()
+            .map(|&c| ctr.get(c) as f64 * self.instr_pj(c))
+            .sum::<f64>()
+            * 1e-12
+    }
+
+    /// Static power in watts.
+    pub fn static_watts(&self) -> f64 {
+        self.static_mw * 1e-3
+    }
+
+    /// Total energy of executing `ctr` on a core with `cycles` table at
+    /// `clock_hz`: dynamic per-instruction energy plus static power over
+    /// the implied execution time.
+    pub fn joules(&self, ctr: &Counter, cycles: &CycleModel, clock_hz: u64) -> f64 {
+        self.dynamic_joules(ctr)
+            + self.static_watts() * (ctr.cycles(cycles) as f64 / clock_hz as f64)
+    }
+}
+
+/// One MCU deployment/pricing/serving target: the single source of truth
+/// for a named device's capabilities and costs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Target {
+    /// Registry name (`stm32f746`, `stm32f446`).
+    pub name: &'static str,
+    /// Coarse device class (`m7`, `m4`) — the fleet-spec shorthand.
+    pub class: DeviceClass,
+    pub clock_hz: u64,
+    pub sram_bytes: usize,
+    pub flash_bytes: usize,
+    /// Per-instruction-class cycle costs of this core.
+    pub cycle_model: CycleModel,
+    /// Per-instruction-class energy costs + static power of this core.
+    pub energy_model: EnergyModel,
+}
+
+/// Every registered target, in registry order. [`Target::lookup`]
+/// resolves names and class aliases against this table.
+pub static REGISTRY: [Target; 2] = [Target::stm32f746(), Target::stm32f446()];
+
+impl Target {
+    /// The paper's evaluation platform: Cortex-M7, 320 KB SRAM, 1 MB
+    /// flash, 216 MHz.
+    pub const fn stm32f746() -> Target {
+        Target {
+            name: "stm32f746",
+            class: DeviceClass::M7,
+            clock_hz: STM32F746_CLOCK_HZ,
+            sram_bytes: STM32F746_SRAM_BYTES,
+            flash_bytes: STM32F746_FLASH_BYTES,
+            cycle_model: CycleModel::cortex_m7(),
+            energy_model: EnergyModel::cortex_m7(),
+        }
+    }
+
+    /// The M4-class companion part: Cortex-M4, 128 KB SRAM, 512 KB
+    /// flash, 180 MHz, 4-cycle long multiplies — the "just enough data
+    /// width" end of a heterogeneous extreme-edge fleet.
+    pub const fn stm32f446() -> Target {
+        Target {
+            name: "stm32f446",
+            class: DeviceClass::M4,
+            clock_hz: STM32F446_CLOCK_HZ,
+            sram_bytes: STM32F446_SRAM_BYTES,
+            flash_bytes: STM32F446_FLASH_BYTES,
+            cycle_model: CycleModel::cortex_m4(),
+            energy_model: EnergyModel::cortex_m4(),
+        }
+    }
+
+    /// Resolve a target by registry name or class alias (`stm32f746` /
+    /// `m7`, `stm32f446` / `m4`), case-insensitively.
+    pub fn lookup(name: &str) -> Option<&'static Target> {
+        let n = name.trim().to_ascii_lowercase();
+        REGISTRY
+            .iter()
+            .find(|t| t.name == n || t.class.name() == n)
+    }
+
+    /// Human-readable list of every accepted spelling, for error
+    /// messages and CLI help.
+    pub fn known_names() -> String {
+        REGISTRY
+            .iter()
+            .map(|t| format!("{}|{}", t.class.name(), t.name))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// [`lookup`](Target::lookup) with the registry's canonical error:
+    /// the offending name plus every accepted spelling. The single
+    /// resolution path for `--target`-style CLI/config arguments.
+    pub fn resolve(name: &str) -> Result<&'static Target> {
+        Target::lookup(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown target `{name}` (known targets: {})",
+                Target::known_names()
+            )
+        })
+    }
+
+    /// Parse a fleet spec — comma-separated `target[:count]` entries,
+    /// e.g. `m7:2,m4:2` or `stm32f746:4` — into one [`Target`] per
+    /// device. Unknown tokens report the offending entry and the list of
+    /// registered target names.
+    pub fn parse_fleet(spec: &str) -> Result<Vec<Target>> {
+        let mut fleet = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (name, count) = match entry.split_once(':') {
+                Some((c, n)) => (
+                    c,
+                    n.trim().parse::<usize>().map_err(|_| {
+                        anyhow::anyhow!(
+                            "bad device count `{n}` in fleet entry `{entry}` (want target[:count])"
+                        )
+                    })?,
+                ),
+                None => (entry, 1),
+            };
+            let target = Target::lookup(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown target `{name}` in fleet spec `{spec}` (known targets: {})",
+                    Target::known_names()
+                )
+            })?;
+            anyhow::ensure!(count >= 1, "device count must be >= 1 in `{entry}`");
+            fleet.extend(std::iter::repeat(*target).take(count));
+        }
+        anyhow::ensure!(!fleet.is_empty(), "fleet spec `{spec}` names no devices");
+        Ok(fleet)
+    }
+
+    /// Render a fleet back to its canonical spec (`m7:2,m4:2`):
+    /// consecutive identical devices collapse to `label:count`, where
+    /// the label is the class shorthand when that alias resolves to
+    /// this exact target in the registry and the full part name
+    /// otherwise — so the rendering stays unambiguous even once a
+    /// class has more than one registered part.
+    ///
+    /// Round-trip contract: for fleets built from unmodified registry
+    /// targets, `parse_fleet(fleet_spec(f)) == f`. The spec grammar can
+    /// only name registry entries, so a hand-customized target (say, a
+    /// registry part with its `sram_bytes` overridden) renders as its
+    /// part name and re-parses to the registry's values — use a richer
+    /// serialization if custom hardware must survive a round-trip.
+    pub fn fleet_spec(fleet: &[Target]) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < fleet.len() {
+            let t = &fleet[i];
+            let mut n = 1;
+            while i + n < fleet.len() && fleet[i + n] == *t {
+                n += 1;
+            }
+            let label = match Target::lookup(t.class.name()) {
+                Some(reg) if *reg == *t => t.class.name(),
+                _ => t.name,
+            };
+            if n == 1 {
+                parts.push(label.to_string());
+            } else {
+                parts.push(format!("{label}:{n}"));
+            }
+            i += n;
+        }
+        parts.join(",")
+    }
+
+    /// Price an instruction histogram in this target's cycles.
+    pub fn cycles(&self, ctr: &Counter) -> u64 {
+        ctr.cycles(&self.cycle_model)
+    }
+
+    /// Wall-clock seconds of `device_cycles` at this target's clock.
+    pub fn seconds(&self, device_cycles: u64) -> f64 {
+        device_cycles as f64 / self.clock_hz as f64
+    }
+
+    /// Price an instruction histogram in joules on this target: dynamic
+    /// per-instruction energy plus static power over the execution time.
+    pub fn joules(&self, ctr: &Counter) -> f64 {
+        self.energy_model
+            .joules(ctr, &self.cycle_model, self.clock_hz)
+    }
+}
+
+impl Default for Target {
+    fn default() -> Self {
+        Target::stm32f746()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mcu::InstrClass;
+
+    fn conv_like_counter() -> Counter {
+        // A histogram shaped like real SLBC conv work: multiplies +
+        // long-multiply carriers + packing bit-ops + row loads.
+        let mut c = Counter::new();
+        c.charge(InstrClass::Alu, 4000);
+        c.charge(InstrClass::Bit, 2500);
+        c.charge(InstrClass::Simd, 1200);
+        c.charge(InstrClass::MulLong, 900);
+        c.charge(InstrClass::Load, 1500);
+        c.charge(InstrClass::Store, 300);
+        c.charge(InstrClass::Sat, 200);
+        c
+    }
+
+    #[test]
+    fn registry_lookup_accepts_names_and_class_aliases() {
+        assert_eq!(Target::lookup("stm32f746").unwrap().class, DeviceClass::M7);
+        assert_eq!(Target::lookup("m7").unwrap().name, "stm32f746");
+        assert_eq!(Target::lookup("STM32F446").unwrap().class, DeviceClass::M4);
+        assert_eq!(Target::lookup(" m4 ").unwrap().name, "stm32f446");
+        assert!(Target::lookup("m33").is_none());
+        assert_eq!(Target::resolve("m7").unwrap().name, "stm32f746");
+        let msg = format!("{:#}", Target::resolve("m33").unwrap_err());
+        assert!(msg.contains("m33") && msg.contains("stm32f446"), "{msg}");
+    }
+
+    #[test]
+    fn registry_is_the_single_constant_source() {
+        let m7 = Target::lookup("m7").unwrap();
+        assert_eq!(m7.clock_hz, STM32F746_CLOCK_HZ);
+        assert_eq!(m7.sram_bytes, STM32F746_SRAM_BYTES);
+        assert_eq!(m7.flash_bytes, STM32F746_FLASH_BYTES);
+        let m4 = Target::lookup("m4").unwrap();
+        assert_eq!(m4.clock_hz, STM32F446_CLOCK_HZ);
+        assert_eq!(m4.sram_bytes, STM32F446_SRAM_BYTES);
+        assert_eq!(m4.flash_bytes, STM32F446_FLASH_BYTES);
+        assert!(m4.sram_bytes < m7.sram_bytes);
+        assert!(m4.clock_hz < m7.clock_hz);
+    }
+
+    #[test]
+    fn fleet_spec_round_trips() {
+        for spec in ["m7:2,m4:2", "m7", "m4:3", "m7,m4,m7"] {
+            let fleet = Target::parse_fleet(spec).unwrap();
+            assert_eq!(Target::fleet_spec(&fleet), spec, "spec `{spec}`");
+            let again = Target::parse_fleet(&Target::fleet_spec(&fleet)).unwrap();
+            assert_eq!(fleet, again);
+        }
+        // Full part names parse to the same fleet as the class aliases.
+        assert_eq!(
+            Target::parse_fleet("stm32f746:2,stm32f446:2").unwrap(),
+            Target::parse_fleet("m7:2,m4:2").unwrap()
+        );
+        // A device that no longer matches its registry entry renders by
+        // full part name, not the (now ambiguous) class shorthand. This
+        // is a best-effort label: the spec grammar can only express
+        // registry entries, so custom hardware does not round-trip (see
+        // the fleet_spec contract).
+        let mut custom = Target::stm32f746();
+        custom.sram_bytes = 1024;
+        assert_eq!(Target::fleet_spec(&[custom]), "stm32f746");
+        // Mixed identical/custom runs do not collapse together.
+        assert_eq!(
+            Target::fleet_spec(&[Target::stm32f746(), custom]),
+            "m7,stm32f746"
+        );
+    }
+
+    #[test]
+    fn fleet_parse_errors_name_the_token_and_known_targets() {
+        let err = Target::parse_fleet("m7:2,m33:1").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("m33"), "offending token missing: {msg}");
+        assert!(msg.contains("stm32f746"), "known names missing: {msg}");
+        assert!(msg.contains("stm32f446"), "known names missing: {msg}");
+
+        let err = Target::parse_fleet("m7:zero").unwrap_err();
+        assert!(format!("{err:#}").contains("zero"));
+        assert!(Target::parse_fleet("").is_err());
+        assert!(Target::parse_fleet("m7:0").is_err());
+    }
+
+    #[test]
+    fn joules_monotonic_in_cycle_count_at_fixed_clock() {
+        let t = Target::stm32f746();
+        let base = conv_like_counter();
+        let e0 = t.joules(&base);
+        // Strictly more work of any class means strictly more joules.
+        for class in crate::mcu::cycles::ALL_CLASSES {
+            let mut more = base.clone();
+            more.charge(class, 1000);
+            assert!(
+                t.joules(&more) > e0,
+                "joules must grow with {class:?} work"
+            );
+        }
+        // And scaling the whole histogram scales energy up.
+        let mut double = base.clone();
+        double.merge(&base);
+        assert!(t.joules(&double) > e0);
+    }
+
+    #[test]
+    fn m4_spends_fewer_joules_than_m7_on_identical_conv_work() {
+        let m7 = Target::stm32f746();
+        let m4 = Target::stm32f446();
+        let ctr = conv_like_counter();
+        assert!(
+            m4.joules(&ctr) < m7.joules(&ctr),
+            "m4 {} J vs m7 {} J",
+            m4.joules(&ctr),
+            m7.joules(&ctr)
+        );
+        // Per-class dominance: the M4 wins on every instruction class,
+        // so the inequality holds for any histogram, not just this one.
+        for class in ALL_CLASSES {
+            assert!(
+                m4.energy_model.instr_pj(class) < m7.energy_model.instr_pj(class),
+                "{class:?}"
+            );
+        }
+        // ... including total (dynamic + static) on a pure long-multiply
+        // histogram, where the M4 pays 4 cycles per instruction.
+        let mut longs = Counter::new();
+        longs.charge(InstrClass::MulLong, 1_000_000);
+        assert!(m4.joules(&longs) < m7.joules(&longs));
+    }
+
+    #[test]
+    fn energy_static_term_scales_with_time() {
+        let t = Target::stm32f746();
+        let mut c = Counter::new();
+        c.charge(InstrClass::Alu, 1_000_000);
+        let dynamic = t.energy_model.dynamic_joules(&c);
+        let total = t.joules(&c);
+        let static_j = total - dynamic;
+        let want = t.energy_model.static_watts() * t.seconds(t.cycles(&c));
+        assert!((static_j - want).abs() < 1e-12);
+        assert!(static_j > 0.0);
+    }
+}

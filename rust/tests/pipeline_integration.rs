@@ -125,8 +125,9 @@ fn deploy_all_methods_produces_consistent_table() {
         Method::TinyEngine,
         Method::RpSlbc,
     ];
+    let target = mcu_mixq::target::Target::lookup("stm32f746").unwrap();
     let rows = deploy_all_methods(
-        &rt, &arts, &model, &searched, &params, &methods, &qcfg, probe.image(0),
+        &rt, &arts, &model, &searched, &params, &methods, &qcfg, probe.image(0), target,
     )
     .unwrap();
     assert_eq!(rows.len(), 4);

@@ -1,0 +1,138 @@
+//! Unified `Target` API integration tests.
+//!
+//! Three contracts:
+//!
+//! 1. **Delegation** — the legacy constructors (`Machine::stm32f746`,
+//!    `Memory::stm32f746`, `DeviceCfg::stm32f746`) are one-line
+//!    delegations to the `Target` registry and agree with it exactly.
+//! 2. **Pricing pin** — `Target`-routed `perf::predict` pricing
+//!    (`PredictedCost::cycles_on`) matches the pre-refactor path
+//!    (folding the predicted counter through `CycleModel::cortex_m7`)
+//!    bit-for-bit on the fig5/fig6 operand sets.
+//! 3. **Fleet spec round-trip** — `Target::parse_fleet` ↔
+//!    `Target::fleet_spec`, with parse errors naming the offending
+//!    token and the registered target names.
+
+use mcu_mixq::mcu::{CycleModel, Machine, Memory};
+use mcu_mixq::models::vgg_tiny;
+use mcu_mixq::ops::Method;
+use mcu_mixq::perf::{predict_layer, predict_model, PerfModel};
+use mcu_mixq::quant::BitConfig;
+use mcu_mixq::serve::DeviceCfg;
+use mcu_mixq::target::{DeviceClass, Target};
+
+#[test]
+fn machine_and_memory_constructors_delegate_to_the_registry() {
+    let m7 = Target::lookup("stm32f746").unwrap();
+    let m4 = Target::lookup("stm32f446").unwrap();
+
+    let machine = Machine::stm32f746();
+    assert_eq!(machine.mem.sram_len(), m7.sram_bytes);
+    assert_eq!(machine.mem.flash_len(), m7.flash_bytes);
+    assert_eq!(machine.model, m7.cycle_model);
+
+    let machine = Machine::stm32f446();
+    assert_eq!(machine.mem.sram_len(), m4.sram_bytes);
+    assert_eq!(machine.mem.flash_len(), m4.flash_bytes);
+    assert_eq!(machine.model, m4.cycle_model);
+
+    let mem = Memory::stm32f746();
+    assert_eq!(mem.sram_len(), m7.sram_bytes);
+    assert_eq!(mem.flash_len(), m7.flash_bytes);
+    let mem = Memory::for_target(m4);
+    assert_eq!(mem.sram_len(), m4.sram_bytes);
+
+    // The serving DeviceCfg is an alias of Target: same values, same
+    // registry.
+    assert_eq!(DeviceCfg::stm32f746(), *m7);
+    assert_eq!(DeviceCfg::stm32f446(), *m4);
+    assert_eq!(DeviceCfg::parse_class("m4"), Some(*m4));
+    assert_eq!(DeviceCfg::parse_class("m33"), None);
+
+    // And the registry models match the mcu-layer tables.
+    assert_eq!(m7.cycle_model, CycleModel::cortex_m7());
+    assert_eq!(m4.cycle_model, CycleModel::cortex_m4());
+    assert_eq!(PerfModel::for_target(m7), PerfModel::cortex_m7());
+}
+
+/// Fig. 5 operand set: the VGG-Tiny conv3 layer at every bitwidth 2–8
+/// under naive / plain-SIMD / SLBC. Target-routed pricing must equal
+/// the pre-refactor `counter.cycles(&CycleModel::cortex_m7())` path
+/// exactly.
+#[test]
+fn target_routed_predict_matches_prerefactor_cycles_on_fig5_set() {
+    let m7 = Target::lookup("stm32f746").unwrap();
+    let legacy = CycleModel::cortex_m7();
+    let mut layer = vgg_tiny(10, 16).layers[2].clone();
+    layer.macs = layer.compute_macs();
+    for bits in 2..=8u8 {
+        for method in [Method::Naive, Method::Simd, Method::Slbc] {
+            let p = predict_layer(&layer, method, bits, bits);
+            assert_eq!(
+                p.cycles_on(m7),
+                p.counter.cycles(&legacy),
+                "{} at {bits} bits",
+                method.name()
+            );
+            assert!(p.cycles_on(m7) > 0);
+            assert!(p.joules_on(m7) > 0.0);
+        }
+    }
+}
+
+/// Fig. 6 operand set: the (wbits, abits) grid over {2,4,8} for
+/// CMix-NN vs SLBC — same bit-for-bit pin, plus the M4-routed pricing
+/// agreeing with the M4 cycle table.
+#[test]
+fn target_routed_predict_matches_prerefactor_cycles_on_fig6_grid() {
+    let m7 = Target::lookup("stm32f746").unwrap();
+    let m4 = Target::lookup("stm32f446").unwrap();
+    let legacy_m7 = CycleModel::cortex_m7();
+    let legacy_m4 = CycleModel::cortex_m4();
+    let mut layer = vgg_tiny(10, 16).layers[2].clone();
+    layer.macs = layer.compute_macs();
+    for &w in &[2u8, 4, 8] {
+        for &a in &[2u8, 4, 8] {
+            for method in [Method::CmixNn, Method::Slbc] {
+                let p = predict_layer(&layer, method, w, a);
+                assert_eq!(p.cycles_on(m7), p.counter.cycles(&legacy_m7), "{} w{w}a{a}", method.name());
+                assert_eq!(p.cycles_on(m4), p.counter.cycles(&legacy_m4), "{} w{w}a{a}", method.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn target_routed_model_prediction_is_the_layer_sum_in_both_units() {
+    let m7 = Target::lookup("m7").unwrap();
+    let m4 = Target::lookup("m4").unwrap();
+    let model = vgg_tiny(10, 16);
+    let cfg = BitConfig::uniform(model.num_layers(), 4);
+    let whole = predict_model(&model, Method::RpSlbc, &cfg);
+    let cycle_sum: u64 = model
+        .layers
+        .iter()
+        .map(|l| predict_layer(l, Method::RpSlbc, 4, 4).cycles_on(m7))
+        .sum();
+    assert_eq!(whole.cycles_on(m7), cycle_sum);
+    // Energy pricing is target-specific: identical predicted work costs
+    // fewer joules on the M4 (per-class dominance), more cycles never
+    // fewer, and both units are positive.
+    assert!(whole.joules_on(m4) < whole.joules_on(m7));
+    assert!(whole.cycles_on(m4) >= whole.cycles_on(m7));
+}
+
+#[test]
+fn fleet_specs_round_trip_and_errors_are_actionable() {
+    let fleet = Target::parse_fleet("m7:2,m4:2").unwrap();
+    assert_eq!(fleet.len(), 4);
+    assert_eq!(fleet[0].class, DeviceClass::M7);
+    assert_eq!(fleet[3].class, DeviceClass::M4);
+    assert_eq!(Target::fleet_spec(&fleet), "m7:2,m4:2");
+    assert_eq!(Target::parse_fleet(&Target::fleet_spec(&fleet)).unwrap(), fleet);
+
+    let err = Target::parse_fleet("m7:2,riscv:3").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("riscv"), "offending token: {msg}");
+    assert!(msg.contains("stm32f746") && msg.contains("stm32f446"), "known names: {msg}");
+}
