@@ -30,6 +30,10 @@ pub struct InferenceResult {
     pub counter: Counter,
     /// Per-layer cycle breakdown.
     pub per_layer: Vec<(String, u64)>,
+    /// Per-layer instruction-histogram diffs, parallel to `per_layer`.
+    /// Their class-wise merge reproduces `counter` exactly (the
+    /// profiler's bit-for-bit invariant).
+    pub per_layer_counters: Vec<Counter>,
 }
 
 /// Run one image through the quantized model with `method`, re-packing
@@ -89,6 +93,7 @@ pub fn infer_with_kernels_scratch(
     );
     let mut ctr = Counter::new();
     let mut per_layer = Vec::with_capacity(model.layers.len());
+    let mut per_layer_counters = Vec::with_capacity(model.layers.len());
 
     // Input image quantized to 8-bit (the first layer consumes the raw
     // image in the float pipeline; int8 input is the standard deployment
@@ -104,6 +109,7 @@ pub fn infer_with_kernels_scratch(
         // KernelCache::build packs for (single source of truth).
         let in_bits = super::layer_in_bits(cfg, i);
         let cycles_before = ctr.cycles(cycle_model);
+        let ctr_before = ctr.clone();
         // GAP before the classifier (MobileNet-Tiny).
         if l.gap_before {
             // x currently holds the previous layer's HWC activations.
@@ -137,6 +143,7 @@ pub fn infer_with_kernels_scratch(
                 .map(|(j, &a)| (a + bias_i[j % l.cout]) as f32 * sf)
                 .collect();
             per_layer.push((l.name.clone(), ctr.cycles(cycle_model) - cycles_before));
+            per_layer_counters.push(ctr.diff(&ctr_before));
             break;
         }
 
@@ -154,6 +161,7 @@ pub fn infer_with_kernels_scratch(
             x = common::maxpool_2x2(&x, l.out_h, l.out_w, l.cout, &mut ctr);
         }
         per_layer.push((l.name.clone(), ctr.cycles(cycle_model) - cycles_before));
+        per_layer_counters.push(ctr.diff(&ctr_before));
     }
 
     let pred = logits
@@ -168,6 +176,7 @@ pub fn infer_with_kernels_scratch(
         cycles: ctr.cycles(cycle_model),
         counter: ctr,
         per_layer,
+        per_layer_counters,
     })
 }
 
@@ -282,6 +291,28 @@ mod tests {
             assert!(r.cycles > 0);
             assert_eq!(r.per_layer.len(), m.num_layers());
         }
+    }
+
+    #[test]
+    fn per_layer_counters_merge_to_the_run_total() {
+        let m = vgg_tiny(10, 16);
+        let (q, cfg) = setup(&m, 4, 5);
+        let img = vec![0.25f32; 16 * 16 * 3];
+        let cm = CycleModel::cortex_m7();
+        let r = infer(&m, &q, &cfg, Method::RpSlbc, &img, &cm).unwrap();
+        assert_eq!(r.per_layer_counters.len(), r.per_layer.len());
+        let mut merged = Counter::new();
+        for c in &r.per_layer_counters {
+            merged.merge(c);
+        }
+        assert_eq!(merged, r.counter, "layer diffs must telescope exactly");
+        // Per-layer cycles agree with each layer's own histogram priced
+        // by the same model, and sum to the run total.
+        for ((_, cyc), c) in r.per_layer.iter().zip(&r.per_layer_counters) {
+            assert_eq!(*cyc, c.cycles(&cm));
+        }
+        let sum: u64 = r.per_layer.iter().map(|(_, c)| c).sum();
+        assert_eq!(sum, r.cycles);
     }
 
     #[test]

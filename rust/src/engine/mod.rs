@@ -74,6 +74,13 @@ pub struct DeployReport {
     pub joules: f64,
     /// Per-layer cycle breakdown (layer name, cycles).
     pub per_layer: Vec<(String, u64)>,
+    /// Per-layer energy breakdown (joules), parallel to `per_layer`:
+    /// each layer's instruction histogram priced through the target's
+    /// energy model. Sums are *not* expected to reproduce `joules`
+    /// bit-for-bit (f64 addition is not associative); the bit-exact
+    /// total lives in [`crate::obs::ExecutionProfile`], which prices the
+    /// merged histogram once.
+    pub per_layer_joules: Vec<f64>,
 }
 
 /// Global count of [`CompiledModel::compile`] invocations. The serving
@@ -343,6 +350,11 @@ impl CompiledModel {
     /// joules from the target's energy model.
     pub fn report(&self, image: &[f32]) -> Result<DeployReport> {
         let result = self.run(image)?;
+        let per_layer_joules = result
+            .per_layer_counters
+            .iter()
+            .map(|c| self.target.joules(c))
+            .collect();
         Ok(DeployReport {
             backbone: self.model.name.clone(),
             method: self.method,
@@ -354,6 +366,7 @@ impl CompiledModel {
             latency_ms: self.target.seconds(result.cycles) * 1e3,
             joules: self.target.joules(&result.counter),
             per_layer: result.per_layer,
+            per_layer_joules,
         })
     }
 }
@@ -412,6 +425,12 @@ mod tests {
         assert!(rep.cycles > 0);
         assert!(rep.latency_ms > 0.0);
         assert_eq!(rep.per_layer.len(), m.num_layers());
+        assert_eq!(rep.per_layer_joules.len(), rep.per_layer.len());
+        // Energy is linear in the instruction histogram, so the per-layer
+        // prices sum to the total up to f64 rounding.
+        let sum: f64 = rep.per_layer_joules.iter().sum();
+        assert!((sum - rep.joules).abs() <= 1e-12 * rep.joules.max(1.0));
+        assert!(rep.per_layer_joules.iter().all(|&j| j > 0.0));
     }
 
     #[test]

@@ -39,6 +39,12 @@
 //!    consumed by the engine (compile-for-target), the Eq. 12 predictor
 //!    (cycles *and* joules) and the serving fleet (energy-aware
 //!    placement).
+//! 6. **Observability layer** — virtual-time tracing and profiling
+//!    ([`obs`]): typed request-lifecycle events behind a zero-cost
+//!    [`obs::Recorder`], a metrics registry with virtual-time series,
+//!    a Perfetto/Chrome trace exporter (`serve --events-out`), and a
+//!    per-layer cycles × joules execution profiler (the `profile` CLI
+//!    verb).
 //!
 //! ## Three-layer architecture
 //!
@@ -58,6 +64,7 @@ pub mod engine;
 pub mod mcu;
 pub mod models;
 pub mod nas;
+pub mod obs;
 pub mod ops;
 pub mod perf;
 pub mod quant;

@@ -7,6 +7,7 @@
 //! * `qat       --backbone B ...`   — QAT at a fixed bit configuration
 //! * `pipeline  --backbone B ...`   — full search→QAT→deploy→compare run
 //! * `deploy    --backbone B ...`   — deploy + simulate one method
+//! * `profile   --backbone B ...`   — per-layer cycle/energy execution profile
 //! * `serve     --mix M ...`        — replay a request trace on an MCU fleet
 //! * `bench-serve`                  — fixed-protocol serving benchmark (JSON)
 //! * `slbc-demo`                    — Layer-1 Pallas kernel vs Rust packing
@@ -22,6 +23,7 @@ use mcu_mixq::coordinator::{self, PipelineCfg, QatRunner, SearchCfg, SupernetSea
 use mcu_mixq::engine;
 use mcu_mixq::mcu::CycleModel;
 use mcu_mixq::nas::CostProxy;
+use mcu_mixq::obs::{ExecutionProfile, MetricsRegistry, RingRecorder};
 use mcu_mixq::ops::Method;
 use mcu_mixq::perf::{calibrate_alpha_beta, PerfModel};
 use mcu_mixq::quant::BitConfig;
@@ -54,6 +56,7 @@ fn run(args: &Args) -> Result<()> {
         "qat" => cmd_qat(args),
         "pipeline" => cmd_pipeline(args),
         "deploy" => cmd_deploy(args),
+        "profile" => cmd_profile(args),
         "serve" => cmd_serve(args),
         "bench-serve" => cmd_bench_serve(args),
         "bench-conv" => cmd_bench_conv(args),
@@ -84,6 +87,11 @@ fn print_help() {
          \x20          [--target stm32f746]\n\
          \x20 deploy   --backbone B         deploy one method\n\
          \x20          [--method rp-slbc] [--bits 4] [--target stm32f746]\n\
+         \x20 profile  --backbone B         per-layer execution profile: cycles,\n\
+         \x20                               joules and instruction mix per layer,\n\
+         \x20                               totals asserted bit-identical to deploy\n\
+         \x20          [--method rp-slbc] [--bits 4] [--target stm32f746]\n\
+         \x20          [--out profile.json]\n\
          \x20 serve                         replay a request trace on an MCU fleet\n\
          \x20          [--mix backbone:method:bits[:weight],...]\n\
          \x20          [--fleet m7:4,m4:4] [--sched rr|least|slo|energy]\n\
@@ -93,6 +101,8 @@ fn print_help() {
          \x20          [--trace-file IN.json] [--dump-trace OUT.json]\n\
          \x20          [--batch N] [--wait-ms F] [--queue N] [--depth N]\n\
          \x20          [--cache N] [--seed S] [--json]\n\
+         \x20          [--events-out EV.json] [--metrics-out M.json]\n\
+         \x20          [--metrics-cadence CYCLES]\n\
          \x20 bench-serve                   fixed-protocol serving benchmark:\n\
          \x20                               >=200-request mixed trace, >=4 devices,\n\
          \x20                               prints tables + one JSON summary line\n\
@@ -122,6 +132,23 @@ fn print_help() {
          \x20 slo (deadline-miss-minimizing), energy (minimize predicted\n\
          \x20 joules subject to deadlines — deadline-free work routes to\n\
          \x20 the most energy-efficient device class)"
+    );
+    println!(
+        "\nTRACING & PROFILING:\n\
+         \x20 serve --events-out EV.json    write the request lifecycle trace\n\
+         \x20                               (Perfetto/Chrome trace-event JSON:\n\
+         \x20                               load in ui.perfetto.dev or\n\
+         \x20                               chrome://tracing)\n\
+         \x20 serve --metrics-out M.json    write sampled time series (queue\n\
+         \x20                               depth, in-flight batches, per-device\n\
+         \x20                               utilization), counters and latency\n\
+         \x20                               histograms\n\
+         \x20 serve --metrics-cadence N     sampling cadence in virtual cycles\n\
+         \x20                               (default 216000 = 1ms at 216 MHz)\n\
+         \x20 profile --backbone B          per-layer cycles / joules / Eq. 12\n\
+         \x20                               instruction mix for one deployment\n\
+         Recording is passive: an attached recorder never changes placement,\n\
+         batching, timing or energy results (pinned by serve tests)."
     );
 }
 
@@ -300,8 +327,83 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         rep.latency_ms,
         rep.joules * 1e3
     );
-    for (name, cyc) in &rep.per_layer {
-        println!("  {name:<14} {cyc:>10} cycles");
+    for ((name, cyc), joules) in rep.per_layer.iter().zip(&rep.per_layer_joules) {
+        println!("  {name:<14} {cyc:>10} cycles  {:>9.2} uJ", joules * 1e6);
+    }
+    Ok(())
+}
+
+/// Per-layer execution profile for one deployment: cycles, joules and the
+/// Eq. 12 instruction-mix split per layer, with totals asserted
+/// bit-identical to the `deploy` report for the same artifact — the
+/// acceptance invariant CI's profile smoke exercises.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let method = Method::parse(&args.str_or("method", "rp-slbc"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    // Artifact-trained parameters when the store has the backbone;
+    // otherwise the seeded synthetic parameters the serving path uses —
+    // the profiler (like serve) must run without AOT artifacts.
+    let (model, params) = match store(args).and_then(|s| {
+        let arts = s.backbone(&backbone_arg(args))?;
+        let p = arts.load_init_params()?;
+        Ok((arts.model.clone(), p))
+    }) {
+        Ok(mp) => mp,
+        Err(_) => {
+            let model = mcu_mixq::models::by_name(&backbone_arg(args))
+                .ok_or_else(|| anyhow::anyhow!("unknown backbone `{}`", backbone_arg(args)))?;
+            let mut rng = mcu_mixq::util::prng::Rng::new(args.u64_or("seed", 1000));
+            let params = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+            (model, params)
+        }
+    };
+    let n = model.num_layers();
+    let cfg = BitConfig {
+        wbits: parse_bits(&args.str_or("bits", "4"), n)?,
+        abits: parse_bits(&args.str_or("bits", "4"), n)?,
+    };
+    let target = parse_target(args)?;
+    let probe = mcu_mixq::datasets::generate(
+        mcu_mixq::datasets::Task::for_backbone(&model.name),
+        1,
+        model.input_hw,
+        7,
+    );
+    let cm = engine::CompiledModel::compile_for(&model, &params, &cfg, method, target)?;
+    let res = cm.run(probe.image(0))?;
+    let profile =
+        ExecutionProfile::from_layers(target, &res.per_layer, &res.per_layer_counters);
+    println!(
+        "{} via {} on {}: {} cycles, {:.3}ms, {:.3}mJ\n",
+        model.name,
+        method.name(),
+        target.name,
+        profile.total_cycles,
+        profile.latency_ms(target),
+        profile.total_joules * 1e3
+    );
+    print!("{}", profile.render());
+
+    // Bit-for-bit acceptance gate: the profiler must reproduce the deploy
+    // report's totals exactly (cycles in u64, joules by pricing the merged
+    // instruction histogram once — not by summing per-layer f64 prices).
+    let rep = cm.report(probe.image(0))?;
+    anyhow::ensure!(
+        profile.total_cycles == rep.cycles,
+        "profile cycle total {} != deploy report {}",
+        profile.total_cycles,
+        rep.cycles
+    );
+    anyhow::ensure!(
+        profile.total_joules.to_bits() == rep.joules.to_bits(),
+        "profile joule total {} not bit-identical to deploy report {}",
+        profile.total_joules,
+        rep.joules
+    );
+    println!("\nprofile totals match deploy report bit-for-bit");
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{}\n", profile.to_json().to_string_compact()))?;
+        println!("wrote {path}");
     }
     Ok(())
 }
@@ -496,7 +598,38 @@ fn run_serve_scenario(
         cfg.batcher.max_batch,
         wait_ms
     );
-    let report = serve::run_trace(&workloads, &trace, &cfg)?;
+    let events_out = args.get("events-out");
+    let metrics_out = args.get("metrics-out");
+    let report = if events_out.is_some() || metrics_out.is_some() {
+        // Observed replay: bounded ring of lifecycle events + sampled
+        // metrics, both passive (bit-identical report to the plain path).
+        let mut rec = RingRecorder::new(1 << 20);
+        let cadence = args.u64_or("metrics-cadence", 216_000);
+        let mut metrics = MetricsRegistry::new(cadence);
+        let report =
+            serve::run_trace_observed(&workloads, &trace, &cfg, &mut rec, Some(&mut metrics))?;
+        if let Some(path) = events_out {
+            let names: Vec<String> = cfg
+                .fleet
+                .iter()
+                .enumerate()
+                .map(|(i, d)| format!("{} #{i}", d.name))
+                .collect();
+            if rec.dropped > 0 {
+                eprintln!("warning: event ring overflowed, {} event(s) dropped", rec.dropped);
+            }
+            let json = mcu_mixq::obs::perfetto::export(rec.iter(), &names);
+            std::fs::write(path, format!("{}\n", json.to_string_compact()))?;
+            println!("wrote {} event(s) to {path}", rec.iter().count());
+        }
+        if let Some(path) = metrics_out {
+            std::fs::write(path, format!("{}\n", metrics.to_json().to_string_compact()))?;
+            println!("wrote metrics to {path}");
+        }
+        report
+    } else {
+        serve::run_trace(&workloads, &trace, &cfg)?
+    };
     println!("{}", report.render());
     Ok(report)
 }

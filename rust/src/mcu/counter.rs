@@ -97,6 +97,21 @@ impl Counter {
             self.charge(c, other.get(c));
         }
     }
+
+    /// Class-wise difference against an earlier snapshot of the same
+    /// monotonically-growing counter. Panics in debug builds if
+    /// `earlier` is not a prefix (some class would go negative).
+    pub fn diff(&self, earlier: &Counter) -> Counter {
+        let mut out = Counter::new();
+        for c in ALL_CLASSES {
+            debug_assert!(
+                self.get(c) >= earlier.get(c),
+                "diff against a non-prefix counter ({c:?})"
+            );
+            out.charge(c, self.get(c) - earlier.get(c));
+        }
+        out
+    }
 }
 
 impl std::ops::AddAssign<&Counter> for Counter {

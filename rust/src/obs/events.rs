@@ -1,0 +1,311 @@
+//! Typed request-lifecycle events and the [`Recorder`] sink trait.
+//!
+//! Every event is stamped with the virtual-time cycle it happened at (on
+//! the 216 MHz reference timeline), the request id, the tenant/model key
+//! index and the SLO class index (0 = interactive, 1 = standard,
+//! 2 = batch). Batch-scoped events (`Flush*`) are stamped with the first
+//! member's id and the batch's effective class; fleet-scoped events
+//! (`Migrate`) carry the batch *ticket* as the id and
+//! [`Event::NO_KEY`] as the key.
+//!
+//! The stream is designed to be *sufficient*: [`derive_class_misses`]
+//! reconstructs the report's per-class deadline-miss accounting from
+//! events alone, which the serve tests pin bit-for-bit against
+//! [`ServeReport::class_misses`](crate::serve::ServeReport::class_misses).
+
+use std::collections::VecDeque;
+
+/// One lifecycle event on the virtual timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Virtual-time stamp in 216 MHz reference cycles.
+    pub cycles: u64,
+    /// Request id (or batch ticket for [`EventKind::Migrate`]).
+    pub id: usize,
+    /// Tenant/model key index ([`Event::NO_KEY`] when not applicable).
+    pub key_idx: usize,
+    /// SLO class index: 0 = interactive, 1 = standard, 2 = batch.
+    pub class: u8,
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// Sentinel `key_idx` for events not tied to a tenant/model key
+    /// (currently only [`EventKind::Migrate`]).
+    pub const NO_KEY: usize = usize::MAX;
+}
+
+/// What happened. Variants mirror the serve pipeline's decision points.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Request entered the pipeline. Carries the absolute deadline
+    /// (`u64::MAX` = none) so miss accounting is re-derivable.
+    Arrive { deadline: u64 },
+    /// Admitted into the batcher's per-key queue.
+    Admit,
+    /// Evicted from the queue by class-aware admission (a higher-priority
+    /// arrival displaced it).
+    Evict { had_deadline: bool },
+    /// Refused at the queue door (full queue / window-doomed).
+    Shed { had_deadline: bool },
+    /// Rejected before batching: the model's peak SRAM does not fit any
+    /// device in the fleet.
+    SramReject { had_deadline: bool },
+    /// Batch flushed because its batching window expired.
+    FlushWindow { batch_size: usize },
+    /// Batch flushed because it reached `max_batch`.
+    FlushFull { batch_size: usize },
+    /// Batch flushed early to rescue an urgent (window-doomed) member.
+    FlushPreempt { batch_size: usize },
+    /// Scheduler committed the request's batch to a device.
+    Place {
+        /// Scheduler policy name (`round-robin`, `slo`, ...).
+        policy: &'static str,
+        device: usize,
+        /// Deferred-mode ticket, when placement is resolved later.
+        ticket: Option<usize>,
+        /// Predicted device-clock cycles for the whole batch.
+        predicted_cycles: u64,
+        /// Predicted energy for the whole batch on that device, joules.
+        predicted_joules: f64,
+    },
+    /// A queued batch moved between devices (work stealing).
+    Migrate { from: usize, to: usize },
+    /// Execution began on the device.
+    Start { device: usize },
+    /// Execution finished; the terminal event of a completed request.
+    Finish {
+        device: usize,
+        /// When execution began (duplicated from `Start` so a `Finish`
+        /// alone suffices for queue-wait vs compute attribution).
+        start: u64,
+        /// Arrival-to-finish latency in reference cycles.
+        latency_cycles: u64,
+        /// Whether the request missed its deadline.
+        miss: bool,
+    },
+}
+
+impl EventKind {
+    /// Stable kind name, used by the exporters and CI schema greps.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Arrive { .. } => "Arrive",
+            EventKind::Admit => "Admit",
+            EventKind::Evict { .. } => "Evict",
+            EventKind::Shed { .. } => "Shed",
+            EventKind::SramReject { .. } => "SramReject",
+            EventKind::FlushWindow { .. } => "FlushWindow",
+            EventKind::FlushFull { .. } => "FlushFull",
+            EventKind::FlushPreempt { .. } => "FlushPreempt",
+            EventKind::Place { .. } => "Place",
+            EventKind::Migrate { .. } => "Migrate",
+            EventKind::Start { .. } => "Start",
+            EventKind::Finish { .. } => "Finish",
+        }
+    }
+}
+
+/// Human name of an SLO class index (mirrors `serve::trace::SloClass`).
+pub fn class_name(class: u8) -> &'static str {
+    match class {
+        0 => "interactive",
+        1 => "standard",
+        _ => "batch",
+    }
+}
+
+/// Sink for lifecycle events.
+///
+/// Producers MUST gate any work needed to *build* an event on
+/// [`enabled`](Recorder::enabled), so the no-op recorder is genuinely
+/// zero-cost and cannot perturb the virtual timeline.
+pub trait Recorder {
+    /// Whether this recorder wants events at all.
+    fn enabled(&self) -> bool;
+    /// Record one event. May be called out of timestamp order across
+    /// producers (the replay loop drains batcher/fleet logs in chunks).
+    fn record(&mut self, ev: Event);
+}
+
+/// The zero-cost default: discards everything, reports disabled.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {
+    fn enabled(&self) -> bool {
+        false
+    }
+    #[inline]
+    fn record(&mut self, _ev: Event) {}
+}
+
+/// Bounded in-memory recorder: keeps the most recent `capacity` events,
+/// counting (not storing) anything older once full — million-request
+/// traces stay bounded.
+#[derive(Debug)]
+pub struct RingRecorder {
+    capacity: usize,
+    events: VecDeque<Event>,
+    /// Events discarded because the ring was full.
+    pub dropped: u64,
+}
+
+impl RingRecorder {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "RingRecorder capacity must be > 0");
+        RingRecorder {
+            capacity,
+            events: VecDeque::with_capacity(capacity.min(4096)),
+            dropped: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Iterate over retained events, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &Event> {
+        self.events.iter()
+    }
+
+    /// Consume the recorder into a `Vec`, oldest first.
+    pub fn into_events(self) -> Vec<Event> {
+        self.events.into()
+    }
+}
+
+impl Recorder for RingRecorder {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record(&mut self, ev: Event) {
+        if self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+}
+
+/// Re-derive per-class deadline misses from an event stream: a `Finish`
+/// with the miss flag, or a deadline-carrying `Shed`/`Evict`/`SramReject`
+/// (a request dropped before execution can only miss if it *had* a
+/// deadline). Index 0 = interactive, 1 = standard, 2 = batch — the same
+/// accounting as [`ServeReport::class_misses`](crate::serve::ServeReport::class_misses).
+pub fn derive_class_misses<'a, I>(events: I) -> [u64; 3]
+where
+    I: IntoIterator<Item = &'a Event>,
+{
+    let mut out = [0u64; 3];
+    for ev in events {
+        let c = (ev.class as usize).min(2);
+        match ev.kind {
+            EventKind::Finish { miss: true, .. } => out[c] += 1,
+            EventKind::Shed { had_deadline: true }
+            | EventKind::Evict { had_deadline: true }
+            | EventKind::SramReject { had_deadline: true } => out[c] += 1,
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycles: u64, id: usize, class: u8, kind: EventKind) -> Event {
+        Event {
+            cycles,
+            id,
+            key_idx: 0,
+            class,
+            kind,
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let mut r = RingRecorder::new(3);
+        assert!(r.enabled());
+        for i in 0..5u64 {
+            r.record(ev(i, i as usize, 0, EventKind::Admit));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped, 2);
+        let kept: Vec<u64> = r.iter().map(|e| e.cycles).collect();
+        assert_eq!(kept, vec![2, 3, 4]);
+        assert_eq!(r.into_events().len(), 3);
+    }
+
+    #[test]
+    fn noop_is_disabled() {
+        let mut n = NoopRecorder;
+        assert!(!n.enabled());
+        n.record(ev(0, 0, 0, EventKind::Admit)); // must not panic
+    }
+
+    #[test]
+    fn derive_counts_finish_misses_and_deadline_drops() {
+        let events = vec![
+            ev(10, 1, 0, EventKind::Arrive { deadline: 100 }),
+            ev(
+                200,
+                1,
+                0,
+                EventKind::Finish {
+                    device: 0,
+                    start: 150,
+                    latency_cycles: 190,
+                    miss: true,
+                },
+            ),
+            ev(
+                30,
+                2,
+                1,
+                EventKind::Finish {
+                    device: 0,
+                    start: 20,
+                    latency_cycles: 10,
+                    miss: false,
+                },
+            ),
+            ev(40, 3, 1, EventKind::Shed { had_deadline: true }),
+            ev(50, 4, 2, EventKind::Shed { had_deadline: false }),
+            ev(60, 5, 0, EventKind::Evict { had_deadline: true }),
+            ev(
+                70,
+                6,
+                2,
+                EventKind::SramReject { had_deadline: true },
+            ),
+        ];
+        assert_eq!(derive_class_misses(&events), [2, 1, 1]);
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        assert_eq!(EventKind::Arrive { deadline: 0 }.name(), "Arrive");
+        assert_eq!(
+            EventKind::Place {
+                policy: "slo",
+                device: 0,
+                ticket: None,
+                predicted_cycles: 0,
+                predicted_joules: 0.0
+            }
+            .name(),
+            "Place"
+        );
+        assert_eq!(class_name(0), "interactive");
+        assert_eq!(class_name(2), "batch");
+    }
+}

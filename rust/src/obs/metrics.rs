@@ -1,0 +1,275 @@
+//! Counters, gauges, log2-bucket histograms and virtual-time series.
+//!
+//! A [`MetricsRegistry`] is the aggregate companion to the event stream:
+//! where events answer "what happened to request 17", metrics answer
+//! "what did queue depth look like over the run". Time series are
+//! sampled on a configurable virtual-time cadence (reference cycles) by
+//! the serve replay loop; everything serializes to one JSON document for
+//! `serve --metrics-out`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Power-of-two bucketed histogram of `u64` samples.
+///
+/// Bucket `i` counts samples `v` with `bit_width(v) == i`, i.e. bucket 0
+/// holds zeros and bucket `i >= 1` holds `2^(i-1) <= v < 2^i`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    /// One bucket per possible `u64` bit width (0..=64).
+    pub buckets: [u64; 65],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: u64) {
+        let idx = (u64::BITS - v.leading_zeros()) as usize;
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Mean of observed samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut buckets = Vec::new();
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let mut b = BTreeMap::new();
+            // Upper bound (inclusive) of the bucket: 0, 1, 3, 7, ...
+            let le = if i == 0 {
+                0u64
+            } else if i >= 64 {
+                u64::MAX
+            } else {
+                (1u64 << i) - 1
+            };
+            b.insert("le".to_string(), Json::Num(le as f64));
+            b.insert("count".to_string(), Json::Num(n as f64));
+            buckets.push(Json::Obj(b));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum as f64));
+        m.insert("buckets".to_string(), Json::Arr(buckets));
+        Json::Obj(m)
+    }
+}
+
+/// Named counters, gauges, histograms and cadence-sampled time series.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    /// Sampling cadence in reference cycles.
+    cadence_cycles: u64,
+    /// Next virtual time at which [`should_sample`](Self::should_sample)
+    /// fires (first call always samples).
+    next_sample: u64,
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+    /// Series name → `(cycles, value)` samples, in sample order.
+    series: BTreeMap<String, Vec<(u64, f64)>>,
+}
+
+impl MetricsRegistry {
+    pub fn new(cadence_cycles: u64) -> Self {
+        assert!(cadence_cycles > 0, "metrics cadence must be > 0 cycles");
+        MetricsRegistry {
+            cadence_cycles,
+            next_sample: 0,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            histograms: BTreeMap::new(),
+            series: BTreeMap::new(),
+        }
+    }
+
+    pub fn cadence_cycles(&self) -> u64 {
+        self.cadence_cycles
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn observe(&mut self, name: &str, v: u64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Rate-limit gate for time-series sampling: returns `true` (and
+    /// advances the internal clock) at most once per cadence interval of
+    /// virtual time. The first call always samples.
+    pub fn should_sample(&mut self, now: u64) -> bool {
+        if now < self.next_sample {
+            return false;
+        }
+        // Jump to the next grid point strictly after `now`, so bursts of
+        // same-cycle arrivals sample once.
+        let intervals = now / self.cadence_cycles + 1;
+        self.next_sample = intervals.saturating_mul(self.cadence_cycles);
+        true
+    }
+
+    /// Append one `(cycles, value)` point to a named series.
+    pub fn push_series(&mut self, name: &str, now: u64, v: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_default()
+            .push((now, v));
+    }
+
+    pub fn series(&self, name: &str) -> Option<&[(u64, f64)]> {
+        self.series.get(name).map(|s| s.as_slice())
+    }
+
+    /// Serialize the whole registry: `cadence_cycles`, `counters`,
+    /// `gauges`, `histograms` and `series` (arrays of `[cycles, value]`
+    /// pairs).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "cadence_cycles".to_string(),
+            Json::Num(self.cadence_cycles as f64),
+        );
+        m.insert(
+            "counters".to_string(),
+            Json::Obj(
+                self.counters
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "gauges".to_string(),
+            Json::Obj(
+                self.gauges
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "histograms".to_string(),
+            Json::Obj(
+                self.histograms
+                    .iter()
+                    .map(|(k, h)| (k.clone(), h.to_json()))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "series".to_string(),
+            Json::Obj(
+                self.series
+                    .iter()
+                    .map(|(k, pts)| {
+                        (
+                            k.clone(),
+                            Json::Arr(
+                                pts.iter()
+                                    .map(|&(t, v)| {
+                                        Json::Arr(vec![
+                                            Json::Num(t as f64),
+                                            Json::Num(v),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_bit_width() {
+        let mut h = Histogram::default();
+        h.observe(0); // bucket 0
+        h.observe(1); // bucket 1
+        h.observe(2); // bucket 2
+        h.observe(3); // bucket 2
+        h.observe(1024); // bucket 11
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 1);
+        assert_eq!(h.buckets[2], 2);
+        assert_eq!(h.buckets[11], 1);
+        assert_eq!(h.count, 5);
+        assert_eq!(h.sum, 1030);
+        assert!((h.mean() - 206.0).abs() < 1e-12);
+        assert_eq!(Histogram::default().mean(), 0.0);
+        // u64::MAX lands in the last bucket without overflow.
+        let mut top = Histogram::default();
+        top.observe(u64::MAX);
+        assert_eq!(top.buckets[64], 1);
+    }
+
+    #[test]
+    fn sampling_respects_cadence() {
+        let mut m = MetricsRegistry::new(100);
+        assert!(m.should_sample(0)); // first call always samples
+        assert!(!m.should_sample(0));
+        assert!(!m.should_sample(99));
+        assert!(m.should_sample(100));
+        assert!(!m.should_sample(150));
+        assert!(m.should_sample(1000)); // gaps skip straight to now
+        assert!(!m.should_sample(1099));
+        assert!(m.should_sample(1100));
+    }
+
+    #[test]
+    fn registry_serializes_all_sections() {
+        let mut m = MetricsRegistry::new(1000);
+        m.inc("requests", 3);
+        m.inc("requests", 1);
+        m.gauge("completed_frac", 0.75);
+        m.observe("latency_cycles", 12_345);
+        m.push_series("queue_depth", 0, 0.0);
+        m.push_series("queue_depth", 1000, 4.0);
+        assert_eq!(m.counter("requests"), 4);
+        assert_eq!(m.series("queue_depth").unwrap().len(), 2);
+        let j = m.to_json().to_string_compact();
+        assert!(j.contains("\"cadence_cycles\":1000"), "{j}");
+        assert!(j.contains("\"requests\":4"), "{j}");
+        assert!(j.contains("\"queue_depth\":[[0,0],[1000,4]]"), "{j}");
+        assert!(j.contains("\"latency_cycles\""), "{j}");
+        // Round-trips through the parser.
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed
+                .get("counters")
+                .and_then(|c| c.get("requests"))
+                .and_then(Json::as_f64),
+            Some(4.0)
+        );
+    }
+}

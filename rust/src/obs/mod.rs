@@ -1,0 +1,46 @@
+//! Virtual-time observability for the serving stack and the engine.
+//!
+//! The serving layer (PRs 1–5) reports only end-of-run aggregates, so
+//! "why did this interactive request miss its deadline" — admitted late?
+//! evicted by class-aware admission? window-doomed? stolen mid-queue? —
+//! was unanswerable. This module adds the missing instrumentation in four
+//! pieces, all denominated in the same 216 MHz reference timeline the
+//! serving layer already uses:
+//!
+//! 1. **Lifecycle events** ([`events`]) — a [`Recorder`] trait with a
+//!    zero-cost [`NoopRecorder`] default and a bounded [`RingRecorder`],
+//!    fed typed [`Event`]s (`Arrive` … `Finish`) from tap points inside
+//!    `serve::{batcher, fleet}` and the replay loop. The event stream is
+//!    *checkable*: [`derive_class_misses`] re-derives per-class deadline
+//!    misses from events alone, and tests pin it bit-for-bit against
+//!    [`crate::serve::ServeReport::class_misses`] — the behavioral anchor
+//!    the ROADMAP's event-driven scheduler refactor will regress against.
+//! 2. **Metrics** ([`metrics`]) — a [`MetricsRegistry`] of counters,
+//!    gauges and log2-bucket histograms plus virtual-time series (queue
+//!    depth, in-flight batches, per-device utilization) sampled on a
+//!    configurable cycle cadence.
+//! 3. **Perfetto export** ([`perfetto`]) — renders an event stream as
+//!    Chrome trace-event JSON (one track per device, complete slices per
+//!    batch, async slices per request from arrival to finish) loadable in
+//!    `ui.perfetto.dev`, behind `serve --events-out` / `--metrics-out`.
+//! 4. **Per-layer profiling** ([`profile`]) — attributes an inference's
+//!    cycles and joules per layer × [`InstrClass`](crate::mcu::InstrClass)
+//!    from the executor's per-layer [`Counter`](crate::mcu::Counter)
+//!    diffs, priced against a [`Target`](crate::target::Target)'s cycle
+//!    and energy models (the `profile` CLI verb).
+//!
+//! Recording is strictly passive: every tap point is gated on
+//! [`Recorder::enabled`], no event ever feeds back into admission,
+//! placement or timing, and the RoundRobin/all-M7 bit-for-bit pin runs
+//! with a [`RingRecorder`] attached to prove it.
+
+pub mod events;
+pub mod metrics;
+pub mod perfetto;
+pub mod profile;
+
+pub use events::{
+    class_name, derive_class_misses, Event, EventKind, NoopRecorder, Recorder, RingRecorder,
+};
+pub use metrics::{Histogram, MetricsRegistry};
+pub use profile::{ExecutionProfile, LayerProfile};

@@ -1,0 +1,277 @@
+//! Chrome trace-event / Perfetto JSON export of a lifecycle event stream.
+//!
+//! Produces a `{"traceEvents": [...]}` document loadable in
+//! `ui.perfetto.dev` or `chrome://tracing`:
+//!
+//! * one named thread (track) per fleet device, carrying `ph:"X"`
+//!   complete slices per executed batch (requests sharing a device +
+//!   start + finish collapse into one slice);
+//! * `ph:"b"`/`ph:"e"` async slices per request spanning arrival →
+//!   finish, with miss flag, SLO class and latency in the end args;
+//! * an `eventCounts` side table (kind name → count) used by the CI
+//!   schema checks — Perfetto ignores unknown top-level keys.
+//!
+//! Timestamps are microseconds: virtual-time cycles divided by 216 (the
+//! 216 MHz reference clock all serve timelines are denominated in).
+
+use super::events::{class_name, Event, EventKind};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Reference-timeline cycles → trace microseconds (216 MHz).
+pub fn cycles_to_us(cycles: u64) -> f64 {
+    cycles as f64 / (crate::target::STM32F746_CLOCK_HZ as f64 / 1e6)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Render an event stream (oldest first) as a Chrome trace JSON document.
+/// `device_names` labels the per-device tracks; devices only ever
+/// referenced by index fall back to `dev<i>`.
+pub fn export<'a, I>(events: I, device_names: &[String]) -> Json
+where
+    I: IntoIterator<Item = &'a Event>,
+{
+    let events: Vec<&Event> = events.into_iter().collect();
+    let mut trace: Vec<Json> = Vec::new();
+    let mut counts: BTreeMap<&'static str, u64> = BTreeMap::new();
+
+    // Track metadata: pid 0 = the fleet, tid i+1 = device i (tid 0 is
+    // reserved for request-scoped instant events).
+    let mut max_device = device_names.len();
+    for ev in &events {
+        let d = match ev.kind {
+            EventKind::Place { device, .. }
+            | EventKind::Start { device }
+            | EventKind::Finish { device, .. } => Some(device),
+            EventKind::Migrate { from, to } => Some(from.max(to)),
+            _ => None,
+        };
+        if let Some(d) = d {
+            max_device = max_device.max(d + 1);
+        }
+    }
+    trace.push(obj(vec![
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(0.0)),
+        ("name", Json::Str("process_name".into())),
+        ("args", obj(vec![("name", Json::Str("mcu-fleet".into()))])),
+    ]));
+    for i in 0..max_device {
+        let label = device_names
+            .get(i)
+            .cloned()
+            .unwrap_or_else(|| format!("dev{i}"));
+        trace.push(obj(vec![
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num((i + 1) as f64)),
+            ("name", Json::Str("thread_name".into())),
+            ("args", obj(vec![("name", Json::Str(label))])),
+        ]));
+    }
+
+    // Batch execution slices: requests in the same batch share
+    // (device, start, finish); collapse them into one slice each.
+    let mut batches: BTreeMap<(usize, u64, u64), u64> = BTreeMap::new();
+
+    for ev in &events {
+        *counts.entry(ev.kind.name()).or_insert(0) += 1;
+        match &ev.kind {
+            EventKind::Arrive { deadline } => {
+                trace.push(obj(vec![
+                    ("ph", Json::Str("b".into())),
+                    ("cat", Json::Str("request".into())),
+                    ("name", Json::Str("request".into())),
+                    ("id", Json::Num(ev.id as f64)),
+                    ("pid", Json::Num(0.0)),
+                    ("ts", Json::Num(cycles_to_us(ev.cycles))),
+                    (
+                        "args",
+                        obj(vec![
+                            ("class", Json::Str(class_name(ev.class).into())),
+                            ("key_idx", Json::Num(ev.key_idx as f64)),
+                            (
+                                "deadline_us",
+                                if *deadline == u64::MAX {
+                                    Json::Null
+                                } else {
+                                    Json::Num(cycles_to_us(*deadline))
+                                },
+                            ),
+                        ]),
+                    ),
+                ]));
+            }
+            EventKind::Finish {
+                device,
+                start,
+                latency_cycles,
+                miss,
+            } => {
+                *batches.entry((*device, *start, ev.cycles)).or_insert(0) += 1;
+                trace.push(obj(vec![
+                    ("ph", Json::Str("e".into())),
+                    ("cat", Json::Str("request".into())),
+                    ("name", Json::Str("request".into())),
+                    ("id", Json::Num(ev.id as f64)),
+                    ("pid", Json::Num(0.0)),
+                    ("ts", Json::Num(cycles_to_us(ev.cycles))),
+                    (
+                        "args",
+                        obj(vec![
+                            ("miss", Json::Bool(*miss)),
+                            ("class", Json::Str(class_name(ev.class).into())),
+                            (
+                                "latency_ms",
+                                Json::Num(crate::cycles_to_ms(*latency_cycles)),
+                            ),
+                            ("device", Json::Num(*device as f64)),
+                        ]),
+                    ),
+                ]));
+            }
+            // Drops terminate their async slice so shed/evicted/rejected
+            // requests don't render as unbounded open spans.
+            EventKind::Shed { .. }
+            | EventKind::Evict { .. }
+            | EventKind::SramReject { .. } => {
+                trace.push(obj(vec![
+                    ("ph", Json::Str("e".into())),
+                    ("cat", Json::Str("request".into())),
+                    ("name", Json::Str("request".into())),
+                    ("id", Json::Num(ev.id as f64)),
+                    ("pid", Json::Num(0.0)),
+                    ("ts", Json::Num(cycles_to_us(ev.cycles))),
+                    (
+                        "args",
+                        obj(vec![
+                            ("dropped", Json::Str(ev.kind.name().into())),
+                            ("class", Json::Str(class_name(ev.class).into())),
+                        ]),
+                    ),
+                ]));
+            }
+            _ => {}
+        }
+    }
+
+    for ((device, start, finish), requests) in &batches {
+        trace.push(obj(vec![
+            ("ph", Json::Str("X".into())),
+            ("cat", Json::Str("exec".into())),
+            ("name", Json::Str(format!("batch x{requests}"))),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num((*device + 1) as f64)),
+            ("ts", Json::Num(cycles_to_us(*start))),
+            (
+                "dur",
+                Json::Num(cycles_to_us(finish.saturating_sub(*start)).max(0.001)),
+            ),
+            ("args", obj(vec![("requests", Json::Num(*requests as f64))])),
+        ]));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(trace));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".into()));
+    top.insert(
+        "eventCounts".to_string(),
+        Json::Obj(
+            counts
+                .iter()
+                .map(|(k, &v)| (k.to_string(), Json::Num(v as f64)))
+                .collect(),
+        ),
+    );
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_produces_tracks_slices_and_counts() {
+        let events = vec![
+            Event {
+                cycles: 0,
+                id: 1,
+                key_idx: 0,
+                class: 0,
+                kind: EventKind::Arrive { deadline: 4_320_000 },
+            },
+            Event {
+                cycles: 0,
+                id: 1,
+                key_idx: 0,
+                class: 0,
+                kind: EventKind::Admit,
+            },
+            Event {
+                cycles: 216,
+                id: 1,
+                key_idx: 0,
+                class: 0,
+                kind: EventKind::Start { device: 0 },
+            },
+            Event {
+                cycles: 432,
+                id: 1,
+                key_idx: 0,
+                class: 0,
+                kind: EventKind::Finish {
+                    device: 0,
+                    start: 216,
+                    latency_cycles: 432,
+                    miss: false,
+                },
+            },
+            Event {
+                cycles: 500,
+                id: 2,
+                key_idx: 1,
+                class: 2,
+                kind: EventKind::Shed { had_deadline: false },
+            },
+        ];
+        let names = vec!["m7 #0".to_string()];
+        let doc = export(&events, &names);
+        let s = doc.to_string_compact();
+        assert!(s.contains("\"traceEvents\""), "{s}");
+        assert!(s.contains("m7 #0"), "{s}");
+        assert!(s.contains("\"Arrive\":1"), "{s}");
+        assert!(s.contains("\"Finish\":1"), "{s}");
+        assert!(s.contains("\"Shed\":1"), "{s}");
+        // Round-trips; the batch slice lands on device 0's track (tid 1)
+        // with a 1 µs duration (216 cycles @ 216 MHz).
+        let parsed = Json::parse(&s).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let slice = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .expect("one batch slice");
+        assert_eq!(slice.get("tid").and_then(Json::as_f64), Some(1.0));
+        assert!((slice.get("dur").and_then(Json::as_f64).unwrap() - 1.0).abs() < 1e-9);
+        assert!((slice.get("ts").and_then(Json::as_f64).unwrap() - 1.0).abs() < 1e-9);
+        // Every async begin has a matching end (finish or drop).
+        let begins = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("b"))
+            .count();
+        let ends = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("e"))
+            .count();
+        assert_eq!(begins, 1);
+        assert_eq!(ends, 2); // id 1 finished, id 2 shed
+    }
+}

@@ -1,0 +1,242 @@
+//! Per-layer execution profiling: cycles and joules per layer ×
+//! [`InstrClass`], from the executor's per-layer [`Counter`] diffs.
+//!
+//! The executor snapshots the instruction histogram around every layer,
+//! so each layer owns an exact `u64` counter diff. Pricing falls out of
+//! the [`Target`]'s cycle and energy models:
+//!
+//! * per-layer **cycles** are the executor's own cumulative-cycle diffs,
+//!   which telescope — their sum equals the run's total cycle count
+//!   bit-for-bit;
+//! * total **joules** are priced once over the *merged* per-layer
+//!   counter, which reproduces the run's total counter exactly (integer
+//!   merge), so the profile total is bit-identical to
+//!   [`DeployReport::joules`](crate::engine::DeployReport) for the same
+//!   target — the invariant `cmd profile` asserts;
+//! * per-layer joules price each layer's counter independently
+//!   (dynamic energy + static power over the layer's priced time).
+//!   Floating-point summation order makes their sum only ~1e-12-close
+//!   to the total, which is why the total is *not* defined as that sum.
+
+use crate::mcu::counter::Counter;
+use crate::mcu::cycles::{InstrClass, ALL_CLASSES};
+use crate::target::Target;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Stable lowercase label for an instruction class (JSON keys).
+pub fn instr_label(class: InstrClass) -> &'static str {
+    match class {
+        InstrClass::Alu => "alu",
+        InstrClass::Bit => "bit",
+        InstrClass::Mul => "mul",
+        InstrClass::Simd => "simd",
+        InstrClass::MulLong => "mul_long",
+        InstrClass::Load => "load",
+        InstrClass::Store => "store",
+        InstrClass::BranchTaken => "branch_taken",
+        InstrClass::BranchNotTaken => "branch_not_taken",
+        InstrClass::Sat => "sat",
+    }
+}
+
+/// One layer's attributed execution cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProfile {
+    pub name: String,
+    /// Device cycles attributed to this layer (cumulative-cycle diff).
+    pub cycles: u64,
+    /// Energy attributed to this layer (independent pricing; informative).
+    pub joules: f64,
+    /// Exact instruction histogram of this layer.
+    pub counter: Counter,
+}
+
+/// A full single-inference profile on one target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutionProfile {
+    /// Registry name of the target everything is priced against.
+    pub target: String,
+    pub layers: Vec<LayerProfile>,
+    /// Sum of per-layer cycles == the run's total device cycles.
+    pub total_cycles: u64,
+    /// Exact merge of every per-layer counter == the run's counter.
+    pub total_counter: Counter,
+    /// `target.joules(&total_counter)` — bit-identical to the
+    /// deploy-path energy figure for the same run.
+    pub total_joules: f64,
+}
+
+impl ExecutionProfile {
+    /// Build a profile from the executor's parallel per-layer arrays:
+    /// `(name, cycles)` pairs plus each layer's exact counter diff.
+    pub fn from_layers(
+        target: &Target,
+        per_layer: &[(String, u64)],
+        counters: &[Counter],
+    ) -> Self {
+        assert_eq!(
+            per_layer.len(),
+            counters.len(),
+            "per-layer cycles and counters must be parallel arrays"
+        );
+        let mut total_counter = Counter::new();
+        let mut total_cycles = 0u64;
+        let mut layers = Vec::with_capacity(per_layer.len());
+        for ((name, cycles), ctr) in per_layer.iter().zip(counters) {
+            total_counter.merge(ctr);
+            total_cycles += cycles;
+            layers.push(LayerProfile {
+                name: name.clone(),
+                cycles: *cycles,
+                joules: target.joules(ctr),
+                counter: ctr.clone(),
+            });
+        }
+        ExecutionProfile {
+            target: target.name.to_string(),
+            layers,
+            total_cycles,
+            total_joules: target.joules(&total_counter),
+            total_counter,
+        }
+    }
+
+    /// Latency of the profiled inference on its target, in ms.
+    pub fn latency_ms(&self, target: &Target) -> f64 {
+        target.seconds(self.total_cycles) * 1e3
+    }
+
+    /// Aligned table: per-layer cycles, share, energy and the Eq. 12
+    /// instruction-mix decomposition (SISD / SIMD / bit).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec![
+            "layer", "cycles", "cyc%", "uJ", "instrs", "sisd", "simd", "bit",
+        ]);
+        for l in &self.layers {
+            let (sisd, simd, bit) = l.counter.eq12_components();
+            let pct = if self.total_cycles == 0 {
+                0.0
+            } else {
+                100.0 * l.cycles as f64 / self.total_cycles as f64
+            };
+            t.row(vec![
+                l.name.clone(),
+                l.cycles.to_string(),
+                format!("{pct:.1}"),
+                format!("{:.2}", l.joules * 1e6),
+                l.counter.instructions().to_string(),
+                sisd.to_string(),
+                simd.to_string(),
+                bit.to_string(),
+            ]);
+        }
+        let (sisd, simd, bit) = self.total_counter.eq12_components();
+        t.row(vec![
+            "TOTAL".to_string(),
+            self.total_cycles.to_string(),
+            "100.0".to_string(),
+            format!("{:.2}", self.total_joules * 1e6),
+            self.total_counter.instructions().to_string(),
+            sisd.to_string(),
+            simd.to_string(),
+            bit.to_string(),
+        ]);
+        t.render()
+    }
+
+    /// JSON document: totals plus per-layer cycles, joules and the full
+    /// per-[`InstrClass`] histogram (zero classes omitted).
+    pub fn to_json(&self) -> Json {
+        let classes_json = |ctr: &Counter| {
+            Json::Obj(
+                ALL_CLASSES
+                    .iter()
+                    .filter(|&&c| ctr.get(c) > 0)
+                    .map(|&c| (instr_label(c).to_string(), Json::Num(ctr.get(c) as f64)))
+                    .collect::<BTreeMap<_, _>>(),
+            )
+        };
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(l.name.clone()));
+                m.insert("cycles".to_string(), Json::Num(l.cycles as f64));
+                m.insert("joules".to_string(), Json::Num(l.joules));
+                m.insert("classes".to_string(), classes_json(&l.counter));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("target".to_string(), Json::Str(self.target.clone()));
+        m.insert(
+            "total_cycles".to_string(),
+            Json::Num(self.total_cycles as f64),
+        );
+        m.insert("total_joules".to_string(), Json::Num(self.total_joules));
+        m.insert(
+            "total_instructions".to_string(),
+            Json::Num(self.total_counter.instructions() as f64),
+        );
+        m.insert("per_layer".to_string(), Json::Arr(layers));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctr(simd: u64, load: u64) -> Counter {
+        let mut c = Counter::new();
+        c.charge(InstrClass::Simd, simd);
+        c.charge(InstrClass::Load, load);
+        c
+    }
+
+    #[test]
+    fn totals_are_exact_merges() {
+        let t = Target::stm32f746();
+        let per_layer = vec![("conv0".to_string(), 1000u64), ("fc".to_string(), 500u64)];
+        let counters = vec![ctr(100, 50), ctr(10, 200)];
+        let p = ExecutionProfile::from_layers(&t, &per_layer, &counters);
+        assert_eq!(p.total_cycles, 1500);
+        assert_eq!(p.total_counter.simd, 110);
+        assert_eq!(p.total_counter.load, 250);
+        // Total joules price the merged counter, not a float sum.
+        let mut merged = Counter::new();
+        merged.merge(&counters[0]);
+        merged.merge(&counters[1]);
+        assert_eq!(p.total_joules.to_bits(), t.joules(&merged).to_bits());
+        // Per-layer joules are positive and smaller than the total's
+        // dynamic+static envelope.
+        assert!(p.layers.iter().all(|l| l.joules > 0.0));
+    }
+
+    #[test]
+    fn render_and_json_cover_every_layer() {
+        let t = Target::stm32f446();
+        let per_layer = vec![("conv0".to_string(), 10u64)];
+        let counters = vec![ctr(3, 4)];
+        let p = ExecutionProfile::from_layers(&t, &per_layer, &counters);
+        let table = p.render();
+        assert!(table.contains("conv0"), "{table}");
+        assert!(table.contains("TOTAL"), "{table}");
+        let j = p.to_json().to_string_compact();
+        assert!(j.contains("\"target\":\"stm32f446\""), "{j}");
+        assert!(j.contains("\"per_layer\""), "{j}");
+        assert!(j.contains("\"simd\":3"), "{j}");
+        assert!(j.contains("\"load\":4"), "{j}");
+        assert!(p.latency_ms(&t) > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_arrays_panic() {
+        let t = Target::stm32f746();
+        ExecutionProfile::from_layers(&t, &[("a".to_string(), 1)], &[]);
+    }
+}

@@ -39,6 +39,7 @@
 //! triggered a preemptive flush — so downstream scheduling is exact and
 //! deterministic.
 
+use crate::obs::{Event, EventKind};
 use std::collections::VecDeque;
 
 /// Per-invocation overhead charged once per batch (cycles): scheduler
@@ -173,6 +174,12 @@ pub struct Batcher {
     pub preempt_flushes: u64,
     /// Flushed batches split into critical + deferrable halves.
     pub splits: u64,
+    /// Observability gate: when set (via [`set_record`](Batcher::set_record))
+    /// admission and flush decisions are logged as lifecycle events into
+    /// an internal buffer drained by the replay loop. Off by default so
+    /// direct users of the batcher (the legacy-pipeline pin) pay nothing.
+    record: bool,
+    events: Vec<Event>,
 }
 
 impl Batcher {
@@ -189,6 +196,47 @@ impl Batcher {
             shed_deadline_by_class: [0; 3],
             preempt_flushes: 0,
             splits: 0,
+            record: false,
+            events: Vec::new(),
+        }
+    }
+
+    /// Enable/disable lifecycle-event logging (`Admit`/`Evict`/`Shed`/
+    /// `Flush*`). Purely passive: no admission or flush decision reads
+    /// the log.
+    pub fn set_record(&mut self, on: bool) {
+        self.record = on;
+    }
+
+    /// Take all events logged since the last drain, in decision order.
+    pub fn drain_events(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Log one request-scoped event at virtual time `cycles`.
+    fn log_req(&mut self, cycles: u64, r: &PendingRequest, kind: EventKind) {
+        if self.record {
+            self.events.push(Event {
+                cycles,
+                id: r.id,
+                key_idx: r.key_idx,
+                class: class_index(r.priority) as u8,
+                kind,
+            });
+        }
+    }
+
+    /// Log one batch-scoped flush event: stamped with the batch's ready
+    /// cycle, first member's id and the batch's effective class.
+    fn log_flush(&mut self, batch: &ReadyBatch, kind: EventKind) {
+        if self.record {
+            self.events.push(Event {
+                cycles: batch.ready,
+                id: batch.requests.first().map_or(0, |r| r.id),
+                key_idx: batch.key_idx,
+                class: class_index(batch.priority()) as u8,
+                kind,
+            });
         }
     }
 
@@ -280,9 +328,23 @@ impl Batcher {
                 Some((k, pos)) => {
                     let evicted = self.queues[k].remove(pos).expect("victim position valid");
                     self.count_shed(&evicted);
+                    self.log_req(
+                        req.arrival,
+                        &evicted,
+                        EventKind::Evict {
+                            had_deadline: evicted.deadline != u64::MAX,
+                        },
+                    );
                 }
                 None => {
                     self.count_shed(&req);
+                    self.log_req(
+                        req.arrival,
+                        &req,
+                        EventKind::Shed {
+                            had_deadline: req.deadline != u64::MAX,
+                        },
+                    );
                     return false;
                 }
             }
@@ -291,6 +353,7 @@ impl Batcher {
             let u = &mut self.urgent[req.key_idx];
             *u = Some(u.map_or(req.priority, |p| p.max(req.priority)));
         }
+        self.log_req(req.arrival, &req, EventKind::Admit);
         self.queues[req.key_idx].push_back(req);
         debug_assert!(self.queued() <= self.cfg.max_queue, "bounded queue invariant");
         true
@@ -334,11 +397,18 @@ impl Batcher {
                 self.queues[key_idx] = kept;
                 if !taken.is_empty() {
                     self.preempt_flushes += 1;
-                    out.push(ReadyBatch {
+                    let batch = ReadyBatch {
                         key_idx,
                         ready: now,
                         requests: taken,
-                    });
+                    };
+                    self.log_flush(
+                        &batch,
+                        EventKind::FlushPreempt {
+                            batch_size: batch.requests.len(),
+                        },
+                    );
+                    out.push(batch);
                 }
             }
             loop {
@@ -355,11 +425,13 @@ impl Batcher {
                 let requests: Vec<PendingRequest> =
                     self.queues[key_idx].drain(..take).collect();
                 let ready = self.slice_ready(&requests);
-                out.push(ReadyBatch {
+                let batch = ReadyBatch {
                     key_idx,
                     ready,
                     requests,
-                });
+                };
+                self.log_flush(&batch, Self::flush_kind(&batch, self.cfg.max_batch));
+                out.push(batch);
             }
         }
         out
@@ -377,14 +449,31 @@ impl Batcher {
                 let requests: Vec<PendingRequest> =
                     self.queues[key_idx].drain(..take).collect();
                 let ready = self.slice_ready(&requests);
-                out.push(ReadyBatch {
+                let batch = ReadyBatch {
                     key_idx,
                     ready,
                     requests,
-                });
+                };
+                self.log_flush(&batch, Self::flush_kind(&batch, self.cfg.max_batch));
+                out.push(batch);
             }
         }
         out
+    }
+
+    /// Flush cause of a non-preemptive batch: full iff it carries
+    /// `max_batch` members, otherwise its window expired (or the trace
+    /// ended, which drains by window-expiry semantics).
+    fn flush_kind(batch: &ReadyBatch, max_batch: usize) -> EventKind {
+        if batch.requests.len() == max_batch {
+            EventKind::FlushFull {
+                batch_size: batch.requests.len(),
+            }
+        } else {
+            EventKind::FlushWindow {
+                batch_size: batch.requests.len(),
+            }
+        }
     }
 
     /// Split flushed batches that mix deadline-critical members (riding
@@ -812,6 +901,43 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].requests.len(), 2);
         assert_eq!(b.splits, 1, "no additional split");
+    }
+
+    #[test]
+    fn event_log_is_gated_and_covers_admission_and_flushes() {
+        let mut b = Batcher::new(cfg(2, 1000, 2), 1);
+        b.offer(req(0, 0, 1));
+        assert!(b.drain_events().is_empty(), "logging is off by default");
+        b.set_record(true);
+        b.offer(req(1, 0, 2)); // fills the batch
+        assert!(!b.offer(req(2, 0, 3)), "queue full: shed");
+        let due = b.pop_due(3);
+        assert_eq!(due.len(), 1);
+        let kinds: Vec<&str> = b.drain_events().iter().map(|e| e.kind.name()).collect();
+        assert_eq!(kinds, vec!["Admit", "Shed", "FlushFull"]);
+        assert!(b.drain_events().is_empty(), "drain empties the log");
+        // Window-expiry drain logs FlushWindow; class-aware eviction logs
+        // Evict with the victim's identity.
+        let mut b = Batcher::new(
+            BatcherCfg {
+                admission: AdmissionKind::ClassAware,
+                ..cfg(8, 1_000_000, 1)
+            },
+            1,
+        );
+        b.set_record(true);
+        b.offer(classed(0, 0, 0, 0, u64::MAX));
+        b.offer(classed(1, 0, 5, 2, 9_999)); // evicts id 0
+        let _ = b.drain_all();
+        let events = b.drain_events();
+        let kinds: Vec<&str> = events.iter().map(|e| e.kind.name()).collect();
+        assert_eq!(kinds, vec!["Admit", "Evict", "Admit", "FlushWindow"]);
+        assert_eq!(events[1].id, 0, "Evict names the victim");
+        assert_eq!(events[1].cycles, 5, "Evict is stamped at the evicting arrival");
+        assert_eq!(
+            events[1].kind,
+            EventKind::Evict { had_deadline: false }
+        );
     }
 
     #[test]

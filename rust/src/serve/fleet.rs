@@ -278,6 +278,11 @@ pub struct Fleet {
     pub steal: bool,
     /// Final placements by ticket (steal mode).
     resolutions: Vec<Option<Resolution>>,
+    /// Observability log of steals: `(now, from, to, ticket)` per
+    /// migration, appended by [`rebalance`](Fleet::rebalance) and
+    /// drained by the replay loop ([`drain_migrations`](Fleet::drain_migrations)).
+    /// Purely passive — no placement decision reads it.
+    migration_log: Vec<(u64, usize, usize, usize)>,
 }
 
 impl Fleet {
@@ -293,6 +298,7 @@ impl Fleet {
             max_queue_depth,
             steal: false,
             resolutions: Vec::new(),
+            migration_log: Vec::new(),
         }
     }
 
@@ -523,6 +529,7 @@ impl Fleet {
                     .expect("candidate position valid");
                 // A steal decided at `now` cannot start retroactively.
                 pb.ready = pb.ready.max(now);
+                self.migration_log.push((now, v, thief, pb.ticket));
                 self.devices[thief].queue.push_back(pb);
                 self.devices[thief].migrations += 1;
                 self.recompute_projection(v);
@@ -549,6 +556,12 @@ impl Fleet {
     /// Total migrations across the fleet.
     pub fn migrations(&self) -> u64 {
         self.devices.iter().map(|d| d.migrations).sum()
+    }
+
+    /// Take the steal log accumulated since the last drain:
+    /// `(now, from, to, ticket)` per migration, in decision order.
+    pub fn drain_migrations(&mut self) -> Vec<(u64, usize, usize, usize)> {
+        std::mem::take(&mut self.migration_log)
     }
 }
 
@@ -739,6 +752,10 @@ mod tests {
         assert_eq!(stolen, 1);
         assert_eq!(fleet.devices[1].migrations, 1);
         assert_eq!(fleet.migrations(), 1);
+        // The steal log records the migration exactly once.
+        let log = fleet.drain_migrations();
+        assert_eq!(log, vec![(now, 0, 1, b.ticket.unwrap())]);
+        assert!(fleet.drain_migrations().is_empty(), "drain empties the log");
         fleet.finalize();
         let ra = fleet.resolution(a.ticket.unwrap()).unwrap();
         let rb = fleet.resolution(b.ticket.unwrap()).unwrap();

@@ -52,6 +52,19 @@
 //!   classes and overload bursts, (de)serializable for recorded-trace
 //!   replay.
 //!
+//! With a [`Recorder`](crate::obs::Recorder) attached
+//! ([`run_trace_observed`]), every decision point above emits a typed
+//! lifecycle event on the virtual timeline: `Arrive` at trace replay,
+//! `Admit` / `Shed` / `Evict` at admission, `SramReject` at the SRAM
+//! gate, `FlushWindow` / `FlushFull` / `FlushPreempt` at the batcher,
+//! `Place` / `Start` / `Finish` around scheduling and execution, and
+//! `Migrate` at the fleet's steal pass — and an optional
+//! [`MetricsRegistry`](crate::obs::MetricsRegistry) samples queue depth,
+//! in-flight batches and per-device utilization on a virtual-time
+//! cadence. Recording is strictly passive: the no-op recorder costs
+//! nothing, and an attached recorder never changes a single report bit
+//! (pinned by the `recorder_attachment_is_passive` test).
+//!
 //! Everything is deterministic: a (workloads, trace, config) triple
 //! always produces the same report, so serving numbers are comparable
 //! across PRs the same way the fig5–fig8 benches are. Each replay owns
@@ -86,6 +99,7 @@ use std::time::Instant;
 use crate::datasets::{self, Task};
 use crate::engine::{self, CompiledModel};
 use crate::mcu::Counter;
+use crate::obs::{Event, EventKind, MetricsRegistry, NoopRecorder, Recorder};
 use crate::models::{self, ModelDesc};
 use crate::ops::slbc::ConvScratch;
 use crate::ops::Method;
@@ -185,6 +199,7 @@ struct ModelAcc {
 /// latency and deadline outcome resolve only after the fleet finalizes.
 struct DeferredReq {
     ticket: usize,
+    id: usize,
     arrival: u64,
     deadline: u64,
     class_idx: usize,
@@ -197,10 +212,20 @@ struct ReplayState<'a> {
     sched: &'a mut dyn Scheduler,
     fleet: &'a mut Fleet,
     scratch: &'a mut ConvScratch,
+    /// Lifecycle-event sink (the no-op recorder on the plain path).
+    rec: &'a mut dyn Recorder,
     latencies: Vec<u64>,
+    /// Per-SLO-class completed-request latencies (0 = interactive).
+    latencies_by_class: [Vec<u64>; 3],
     accs: Vec<ModelAcc>,
     deadline_misses: u64,
     miss_by_class: [u64; 3],
+    /// Completed-but-late requests whose inference alone would have met
+    /// the deadline: the miss was queueing/batching delay.
+    miss_queue_wait: u64,
+    /// Completed-but-late requests that could not have met the deadline
+    /// even starting at arrival: the miss was compute-bound.
+    miss_compute: u64,
     makespan: u64,
     /// Steal mode: per-request outcomes awaiting fleet resolution.
     deferred_reqs: Vec<DeferredReq>,
@@ -256,6 +281,27 @@ fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> 
             art.peak_sram()
         )
     })?;
+    if st.rec.enabled() {
+        // Each member request gets its own Place event so the lifecycle
+        // chain Arrive → Admit → Place → Start → Finish is per-request.
+        let policy = st.sched.name();
+        let predicted_joules = st.fleet.devices[disp.device].cfg.batch_joules(&ctr);
+        for r in &batch.requests {
+            st.rec.record(Event {
+                cycles: batch.ready,
+                id: r.id,
+                key_idx: batch.key_idx,
+                class: class_index(r.priority) as u8,
+                kind: EventKind::Place {
+                    policy,
+                    device: disp.device,
+                    ticket: disp.ticket,
+                    predicted_cycles: disp.device_cycles,
+                    predicted_joules,
+                },
+            });
+        }
+    }
     let acc = &mut st.accs[batch.key_idx];
     acc.requests += batch.requests.len() as u64;
     acc.batches += 1;
@@ -265,6 +311,7 @@ fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> 
         for r in &batch.requests {
             st.deferred_reqs.push(DeferredReq {
                 ticket,
+                id: r.id,
                 arrival: r.arrival,
                 deadline: r.deadline,
                 class_idx: class_index(r.priority),
@@ -275,11 +322,45 @@ fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> 
         return Ok(());
     }
     for r in &batch.requests {
-        st.latencies.push(disp.finish.saturating_sub(r.arrival));
-        if disp.finish > r.deadline {
+        let latency = disp.finish.saturating_sub(r.arrival);
+        let class_idx = class_index(r.priority);
+        st.latencies.push(latency);
+        st.latencies_by_class[class_idx].push(latency);
+        let miss = disp.finish > r.deadline;
+        if miss {
             acc.deadline_misses += 1;
             st.deadline_misses += 1;
-            st.miss_by_class[class_index(r.priority)] += 1;
+            st.miss_by_class[class_idx] += 1;
+            // Attribution: had the batch started the moment the request
+            // arrived, would pure execution time still have missed?
+            if r.arrival + (disp.finish - disp.start) > r.deadline {
+                st.miss_compute += 1;
+            } else {
+                st.miss_queue_wait += 1;
+            }
+        }
+        if st.rec.enabled() {
+            st.rec.record(Event {
+                cycles: disp.start,
+                id: r.id,
+                key_idx: batch.key_idx,
+                class: class_idx as u8,
+                kind: EventKind::Start {
+                    device: disp.device,
+                },
+            });
+            st.rec.record(Event {
+                cycles: disp.finish,
+                id: r.id,
+                key_idx: batch.key_idx,
+                class: class_idx as u8,
+                kind: EventKind::Finish {
+                    device: disp.device,
+                    start: disp.start,
+                    latency_cycles: latency,
+                    miss,
+                },
+            });
         }
     }
     acc.cycles += disp.device_cycles;
@@ -304,21 +385,88 @@ fn resolve_deferred(st: &mut ReplayState) {
             .fleet
             .resolution(dr.ticket)
             .expect("finalized fleet resolves every ticket");
-        st.latencies.push(res.finish.saturating_sub(dr.arrival));
-        if res.finish > dr.deadline {
+        let latency = res.finish.saturating_sub(dr.arrival);
+        st.latencies.push(latency);
+        st.latencies_by_class[dr.class_idx].push(latency);
+        let miss = res.finish > dr.deadline;
+        if miss {
             st.accs[dr.key_idx].deadline_misses += 1;
             st.deadline_misses += 1;
             st.miss_by_class[dr.class_idx] += 1;
+            if dr.arrival + (res.finish - res.start) > dr.deadline {
+                st.miss_compute += 1;
+            } else {
+                st.miss_queue_wait += 1;
+            }
+        }
+        if st.rec.enabled() {
+            st.rec.record(Event {
+                cycles: res.start,
+                id: dr.id,
+                key_idx: dr.key_idx,
+                class: dr.class_idx as u8,
+                kind: EventKind::Start { device: res.device },
+            });
+            st.rec.record(Event {
+                cycles: res.finish,
+                id: dr.id,
+                key_idx: dr.key_idx,
+                class: dr.class_idx as u8,
+                kind: EventKind::Finish {
+                    device: res.device,
+                    start: res.start,
+                    latency_cycles: latency,
+                    miss,
+                },
+            });
         }
     }
 }
 
+/// Move the batcher's and fleet's internal observability logs into the
+/// recorder. The batcher log is gated (empty unless recording); the
+/// fleet's migration log always accumulates, so it is drained — and
+/// discarded — even with recording off to stay empty.
+fn drain_obs_logs(batcher: &mut Batcher, st: &mut ReplayState) {
+    let migrations = st.fleet.drain_migrations();
+    if !st.rec.enabled() {
+        return;
+    }
+    for ev in batcher.drain_events() {
+        st.rec.record(ev);
+    }
+    for (now, from, to, ticket) in migrations {
+        st.rec.record(Event {
+            cycles: now,
+            id: ticket,
+            key_idx: Event::NO_KEY,
+            class: 0,
+            kind: EventKind::Migrate { from, to },
+        });
+    }
+}
+
 /// Replay `trace` over `workloads` with the serving stack in `cfg`,
-/// producing the full [`ServeReport`].
+/// producing the full [`ServeReport`]. Equivalent to
+/// [`run_trace_observed`] with the no-op recorder and no metrics.
 pub fn run_trace(
     workloads: &[Workload],
     trace: &[TraceRequest],
     cfg: &ServeCfg,
+) -> Result<ServeReport> {
+    run_trace_observed(workloads, trace, cfg, &mut NoopRecorder, None)
+}
+
+/// [`run_trace`] with observability attached: lifecycle events flow into
+/// `rec` and (optionally) queue/fleet time series into `metrics` on its
+/// virtual-time cadence. Recording is passive — the returned report is
+/// bit-identical to the unobserved replay.
+pub fn run_trace_observed(
+    workloads: &[Workload],
+    trace: &[TraceRequest],
+    cfg: &ServeCfg,
+    rec: &mut dyn Recorder,
+    mut metrics: Option<&mut MetricsRegistry>,
 ) -> Result<ServeReport> {
     anyhow::ensure!(!workloads.is_empty(), "serving needs at least one workload");
     let wall0 = Instant::now();
@@ -328,6 +476,7 @@ pub fn run_trace(
     let mut fleet = Fleet::new(cfg.fleet.clone(), cfg.max_queue_depth);
     fleet.steal = cfg.steal;
     let mut batcher = Batcher::new(cfg.batcher.clone(), workloads.len());
+    batcher.set_record(rec.enabled());
     let mut sched = cfg.scheduler.build();
     // Per-worker conv scratch: this replay's pipeline state is private,
     // so concurrent fleet simulations never contend on a shared
@@ -337,10 +486,14 @@ pub fn run_trace(
         sched: sched.as_mut(),
         fleet: &mut fleet,
         scratch: &mut scratch,
+        rec,
         latencies: Vec::new(),
+        latencies_by_class: [Vec::new(), Vec::new(), Vec::new()],
         accs: vec![ModelAcc::default(); workloads.len()],
         deadline_misses: 0,
         miss_by_class: [0; 3],
+        miss_queue_wait: 0,
+        miss_compute: 0,
         makespan: 0,
         deferred_reqs: Vec::new(),
         deferred_batches: Vec::new(),
@@ -373,12 +526,38 @@ pub fn run_trace(
             req.key_idx,
             workloads.len()
         );
+        if st.rec.enabled() {
+            st.rec.record(Event {
+                cycles: req.arrival,
+                id: req.id,
+                key_idx: req.key_idx,
+                class: class_index(req.priority()) as u8,
+                kind: EventKind::Arrive {
+                    deadline: req.deadline,
+                },
+            });
+        }
         // Flush whatever became due before this arrival.
         let mut due = batcher.pop_due(req.arrival);
         if cfg.batcher.preempt {
             due = batcher.split_critical(due);
         }
         exec_batches(due, &pinned, &mut st)?;
+        drain_obs_logs(&mut batcher, &mut st);
+        if let Some(m) = metrics.as_deref_mut() {
+            m.inc("requests", 1);
+            if m.should_sample(req.arrival) {
+                let now = req.arrival;
+                m.push_series("queue_depth", now, batcher.queued() as f64);
+                let inflight: usize =
+                    st.fleet.devices.iter().map(|d| d.queue_depth(now)).sum();
+                m.push_series("inflight_batches", now, inflight as f64);
+                let horizon = now.saturating_sub(first_arrival);
+                for d in &st.fleet.devices {
+                    m.push_series(&format!("util_dev{}", d.id), now, d.utilization(horizon));
+                }
+            }
+        }
 
         // Compile-on-first-use through the registry (hits are counted
         // per request, which is what makes compile-once — and, across
@@ -417,6 +596,20 @@ pub fn run_trace(
             if req.deadline != u64::MAX {
                 sram_deadline_by_class[class_index(req.priority())] += 1;
             }
+            if st.rec.enabled() {
+                st.rec.record(Event {
+                    cycles: req.arrival,
+                    id: req.id,
+                    key_idx: req.key_idx,
+                    class: class_index(req.priority()) as u8,
+                    kind: EventKind::SramReject {
+                        had_deadline: req.deadline != u64::MAX,
+                    },
+                });
+            }
+            if let Some(m) = metrics.as_deref_mut() {
+                m.inc("sram_rejects", 1);
+            }
             continue;
         }
         let image = datasets::generate(
@@ -441,6 +634,7 @@ pub fn run_trace(
             due = batcher.split_critical(due);
         }
         exec_batches(due, &pinned, &mut st)?;
+        drain_obs_logs(&mut batcher, &mut st);
     }
 
     // End of trace: drain the remaining partial batches.
@@ -454,12 +648,16 @@ pub fn run_trace(
     if cfg.steal {
         resolve_deferred(&mut st);
     }
+    drain_obs_logs(&mut batcher, &mut st);
 
     let ReplayState {
         latencies,
+        latencies_by_class,
         accs,
         deadline_misses,
         miss_by_class,
+        miss_queue_wait,
+        miss_compute,
         makespan,
         ..
     } = st;
@@ -518,6 +716,14 @@ pub fn run_trace(
         })
         .collect();
     let total_joules: f64 = per_device.iter().map(|d| d.joules).sum();
+    if let Some(m) = metrics.as_deref_mut() {
+        m.inc("completed", completed as u64);
+        for &l in &latencies {
+            m.observe("latency_cycles", l);
+        }
+        m.gauge("throughput_rps", throughput_rps);
+        m.gauge("total_joules", total_joules);
+    }
 
     Ok(ServeReport {
         scheduler: cfg.scheduler.name().to_string(),
@@ -531,6 +737,8 @@ pub fn run_trace(
         sram_deadline_by_class,
         deadline_misses,
         miss_by_class,
+        miss_queue_wait,
+        miss_compute,
         preempt_flushes: batcher.preempt_flushes,
         batch_splits: batcher.splits,
         migrations: fleet.migrations(),
@@ -539,6 +747,11 @@ pub fn run_trace(
         throughput_rps,
         total_joules,
         latency: LatencySummary::from_cycles(&latencies),
+        latency_by_class: [
+            LatencySummary::from_cycles(&latencies_by_class[0]),
+            LatencySummary::from_cycles(&latencies_by_class[1]),
+            LatencySummary::from_cycles(&latencies_by_class[2]),
+        ],
         per_model,
         per_device,
         cache: registry.stats().clone(),
@@ -1422,6 +1635,136 @@ mod tests {
             assert_eq!(a.batches, b.batches);
             assert_eq!(a.migrations, b.migrations);
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Observability: event streams, metrics, and passivity
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn event_stream_rederives_report_accounting() {
+        use crate::obs::{derive_class_misses, RingRecorder};
+        let ws = mobilenet_pair();
+        let trace = synth_trace(
+            &TraceCfg::new(24, 100_000, 5)
+                .with_slo([1.0, 1.0, 1.0])
+                .with_burst(8, 4),
+            ws.len(),
+        );
+        for steal in [false, true] {
+            let cfg = ServeCfg {
+                scheduler: SchedulerKind::LeastLoaded,
+                steal,
+                ..small_cfg()
+            };
+            let mut rec = RingRecorder::new(1 << 16);
+            let rep = run_trace_observed(&ws, &trace, &cfg, &mut rec, None).unwrap();
+            assert_eq!(rec.dropped, 0, "ring must hold the whole stream");
+            let events = rec.into_events();
+
+            // Every trace request arrives exactly once.
+            let arrives = events
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Arrive { .. }))
+                .count();
+            assert_eq!(arrives, trace.len(), "steal={steal}");
+
+            // Every completion is a Finish with a matching Start and
+            // Place for the same request id.
+            let finishes: Vec<&Event> = events
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Finish { .. }))
+                .collect();
+            assert_eq!(finishes.len(), rep.completed, "steal={steal}");
+            for f in &finishes {
+                assert!(
+                    events
+                        .iter()
+                        .any(|e| e.id == f.id && matches!(e.kind, EventKind::Start { .. })),
+                    "Finish #{} without Start (steal={steal})",
+                    f.id
+                );
+                assert!(
+                    events
+                        .iter()
+                        .any(|e| e.id == f.id && matches!(e.kind, EventKind::Place { .. })),
+                    "Finish #{} without Place (steal={steal})",
+                    f.id
+                );
+            }
+
+            // The ISSUE's acceptance invariant: per-class misses derived
+            // from events alone equal the report's accounting exactly.
+            let derived = derive_class_misses(&events);
+            assert_eq!(
+                derived,
+                [rep.class_misses(0), rep.class_misses(1), rep.class_misses(2)],
+                "steal={steal}"
+            );
+            assert_eq!(derived.iter().sum::<u64>(), rep.total_misses());
+
+            // Migrations in the stream match the fleet's count, and the
+            // queue-wait/compute split partitions the completed misses.
+            let migs = events
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Migrate { .. }))
+                .count() as u64;
+            assert_eq!(migs, rep.migrations, "steal={steal}");
+            assert_eq!(rep.miss_queue_wait + rep.miss_compute, rep.deadline_misses);
+        }
+    }
+
+    #[test]
+    fn recorder_attachment_is_passive() {
+        use crate::obs::{MetricsRegistry, RingRecorder};
+        let ws = mobilenet_pair();
+        let trace = synth_trace(
+            &TraceCfg::new(24, 350_000, 19).with_slo([1.0, 1.0, 1.0]),
+            ws.len(),
+        );
+        // The RoundRobin/all-M7 legacy pin runs without a recorder; this
+        // pins the other direction — attaching a recorder and metrics
+        // must not move a single report bit (wall_s excepted).
+        let cfg = small_cfg();
+        let mut plain = run_trace(&ws, &trace, &cfg).unwrap();
+        let mut rec = RingRecorder::new(4096);
+        let mut metrics = MetricsRegistry::new(216_000);
+        let mut observed =
+            run_trace_observed(&ws, &trace, &cfg, &mut rec, Some(&mut metrics)).unwrap();
+        plain.wall_s = 0.0;
+        observed.wall_s = 0.0;
+        assert_eq!(
+            plain.to_json().to_string_compact(),
+            observed.to_json().to_string_compact()
+        );
+        assert!(!rec.is_empty());
+        assert_eq!(metrics.counter("requests"), trace.len() as u64);
+        assert!(metrics.series("queue_depth").is_some());
+        assert!(metrics.series("util_dev0").is_some());
+        assert!(metrics.histogram("latency_cycles").is_some());
+    }
+
+    #[test]
+    fn per_class_latency_and_miss_attribution_are_consistent() {
+        let ws = mobilenet_pair();
+        let trace = synth_trace(
+            &TraceCfg::new(24, 100_000, 5)
+                .with_slo([1.0, 1.0, 1.0])
+                .with_burst(8, 4),
+            ws.len(),
+        );
+        let rep = run_trace(&ws, &trace, &small_cfg()).unwrap();
+        // Per-class completion counts sum to the overall count.
+        let class_total: u64 = (0..3).map(|i| rep.latency_by_class[i].count).sum();
+        assert_eq!(class_total, rep.completed as u64);
+        // Each class's extremes bound the global ones.
+        for s in &rep.latency_by_class {
+            if s.count > 0 {
+                assert!(s.max_ms <= rep.latency.max_ms);
+                assert!(s.p50_ms >= 0.0);
+            }
+        }
+        assert_eq!(rep.miss_queue_wait + rep.miss_compute, rep.deadline_misses);
     }
 
     #[test]

@@ -41,6 +41,12 @@
 //! most-backlogged SRAM-compatible neighbor). Both calls are no-ops
 //! with stealing off, which is what keeps the RoundRobin / all-M7
 //! timeline bit-identical to the pre-steal pipeline.
+//!
+//! Observability: every committed placement is surfaced to an attached
+//! [`Recorder`](crate::obs::Recorder) as a `Place` event — policy name
+//! ([`Scheduler::name`]), chosen device, and the predicted cycle/joule
+//! price — by the replay loop in [`super`]. Policies themselves stay
+//! tap-free; recording cannot influence a placement decision.
 
 use super::fleet::{BatchWork, Dispatch, Fleet};
 

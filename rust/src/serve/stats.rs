@@ -19,6 +19,8 @@ use super::registry::RegistryStats;
 /// Latency distribution summary (milliseconds of virtual MCU time).
 #[derive(Debug, Clone, Default)]
 pub struct LatencySummary {
+    /// Completed requests the summary covers.
+    pub count: u64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
@@ -35,6 +37,7 @@ impl LatencySummary {
         let mut ms: Vec<f64> = latencies.iter().map(|&c| cycles_to_ms(c)).collect();
         ms.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
         LatencySummary {
+            count: latencies.len() as u64,
             p50_ms: percentile(&ms, 0.50),
             p95_ms: percentile(&ms, 0.95),
             p99_ms: percentile(&ms, 0.99),
@@ -45,6 +48,7 @@ impl LatencySummary {
 
     fn to_json(&self) -> Json {
         let mut o = BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count as f64));
         o.insert("p50_ms".into(), Json::Num(self.p50_ms));
         o.insert("p95_ms".into(), Json::Num(self.p95_ms));
         o.insert("p99_ms".into(), Json::Num(self.p99_ms));
@@ -143,6 +147,12 @@ pub struct ServeReport {
     /// Completed-late requests by SLO class (interactive, standard,
     /// batch).
     pub miss_by_class: [u64; 3],
+    /// Completed-late requests whose inference alone would have met the
+    /// deadline — the miss was queueing/batching delay.
+    pub miss_queue_wait: u64,
+    /// Completed-late requests that could not have met the deadline even
+    /// starting at arrival — the miss was compute-bound.
+    pub miss_compute: u64,
     /// Preemptive (ahead-of-window) batcher flushes.
     pub preempt_flushes: u64,
     /// Flushed batches split into critical + deferrable halves.
@@ -158,6 +168,9 @@ pub struct ServeReport {
     /// Total fleet energy over the replay (sum of per-device joules).
     pub total_joules: f64,
     pub latency: LatencySummary,
+    /// Completed-request latency summaries per SLO class
+    /// (0 = interactive, 1 = standard, 2 = batch).
+    pub latency_by_class: [LatencySummary; 3],
     pub per_model: Vec<ModelStats>,
     pub per_device: Vec<DeviceStats>,
     pub cache: RegistryStats,
@@ -251,6 +264,25 @@ impl ServeReport {
             self.latency.mean_ms,
             self.latency.max_ms
         ));
+        for (i, name) in ["interactive", "standard", "batch"].iter().enumerate() {
+            let s = &self.latency_by_class[i];
+            if s.count > 0 {
+                out.push_str(&format!(
+                    "  {name:<11} n={}  p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms (mean {:.2}ms, max {:.2}ms)\n",
+                    s.count, s.p50_ms, s.p95_ms, s.p99_ms, s.mean_ms, s.max_ms
+                ));
+            }
+        }
+        if self.total_misses() > 0 {
+            out.push_str(&format!(
+                "miss attribution: {} queue-wait, {} compute-bound, {} shed, {} sram (of {} total)\n",
+                self.miss_queue_wait,
+                self.miss_compute,
+                self.shed_deadline_misses(),
+                self.sram_deadline_misses(),
+                self.total_misses()
+            ));
+        }
         out.push_str(&format!(
             "energy {:.3} mJ total, {:.4} mJ/inference\n",
             self.total_joules * 1e3,
@@ -369,6 +401,17 @@ impl ServeReport {
             Json::Num(self.joules_per_inference()),
         );
         o.insert("latency".into(), self.latency.to_json());
+        for (i, name) in classes.iter().enumerate() {
+            o.insert(
+                format!("latency_{name}"),
+                self.latency_by_class[i].to_json(),
+            );
+        }
+        o.insert(
+            "miss_queue_wait".into(),
+            Json::Num(self.miss_queue_wait as f64),
+        );
+        o.insert("miss_compute".into(), Json::Num(self.miss_compute as f64));
         o.insert(
             "cache_hit_rate".into(),
             Json::Num(self.cache.hit_rate()),
@@ -469,6 +512,8 @@ mod tests {
             sram_deadline_by_class: [0, 1, 0],
             deadline_misses: 2,
             miss_by_class: [1, 1, 0],
+            miss_queue_wait: 1,
+            miss_compute: 1,
             preempt_flushes: 1,
             batch_splits: 1,
             migrations: 2,
@@ -477,6 +522,11 @@ mod tests {
             throughput_rps: 9.0,
             total_joules: 18.0,
             latency: LatencySummary::from_cycles(&[216_000, 432_000]),
+            latency_by_class: [
+                LatencySummary::from_cycles(&[216_000]),
+                LatencySummary::from_cycles(&[432_000]),
+                LatencySummary::default(),
+            ],
             per_model: vec![ModelStats {
                 label: "vgg_tiny/rp-slbc/w4.0a4.0".into(),
                 requests: 9,
@@ -535,6 +585,13 @@ mod tests {
         assert!(js.contains("\"class\":\"m4\""));
         assert!(js.contains("\"total_joules\":18"));
         assert!(js.contains("\"joules_per_inference\":2"));
+        assert!(js.contains("\"latency_interactive\""));
+        assert!(js.contains("\"latency_batch\""));
+        assert!(js.contains("\"miss_queue_wait\":1"));
+        assert!(js.contains("\"miss_compute\":1"));
+        assert!(txt.contains("interactive"), "{txt}");
+        assert!(txt.contains("n=1"), "{txt}");
+        assert!(txt.contains("miss attribution: 1 queue-wait, 1 compute-bound"), "{txt}");
         assert!(txt.contains("mJ/inference"));
         assert!((rep.virtual_s() - 1.0).abs() < 1e-9);
         assert_eq!(rep.per_model[0].mean_batch(), 3.0);
@@ -557,6 +614,22 @@ mod tests {
         assert_eq!(rep.class_misses(0), 2);
         assert_eq!(rep.class_misses(1), 2);
         assert_eq!(rep.class_misses(2), 0);
+    }
+
+    #[test]
+    fn per_class_latency_summaries_track_counts() {
+        let rep = sample_report();
+        assert_eq!(rep.latency.count, 2);
+        assert_eq!(rep.latency_by_class[0].count, 1);
+        assert_eq!(rep.latency_by_class[1].count, 1);
+        assert_eq!(rep.latency_by_class[2].count, 0);
+        // Batch class completed nothing: its summary is all zeros and
+        // its render line is suppressed.
+        assert_eq!(rep.latency_by_class[2].p99_ms, 0.0);
+        let txt = rep.render();
+        assert!(!txt.contains("batch       n="), "{txt}");
+        // Miss attribution partitions completed-late misses.
+        assert_eq!(rep.miss_queue_wait + rep.miss_compute, rep.deadline_misses);
     }
 
     #[test]
