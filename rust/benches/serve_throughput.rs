@@ -26,6 +26,13 @@
 //!    preempt/split/migration counters) and asserts class-aware
 //!    admission + preemption strictly cut interactive-class misses vs
 //!    FIFO shedding.
+//! 4. **Churn matrix** (fault-injection PR): the overload stack under a
+//!    seeded 10%-churn fleet-event stream (join/leave/crash/throttle/
+//!    drain), with and without crash re-admission. Emits a `churn` JSON
+//!    array and asserts bounded SLO degradation: interactive misses
+//!    under churn + re-admission stay within 10 percentage points of
+//!    the no-churn baseline, and re-admission strictly beats naive
+//!    drop-on-crash.
 //!
 //! Regenerate with `cargo bench --bench serve_throughput`.
 
@@ -275,6 +282,107 @@ fn main() -> mcu_mixq::Result<()> {
     }
     println!();
 
+    // ------------------------------------------------------------------
+    // Churn matrix (fault-injection PR): the overload stack (class-aware
+    // admission + preemption + stealing) replayed with a 10%-churn
+    // fleet-event stream — devices join, leave, crash, throttle and
+    // drain mid-trace. Three cells: the no-churn baseline, churn with
+    // crash re-admission (the recovery path), and churn with naive
+    // drop-on-crash (`readmit: false`). Asserts the bounded-degradation
+    // acceptance: interactive misses under churn+re-admission stay
+    // within 10 percentage points of the no-churn baseline, and the
+    // re-admission path strictly beats drop-on-crash.
+    // ------------------------------------------------------------------
+    let churn_tc = TraceCfg::new(requests, 432_000, 45)
+        .with_skew(1.0)
+        .with_slo([0.5, 0.3, 0.2])
+        .with_burst(32, 16)
+        .with_churn(0.10);
+    let churn_trace = serve::synth_trace(&churn_tc, ws.len());
+    let churn_events = serve::synth_fleet_events(&churn_tc, &churn_trace, overload_fleet.len());
+    assert!(
+        !churn_events.is_empty(),
+        "10% churn over {} arrivals must inject fleet events",
+        churn_trace.len()
+    );
+    let interactive_offered = churn_trace
+        .iter()
+        .filter(|r| serve::class_index(r.priority()) == 0)
+        .count();
+    assert!(interactive_offered > 0, "churn trace needs interactive load");
+    let churn_cells: [(&str, bool, bool); 3] = [
+        ("no-churn", false, true),
+        ("churn+readmit", true, true),
+        ("churn+drop", true, false),
+    ];
+    let mut churn_rows: Vec<Json> = Vec::new();
+    let mut churn_int: BTreeMap<&'static str, u64> = BTreeMap::new();
+    println!(
+        "churn matrix (m7:2,m4:2, 10% churn, {} fleet event(s), {} interactive offered):",
+        churn_events.len(),
+        interactive_offered
+    );
+    for (label, churned, readmit) in churn_cells {
+        let cell_cfg = ServeCfg {
+            fleet: overload_fleet.clone(),
+            scheduler: SchedulerKind::SloAware,
+            batcher: BatcherCfg {
+                max_batch: 16,
+                max_wait_cycles: 432_000,
+                max_queue: 8,
+                admission: AdmissionKind::ClassAware,
+                preempt: true,
+            },
+            steal: true,
+            readmit,
+            ..ServeCfg::default()
+        };
+        let events: &[serve::FleetEvent] = if churned { &churn_events } else { &[] };
+        let rep = serve::run_trace_full(&ws, &churn_trace, events, &cell_cfg)?;
+        assert_eq!(
+            rep.completed as u64 + rep.rejected_queue + rep.rejected_sram + rep.lost,
+            churn_trace.len() as u64,
+            "churn cell `{label}` must conserve requests"
+        );
+        if churned {
+            assert!(
+                rep.crashes > 0,
+                "churn cell `{label}` saw no crashes — scenario is toothless"
+            );
+        }
+        println!(
+            "  {:>14}  completed {:>3}  interactive misses {:>3}  readmitted {:>3}  lost {:>3}  crashes {:>2}  migrations {:>3}",
+            label,
+            rep.completed,
+            rep.class_misses(0),
+            rep.readmissions(),
+            rep.lost,
+            rep.crashes,
+            rep.migrations
+        );
+        churn_int.insert(label, rep.class_misses(0));
+        let mut row = BTreeMap::new();
+        row.insert("cell".into(), Json::Str(label.into()));
+        row.insert("readmit".into(), Json::Num(if readmit { 1.0 } else { 0.0 }));
+        row.insert("completed".into(), Json::Num(rep.completed as f64));
+        row.insert(
+            "interactive_misses".into(),
+            Json::Num(rep.class_misses(0) as f64),
+        );
+        row.insert(
+            "interactive_miss_rate".into(),
+            Json::Num(rep.class_misses(0) as f64 / interactive_offered as f64),
+        );
+        row.insert("readmissions".into(), Json::Num(rep.readmissions() as f64));
+        row.insert("lost_requests".into(), Json::Num(rep.lost as f64));
+        row.insert("crashes".into(), Json::Num(rep.crashes as f64));
+        row.insert("migrations".into(), Json::Num(rep.migrations as f64));
+        row.insert("total_misses".into(), Json::Num(rep.total_misses() as f64));
+        row.insert("throughput_rps".into(), Json::Num(rep.throughput_rps));
+        churn_rows.push(Json::Obj(row));
+    }
+    println!();
+
     // Host-side simulation speed (wall clock), for the record.
     let t = Bench::new(0, 3).run("replay", || {
         serve::run_trace(&ws, &trace, &cfg).expect("replay")
@@ -300,6 +408,7 @@ fn main() -> mcu_mixq::Result<()> {
     o.insert("rows".into(), Json::Arr(rows));
     o.insert("energy_rows".into(), Json::Arr(energy_rows));
     o.insert("overload".into(), Json::Arr(overload_rows));
+    o.insert("churn".into(), Json::Arr(churn_rows));
     println!("{}", Json::Obj(o).to_string_compact());
 
     // Qualitative guards the trajectory must keep.
@@ -370,6 +479,22 @@ fn main() -> mcu_mixq::Result<()> {
     assert!(
         resilient_int < fifo_int,
         "class admission + preemption must strictly cut interactive misses ({resilient_int} vs {fifo_int})"
+    );
+    // Fault-injection acceptance: (a) under 10% churn with class-aware
+    // crash re-admission, the interactive miss *rate* degrades by at
+    // most 10 percentage points over the no-churn baseline; (b) the
+    // re-admission path strictly beats naive drop-on-crash.
+    let base_rate = churn_int["no-churn"] as f64 / interactive_offered as f64;
+    let readmit_rate = churn_int["churn+readmit"] as f64 / interactive_offered as f64;
+    assert!(
+        readmit_rate <= base_rate + 0.10 + 1e-12,
+        "churn degraded interactive misses beyond the 10pp bound ({readmit_rate:.3} vs baseline {base_rate:.3})"
+    );
+    assert!(
+        churn_int["churn+readmit"] < churn_int["churn+drop"],
+        "crash re-admission must strictly beat drop-on-crash on interactive misses ({} vs {})",
+        churn_int["churn+readmit"],
+        churn_int["churn+drop"]
     );
     Ok(())
 }

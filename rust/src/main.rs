@@ -101,6 +101,8 @@ fn print_help() {
          \x20          [--trace-file IN.json] [--dump-trace OUT.json]\n\
          \x20          [--batch N] [--wait-ms F] [--queue N] [--depth N]\n\
          \x20          [--cache N] [--seed S] [--json]\n\
+         \x20          [--churn RATE] [--no-readmit]\n\
+         \x20          [--autoscale FLEETSPEC] [--autoscale-budget J]\n\
          \x20          [--events-out EV.json] [--metrics-out M.json]\n\
          \x20          [--metrics-cadence CYCLES]\n\
          \x20 bench-serve                   fixed-protocol serving benchmark:\n\
@@ -149,6 +151,33 @@ fn print_help() {
          \x20                               instruction mix for one deployment\n\
          Recording is passive: an attached recorder never changes placement,\n\
          batching, timing or energy results (pinned by serve tests)."
+    );
+    println!(
+        "\nFAULT INJECTION & ELASTICITY:\n\
+         \x20 serve --churn RATE            inject a seeded fleet-event stream:\n\
+         \x20                               at each arrival, with probability\n\
+         \x20                               RATE, one device joins, leaves,\n\
+         \x20                               crashes, throttles (DVFS), restores\n\
+         \x20                               or drains. Crashed batches lose\n\
+         \x20                               their in-flight work; deadline-\n\
+         \x20                               carrying members re-enter through\n\
+         \x20                               admission, the rest count as lost\n\
+         \x20                               (always an SLO miss)\n\
+         \x20 serve --no-readmit            naive drop-on-crash baseline: every\n\
+         \x20                               crashed member is lost outright\n\
+         \x20 serve --autoscale SPEC        reactive standby pool (same syntax\n\
+         \x20                               as --fleet, e.g. m7:2): devices join\n\
+         \x20                               when the windowed interactive miss\n\
+         \x20                               rate runs hot, drain back out when\n\
+         \x20                               it cools\n\
+         \x20 serve --autoscale-budget J    stop growing once cumulative fleet\n\
+         \x20                               energy exceeds J joules\n\
+         \x20 --dump-trace / --trace-file   carry the fleet-event stream with\n\
+         \x20                               the requests (JSON round-trip;\n\
+         \x20                               churn-free files stay byte-\n\
+         \x20                               compatible with the legacy format)\n\
+         Clocks can also be pinned statically per device: --fleet m4@84mhz:2\n\
+         runs two M4s throttled to 84 MHz for the whole replay."
     );
 }
 
@@ -538,11 +567,36 @@ fn run_serve_scenario(
         (wait_ms * mcu_mixq::STM32F746_CLOCK_HZ as f64 / 1e3).max(1.0) as u64;
     cfg.batcher.max_queue = args.usize_or("queue", cfg.batcher.max_queue);
 
-    let trace = match args.get("trace-file") {
+    // Fault injection & elasticity.
+    let churn = args.f32_or("churn", 0.0) as f64;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&churn),
+        "--churn must be a probability in [0,1], got {churn}"
+    );
+    cfg.readmit = !args.bool_or("no-readmit", false);
+    if let Some(spec) = args.get("autoscale") {
+        let standby = parse_fleet(spec)?;
+        let mut asc = serve::AutoscaleCfg {
+            standby,
+            ..serve::AutoscaleCfg::default()
+        };
+        if let Some(b) = args.get("autoscale-budget") {
+            asc.joules_budget = b
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--autoscale-budget wants joules, got `{b}`"))?;
+        }
+        cfg.autoscale = Some(asc);
+    }
+
+    let (trace, fleet_events) = match args.get("trace-file") {
         Some(path) => {
-            let t = serve::load_trace(path)?;
-            println!("replaying {} recorded request(s) from {path}", t.len());
-            t
+            let (t, ev) = serve::load_full_trace(path)?;
+            println!(
+                "replaying {} recorded request(s) (+{} fleet event(s)) from {path}",
+                t.len(),
+                ev.len()
+            );
+            (t, ev)
         }
         None => {
             let requests = args.usize_or("requests", default_requests);
@@ -571,12 +625,23 @@ fn run_serve_scenario(
                 let (period, size) = parse_burst(burst)?;
                 tcfg = tcfg.with_burst(period, size);
             }
-            serve::synth_trace(&tcfg, workloads.len())
+            if churn > 0.0 {
+                tcfg = tcfg.with_churn(churn);
+            }
+            let t = serve::synth_trace(&tcfg, workloads.len());
+            let ev = serve::synth_fleet_events(&tcfg, &t, cfg.fleet.len());
+            (t, ev)
         }
     };
     if let Some(path) = args.get("dump-trace") {
-        serve::save_trace(path, &trace)?;
-        println!("wrote {} request(s) to {path}", trace.len());
+        // Round-trips through load_full_trace; with no fleet events the
+        // file is byte-identical to the legacy save_trace format.
+        serve::save_full_trace(path, &trace, &fleet_events)?;
+        println!(
+            "wrote {} request(s) (+{} fleet event(s)) to {path}",
+            trace.len(),
+            fleet_events.len()
+        );
     }
 
     let m4s = cfg
@@ -585,7 +650,7 @@ fn run_serve_scenario(
         .filter(|d| d.class == serve::DeviceClass::M4)
         .count();
     println!(
-        "serving {} model(s) on {} device(s) ({} m7 + {} m4, {} scheduler, {} admission{}{}): {} requests, batch<= {}, wait {:.2}ms\n",
+        "serving {} model(s) on {} device(s) ({} m7 + {} m4, {} scheduler, {} admission{}{}{}{}): {} requests, batch<= {}, wait {:.2}ms\n",
         workloads.len(),
         cfg.fleet.len(),
         cfg.fleet.len() - m4s,
@@ -594,6 +659,20 @@ fn run_serve_scenario(
         cfg.batcher.admission.name(),
         if cfg.batcher.preempt { ", preempt" } else { "" },
         if cfg.steal { ", steal" } else { "" },
+        if fleet_events.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", {} fleet event(s){}",
+                fleet_events.len(),
+                if cfg.readmit { "" } else { ", no-readmit" }
+            )
+        },
+        if let Some(a) = &cfg.autoscale {
+            format!(", autoscale +{}", a.standby.len())
+        } else {
+            String::new()
+        },
         trace.len(),
         cfg.batcher.max_batch,
         wait_ms
@@ -606,14 +685,29 @@ fn run_serve_scenario(
         let mut rec = RingRecorder::new(1 << 20);
         let cadence = args.u64_or("metrics-cadence", 216_000);
         let mut metrics = MetricsRegistry::new(cadence);
-        let report =
-            serve::run_trace_observed(&workloads, &trace, &cfg, &mut rec, Some(&mut metrics))?;
+        let report = serve::run_trace_full_observed(
+            &workloads,
+            &trace,
+            &fleet_events,
+            &cfg,
+            &mut rec,
+            Some(&mut metrics),
+        )?;
         if let Some(path) = events_out {
+            // Standby devices get tracks too — the autoscaler's joins
+            // render as instants on them.
+            let standby = cfg
+                .autoscale
+                .iter()
+                .flat_map(|a| a.standby.iter())
+                .map(|d| (d, "standby"));
             let names: Vec<String> = cfg
                 .fleet
                 .iter()
+                .map(|d| (d, ""))
+                .chain(standby)
                 .enumerate()
-                .map(|(i, d)| format!("{} #{i}", d.name))
+                .map(|(i, (d, tag))| format!("{} #{i}{}{}", d.name, if tag.is_empty() { "" } else { " " }, tag))
                 .collect();
             if rec.dropped > 0 {
                 eprintln!("warning: event ring overflowed, {} event(s) dropped", rec.dropped);
@@ -628,7 +722,7 @@ fn run_serve_scenario(
         }
         report
     } else {
-        serve::run_trace(&workloads, &trace, &cfg)?
+        serve::run_trace_full(&workloads, &trace, &fleet_events, &cfg)?
     };
     println!("{}", report.render());
     Ok(report)
@@ -660,12 +754,13 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     );
     anyhow::ensure!(report.completed > 0, "no request completed");
     anyhow::ensure!(
-        report.completed as u64 + report.rejected_queue + report.rejected_sram
+        report.completed as u64 + report.rejected_queue + report.rejected_sram + report.lost
             == report.requests as u64,
-        "request conservation violated ({} completed + {} shed + {} sram != {})",
+        "request conservation violated ({} completed + {} shed + {} sram + {} lost != {})",
         report.completed,
         report.rejected_queue,
         report.rejected_sram,
+        report.lost,
         report.requests
     );
     anyhow::ensure!(

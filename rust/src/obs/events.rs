@@ -71,6 +71,24 @@ pub enum EventKind {
     },
     /// A queued batch moved between devices (work stealing).
     Migrate { from: usize, to: usize },
+    /// A fleet device came up: a churn `Join`, a restore from down, or
+    /// an autoscaler growing the fleet from its standby pool.
+    DeviceUp { device: usize },
+    /// A fleet device went down: a churn `Leave`/`Crash` or an
+    /// autoscaler shrink. `crashed` marks the in-flight batch as lost.
+    DeviceDown { device: usize, crashed: bool },
+    /// DVFS throttle (or restore): the device's effective clock changed;
+    /// subsequent batches price cycles and joules at the new clock.
+    Throttle { device: usize, clock_hz: u64 },
+    /// The device stopped accepting placements; in-flight work finishes
+    /// and pending batches migrate away via work stealing.
+    Drain { device: usize },
+    /// A member of a crashed batch re-entered the admission path.
+    /// Exactly one `Readmit` is emitted per re-admission attempt.
+    Readmit { device: usize },
+    /// A member of a crashed batch was dropped forever (best-effort
+    /// work is not re-admitted) — counted as a miss.
+    Lost { device: usize },
     /// Execution began on the device.
     Start { device: usize },
     /// Execution finished; the terminal event of a completed request.
@@ -100,6 +118,12 @@ impl EventKind {
             EventKind::FlushPreempt { .. } => "FlushPreempt",
             EventKind::Place { .. } => "Place",
             EventKind::Migrate { .. } => "Migrate",
+            EventKind::DeviceUp { .. } => "DeviceUp",
+            EventKind::DeviceDown { .. } => "DeviceDown",
+            EventKind::Throttle { .. } => "Throttle",
+            EventKind::Drain { .. } => "Drain",
+            EventKind::Readmit { .. } => "Readmit",
+            EventKind::Lost { .. } => "Lost",
             EventKind::Start { .. } => "Start",
             EventKind::Finish { .. } => "Finish",
         }
@@ -195,8 +219,9 @@ impl Recorder for RingRecorder {
 }
 
 /// Re-derive per-class deadline misses from an event stream: a `Finish`
-/// with the miss flag, or a deadline-carrying `Shed`/`Evict`/`SramReject`
+/// with the miss flag, a deadline-carrying `Shed`/`Evict`/`SramReject`
 /// (a request dropped before execution can only miss if it *had* a
+/// deadline), or a `Lost` (crash-killed forever, a miss regardless of
 /// deadline). Index 0 = interactive, 1 = standard, 2 = batch — the same
 /// accounting as [`ServeReport::class_misses`](crate::serve::ServeReport::class_misses).
 pub fn derive_class_misses<'a, I>(events: I) -> [u64; 3]
@@ -210,7 +235,8 @@ where
             EventKind::Finish { miss: true, .. } => out[c] += 1,
             EventKind::Shed { had_deadline: true }
             | EventKind::Evict { had_deadline: true }
-            | EventKind::SramReject { had_deadline: true } => out[c] += 1,
+            | EventKind::SramReject { had_deadline: true }
+            | EventKind::Lost { .. } => out[c] += 1,
             _ => {}
         }
     }
@@ -292,8 +318,35 @@ mod tests {
     }
 
     #[test]
+    fn lost_requests_derive_as_misses_and_lifecycle_kinds_do_not() {
+        let events = vec![
+            ev(10, 0, 0, EventKind::DeviceUp { device: 1 }),
+            ev(20, 0, 0, EventKind::DeviceDown { device: 1, crashed: true }),
+            ev(20, 7, 0, EventKind::Readmit { device: 1 }),
+            ev(20, 8, 2, EventKind::Lost { device: 1 }),
+            ev(30, 0, 0, EventKind::Throttle { device: 0, clock_hz: 84_000_000 }),
+            ev(40, 0, 0, EventKind::Drain { device: 0 }),
+        ];
+        // Only the Lost counts — lifecycle and Readmit events are not
+        // misses themselves (a re-admitted request finishes or sheds).
+        assert_eq!(derive_class_misses(&events), [0, 0, 1]);
+    }
+
+    #[test]
     fn kind_names_are_stable() {
         assert_eq!(EventKind::Arrive { deadline: 0 }.name(), "Arrive");
+        assert_eq!(EventKind::DeviceUp { device: 0 }.name(), "DeviceUp");
+        assert_eq!(
+            EventKind::DeviceDown { device: 0, crashed: false }.name(),
+            "DeviceDown"
+        );
+        assert_eq!(
+            EventKind::Throttle { device: 0, clock_hz: 1 }.name(),
+            "Throttle"
+        );
+        assert_eq!(EventKind::Drain { device: 0 }.name(), "Drain");
+        assert_eq!(EventKind::Readmit { device: 0 }.name(), "Readmit");
+        assert_eq!(EventKind::Lost { device: 0 }.name(), "Lost");
         assert_eq!(
             EventKind::Place {
                 policy: "slo",

@@ -50,7 +50,13 @@ where
         let d = match ev.kind {
             EventKind::Place { device, .. }
             | EventKind::Start { device }
-            | EventKind::Finish { device, .. } => Some(device),
+            | EventKind::Finish { device, .. }
+            | EventKind::DeviceUp { device }
+            | EventKind::DeviceDown { device, .. }
+            | EventKind::Throttle { device, .. }
+            | EventKind::Drain { device }
+            | EventKind::Readmit { device }
+            | EventKind::Lost { device } => Some(device),
             EventKind::Migrate { from, to } => Some(from.max(to)),
             _ => None,
         };
@@ -139,11 +145,38 @@ where
                     ),
                 ]));
             }
+            // Fleet-lifecycle churn renders as instant events pinned to
+            // the affected device's track, so joins, losses, DVFS steps
+            // and drains are visible inline with the batch slices.
+            EventKind::DeviceUp { device }
+            | EventKind::DeviceDown { device, .. }
+            | EventKind::Throttle { device, .. }
+            | EventKind::Drain { device } => {
+                let mut args = vec![("kind", Json::Str(ev.kind.name().into()))];
+                if let EventKind::Throttle { clock_hz, .. } = &ev.kind {
+                    args.push(("clock_mhz", Json::Num(*clock_hz as f64 / 1e6)));
+                }
+                if let EventKind::DeviceDown { crashed, .. } = &ev.kind {
+                    args.push(("crashed", Json::Bool(*crashed)));
+                }
+                trace.push(obj(vec![
+                    ("ph", Json::Str("i".into())),
+                    ("s", Json::Str("t".into())),
+                    ("cat", Json::Str("fleet".into())),
+                    ("name", Json::Str(ev.kind.name().into())),
+                    ("pid", Json::Num(0.0)),
+                    ("tid", Json::Num((*device + 1) as f64)),
+                    ("ts", Json::Num(cycles_to_us(ev.cycles))),
+                    ("args", obj(args)),
+                ]));
+            }
             // Drops terminate their async slice so shed/evicted/rejected
-            // requests don't render as unbounded open spans.
+            // and crash-lost requests don't render as unbounded open
+            // spans.
             EventKind::Shed { .. }
             | EventKind::Evict { .. }
-            | EventKind::SramReject { .. } => {
+            | EventKind::SramReject { .. }
+            | EventKind::Lost { .. } => {
                 trace.push(obj(vec![
                     ("ph", Json::Str("e".into())),
                     ("cat", Json::Str("request".into())),
@@ -273,5 +306,85 @@ mod tests {
             .count();
         assert_eq!(begins, 1);
         assert_eq!(ends, 2); // id 1 finished, id 2 shed
+    }
+
+    #[test]
+    fn lifecycle_events_render_as_device_track_instants() {
+        let events = vec![
+            Event {
+                cycles: 100,
+                id: 0,
+                key_idx: Event::NO_KEY,
+                class: 0,
+                kind: EventKind::Throttle { device: 2, clock_hz: 84_000_000 },
+            },
+            Event {
+                cycles: 200,
+                id: 0,
+                key_idx: Event::NO_KEY,
+                class: 0,
+                kind: EventKind::DeviceDown { device: 2, crashed: true },
+            },
+            Event {
+                cycles: 200,
+                id: 9,
+                key_idx: 0,
+                class: 2,
+                kind: EventKind::Lost { device: 2 },
+            },
+            Event {
+                cycles: 300,
+                id: 0,
+                key_idx: Event::NO_KEY,
+                class: 0,
+                kind: EventKind::DeviceUp { device: 2 },
+            },
+            Event {
+                cycles: 400,
+                id: 0,
+                key_idx: Event::NO_KEY,
+                class: 0,
+                kind: EventKind::Drain { device: 0 },
+            },
+        ];
+        // No device names passed: the tid-3 track must still be created
+        // from the lifecycle events alone.
+        let doc = export(&events, &[]);
+        let s = doc.to_string_compact();
+        assert!(s.contains("\"DeviceDown\":1"), "{s}");
+        assert!(s.contains("\"DeviceUp\":1"), "{s}");
+        assert!(s.contains("\"Throttle\":1"), "{s}");
+        assert!(s.contains("\"Drain\":1"), "{s}");
+        assert!(s.contains("\"Lost\":1"), "{s}");
+        assert!(s.contains("dev2"), "{s}");
+        let parsed = Json::parse(&s).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let instants: Vec<_> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .collect();
+        assert_eq!(instants.len(), 4, "one instant per lifecycle event");
+        for i in &instants {
+            assert_eq!(i.get("cat").and_then(Json::as_str), Some("fleet"));
+        }
+        // The throttle instant lands on device 2's track (tid 3) and
+        // carries the new clock.
+        let throttle = instants
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("Throttle"))
+            .unwrap();
+        assert_eq!(throttle.get("tid").and_then(Json::as_f64), Some(3.0));
+        let clock = throttle
+            .get("args")
+            .and_then(|a| a.get("clock_mhz"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((clock - 84.0).abs() < 1e-9);
+        // The crash-lost request still closes its async span.
+        let lost_end = evs.iter().any(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("e")
+                && e.get("id").and_then(Json::as_f64) == Some(9.0)
+        });
+        assert!(lost_end, "Lost must terminate the request span");
     }
 }

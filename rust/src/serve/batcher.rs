@@ -22,6 +22,12 @@
 //! shed request with an SLO deadline is never silently dropped from miss
 //! accounting.
 //!
+//! Crash recovery rides the same admission path: when a device crash
+//! cancels an in-flight batch, the replay layer re-[`offer`](Batcher::offer)s
+//! each deadline-carrying member — so a re-admission competes with live
+//! arrivals under the exact class-aware rules above, and one that loses
+//! lands in the ordinary shed counters rather than a side channel.
+//!
 //! With `preempt` enabled the batcher additionally reacts to deadlines:
 //! an arriving request whose deadline cannot survive waiting out the
 //! window (given the per-model cost estimate installed via

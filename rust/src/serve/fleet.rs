@@ -36,6 +36,41 @@
 //! [`DeviceStats`](super::stats::DeviceStats). With stealing off the
 //! eager path is byte-identical to the pre-steal fleet (the RoundRobin /
 //! all-M7 regression pin).
+//!
+//! # Fleet lifecycle (fault injection)
+//!
+//! Devices are no longer permanently live: each carries `up` /
+//! `draining` flags and a restorable base clock, driven by the
+//! [`FleetEvent`](super::trace::FleetEvent) stream the replay loop
+//! interprets between arrivals:
+//!
+//! * [`device_join`](Fleet::device_join) — a down device (re)enters the
+//!   pool at its registry clock and becomes placeable;
+//! * [`device_leave`](Fleet::device_leave) — planned departure: the
+//!   started batch finishes, committed-but-unstarted batches are
+//!   cancelled and handed back for re-admission;
+//! * [`device_crash`](Fleet::device_crash) — unplanned death: pending
+//!   *and* started-but-unfinished batches are cancelled, their
+//!   resolutions revoked, and the unexecuted timeline tail plus lost
+//!   results rolled back (cycles and energy burned before the crash stay
+//!   spent — crashed work is wasted, not free);
+//! * [`device_throttle`](Fleet::device_throttle) — DVFS brown-out: the
+//!   effective clock drops, repricing every batch the device *starts
+//!   from now on* (started batches keep their resolved price);
+//! * [`device_restore`](Fleet::device_restore) — clock back to the
+//!   registry base, drain lifted;
+//! * [`device_drain`](Fleet::device_drain) — no new placements; in-flight
+//!   work finishes and pending batches migrate immediately to the best
+//!   live host through the steal machinery (batches no live device can
+//!   hold are cancelled for re-admission).
+//!
+//! Only live (`up && !draining`) devices are
+//! [`eligible`](Fleet::eligible), count for
+//! [`fits_anywhere`](Fleet::fits_anywhere), or anchor
+//! [`next_wake`](Fleet::next_wake). Lifecycle interpretation requires
+//! deferred-commit (steal) mode — the replay loop forces it whenever a
+//! trace carries fleet events — and with no events every gate is
+//! trivially open, which preserves the bit-for-bit pin.
 
 use std::collections::VecDeque;
 
@@ -141,6 +176,8 @@ pub struct Resolution {
     pub device_cycles: u64,
     /// Cost in shared-timeline reference cycles.
     pub timeline_cycles: u64,
+    /// Member count — kept so a crash can roll the lost results back.
+    pub images: u64,
 }
 
 /// One simulated device and its accounting.
@@ -163,20 +200,28 @@ pub struct Device {
     pub images: u64,
     /// Pending batches this device stole from backlogged neighbors.
     pub migrations: u64,
+    /// Accepting work? `false` after `Leave`/`Crash` (and for standby
+    /// autoscaler devices) until a `Join` brings it back.
+    pub up: bool,
+    /// Draining: no new placements; in-flight work finishes.
+    pub draining: bool,
+    /// Registry clock, restored by `Restore`/`Join` after throttling.
+    base_clock_hz: u64,
     /// Resolved timeline: when every *started* batch is done (steal
     /// mode; the eager path never reads it).
     free_at: u64,
     /// Committed-but-not-started batches (steal mode only).
     queue: VecDeque<PendingBatch>,
-    /// Finish times of started-but-possibly-unfinished batches (steal
-    /// mode; pruned as virtual time advances).
-    resolved_open: Vec<u64>,
+    /// `(ticket, finish)` of started-but-possibly-unfinished batches
+    /// (steal mode; pruned as virtual time advances, revoked by crash).
+    resolved_open: Vec<(usize, u64)>,
 }
 
 impl Device {
     fn new(id: usize, cfg: DeviceCfg) -> Device {
         Device {
             id,
+            base_clock_hz: cfg.clock_hz,
             cfg,
             busy_until: 0,
             inflight: Vec::new(),
@@ -185,10 +230,17 @@ impl Device {
             batches: 0,
             images: 0,
             migrations: 0,
+            up: true,
+            draining: false,
             free_at: 0,
             queue: VecDeque::new(),
             resolved_open: Vec::new(),
         }
+    }
+
+    /// Placeable from a lifecycle standpoint: up and not draining.
+    pub fn is_live(&self) -> bool {
+        self.up && !self.draining
     }
 
     /// Unfinished batches at virtual time `now` (running + pending).
@@ -281,9 +333,19 @@ pub struct Fleet {
     /// Observability log of steals: `(now, from, to, ticket)` per
     /// migration, appended by [`rebalance`](Fleet::rebalance) and
     /// drained by the replay loop ([`drain_migrations`](Fleet::drain_migrations)).
-    /// Purely passive — no placement decision reads it.
-    migration_log: Vec<(u64, usize, usize, usize)>,
+    /// Purely passive — no placement decision reads it. Bounded at
+    /// [`migration_log_cap`](Fleet::migration_log_cap) entries, oldest
+    /// dropped first (mirroring `RingRecorder`), so million-request
+    /// replays with an undrained log cannot grow it without limit.
+    migration_log: VecDeque<(u64, usize, usize, usize)>,
+    /// Capacity of the migration ring.
+    pub migration_log_cap: usize,
+    /// Migration-log entries evicted because the ring was full.
+    pub migration_log_dropped: u64,
 }
+
+/// Default capacity of the fleet's migration ring.
+pub const MIGRATION_LOG_CAP: usize = 1 << 16;
 
 impl Fleet {
     pub fn new(cfgs: Vec<DeviceCfg>, max_queue_depth: usize) -> Fleet {
@@ -298,7 +360,9 @@ impl Fleet {
             max_queue_depth,
             steal: false,
             resolutions: Vec::new(),
-            migration_log: Vec::new(),
+            migration_log: VecDeque::new(),
+            migration_log_cap: MIGRATION_LOG_CAP,
+            migration_log_dropped: 0,
         }
     }
 
@@ -315,27 +379,34 @@ impl Fleet {
         self.devices.is_empty()
     }
 
-    /// Can any device hold a model with this arena peak? (Admission
-    /// control consults this at request arrival.)
+    /// Can any *live* device hold a model with this arena peak?
+    /// (Admission control consults this at request arrival; a down or
+    /// draining device cannot extend admission capability.)
     pub fn fits_anywhere(&self, peak_sram: usize) -> bool {
-        self.devices.iter().any(|d| peak_sram <= d.cfg.sram_bytes)
+        self.devices
+            .iter()
+            .any(|d| d.is_live() && peak_sram <= d.cfg.sram_bytes)
     }
 
-    /// Is device `idx` placeable at `now`: enough SRAM and below the
-    /// queue-depth cap. The eligibility contract every scheduler's
+    /// Is device `idx` placeable at `now`: live, enough SRAM and below
+    /// the queue-depth cap. The eligibility contract every scheduler's
     /// `pick` must respect.
     pub fn eligible(&self, idx: usize, now: u64, peak_sram: usize) -> bool {
         let d = &self.devices[idx];
-        peak_sram <= d.cfg.sram_bytes && d.queue_depth(now) < self.max_queue_depth
+        d.is_live()
+            && peak_sram <= d.cfg.sram_bytes
+            && d.queue_depth(now) < self.max_queue_depth
     }
 
-    /// Earliest in-flight completion strictly after `now` among devices
-    /// whose SRAM could host the model — where backpressure resumes when
-    /// every eligible device is saturated.
+    /// Earliest in-flight completion strictly after `now` among live
+    /// devices whose SRAM could host the model — where backpressure
+    /// resumes when every eligible device is saturated. (A down or
+    /// draining device's completions can never make it eligible, so they
+    /// are no wake anchor.)
     pub fn next_wake(&self, now: u64, peak_sram: usize) -> Option<u64> {
         self.devices
             .iter()
-            .filter(|d| peak_sram <= d.cfg.sram_bytes)
+            .filter(|d| d.is_live() && peak_sram <= d.cfg.sram_bytes)
             .filter_map(|d| d.next_free(now))
             .min()
     }
@@ -411,9 +482,18 @@ impl Fleet {
         let finishes = self.devices[idx].projected_finishes();
         let d = &mut self.devices[idx];
         d.busy_until = finishes.last().copied().unwrap_or(d.free_at);
-        let mut inflight = d.resolved_open.clone();
+        let mut inflight: Vec<u64> = d.resolved_open.iter().map(|&(_, f)| f).collect();
         inflight.extend(&finishes);
         d.inflight = inflight;
+    }
+
+    /// [`recompute_projection`](Fleet::recompute_projection) guarded for
+    /// lifecycle methods, which may also run on an eager-mode fleet
+    /// (where `busy_until` is authoritative and must not be rebuilt).
+    fn reproject(&mut self, idx: usize) {
+        if self.steal {
+            self.recompute_projection(idx);
+        }
     }
 
     /// Resolve every pending batch whose start time has passed by `now`:
@@ -441,7 +521,7 @@ impl Fleet {
                     d.busy_cycles += timeline_cycles;
                     d.batches += 1;
                     d.images += pb.images;
-                    d.resolved_open.push(finish);
+                    d.resolved_open.push((pb.ticket, finish));
                     (
                         pb.ticket,
                         Resolution {
@@ -450,12 +530,13 @@ impl Fleet {
                             finish,
                             device_cycles,
                             timeline_cycles,
+                            images: pb.images,
                         },
                     )
                 };
                 self.resolutions[ticket] = Some(res);
             }
-            self.devices[i].resolved_open.retain(|&f| f > now);
+            self.devices[i].resolved_open.retain(|&(_, f)| f > now);
             self.recompute_projection(i);
         }
     }
@@ -483,8 +564,9 @@ impl Fleet {
         let n = self.devices.len();
         let mut stolen = 0u64;
         for thief in 0..n {
-            let idle =
-                self.devices[thief].queue.is_empty() && self.devices[thief].free_at <= now;
+            let idle = self.devices[thief].is_live()
+                && self.devices[thief].queue.is_empty()
+                && self.devices[thief].free_at <= now;
             if !idle {
                 continue;
             }
@@ -529,7 +611,7 @@ impl Fleet {
                     .expect("candidate position valid");
                 // A steal decided at `now` cannot start retroactively.
                 pb.ready = pb.ready.max(now);
-                self.migration_log.push((now, v, thief, pb.ticket));
+                self.log_migration(now, v, thief, pb.ticket);
                 self.devices[thief].queue.push_back(pb);
                 self.devices[thief].migrations += 1;
                 self.recompute_projection(v);
@@ -546,6 +628,148 @@ impl Fleet {
         self.advance(u64::MAX);
     }
 
+    // ------------------------------------------------------------------
+    // Fleet lifecycle (fault injection)
+    // ------------------------------------------------------------------
+
+    /// Append a standby device (down until a `Join`): the autoscaler's
+    /// growth pool. Returns the new device's index.
+    pub fn push_standby(&mut self, cfg: DeviceCfg) -> usize {
+        let id = self.devices.len();
+        let mut d = Device::new(id, cfg);
+        d.up = false;
+        self.devices.push(d);
+        id
+    }
+
+    /// Live (up, not draining) devices.
+    pub fn live_count(&self) -> usize {
+        self.devices.iter().filter(|d| d.is_live()).count()
+    }
+
+    /// A (possibly new) device joins at `now`: placeable again, at its
+    /// registry base clock, and unable to start work before the join.
+    pub fn device_join(&mut self, idx: usize, now: u64) {
+        let d = &mut self.devices[idx];
+        d.up = true;
+        d.draining = false;
+        d.cfg.clock_hz = d.base_clock_hz;
+        d.free_at = d.free_at.max(now);
+        d.busy_until = d.busy_until.max(now);
+        self.reproject(idx);
+    }
+
+    /// Planned departure at `now`: the device stops accepting work, its
+    /// started batch finishes, and every committed-but-unstarted batch
+    /// is cancelled. Returns the cancelled tickets — the replay layer
+    /// re-admits their deadline-carrying members.
+    pub fn device_leave(&mut self, idx: usize, now: u64) -> Vec<usize> {
+        self.advance(now);
+        let d = &mut self.devices[idx];
+        d.up = false;
+        d.draining = false;
+        let cancelled: Vec<usize> = d.queue.drain(..).map(|pb| pb.ticket).collect();
+        self.reproject(idx);
+        cancelled
+    }
+
+    /// Unplanned death at `now`: like a leave, but the in-flight batch
+    /// dies too — its resolution is revoked, the unexecuted timeline
+    /// tail and the lost results are rolled back, while the cycles and
+    /// energy burned before the crash stay spent (crashed work is
+    /// wasted, not free). Returns every cancelled ticket, pending and
+    /// started alike.
+    pub fn device_crash(&mut self, idx: usize, now: u64) -> Vec<usize> {
+        self.advance(now);
+        let mut cancelled: Vec<usize> =
+            self.devices[idx].queue.drain(..).map(|pb| pb.ticket).collect();
+        // After `advance(now)` every open entry finishes strictly after
+        // `now` and started at or before it.
+        let open = std::mem::take(&mut self.devices[idx].resolved_open);
+        for (ticket, _) in open {
+            let res = self.resolutions[ticket]
+                .take()
+                .expect("started batch was resolved");
+            let d = &mut self.devices[idx];
+            d.busy_cycles -= res.finish - now;
+            d.batches -= 1;
+            d.images -= res.images;
+            cancelled.push(ticket);
+        }
+        let d = &mut self.devices[idx];
+        d.up = false;
+        d.draining = false;
+        d.free_at = d.free_at.min(now);
+        self.reproject(idx);
+        cancelled
+    }
+
+    /// DVFS throttle: the device's effective clock drops to `clock_hz`,
+    /// repricing every batch it starts from now on (started batches keep
+    /// the price they resolved at). The registry base clock is
+    /// remembered for [`device_restore`](Fleet::device_restore).
+    pub fn device_throttle(&mut self, idx: usize, clock_hz: u64) {
+        self.devices[idx].cfg.clock_hz = clock_hz.max(1);
+        self.reproject(idx);
+    }
+
+    /// Lift a throttle and/or a drain: clock back to the registry base,
+    /// new placements allowed again. (Does not revive a down device —
+    /// that is a `Join`.)
+    pub fn device_restore(&mut self, idx: usize) {
+        let d = &mut self.devices[idx];
+        d.cfg.clock_hz = d.base_clock_hz;
+        d.draining = false;
+        self.reproject(idx);
+    }
+
+    /// Begin draining at `now`: no new placements, in-flight work
+    /// finishes, and every pending batch migrates immediately to the
+    /// live host that finishes it earliest (the steal machinery's move,
+    /// logged and counted as a migration). Batches no live device can
+    /// hold are cancelled and returned for re-admission.
+    pub fn device_drain(&mut self, idx: usize, now: u64) -> Vec<usize> {
+        self.advance(now);
+        self.devices[idx].draining = true;
+        let pending: Vec<PendingBatch> = self.devices[idx].queue.drain(..).collect();
+        self.reproject(idx);
+        let mut cancelled = Vec::new();
+        for mut pb in pending {
+            let host = (0..self.devices.len())
+                .filter(|&i| {
+                    i != idx
+                        && self.devices[i].is_live()
+                        && pb.peak_sram <= self.devices[i].cfg.sram_bytes
+                })
+                .min_by_key(|&i| {
+                    let d = &self.devices[i];
+                    let start = pb.ready.max(now).max(d.busy_until.max(d.free_at));
+                    (start + d.cfg.timeline_cost(&pb.counter), i)
+                });
+            match host {
+                Some(h) => {
+                    pb.ready = pb.ready.max(now);
+                    let ticket = pb.ticket;
+                    self.log_migration(now, idx, h, ticket);
+                    self.devices[h].queue.push_back(pb);
+                    self.devices[h].migrations += 1;
+                    self.reproject(h);
+                }
+                None => cancelled.push(pb.ticket),
+            }
+        }
+        cancelled
+    }
+
+    /// Ring-push one migration record, evicting the oldest at capacity.
+    fn log_migration(&mut self, now: u64, from: usize, to: usize, ticket: usize) {
+        if self.migration_log.len() >= self.migration_log_cap {
+            self.migration_log.pop_front();
+            self.migration_log_dropped += 1;
+        }
+        self.migration_log.push_back((now, from, to, ticket));
+    }
+
     /// Final placement of a deferred batch; `None` until the batch has
     /// been resolved by [`advance`](Fleet::advance) /
     /// [`finalize`](Fleet::finalize).
@@ -559,9 +783,12 @@ impl Fleet {
     }
 
     /// Take the steal log accumulated since the last drain:
-    /// `(now, from, to, ticket)` per migration, in decision order.
+    /// `(now, from, to, ticket)` per migration, in decision order
+    /// (oldest entries past [`migration_log_cap`](Fleet::migration_log_cap)
+    /// were dropped, counted in
+    /// [`migration_log_dropped`](Fleet::migration_log_dropped)).
     pub fn drain_migrations(&mut self) -> Vec<(u64, usize, usize, usize)> {
-        std::mem::take(&mut self.migration_log)
+        self.migration_log.drain(..).collect()
     }
 }
 
@@ -826,5 +1053,170 @@ mod tests {
         fleet.advance(cost);
         assert_eq!(fleet.devices[0].pending_len(), 0, "both batches started back-to-back");
         assert_eq!(fleet.rebalance(cost), 0);
+    }
+
+    // ------------------------------------------------------------------
+    // Fleet lifecycle (fault injection)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn lifecycle_gates_eligibility_admission_and_wake() {
+        let ctr = cheap_counter();
+        let mut fleet = Fleet::homogeneous(1, DeviceCfg::stm32f746(), 8);
+        fleet.steal = true;
+        assert!(fleet.eligible(0, 0, 1024));
+        assert!(fleet.fits_anywhere(1024));
+        assert_eq!(fleet.live_count(), 1);
+
+        let cancelled = fleet.device_leave(0, 0);
+        assert!(cancelled.is_empty(), "nothing was pending");
+        assert!(!fleet.eligible(0, 0, 1024));
+        assert!(!fleet.fits_anywhere(1024), "a down device cannot admit");
+        assert_eq!(fleet.live_count(), 0);
+
+        fleet.device_join(0, 500);
+        assert!(fleet.eligible(0, 500, 1024));
+        assert!(fleet.fits_anywhere(1024));
+        // A rejoined device cannot start work before its join time.
+        let d = fleet.commit(0, 500, &work(0, &ctr, &[]));
+        fleet.finalize();
+        let res = fleet.resolution(d.ticket.unwrap()).unwrap();
+        assert!(res.start >= 500);
+
+        // Draining blocks placement and the wake anchor but stays up.
+        fleet.devices[0].draining = true;
+        assert!(!fleet.eligible(0, 500, 1024));
+        assert!(!fleet.fits_anywhere(1024));
+        assert_eq!(fleet.next_wake(0, 1024), None, "draining devices anchor no wake");
+        fleet.device_restore(0);
+        assert!(fleet.eligible(0, res.finish, 1024));
+    }
+
+    #[test]
+    fn crash_revokes_started_batch_and_rolls_back_unexecuted_work() {
+        let ctr = cheap_counter();
+        let cost = DeviceCfg::stm32f746().timeline_cost(&ctr);
+        let mut fleet = Fleet::homogeneous(1, DeviceCfg::stm32f746(), 8);
+        fleet.steal = true;
+        let a = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        let b = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        // Mid-first-batch: A started (resolved), B still pending.
+        let now = cost / 2;
+        fleet.advance(now);
+        assert!(fleet.resolution(a.ticket.unwrap()).is_some());
+
+        let mut cancelled = fleet.device_crash(0, now);
+        cancelled.sort();
+        assert_eq!(
+            cancelled,
+            vec![a.ticket.unwrap(), b.ticket.unwrap()],
+            "crash cancels pending AND started-but-unfinished batches"
+        );
+        assert!(
+            fleet.resolution(a.ticket.unwrap()).is_none(),
+            "the in-flight resolution is revoked"
+        );
+        assert!(!fleet.devices[0].up);
+        // Results rolled back; the half-executed timeline stays spent.
+        assert_eq!(fleet.devices[0].batches, 0);
+        assert_eq!(fleet.devices[0].images, 0);
+        assert_eq!(fleet.devices[0].busy_cycles, cost - (cost - now));
+        assert_eq!(fleet.devices[0].counter, ctr, "burned instructions stay charged");
+        // Finalize resolves nothing new and the fleet stays consistent.
+        fleet.finalize();
+        assert!(fleet.resolution(b.ticket.unwrap()).is_none());
+    }
+
+    #[test]
+    fn drain_migrates_pending_to_live_host_or_cancels() {
+        let ctr = cheap_counter();
+        let mut fleet = Fleet::homogeneous(2, DeviceCfg::stm32f746(), 8);
+        fleet.steal = true;
+        let a = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        let b = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        fleet.advance(1);
+        let cancelled = fleet.device_drain(0, 1);
+        assert!(cancelled.is_empty(), "device 1 hosts the pending batch");
+        assert!(fleet.devices[0].draining);
+        assert_eq!(fleet.devices[1].migrations, 1);
+        assert_eq!(
+            fleet.drain_migrations(),
+            vec![(1, 0, 1, b.ticket.unwrap())],
+            "the drain migration is logged like a steal"
+        );
+        fleet.finalize();
+        assert_eq!(fleet.resolution(a.ticket.unwrap()).unwrap().device, 0);
+        assert_eq!(
+            fleet.resolution(b.ticket.unwrap()).unwrap().device,
+            1,
+            "pending work moved off the draining device"
+        );
+
+        // No live host that fits: the pending batch is cancelled.
+        let mut small = DeviceCfg::stm32f746();
+        small.sram_bytes = 512;
+        let mut fleet = Fleet::new(vec![DeviceCfg::stm32f746(), small], 8);
+        fleet.steal = true;
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        let pend = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        fleet.advance(1);
+        let cancelled = fleet.device_drain(0, 1);
+        assert_eq!(cancelled, vec![pend.ticket.unwrap()]);
+    }
+
+    #[test]
+    fn throttle_reprices_subsequent_batches_and_restore_recovers() {
+        let ctr = cheap_counter();
+        let m7 = DeviceCfg::stm32f746();
+        let full_cost = m7.timeline_cost(&ctr);
+        let mut fleet = Fleet::homogeneous(1, m7, 8);
+        fleet.steal = true;
+        // Throttle to half the reference clock before anything starts:
+        // the same device cycles cost twice the timeline.
+        fleet.device_throttle(0, crate::STM32F746_CLOCK_HZ / 2);
+        let a = fleet.commit(0, 0, &work(0, &ctr, &[]));
+        fleet.finalize();
+        let res = fleet.resolution(a.ticket.unwrap()).unwrap();
+        assert_eq!(res.device_cycles, m7.batch_cycles(&ctr), "device cycles unchanged");
+        assert_eq!(res.timeline_cycles, 2 * full_cost, "timeline doubles at half clock");
+
+        fleet.device_restore(0);
+        assert_eq!(fleet.devices[0].cfg.clock_hz, crate::STM32F746_CLOCK_HZ);
+        let b = fleet.commit(0, res.finish, &work(res.finish, &ctr, &[]));
+        fleet.finalize();
+        let rb = fleet.resolution(b.ticket.unwrap()).unwrap();
+        assert_eq!(rb.timeline_cycles, full_cost, "restored clock, restored price");
+    }
+
+    #[test]
+    fn migration_log_is_a_bounded_ring_with_drop_counter() {
+        let mut fleet = Fleet::homogeneous(2, DeviceCfg::stm32f746(), 8);
+        fleet.migration_log_cap = 2;
+        fleet.log_migration(10, 0, 1, 100);
+        fleet.log_migration(20, 0, 1, 101);
+        fleet.log_migration(30, 1, 0, 102);
+        assert_eq!(fleet.migration_log_dropped, 1, "the oldest entry was evicted");
+        assert_eq!(
+            fleet.drain_migrations(),
+            vec![(20, 0, 1, 101), (30, 1, 0, 102)],
+            "the ring keeps the newest entries in order"
+        );
+        assert!(fleet.drain_migrations().is_empty());
+        assert_eq!(fleet.migration_log_dropped, 1, "draining does not reset the counter");
+    }
+
+    #[test]
+    fn standby_devices_join_with_fresh_accounting() {
+        let mut fleet = Fleet::homogeneous(1, DeviceCfg::stm32f746(), 8);
+        let idx = fleet.push_standby(DeviceCfg::stm32f446());
+        assert_eq!(idx, 1);
+        assert_eq!(fleet.len(), 2);
+        assert!(!fleet.devices[idx].up, "standby devices start down");
+        assert!(!fleet.eligible(idx, 0, 1024));
+        assert_eq!(fleet.live_count(), 1);
+        fleet.device_join(idx, 1_000);
+        assert!(fleet.eligible(idx, 1_000, 1024));
+        assert_eq!(fleet.live_count(), 2);
+        assert_eq!(fleet.devices[idx].batches, 0);
     }
 }

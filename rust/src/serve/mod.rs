@@ -31,7 +31,19 @@
 //!              migration accounting)
 //!           ─► stats (p50/p95/p99, throughput from the first arrival
 //!                epoch, deadline + shed-SLO misses per class,
-//!                migrations, joules per device and per inference)
+//!                migrations, re-admissions and crash losses, joules
+//!                per device and per inference)
+//!
+//! fleet events (seeded churn stream riding the trace: Join | Leave |
+//!        Crash | Throttle | Restore | Drain — or synthesized live by
+//!        the autoscaler)
+//!   ─► fleet lifecycle (devices join/leave mid-replay; a crash loses
+//!        the in-flight batch and its deadline-carrying members re-enter
+//!        through ─► admission above, counted per class, while
+//!        deadline-free members are lost forever and counted as misses;
+//!        throttling rescales the device clock for subsequent pricing;
+//!        drain migrates pending batches to live hosts via the steal
+//!        machinery)
 //! ```
 //!
 //! * [`registry`] — multi-tenant model registry with an LRU
@@ -89,10 +101,11 @@ pub use registry::{hash_params, ModelKey, Registry, RegistryStats};
 pub use sched::{EnergyAware, LeastLoaded, RoundRobin, Scheduler, SchedulerKind, SloAware};
 pub use stats::{DeviceStats, LatencySummary, ModelStats, ServeReport};
 pub use trace::{
-    load_trace, save_trace, synth_trace, trace_from_json, trace_to_json, SloClass, TraceCfg,
-    TraceRequest,
+    load_full_trace, load_trace, save_full_trace, save_trace, synth_fleet_events, synth_trace,
+    trace_from_json, trace_to_json, FleetEvent, FleetEventKind, SloClass, TraceCfg, TraceRequest,
 };
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -161,6 +174,50 @@ pub struct ServeCfg {
     /// migratable, and drained devices steal from backlogged neighbors
     /// at each dispatch step.
     pub steal: bool,
+    /// Crash recovery: re-admit a cancelled batch's deadline-carrying
+    /// members through the admission path (`true`, the default) instead
+    /// of naively dropping every crashed member as lost (`false` — the
+    /// baseline the churn bench compares against).
+    pub readmit: bool,
+    /// Reactive autoscaler: grow/shrink the fleet from a standby pool
+    /// against the windowed predicted interactive-miss rate and a
+    /// joules budget. `None` = fixed fleet.
+    pub autoscale: Option<AutoscaleCfg>,
+}
+
+/// Reactive autoscaler policy (see [`ServeCfg::autoscale`]): standby
+/// devices start down; when the windowed predicted interactive-miss
+/// rate crosses `grow_rate` (and the fleet is still under its joules
+/// budget) the next standby joins, and when it falls below
+/// `shrink_rate` the most recently grown device drains back out.
+#[derive(Debug, Clone)]
+pub struct AutoscaleCfg {
+    /// Standby pool, appended to the fleet starting down.
+    pub standby: Vec<DeviceCfg>,
+    /// Recent interactive outcomes (predicted misses at placement plus
+    /// interactive sheds) the miss-rate window holds.
+    pub miss_window: usize,
+    /// Grow when the windowed miss rate exceeds this.
+    pub grow_rate: f64,
+    /// Shrink when the windowed miss rate falls below this.
+    pub shrink_rate: f64,
+    /// No growth once cumulative fleet joules exceed this budget.
+    pub joules_budget: f64,
+    /// Minimum arrivals between scaling actions (anti-flapping).
+    pub cooldown: usize,
+}
+
+impl Default for AutoscaleCfg {
+    fn default() -> Self {
+        AutoscaleCfg {
+            standby: vec![DeviceCfg::stm32f746()],
+            miss_window: 32,
+            grow_rate: 0.25,
+            shrink_rate: 0.02,
+            joules_budget: f64::INFINITY,
+            cooldown: 16,
+        }
+    }
 }
 
 impl Default for ServeCfg {
@@ -172,6 +229,8 @@ impl Default for ServeCfg {
             batcher: BatcherCfg::default(),
             cache_capacity: 8,
             steal: false,
+            readmit: true,
+            autoscale: None,
         }
     }
 }
@@ -196,7 +255,9 @@ struct ModelAcc {
 }
 
 /// One request whose batch is still migratable (steal mode): its
-/// latency and deadline outcome resolve only after the fleet finalizes.
+/// latency and deadline outcome resolve only after the fleet finalizes
+/// — or whose batch a fleet event cancels, sending it back through
+/// admission (re-admission) or into the lost count.
 struct DeferredReq {
     ticket: usize,
     id: usize,
@@ -231,6 +292,19 @@ struct ReplayState<'a> {
     deferred_reqs: Vec<DeferredReq>,
     /// Steal mode: per-batch (ticket, key) pairs awaiting resolution.
     deferred_batches: Vec<(usize, usize)>,
+    /// Fleet events present (or autoscale on): a transient no-live-host
+    /// placement failure loses the batch instead of erroring.
+    churn: bool,
+    /// Crash-cancelled members re-admitted through admission, per class.
+    readmitted_by_class: [u64; 3],
+    /// Requests lost forever to crashes (deadline-free members, or
+    /// batches no live device could host). Every one counts as a miss.
+    lost: u64,
+    lost_by_class: [u64; 3],
+    /// Recent interactive outcomes (true = predicted miss) feeding the
+    /// autoscaler; capacity 0 disables collection.
+    slo_signal: std::collections::VecDeque<bool>,
+    slo_signal_cap: usize,
 }
 
 /// Dispatch a set of flushed batches in ready-time order (same-ready
@@ -275,12 +349,32 @@ fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> 
         images: batch.requests.len() as u64,
         deadlines: &deadlines,
     };
-    let disp = st.sched.place(&work, &mut *st.fleet).ok_or_else(|| {
-        anyhow::anyhow!(
+    let Some(disp) = st.sched.place(&work, &mut *st.fleet) else {
+        if st.churn {
+            // The fleet that admitted this batch has churned out from
+            // under it: no live device hosts the arena any more. The
+            // members are lost — counted, never silently vanished.
+            for r in &batch.requests {
+                let class_idx = class_index(r.priority);
+                st.lost += 1;
+                st.lost_by_class[class_idx] += 1;
+                if st.rec.enabled() {
+                    st.rec.record(Event {
+                        cycles: batch.ready,
+                        id: r.id,
+                        key_idx: batch.key_idx,
+                        class: class_idx as u8,
+                        kind: EventKind::Lost { device: 0 },
+                    });
+                }
+            }
+            return Ok(());
+        }
+        anyhow::bail!(
             "no device fits {}B arena (admission should reject)",
             art.peak_sram()
-        )
-    })?;
+        );
+    };
     if st.rec.enabled() {
         // Each member request gets its own Place event so the lifecycle
         // chain Arrive → Admit → Place → Start → Finish is per-request.
@@ -300,6 +394,18 @@ fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> 
                     predicted_joules,
                 },
             });
+        }
+    }
+    // Autoscaler signal: the projected finish vs. deadline of every
+    // interactive member is the "predicted miss" the policy reacts to.
+    if st.slo_signal_cap > 0 {
+        for r in &batch.requests {
+            if class_index(r.priority) == 0 {
+                if st.slo_signal.len() == st.slo_signal_cap {
+                    st.slo_signal.pop_front();
+                }
+                st.slo_signal.push_back(disp.finish > r.deadline);
+            }
         }
     }
     let acc = &mut st.accs[batch.key_idx];
@@ -454,7 +560,7 @@ pub fn run_trace(
     trace: &[TraceRequest],
     cfg: &ServeCfg,
 ) -> Result<ServeReport> {
-    run_trace_observed(workloads, trace, cfg, &mut NoopRecorder, None)
+    run_trace_full_observed(workloads, trace, &[], cfg, &mut NoopRecorder, None)
 }
 
 /// [`run_trace`] with observability attached: lifecycle events flow into
@@ -466,15 +572,210 @@ pub fn run_trace_observed(
     trace: &[TraceRequest],
     cfg: &ServeCfg,
     rec: &mut dyn Recorder,
+    metrics: Option<&mut MetricsRegistry>,
+) -> Result<ServeReport> {
+    run_trace_full_observed(workloads, trace, &[], cfg, rec, metrics)
+}
+
+/// [`run_trace`] with a fault-injection stream: `fleet_events` replay on
+/// the same virtual timeline as the requests, churning devices in and
+/// out mid-trace. With an empty stream (and no autoscaler) this is
+/// exactly [`run_trace`].
+pub fn run_trace_full(
+    workloads: &[Workload],
+    trace: &[TraceRequest],
+    fleet_events: &[FleetEvent],
+    cfg: &ServeCfg,
+) -> Result<ServeReport> {
+    run_trace_full_observed(workloads, trace, fleet_events, cfg, &mut NoopRecorder, None)
+}
+
+/// Apply one fleet event to the running replay: flip the device's
+/// lifecycle state, emit the matching observability event, and route
+/// every cancelled in-flight batch through
+/// [`cancel_tickets`] — re-admission or loss, never silent vanishing.
+#[allow(clippy::too_many_arguments)]
+fn apply_fleet_event(
+    ev: &FleetEvent,
+    workloads: &[Workload],
+    seed_by_id: &HashMap<usize, u64>,
+    readmit: bool,
+    batcher: &mut Batcher,
+    st: &mut ReplayState,
+    crashes: &mut u64,
+) {
+    if ev.device >= st.fleet.devices.len() {
+        return; // stream generated for a larger fleet; ignore
+    }
+    let mut lifecycle = |st: &mut ReplayState, kind: EventKind| {
+        if st.rec.enabled() {
+            st.rec.record(Event {
+                cycles: ev.at,
+                id: ev.device,
+                key_idx: Event::NO_KEY,
+                class: 0,
+                kind,
+            });
+        }
+    };
+    match ev.kind {
+        FleetEventKind::Join => {
+            st.fleet.device_join(ev.device, ev.at);
+            lifecycle(&mut *st, EventKind::DeviceUp { device: ev.device });
+        }
+        FleetEventKind::Leave => {
+            let cancelled = st.fleet.device_leave(ev.device, ev.at);
+            lifecycle(&mut *st, EventKind::DeviceDown { device: ev.device, crashed: false });
+            cancel_tickets(&cancelled, ev.device, ev.at, workloads, seed_by_id, readmit, batcher, st);
+        }
+        FleetEventKind::Crash => {
+            let cancelled = st.fleet.device_crash(ev.device, ev.at);
+            *crashes += 1;
+            lifecycle(&mut *st, EventKind::DeviceDown { device: ev.device, crashed: true });
+            cancel_tickets(&cancelled, ev.device, ev.at, workloads, seed_by_id, readmit, batcher, st);
+        }
+        FleetEventKind::Throttle { clock_hz } => {
+            st.fleet.device_throttle(ev.device, clock_hz);
+            lifecycle(&mut *st, EventKind::Throttle { device: ev.device, clock_hz });
+        }
+        FleetEventKind::Restore => {
+            st.fleet.device_restore(ev.device);
+            lifecycle(&mut *st, EventKind::DeviceUp { device: ev.device });
+        }
+        FleetEventKind::Drain => {
+            let cancelled = st.fleet.device_drain(ev.device, ev.at);
+            lifecycle(&mut *st, EventKind::Drain { device: ev.device });
+            cancel_tickets(&cancelled, ev.device, ev.at, workloads, seed_by_id, readmit, batcher, st);
+        }
+    }
+}
+
+/// Unwind the deferred accounting of cancelled tickets and route every
+/// member request onward: deadline-carrying members re-enter through
+/// class-aware admission (so a shed re-admission lands in the usual
+/// shed counters), deadline-free members — and everything when
+/// re-admission is off — are lost, each loss an unconditional SLO miss.
+#[allow(clippy::too_many_arguments)]
+fn cancel_tickets(
+    tickets: &[usize],
+    device: usize,
+    now: u64,
+    workloads: &[Workload],
+    seed_by_id: &HashMap<usize, u64>,
+    readmit: bool,
+    batcher: &mut Batcher,
+    st: &mut ReplayState,
+) {
+    if tickets.is_empty() {
+        return;
+    }
+    let dead: std::collections::HashSet<usize> = tickets.iter().copied().collect();
+    let mut i = 0;
+    while i < st.deferred_batches.len() {
+        if dead.contains(&st.deferred_batches[i].0) {
+            let (_, key_idx) = st.deferred_batches.swap_remove(i);
+            st.accs[key_idx].batches -= 1;
+        } else {
+            i += 1;
+        }
+    }
+    let mut victims = Vec::new();
+    let mut j = 0;
+    while j < st.deferred_reqs.len() {
+        if dead.contains(&st.deferred_reqs[j].ticket) {
+            victims.push(st.deferred_reqs.swap_remove(j));
+        } else {
+            j += 1;
+        }
+    }
+    // swap_remove scrambles order; keep the re-admission sequence
+    // deterministic by restoring request-id order.
+    victims.sort_by_key(|dr| dr.id);
+    for dr in victims {
+        // The batch never completed: its members are back in flight, so
+        // the per-model request count unwinds (a re-admitted member is
+        // recounted when its new batch places).
+        st.accs[dr.key_idx].requests -= 1;
+        if readmit && dr.deadline != u64::MAX {
+            let w = &workloads[dr.key_idx];
+            let seed = seed_by_id.get(&dr.id).copied().unwrap_or(dr.id as u64);
+            let image = datasets::generate(
+                Task::for_backbone(&w.model.name),
+                1,
+                w.model.input_hw,
+                seed,
+            )
+            .images;
+            if st.rec.enabled() {
+                st.rec.record(Event {
+                    cycles: now,
+                    id: dr.id,
+                    key_idx: dr.key_idx,
+                    class: dr.class_idx as u8,
+                    kind: EventKind::Readmit { device },
+                });
+            }
+            st.readmitted_by_class[dr.class_idx] += 1;
+            batcher.offer(PendingRequest {
+                id: dr.id,
+                key_idx: dr.key_idx,
+                arrival: dr.arrival,
+                priority: (2 - dr.class_idx) as u8,
+                deadline: dr.deadline,
+                image,
+            });
+        } else {
+            st.lost += 1;
+            st.lost_by_class[dr.class_idx] += 1;
+            if st.rec.enabled() {
+                st.rec.record(Event {
+                    cycles: now,
+                    id: dr.id,
+                    key_idx: dr.key_idx,
+                    class: dr.class_idx as u8,
+                    kind: EventKind::Lost { device },
+                });
+            }
+        }
+    }
+}
+
+/// The full-fidelity entry point: requests, fault-injection events,
+/// observability, and (optionally) the reactive autoscaler, all on one
+/// virtual timeline.
+pub fn run_trace_full_observed(
+    workloads: &[Workload],
+    trace: &[TraceRequest],
+    fleet_events: &[FleetEvent],
+    cfg: &ServeCfg,
+    rec: &mut dyn Recorder,
     mut metrics: Option<&mut MetricsRegistry>,
 ) -> Result<ServeReport> {
     anyhow::ensure!(!workloads.is_empty(), "serving needs at least one workload");
     let wall0 = Instant::now();
     let compiles0 = engine::compile_count();
 
+    // Churn (or autoscaling) forces deferred-commit mode: batches must
+    // stay migratable tickets so crashes can revoke them and drains can
+    // move them. With no events and no autoscaler the flag is inert and
+    // the eager path is untouched (the bit-for-bit pin).
+    let churn_mode = !fleet_events.is_empty() || cfg.autoscale.is_some();
     let mut registry = Registry::new(cfg.cache_capacity);
     let mut fleet = Fleet::new(cfg.fleet.clone(), cfg.max_queue_depth);
-    fleet.steal = cfg.steal;
+    fleet.steal = cfg.steal || churn_mode;
+    let standby_lo = fleet.devices.len();
+    if let Some(asc) = &cfg.autoscale {
+        for dc in &asc.standby {
+            fleet.push_standby(*dc);
+        }
+    }
+    // Crash re-admission regenerates the member's image from its trace
+    // seed (images are not retained once a batch commits).
+    let seed_by_id: HashMap<usize, u64> = if churn_mode {
+        trace.iter().map(|r| (r.id, r.seed)).collect()
+    } else {
+        HashMap::new()
+    };
     let mut batcher = Batcher::new(cfg.batcher.clone(), workloads.len());
     batcher.set_record(rec.enabled());
     let mut sched = cfg.scheduler.build();
@@ -497,7 +798,23 @@ pub fn run_trace_observed(
         makespan: 0,
         deferred_reqs: Vec::new(),
         deferred_batches: Vec::new(),
+        churn: churn_mode,
+        readmitted_by_class: [0; 3],
+        lost: 0,
+        lost_by_class: [0; 3],
+        slo_signal: std::collections::VecDeque::new(),
+        slo_signal_cap: cfg.autoscale.as_ref().map(|a| a.miss_window).unwrap_or(0),
     };
+    // Fleet events replay in timeline order, ties broken by device so a
+    // shuffled stream and a sorted one behave identically.
+    let mut events: Vec<&FleetEvent> = fleet_events.iter().collect();
+    events.sort_by_key(|e| (e.at, e.device));
+    let mut next_ev = 0usize;
+    let mut crashes = 0u64;
+    let mut autoscale_ups = 0u64;
+    let mut autoscale_downs = 0u64;
+    let mut cooldown_left = 0usize;
+    let mut prev_interactive_shed = 0u64;
 
     // Artifacts pinned for execution even if the LRU evicts them between
     // requests (the registry still tracks the recompilations).
@@ -526,6 +843,20 @@ pub fn run_trace_observed(
             req.key_idx,
             workloads.len()
         );
+        // Fault injection: every fleet event due at or before this
+        // arrival lands first, so the arrival sees the churned fleet.
+        while next_ev < events.len() && events[next_ev].at <= req.arrival {
+            apply_fleet_event(
+                events[next_ev],
+                workloads,
+                &seed_by_id,
+                cfg.readmit,
+                &mut batcher,
+                &mut st,
+                &mut crashes,
+            );
+            next_ev += 1;
+        }
         if st.rec.enabled() {
             st.rec.record(Event {
                 cycles: req.arrival,
@@ -635,17 +966,106 @@ pub fn run_trace_observed(
         }
         exec_batches(due, &pinned, &mut st)?;
         drain_obs_logs(&mut batcher, &mut st);
+
+        // Reactive autoscaler: grow (join a standby) when the recent
+        // interactive predicted-miss rate runs hot and the joules budget
+        // allows; drain the newest standby back out when it runs cold.
+        if let Some(asc) = &cfg.autoscale {
+            // Interactive sheds are misses the placement signal never
+            // sees — feed them in as (certain) misses.
+            let ished = batcher.shed_by_class[0];
+            if st.slo_signal_cap > 0 {
+                for _ in prev_interactive_shed..ished {
+                    if st.slo_signal.len() == st.slo_signal_cap {
+                        st.slo_signal.pop_front();
+                    }
+                    st.slo_signal.push_back(true);
+                }
+            }
+            prev_interactive_shed = ished;
+            if cooldown_left > 0 {
+                cooldown_left -= 1;
+            } else if st.slo_signal_cap > 0 && st.slo_signal.len() * 2 >= st.slo_signal_cap {
+                let misses = st.slo_signal.iter().filter(|&&m| m).count();
+                let rate = misses as f64 / st.slo_signal.len() as f64;
+                if rate > asc.grow_rate {
+                    let spent: f64 = st.fleet.devices.iter().map(|d| d.joules()).sum();
+                    let idle = (standby_lo..st.fleet.devices.len())
+                        .find(|&i| !st.fleet.devices[i].is_live());
+                    if spent < asc.joules_budget {
+                        if let Some(i) = idle {
+                            st.fleet.device_join(i, req.arrival);
+                            autoscale_ups += 1;
+                            cooldown_left = asc.cooldown;
+                            if st.rec.enabled() {
+                                st.rec.record(Event {
+                                    cycles: req.arrival,
+                                    id: i,
+                                    key_idx: Event::NO_KEY,
+                                    class: 0,
+                                    kind: EventKind::DeviceUp { device: i },
+                                });
+                            }
+                        }
+                    }
+                } else if rate < asc.shrink_rate {
+                    let live = (standby_lo..st.fleet.devices.len())
+                        .rev()
+                        .find(|&i| st.fleet.devices[i].is_live());
+                    if let Some(i) = live {
+                        let cancelled = st.fleet.device_drain(i, req.arrival);
+                        autoscale_downs += 1;
+                        cooldown_left = asc.cooldown;
+                        if st.rec.enabled() {
+                            st.rec.record(Event {
+                                cycles: req.arrival,
+                                id: i,
+                                key_idx: Event::NO_KEY,
+                                class: 0,
+                                kind: EventKind::Drain { device: i },
+                            });
+                        }
+                        cancel_tickets(
+                            &cancelled,
+                            i,
+                            req.arrival,
+                            workloads,
+                            &seed_by_id,
+                            cfg.readmit,
+                            &mut batcher,
+                            &mut st,
+                        );
+                        drain_obs_logs(&mut batcher, &mut st);
+                    }
+                }
+            }
+        }
     }
 
-    // End of trace: drain the remaining partial batches.
+    // End of trace: any fleet events past the last arrival still land
+    // (a tail crash can revoke work committed by the final requests) …
+    while next_ev < events.len() {
+        apply_fleet_event(
+            events[next_ev],
+            workloads,
+            &seed_by_id,
+            cfg.readmit,
+            &mut batcher,
+            &mut st,
+            &mut crashes,
+        );
+        next_ev += 1;
+    }
+    // … then the remaining partial batches drain.
     let mut rest = batcher.drain_all();
     if cfg.batcher.preempt {
         rest = batcher.split_critical(rest);
     }
     exec_batches(rest, &pinned, &mut st)?;
-    // Steal mode: pending batches resolve now; latencies, deadline
-    // outcomes and final-device pricing land with the resolutions.
-    if cfg.steal {
+    // Deferred mode (steal or churn): pending batches resolve now;
+    // latencies, deadline outcomes and final-device pricing land with
+    // the resolutions.
+    if st.fleet.steal {
         resolve_deferred(&mut st);
     }
     drain_obs_logs(&mut batcher, &mut st);
@@ -659,6 +1079,9 @@ pub fn run_trace_observed(
         miss_queue_wait,
         miss_compute,
         makespan,
+        readmitted_by_class,
+        lost,
+        lost_by_class,
         ..
     } = st;
     let completed = latencies.len();
@@ -742,6 +1165,12 @@ pub fn run_trace_observed(
         preempt_flushes: batcher.preempt_flushes,
         batch_splits: batcher.splits,
         migrations: fleet.migrations(),
+        readmitted_by_class,
+        lost,
+        lost_by_class,
+        crashes,
+        autoscale_ups,
+        autoscale_downs,
         first_arrival_cycles: first_arrival,
         makespan_cycles: makespan,
         throughput_rps,
@@ -1819,5 +2248,214 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn empty_fleet_event_stream_is_the_plain_replay() {
+        // The API contract behind the bit-for-bit pin: no events and no
+        // autoscaler means churn mode never engages, so run_trace_full
+        // IS run_trace — same report, zero churn accounting.
+        let ws = mobilenet_pair();
+        let trace = synth_trace(
+            &TraceCfg::new(20, 250_000, 7).with_slo([1.0, 1.0, 1.0]),
+            ws.len(),
+        );
+        let cfg = small_cfg();
+        let mut a = run_trace(&ws, &trace, &cfg).unwrap();
+        let mut b = run_trace_full(&ws, &trace, &[], &cfg).unwrap();
+        a.wall_s = 0.0;
+        b.wall_s = 0.0;
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact()
+        );
+        assert_eq!(a.crashes, 0);
+        assert_eq!(a.lost, 0);
+        assert_eq!(a.readmissions(), 0);
+        assert_eq!(a.autoscale_ups + a.autoscale_downs, 0);
+    }
+
+    #[test]
+    fn churned_replay_conserves_requests_and_balances_events() {
+        // Satellite 4's property test: over random churn traces, every
+        // request lands in exactly one terminal bucket —
+        //   completed + queue-shed + SRAM-rejected + lost == admitted —
+        // every crash re-admission appears exactly once in the event
+        // stream, and per-class misses derived from events alone still
+        // equal the report's accounting.
+        use crate::obs::{derive_class_misses, RingRecorder};
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 4).unwrap()];
+        let mut churn_effects = 0u64;
+        for seed in [1u64, 2, 3] {
+            let tc = TraceCfg::new(28, 120_000, seed)
+                .with_slo([1.0, 1.0, 1.0])
+                .with_burst(7, 4)
+                .with_churn(0.5);
+            let trace = synth_trace(&tc, 1);
+            let fleet = vec![
+                DeviceCfg::stm32f746(),
+                DeviceCfg::stm32f746(),
+                DeviceCfg::stm32f446(),
+            ];
+            let events = synth_fleet_events(&tc, &trace, fleet.len());
+            assert!(!events.is_empty(), "seed {seed} produced no churn");
+            let cfg = ServeCfg {
+                fleet,
+                batcher: BatcherCfg {
+                    max_batch: 4,
+                    max_wait_cycles: 432_000,
+                    max_queue: 6,
+                    admission: AdmissionKind::ClassAware,
+                    preempt: true,
+                },
+                ..ServeCfg::default()
+            };
+            let mut rec = RingRecorder::new(1 << 16);
+            let rep =
+                run_trace_full_observed(&ws, &trace, &events, &cfg, &mut rec, None).unwrap();
+            assert_eq!(rec.dropped, 0);
+            let evs = rec.into_events();
+
+            // Conservation: no request vanishes, no request is double-
+            // counted, under arbitrary churn.
+            assert_eq!(
+                rep.completed as u64 + rep.rejected_queue + rep.rejected_sram + rep.lost,
+                trace.len() as u64,
+                "conservation violated at seed {seed}"
+            );
+            let images: u64 = rep.per_device.iter().map(|d| d.images).sum();
+            assert_eq!(images, rep.completed as u64, "seed {seed}");
+            let reqs: u64 = rep.per_model.iter().map(|m| m.requests).sum();
+            assert_eq!(reqs, rep.completed as u64, "seed {seed}");
+
+            // Event/report balance: one Readmit per re-admission, one
+            // Lost per lost request.
+            let readmits: Vec<&Event> = evs
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Readmit { .. }))
+                .collect();
+            assert_eq!(readmits.len() as u64, rep.readmissions(), "seed {seed}");
+            let losts = evs
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::Lost { .. }))
+                .count() as u64;
+            assert_eq!(losts, rep.lost, "seed {seed}");
+
+            // Each re-admission is unique (no double re-admission of one
+            // cancellation) and refers to a request that actually
+            // arrived.
+            let mut seen = std::collections::HashSet::new();
+            for r in &readmits {
+                assert!(
+                    seen.insert((r.id, r.cycles)),
+                    "duplicate re-admission of #{} at {} (seed {seed})",
+                    r.id,
+                    r.cycles
+                );
+                assert!(
+                    evs.iter()
+                        .any(|e| e.id == r.id && matches!(e.kind, EventKind::Arrive { .. })),
+                    "re-admitted #{} never arrived (seed {seed})",
+                    r.id
+                );
+            }
+
+            // Crashes in the stream match the report.
+            let downs = evs
+                .iter()
+                .filter(|e| matches!(e.kind, EventKind::DeviceDown { crashed: true, .. }))
+                .count() as u64;
+            assert_eq!(downs, rep.crashes, "seed {seed}");
+
+            // The rejection-and-loss-inclusive miss accounting still
+            // rederives from the event stream alone.
+            let derived = derive_class_misses(&evs);
+            assert_eq!(
+                derived,
+                [rep.class_misses(0), rep.class_misses(1), rep.class_misses(2)],
+                "seed {seed}"
+            );
+
+            // Determinism: same trace + events, same report.
+            let mut again =
+                run_trace_full(&ws, &trace, &events, &cfg).unwrap();
+            let mut first = rep;
+            first.wall_s = 0.0;
+            again.wall_s = 0.0;
+            assert_eq!(
+                first.to_json().to_string_compact(),
+                again.to_json().to_string_compact(),
+                "churned replay not deterministic at seed {seed}"
+            );
+            churn_effects += first.readmissions() + first.lost + first.crashes;
+        }
+        assert!(
+            churn_effects > 0,
+            "three churned seeds produced zero observable churn"
+        );
+    }
+
+    #[test]
+    fn autoscaler_grows_under_interactive_pressure_within_joules_budget() {
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 4).unwrap()];
+        // All-interactive bursts against a single M7: the predicted-miss
+        // window runs hot almost immediately.
+        let trace = synth_trace(
+            &TraceCfg::new(32, 40_000, 11)
+                .with_slo([1.0, 0.0, 0.0])
+                .with_burst(8, 6),
+            1,
+        );
+        let asc = AutoscaleCfg {
+            standby: vec![DeviceCfg::stm32f746()],
+            miss_window: 8,
+            grow_rate: 0.25,
+            shrink_rate: 0.0,
+            joules_budget: f64::INFINITY,
+            cooldown: 4,
+        };
+        let cfg = ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746()],
+            batcher: BatcherCfg {
+                max_batch: 4,
+                max_wait_cycles: 432_000,
+                max_queue: 4,
+                admission: AdmissionKind::ClassAware,
+                preempt: true,
+            },
+            autoscale: Some(asc.clone()),
+            ..ServeCfg::default()
+        };
+        let rep = run_trace_full(&ws, &trace, &[], &cfg).unwrap();
+        assert!(
+            rep.autoscale_ups >= 1,
+            "hot window never grew the fleet: {}",
+            rep.render()
+        );
+        // The standby device is part of the report once joined.
+        assert_eq!(rep.per_device.len(), 2);
+        assert_eq!(
+            rep.completed as u64 + rep.rejected_queue + rep.rejected_sram + rep.lost,
+            trace.len() as u64
+        );
+
+        // A zero joules budget forbids growth entirely.
+        let cfg0 = ServeCfg {
+            autoscale: Some(AutoscaleCfg {
+                joules_budget: 0.0,
+                ..asc
+            }),
+            ..cfg.clone()
+        };
+        let rep0 = run_trace_full(&ws, &trace, &[], &cfg0).unwrap();
+        assert_eq!(rep0.autoscale_ups, 0, "grew past a zero joules budget");
+        // Growth helped: the scaled fleet misses no more interactive
+        // deadlines than the budget-frozen one.
+        assert!(
+            rep.class_misses(0) <= rep0.class_misses(0),
+            "scaling up worsened interactive misses: {} vs {}",
+            rep.class_misses(0),
+            rep0.class_misses(0)
+        );
     }
 }

@@ -33,6 +33,13 @@
 //! time advances to the fleet's next in-flight completion and the pick
 //! retries — batches are delayed, never reordered.
 //!
+//! Fleet lifecycle (fault injection) is transparent to policies: the
+//! fleet's eligibility, SRAM-fit and next-wake primitives all filter to
+//! *live* (up, not draining) devices, so a policy written against a
+//! static fleet places correctly on a churning one — a downed or
+//! draining device simply stops appearing as a candidate, and a DVFS
+//! throttle shows up as that device pricing batches slower.
+//!
 //! `place` is also the fleet's *dispatch step*: in work-stealing mode
 //! ([`Fleet::steal`]) every placement first
 //! [`advance`](Fleet::advance)s the fleet (started batches resolve and

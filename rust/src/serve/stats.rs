@@ -159,6 +159,20 @@ pub struct ServeReport {
     pub batch_splits: u64,
     /// Pending batches migrated between devices by work stealing.
     pub migrations: u64,
+    /// Crash-cancelled requests re-admitted through class-aware
+    /// admission, by SLO class (interactive, standard, batch).
+    pub readmitted_by_class: [u64; 3],
+    /// Requests lost forever to churn (crashed deadline-free members,
+    /// batches no live device could host, or re-admission disabled).
+    pub lost: u64,
+    /// Lost requests by SLO class — every one an unconditional miss.
+    pub lost_by_class: [u64; 3],
+    /// Device crashes injected over the replay.
+    pub crashes: u64,
+    /// Standby devices the autoscaler joined.
+    pub autoscale_ups: u64,
+    /// Standby devices the autoscaler drained back out.
+    pub autoscale_downs: u64,
     /// Arrival cycle of the earliest trace request (throughput epoch).
     pub first_arrival_cycles: u64,
     /// Virtual cycle the last batch finished.
@@ -204,18 +218,28 @@ impl ServeReport {
         self.sram_deadline_by_class.iter().sum()
     }
 
-    /// Every SLO miss: completed-late plus deadline-carrying sheds and
-    /// SRAM rejections — admission cannot hide a lost deadline anywhere.
-    pub fn total_misses(&self) -> u64 {
-        self.deadline_misses + self.shed_deadline_misses() + self.sram_deadline_misses()
+    /// Crash-cancelled requests that re-entered admission, all classes.
+    pub fn readmissions(&self) -> u64 {
+        self.readmitted_by_class.iter().sum()
     }
 
-    /// Per-class SLO misses, rejection-inclusive (0 = interactive,
-    /// 1 = standard, 2 = batch).
+    /// Every SLO miss: completed-late plus deadline-carrying sheds,
+    /// SRAM rejections, and churn losses — neither admission nor a
+    /// crash can hide a lost deadline anywhere.
+    pub fn total_misses(&self) -> u64 {
+        self.deadline_misses
+            + self.shed_deadline_misses()
+            + self.sram_deadline_misses()
+            + self.lost
+    }
+
+    /// Per-class SLO misses, rejection- and loss-inclusive
+    /// (0 = interactive, 1 = standard, 2 = batch).
     pub fn class_misses(&self, class_idx: usize) -> u64 {
         self.miss_by_class[class_idx]
             + self.shed_deadline_by_class[class_idx]
             + self.sram_deadline_by_class[class_idx]
+            + self.lost_by_class[class_idx]
     }
 
     /// Mean fleet energy per completed inference, in joules.
@@ -254,6 +278,26 @@ impl ServeReport {
             self.batch_splits,
             self.migrations
         ));
+        if self.crashes > 0
+            || self.lost > 0
+            || self.readmissions() > 0
+            || self.autoscale_ups > 0
+            || self.autoscale_downs > 0
+        {
+            out.push_str(&format!(
+                "churn: crashes {}  readmitted int/std/batch {}/{}/{}  lost {} ({}/{}/{})  autoscale +{}/-{}\n",
+                self.crashes,
+                self.readmitted_by_class[0],
+                self.readmitted_by_class[1],
+                self.readmitted_by_class[2],
+                self.lost,
+                self.lost_by_class[0],
+                self.lost_by_class[1],
+                self.lost_by_class[2],
+                self.autoscale_ups,
+                self.autoscale_downs
+            ));
+        }
         out.push_str(&format!(
             "virtual time {:.3}s  throughput {:.1} req/s  latency p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms (mean {:.2}ms, max {:.2}ms)\n",
             self.virtual_s(),
@@ -380,6 +424,27 @@ impl ServeReport {
         );
         o.insert("batch_splits".into(), Json::Num(self.batch_splits as f64));
         o.insert("migrations".into(), Json::Num(self.migrations as f64));
+        o.insert("readmissions".into(), Json::Num(self.readmissions() as f64));
+        for (i, name) in classes.iter().enumerate() {
+            o.insert(
+                format!("readmit_{name}"),
+                Json::Num(self.readmitted_by_class[i] as f64),
+            );
+            o.insert(
+                format!("lost_{name}"),
+                Json::Num(self.lost_by_class[i] as f64),
+            );
+        }
+        o.insert("lost_requests".into(), Json::Num(self.lost as f64));
+        o.insert("crashes".into(), Json::Num(self.crashes as f64));
+        o.insert(
+            "autoscale_ups".into(),
+            Json::Num(self.autoscale_ups as f64),
+        );
+        o.insert(
+            "autoscale_downs".into(),
+            Json::Num(self.autoscale_downs as f64),
+        );
         o.insert(
             "first_arrival_cycles".into(),
             Json::Num(self.first_arrival_cycles as f64),
@@ -517,6 +582,12 @@ mod tests {
             preempt_flushes: 1,
             batch_splits: 1,
             migrations: 2,
+            readmitted_by_class: [1, 0, 0],
+            lost: 1,
+            lost_by_class: [0, 0, 1],
+            crashes: 1,
+            autoscale_ups: 0,
+            autoscale_downs: 0,
             first_arrival_cycles: 0,
             makespan_cycles: 216_000_000,
             throughput_rps: 9.0,
@@ -580,8 +651,16 @@ mod tests {
         assert!(js.contains("\"shed_interactive\":1"));
         assert!(js.contains("\"interactive_misses\":2"));
         assert!(js.contains("\"sram_deadline_misses\":1"));
-        assert!(js.contains("\"total_misses\":4"));
+        assert!(js.contains("\"total_misses\":5"));
         assert!(js.contains("\"migrations\":2"));
+        assert!(js.contains("\"readmissions\":1"));
+        assert!(js.contains("\"readmit_interactive\":1"));
+        assert!(js.contains("\"lost_requests\":1"));
+        assert!(js.contains("\"lost_batch\":1"));
+        assert!(js.contains("\"crashes\":1"));
+        assert!(js.contains("\"autoscale_ups\":0"));
+        assert!(txt.contains("churn: crashes 1"), "{txt}");
+        assert!(txt.contains("readmitted int/std/batch 1/0/0"), "{txt}");
         assert!(js.contains("\"class\":\"m4\""));
         assert!(js.contains("\"total_joules\":18"));
         assert!(js.contains("\"joules_per_inference\":2"));
@@ -606,14 +685,16 @@ mod tests {
         assert_eq!(rep.sram_deadline_misses(), 1);
         assert_eq!(
             rep.total_misses(),
-            4,
-            "2 completed-late + 1 deadline-carrying shed + 1 SRAM-rejected"
+            5,
+            "2 completed-late + 1 deadline-carrying shed + 1 SRAM-rejected + 1 crash-lost"
         );
         // Interactive: 1 late + 1 shed-with-deadline; standard: 1 late +
-        // 1 lost to the SRAM gate.
+        // 1 lost to the SRAM gate; batch: 1 lost to a crash (losses are
+        // unconditional misses even for the deadline-free class).
         assert_eq!(rep.class_misses(0), 2);
         assert_eq!(rep.class_misses(1), 2);
-        assert_eq!(rep.class_misses(2), 0);
+        assert_eq!(rep.class_misses(2), 1);
+        assert_eq!(rep.readmissions(), 1);
     }
 
     #[test]

@@ -15,6 +15,17 @@
 //! [`save_trace`] / [`load_trace`]), so `serve --trace-file x.json`
 //! replays a recorded trace deterministically on any fleet/scheduler
 //! combination.
+//!
+//! # Fleet churn
+//!
+//! A trace can additionally carry a deterministic [`FleetEvent`] stream
+//! — device joins, leaves, crashes, DVFS throttles, restores and drains
+//! — synthesized by [`synth_fleet_events`] at a configurable per-request
+//! rate ([`TraceCfg::churn`], the CLI's `--churn`). Fleet events draw
+//! from their own PRNG stream, so `churn = 0` traces stay byte-identical
+//! to pre-churn ones, and they round-trip through the same JSON file as
+//! the requests ([`save_full_trace`] / [`load_full_trace`]; plain
+//! [`load_trace`] still reads such files, ignoring the events).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -116,6 +127,58 @@ impl TraceRequest {
     }
 }
 
+/// What happens to one fleet device at one instant of a replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetEventKind {
+    /// A previously departed (or standby) device comes up and starts
+    /// accepting placements.
+    Join,
+    /// Planned departure: no new placements; the batch already started
+    /// finishes, pending unstarted batches are re-admitted.
+    Leave,
+    /// Unplanned departure: the in-flight batch is lost. Deadline-
+    /// carrying members re-enter through admission; best-effort members
+    /// are lost forever.
+    Crash,
+    /// DVFS brown-out: the device keeps serving, but every subsequent
+    /// batch is priced (cycles and joules) at the new clock.
+    Throttle {
+        /// New effective clock in Hz.
+        clock_hz: u64,
+    },
+    /// Undo a [`Throttle`](FleetEventKind::Throttle) and/or
+    /// [`Drain`](FleetEventKind::Drain): full base clock, accepting
+    /// placements again.
+    Restore,
+    /// Graceful decommission: no new placements, in-flight work
+    /// finishes, pending batches migrate away via work stealing.
+    Drain,
+}
+
+impl FleetEventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetEventKind::Join => "join",
+            FleetEventKind::Leave => "leave",
+            FleetEventKind::Crash => "crash",
+            FleetEventKind::Throttle { .. } => "throttle",
+            FleetEventKind::Restore => "restore",
+            FleetEventKind::Drain => "drain",
+        }
+    }
+}
+
+/// One fleet-lifecycle event in a trace: at virtual cycle `at`, device
+/// `device` undergoes `kind`. Events are sorted by `at` and interpreted
+/// by the replay loop between request arrivals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetEvent {
+    pub at: u64,
+    /// Fleet index of the affected device.
+    pub device: usize,
+    pub kind: FleetEventKind,
+}
+
 /// Trace-generation parameters.
 #[derive(Debug, Clone)]
 pub struct TraceCfg {
@@ -143,6 +206,12 @@ pub struct TraceCfg {
     pub burst_period: usize,
     /// Requests piled onto each burst leader (see `burst_period`).
     pub burst_size: usize,
+    /// Fleet-churn rate: the probability, per request arrival, that one
+    /// fleet-lifecycle event fires at that arrival instant
+    /// ([`synth_fleet_events`]). `0.0` (the default) generates no
+    /// events and — because churn draws from its own PRNG stream —
+    /// leaves the request trace byte-identical to a churn-free config.
+    pub churn: f64,
     pub seed: u64,
 }
 
@@ -156,6 +225,7 @@ impl TraceCfg {
             slo_weights: Vec::new(),
             burst_period: 0,
             burst_size: 0,
+            churn: 0.0,
             seed,
         }
     }
@@ -182,6 +252,13 @@ impl TraceCfg {
         );
         self.burst_period = period;
         self.burst_size = size;
+        self
+    }
+
+    /// Builder: fleet-churn rate (fleet events per request arrival).
+    pub fn with_churn(mut self, rate: f64) -> TraceCfg {
+        assert!((0.0..=1.0).contains(&rate), "churn rate must be in 0..=1");
+        self.churn = rate;
         self
     }
 }
@@ -256,6 +333,85 @@ pub fn synth_trace(cfg: &TraceCfg, num_keys: usize) -> Vec<TraceRequest> {
         .collect()
 }
 
+/// PRNG-stream offset for fleet-event draws: churn must never perturb
+/// the arrival/tenant/seed stream or the class stream of an existing
+/// trace config, mirroring how `class_rng` is split off above.
+const CHURN_STREAM: u64 = 0xF1EE7_CA05;
+
+/// Synthesize a deterministic fleet-lifecycle event stream for a trace:
+/// at each request arrival, with probability [`TraceCfg::churn`], one
+/// device event fires. The generator tracks simulated device state so
+/// the stream stays coherent (downed devices rejoin rather than crash
+/// twice, draining devices restore) and never takes the fleet below one
+/// live — up and not draining — device; a disruptive pick that would do
+/// so degrades to a DVFS throttle instead.
+pub fn synth_fleet_events(
+    cfg: &TraceCfg,
+    trace: &[TraceRequest],
+    fleet_size: usize,
+) -> Vec<FleetEvent> {
+    assert!(fleet_size >= 1, "fleet events need at least one device");
+    if cfg.churn <= 0.0 {
+        return Vec::new();
+    }
+    #[derive(Clone, Copy)]
+    struct SimState {
+        up: bool,
+        draining: bool,
+        throttled: bool,
+    }
+    let live = |st: &[SimState]| st.iter().filter(|s| s.up && !s.draining).count();
+    // Brown-out operating points, in reference-clock Hz: deep enough to
+    // visibly stretch batch latency on either device class.
+    let throttle_points: [u64; 3] = [108_000_000, 84_000_000, 54_000_000];
+
+    let mut rng = Rng::new(cfg.seed ^ CHURN_STREAM);
+    let mut st = vec![
+        SimState { up: true, draining: false, throttled: false };
+        fleet_size
+    ];
+    let mut events = Vec::new();
+    for r in trace {
+        if (rng.f32() as f64) >= cfg.churn {
+            continue;
+        }
+        let device = rng.below(fleet_size as u64) as usize;
+        let kind = if !st[device].up {
+            FleetEventKind::Join
+        } else if st[device].draining {
+            FleetEventKind::Restore
+        } else {
+            let pick = rng.below(6);
+            let disruptive = live(&st) > 1;
+            match pick {
+                0 if disruptive => FleetEventKind::Leave,
+                1 if disruptive => FleetEventKind::Crash,
+                2 if disruptive => FleetEventKind::Drain,
+                5 if st[device].throttled => FleetEventKind::Restore,
+                _ => FleetEventKind::Throttle {
+                    clock_hz: throttle_points[rng.below(3) as usize],
+                },
+            }
+        };
+        match kind {
+            FleetEventKind::Join => {
+                st[device] = SimState { up: true, draining: false, throttled: false };
+            }
+            FleetEventKind::Leave | FleetEventKind::Crash => {
+                st[device] = SimState { up: false, draining: false, throttled: false };
+            }
+            FleetEventKind::Throttle { .. } => st[device].throttled = true,
+            FleetEventKind::Restore => {
+                st[device].draining = false;
+                st[device].throttled = false;
+            }
+            FleetEventKind::Drain => st[device].draining = true,
+        }
+        events.push(FleetEvent { at: r.arrival, device, kind });
+    }
+    events
+}
+
 fn u64_field(v: &Json, key: &str) -> Result<u64> {
     let f = v
         .get(key)
@@ -319,6 +475,73 @@ pub fn trace_from_json(js: &Json) -> Result<Vec<TraceRequest>> {
         .collect()
 }
 
+/// Serialize a fleet-event stream. `at` fits a JSON double for any
+/// realistic horizon (like `arrival`); the throttle clock is a decimal
+/// string like the other full-range `u64` fields.
+pub fn fleet_events_to_json(events: &[FleetEvent]) -> Json {
+    Json::Arr(
+        events
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("at".into(), Json::Num(e.at as f64));
+                o.insert("device".into(), Json::Num(e.device as f64));
+                o.insert("kind".into(), Json::Str(e.kind.name().into()));
+                if let FleetEventKind::Throttle { clock_hz } = e.kind {
+                    o.insert("clock_hz".into(), Json::Str(clock_hz.to_string()));
+                }
+                Json::Obj(o)
+            })
+            .collect(),
+    )
+}
+
+/// Parse the `fleet_events` array of a trace file. A file without one
+/// (every pre-churn trace) yields an empty stream.
+pub fn fleet_events_from_json(js: &Json) -> Result<Vec<FleetEvent>> {
+    let arr = match js.get("fleet_events").and_then(|v| v.as_arr()) {
+        Some(arr) => arr,
+        None => return Ok(Vec::new()),
+    };
+    arr.iter()
+        .map(|v| {
+            let kind_name = v
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or_else(|| anyhow::anyhow!("fleet event missing `kind`"))?;
+            let kind = match kind_name {
+                "join" => FleetEventKind::Join,
+                "leave" => FleetEventKind::Leave,
+                "crash" => FleetEventKind::Crash,
+                "throttle" => FleetEventKind::Throttle {
+                    clock_hz: u64_field(v, "clock_hz")?,
+                },
+                "restore" => FleetEventKind::Restore,
+                "drain" => FleetEventKind::Drain,
+                other => anyhow::bail!("unknown fleet event kind `{other}`"),
+            };
+            Ok(FleetEvent {
+                at: u64_field(v, "at")?,
+                device: u64_field(v, "device")? as usize,
+                kind,
+            })
+        })
+        .collect()
+}
+
+/// Serialize a trace together with its fleet-event stream. An empty
+/// stream writes the exact same JSON as [`trace_to_json`], so files
+/// recorded without churn stay byte-identical.
+pub fn full_trace_to_json(trace: &[TraceRequest], events: &[FleetEvent]) -> Json {
+    let mut js = trace_to_json(trace);
+    if !events.is_empty() {
+        if let Json::Obj(o) = &mut js {
+            o.insert("fleet_events".into(), fleet_events_to_json(events));
+        }
+    }
+    js
+}
+
 /// Write a trace to `path` as JSON.
 pub fn save_trace<P: AsRef<Path>>(path: P, trace: &[TraceRequest]) -> Result<()> {
     std::fs::write(path.as_ref(), trace_to_json(trace).to_string_compact())?;
@@ -331,6 +554,27 @@ pub fn load_trace<P: AsRef<Path>>(path: P) -> Result<Vec<TraceRequest>> {
     let src = std::fs::read_to_string(path.as_ref())?;
     let js = Json::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?;
     trace_from_json(&js)
+}
+
+/// Write a trace plus its fleet-event stream to `path` as one JSON file.
+pub fn save_full_trace<P: AsRef<Path>>(
+    path: P,
+    trace: &[TraceRequest],
+    events: &[FleetEvent],
+) -> Result<()> {
+    std::fs::write(
+        path.as_ref(),
+        full_trace_to_json(trace, events).to_string_compact(),
+    )?;
+    Ok(())
+}
+
+/// Load a trace and its fleet-event stream. Files recorded before fleet
+/// events existed (or with churn off) load with an empty stream.
+pub fn load_full_trace<P: AsRef<Path>>(path: P) -> Result<(Vec<TraceRequest>, Vec<FleetEvent>)> {
+    let src = std::fs::read_to_string(path.as_ref())?;
+    let js = Json::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?;
+    Ok((trace_from_json(&js)?, fleet_events_from_json(&js)?))
 }
 
 #[cfg(test)]
@@ -466,6 +710,104 @@ mod tests {
         let loaded = load_trace(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(tr, loaded);
+    }
+
+    #[test]
+    fn churn_stream_never_perturbs_requests_and_is_deterministic() {
+        let base = TraceCfg::new(400, 50_000, 31).with_slo([1.0, 1.0, 1.0]);
+        let plain = synth_trace(&base, 2);
+        let churned_cfg = base.clone().with_churn(0.25);
+        let churned = synth_trace(&churned_cfg, 2);
+        // Fleet churn draws from its own stream: the request trace is
+        // identical whether or not events are generated.
+        assert_eq!(plain, churned);
+        let ev_a = synth_fleet_events(&churned_cfg, &churned, 4);
+        let ev_b = synth_fleet_events(&churned_cfg, &churned, 4);
+        assert_eq!(ev_a, ev_b, "event stream must be deterministic");
+        assert!(!ev_a.is_empty(), "25% churn over 400 requests fires");
+        // churn = 0 generates nothing.
+        assert!(synth_fleet_events(&base, &plain, 4).is_empty());
+    }
+
+    #[test]
+    fn churn_events_are_sorted_coherent_and_keep_one_live_device() {
+        let cfg = TraceCfg::new(1200, 50_000, 77).with_churn(0.5);
+        let trace = synth_trace(&cfg, 2);
+        for fleet_size in [1usize, 2, 4] {
+            let events = synth_fleet_events(&cfg, &trace, fleet_size);
+            #[derive(Clone, Copy)]
+            struct St {
+                up: bool,
+                draining: bool,
+            }
+            let mut st = vec![St { up: true, draining: false }; fleet_size];
+            let mut at = 0u64;
+            for e in &events {
+                assert!(e.at >= at, "events must be time-sorted");
+                at = e.at;
+                assert!(e.device < fleet_size);
+                match e.kind {
+                    FleetEventKind::Join => {
+                        assert!(!st[e.device].up, "join only revives a downed device");
+                        st[e.device] = St { up: true, draining: false };
+                    }
+                    FleetEventKind::Leave | FleetEventKind::Crash => {
+                        assert!(st[e.device].up, "cannot lose a downed device twice");
+                        st[e.device] = St { up: false, draining: false };
+                    }
+                    FleetEventKind::Throttle { clock_hz } => {
+                        assert!(st[e.device].up && clock_hz >= 1_000_000);
+                    }
+                    FleetEventKind::Restore => st[e.device].draining = false,
+                    FleetEventKind::Drain => {
+                        assert!(st[e.device].up);
+                        st[e.device].draining = true;
+                    }
+                }
+                let live = st.iter().filter(|s| s.up && !s.draining).count();
+                assert!(live >= 1, "churn must never take the fleet below one live device");
+            }
+        }
+    }
+
+    #[test]
+    fn full_trace_round_trips_and_stays_backward_compatible() {
+        let cfg = TraceCfg::new(120, 60_000, 19).with_slo([1.0, 1.0, 1.0]).with_churn(0.3);
+        let trace = synth_trace(&cfg, 2);
+        let events = synth_fleet_events(&cfg, &trace, 3);
+        assert!(!events.is_empty());
+        assert!(
+            events.iter().any(|e| matches!(e.kind, FleetEventKind::Throttle { .. })),
+            "30% churn should include a throttle"
+        );
+        let js = full_trace_to_json(&trace, &events);
+        assert_eq!(trace_from_json(&js).unwrap(), trace);
+        assert_eq!(fleet_events_from_json(&js).unwrap(), events);
+
+        let path = std::env::temp_dir().join("mcu_mixq_full_trace_roundtrip.json");
+        save_full_trace(&path, &trace, &events).unwrap();
+        let (tr2, ev2) = load_full_trace(&path).unwrap();
+        // Plain load_trace still reads a file that carries fleet events.
+        let tr3 = load_trace(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(tr2, trace);
+        assert_eq!(ev2, events);
+        assert_eq!(tr3, trace);
+
+        // No events → byte-identical to the legacy schema, and legacy
+        // files load with an empty stream.
+        assert_eq!(
+            full_trace_to_json(&trace, &[]).to_string_compact(),
+            trace_to_json(&trace).to_string_compact()
+        );
+        assert!(fleet_events_from_json(&trace_to_json(&trace)).unwrap().is_empty());
+
+        // Garbage kinds are rejected.
+        let bad = Json::parse(
+            r#"{"requests":[],"fleet_events":[{"at":1,"device":0,"kind":"implode"}]}"#,
+        )
+        .unwrap();
+        assert!(fleet_events_from_json(&bad).is_err());
     }
 
     #[test]

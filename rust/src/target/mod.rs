@@ -262,10 +262,14 @@ impl Target {
         })
     }
 
-    /// Parse a fleet spec — comma-separated `target[:count]` entries,
-    /// e.g. `m7:2,m4:2` or `stm32f746:4` — into one [`Target`] per
-    /// device. Unknown tokens report the offending entry and the list of
-    /// registered target names.
+    /// Parse a fleet spec — comma-separated `target[@MHZmhz][:count]`
+    /// entries, e.g. `m7:2,m4:2`, `stm32f746:4` or `m4@84mhz:2` — into
+    /// one [`Target`] per device. The optional `@NNmhz` suffix overrides
+    /// the registry clock, making throttled (DVFS) operating points
+    /// constructible straight from the CLI; the override rescales
+    /// timeline and energy pricing exactly like a runtime
+    /// `Throttle{clock}` fleet event. Unknown tokens report the
+    /// offending entry and the list of registered target names.
     pub fn parse_fleet(spec: &str) -> Result<Vec<Target>> {
         let mut fleet = Vec::new();
         for entry in spec.split(',') {
@@ -284,6 +288,26 @@ impl Target {
                 ),
                 None => (entry, 1),
             };
+            // Clock override: `m4@84mhz` — split before registry lookup
+            // so the base name still gets the canonical unknown-target
+            // error.
+            let (name, clock_override) = match name.split_once('@') {
+                Some((base, clk)) => {
+                    let clk = clk.trim().to_ascii_lowercase();
+                    let mhz = clk
+                        .strip_suffix("mhz")
+                        .and_then(|m| m.trim().parse::<u64>().ok())
+                        .filter(|m| *m >= 1)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "bad clock override `{clk}` in fleet entry `{entry}` \
+                                 (want target@NNmhz[:count], e.g. m4@84mhz:2)"
+                            )
+                        })?;
+                    (base, Some(mhz * 1_000_000))
+                }
+                None => (name, None),
+            };
             let target = Target::lookup(name).ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown target `{name}` in fleet spec `{spec}` (known targets: {})",
@@ -291,7 +315,11 @@ impl Target {
                 )
             })?;
             anyhow::ensure!(count >= 1, "device count must be >= 1 in `{entry}`");
-            fleet.extend(std::iter::repeat(*target).take(count));
+            let mut target = *target;
+            if let Some(clock_hz) = clock_override {
+                target.clock_hz = clock_hz;
+            }
+            fleet.extend(std::iter::repeat(target).take(count));
         }
         anyhow::ensure!(!fleet.is_empty(), "fleet spec `{spec}` names no devices");
         Ok(fleet)
@@ -319,12 +347,27 @@ impl Target {
             while i + n < fleet.len() && fleet[i + n] == *t {
                 n += 1;
             }
+            // A pure clock override of a registry part (the DVFS case
+            // the spec grammar can express) renders as `label@NNmhz`;
+            // any other customization falls back to the part name.
+            let mut probe = *t;
+            let mut suffix = String::new();
+            if let Some(reg) = Target::lookup(t.name) {
+                if reg.clock_hz != t.clock_hz && t.clock_hz % 1_000_000 == 0 {
+                    probe.clock_hz = reg.clock_hz;
+                    if probe == *reg {
+                        suffix = format!("@{}mhz", t.clock_hz / 1_000_000);
+                    } else {
+                        probe = *t;
+                    }
+                }
+            }
             let label = match Target::lookup(t.class.name()) {
-                Some(reg) if *reg == *t => t.class.name(),
-                _ => t.name,
+                Some(reg) if *reg == probe => format!("{}{suffix}", t.class.name()),
+                _ => format!("{}{suffix}", t.name),
             };
             if n == 1 {
-                parts.push(label.to_string());
+                parts.push(label);
             } else {
                 parts.push(format!("{label}:{n}"));
             }
@@ -428,6 +471,40 @@ mod tests {
             Target::fleet_spec(&[Target::stm32f746(), custom]),
             "m7,stm32f746"
         );
+    }
+
+    #[test]
+    fn fleet_clock_override_parses_renders_and_round_trips() {
+        let fleet = Target::parse_fleet("m4@84mhz:2").unwrap();
+        assert_eq!(fleet.len(), 2);
+        for d in &fleet {
+            assert_eq!(d.name, "stm32f446");
+            assert_eq!(d.clock_hz, 84_000_000);
+            // Everything except the clock stays the registry profile.
+            assert_eq!(d.sram_bytes, STM32F446_SRAM_BYTES);
+            assert_eq!(d.cycle_model, CycleModel::cortex_m4());
+        }
+        // The override renders back and round-trips through the spec
+        // grammar, mixed freely with unmodified entries.
+        for spec in ["m4@84mhz:2", "m7:2,m4@84mhz:2", "m7@108mhz,m7"] {
+            let fleet = Target::parse_fleet(spec).unwrap();
+            assert_eq!(Target::fleet_spec(&fleet), spec, "spec `{spec}`");
+            assert_eq!(Target::parse_fleet(&Target::fleet_spec(&fleet)).unwrap(), fleet);
+        }
+        // Case-insensitive suffix, full part names accepted too.
+        assert_eq!(
+            Target::parse_fleet("stm32f746@108MHz").unwrap()[0].clock_hz,
+            108_000_000
+        );
+
+        // Bad overrides name the offending token; the base-name error
+        // message is untouched by the new suffix.
+        for bad in ["m4@84", "m4@fastmhz:2", "m4@0mhz", "m4@:2"] {
+            let msg = format!("{:#}", Target::parse_fleet(bad).unwrap_err());
+            assert!(msg.contains("clock override"), "`{bad}`: {msg}");
+        }
+        let msg = format!("{:#}", Target::parse_fleet("m33@84mhz:2").unwrap_err());
+        assert!(msg.contains("m33") && msg.contains("stm32f746"), "{msg}");
     }
 
     #[test]
