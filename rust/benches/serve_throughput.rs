@@ -33,6 +33,15 @@
 //!    under churn + re-admission stay within 10 percentage points of
 //!    the no-churn baseline, and re-admission strictly beats naive
 //!    drop-on-crash.
+//! 5. **Event-loop replay speed** (event-driven serve-core PR): the
+//!    skewed deadline trace on an m7:8,m4:8 fleet, replayed by the
+//!    event-heap core (probe counters, indexed scheduling, arena
+//!    requests) and by the `legacy_loop` scan core (per-image
+//!    inference, linear next-wake/flush scans). The legacy cell
+//!    replays a shorter prefix of the same arrival process — both
+//!    sides report requests per second of host wall time, so the
+//!    rates normalize — and the acceptance is a >=2x replay-rate
+//!    speedup, recorded in the JSON line as `event_loop_speedup`.
 //!
 //! Regenerate with `cargo bench --bench serve_throughput`.
 
@@ -383,6 +392,54 @@ fn main() -> mcu_mixq::Result<()> {
     }
     println!();
 
+    // ------------------------------------------------------------------
+    // Event-loop replay speed: the event-heap core vs the `legacy_loop`
+    // scan core on an m7:8,m4:8 fleet. The legacy cell runs per-image
+    // inference, so it replays a shorter prefix of the same arrival
+    // process (quarter length, floor 64, cap 2000); both rates are
+    // per-request per second of host wall time, so they normalize.
+    // ------------------------------------------------------------------
+    let speed_fleet: Vec<DeviceCfg> = (0..16)
+        .map(|i| {
+            if i < 8 {
+                DeviceCfg::stm32f746()
+            } else {
+                DeviceCfg::stm32f446()
+            }
+        })
+        .collect();
+    let speed_cfg = ServeCfg {
+        fleet: speed_fleet,
+        scheduler: SchedulerKind::SloAware,
+        ..ServeCfg::default()
+    };
+    let speed_tc = |n: usize| {
+        TraceCfg::new(n, 216_000, 46)
+            .with_skew(1.0)
+            .with_slo([0.5, 0.3, 0.2])
+    };
+    let speed_trace = serve::synth_trace(&speed_tc(requests), ws.len());
+    let fast_rep = serve::run_trace(&ws, &speed_trace, &speed_cfg)?;
+    let legacy_n = (requests / 4).max(64).min(2000).min(requests);
+    let legacy_trace = serve::synth_trace(&speed_tc(legacy_n), ws.len());
+    let legacy_cfg = ServeCfg {
+        legacy_loop: true,
+        ..speed_cfg.clone()
+    };
+    let legacy_rep = serve::run_trace(&ws, &legacy_trace, &legacy_cfg)?;
+    let event_loop_speedup = if legacy_rep.replay_requests_per_sec > 0.0 {
+        fast_rep.replay_requests_per_sec / legacy_rep.replay_requests_per_sec
+    } else {
+        f64::INFINITY
+    };
+    println!(
+        "event-loop replay (m7:8,m4:8): {:.0} req/s over {} requests vs legacy scan loop {:.0} req/s over {} ({event_loop_speedup:.1}x)\n",
+        fast_rep.replay_requests_per_sec,
+        requests,
+        legacy_rep.replay_requests_per_sec,
+        legacy_n
+    );
+
     // Host-side simulation speed (wall clock), for the record.
     let t = Bench::new(0, 3).run("replay", || {
         serve::run_trace(&ws, &trace, &cfg).expect("replay")
@@ -405,6 +462,15 @@ fn main() -> mcu_mixq::Result<()> {
     );
     o.insert("batch_speedup".into(), Json::Num(batch_speedup));
     o.insert("sim_wall_ms".into(), Json::Num(t.mean_ns / 1e6));
+    o.insert(
+        "replay_requests_per_sec".into(),
+        Json::Num(fast_rep.replay_requests_per_sec),
+    );
+    o.insert(
+        "legacy_requests_per_sec".into(),
+        Json::Num(legacy_rep.replay_requests_per_sec),
+    );
+    o.insert("event_loop_speedup".into(), Json::Num(event_loop_speedup));
     o.insert("rows".into(), Json::Arr(rows));
     o.insert("energy_rows".into(), Json::Arr(energy_rows));
     o.insert("overload".into(), Json::Arr(overload_rows));
@@ -495,6 +561,14 @@ fn main() -> mcu_mixq::Result<()> {
         "crash re-admission must strictly beat drop-on-crash on interactive misses ({} vs {})",
         churn_int["churn+readmit"],
         churn_int["churn+drop"]
+    );
+    // Event-driven serve-core acceptance: the heap-driven replay must
+    // sustain at least twice the legacy scan loop's request rate.
+    assert!(
+        event_loop_speedup >= 2.0,
+        "event-loop replay must be >=2x the legacy scan loop ({:.0} vs {:.0} req/s)",
+        fast_rep.replay_requests_per_sec,
+        legacy_rep.replay_requests_per_sec
     );
     Ok(())
 }

@@ -98,10 +98,15 @@ fn print_help() {
          \x20          [--admission fifo|class] [--preempt] [--steal]\n\
          \x20          [--requests N] [--devices N] [--mean-gap-ms F]\n\
          \x20          [--skew F] [--slo-mix I,S,B] [--burst P,S]\n\
-         \x20          [--trace-file IN.json] [--dump-trace OUT.json]\n\
+         \x20          [--trace-file IN.json|IN.jsonl] (JSON-lines\n\
+         \x20           traces stream one request at a time)\n\
+         \x20          [--dump-trace OUT.json]\n\
          \x20          [--batch N] [--wait-ms F] [--queue N] [--depth N]\n\
          \x20          [--cache N] [--seed S] [--json]\n\
          \x20          [--churn RATE] [--no-readmit]\n\
+         \x20          [--legacy-loop] (pre-event-loop replay core:\n\
+         \x20           linear scans + per-image inference; the\n\
+         \x20           equivalence oracle and benchmark baseline)\n\
          \x20          [--autoscale FLEETSPEC] [--autoscale-budget J]\n\
          \x20          [--events-out EV.json] [--metrics-out M.json]\n\
          \x20          [--metrics-cadence CYCLES]\n\
@@ -559,6 +564,7 @@ fn run_serve_scenario(
         .ok_or_else(|| anyhow::anyhow!("unknown admission policy `{adm_spec}` (fifo|class)"))?;
     cfg.batcher.preempt = args.bool_or("preempt", false);
     cfg.steal = args.bool_or("steal", false);
+    cfg.legacy_loop = args.bool_or("legacy-loop", false);
     cfg.max_queue_depth = args.usize_or("depth", cfg.max_queue_depth);
     cfg.cache_capacity = args.usize_or("cache", cfg.cache_capacity);
     cfg.batcher.max_batch = args.usize_or("batch", cfg.batcher.max_batch);
@@ -590,7 +596,17 @@ fn run_serve_scenario(
 
     let (trace, fleet_events) = match args.get("trace-file") {
         Some(path) => {
-            let (t, ev) = serve::load_full_trace(path)?;
+            // JSON-lines traces parse one request at a time through
+            // TraceSource; the CLI still materializes the vector for the
+            // banner, dump-trace, and the report. Library callers that
+            // want true streaming use serve::run_trace_source directly.
+            let (t, ev) = if path.ends_with(".jsonl") {
+                let t: Vec<_> =
+                    serve::TraceSource::open(path)?.collect::<anyhow::Result<_>>()?;
+                (t, Vec::new())
+            } else {
+                serve::load_full_trace(path)?
+            };
             println!(
                 "replaying {} recorded request(s) (+{} fleet event(s)) from {path}",
                 t.len(),

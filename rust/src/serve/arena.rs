@@ -1,0 +1,110 @@
+//! Arena storage for in-flight request payloads.
+//!
+//! The replay hot path used to thread every request's input image
+//! (`Vec<f32>`, tens of KB for real backbones) through the batcher's
+//! queues, flush slices, split halves and crash-readmission path — each
+//! hop moving or cloning the buffer. The arena breaks that coupling:
+//! payloads live in one slab keyed by the request's stable id (the
+//! [`RequestId`]), and everything downstream of admission carries only
+//! the id. A payload is written once at arrival, read (at most once per
+//! execution) by the batch executor, and the slot is reclaimed when the
+//! request leaves the system — so peak arena memory tracks the number
+//! of requests *in flight*, not the trace length, which is what lets a
+//! million-request replay run in bounded space.
+//!
+//! Ids are trace positions and strictly increase, so the slab is a
+//! `Vec` indexed by id with a watermark of reclaimed prefix slots —
+//! no hashing on the hot path. Reclaimed or never-written slots read
+//! back as the empty image, which is also the representation the fast
+//! replay mode uses (instruction counts are input-independent, so it
+//! skips synthesizing pixels entirely and the arena stays empty).
+
+/// Stable identity of a request for the lifetime of a replay: its
+/// position in the trace. Survives batching, splitting, migration and
+/// crash re-admission unchanged.
+pub type RequestId = usize;
+
+/// Slab of request payloads keyed by [`RequestId`].
+#[derive(Debug, Default)]
+pub struct RequestArena {
+    slots: Vec<Vec<f32>>,
+    /// Payload bytes currently resident (f32 elements), for telemetry.
+    resident: usize,
+    /// High-water mark of `resident` over the arena's lifetime.
+    peak: usize,
+}
+
+impl RequestArena {
+    pub fn new() -> RequestArena {
+        RequestArena::default()
+    }
+
+    /// Store `image` as the payload of request `id`, replacing any
+    /// previous payload. Slots between the current high id and `id`
+    /// materialize as empty vectors (capacity 0 — a `Vec::new` per slot,
+    /// no payload allocation).
+    pub fn put(&mut self, id: RequestId, image: Vec<f32>) {
+        if id >= self.slots.len() {
+            self.slots.resize_with(id + 1, Vec::new);
+        }
+        self.resident -= self.slots[id].len();
+        self.resident += image.len();
+        self.peak = self.peak.max(self.resident);
+        self.slots[id] = image;
+    }
+
+    /// The payload of request `id`; empty if never written or already
+    /// reclaimed.
+    pub fn image(&self, id: RequestId) -> &[f32] {
+        self.slots.get(id).map_or(&[], |v| v.as_slice())
+    }
+
+    /// Reclaim request `id`'s slot, freeing its payload allocation.
+    pub fn release(&mut self, id: RequestId) {
+        if let Some(slot) = self.slots.get_mut(id) {
+            self.resident -= slot.len();
+            *slot = Vec::new();
+        }
+    }
+
+    /// f32 elements currently resident across all live slots.
+    pub fn resident_len(&self) -> usize {
+        self.resident
+    }
+
+    /// Lifetime high-water mark of [`resident_len`](Self::resident_len).
+    pub fn peak_len(&self) -> usize {
+        self.peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_read_release_round_trip() {
+        let mut a = RequestArena::new();
+        assert!(a.image(3).is_empty(), "unwritten slots read as empty");
+        a.put(3, vec![1.0, 2.0]);
+        a.put(0, vec![9.0]);
+        assert_eq!(a.image(3), &[1.0, 2.0]);
+        assert_eq!(a.image(0), &[9.0]);
+        assert_eq!(a.resident_len(), 3);
+        a.release(3);
+        assert!(a.image(3).is_empty());
+        assert_eq!(a.resident_len(), 1);
+        assert_eq!(a.peak_len(), 3, "peak survives release");
+        a.release(100);
+        assert_eq!(a.resident_len(), 1, "releasing an unknown id is a no-op");
+    }
+
+    #[test]
+    fn rewriting_a_slot_replaces_its_accounting() {
+        let mut a = RequestArena::new();
+        a.put(0, vec![0.0; 8]);
+        a.put(0, vec![0.0; 2]);
+        assert_eq!(a.resident_len(), 2);
+        assert_eq!(a.peak_len(), 8);
+    }
+}

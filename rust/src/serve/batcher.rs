@@ -45,8 +45,9 @@
 //! triggered a preemptive flush — so downstream scheduling is exact and
 //! deterministic.
 
+use super::events::{EventHeap, SimEventKind};
 use crate::obs::{Event, EventKind};
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 /// Per-invocation overhead charged once per batch (cycles): scheduler
 /// entry, arena setup and DMA programming — the fixed cost dynamic
@@ -137,8 +138,6 @@ pub struct PendingRequest {
     pub priority: u8,
     /// Absolute SLO deadline (timeline cycles; `u64::MAX` = none).
     pub deadline: u64,
-    /// Input image (NHWC flat).
-    pub image: Vec<f32>,
 }
 
 /// A flushed batch, ready to execute at `ready`.
@@ -186,6 +185,21 @@ pub struct Batcher {
     /// direct users of the batcher (the legacy-pipeline pin) pay nothing.
     record: bool,
     events: Vec<Event>,
+    /// Flush due-index: a lazily-deleted min-heap of `(cycle, key)`
+    /// entries scheduling the next moment each key *may* have a due
+    /// batch (front window expiry, a filling arrival, an urgent
+    /// preemption). [`pop_due`](Batcher::pop_due) drains entries at or
+    /// before `now` instead of scanning every key; a conservative
+    /// (early) entry re-validates against the live queue and re-arms.
+    due: EventHeap,
+    /// When false, [`pop_due`](Batcher::pop_due) runs the pre-event-loop
+    /// full-key scan — kept as the `legacy_loop` baseline the
+    /// equivalence tests pin the indexed path against.
+    indexed: bool,
+    /// Request ids whose arena payload slot can be reclaimed: every
+    /// shed arrival and evicted victim lands here. Drained by the
+    /// replay loop via [`drain_reclaimed`](Batcher::drain_reclaimed).
+    reclaimed: Vec<usize>,
 }
 
 impl Batcher {
@@ -204,7 +218,18 @@ impl Batcher {
             splits: 0,
             record: false,
             events: Vec::new(),
+            due: EventHeap::new(),
+            indexed: true,
+            reclaimed: Vec::new(),
         }
+    }
+
+    /// Select the flush-scan strategy: indexed (the event-heap
+    /// due-index, default) or the legacy linear pass over every key.
+    /// Both produce identical batches at identical cycles — the indexed
+    /// path only skips keys that provably have nothing due.
+    pub fn set_indexed(&mut self, on: bool) {
+        self.indexed = on;
     }
 
     /// Enable/disable lifecycle-event logging (`Admit`/`Evict`/`Shed`/
@@ -265,6 +290,13 @@ impl Batcher {
         if r.deadline != u64::MAX {
             self.shed_deadline_by_class[c] += 1;
         }
+        self.reclaimed.push(r.id);
+    }
+
+    /// Ids of requests shed/evicted since the last drain — their arena
+    /// payload slots will never be executed and can be released.
+    pub fn drain_reclaimed(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.reclaimed)
     }
 
     /// Lowest-priority queued request strictly below `priority` —
@@ -355,12 +387,30 @@ impl Batcher {
                 }
             }
         }
+        let mut due_now = false;
         if self.cfg.preempt && self.window_doomed(&req) {
             let u = &mut self.urgent[req.key_idx];
             *u = Some(u.map_or(req.priority, |p| p.max(req.priority)));
+            due_now = true;
         }
         self.log_req(req.arrival, &req, EventKind::Admit);
-        self.queues[req.key_idx].push_back(req);
+        let key_idx = req.key_idx;
+        let arrival = req.arrival;
+        let was_empty = self.queues[key_idx].is_empty();
+        self.queues[key_idx].push_back(req);
+        // Keep the due-index invariant: every key that may flush holds
+        // an entry at or before the cycle its condition first holds —
+        // a fresh window opening (front expiry), a filling arrival, or
+        // an urgent preemption (both due immediately).
+        if was_empty {
+            self.due.push(
+                arrival.saturating_add(self.cfg.max_wait_cycles),
+                SimEventKind::WindowExpiry(key_idx),
+            );
+        }
+        if due_now || self.queues[key_idx].len() >= self.cfg.max_batch {
+            self.due.push(arrival, SimEventKind::WindowExpiry(key_idx));
+        }
         debug_assert!(self.queued() <= self.cfg.max_queue, "bounded queue invariant");
         true
     }
@@ -387,60 +437,93 @@ impl Batcher {
     /// (a window-doomed member's class flushes immediately at `now`,
     /// leaving lower-class members queued). Batches come out in key
     /// order, oldest first.
+    ///
+    /// The indexed path (default) drains the due-index instead of
+    /// scanning every key: entries at or before `now` name the only
+    /// keys whose flush condition can hold (the invariant [`offer`]
+    /// (Batcher::offer) and the post-flush re-arm maintain), visited in
+    /// ascending key order — the same order, batches and cycles as the
+    /// full scan.
     pub fn pop_due(&mut self, now: u64) -> Vec<ReadyBatch> {
         let mut out = Vec::new();
-        for key_idx in 0..self.queues.len() {
-            if let Some(prio) = self.urgent[key_idx].take() {
-                let mut taken = Vec::new();
-                let mut kept = VecDeque::new();
-                for r in self.queues[key_idx].drain(..) {
-                    if r.priority >= prio && taken.len() < self.cfg.max_batch {
-                        taken.push(r);
-                    } else {
-                        kept.push_back(r);
-                    }
-                }
-                self.queues[key_idx] = kept;
-                if !taken.is_empty() {
-                    self.preempt_flushes += 1;
-                    let batch = ReadyBatch {
-                        key_idx,
-                        ready: now,
-                        requests: taken,
-                    };
-                    self.log_flush(
-                        &batch,
-                        EventKind::FlushPreempt {
-                            batch_size: batch.requests.len(),
-                        },
-                    );
-                    out.push(batch);
-                }
+        if !self.indexed {
+            for key_idx in 0..self.queues.len() {
+                self.flush_key_due(key_idx, now, &mut out);
             }
-            loop {
-                let q = &self.queues[key_idx];
-                let full = q.len() >= self.cfg.max_batch;
-                let expired = q
-                    .front()
-                    .map(|r| r.arrival + self.cfg.max_wait_cycles <= now)
-                    .unwrap_or(false);
-                if !full && !expired {
-                    break;
-                }
-                let take = q.len().min(self.cfg.max_batch);
-                let requests: Vec<PendingRequest> =
-                    self.queues[key_idx].drain(..take).collect();
-                let ready = self.slice_ready(&requests);
-                let batch = ReadyBatch {
-                    key_idx,
-                    ready,
-                    requests,
-                };
-                self.log_flush(&batch, Self::flush_kind(&batch, self.cfg.max_batch));
-                out.push(batch);
+            return out;
+        }
+        let mut due_keys: BTreeSet<usize> = BTreeSet::new();
+        while let Some(ev) = self.due.pop_due(now) {
+            if let SimEventKind::WindowExpiry(k) = ev.kind {
+                due_keys.insert(k);
+            }
+        }
+        for key_idx in due_keys {
+            self.flush_key_due(key_idx, now, &mut out);
+            // Re-arm whatever stayed queued (a conservative early entry,
+            // or preemption leftovers) at its front's window expiry.
+            if let Some(front) = self.queues[key_idx].front() {
+                self.due.push(
+                    front.arrival.saturating_add(self.cfg.max_wait_cycles),
+                    SimEventKind::WindowExpiry(key_idx),
+                );
             }
         }
         out
+    }
+
+    /// Flush one key's due batches into `out` — the per-key body shared
+    /// verbatim by the indexed and full-scan paths.
+    fn flush_key_due(&mut self, key_idx: usize, now: u64, out: &mut Vec<ReadyBatch>) {
+        if let Some(prio) = self.urgent[key_idx].take() {
+            let mut taken = Vec::new();
+            let mut kept = VecDeque::new();
+            for r in self.queues[key_idx].drain(..) {
+                if r.priority >= prio && taken.len() < self.cfg.max_batch {
+                    taken.push(r);
+                } else {
+                    kept.push_back(r);
+                }
+            }
+            self.queues[key_idx] = kept;
+            if !taken.is_empty() {
+                self.preempt_flushes += 1;
+                let batch = ReadyBatch {
+                    key_idx,
+                    ready: now,
+                    requests: taken,
+                };
+                self.log_flush(
+                    &batch,
+                    EventKind::FlushPreempt {
+                        batch_size: batch.requests.len(),
+                    },
+                );
+                out.push(batch);
+            }
+        }
+        loop {
+            let q = &self.queues[key_idx];
+            let full = q.len() >= self.cfg.max_batch;
+            let expired = q
+                .front()
+                .map(|r| r.arrival + self.cfg.max_wait_cycles <= now)
+                .unwrap_or(false);
+            if !full && !expired {
+                break;
+            }
+            let take = q.len().min(self.cfg.max_batch);
+            let requests: Vec<PendingRequest> =
+                self.queues[key_idx].drain(..take).collect();
+            let ready = self.slice_ready(&requests);
+            let batch = ReadyBatch {
+                key_idx,
+                ready,
+                requests,
+            };
+            self.log_flush(&batch, Self::flush_kind(&batch, self.cfg.max_batch));
+            out.push(batch);
+        }
     }
 
     /// Flush everything still queued (end of trace), each remaining
@@ -548,7 +631,6 @@ mod tests {
             arrival,
             priority: 0,
             deadline: u64::MAX,
-            image: Vec::new(),
         }
     }
 
@@ -952,5 +1034,94 @@ mod tests {
         assert_eq!(class_index(1), 1, "standard");
         assert_eq!(class_index(0), 2, "batch");
         assert_eq!(class_index(9), 0, "priorities clamp to interactive");
+    }
+
+    // ------------------------------------------------------------------
+    // Event-loop due-index (indexed pop_due)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn indexed_pop_due_matches_the_full_key_scan() {
+        // The same offer/pop sequence driven through the due-index and
+        // the legacy full-key scan: identical batches, ready cycles and
+        // member order at every step — the batcher-level half of the
+        // event-loop equivalence pin. The sequence exercises full
+        // flushes, window expiries, urgent preemption and class-aware
+        // eviction.
+        let mk = || {
+            Batcher::new(
+                BatcherCfg {
+                    admission: AdmissionKind::ClassAware,
+                    preempt: true,
+                    ..cfg(3, 1_000, 4)
+                },
+                3,
+            )
+        };
+        let mut fast = mk();
+        let mut scan = mk();
+        scan.set_indexed(false);
+        fast.set_est_cost(1, 500, 200);
+        scan.set_est_cost(1, 500, 200);
+        let offers = [
+            classed(0, 0, 10, 0, u64::MAX),
+            classed(1, 1, 20, 0, u64::MAX),
+            classed(2, 0, 30, 1, 50_000),
+            classed(3, 1, 40, 2, 900), // window-doomed on key 1: urgent
+            classed(4, 0, 45, 0, u64::MAX), // fills key 0 (max_batch 3)
+            classed(5, 2, 60, 2, 70_000),
+            classed(6, 2, 70, 0, u64::MAX),
+            classed(7, 2, 80, 0, u64::MAX),
+            classed(8, 0, 1_500, 1, 90_000), // past earlier window expiries
+        ];
+        let sig = |b: &[ReadyBatch]| -> Vec<(usize, u64, Vec<usize>)> {
+            b.iter()
+                .map(|x| (x.key_idx, x.ready, x.requests.iter().map(|r| r.id).collect()))
+                .collect()
+        };
+        for r in offers {
+            let now = r.arrival;
+            assert_eq!(sig(&fast.pop_due(now)), sig(&scan.pop_due(now)));
+            assert_eq!(fast.offer(r.clone()), scan.offer(r));
+            assert_eq!(sig(&fast.pop_due(now)), sig(&scan.pop_due(now)));
+        }
+        assert_eq!(sig(&fast.pop_due(5_000)), sig(&scan.pop_due(5_000)));
+        assert_eq!(sig(&fast.drain_all()), sig(&scan.drain_all()));
+        assert_eq!((fast.queued(), scan.queued()), (0, 0));
+        assert_eq!(
+            (fast.shed, fast.shed_by_class, fast.preempt_flushes, fast.splits),
+            (scan.shed, scan.shed_by_class, scan.preempt_flushes, scan.splits)
+        );
+    }
+
+    #[test]
+    fn due_index_survives_front_eviction() {
+        // Class-aware eviction can remove a queue's oldest member, so
+        // the index entry armed for the old front goes conservative
+        // (fires early). The early firing must flush nothing and re-arm
+        // at the surviving front's window expiry — which must then
+        // flush exactly on time.
+        let mut b = Batcher::new(
+            BatcherCfg {
+                admission: AdmissionKind::ClassAware,
+                ..cfg(8, 1_000, 2)
+            },
+            1,
+        );
+        assert!(b.offer(classed(0, 0, 100, 0, u64::MAX)));
+        assert!(b.offer(classed(1, 0, 400, 1, u64::MAX)));
+        // Full queue: the interactive arrival evicts id 0 — the front.
+        assert!(b.offer(classed(2, 0, 500, 2, u64::MAX)));
+        assert_eq!(b.shed, 1);
+        assert!(
+            b.pop_due(1_100).is_empty(),
+            "the evicted front's entry is conservative: nothing is due"
+        );
+        assert!(b.pop_due(1_399).is_empty(), "survivor's window still open");
+        let due = b.pop_due(1_400);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].ready, 1_400, "flushes at the surviving front's expiry");
+        let ids: Vec<usize> = due[0].requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2]);
     }
 }

@@ -1,0 +1,223 @@
+//! The simulation event heap: one ordered queue of virtual-time events
+//! driving the replay loop.
+//!
+//! Every source of "something happens at cycle T" in the serving
+//! simulator — request arrivals, fleet-lifecycle events (churn,
+//! autoscaling), batch-window expiries inside the [`Batcher`]
+//! (super::Batcher) and batch finishes inside the [`Fleet`]
+//! (super::Fleet) — is represented as a [`SimEvent`] and ordered by one
+//! rule: ascending virtual time, then a kind rank that reproduces the
+//! legacy dispatch order (fleet-lifecycle events apply *before* the
+//! arrival sharing their cycle), then a stable sequence number so
+//! same-cycle events of the same kind keep their source order (burst
+//! arrivals, pre-sorted churn streams).
+//!
+//! The heap is an *index*, not a re-scheduler: decision points (batch
+//! flush commits, placements, autoscaler reactions) stay pinned at the
+//! exact virtual times the linear-scan replay used, so every report is
+//! reproduced bit-for-bit. What changes is the cost of finding the next
+//! due event: O(log n) heap operations instead of a linear pass over
+//! every device and queue per step. Entries are lazily deleted — a
+//! stale entry (its queue already flushed, its batch already resolved)
+//! pops, fails its due-check against live state, and is dropped or
+//! replaced with a tightened re-estimate. Conservative (early) entries
+//! are therefore always safe; *late* entries never happen because every
+//! state mutation that can pull an event earlier pushes a fresh entry.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// What a [`SimEvent`] fires. The payload is an index into the owning
+/// structure's tables: trace position, fleet-event position, batcher
+/// key, or device slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimEventKind {
+    /// A fleet-lifecycle event (join/leave/crash/throttle/restore/drain)
+    /// at `fleet_events[idx]`. Ranks *before* an arrival at the same
+    /// cycle — the legacy loop applied every lifecycle event with
+    /// `at <= arrival` before processing the arrival.
+    FleetLifecycle(usize),
+    /// Request arrival: the `idx`-th request drawn from the trace
+    /// source. The replay keeps at most one arrival in the heap (the
+    /// next undrawn one), so requests are processed in trace order even
+    /// for pathological unsorted inputs — exactly like the sequential
+    /// scan it replaces.
+    Arrival(usize),
+    /// A batching window may expire for batcher key `idx`. Owned by the
+    /// batcher's due-index; conservative entries re-arm on pop.
+    WindowExpiry(usize),
+    /// An in-flight batch on device `idx` reaches its finish cycle.
+    /// Owned by the fleet's wake index.
+    BatchFinish(usize),
+}
+
+impl SimEventKind {
+    /// Tie rank at equal virtual time. Mirrors the legacy interleave:
+    /// lifecycle events apply first, then arrivals; expiry/finish checks
+    /// happen at those same boundaries.
+    fn rank(&self) -> u8 {
+        match self {
+            SimEventKind::FleetLifecycle(_) => 0,
+            SimEventKind::Arrival(_) => 1,
+            SimEventKind::WindowExpiry(_) => 2,
+            SimEventKind::BatchFinish(_) => 3,
+        }
+    }
+
+    fn payload(&self) -> usize {
+        match self {
+            SimEventKind::FleetLifecycle(i)
+            | SimEventKind::Arrival(i)
+            | SimEventKind::WindowExpiry(i)
+            | SimEventKind::BatchFinish(i) => *i,
+        }
+    }
+}
+
+/// One scheduled simulation event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimEvent {
+    /// Virtual cycle the event fires.
+    pub at: u64,
+    pub kind: SimEventKind,
+    /// Stable sequence number breaking (at, kind) ties in source order.
+    pub seq: u64,
+}
+
+impl SimEvent {
+    fn key(&self) -> (u64, u8, u64, usize) {
+        (self.at, self.kind.rank(), self.seq, self.kind.payload())
+    }
+}
+
+impl Ord for SimEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+impl PartialOrd for SimEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A min-heap of [`SimEvent`]s with lazy deletion.
+///
+/// `BinaryHeap` is a max-heap; entries are wrapped in [`Reverse`] so
+/// [`pop`](EventHeap::pop) yields the earliest event. Sequence numbers
+/// are handed out by [`push`](EventHeap::push) in call order, so two
+/// same-cycle same-kind events pop in the order they were scheduled.
+#[derive(Debug, Default)]
+pub struct EventHeap {
+    heap: BinaryHeap<Reverse<SimEvent>>,
+    next_seq: u64,
+}
+
+impl EventHeap {
+    pub fn new() -> EventHeap {
+        EventHeap {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+        }
+    }
+
+    /// Schedule `kind` at cycle `at`. Returns the assigned sequence
+    /// number (monotone per heap).
+    pub fn push(&mut self, at: u64, kind: SimEventKind) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(SimEvent { at, kind, seq }));
+        seq
+    }
+
+    /// Earliest scheduled event, if any.
+    pub fn peek(&self) -> Option<&SimEvent> {
+        self.heap.peek().map(|Reverse(e)| e)
+    }
+
+    /// Cycle of the earliest scheduled event.
+    pub fn next_at(&self) -> Option<u64> {
+        self.peek().map(|e| e.at)
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<SimEvent> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    /// Pop the earliest event iff it fires at or before `now` — the
+    /// lazy-deletion workhorse: callers drain due entries, re-validate
+    /// each against live state, and re-arm survivors.
+    pub fn pop_due(&mut self, now: u64) -> Option<SimEvent> {
+        if self.peek().is_some_and(|e| e.at <= now) {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Drop every entry (end of replay, or a structural reset that
+    /// invalidates all scheduled estimates).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_then_rank_then_seq_order() {
+        let mut h = EventHeap::new();
+        h.push(50, SimEventKind::Arrival(0));
+        h.push(10, SimEventKind::Arrival(1));
+        h.push(10, SimEventKind::FleetLifecycle(0));
+        h.push(10, SimEventKind::WindowExpiry(3));
+        let a = h.pop().unwrap();
+        assert_eq!(
+            (a.at, a.kind),
+            (10, SimEventKind::FleetLifecycle(0)),
+            "lifecycle ranks before an arrival at the same cycle"
+        );
+        assert_eq!(h.pop().unwrap().kind, SimEventKind::Arrival(1));
+        assert_eq!(h.pop().unwrap().kind, SimEventKind::WindowExpiry(3));
+        assert_eq!(h.pop().unwrap().at, 50);
+        assert!(h.pop().is_none());
+    }
+
+    #[test]
+    fn same_key_events_keep_push_order() {
+        let mut h = EventHeap::new();
+        for i in 0..5 {
+            h.push(7, SimEventKind::FleetLifecycle(i));
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| h.pop())
+            .map(|e| e.kind.payload())
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4], "seq preserves source order");
+    }
+
+    #[test]
+    fn pop_due_respects_the_deadline() {
+        let mut h = EventHeap::new();
+        h.push(100, SimEventKind::WindowExpiry(0));
+        h.push(200, SimEventKind::WindowExpiry(1));
+        assert!(h.pop_due(99).is_none(), "nothing due yet");
+        assert_eq!(h.pop_due(100).unwrap().at, 100);
+        assert!(h.pop_due(150).is_none(), "next entry still in the future");
+        assert_eq!(h.next_at(), Some(200));
+        h.clear();
+        assert!(h.is_empty());
+        assert_eq!(h.len(), 0);
+    }
+}

@@ -71,8 +71,32 @@
 //! deferred-commit (steal) mode — the replay loop forces it whenever a
 //! trace carries fleet events — and with no events every gate is
 //! trivially open, which preserves the bit-for-bit pin.
+//!
+//! # Event-indexed bookkeeping
+//!
+//! Two hot queries used to rescan every device per replay step; both
+//! are now answered from incremental indices that the mutation paths
+//! keep exact, so the indexed answers are *provably identical* to the
+//! scans (the `--legacy-loop` replay still runs the scans as the
+//! baseline):
+//!
+//! * [`next_wake`](Fleet::next_wake) reads a `BTreeMap<(finish, device),
+//!   count>` multiset mirroring every device's in-flight finish times —
+//!   maintained by the single choke point that rewrites a device's
+//!   `inflight` vector — and walks it in ascending order from `now`,
+//!   taking the first entry whose device passes the live/SRAM filter.
+//! * [`advance`](Fleet::advance) keeps a conservative *horizon*: the
+//!   earliest cycle at which any pending batch could start or any
+//!   started batch could finish. Calls strictly below the horizon are
+//!   proven no-ops and return immediately; every queue / `free_at` /
+//!   lifecycle mutation invalidates the cache.
+//!
+//! The fleet-wide energy total the autoscaler reads every arrival
+//! ([`total_joules`](Fleet::total_joules)) is cached the same way:
+//! recomputed — by the exact device-order summation the scan used —
+//! only after a commit, resolution or crash dirties a counter.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use super::batcher::BATCH_OVERHEAD_CYCLES;
 use crate::mcu::Counter;
@@ -342,6 +366,27 @@ pub struct Fleet {
     pub migration_log_cap: usize,
     /// Migration-log entries evicted because the ring was full.
     pub migration_log_dropped: u64,
+    /// Use the incremental wake index for [`next_wake`](Fleet::next_wake)
+    /// (default). `false` re-enables the per-device linear scan — the
+    /// `--legacy-loop` baseline. Both answers are identical; the index
+    /// is maintained either way, so the flag can toggle at any time.
+    pub indexed: bool,
+    /// Exact multiset mirror of every device's `inflight` vector:
+    /// `(finish cycle, device) -> multiplicity`. Maintained solely by
+    /// [`set_inflight`](Fleet::set_inflight).
+    wake_index: BTreeMap<(u64, usize), u32>,
+    /// One `(busy_until, device)` entry per device, in the exact
+    /// `(busy_until, id)` order `LeastLoaded` minimizes over. Maintained
+    /// solely by [`set_busy_until`](Fleet::set_busy_until).
+    by_busy: BTreeSet<(u64, usize)>,
+    /// Conservative no-op horizon for [`advance`](Fleet::advance):
+    /// `Some(h)` proves `advance(now)` changes nothing for `now < h`.
+    /// `None` = a queue/`free_at`/lifecycle input changed, recompute.
+    advance_horizon: Option<u64>,
+    /// Cached [`total_joules`](Fleet::total_joules), valid when
+    /// `!energy_dirty`.
+    energy_cache: f64,
+    energy_dirty: bool,
 }
 
 /// Default capacity of the fleet's migration ring.
@@ -351,18 +396,26 @@ impl Fleet {
     pub fn new(cfgs: Vec<DeviceCfg>, max_queue_depth: usize) -> Fleet {
         assert!(!cfgs.is_empty(), "fleet needs at least one device");
         assert!(max_queue_depth >= 1, "queue depth cap must be >= 1");
+        let devices: Vec<Device> = cfgs
+            .into_iter()
+            .enumerate()
+            .map(|(i, cfg)| Device::new(i, cfg))
+            .collect();
+        let by_busy = devices.iter().map(|d| (d.busy_until, d.id)).collect();
         Fleet {
-            devices: cfgs
-                .into_iter()
-                .enumerate()
-                .map(|(i, cfg)| Device::new(i, cfg))
-                .collect(),
+            devices,
             max_queue_depth,
             steal: false,
             resolutions: Vec::new(),
             migration_log: VecDeque::new(),
             migration_log_cap: MIGRATION_LOG_CAP,
             migration_log_dropped: 0,
+            indexed: true,
+            wake_index: BTreeMap::new(),
+            by_busy,
+            advance_horizon: None,
+            energy_cache: 0.0,
+            energy_dirty: true,
         }
     }
 
@@ -402,13 +455,79 @@ impl Fleet {
     /// devices whose SRAM could host the model — where backpressure
     /// resumes when every eligible device is saturated. (A down or
     /// draining device's completions can never make it eligible, so they
-    /// are no wake anchor.)
+    /// are no wake anchor.) Answered from the wake index unless
+    /// [`indexed`](Fleet::indexed) is off; both paths are identical.
     pub fn next_wake(&self, now: u64, peak_sram: usize) -> Option<u64> {
+        if self.indexed {
+            self.next_wake_indexed(now, peak_sram)
+        } else {
+            self.next_wake_scan(now, peak_sram)
+        }
+    }
+
+    /// The pre-index `next_wake`: a linear pass over every device's
+    /// in-flight vector. Kept as the `--legacy-loop` baseline and the
+    /// equivalence oracle for the wake index.
+    pub fn next_wake_scan(&self, now: u64, peak_sram: usize) -> Option<u64> {
         self.devices
             .iter()
             .filter(|d| d.is_live() && peak_sram <= d.cfg.sram_bytes)
             .filter_map(|d| d.next_free(now))
             .min()
+    }
+
+    /// `next_wake` off the wake index: ascending `(finish, device)`
+    /// walk starting strictly after `now`, first entry whose device is
+    /// a valid anchor. The index mirrors `inflight` exactly (stale
+    /// finishes at or before `now` are excluded by the range bound, not
+    /// by deletion), so the first passing entry carries the same
+    /// minimal finish the scan would compute.
+    fn next_wake_indexed(&self, now: u64, peak_sram: usize) -> Option<u64> {
+        use std::ops::Bound;
+        self.wake_index
+            .range((Bound::Excluded((now, usize::MAX)), Bound::Unbounded))
+            .find(|&(&(_, dev), _)| {
+                let d = &self.devices[dev];
+                d.is_live() && peak_sram <= d.cfg.sram_bytes
+            })
+            .map(|(&(finish, _), _)| finish)
+    }
+
+    /// The single choke point that moves a device's `busy_until`,
+    /// keeping the `by_busy` order an exact mirror.
+    fn set_busy_until(&mut self, idx: usize, v: u64) {
+        let old = self.devices[idx].busy_until;
+        if old != v {
+            self.by_busy.remove(&(old, idx));
+            self.by_busy.insert((v, idx));
+            self.devices[idx].busy_until = v;
+        }
+    }
+
+    /// Device ids in ascending `(busy_until, id)` order — the exact key
+    /// `LeastLoaded` minimizes, so the first eligible id in this walk
+    /// *is* its pick.
+    pub fn by_busy_order(&self) -> impl Iterator<Item = usize> + '_ {
+        self.by_busy.iter().map(|&(_, i)| i)
+    }
+
+    /// The single choke point that rewrites a device's in-flight finish
+    /// set, keeping the wake index an exact multiset mirror.
+    fn set_inflight(&mut self, idx: usize, inflight: Vec<u64>) {
+        for &f in &self.devices[idx].inflight {
+            if let Some(c) = self.wake_index.get_mut(&(f, idx)) {
+                *c -= 1;
+                if *c == 0 {
+                    self.wake_index.remove(&(f, idx));
+                }
+            } else {
+                debug_assert!(false, "wake index lost an inflight entry");
+            }
+        }
+        for &f in &inflight {
+            *self.wake_index.entry((f, idx)).or_insert(0) += 1;
+        }
+        self.devices[idx].inflight = inflight;
     }
 
     /// Commit `work` to device `idx` at virtual time `now` (chosen by a
@@ -427,13 +546,15 @@ impl Fleet {
         let timeline_cycles = d.cfg.to_timeline(device_cycles);
         let start = now.max(d.busy_until);
         let finish = start + timeline_cycles;
-        d.busy_until = finish;
-        d.inflight.retain(|&f| f > now);
-        d.inflight.push(finish);
         d.counter.merge(work.counter);
         d.busy_cycles += timeline_cycles;
         d.batches += 1;
         d.images += work.images;
+        let mut inflight: Vec<u64> = d.inflight.iter().copied().filter(|&f| f > now).collect();
+        inflight.push(finish);
+        self.set_busy_until(idx, finish);
+        self.set_inflight(idx, inflight);
+        self.energy_dirty = true;
         Dispatch {
             device: idx,
             start,
@@ -477,14 +598,18 @@ impl Fleet {
     }
 
     /// Rebuild a device's projected timeline (`busy_until`, `inflight`)
-    /// from its resolved backlog plus pending queue (steal mode).
+    /// from its resolved backlog plus pending queue (steal mode). Also
+    /// invalidates the advance horizon: every caller just mutated a
+    /// horizon input (queue, `free_at`, ready times, or liveness).
     fn recompute_projection(&mut self, idx: usize) {
+        self.advance_horizon = None;
         let finishes = self.devices[idx].projected_finishes();
-        let d = &mut self.devices[idx];
-        d.busy_until = finishes.last().copied().unwrap_or(d.free_at);
+        let d = &self.devices[idx];
+        let busy_until = finishes.last().copied().unwrap_or(d.free_at);
         let mut inflight: Vec<u64> = d.resolved_open.iter().map(|&(_, f)| f).collect();
         inflight.extend(&finishes);
-        d.inflight = inflight;
+        self.set_busy_until(idx, busy_until);
+        self.set_inflight(idx, inflight);
     }
 
     /// [`recompute_projection`](Fleet::recompute_projection) guarded for
@@ -499,8 +624,16 @@ impl Fleet {
     /// Resolve every pending batch whose start time has passed by `now`:
     /// a started batch is pinned to its device, priced with that
     /// device's cycle model, and accounted. No-op outside steal mode.
+    ///
+    /// Calls strictly below the cached horizon return immediately: no
+    /// pending front can start and no open resolution can finish at or
+    /// before such a `now`, so the pop loop, the `resolved_open` prune
+    /// and the (idempotent) reprojection would all change nothing.
     pub fn advance(&mut self, now: u64) {
         if !self.steal {
+            return;
+        }
+        if self.advance_horizon.is_some_and(|h| now < h) {
             return;
         }
         for i in 0..self.devices.len() {
@@ -535,10 +668,28 @@ impl Fleet {
                     )
                 };
                 self.resolutions[ticket] = Some(res);
+                self.energy_dirty = true;
             }
             self.devices[i].resolved_open.retain(|&(_, f)| f > now);
             self.recompute_projection(i);
         }
+        self.advance_horizon = Some(self.compute_advance_horizon());
+    }
+
+    /// Earliest cycle at which `advance` could have any effect: the
+    /// minimum over all devices of the front pending batch's start time
+    /// (`ready.max(free_at)`) and every open resolution's finish.
+    fn compute_advance_horizon(&self) -> u64 {
+        let mut h = u64::MAX;
+        for d in &self.devices {
+            if let Some(front) = d.queue.front() {
+                h = h.min(front.ready.max(d.free_at));
+            }
+            for &(_, f) in &d.resolved_open {
+                h = h.min(f);
+            }
+        }
+        h
     }
 
     /// Projected in-situ finish of the pending batch at `pos` in device
@@ -638,6 +789,7 @@ impl Fleet {
         let id = self.devices.len();
         let mut d = Device::new(id, cfg);
         d.up = false;
+        self.by_busy.insert((d.busy_until, id));
         self.devices.push(d);
         id
     }
@@ -655,7 +807,9 @@ impl Fleet {
         d.draining = false;
         d.cfg.clock_hz = d.base_clock_hz;
         d.free_at = d.free_at.max(now);
-        d.busy_until = d.busy_until.max(now);
+        let busy_until = d.busy_until.max(now);
+        self.set_busy_until(idx, busy_until);
+        self.advance_horizon = None;
         self.reproject(idx);
     }
 
@@ -700,6 +854,7 @@ impl Fleet {
         d.up = false;
         d.draining = false;
         d.free_at = d.free_at.min(now);
+        self.energy_dirty = true;
         self.reproject(idx);
         cancelled
     }
@@ -780,6 +935,19 @@ impl Fleet {
     /// Total migrations across the fleet.
     pub fn migrations(&self) -> u64 {
         self.devices.iter().map(|d| d.migrations).sum()
+    }
+
+    /// Fleet-wide energy spent so far — the autoscaler's budget signal,
+    /// read every arrival. Cached between counter mutations (commits,
+    /// resolutions, crash rollbacks); the recomputation is the exact
+    /// device-order summation the per-arrival scan performed, so the
+    /// cached value is bit-identical to it.
+    pub fn total_joules(&mut self) -> f64 {
+        if self.energy_dirty {
+            self.energy_cache = self.devices.iter().map(|d| d.joules()).sum();
+            self.energy_dirty = false;
+        }
+        self.energy_cache
     }
 
     /// Take the steal log accumulated since the last drain:
@@ -1203,6 +1371,152 @@ mod tests {
         );
         assert!(fleet.drain_migrations().is_empty());
         assert_eq!(fleet.migration_log_dropped, 1, "draining does not reset the counter");
+    }
+
+    // ------------------------------------------------------------------
+    // Event-indexed bookkeeping (wake index, advance horizon, energy)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn indexed_next_wake_matches_the_scan_in_eager_mode() {
+        let ctr = cheap_counter();
+        let mut fleet = Fleet::new(
+            vec![DeviceCfg::stm32f746(), DeviceCfg::stm32f446(), DeviceCfg::stm32f746()],
+            8,
+        );
+        let mut probes = vec![0u64];
+        for i in 0..12u64 {
+            let d = fleet.commit((i % 3) as usize, i * 1_000, &work(i * 1_000, &ctr, &[]));
+            probes.extend([d.finish.saturating_sub(1), d.finish, d.finish + 1]);
+        }
+        fleet.devices[1].draining = true;
+        for &now in &probes {
+            for sram in [1024usize, 200 * 1024, 4 << 20] {
+                assert_eq!(
+                    fleet.next_wake(now, sram),
+                    fleet.next_wake_scan(now, sram),
+                    "now={now} sram={sram}"
+                );
+            }
+        }
+        // The busy-order index is exactly the (busy_until, id) sort.
+        let mut expect: Vec<usize> = (0..fleet.len()).collect();
+        expect.sort_by_key(|&i| (fleet.devices[i].busy_until, i));
+        assert_eq!(fleet.by_busy_order().collect::<Vec<_>>(), expect);
+        // The legacy flag routes the public entry point to the scan.
+        fleet.indexed = false;
+        assert_eq!(fleet.next_wake(0, 1024), fleet.next_wake_scan(0, 1024));
+    }
+
+    #[test]
+    fn wake_index_survives_churn_and_matches_the_scan() {
+        let ctr = cheap_counter();
+        let cost = DeviceCfg::stm32f746().timeline_cost(&ctr);
+        let mut fleet = Fleet::new(
+            vec![DeviceCfg::stm32f746(), DeviceCfg::stm32f446(), DeviceCfg::stm32f746()],
+            8,
+        );
+        fleet.steal = true;
+        let probes: Vec<u64> = (0..12).map(|i| i * cost / 3).collect();
+        let check = |fleet: &Fleet, stage: &str| {
+            for &now in &probes {
+                for sram in [1024usize, 200 * 1024] {
+                    assert_eq!(
+                        fleet.next_wake(now, sram),
+                        fleet.next_wake_scan(now, sram),
+                        "{stage}: now={now} sram={sram}"
+                    );
+                }
+            }
+        };
+        for i in 0..6u64 {
+            fleet.commit((i % 3) as usize, i * 10, &work(i * 10, &ctr, &[]));
+        }
+        check(&fleet, "after commits");
+        fleet.advance(cost / 2);
+        fleet.rebalance(cost / 2);
+        check(&fleet, "after advance+rebalance");
+        fleet.device_crash(1, cost / 2);
+        check(&fleet, "after crash");
+        fleet.device_drain(2, cost);
+        check(&fleet, "after drain");
+        fleet.device_join(1, 2 * cost);
+        fleet.device_throttle(0, 54_000_000);
+        check(&fleet, "after join+throttle");
+        fleet.finalize();
+        check(&fleet, "after finalize");
+    }
+
+    #[test]
+    fn sparse_and_dense_advance_schedules_resolve_identically() {
+        // The horizon early-exit must make extra advance() calls free:
+        // a replay that advances at every probe and one that advances
+        // only at the end pin every batch to the same resolution.
+        let ctr = cheap_counter();
+        let cost = DeviceCfg::stm32f746().timeline_cost(&ctr);
+        let build = || {
+            let mut f = Fleet::homogeneous(2, DeviceCfg::stm32f746(), 8);
+            f.steal = true;
+            let mut tickets = Vec::new();
+            for i in 0..5u64 {
+                let d = f.commit((i % 2) as usize, i * cost / 4, &work(i * cost / 4, &ctr, &[]));
+                tickets.push(d.ticket.unwrap());
+            }
+            (f, tickets)
+        };
+        let (mut dense, tickets) = build();
+        let (mut sparse, tickets2) = build();
+        assert_eq!(tickets, tickets2);
+        for step in 0..40u64 {
+            dense.advance(step * cost / 5);
+        }
+        dense.finalize();
+        sparse.finalize();
+        for &t in &tickets {
+            let a = dense.resolution(t).unwrap();
+            let b = sparse.resolution(t).unwrap();
+            assert_eq!(
+                (a.device, a.start, a.finish, a.timeline_cycles),
+                (b.device, b.start, b.finish, b.timeline_cycles),
+                "ticket {t}"
+            );
+        }
+        for (da, db) in dense.devices.iter().zip(&sparse.devices) {
+            assert_eq!(da.batches, db.batches);
+            assert_eq!(da.busy_cycles, db.busy_cycles);
+            assert_eq!(da.busy_until, db.busy_until);
+        }
+    }
+
+    #[test]
+    fn cached_energy_total_is_bit_identical_to_the_scan() {
+        let ctr = cheap_counter();
+        let mut fleet = Fleet::homogeneous(2, DeviceCfg::stm32f746(), 8);
+        assert_eq!(fleet.total_joules(), 0.0, "idle fleet spends nothing");
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        let manual: f64 = fleet.devices.iter().map(|d| d.joules()).sum();
+        assert_eq!(fleet.total_joules(), manual, "recompute is the exact scan");
+        assert_eq!(fleet.total_joules(), manual, "cached read is stable");
+        fleet.commit(1, 0, &work(0, &ctr, &[]));
+        let manual2: f64 = fleet.devices.iter().map(|d| d.joules()).sum();
+        assert_eq!(fleet.total_joules(), manual2);
+        assert!(manual2 > manual, "energy accumulates");
+
+        // Steal mode: commits spend nothing until resolved; a crash
+        // rollback re-dirties the cache.
+        let mut fleet = Fleet::homogeneous(1, DeviceCfg::stm32f746(), 8);
+        fleet.steal = true;
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        fleet.commit(0, 0, &work(0, &ctr, &[]));
+        assert_eq!(fleet.total_joules(), 0.0, "deferred commits defer energy");
+        fleet.advance(1);
+        let after_start: f64 = fleet.devices.iter().map(|d| d.joules()).sum();
+        assert_eq!(fleet.total_joules(), after_start);
+        assert!(after_start > 0.0, "the started batch is charged");
+        fleet.device_crash(0, 2);
+        let after_crash: f64 = fleet.devices.iter().map(|d| d.joules()).sum();
+        assert_eq!(fleet.total_joules(), after_crash);
+        assert!(after_crash < after_start, "the unexecuted tail rolls back");
     }
 
     #[test]

@@ -6,46 +6,74 @@
 //! in virtual time. Since the scheduler refactor the pipeline is a
 //! policy framework rather than a fixed pool:
 //!
-//! ```text
-//! trace (priority/deadline classes, overload bursts, replayable
-//!        from JSON)
-//!   ─► admission (SRAM gate + bounded queue; FIFO or class-aware
-//!        shedding — overload evicts best-effort work first, with
-//!        per-class shed counters so lost deadlines stay visible)
-//!     ─► batcher (per-model dynamic batching; with preemption on,
-//!          window-doomed interactive requests flush ahead of the
-//!          window and mixed flushed batches split into
-//!          deadline-critical + deferrable halves)
-//!       ─► scheduler (pluggable policy: round-robin | least-loaded |
-//!            slo-aware | energy-aware, each pricing batches with the
-//!            target device's own cycle AND energy models; every
-//!            placement is a dispatch step that, in steal mode, resolves
-//!            started batches and lets drained devices steal pending
-//!            work)
-//!         ─► fleet (heterogeneous devices, each described by one
-//!              [`Target`](crate::target::Target) from the named
-//!              registry — SRAM, clock, cycle table, energy model;
-//!              shared 216 MHz reference timeline; queue-depth
-//!              backpressure; in steal mode, committed-but-not-started
-//!              batches are migratable queue entries with per-device
-//!              migration accounting)
-//!           ─► stats (p50/p95/p99, throughput from the first arrival
-//!                epoch, deadline + shed-SLO misses per class,
-//!                migrations, re-admissions and crash losses, joules
-//!                per device and per inference)
+//! Since the event-driven refactor the replay is clocked by a single
+//! binary-heap event loop ([`events::EventHeap`]) rather than per-step
+//! linear scans:
 //!
-//! fleet events (seeded churn stream riding the trace: Join | Leave |
-//!        Crash | Throttle | Restore | Drain — or synthesized live by
-//!        the autoscaler)
-//!   ─► fleet lifecycle (devices join/leave mid-replay; a crash loses
-//!        the in-flight batch and its deadline-carrying members re-enter
-//!        through ─► admission above, counted per class, while
-//!        deadline-free members are lost forever and counted as misses;
-//!        throttling rescales the device clock for subsequent pricing;
-//!        drain migrates pending batches to live hosts via the steal
-//!        machinery)
+//! ```text
+//! trace source ([`trace::TraceSource`]: borrowed slice | owned vec |
+//!        streaming JSON-lines reader — a 10M-request file is never
+//!        materialized; priority/deadline classes, overload bursts,
+//!        replayable from JSON)
+//!   │                 fleet events (seeded churn stream: Join | Leave
+//!   │                        | Crash | Throttle | Restore | Drain)
+//!   ▼                 ▼
+//! ┌───────────────────────────────────────────────────────────────┐
+//! │ event heap (min-heap on virtual cycles: FleetLifecycle ranks  │
+//! │   before the Arrival sharing its cycle; exactly one arrival — │
+//! │   the next undrawn request — is staged at a time)             │
+//! └───────────────────────────────────────────────────────────────┘
+//!   │ Arrival                          │ FleetLifecycle
+//!   ▼                                  ▼
+//! admission (SRAM gate + bounded    fleet lifecycle (join/leave/
+//!     queue; FIFO or class-aware      crash/throttle/restore/drain;
+//!     shedding; payload parked in     a crash's deadline-carrying
+//!     the [`arena`] slab — the        members re-enter through
+//!     queues carry only ids)          admission, deadline-free
+//!   ─► batcher (per-model dynamic     members are lost and counted;
+//!        batching; its *own* event    drains migrate pending batches
+//!        heap indexes window          via the steal machinery)
+//!        expiries — `pop_due` pops
+//!        due keys instead of scanning all; preemption flushes
+//!        window-doomed requests ahead of the window and splits
+//!        mixed batches into critical + deferrable halves)
+//!     ─► scheduler (pluggable policy: round-robin | least-loaded |
+//!          slo-aware | energy-aware; the indexed fleet answers
+//!          least-loaded picks from a busy-ordered set and prices
+//!          SLO/energy picks through a per-kind cost memo)
+//!       ─► fleet (heterogeneous devices, each described by one
+//!            [`Target`](crate::target::Target); shared 216 MHz
+//!            reference timeline; queue-depth backpressure; a
+//!            finish-ordered wake index answers `next_wake` in
+//!            O(log n); steal mode keeps committed-but-not-started
+//!            batches migratable)
+//!         ─► stats (p50/p95/p99, virtual-time throughput, deadline +
+//!              shed-SLO misses per class, migrations, crash losses,
+//!              joules per device — plus host-side `wall_ms` and
+//!              `replay_requests_per_sec` simulator speed)
 //! ```
 //!
+//! Batch-window expiries and batch finishes deliberately do *not*
+//! enter the outer heap: decision points stay pinned at the exact
+//! arrival boundaries the pre-refactor linear loop used, so every
+//! report is reproduced bit-for-bit (`--legacy-loop` keeps the scan
+//! loop alive as the equivalence oracle). The heap, the batcher's
+//! due-index and the fleet's wake index change only *how fast* the
+//! next due event is found, never *which* event is next.
+//!
+//! By default the replay also runs in "fast" mode: instruction counts
+//! are shape-driven, not data-driven, so one probe inference per model
+//! key prices every batch member exactly and no per-request pixels are
+//! synthesized (the arena stays empty). `--legacy-loop` restores the
+//! per-image inference path; the `round_robin_on_all_m7_matches_legacy_
+//! pipeline_bit_for_bit` and equivalence tests pin the two modes to
+//! identical reports.
+//!
+//! * [`events`] — the simulation event heap: one ordered queue of
+//!   virtual-time events (arrivals, lifecycle, window expiry, batch
+//!   finish) with lazy deletion;
+//! * [`arena`] — slab storage for in-flight request payloads, keyed by
+//!   stable request id so the hot path stops cloning image buffers;
 //! * [`registry`] — multi-tenant model registry with an LRU
 //!   compile-once artifact cache and cross-tenant weight sharing
 //!   (identical-params tenants collapse onto one artifact);
@@ -62,7 +90,8 @@
 //! * [`stats`] — latency/throughput/SLO/cache reporting (tables + JSON);
 //! * [`trace`] — deterministic synthetic request traces with deadline
 //!   classes and overload bursts, (de)serializable for recorded-trace
-//!   replay.
+//!   replay; [`TraceSource`] streams JSON-lines files one request at a
+//!   time (legacy envelope files auto-detected).
 //!
 //! With a [`Recorder`](crate::obs::Recorder) attached
 //! ([`run_trace_observed`]), every decision point above emits a typed
@@ -83,17 +112,21 @@
 //! its conv scratch ([`crate::ops::slbc::ConvScratch`]), so concurrent
 //! fleet simulations never share mutable pipeline state.
 
+pub mod arena;
 pub mod batcher;
+pub mod events;
 pub mod fleet;
 pub mod registry;
 pub mod sched;
 pub mod stats;
 pub mod trace;
 
+pub use arena::{RequestArena, RequestId};
 pub use batcher::{
     class_index, AdmissionKind, Batcher, BatcherCfg, PendingRequest, ReadyBatch,
     BATCH_OVERHEAD_CYCLES,
 };
+pub use events::{EventHeap, SimEvent, SimEventKind};
 pub use fleet::{
     BatchWork, Device, DeviceCfg, DeviceClass, Dispatch, Fleet, PendingBatch, Resolution,
 };
@@ -101,8 +134,9 @@ pub use registry::{hash_params, ModelKey, Registry, RegistryStats};
 pub use sched::{EnergyAware, LeastLoaded, RoundRobin, Scheduler, SchedulerKind, SloAware};
 pub use stats::{DeviceStats, LatencySummary, ModelStats, ServeReport};
 pub use trace::{
-    load_full_trace, load_trace, save_full_trace, save_trace, synth_fleet_events, synth_trace,
-    trace_from_json, trace_to_json, FleetEvent, FleetEventKind, SloClass, TraceCfg, TraceRequest,
+    load_full_trace, load_trace, save_full_trace, save_trace, save_trace_jsonl,
+    synth_fleet_events, synth_trace, trace_from_json, trace_to_json, FleetEvent, FleetEventKind,
+    SloClass, TraceCfg, TraceRequest, TraceSource,
 };
 
 use std::collections::HashMap;
@@ -183,6 +217,12 @@ pub struct ServeCfg {
     /// against the windowed predicted interactive-miss rate and a
     /// joules budget. `None` = fixed fleet.
     pub autoscale: Option<AutoscaleCfg>,
+    /// Run the pre-event-loop replay core: per-image inference (instead
+    /// of the per-key probe counter), linear `next_wake`/flush scans
+    /// (instead of the wake/due indices). Kept as the equivalence oracle
+    /// and the benchmark baseline; every report bit is identical either
+    /// way.
+    pub legacy_loop: bool,
 }
 
 /// Reactive autoscaler policy (see [`ServeCfg::autoscale`]): standby
@@ -231,6 +271,7 @@ impl Default for ServeCfg {
             steal: false,
             readmit: true,
             autoscale: None,
+            legacy_loop: false,
         }
     }
 }
@@ -267,12 +308,30 @@ struct DeferredReq {
     key_idx: usize,
 }
 
+/// Where one ticket's deferred accounting lives: its slot in the batch
+/// list plus its members' slots in the request list. Lets a fleet-event
+/// cancellation touch exactly the cancelled entries (tombstoning their
+/// slots) instead of scanning every deferral made so far — on a
+/// million-request churned replay that scan was the last O(trace)
+/// pass per event.
+struct DeferredSlots {
+    batch: usize,
+    reqs: Vec<usize>,
+}
+
 /// Everything `exec_batch` mutates, bundled so the replay loop stays
 /// readable.
 struct ReplayState<'a> {
     sched: &'a mut dyn Scheduler,
     fleet: &'a mut Fleet,
     scratch: &'a mut ConvScratch,
+    /// In-flight request payloads (legacy mode; empty in fast mode).
+    arena: &'a mut RequestArena,
+    /// Fast mode: batch counters come from the per-key probe instead of
+    /// per-image inference (instruction counts are input-independent).
+    fast: bool,
+    /// Per-key probe counters, installed at each key's first admission.
+    key_counters: Vec<Option<Counter>>,
     /// Lifecycle-event sink (the no-op recorder on the plain path).
     rec: &'a mut dyn Recorder,
     latencies: Vec<u64>,
@@ -288,10 +347,16 @@ struct ReplayState<'a> {
     /// even starting at arrival: the miss was compute-bound.
     miss_compute: u64,
     makespan: u64,
-    /// Steal mode: per-request outcomes awaiting fleet resolution.
-    deferred_reqs: Vec<DeferredReq>,
-    /// Steal mode: per-batch (ticket, key) pairs awaiting resolution.
-    deferred_batches: Vec<(usize, usize)>,
+    /// Steal mode: per-request outcomes awaiting fleet resolution, in
+    /// deferral order. `None` = cancelled by a fleet event (tombstone —
+    /// removal would either scramble the order or cost a full shift).
+    deferred_reqs: Vec<Option<DeferredReq>>,
+    /// Steal mode: per-batch (ticket, key) pairs awaiting resolution,
+    /// tombstoned like `deferred_reqs`.
+    deferred_batches: Vec<Option<(usize, usize)>>,
+    /// Ticket -> its slots in the two deferred lists, so cancellation
+    /// is O(cancelled members), not O(deferrals so far).
+    deferred_index: HashMap<usize, DeferredSlots>,
     /// Fleet events present (or autoscale on): a transient no-live-host
     /// placement failure loses the batch instead of erroring.
     churn: bool,
@@ -305,6 +370,30 @@ struct ReplayState<'a> {
     /// autoscaler; capacity 0 disables collection.
     slo_signal: std::collections::VecDeque<bool>,
     slo_signal_cap: usize,
+    /// Running miss count over `slo_signal`, maintained incrementally —
+    /// the autoscaler used to recount the whole window every arrival.
+    slo_misses: usize,
+}
+
+impl ReplayState<'_> {
+    /// Record one interactive outcome in the autoscaler window. The
+    /// running miss count updates as entries enter and age out, so the
+    /// windowed rate read is O(1) instead of a window rescan — and
+    /// exactly equal to it.
+    fn push_slo_signal(&mut self, miss: bool) {
+        if self.slo_signal_cap == 0 {
+            return;
+        }
+        if self.slo_signal.len() == self.slo_signal_cap
+            && self.slo_signal.pop_front() == Some(true)
+        {
+            self.slo_misses -= 1;
+        }
+        self.slo_signal.push_back(miss);
+        if miss {
+            self.slo_misses += 1;
+        }
+    }
 }
 
 /// Dispatch a set of flushed batches in ready-time order (same-ready
@@ -337,9 +426,25 @@ fn exec_batches(
 /// and deadline accounting defer until the fleet finalizes.
 fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> Result<()> {
     let mut ctr = Counter::new();
-    for r in &batch.requests {
-        let res = art.run_with_scratch(&r.image, &mut *st.scratch)?;
-        ctr.merge(&res.counter);
+    if st.fast {
+        // Instruction counts are shape-driven, not data-driven: the
+        // per-key probe counter (installed at the key's first
+        // admission) prices each member exactly as its own inference
+        // would. No pixels are read; the arena stays empty.
+        let probe = st.key_counters[batch.key_idx]
+            .as_ref()
+            .expect("admission installs the probe counter before any flush");
+        for _ in &batch.requests {
+            ctr.merge(probe);
+        }
+    } else {
+        for r in &batch.requests {
+            let res = art.run_with_scratch(st.arena.image(r.id), &mut *st.scratch)?;
+            ctr.merge(&res.counter);
+            // The payload is never read again: execution is the
+            // request's last touch, wherever the batch lands.
+            st.arena.release(r.id);
+        }
     }
     let deadlines: Vec<u64> = batch.requests.iter().map(|r| r.deadline).collect();
     let work = BatchWork {
@@ -401,10 +506,8 @@ fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> 
     if st.slo_signal_cap > 0 {
         for r in &batch.requests {
             if class_index(r.priority) == 0 {
-                if st.slo_signal.len() == st.slo_signal_cap {
-                    st.slo_signal.pop_front();
-                }
-                st.slo_signal.push_back(disp.finish > r.deadline);
+                let miss = disp.finish > r.deadline;
+                st.push_slo_signal(miss);
             }
         }
     }
@@ -414,17 +517,23 @@ fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> 
     if let Some(ticket) = disp.ticket {
         // Migratable: final device, finish time and pricing arrive with
         // the fleet's resolution.
+        let mut slots = DeferredSlots {
+            batch: st.deferred_batches.len(),
+            reqs: Vec::with_capacity(batch.requests.len()),
+        };
         for r in &batch.requests {
-            st.deferred_reqs.push(DeferredReq {
+            slots.reqs.push(st.deferred_reqs.len());
+            st.deferred_reqs.push(Some(DeferredReq {
                 ticket,
                 id: r.id,
                 arrival: r.arrival,
                 deadline: r.deadline,
                 class_idx: class_index(r.priority),
                 key_idx: batch.key_idx,
-            });
+            }));
         }
-        st.deferred_batches.push((ticket, batch.key_idx));
+        st.deferred_batches.push(Some((ticket, batch.key_idx)));
+        st.deferred_index.insert(ticket, slots);
         return Ok(());
     }
     for r in &batch.requests {
@@ -478,7 +587,8 @@ fn exec_batch(batch: &ReadyBatch, art: &CompiledModel, st: &mut ReplayState) -> 
 /// charge latencies, deadline outcomes and the final device's pricing.
 fn resolve_deferred(st: &mut ReplayState) {
     st.fleet.finalize();
-    for (ticket, key_idx) in std::mem::take(&mut st.deferred_batches) {
+    st.deferred_index.clear();
+    for (ticket, key_idx) in std::mem::take(&mut st.deferred_batches).into_iter().flatten() {
         let res = st
             .fleet
             .resolution(ticket)
@@ -486,7 +596,7 @@ fn resolve_deferred(st: &mut ReplayState) {
         st.accs[key_idx].cycles += res.device_cycles;
         st.makespan = st.makespan.max(res.finish);
     }
-    for dr in std::mem::take(&mut st.deferred_reqs) {
+    for dr in std::mem::take(&mut st.deferred_reqs).into_iter().flatten() {
         let res = st
             .fleet
             .resolution(dr.ticket)
@@ -669,27 +779,25 @@ fn cancel_tickets(
     if tickets.is_empty() {
         return;
     }
-    let dead: std::collections::HashSet<usize> = tickets.iter().copied().collect();
-    let mut i = 0;
-    while i < st.deferred_batches.len() {
-        if dead.contains(&st.deferred_batches[i].0) {
-            let (_, key_idx) = st.deferred_batches.swap_remove(i);
-            st.accs[key_idx].batches -= 1;
-        } else {
-            i += 1;
-        }
-    }
+    // The deferred index names exactly the slots each dead ticket owns,
+    // so cancellation touches only the cancelled entries — the full
+    // list scan this replaces was O(deferrals so far) per fleet event.
     let mut victims = Vec::new();
-    let mut j = 0;
-    while j < st.deferred_reqs.len() {
-        if dead.contains(&st.deferred_reqs[j].ticket) {
-            victims.push(st.deferred_reqs.swap_remove(j));
-        } else {
-            j += 1;
+    for t in tickets {
+        let Some(slots) = st.deferred_index.remove(t) else {
+            continue;
+        };
+        if let Some((_, key_idx)) = st.deferred_batches[slots.batch].take() {
+            st.accs[key_idx].batches -= 1;
+        }
+        for ri in slots.reqs {
+            if let Some(dr) = st.deferred_reqs[ri].take() {
+                victims.push(dr);
+            }
         }
     }
-    // swap_remove scrambles order; keep the re-admission sequence
-    // deterministic by restoring request-id order.
+    // Keep the re-admission sequence deterministic regardless of the
+    // ticket order the fleet reported: restore request-id order.
     victims.sort_by_key(|dr| dr.id);
     for dr in victims {
         // The batch never completed: its members are back in flight, so
@@ -697,15 +805,21 @@ fn cancel_tickets(
         // recounted when its new batch places).
         st.accs[dr.key_idx].requests -= 1;
         if readmit && dr.deadline != u64::MAX {
-            let w = &workloads[dr.key_idx];
-            let seed = seed_by_id.get(&dr.id).copied().unwrap_or(dr.id as u64);
-            let image = datasets::generate(
-                Task::for_backbone(&w.model.name),
-                1,
-                w.model.input_hw,
-                seed,
-            )
-            .images;
+            if !st.fast {
+                // Legacy mode regenerates the member's payload from its
+                // trace seed (it was released when the batch executed);
+                // fast mode never reads pixels, so nothing to restore.
+                let w = &workloads[dr.key_idx];
+                let seed = seed_by_id.get(&dr.id).copied().unwrap_or(dr.id as u64);
+                let image = datasets::generate(
+                    Task::for_backbone(&w.model.name),
+                    1,
+                    w.model.input_hw,
+                    seed,
+                )
+                .images;
+                st.arena.put(dr.id, image);
+            }
             if st.rec.enabled() {
                 st.rec.record(Event {
                     cycles: now,
@@ -722,7 +836,6 @@ fn cancel_tickets(
                 arrival: dr.arrival,
                 priority: (2 - dr.class_idx) as u8,
                 deadline: dr.deadline,
-                image,
             });
         } else {
             st.lost += 1;
@@ -738,14 +851,117 @@ fn cancel_tickets(
             }
         }
     }
+    // A re-admission offer can shed (or evict a victim): those slots
+    // will never execute, so their payloads reclaim immediately.
+    for id in batcher.drain_reclaimed() {
+        st.arena.release(id);
+    }
+}
+
+/// Draws requests from a [`TraceSource`] one at a time, keeping exactly
+/// one pending arrival staged in the event heap — the piece that lets a
+/// streamed trace replay in bounded memory. Enforces the `(arrival, id)`
+/// ordering contract a streamed source must satisfy (the slice entry
+/// points guarantee it by sorting up front).
+struct ArrivalFeed<'a> {
+    source: TraceSource<'a>,
+    /// The drawn-but-unprocessed request matching the staged heap entry.
+    staged: Option<TraceRequest>,
+    /// Requests drawn so far (the report's `requests` count).
+    drawn: usize,
+    /// Arrival cycle of the first drawn request (throughput epoch).
+    first_arrival: u64,
+    /// `(arrival, id)` of the last draw — the ordering guard.
+    last: Option<(u64, usize)>,
+    /// Record draw seeds for crash re-admission (legacy churn mode only:
+    /// fast mode never regenerates payloads).
+    track_seeds: bool,
+}
+
+impl ArrivalFeed<'_> {
+    /// Draw the next request (if any), stage it as an `Arrival` heap
+    /// entry, and remember whatever re-admission will need.
+    fn stage_next(
+        &mut self,
+        heap: &mut EventHeap,
+        seed_by_id: &mut HashMap<usize, u64>,
+    ) -> Result<()> {
+        let Some(next) = self.source.next() else {
+            return Ok(());
+        };
+        let req = next?;
+        if let Some((at, id)) = self.last {
+            anyhow::ensure!(
+                (req.arrival, req.id) >= (at, id),
+                "trace source must be (arrival, id)-ordered: request {} at cycle {} \
+                 follows request {} at cycle {}",
+                req.id,
+                req.arrival,
+                id,
+                at,
+            );
+        } else {
+            self.first_arrival = req.arrival;
+        }
+        self.last = Some((req.arrival, req.id));
+        self.drawn += 1;
+        if self.track_seeds {
+            seed_by_id.insert(req.id, req.seed);
+        }
+        heap.push(req.arrival, SimEventKind::Arrival(req.id));
+        self.staged = Some(req);
+        Ok(())
+    }
 }
 
 /// The full-fidelity entry point: requests, fault-injection events,
 /// observability, and (optionally) the reactive autoscaler, all on one
 /// virtual timeline.
+///
+/// The slice-based entry points sort a copy of the trace by
+/// `(arrival, id)` and replay it through [`run_trace_source_observed`];
+/// hand the replay a streaming [`TraceSource`] directly to avoid ever
+/// materializing a large trace.
 pub fn run_trace_full_observed(
     workloads: &[Workload],
     trace: &[TraceRequest],
+    fleet_events: &[FleetEvent],
+    cfg: &ServeCfg,
+    rec: &mut dyn Recorder,
+    metrics: Option<&mut MetricsRegistry>,
+) -> Result<ServeReport> {
+    // Replay in arrival order (stable on id for equal arrivals).
+    let mut order: Vec<TraceRequest> = trace.to_vec();
+    order.sort_by_key(|r| (r.arrival, r.id));
+    run_trace_source_observed(
+        workloads,
+        TraceSource::from_vec(order),
+        fleet_events,
+        cfg,
+        rec,
+        metrics,
+    )
+}
+
+/// Replay a streaming [`TraceSource`] with the default stack: no fleet
+/// events, no observability. The source must yield requests in
+/// `(arrival, id)` order — what [`save_trace_jsonl`] writes and
+/// [`synth_trace`] generates; an out-of-order draw is an error.
+pub fn run_trace_source(
+    workloads: &[Workload],
+    source: TraceSource<'_>,
+    cfg: &ServeCfg,
+) -> Result<ServeReport> {
+    run_trace_source_observed(workloads, source, &[], cfg, &mut NoopRecorder, None)
+}
+
+/// The streaming full-fidelity entry point: requests are drawn from
+/// `source` one at a time (a JSON-lines trace file never materializes),
+/// staged one arrival ahead in the event heap, and merged with the
+/// fleet-event stream on one virtual timeline.
+pub fn run_trace_source_observed(
+    workloads: &[Workload],
+    source: TraceSource<'_>,
     fleet_events: &[FleetEvent],
     cfg: &ServeCfg,
     rec: &mut dyn Recorder,
@@ -769,24 +985,32 @@ pub fn run_trace_full_observed(
             fleet.push_standby(*dc);
         }
     }
+    // Fast mode (the default): shape-driven probe counters, the wake/
+    // due/pick indices, an empty arena. `legacy_loop` flips all of it
+    // back to the pre-event-loop core — the equivalence oracle.
+    let fast = !cfg.legacy_loop;
+    fleet.indexed = fast;
     // Crash re-admission regenerates the member's image from its trace
-    // seed (images are not retained once a batch commits).
-    let seed_by_id: HashMap<usize, u64> = if churn_mode {
-        trace.iter().map(|r| (r.id, r.seed)).collect()
-    } else {
-        HashMap::new()
-    };
+    // seed (images are not retained once a batch commits). Only the
+    // legacy path reads payloads, so seeds are tracked — incrementally,
+    // as requests are drawn — only for legacy churn replays.
+    let mut seed_by_id: HashMap<usize, u64> = HashMap::new();
     let mut batcher = Batcher::new(cfg.batcher.clone(), workloads.len());
     batcher.set_record(rec.enabled());
+    batcher.set_indexed(fast);
     let mut sched = cfg.scheduler.build();
     // Per-worker conv scratch: this replay's pipeline state is private,
     // so concurrent fleet simulations never contend on a shared
     // thread-local (ROADMAP PR-2 follow-up).
     let mut scratch = ConvScratch::new();
+    let mut arena = RequestArena::new();
     let mut st = ReplayState {
         sched: sched.as_mut(),
         fleet: &mut fleet,
         scratch: &mut scratch,
+        arena: &mut arena,
+        fast,
+        key_counters: vec![None; workloads.len()],
         rec,
         latencies: Vec::new(),
         latencies_by_class: [Vec::new(), Vec::new(), Vec::new()],
@@ -798,18 +1022,19 @@ pub fn run_trace_full_observed(
         makespan: 0,
         deferred_reqs: Vec::new(),
         deferred_batches: Vec::new(),
+        deferred_index: HashMap::new(),
         churn: churn_mode,
         readmitted_by_class: [0; 3],
         lost: 0,
         lost_by_class: [0; 3],
         slo_signal: std::collections::VecDeque::new(),
         slo_signal_cap: cfg.autoscale.as_ref().map(|a| a.miss_window).unwrap_or(0),
+        slo_misses: 0,
     };
     // Fleet events replay in timeline order, ties broken by device so a
     // shuffled stream and a sorted one behave identically.
     let mut events: Vec<&FleetEvent> = fleet_events.iter().collect();
     events.sort_by_key(|e| (e.at, e.device));
-    let mut next_ev = 0usize;
     let mut crashes = 0u64;
     let mut autoscale_ups = 0u64;
     let mut autoscale_downs = 0u64;
@@ -830,12 +1055,59 @@ pub fn run_trace_full_observed(
     // predictor, priced optimistically (fastest fleet device).
     let mut est_installed: Vec<bool> = vec![false; workloads.len()];
 
-    // Replay in arrival order (stable on id for equal arrivals).
-    let mut order: Vec<&TraceRequest> = trace.iter().collect();
-    order.sort_by_key(|r| (r.arrival, r.id));
-    let first_arrival = order.first().map(|r| r.arrival).unwrap_or(0);
+    // The outer event loop. Every fleet-lifecycle event enters the heap
+    // up front (push order = sorted (at, device) order, preserved by the
+    // heap's sequence numbers); arrivals are staged one at a time from
+    // the source. At equal cycles a lifecycle event ranks before the
+    // arrival — exactly the legacy cursor interleave ("every event with
+    // `at <= arrival` lands first"), and events past the last arrival
+    // drain from the same heap instead of a tail sweep.
+    let mut heap = EventHeap::new();
+    for (i, ev) in events.iter().enumerate() {
+        heap.push(ev.at, SimEventKind::FleetLifecycle(i));
+    }
+    let mut feed = ArrivalFeed {
+        source,
+        staged: None,
+        drawn: 0,
+        first_arrival: 0,
+        last: None,
+        track_seeds: churn_mode && cfg.legacy_loop,
+    };
+    feed.stage_next(&mut heap, &mut seed_by_id)?;
 
-    for req in order {
+    while let Some(sim) = heap.pop() {
+        match sim.kind {
+            SimEventKind::FleetLifecycle(i) => {
+                // Fault injection: ranks before the arrival sharing its
+                // cycle, so the arrival sees the churned fleet.
+                apply_fleet_event(
+                    events[i],
+                    workloads,
+                    &seed_by_id,
+                    cfg.readmit,
+                    &mut batcher,
+                    &mut st,
+                    &mut crashes,
+                );
+                continue;
+            }
+            SimEventKind::Arrival(_) => {}
+            SimEventKind::WindowExpiry(_) | SimEventKind::BatchFinish(_) => unreachable!(
+                "window/finish events live in the batcher's due-index and \
+                 the fleet's wake index, never the outer heap"
+            ),
+        }
+        let req = feed
+            .staged
+            .take()
+            .expect("a staged request backs every Arrival entry");
+        // Stage the successor before processing: its heap entry cannot
+        // pop until this body returns, and staging up front keeps every
+        // early-out (`continue` on an admission reject) from stalling
+        // the draw. Fleet events past the last arrival drain from the
+        // same heap on later iterations — no tail sweep.
+        feed.stage_next(&mut heap, &mut seed_by_id)?;
         anyhow::ensure!(
             req.key_idx < workloads.len(),
             "trace request {} references workload {} of {}",
@@ -843,20 +1115,6 @@ pub fn run_trace_full_observed(
             req.key_idx,
             workloads.len()
         );
-        // Fault injection: every fleet event due at or before this
-        // arrival lands first, so the arrival sees the churned fleet.
-        while next_ev < events.len() && events[next_ev].at <= req.arrival {
-            apply_fleet_event(
-                events[next_ev],
-                workloads,
-                &seed_by_id,
-                cfg.readmit,
-                &mut batcher,
-                &mut st,
-                &mut crashes,
-            );
-            next_ev += 1;
-        }
         if st.rec.enabled() {
             st.rec.record(Event {
                 cycles: req.arrival,
@@ -883,7 +1141,7 @@ pub fn run_trace_full_observed(
                 let inflight: usize =
                     st.fleet.devices.iter().map(|d| d.queue_depth(now)).sum();
                 m.push_series("inflight_batches", now, inflight as f64);
-                let horizon = now.saturating_sub(first_arrival);
+                let horizon = now.saturating_sub(feed.first_arrival);
                 for d in &st.fleet.devices {
                     m.push_series(&format!("util_dev{}", d.id), now, d.utilization(horizon));
                 }
@@ -943,21 +1201,46 @@ pub fn run_trace_full_observed(
             }
             continue;
         }
-        let image = datasets::generate(
-            Task::for_backbone(&w.model.name),
-            1,
-            w.model.input_hw,
-            req.seed,
-        )
-        .images;
+        if st.fast {
+            // One probe inference per model key, at its first admission:
+            // instruction counts are shape-driven, not data-driven, so
+            // the probe's counter prices every later batch member
+            // exactly (the bit-for-bit equivalence tests rest on this).
+            if st.key_counters[req.key_idx].is_none() {
+                let probe = datasets::generate(
+                    Task::for_backbone(&w.model.name),
+                    1,
+                    w.model.input_hw,
+                    req.seed,
+                )
+                .images;
+                let res = art.run_with_scratch(&probe, &mut *st.scratch)?;
+                st.key_counters[req.key_idx] = Some(res.counter);
+            }
+        } else {
+            // Legacy mode synthesizes every request's pixels and parks
+            // them in the arena; the batch executor is the single reader.
+            let image = datasets::generate(
+                Task::for_backbone(&w.model.name),
+                1,
+                w.model.input_hw,
+                req.seed,
+            )
+            .images;
+            st.arena.put(req.id, image);
+        }
         batcher.offer(PendingRequest {
             id: req.id,
             key_idx: req.key_idx,
             arrival: req.arrival,
             priority: req.priority(),
             deadline: req.deadline,
-            image,
         });
+        // The offer may have shed this request or evicted a victim —
+        // either way those payloads will never be read.
+        for id in batcher.drain_reclaimed() {
+            st.arena.release(id);
+        }
         // A batch this arrival filled is ready right now — flush it
         // rather than letting it sit out the waiting window.
         let mut due = batcher.pop_due(req.arrival);
@@ -974,22 +1257,21 @@ pub fn run_trace_full_observed(
             // Interactive sheds are misses the placement signal never
             // sees — feed them in as (certain) misses.
             let ished = batcher.shed_by_class[0];
-            if st.slo_signal_cap > 0 {
-                for _ in prev_interactive_shed..ished {
-                    if st.slo_signal.len() == st.slo_signal_cap {
-                        st.slo_signal.pop_front();
-                    }
-                    st.slo_signal.push_back(true);
-                }
+            for _ in prev_interactive_shed..ished {
+                st.push_slo_signal(true);
             }
             prev_interactive_shed = ished;
             if cooldown_left > 0 {
                 cooldown_left -= 1;
             } else if st.slo_signal_cap > 0 && st.slo_signal.len() * 2 >= st.slo_signal_cap {
-                let misses = st.slo_signal.iter().filter(|&&m| m).count();
+                // Both reads used to rescan per arrival (the whole
+                // signal window; every device's joules). The running
+                // miss count and the fleet's energy cache answer the
+                // same questions in O(1).
+                let misses = st.slo_misses;
                 let rate = misses as f64 / st.slo_signal.len() as f64;
                 if rate > asc.grow_rate {
-                    let spent: f64 = st.fleet.devices.iter().map(|d| d.joules()).sum();
+                    let spent: f64 = st.fleet.total_joules();
                     let idle = (standby_lo..st.fleet.devices.len())
                         .find(|&i| !st.fleet.devices[i].is_live());
                     if spent < asc.joules_budget {
@@ -1042,21 +1324,7 @@ pub fn run_trace_full_observed(
         }
     }
 
-    // End of trace: any fleet events past the last arrival still land
-    // (a tail crash can revoke work committed by the final requests) …
-    while next_ev < events.len() {
-        apply_fleet_event(
-            events[next_ev],
-            workloads,
-            &seed_by_id,
-            cfg.readmit,
-            &mut batcher,
-            &mut st,
-            &mut crashes,
-        );
-        next_ev += 1;
-    }
-    // … then the remaining partial batches drain.
+    // End of trace: the remaining partial batches drain.
     let mut rest = batcher.drain_all();
     if cfg.batcher.preempt {
         rest = batcher.split_critical(rest);
@@ -1084,6 +1352,7 @@ pub fn run_trace_full_observed(
         lost_by_class,
         ..
     } = st;
+    let first_arrival = feed.first_arrival;
     let completed = latencies.len();
     let span_cycles = makespan.saturating_sub(first_arrival);
     let virtual_s = span_cycles as f64 / crate::STM32F746_CLOCK_HZ as f64;
@@ -1148,10 +1417,11 @@ pub fn run_trace_full_observed(
         m.gauge("total_joules", total_joules);
     }
 
+    let wall_s = wall0.elapsed().as_secs_f64();
     Ok(ServeReport {
         scheduler: cfg.scheduler.name().to_string(),
         admission: cfg.batcher.admission.name().to_string(),
-        requests: trace.len(),
+        requests: feed.drawn,
         completed,
         rejected_queue: batcher.shed,
         shed_by_class: batcher.shed_by_class,
@@ -1185,7 +1455,13 @@ pub fn run_trace_full_observed(
         per_device,
         cache: registry.stats().clone(),
         engine_compiles: engine::compile_count() - compiles0,
-        wall_s: wall0.elapsed().as_secs_f64(),
+        wall_s,
+        wall_ms: wall_s * 1e3,
+        replay_requests_per_sec: if wall_s > 0.0 {
+            feed.drawn as f64 / wall_s
+        } else {
+            0.0
+        },
     })
 }
 
@@ -1207,6 +1483,16 @@ mod tests {
             max_queue_depth: 2,
             ..ServeCfg::default()
         }
+    }
+
+    /// Compact report JSON with the host-timing fields zeroed — the
+    /// bit-for-bit comparison key (wall time differs run to run; every
+    /// virtual-time bit must not).
+    fn dewalled(mut rep: ServeReport) -> String {
+        rep.wall_s = 0.0;
+        rep.wall_ms = 0.0;
+        rep.replay_requests_per_sec = 0.0;
+        rep.to_json().to_string_compact()
     }
 
     #[test]
@@ -1408,6 +1694,7 @@ mod tests {
     fn legacy_exec(
         mut batches: Vec<ReadyBatch>,
         pinned: &[Option<Arc<CompiledModel>>],
+        images: &HashMap<usize, Vec<f32>>,
         devs: &mut [LegacyDev],
         rr_next: &mut usize,
         depth: usize,
@@ -1419,7 +1706,7 @@ mod tests {
             let art = pinned[batch.key_idx].clone().unwrap();
             let mut run_cycles = 0u64;
             for r in &batch.requests {
-                run_cycles += art.run(&r.image).unwrap().cycles;
+                run_cycles += art.run(&images[&r.id]).unwrap().cycles;
             }
             let cost = BATCH_OVERHEAD_CYCLES + run_cycles;
             let finish = legacy_dispatch(
@@ -1458,6 +1745,9 @@ mod tests {
         let mut rr_next = 0usize;
         let depth = cfg.max_queue_depth;
         let mut pinned: Vec<Option<Arc<CompiledModel>>> = vec![None; workloads.len()];
+        // The pre-arena pipeline carried each image inside its pending
+        // request; here a side table keyed by id plays that role.
+        let mut images: HashMap<usize, Vec<f32>> = HashMap::new();
         let mut latencies = Vec::new();
         let mut makespan = 0u64;
 
@@ -1467,6 +1757,7 @@ mod tests {
             legacy_exec(
                 batcher.pop_due(req.arrival),
                 &pinned,
+                &images,
                 &mut devs,
                 &mut rr_next,
                 depth,
@@ -1488,17 +1779,18 @@ mod tests {
                 req.seed,
             )
             .images;
+            images.insert(req.id, image);
             batcher.offer(PendingRequest {
                 id: req.id,
                 key_idx: req.key_idx,
                 arrival: req.arrival,
                 priority: req.priority(),
                 deadline: req.deadline,
-                image,
             });
             legacy_exec(
                 batcher.pop_due(req.arrival),
                 &pinned,
+                &images,
                 &mut devs,
                 &mut rr_next,
                 depth,
@@ -1509,6 +1801,7 @@ mod tests {
         legacy_exec(
             batcher.drain_all(),
             &pinned,
+            &images,
             &mut devs,
             &mut rr_next,
             depth,
@@ -2155,17 +2448,12 @@ mod tests {
         // pins the other direction — attaching a recorder and metrics
         // must not move a single report bit (wall_s excepted).
         let cfg = small_cfg();
-        let mut plain = run_trace(&ws, &trace, &cfg).unwrap();
+        let plain = run_trace(&ws, &trace, &cfg).unwrap();
         let mut rec = RingRecorder::new(4096);
         let mut metrics = MetricsRegistry::new(216_000);
-        let mut observed =
+        let observed =
             run_trace_observed(&ws, &trace, &cfg, &mut rec, Some(&mut metrics)).unwrap();
-        plain.wall_s = 0.0;
-        observed.wall_s = 0.0;
-        assert_eq!(
-            plain.to_json().to_string_compact(),
-            observed.to_json().to_string_compact()
-        );
+        assert_eq!(dewalled(plain), dewalled(observed));
         assert!(!rec.is_empty());
         assert_eq!(metrics.counter("requests"), trace.len() as u64);
         assert!(metrics.series("queue_depth").is_some());
@@ -2261,14 +2549,9 @@ mod tests {
             ws.len(),
         );
         let cfg = small_cfg();
-        let mut a = run_trace(&ws, &trace, &cfg).unwrap();
-        let mut b = run_trace_full(&ws, &trace, &[], &cfg).unwrap();
-        a.wall_s = 0.0;
-        b.wall_s = 0.0;
-        assert_eq!(
-            a.to_json().to_string_compact(),
-            b.to_json().to_string_compact()
-        );
+        let a = run_trace(&ws, &trace, &cfg).unwrap();
+        let b = run_trace_full(&ws, &trace, &[], &cfg).unwrap();
+        assert_eq!(dewalled(a.clone()), dewalled(b));
         assert_eq!(a.crashes, 0);
         assert_eq!(a.lost, 0);
         assert_eq!(a.readmissions(), 0);
@@ -2377,17 +2660,13 @@ mod tests {
             );
 
             // Determinism: same trace + events, same report.
-            let mut again =
-                run_trace_full(&ws, &trace, &events, &cfg).unwrap();
-            let mut first = rep;
-            first.wall_s = 0.0;
-            again.wall_s = 0.0;
+            let again = run_trace_full(&ws, &trace, &events, &cfg).unwrap();
             assert_eq!(
-                first.to_json().to_string_compact(),
-                again.to_json().to_string_compact(),
+                dewalled(rep.clone()),
+                dewalled(again),
                 "churned replay not deterministic at seed {seed}"
             );
-            churn_effects += first.readmissions() + first.lost + first.crashes;
+            churn_effects += rep.readmissions() + rep.lost + rep.crashes;
         }
         assert!(
             churn_effects > 0,
@@ -2456,6 +2735,196 @@ mod tests {
             "scaling up worsened interactive misses: {} vs {}",
             rep.class_misses(0),
             rep0.class_misses(0)
+        );
+    }
+
+    #[test]
+    fn event_loop_replay_is_bit_identical_to_the_legacy_scan_loop() {
+        // The tentpole equivalence property: the event-heap replay core
+        // (probe counters, wake/due/pick indices — the default) and the
+        // pre-refactor linear-scan core (`legacy_loop`: per-image
+        // inference, full scans) must agree on every report bit, across
+        // the four CI bench shapes, three seeds each.
+        let ws = mobilenet_pair();
+        let tight_batcher = BatcherCfg {
+            max_batch: 4,
+            max_wait_cycles: 432_000,
+            max_queue: 6,
+            admission: AdmissionKind::ClassAware,
+            preempt: true,
+        };
+        for seed in [5u64, 6, 7] {
+            let mut scenarios: Vec<(String, ServeCfg, Vec<TraceRequest>, Vec<FleetEvent>)> =
+                Vec::new();
+
+            // Canonical: mixed SLO classes, RoundRobin, all-M7 fleet.
+            let tc = TraceCfg::new(40, 150_000, seed).with_slo([0.3, 0.4, 0.3]);
+            scenarios.push((
+                format!("canonical/{seed}"),
+                ServeCfg {
+                    fleet: vec![DeviceCfg::stm32f746(); 3],
+                    ..ServeCfg::default()
+                },
+                synth_trace(&tc, ws.len()),
+                Vec::new(),
+            ));
+
+            // Overload: bursts, class-aware shedding, preemption, steal,
+            // SloAware placement on a mixed fleet.
+            let tc = TraceCfg::new(40, 60_000, seed)
+                .with_slo([1.0, 1.0, 1.0])
+                .with_burst(8, 5);
+            scenarios.push((
+                format!("overload/{seed}"),
+                ServeCfg {
+                    fleet: vec![DeviceCfg::stm32f746(), DeviceCfg::stm32f446()],
+                    scheduler: SchedulerKind::SloAware,
+                    batcher: tight_batcher.clone(),
+                    steal: true,
+                    ..ServeCfg::default()
+                },
+                synth_trace(&tc, ws.len()),
+                Vec::new(),
+            ));
+
+            // Energy: EnergyAware pricing over a heterogeneous fleet.
+            let tc = TraceCfg::new(40, 200_000, seed).with_slo([0.5, 0.5, 0.0]);
+            scenarios.push((
+                format!("energy/{seed}"),
+                ServeCfg {
+                    fleet: vec![
+                        DeviceCfg::stm32f746(),
+                        DeviceCfg::stm32f446(),
+                        DeviceCfg::stm32f446(),
+                    ],
+                    scheduler: SchedulerKind::EnergyAware,
+                    ..ServeCfg::default()
+                },
+                synth_trace(&tc, ws.len()),
+                Vec::new(),
+            ));
+
+            // Churn: a fault-injection stream rides the trace, so crash
+            // re-admission, loss and drain-migration all exercise.
+            let tc = TraceCfg::new(40, 120_000, seed)
+                .with_slo([1.0, 1.0, 1.0])
+                .with_burst(7, 4)
+                .with_churn(0.5);
+            let trace = synth_trace(&tc, ws.len());
+            let fleet = vec![
+                DeviceCfg::stm32f746(),
+                DeviceCfg::stm32f746(),
+                DeviceCfg::stm32f446(),
+            ];
+            let events = synth_fleet_events(&tc, &trace, fleet.len());
+            scenarios.push((
+                format!("churn/{seed}"),
+                ServeCfg {
+                    fleet,
+                    batcher: tight_batcher.clone(),
+                    ..ServeCfg::default()
+                },
+                trace,
+                events,
+            ));
+
+            for (label, cfg, trace, events) in scenarios {
+                let fast = run_trace_full(&ws, &trace, &events, &cfg).unwrap();
+                assert_eq!(fast.requests, trace.len(), "{label}");
+                let legacy_cfg = ServeCfg {
+                    legacy_loop: true,
+                    ..cfg
+                };
+                let legacy = run_trace_full(&ws, &trace, &events, &legacy_cfg).unwrap();
+                assert_eq!(
+                    dewalled(fast),
+                    dewalled(legacy),
+                    "{label}: event-loop replay diverged from the scan loop"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn autoscaler_decisions_survive_the_event_loop_refactor() {
+        // The incremental window bookkeeping (running miss count, cached
+        // fleet joules) must reproduce the rescanning autoscaler's
+        // grow/shrink sequence exactly — pinned on a scenario that
+        // actually grows.
+        let ws = vec![Workload::synth("mobilenet_tiny", Method::Slbc, 4, 4).unwrap()];
+        let trace = synth_trace(
+            &TraceCfg::new(32, 40_000, 11)
+                .with_slo([1.0, 0.0, 0.0])
+                .with_burst(8, 6),
+            1,
+        );
+        let cfg = ServeCfg {
+            fleet: vec![DeviceCfg::stm32f746()],
+            batcher: BatcherCfg {
+                max_batch: 4,
+                max_wait_cycles: 432_000,
+                max_queue: 4,
+                admission: AdmissionKind::ClassAware,
+                preempt: true,
+            },
+            autoscale: Some(AutoscaleCfg {
+                standby: vec![DeviceCfg::stm32f746()],
+                miss_window: 8,
+                grow_rate: 0.25,
+                shrink_rate: 0.02,
+                joules_budget: f64::INFINITY,
+                cooldown: 4,
+            }),
+            ..ServeCfg::default()
+        };
+        let fast = run_trace_full(&ws, &trace, &[], &cfg).unwrap();
+        let legacy = run_trace_full(
+            &ws,
+            &trace,
+            &[],
+            &ServeCfg {
+                legacy_loop: true,
+                ..cfg
+            },
+        )
+        .unwrap();
+        assert!(fast.autoscale_ups >= 1, "scenario must exercise growth");
+        assert_eq!(fast.autoscale_ups, legacy.autoscale_ups, "grow decisions moved");
+        assert_eq!(fast.autoscale_downs, legacy.autoscale_downs, "shrink decisions moved");
+        assert_eq!(dewalled(fast), dewalled(legacy));
+    }
+
+    #[test]
+    fn streamed_jsonl_replay_matches_the_slice_replay() {
+        // End-to-end streaming: a JSON-lines trace file replayed through
+        // `TraceSource::open` (one request in memory at a time) produces
+        // the same report as the in-memory slice replay.
+        let ws = mobilenet_pair();
+        let trace = synth_trace(
+            &TraceCfg::new(24, 200_000, 13).with_slo([0.5, 0.5, 0.0]),
+            ws.len(),
+        );
+        let cfg = small_cfg();
+        let baseline = run_trace(&ws, &trace, &cfg).unwrap();
+
+        let path = std::env::temp_dir().join(format!(
+            "mcu_mixq_streamed_replay_{}.jsonl",
+            std::process::id()
+        ));
+        save_trace_jsonl(&path, &trace).unwrap();
+        let streamed = run_trace_source(&ws, TraceSource::open(&path).unwrap(), &cfg).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(streamed.requests, trace.len());
+        assert_eq!(dewalled(baseline), dewalled(streamed));
+
+        // An out-of-order source is rejected, never silently misreplayed.
+        let mut shuffled = trace.clone();
+        let last = shuffled.len() - 1;
+        shuffled.swap(0, last);
+        let err = run_trace_source(&ws, TraceSource::from_vec(shuffled), &cfg).unwrap_err();
+        assert!(
+            err.to_string().contains("ordered"),
+            "unexpected ordering error: {err}"
         );
     }
 }

@@ -33,6 +33,21 @@
 //! time advances to the fleet's next in-flight completion and the pick
 //! retries — batches are delayed, never reordered.
 //!
+//! # Indexed candidate selection
+//!
+//! With [`Fleet::indexed`] on (the default), picks avoid re-deriving
+//! per-device state the fleet already indexes: [`LeastLoaded`] walks
+//! [`Fleet::by_busy_order`] — devices in exactly the `(busy_until, id)`
+//! order its scan minimized — and stops at the first eligible one, and
+//! [`SloAware`] / [`EnergyAware`] price the batch once per device
+//! *kind* (registry name + effective clock) instead of once per device:
+//! the registry models behind a name are immutable and only the clock
+//! mutates at runtime (DVFS throttling), so same-kind devices price a
+//! histogram identically and the memoized values are bit-identical to
+//! per-device recomputation. Every policy keeps its scan path for
+//! `indexed = false` (the `--legacy-loop` baseline), and both paths
+//! pick the same device on every input.
+//!
 //! Fleet lifecycle (fault injection) is transparent to policies: the
 //! fleet's eligibility, SRAM-fit and next-wake primitives all filter to
 //! *live* (up, not draining) devices, so a policy written against a
@@ -133,9 +148,43 @@ impl Scheduler for LeastLoaded {
     }
 
     fn pick(&mut self, now: u64, work: &BatchWork, fleet: &Fleet) -> Option<usize> {
+        if fleet.indexed {
+            // `by_busy_order` yields ascending (busy_until, id) — the
+            // exact minimization key below — so the first eligible
+            // device in the walk is the scan's argmin.
+            return fleet
+                .by_busy_order()
+                .find(|&i| fleet.eligible(i, now, work.peak_sram));
+        }
         (0..fleet.len())
             .filter(|&i| fleet.eligible(i, now, work.peak_sram))
             .min_by_key(|&i| (fleet.devices[i].busy_until, i))
+    }
+}
+
+/// One pick's cost table for the deadline/energy policies: batch price
+/// by device *kind* — `(registry name, effective clock)`. Sound because
+/// the cycle/energy models behind a registry name are immutable; only
+/// `clock_hz` mutates at runtime (DVFS), and it is part of the key. A
+/// tiny linear map: fleets hold a handful of distinct kinds.
+#[derive(Default)]
+struct KindCosts {
+    entries: Vec<((&'static str, u64), (u64, f64))>,
+}
+
+impl KindCosts {
+    /// `(timeline cycles, joules)` of `work` on device `i`, computed
+    /// once per kind. Pure functions of (models, clock, histogram), so
+    /// the memoized values are bit-identical to recomputation.
+    fn price(&mut self, fleet: &Fleet, i: usize, work: &BatchWork) -> (u64, f64) {
+        let cfg = &fleet.devices[i].cfg;
+        let key = (cfg.name, cfg.clock_hz);
+        if let Some(&(_, v)) = self.entries.iter().find(|(k, _)| *k == key) {
+            return v;
+        }
+        let v = (cfg.timeline_cost(work.counter), cfg.batch_joules(work.counter));
+        self.entries.push((key, v));
+        v
     }
 }
 
@@ -167,6 +216,17 @@ impl Scheduler for SloAware {
     }
 
     fn pick(&mut self, now: u64, work: &BatchWork, fleet: &Fleet) -> Option<usize> {
+        if fleet.indexed {
+            let mut memo = KindCosts::default();
+            return (0..fleet.len())
+                .filter(|&i| fleet.eligible(i, now, work.peak_sram))
+                .min_by_key(|&i| {
+                    let (cost, _) = memo.price(fleet, i, work);
+                    let finish = now.max(fleet.devices[i].busy_until) + cost;
+                    let misses = work.deadlines.iter().filter(|&&dl| finish > dl).count();
+                    (misses, finish, i)
+                });
+        }
         (0..fleet.len())
             .filter(|&i| fleet.eligible(i, now, work.peak_sram))
             .min_by_key(|&i| {
@@ -194,6 +254,19 @@ impl Scheduler for EnergyAware {
     }
 
     fn pick(&mut self, now: u64, work: &BatchWork, fleet: &Fleet) -> Option<usize> {
+        if fleet.indexed {
+            let mut memo = KindCosts::default();
+            return (0..fleet.len())
+                .filter(|&i| fleet.eligible(i, now, work.peak_sram))
+                .map(|i| {
+                    let (cost, joules) = memo.price(fleet, i, work);
+                    let finish = now.max(fleet.devices[i].busy_until) + cost;
+                    let misses = work.deadlines.iter().filter(|&&dl| finish > dl).count();
+                    (misses, joules, finish, i)
+                })
+                .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(_, _, _, i)| i);
+        }
         (0..fleet.len())
             .filter(|&i| fleet.eligible(i, now, work.peak_sram))
             .map(|i| {
@@ -424,5 +497,72 @@ mod tests {
         let loose = [10 * c4];
         let d = ea.place(&work(0, &c, &loose), &mut fleet).unwrap();
         assert_eq!(d.device, 1);
+    }
+
+    #[test]
+    fn indexed_picks_match_the_linear_scan_for_every_policy() {
+        // Lockstep replay: an indexed fleet and a scan fleet receive the
+        // exact same work sequence; every Dispatch must be identical.
+        // Heterogeneous devices (2x M7 + 2x M4, one M4 throttled) keep
+        // the KindCosts memo honest — three distinct (name, clock) keys.
+        let m7 = DeviceCfg::stm32f746();
+        let m4 = DeviceCfg::stm32f446();
+        let mut heavy = Counter::new();
+        heavy.charge(InstrClass::MulLong, 500_000);
+        heavy.charge(InstrClass::Alu, 200_000);
+        let light = ctr(40_000);
+        let dl_tight = [m7.timeline_cost(&heavy)];
+        let dl_loose = [10 * m4.timeline_cost(&heavy)];
+        let dl_mixed = [m7.timeline_cost(&light), 10 * m4.timeline_cost(&heavy)];
+        let steps: Vec<(u64, &Counter, &[u64])> = vec![
+            (0, &heavy, &[]),
+            (0, &light, &dl_loose),
+            (10, &heavy, &dl_tight),
+            (10, &light, &[]),
+            (500, &heavy, &dl_mixed),
+            (500, &light, &dl_tight),
+            (20_000, &heavy, &dl_loose),
+            (20_000, &light, &dl_mixed),
+            (1_000_000, &heavy, &[]),
+            (1_000_000, &light, &dl_tight),
+        ];
+        for kind in [
+            SchedulerKind::LeastLoaded,
+            SchedulerKind::SloAware,
+            SchedulerKind::EnergyAware,
+        ] {
+            let mut fast = Fleet::new(vec![m7, m7, m4, m4], 8);
+            let mut slow = Fleet::new(vec![m7, m7, m4, m4], 8);
+            fast.device_throttle(3, m4.clock_hz / 2);
+            slow.device_throttle(3, m4.clock_hz / 2);
+            assert!(fast.indexed, "indexed bookkeeping is the default");
+            slow.indexed = false;
+            let mut fast_pol = kind.build();
+            let mut slow_pol = kind.build();
+            for (step, &(ready, c, deadlines)) in steps.iter().enumerate() {
+                let w = BatchWork {
+                    ready,
+                    counter: c,
+                    peak_sram: 1024,
+                    images: 2,
+                    deadlines,
+                };
+                let a = fast_pol.place(&w, &mut fast);
+                let b = slow_pol.place(&w, &mut slow);
+                match (a, b) {
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.device, b.device, "{} step {step}", kind.name());
+                        assert_eq!(a.start, b.start, "{} step {step}", kind.name());
+                        assert_eq!(a.finish, b.finish, "{} step {step}", kind.name());
+                    }
+                    (a, b) => panic!(
+                        "{} step {step}: indexed={} scan={}",
+                        kind.name(),
+                        a.is_some(),
+                        b.is_some()
+                    ),
+                }
+            }
+        }
     }
 }

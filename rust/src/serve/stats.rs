@@ -5,8 +5,10 @@
 //!
 //! All latencies are *virtual MCU time*: cycles between a request's
 //! arrival and its batch's completion on a device, converted at the
-//! paper's 216 MHz clock. Wall-clock appears only as `wall_s`, the host
-//! time spent simulating.
+//! paper's 216 MHz clock. Wall-clock appears only as `wall_s`/`wall_ms`
+//! (host time spent simulating) and `replay_requests_per_sec` (trace
+//! requests replayed per host second — the simulator's own speed, the
+//! metric the event-loop trend rows track).
 
 use std::collections::BTreeMap;
 
@@ -192,6 +194,12 @@ pub struct ServeReport {
     pub engine_compiles: u64,
     /// Host wall-clock seconds spent simulating.
     pub wall_s: f64,
+    /// Host wall-clock milliseconds spent simulating (`wall_s * 1e3`,
+    /// carried separately so trend JSON needs no unit conversion).
+    pub wall_ms: f64,
+    /// Trace requests replayed per host wall-clock second — simulator
+    /// speed, as opposed to `throughput_rps` (virtual-time throughput).
+    pub replay_requests_per_sec: f64,
 }
 
 impl ServeReport {
@@ -331,6 +339,10 @@ impl ServeReport {
             "energy {:.3} mJ total, {:.4} mJ/inference\n",
             self.total_joules * 1e3,
             self.joules_per_inference() * 1e3
+        ));
+        out.push_str(&format!(
+            "replay host time {:.1}ms  replay speed {:.0} req/s\n",
+            self.wall_ms, self.replay_requests_per_sec
         ));
         out.push_str(&format!(
             "artifact cache: {} hits / {} misses ({:.0}% hit rate), {} shared hits, {} compiles, {} evictions (engine compile count +{})\n\n",
@@ -495,6 +507,11 @@ impl ServeReport {
             Json::Num(self.engine_compiles as f64),
         );
         o.insert("wall_s".into(), Json::Num(self.wall_s));
+        o.insert("wall_ms".into(), Json::Num(self.wall_ms));
+        o.insert(
+            "replay_requests_per_sec".into(),
+            Json::Num(self.replay_requests_per_sec),
+        );
         let models: Vec<Json> = self
             .per_model
             .iter()
@@ -628,6 +645,8 @@ mod tests {
             },
             engine_compiles: 1,
             wall_s: 0.01,
+            wall_ms: 10.0,
+            replay_requests_per_sec: 1000.0,
         }
     }
 
@@ -668,6 +687,10 @@ mod tests {
         assert!(js.contains("\"latency_batch\""));
         assert!(js.contains("\"miss_queue_wait\":1"));
         assert!(js.contains("\"miss_compute\":1"));
+        assert!(js.contains("\"wall_ms\":10"));
+        assert!(js.contains("\"replay_requests_per_sec\":1000"));
+        assert!(txt.contains("replay host time 10.0ms"), "{txt}");
+        assert!(txt.contains("replay speed 1000 req/s"), "{txt}");
         assert!(txt.contains("interactive"), "{txt}");
         assert!(txt.contains("n=1"), "{txt}");
         assert!(txt.contains("miss attribution: 1 queue-wait, 1 compute-bound"), "{txt}");

@@ -26,8 +26,24 @@
 //! to pre-churn ones, and they round-trip through the same JSON file as
 //! the requests ([`save_full_trace`] / [`load_full_trace`]; plain
 //! [`load_trace`] still reads such files, ignoring the events).
+//!
+//! # Streaming ingestion
+//!
+//! The envelope format materializes every request before the replay
+//! starts — fine at thousands of requests, prohibitive at millions.
+//! [`TraceSource`] is the streaming alternative: an iterator of
+//! `Result<TraceRequest>` backed either by an in-memory slice (synthetic
+//! traces, already-loaded envelopes) or by a JSON-lines reader
+//! ([`save_trace_jsonl`] writes that format: one request object per
+//! line, no envelope) that holds a single line in memory at a time.
+//! [`TraceSource::from_reader`] auto-detects which of the two formats it
+//! was handed, so `--trace-file` accepts both; malformed or truncated
+//! JSON-lines input fails with the offending line number. Streaming
+//! sources carry requests only — fleet-event streams still ride the
+//! envelope ([`load_full_trace`]).
 
 use std::collections::BTreeMap;
+use std::io::BufRead;
 use std::path::Path;
 
 use crate::util::json::Json;
@@ -425,23 +441,44 @@ fn u64_field(v: &Json, key: &str) -> Result<u64> {
     }
 }
 
-/// Serialize a trace to JSON. `arrival` fits a JSON double for any
-/// realistic horizon; full-range `u64` fields (`seed`, `deadline`) are
-/// written as decimal strings so they round-trip losslessly.
+/// Serialize one request as the object shape shared by the envelope's
+/// `requests` array and the JSON-lines stream. `arrival` fits a JSON
+/// double for any realistic horizon; full-range `u64` fields (`seed`,
+/// `deadline`) are written as decimal strings so they round-trip
+/// losslessly.
+pub fn request_to_json(r: &TraceRequest) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("id".into(), Json::Num(r.id as f64));
+    o.insert("arrival".into(), Json::Num(r.arrival as f64));
+    o.insert("key_idx".into(), Json::Num(r.key_idx as f64));
+    o.insert("seed".into(), Json::Str(r.seed.to_string()));
+    o.insert("class".into(), Json::Str(r.class.name().into()));
+    o.insert("deadline".into(), Json::Str(r.deadline.to_string()));
+    Json::Obj(o)
+}
+
+/// Parse one request object — an element of the envelope's `requests`
+/// array, or one JSON-lines record.
+pub fn request_from_json(v: &Json) -> Result<TraceRequest> {
+    let class_name = v
+        .get("class")
+        .and_then(|c| c.as_str())
+        .unwrap_or("batch");
+    let class = SloClass::parse(class_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown SLO class `{class_name}`"))?;
+    Ok(TraceRequest {
+        id: u64_field(v, "id")? as usize,
+        arrival: u64_field(v, "arrival")?,
+        key_idx: u64_field(v, "key_idx")? as usize,
+        seed: u64_field(v, "seed")?,
+        class,
+        deadline: u64_field(v, "deadline")?,
+    })
+}
+
+/// Serialize a trace to JSON (the versioned envelope format).
 pub fn trace_to_json(trace: &[TraceRequest]) -> Json {
-    let requests: Vec<Json> = trace
-        .iter()
-        .map(|r| {
-            let mut o = BTreeMap::new();
-            o.insert("id".into(), Json::Num(r.id as f64));
-            o.insert("arrival".into(), Json::Num(r.arrival as f64));
-            o.insert("key_idx".into(), Json::Num(r.key_idx as f64));
-            o.insert("seed".into(), Json::Str(r.seed.to_string()));
-            o.insert("class".into(), Json::Str(r.class.name().into()));
-            o.insert("deadline".into(), Json::Str(r.deadline.to_string()));
-            Json::Obj(o)
-        })
-        .collect();
+    let requests: Vec<Json> = trace.iter().map(request_to_json).collect();
     let mut o = BTreeMap::new();
     o.insert("version".into(), Json::Num(1.0));
     o.insert("requests".into(), Json::Arr(requests));
@@ -454,25 +491,7 @@ pub fn trace_from_json(js: &Json) -> Result<Vec<TraceRequest>> {
         .get("requests")
         .and_then(|r| r.as_arr())
         .ok_or_else(|| anyhow::anyhow!("trace file has no `requests` array"))?;
-    requests
-        .iter()
-        .map(|v| {
-            let class_name = v
-                .get("class")
-                .and_then(|c| c.as_str())
-                .unwrap_or("batch");
-            let class = SloClass::parse(class_name)
-                .ok_or_else(|| anyhow::anyhow!("unknown SLO class `{class_name}`"))?;
-            Ok(TraceRequest {
-                id: u64_field(v, "id")? as usize,
-                arrival: u64_field(v, "arrival")?,
-                key_idx: u64_field(v, "key_idx")? as usize,
-                seed: u64_field(v, "seed")?,
-                class,
-                deadline: u64_field(v, "deadline")?,
-            })
-        })
-        .collect()
+    requests.iter().map(request_from_json).collect()
 }
 
 /// Serialize a fleet-event stream. `at` fits a JSON double for any
@@ -575,6 +594,177 @@ pub fn load_full_trace<P: AsRef<Path>>(path: P) -> Result<(Vec<TraceRequest>, Ve
     let src = std::fs::read_to_string(path.as_ref())?;
     let js = Json::parse(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?;
     Ok((trace_from_json(&js)?, fleet_events_from_json(&js)?))
+}
+
+/// Write a trace as JSON-lines: one [`request_to_json`] object per
+/// line, no envelope. [`TraceSource`] reads the format back one line at
+/// a time, so a replay over the file never materializes the full trace.
+pub fn save_trace_jsonl<P: AsRef<Path>>(path: P, trace: &[TraceRequest]) -> Result<()> {
+    use std::io::Write;
+    let file = std::fs::File::create(path.as_ref())?;
+    let mut w = std::io::BufWriter::new(file);
+    for r in trace {
+        w.write_all(request_to_json(r).to_string_compact().as_bytes())?;
+        w.write_all(b"\n")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// A streaming source of trace requests: iterate to draw requests in
+/// trace order, one at a time.
+///
+/// Three backings share the interface: a borrowed slice (synthetic
+/// traces, already-loaded envelopes), an owned vector, and a buffered
+/// JSON-lines reader that keeps a single line in memory — the backing
+/// that lets a million-request replay run in bounded space. Reader
+/// errors carry the 1-based line number of the offending line; after
+/// the first error the source is poisoned and yields nothing further
+/// (a corrupt stream has no trustworthy remainder).
+pub struct TraceSource<'a> {
+    inner: SourceInner<'a>,
+}
+
+enum SourceInner<'a> {
+    Slice(std::slice::Iter<'a, TraceRequest>),
+    Owned(std::vec::IntoIter<TraceRequest>),
+    Lines {
+        reader: Box<dyn BufRead + 'a>,
+        /// 1-based number of the last line read from `reader`.
+        line: usize,
+        /// First request, already parsed by the format sniffer.
+        pending: Option<TraceRequest>,
+        /// Set after the first error; the stream is poisoned.
+        failed: bool,
+    },
+}
+
+impl<'a> TraceSource<'a> {
+    /// Stream a trace that is already in memory, without copying it.
+    pub fn from_slice(trace: &'a [TraceRequest]) -> TraceSource<'a> {
+        TraceSource { inner: SourceInner::Slice(trace.iter()) }
+    }
+
+    /// Stream an owned, already-materialized trace.
+    pub fn from_vec(trace: Vec<TraceRequest>) -> TraceSource<'static> {
+        TraceSource { inner: SourceInner::Owned(trace.into_iter()) }
+    }
+
+    /// Stream requests from `reader`, auto-detecting the format from
+    /// its first non-empty line:
+    ///
+    /// - a JSON object carrying a `requests` key is a one-line envelope
+    ///   (what [`save_trace`] writes) — parsed whole, then iterated;
+    /// - any other complete JSON value is the first JSON-lines record —
+    ///   subsequent lines stream one at a time;
+    /// - a line that is not complete JSON on its own is assumed to open
+    ///   a pretty-printed envelope — the rest of the input is read and
+    ///   parsed as one document.
+    ///
+    /// Fleet events never travel through a streaming source; envelope
+    /// files that carry them load via [`load_full_trace`].
+    pub fn from_reader(mut reader: impl BufRead + 'a) -> Result<TraceSource<'a>> {
+        let mut first = String::new();
+        let mut line = 0usize;
+        loop {
+            first.clear();
+            line += 1;
+            if reader.read_line(&mut first)? == 0 {
+                // Empty input: a zero-request trace.
+                return Ok(TraceSource::from_vec(Vec::new()));
+            }
+            if !first.trim().is_empty() {
+                break;
+            }
+        }
+        match Json::parse(first.trim()) {
+            Ok(js) if js.get("requests").is_some() => {
+                // Single-line envelope; the file holds nothing else.
+                Ok(TraceSource::from_vec(trace_from_json(&js)?))
+            }
+            Ok(js) => {
+                let req = request_from_json(&js)
+                    .map_err(|e| anyhow::anyhow!("trace line {line}: {e}"))?;
+                Ok(TraceSource {
+                    inner: SourceInner::Lines {
+                        reader: Box::new(reader),
+                        line,
+                        pending: Some(req),
+                        failed: false,
+                    },
+                })
+            }
+            Err(first_err) => {
+                // Not complete JSON by itself: the opening line of a
+                // pretty-printed envelope, or garbage.
+                let mut rest = String::new();
+                reader.read_to_string(&mut rest)?;
+                let js = Json::parse(&format!("{first}{rest}")).map_err(|_| {
+                    anyhow::anyhow!(
+                        "trace line {line}: neither a JSON-lines request \
+                         nor the start of a trace envelope ({first_err})"
+                    )
+                })?;
+                Ok(TraceSource::from_vec(trace_from_json(&js)?))
+            }
+        }
+    }
+
+    /// Open `path` as a streaming trace source (format auto-detected,
+    /// see [`from_reader`](TraceSource::from_reader)).
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<TraceSource<'static>> {
+        let file = std::fs::File::open(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?;
+        TraceSource::from_reader(std::io::BufReader::new(file))
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))
+    }
+}
+
+impl Iterator for TraceSource<'_> {
+    type Item = Result<TraceRequest>;
+
+    fn next(&mut self) -> Option<Result<TraceRequest>> {
+        match &mut self.inner {
+            SourceInner::Slice(it) => it.next().cloned().map(Ok),
+            SourceInner::Owned(it) => it.next().map(Ok),
+            SourceInner::Lines { reader, line, pending, failed } => {
+                if *failed {
+                    return None;
+                }
+                if let Some(r) = pending.take() {
+                    return Some(Ok(r));
+                }
+                let mut buf = String::new();
+                loop {
+                    buf.clear();
+                    *line += 1;
+                    let ln = *line;
+                    match reader.read_line(&mut buf) {
+                        Ok(0) => return None,
+                        Ok(_) => {}
+                        Err(e) => {
+                            *failed = true;
+                            return Some(Err(anyhow::anyhow!("trace line {ln}: {e}")));
+                        }
+                    }
+                    let text = buf.trim();
+                    if text.is_empty() {
+                        continue;
+                    }
+                    let parsed = Json::parse(text)
+                        .map_err(|e| anyhow::anyhow!("trace line {ln}: {e}"))
+                        .and_then(|js| {
+                            request_from_json(&js)
+                                .map_err(|e| anyhow::anyhow!("trace line {ln}: {e}"))
+                        });
+                    if parsed.is_err() {
+                        *failed = true;
+                    }
+                    return Some(parsed);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -815,5 +1005,98 @@ mod tests {
         assert!(trace_from_json(&Json::parse("{}").unwrap()).is_err());
         let bad = Json::parse(r#"{"requests":[{"id":0,"arrival":5,"key_idx":0,"seed":"1","class":"warp","deadline":"9"}]}"#).unwrap();
         assert!(trace_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_the_streaming_source() {
+        let cfg = TraceCfg::new(60, 75_000, 23).with_skew(0.8).with_slo([1.0, 1.0, 1.0]);
+        let tr = synth_trace(&cfg, 3);
+        let path = std::env::temp_dir().join("mcu_mixq_trace_jsonl_roundtrip.jsonl");
+        save_trace_jsonl(&path, &tr).unwrap();
+        let back: Vec<TraceRequest> = TraceSource::open(&path)
+            .unwrap()
+            .collect::<Result<_>>()
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(tr, back, "JSON-lines round-trip must be lossless");
+        // The slice and owned backings yield the same stream.
+        let from_slice: Vec<TraceRequest> = TraceSource::from_slice(&tr)
+            .collect::<Result<_>>()
+            .unwrap();
+        assert_eq!(tr, from_slice);
+        let from_vec: Vec<TraceRequest> = TraceSource::from_vec(tr.clone())
+            .collect::<Result<_>>()
+            .unwrap();
+        assert_eq!(tr, from_vec);
+    }
+
+    #[test]
+    fn streaming_source_auto_detects_legacy_envelopes() {
+        let cfg = TraceCfg::new(25, 60_000, 29).with_slo([1.0, 1.0, 1.0]);
+        let tr = synth_trace(&cfg, 2);
+        // Compact single-line envelope: exactly what save_trace writes.
+        let path = std::env::temp_dir().join("mcu_mixq_trace_envelope_stream.json");
+        save_trace(&path, &tr).unwrap();
+        let back: Vec<TraceRequest> = TraceSource::open(&path)
+            .unwrap()
+            .collect::<Result<_>>()
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(tr, back, "single-line envelope auto-detected");
+        // Pretty-printed (multi-line) envelope: the first line alone is
+        // not complete JSON, so the sniffer reads the whole document.
+        let rows: Vec<String> = tr
+            .iter()
+            .map(|r| format!("    {}", request_to_json(r).to_string_compact()))
+            .collect();
+        let pretty = format!(
+            "{{\n  \"version\": 1,\n  \"requests\": [\n{}\n  ]\n}}\n",
+            rows.join(",\n")
+        );
+        let back2: Vec<TraceRequest> = TraceSource::from_reader(std::io::Cursor::new(pretty))
+            .unwrap()
+            .collect::<Result<_>>()
+            .unwrap();
+        assert_eq!(tr, back2, "pretty-printed envelope auto-detected");
+        // Empty input is a zero-request trace, not an error.
+        assert_eq!(
+            TraceSource::from_reader(std::io::Cursor::new("\n\n")).unwrap().count(),
+            0
+        );
+    }
+
+    #[test]
+    fn corrupt_jsonl_lines_name_their_line_number() {
+        let tr = synth_trace(&TraceCfg::new(3, 50_000, 37), 1);
+        // Line 1 valid, line 2 blank, line 3 truncated mid-object.
+        let text = format!(
+            "{}\n\n{{\"id\":1,\"arrival\":12",
+            request_to_json(&tr[0]).to_string_compact()
+        );
+        let mut src = TraceSource::from_reader(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(src.next().unwrap().unwrap(), tr[0]);
+        let err = src.next().unwrap().unwrap_err().to_string();
+        assert!(err.contains("trace line 3"), "error names the bad line: {err}");
+        assert!(src.next().is_none(), "a corrupt stream is poisoned after the error");
+
+        // A structurally valid record with an unknown class also names
+        // its line (here the blank leading line shifts it to line 2).
+        let text = format!(
+            "\n{}\n",
+            r#"{"id":0,"arrival":5,"key_idx":0,"seed":"1","class":"warp","deadline":"9"}"#
+        );
+        let err = TraceSource::from_reader(std::io::Cursor::new(text))
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("trace line 2"), "{err}");
+        assert!(err.contains("warp"), "{err}");
+
+        // Garbage that is neither JSONL nor an envelope fails up front.
+        let err = TraceSource::from_reader(std::io::Cursor::new("not json at all"))
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("trace line 1"), "{err}");
     }
 }
