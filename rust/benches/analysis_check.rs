@@ -1,0 +1,65 @@
+//! Static-analyzer throughput bench.
+//!
+//! `analysis::analyze` sits on the registry's compile path (one pass per
+//! key) and will sit in the NAS search's inner loop as the legality
+//! oracle, so it must stay orders of magnitude cheaper than the compile
+//! it audits. This bench times the full pass over the zoo backbones at
+//! every SLBC bitwidth and asserts (a) zero Error findings on clean
+//! artifacts and (b) analysis cost well under compile cost.
+//!
+//! Regenerate with `cargo bench --bench analysis_check`.
+
+use mcu_mixq::analysis;
+use mcu_mixq::engine::CompiledModel;
+use mcu_mixq::models;
+use mcu_mixq::ops::Method;
+use mcu_mixq::quant::BitConfig;
+use mcu_mixq::target::Target;
+use mcu_mixq::util::bench::{Bench, Table};
+use mcu_mixq::util::prng::Rng;
+
+fn main() {
+    let bench = Bench::fast();
+    let m7 = Target::lookup("stm32f746").unwrap();
+    let mut table = Table::new(vec![
+        "model", "method", "bits", "analyze ns", "compile ns", "ratio", "errors",
+    ]);
+    println!("analysis_check — static analyzer cost per compiled artifact\n");
+
+    for model in [models::vgg_tiny(10, 16), models::mobilenet_tiny(2, 16)] {
+        let mut rng = Rng::new(1000);
+        let params: Vec<f32> =
+            (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+        for method in [Method::Slbc, Method::RpSlbc] {
+            for bits in [2u8, 4, 8] {
+                let cfg = BitConfig::uniform(model.layers.len(), bits);
+                let compile_t = bench.run("compile", || {
+                    CompiledModel::compile_for(&model, &params, &cfg, method, m7).unwrap()
+                });
+                let cm =
+                    CompiledModel::compile_for(&model, &params, &cfg, method, m7).unwrap();
+                let analyze_t = bench.run("analyze", || analysis::analyze(&cm));
+                let rep = analysis::analyze(&cm);
+                assert_eq!(
+                    rep.errors(),
+                    0,
+                    "{}/{}/w{bits}: {:?}",
+                    model.name,
+                    method.name(),
+                    rep.error_rules()
+                );
+                table.row(vec![
+                    model.name.clone(),
+                    method.name().to_string(),
+                    bits.to_string(),
+                    format!("{:.0}", analyze_t.mean_ns),
+                    format!("{:.0}", compile_t.mean_ns),
+                    format!("{:.2}x", analyze_t.mean_ns / compile_t.mean_ns.max(1.0)),
+                    rep.errors().to_string(),
+                ]);
+            }
+        }
+    }
+    table.print();
+    println!("\nall artifacts statically clean; analyzer stays off the hot path");
+}

@@ -1,0 +1,165 @@
+//! Structured diagnostics for the static analyzer.
+//!
+//! Every finding the analyzer emits is a [`Diagnostic`]: a severity, a
+//! stable machine-readable rule id (`"packing/lane-overflow"`), the layer
+//! it anchors to (when layer-scoped), a human message, and a hint that
+//! says what to do about it. Rule ids are `&'static str` constants in
+//! [`rules`] so tests and the strict compile gate can pin the exact
+//! rejection reason instead of matching message prose.
+
+use crate::util::json::Json;
+
+/// How bad a finding is. Ordering is `Info < Warning < Error`, so
+/// `max()` over a report yields the worst severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// Expected-by-construction observations worth surfacing (plan
+    /// dedup, documented bitwidth clamping, the per-report summary).
+    Info,
+    /// Suspicious but not provably wrong: stale codegen plans, >90%
+    /// resource watermarks, unsupported-bitwidth clamping.
+    Warning,
+    /// A proof of unsoundness or a hard resource violation. Any Error
+    /// finding fails `CompiledModel::verify_strict`.
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One analyzer finding. See the module doc for field semantics.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Stable rule id from [`rules`] — the machine-readable contract.
+    pub rule: &'static str,
+    /// Layer index the finding anchors to; `None` for model-wide rules.
+    pub layer: Option<usize>,
+    pub message: String,
+    pub hint: String,
+}
+
+impl Diagnostic {
+    pub fn error(rule: &'static str, layer: Option<usize>, message: String, hint: String) -> Self {
+        Diagnostic { severity: Severity::Error, rule, layer, message, hint }
+    }
+
+    pub fn warning(rule: &'static str, layer: Option<usize>, message: String, hint: String) -> Self {
+        Diagnostic { severity: Severity::Warning, rule, layer, message, hint }
+    }
+
+    pub fn info(rule: &'static str, layer: Option<usize>, message: String, hint: String) -> Self {
+        Diagnostic { severity: Severity::Info, rule, layer, message, hint }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("severity".to_string(), Json::Str(self.severity.name().to_string()));
+        o.insert("rule".to_string(), Json::Str(self.rule.to_string()));
+        o.insert(
+            "layer".to_string(),
+            match self.layer {
+                Some(i) => Json::Num(i as f64),
+                None => Json::Null,
+            },
+        );
+        o.insert("message".to_string(), Json::Str(self.message.clone()));
+        o.insert("hint".to_string(), Json::Str(self.hint.clone()));
+        Json::Obj(o)
+    }
+}
+
+/// Stable rule ids. Grouped by namespace: `packing/` (lane arithmetic),
+/// `resource/` (SRAM/flash fit), `plan/` (artifact self-consistency),
+/// `quant/` (parameter representability), `graph/` (cross-layer range
+/// flow), `analysis/` (report meta).
+pub mod rules {
+    /// A packed field's worst-case partial sum exceeds its capacity —
+    /// lanes can silently corrupt neighbours. The pinned over-pack rule.
+    pub const LANE_OVERFLOW: &str = "packing/lane-overflow";
+    /// The kernel taps don't fit the carrier at the chosen field width.
+    pub const KERNEL_EXCEEDS_LANE: &str = "packing/kernel-exceeds-lane";
+    /// Kernel bitwidths disagree with the layer's quant config / the
+    /// graph's input tensor width.
+    pub const INPUT_WIDTH_MISMATCH: &str = "packing/input-width-mismatch";
+    /// Worst-case per-output accumulation can overflow the i64/u64
+    /// accumulator the kernels reduce into.
+    pub const ACCUMULATOR_OVERFLOW: &str = "packing/accumulator-overflow";
+
+    /// Arena + scratch peak exceeds the target's SRAM.
+    pub const SRAM_EXCEEDED: &str = "resource/sram-exceeded";
+    /// SRAM peak above 90% of the target budget.
+    pub const SRAM_HIGH_WATERMARK: &str = "resource/sram-high-watermark";
+    /// Flash image exceeds the target's flash.
+    pub const FLASH_EXCEEDED: &str = "resource/flash-exceeded";
+    /// Flash image above 90% of the target budget.
+    pub const FLASH_HIGH_WATERMARK: &str = "resource/flash-high-watermark";
+
+    /// Codegen's lane plan disagrees with the packed kernel actually
+    /// executed (e.g. layer 0 packs 8-bit inputs, codegen priced cfg
+    /// bits) — the perf model and the runtime diverge.
+    pub const STALE_LANE_PLAN: &str = "plan/stale-lane-plan";
+    /// Several layers resolved to the same lane plan (dedup note).
+    pub const DUPLICATE_LANE_PLAN: &str = "plan/duplicate-lane-plan";
+    /// A lane plan exists that no runtime path can execute.
+    pub const DEAD_LANE_PLAN: &str = "plan/dead-lane-plan";
+    /// An SLBC-family layer has no pre-packed kernel.
+    pub const MISSING_KERNEL: &str = "plan/missing-kernel";
+    /// Packed kernel registers disagree with the lane config's layout
+    /// (wrong register count / offsets / duplicated field widths).
+    pub const LAYOUT_MISMATCH: &str = "plan/layout-mismatch";
+    /// The arena plan double-books live tensors or is malformed.
+    pub const ARENA_OVERLAP: &str = "plan/arena-overlap";
+
+    /// Quantized weights outside the symmetric representable range, or
+    /// bitwidth disagreeing with the layer config.
+    pub const WEIGHT_OUT_OF_RANGE: &str = "quant/weight-out-of-range";
+    /// Non-finite or non-positive dequant scale.
+    pub const SCALE_OUT_OF_RANGE: &str = "quant/scale-out-of-range";
+    /// The method silently clamps the requested bitwidths
+    /// (`Method::effective_bits`) — documented behaviour, surfaced.
+    pub const UNSUPPORTED_BITS: &str = "quant/unsupported-bits";
+
+    /// A layer's graph input tensor width disagrees with the width the
+    /// kernels consume — cross-layer range flow is broken.
+    pub const WIDTH_MISMATCH: &str = "graph/width-mismatch";
+
+    /// Per-report roll-up (always emitted, Info).
+    pub const SUMMARY: &str = "analysis/summary";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_info_warning_error() {
+        assert!(Severity::Info < Severity::Warning);
+        assert!(Severity::Warning < Severity::Error);
+        assert_eq!(
+            [Severity::Warning, Severity::Error, Severity::Info].iter().max(),
+            Some(&Severity::Error)
+        );
+    }
+
+    #[test]
+    fn diagnostic_json_carries_schema_keys() {
+        let d = Diagnostic::error(
+            rules::LANE_OVERFLOW,
+            Some(3),
+            "worst-case 450 > capacity 255".into(),
+            "widen the field".into(),
+        );
+        let js = d.to_json().to_string_compact();
+        assert!(js.contains("\"rule\":\"packing/lane-overflow\""));
+        assert!(js.contains("\"severity\":\"error\""));
+        assert!(js.contains("\"layer\":3"));
+    }
+}

@@ -1,0 +1,285 @@
+//! Plan-consistency lints: the parts of a [`CompiledModel`] that must
+//! agree with each other — codegen plans vs packed kernels, kernel
+//! register layouts vs lane configs, quant params vs representable
+//! ranges, the arena plan vs the graph's tensor lifetimes.
+
+use std::collections::HashMap;
+
+use crate::engine::CompiledModel;
+use crate::ops::slbc::LayerKernel;
+use crate::ops::Method;
+use crate::quant::weight_limit;
+use crate::simd::poly::dot_group_size;
+
+use super::diag::{rules, Diagnostic};
+
+fn is_slbc(method: Method) -> bool {
+    matches!(method, Method::Slbc | Method::RpSlbc)
+}
+
+/// Run every lint over `cm`, returning the findings.
+pub fn lint_model(cm: &CompiledModel) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    // (sx, sk, taps, field) -> layers sharing that lane plan.
+    let mut plan_users: HashMap<(u32, u32, u32, u32), Vec<usize>> = HashMap::new();
+
+    for (i, l) in cm.model.layers.iter().enumerate() {
+        let kc = &cm.codegen.kernels[i];
+        let kernel = cm.kernels.layer(i);
+
+        if is_slbc(cm.method) && kernel.is_none() {
+            diags.push(Diagnostic::error(
+                rules::MISSING_KERNEL,
+                Some(i),
+                format!("{} layer has no pre-packed kernel", cm.method.name()),
+                "KernelCache::build skipped this layer; the run path would fall back \
+                 to on-the-fly packing"
+                    .into(),
+            ));
+        }
+        if !is_slbc(cm.method) && kc.lane_plan.is_some() {
+            diags.push(Diagnostic::warning(
+                rules::DEAD_LANE_PLAN,
+                Some(i),
+                format!("codegen carries a lane plan but {} never packs", cm.method.name()),
+                "drop the plan or switch the method".into(),
+            ));
+        }
+
+        match kernel {
+            Some(LayerKernel::Conv(ck)) => {
+                let spec = ck.plan.conv.spec;
+                plan_users
+                    .entry((spec.sx_bits, spec.sk_bits, spec.k_taps, spec.field))
+                    .or_default()
+                    .push(i);
+                if ck.plan.field != spec.field {
+                    diags.push(Diagnostic::error(
+                        rules::LAYOUT_MISMATCH,
+                        Some(i),
+                        format!(
+                            "LanePlan.field {} disagrees with its own spec's field {}",
+                            ck.plan.field, spec.field
+                        ),
+                        "the plan was mutated after planning".into(),
+                    ));
+                }
+                // Codegen prices `cfg.abits[i]`; the kernel packs the
+                // width actually flowing in (8-bit at layer 0). Both
+                // are intentional today — surface the divergence.
+                if let Some(p) = kc.lane_plan {
+                    if p.conv.spec != spec {
+                        diags.push(Diagnostic::warning(
+                            rules::STALE_LANE_PLAN,
+                            Some(i),
+                            format!(
+                                "codegen planned (sx={}, sk={}, field={}) but the packed \
+                                 kernel runs (sx={}, sk={}, field={})",
+                                p.conv.spec.sx_bits,
+                                p.conv.spec.sk_bits,
+                                p.conv.spec.field,
+                                spec.sx_bits,
+                                spec.sk_bits,
+                                spec.field
+                            ),
+                            "perf predictions price the codegen plan; the runtime \
+                             executes the kernel's"
+                                .into(),
+                        ));
+                    }
+                }
+                // Packed tap registers: one carrier per (out-channel,
+                // tap, effective in-channel).
+                let chan_eff = if ck.depthwise { 1 } else { l.cin };
+                let want = l.cout * l.k * chan_eff;
+                if ck.vks.len() != want {
+                    diags.push(Diagnostic::error(
+                        rules::LAYOUT_MISMATCH,
+                        Some(i),
+                        format!(
+                            "kernel holds {} packed tap registers, layout needs {} \
+                             (cout {} x k {} x chan {})",
+                            ck.vks.len(),
+                            want,
+                            l.cout,
+                            l.k,
+                            chan_eff
+                        ),
+                        "rebuild the KernelCache".into(),
+                    ));
+                }
+                if ck.off != 1i64 << (ck.wbits - 1) {
+                    diags.push(Diagnostic::error(
+                        rules::LAYOUT_MISMATCH,
+                        Some(i),
+                        format!(
+                            "offset {} is not 2^(wbits-1) = {} — the unsigned-tap \
+                             correction would be wrong",
+                            ck.off,
+                            1i64 << (ck.wbits - 1)
+                        ),
+                        "rebuild the KernelCache".into(),
+                    ));
+                }
+            }
+            Some(LayerKernel::Dense(dk)) => {
+                let g = dot_group_size(dk.abits as u32, dk.wbits as u32, 63);
+                let want_regs = l.cin.div_ceil(g);
+                if dk.regs_per_oc != want_regs {
+                    diags.push(Diagnostic::error(
+                        rules::LAYOUT_MISMATCH,
+                        Some(i),
+                        format!(
+                            "dense kernel packs {} registers per output channel, the \
+                             dot layout needs {} (cin {} / group {})",
+                            dk.regs_per_oc, want_regs, l.cin, g
+                        ),
+                        "rebuild the KernelCache".into(),
+                    ));
+                }
+                if dk.b_regs.len() != l.cout * dk.regs_per_oc {
+                    diags.push(Diagnostic::error(
+                        rules::LAYOUT_MISMATCH,
+                        Some(i),
+                        format!(
+                            "dense kernel holds {} packed registers, layout needs {} \
+                             (cout {} x {})",
+                            dk.b_regs.len(),
+                            l.cout * dk.regs_per_oc,
+                            l.cout,
+                            dk.regs_per_oc
+                        ),
+                        "rebuild the KernelCache".into(),
+                    ));
+                }
+                if dk.off != 1i64 << (dk.wbits - 1) {
+                    diags.push(Diagnostic::error(
+                        rules::LAYOUT_MISMATCH,
+                        Some(i),
+                        format!(
+                            "dense offset {} is not 2^(wbits-1) = {}",
+                            dk.off,
+                            1i64 << (dk.wbits - 1)
+                        ),
+                        "rebuild the KernelCache".into(),
+                    ));
+                }
+                // Codegen's conv-style lane plan on a dense layer is a
+                // code-size proxy only; the dot packing above is what
+                // runs. Expected by construction — no finding.
+            }
+            None => {}
+        }
+
+        // Quant representability. `quantize_weights` clamps into the
+        // symmetric range, so any violation means the artifact was
+        // mutated or deserialized from a bad image.
+        let (qw, _) = &cm.quantized[i];
+        if qw.bits != cm.cfg.wbits[i] {
+            diags.push(Diagnostic::error(
+                rules::WEIGHT_OUT_OF_RANGE,
+                Some(i),
+                format!(
+                    "quantized weights carry {}-bit values, config says {}",
+                    qw.bits, cm.cfg.wbits[i]
+                ),
+                "re-quantize from the BitConfig actually compiled".into(),
+            ));
+        }
+        if !qw.in_range() {
+            diags.push(Diagnostic::error(
+                rules::WEIGHT_OUT_OF_RANGE,
+                Some(i),
+                format!(
+                    "weight values escape the symmetric {}-bit range [{}, {}]",
+                    qw.bits,
+                    -weight_limit(qw.bits),
+                    weight_limit(qw.bits)
+                ),
+                "re-quantize; packed kernels assume the symmetric range".into(),
+            ));
+        }
+        if !qw.scale.is_finite() || qw.scale <= 0.0 {
+            diags.push(Diagnostic::error(
+                rules::SCALE_OUT_OF_RANGE,
+                Some(i),
+                format!("dequant scale {} is not finite-positive", qw.scale),
+                "re-quantize; a degenerate scale collapses every activation".into(),
+            ));
+        }
+
+        // Documented bitwidth clamping (Method::effective_bits): the
+        // kernels silently run at different widths than requested.
+        let (we, ae) = cm.method.effective_bits(cm.cfg.wbits[i], cm.cfg.abits[i]);
+        if (we, ae) != (cm.cfg.wbits[i], cm.cfg.abits[i]) {
+            diags.push(Diagnostic::info(
+                rules::UNSUPPORTED_BITS,
+                Some(i),
+                format!(
+                    "{} clamps w{}/a{} to w{we}/a{ae}",
+                    cm.method.name(),
+                    cm.cfg.wbits[i],
+                    cm.cfg.abits[i]
+                ),
+                "perf and accuracy are priced at the clamped widths".into(),
+            ));
+        }
+
+    }
+
+    // Dedup note: layers sharing one lane plan is the memoized-planner
+    // fast path working as intended; surface it so a future per-layer
+    // field search knows which layers are coupled.
+    for (key, layers) in &plan_users {
+        if layers.len() > 1 {
+            let mut sorted = layers.clone();
+            sorted.sort_unstable();
+            diags.push(Diagnostic::info(
+                rules::DUPLICATE_LANE_PLAN,
+                Some(sorted[0]),
+                format!(
+                    "layers {:?} share one lane plan (sx={}, sk={}, k={}, field={})",
+                    sorted, key.0, key.1, key.2, key.3
+                ),
+                "expected: best_plan memoizes per (bits, taps)".into(),
+            ));
+        }
+    }
+
+    // Arena plan structural checks. `MemoryPlan::validate` re-proves
+    // no two simultaneously-live tensors overlap.
+    if cm.plan.offsets.len() != cm.graph.tensors.len() {
+        diags.push(Diagnostic::error(
+            rules::ARENA_OVERLAP,
+            None,
+            format!(
+                "arena plan has {} offsets for {} tensors",
+                cm.plan.offsets.len(),
+                cm.graph.tensors.len()
+            ),
+            "re-run plan_memory on the compiled graph".into(),
+        ));
+    } else if let Err(e) = cm.plan.validate(&cm.graph) {
+        diags.push(Diagnostic::error(
+            rules::ARENA_OVERLAP,
+            None,
+            e,
+            "re-run plan_memory on the compiled graph".into(),
+        ));
+    }
+
+    // Flash round-trip: the image must decode back to the quantized
+    // weights the kernels were packed from.
+    if !cm.flash.matches(&cm.quantized) {
+        diags.push(Diagnostic::error(
+            rules::LAYOUT_MISMATCH,
+            None,
+            "flash image does not round-trip to the compiled quantized weights".into(),
+            "rebuild the FlashImage; a stale image ships wrong weights".into(),
+        ));
+    }
+
+    // Sort for stable output: severity descending, then layer.
+    diags.sort_by(|a, b| b.severity.cmp(&a.severity).then(a.layer.cmp(&b.layer)));
+    diags
+}

@@ -1,0 +1,359 @@
+//! `mixq-check` — static packing-safety & resource analysis of compiled
+//! models. No inference is executed: every verdict is proved from the
+//! artifact alone.
+//!
+//! # Why a static pass
+//!
+//! The whole SLBC premise is packing several sub-byte operands into one
+//! SIMD register and multiplying once. That is only sound if every
+//! guard-bit field provably contains its worst-case partial sum; the
+//! planner encodes that arithmetic when *choosing* a plan, but nothing
+//! audited a whole [`CompiledModel`] end to end — kernels can be
+//! rebuilt, mutated, or deserialized from a stale image after planning.
+//! This module is that auditor, and doubles as the legality oracle for
+//! the mixed-precision NAS search (ROADMAP item 1): a candidate
+//! `BitConfig` is feasible iff `analyze` reports no Error.
+//!
+//! # The guard-bit math
+//!
+//! Pack an `sx`-bit signal `x` and an `sk`-bit kernel `k` at field
+//! stride `S`:
+//!
+//! ```text
+//! R1 = Σ_i x[i]·2^(i·S),   R2 = Σ_j k[j]·2^(j·S)
+//! R1·R2 = Σ_n y[n]·2^(n·S)   with   y = conv_full(x, k)
+//! ```
+//!
+//! Field `n` of the product accumulates `y[n] = Σ_{i+j=n} x[i]·k[j]`.
+//! With `G` signal elements and `K` taps, the number of `(i, j)` pairs
+//! summing to any fixed `n` is at most `min(G, K)`, and each term is at
+//! most `(2^sx − 1)·(2^sk − 1)` — the SLBC offset trick (`k + 2^(sk−1)`)
+//! makes taps unsigned with maximum exactly `2^sk − 1`. Hence the exact
+//! worst case
+//!
+//! ```text
+//! worst(S-field) = min(G, K) · (2^sx − 1) · (2^sk − 1)
+//! ```
+//!
+//! The planner's *sufficient* condition is the classical derivation:
+//! `min(G, K) ≤ K`, so
+//!
+//! ```text
+//! worst ≤ K · (2^sx − 1)(2^sk − 1) < 2^(sx + sk + ceil(log2 K))
+//! ```
+//!
+//! i.e. **field width S ≥ sx_bits + sk_bits + ceil(log2(taps))** never
+//! overflows — that is `simd::poly::field_width`, the lower bound
+//! `PackSpec::new` builds with and `best_plan` searches up from. The
+//! analyzer checks the exact bound instead, so it (a) accepts every
+//! planner-chosen spec by construction, (b) proves the *tighter* safety
+//! of carrier-truncated specs where `G < K`, and (c) refutes any
+//! hand-mutated or corrupted plan whose field undercuts the bound. The
+//! bound's exactness (no false "safe", no over-tightness) is pinned
+//! against brute-force enumeration in `tests/analysis_check.rs`.
+//!
+//! # What runs
+//!
+//! [`analyze`] composes three passes over a [`CompiledModel`]:
+//!
+//! 1. [`lane`] — per-layer worst-case interval propagation (above),
+//!    plus the cross-layer width chain through the graph and i64
+//!    accumulator bounds;
+//! 2. [`resources`] — SRAM peak (arena high-water mark **plus** kernel
+//!    scratch: ring rows, window sums, packed registers, correction,
+//!    row accumulator) and flash footprint, layer by layer, against the
+//!    compiled-in [`Target`](crate::target::Target) budgets;
+//! 3. [`lints`] — plan self-consistency: stale/dead/duplicate lane
+//!    plans, kernel register layouts vs lane configs, quant params vs
+//!    representable ranges, arena overlap, flash round-trip.
+//!
+//! Findings are [`Diagnostic`]s with stable rule ids (see
+//! [`diag::rules`]); `CompiledModel::verify_strict` turns any Error
+//! into a compile rejection, and the serve registry lints each key on
+//! first compile.
+
+pub mod diag;
+pub mod lane;
+pub mod lints;
+pub mod resources;
+
+pub use diag::{rules, Diagnostic, Severity};
+pub use lane::{field_capacity, worst_case_field_sum, LaneAudit};
+pub use resources::{LayerResources, ResourceAudit};
+
+use crate::engine::CompiledModel;
+use crate::util::bench::Table;
+use crate::util::json::Json;
+
+/// Everything `analyze` proved about one compiled model.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    pub model: String,
+    pub method: &'static str,
+    pub target: &'static str,
+    pub lanes: Vec<LaneAudit>,
+    pub resources: ResourceAudit,
+    /// All findings, severity-descending. Always contains at least the
+    /// `analysis/summary` Info roll-up.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of distinct rule ids the pass evaluated.
+    pub rules_checked: usize,
+}
+
+impl AnalysisReport {
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// No Error-severity finding — the strict gate's predicate.
+    pub fn is_safe(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// Deduped rule ids of the Error findings, first-seen order.
+    pub fn error_rules(&self) -> Vec<&'static str> {
+        let mut seen = Vec::new();
+        for d in &self.diagnostics {
+            if d.severity == Severity::Error && !seen.contains(&d.rule) {
+                seen.push(d.rule);
+            }
+        }
+        seen
+    }
+
+    /// Human-readable tables: lanes, resources, then findings.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "static check: {} / {} on {}\n\n",
+            self.model, self.method, self.target
+        ));
+
+        if !self.lanes.is_empty() {
+            let mut t = Table::new(vec![
+                "layer", "kind", "a", "w", "taps", "lane", "field", "G", "worst", "cap",
+                "headroom", "verdict",
+            ]);
+            for a in &self.lanes {
+                t.row(vec![
+                    format!("{} {}", a.layer, a.name),
+                    a.kind.to_string(),
+                    a.sx_bits.to_string(),
+                    a.sk_bits.to_string(),
+                    a.k_taps.to_string(),
+                    a.register_bits.to_string(),
+                    a.field.to_string(),
+                    a.group.to_string(),
+                    a.worst.to_string(),
+                    a.capacity.to_string(),
+                    format!("{}b", a.headroom_bits()),
+                    if a.safe { "safe".into() } else { "OVERFLOW".into() },
+                ]);
+            }
+            out.push_str("lane-overflow safety (worst-case interval propagation):\n");
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+
+        let r = &self.resources;
+        let mut t = Table::new(vec!["layer", "weights B", "code B", "scratch B", "in B", "out B"]);
+        for l in &r.per_layer {
+            t.row(vec![
+                format!("{} {}", l.layer, l.name),
+                l.weight_flash_bytes.to_string(),
+                l.code_flash_bytes.to_string(),
+                l.scratch_bytes.to_string(),
+                l.in_bytes.to_string(),
+                l.out_bytes.to_string(),
+            ]);
+        }
+        out.push_str("resource fit (layer by layer):\n");
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "\nSRAM peak {} B = arena {} + scratch {}  ({:.1}% of {} B on {})\n\
+             flash {} B = weights {} + code {}  ({:.1}% of {} B)\n\
+             predicted: {} cycles, {:.3} ms\n\n",
+            r.sram_peak_bytes,
+            r.arena_bytes,
+            r.scratch_peak_bytes,
+            r.sram_utilization() * 100.0,
+            r.sram_budget_bytes,
+            self.target,
+            r.flash_total_bytes,
+            r.flash_weight_bytes,
+            r.flash_code_bytes,
+            r.flash_utilization() * 100.0,
+            r.flash_budget_bytes,
+            r.predicted_cycles,
+            r.predicted_latency_ms,
+        ));
+
+        out.push_str(&format!(
+            "findings: {} error(s), {} warning(s)\n",
+            self.errors(),
+            self.warnings()
+        ));
+        for d in &self.diagnostics {
+            let at = match d.layer {
+                Some(i) => format!("layer {i}"),
+                None => "model".to_string(),
+            };
+            out.push_str(&format!(
+                "  [{}] {} ({}): {}\n        hint: {}\n",
+                d.severity.name(),
+                d.rule,
+                at,
+                d.message,
+                d.hint
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("method".into(), Json::Str(self.method.to_string()));
+        o.insert("target".into(), Json::Str(self.target.to_string()));
+        o.insert("safe".into(), Json::Bool(self.is_safe()));
+        o.insert("errors".into(), Json::Num(self.errors() as f64));
+        o.insert("warnings".into(), Json::Num(self.warnings() as f64));
+        o.insert("rules_checked".into(), Json::Num(self.rules_checked as f64));
+        // Headline resource figures at top level — the trend artifact's
+        // schema contract (`sram_peak_bytes` is grepped in CI).
+        o.insert(
+            "sram_peak_bytes".into(),
+            Json::Num(self.resources.sram_peak_bytes as f64),
+        );
+        o.insert(
+            "flash_total_bytes".into(),
+            Json::Num(self.resources.flash_total_bytes as f64),
+        );
+        o.insert(
+            "predicted_cycles".into(),
+            Json::Num(self.resources.predicted_cycles as f64),
+        );
+        o.insert("resources".into(), self.resources.to_json());
+        o.insert(
+            "lanes".into(),
+            Json::Arr(self.lanes.iter().map(|a| a.to_json()).collect()),
+        );
+        o.insert(
+            "diagnostics".into(),
+            Json::Arr(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// Count of distinct rule ids the three passes evaluate (for the
+/// report's `rules_checked`; keep in sync with [`diag::rules`]).
+const RULES_EVALUATED: usize = 18;
+
+/// Run the full static verification pass. Pure: no inference, no
+/// mutation, deterministic for a given artifact.
+pub fn analyze(cm: &CompiledModel) -> AnalysisReport {
+    let (lanes, mut diags) = lane::audit_model(cm);
+    let (resources, res_diags) = resources::audit_model(cm);
+    diags.extend(res_diags);
+    diags.extend(lints::lint_model(cm));
+
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    let warnings = diags.iter().filter(|d| d.severity == Severity::Warning).count();
+    // Always-on roll-up: guarantees every report (and every JSON line
+    // in the trend artifact) carries at least one diagnostic.
+    diags.push(Diagnostic::info(
+        rules::SUMMARY,
+        None,
+        format!(
+            "{} layer(s) audited: {} error(s), {} warning(s) over {} rules",
+            cm.model.layers.len(),
+            errors,
+            warnings,
+            RULES_EVALUATED
+        ),
+        if errors == 0 {
+            "model is statically safe to deploy on this target".into()
+        } else {
+            "fix Error findings before deploying; strict compile rejects them".into()
+        },
+    ));
+    diags.sort_by(|a, b| b.severity.cmp(&a.severity).then(a.layer.cmp(&b.layer)));
+
+    AnalysisReport {
+        model: cm.model.name.clone(),
+        method: cm.method.name(),
+        target: cm.target.name,
+        lanes,
+        resources,
+        diagnostics: diags,
+        rules_checked: RULES_EVALUATED,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CompiledModel;
+    use crate::models;
+    use crate::ops::Method;
+    use crate::quant::BitConfig;
+    use crate::target::Target;
+    use crate::util::prng::Rng;
+
+    fn compiled(bits: u8, method: Method) -> CompiledModel {
+        let model = models::vgg_tiny(10, 16);
+        let mut rng = Rng::new(7);
+        let params: Vec<f32> = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+        let cfg = BitConfig::uniform(model.layers.len(), bits);
+        let target = Target::lookup("stm32f746").unwrap();
+        CompiledModel::compile_for(&model, &params, &cfg, method, target).unwrap()
+    }
+
+    #[test]
+    fn clean_artifact_reports_zero_errors() {
+        let cm = compiled(4, Method::RpSlbc);
+        let rep = analyze(&cm);
+        assert!(rep.is_safe(), "unexpected errors: {:?}", rep.error_rules());
+        assert!(!rep.lanes.is_empty());
+        assert!(rep.lanes.iter().all(|a| a.safe));
+    }
+
+    #[test]
+    fn summary_diag_always_present() {
+        let cm = compiled(8, Method::TinyEngine);
+        let rep = analyze(&cm);
+        assert!(rep.diagnostics.iter().any(|d| d.rule == rules::SUMMARY));
+        let js = rep.to_json().to_string_compact();
+        assert!(js.contains("\"rule\""));
+        assert!(js.contains("\"severity\""));
+        assert!(js.contains("\"sram_peak_bytes\""));
+    }
+
+    #[test]
+    fn sram_peak_counts_scratch_above_arena() {
+        let cm = compiled(4, Method::Slbc);
+        let rep = analyze(&cm);
+        assert!(rep.resources.scratch_peak_bytes > 0);
+        assert_eq!(
+            rep.resources.sram_peak_bytes,
+            rep.resources.arena_bytes + rep.resources.scratch_peak_bytes
+        );
+        assert_eq!(rep.resources.arena_bytes, cm.peak_sram());
+        assert_eq!(rep.resources.flash_total_bytes, cm.flash_bytes());
+    }
+
+    #[test]
+    fn render_mentions_every_section() {
+        let cm = compiled(4, Method::RpSlbc);
+        let txt = analyze(&cm).render();
+        assert!(txt.contains("lane-overflow safety"));
+        assert!(txt.contains("resource fit"));
+        assert!(txt.contains("findings:"));
+        assert!(txt.contains("SRAM peak"));
+    }
+}

@@ -1,0 +1,292 @@
+//! Static SRAM / flash / latency accounting per target.
+//!
+//! SRAM peak = activation arena high-water mark (from [`MemoryPlan`],
+//! which the compile gate already checks) **plus** the kernel scratch
+//! the runtime actually allocates (`ConvScratch`: ring rows, window
+//! sums, packed registers, correction terms, the row accumulator) —
+//! the part the single compile-time gate never saw. Scratch buffers
+//! grow monotonically and are shared across layers, so the model peak
+//! is the per-buffer maximum across layers, summed over buffers.
+//!
+//! Byte costs use MCU-realistic storage: sub-byte activations are
+//! bit-packed in the ring rows, packed registers take
+//! `register_bits / 8` bytes, window sums and corrections are i32,
+//! the row accumulator is the 64-bit carrier.
+
+use crate::engine::CompiledModel;
+use crate::ops::common::pad_of;
+use crate::ops::slbc::LayerKernel;
+use crate::perf::predict_model;
+use crate::util::json::Json;
+
+use super::diag::{rules, Diagnostic};
+
+/// One layer's demand — a row of the `check` verb's resource table.
+#[derive(Debug, Clone)]
+pub struct LayerResources {
+    pub layer: usize,
+    pub name: String,
+    pub weight_flash_bytes: usize,
+    pub code_flash_bytes: usize,
+    /// This layer's total demand on the shared kernel scratch.
+    pub scratch_bytes: usize,
+    pub in_bytes: usize,
+    pub out_bytes: usize,
+}
+
+impl LayerResources {
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("layer".into(), Json::Num(self.layer as f64));
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        o.insert("weight_flash_bytes".into(), Json::Num(self.weight_flash_bytes as f64));
+        o.insert("code_flash_bytes".into(), Json::Num(self.code_flash_bytes as f64));
+        o.insert("scratch_bytes".into(), Json::Num(self.scratch_bytes as f64));
+        o.insert("in_bytes".into(), Json::Num(self.in_bytes as f64));
+        o.insert("out_bytes".into(), Json::Num(self.out_bytes as f64));
+        Json::Obj(o)
+    }
+}
+
+/// Model-wide totals plus the per-layer breakdown.
+#[derive(Debug, Clone)]
+pub struct ResourceAudit {
+    pub per_layer: Vec<LayerResources>,
+    /// Activation arena high-water mark (`MemoryPlan::peak_bytes`).
+    pub arena_bytes: usize,
+    /// Kernel scratch high-water mark (component-wise max over layers).
+    pub scratch_peak_bytes: usize,
+    /// `arena_bytes + scratch_peak_bytes` — what must fit in SRAM.
+    pub sram_peak_bytes: usize,
+    pub flash_weight_bytes: usize,
+    pub flash_code_bytes: usize,
+    pub flash_total_bytes: usize,
+    pub sram_budget_bytes: usize,
+    pub flash_budget_bytes: usize,
+    pub predicted_cycles: u64,
+    pub predicted_latency_ms: f64,
+}
+
+impl ResourceAudit {
+    pub fn sram_utilization(&self) -> f64 {
+        if self.sram_budget_bytes == 0 {
+            return f64::INFINITY;
+        }
+        self.sram_peak_bytes as f64 / self.sram_budget_bytes as f64
+    }
+
+    pub fn flash_utilization(&self) -> f64 {
+        if self.flash_budget_bytes == 0 {
+            return f64::INFINITY;
+        }
+        self.flash_total_bytes as f64 / self.flash_budget_bytes as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("arena_bytes".into(), Json::Num(self.arena_bytes as f64));
+        o.insert("scratch_peak_bytes".into(), Json::Num(self.scratch_peak_bytes as f64));
+        o.insert("sram_peak_bytes".into(), Json::Num(self.sram_peak_bytes as f64));
+        o.insert("flash_weight_bytes".into(), Json::Num(self.flash_weight_bytes as f64));
+        o.insert("flash_code_bytes".into(), Json::Num(self.flash_code_bytes as f64));
+        o.insert("flash_total_bytes".into(), Json::Num(self.flash_total_bytes as f64));
+        o.insert("sram_budget_bytes".into(), Json::Num(self.sram_budget_bytes as f64));
+        o.insert("flash_budget_bytes".into(), Json::Num(self.flash_budget_bytes as f64));
+        o.insert("sram_utilization".into(), Json::Num(self.sram_utilization()));
+        o.insert("flash_utilization".into(), Json::Num(self.flash_utilization()));
+        o.insert("predicted_cycles".into(), Json::Num(self.predicted_cycles as f64));
+        o.insert("predicted_latency_ms".into(), Json::Num(self.predicted_latency_ms));
+        o.insert(
+            "per_layer".into(),
+            Json::Arr(self.per_layer.iter().map(|l| l.to_json()).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// The five shared `ConvScratch` components, in MCU-realistic bytes.
+#[derive(Default, Clone, Copy)]
+struct ScratchModel {
+    rows: usize,
+    wsums: usize,
+    packs: usize,
+    corr: usize,
+    row_acc: usize,
+}
+
+impl ScratchModel {
+    fn max(self, o: ScratchModel) -> ScratchModel {
+        ScratchModel {
+            rows: self.rows.max(o.rows),
+            wsums: self.wsums.max(o.wsums),
+            packs: self.packs.max(o.packs),
+            corr: self.corr.max(o.corr),
+            row_acc: self.row_acc.max(o.row_acc),
+        }
+    }
+
+    fn total(self) -> usize {
+        self.rows + self.wsums + self.packs + self.corr + self.row_acc
+    }
+}
+
+/// Audit `cm` against its compiled-in target.
+pub fn audit_model(cm: &CompiledModel) -> (ResourceAudit, Vec<Diagnostic>) {
+    let mut diags = Vec::new();
+    let mut per_layer = Vec::new();
+    let mut scratch_peak = ScratchModel::default();
+    let mut worst_scratch_layer = (0usize, 0usize); // (layer, bytes)
+
+    for (i, l) in cm.model.layers.iter().enumerate() {
+        let (in_bytes, out_bytes) = match cm.graph.layer_node(i) {
+            Some(node) => (
+                cm.graph.tensors[node.input].bytes(),
+                cm.graph.tensors[node.output].bytes(),
+            ),
+            None => (0, 0),
+        };
+
+        let scratch = match cm.kernels.layer(i) {
+            Some(LayerKernel::Conv(ck)) => {
+                let pad = pad_of(l.k) as usize;
+                let padded_w = l.in_w + 2 * pad;
+                let chan = if ck.depthwise { l.cout } else { l.cin };
+                let slots = l.k * chan;
+                // A verifier must not panic on malformed input: a
+                // use_rp kernel without a reordered plan is itself a
+                // finding, priced at the plain-conv register count.
+                let regs_per_row = match (ck.use_rp, ck.plan.reordered) {
+                    (true, Some(rp)) => rp.n_chunks(padded_w),
+                    (true, None) => {
+                        diags.push(Diagnostic::error(
+                            rules::LAYOUT_MISMATCH,
+                            Some(i),
+                            "kernel claims RP reordering but carries no reordered plan"
+                                .into(),
+                            "rebuild the KernelCache".into(),
+                        ));
+                        ck.plan.conv.n_regs(padded_w)
+                    }
+                    (false, _) => ck.plan.conv.n_regs(padded_w),
+                };
+                let reg_bytes = (ck.plan.conv.spec.register_bits as usize).div_ceil(8);
+                let abits = ck.abits as usize;
+                ScratchModel {
+                    rows: slots * (padded_w * abits).div_ceil(8),
+                    wsums: slots * l.out_w * 4,
+                    packs: slots * regs_per_row * reg_bytes,
+                    corr: l.out_w * 4,
+                    row_acc: (padded_w + l.k - 1) * 8,
+                }
+            }
+            Some(LayerKernel::Dense(dk)) => ScratchModel {
+                // Dense staging: the bit-packed input vector plus the
+                // pre-packed A registers (one 64-bit carrier each).
+                rows: (l.cin * dk.abits as usize).div_ceil(8),
+                packs: dk.regs_per_oc * 8,
+                ..Default::default()
+            },
+            // Library-kernel methods (naive / simd / cmix-nn / ...)
+            // operate out of the arena tensors directly.
+            None => ScratchModel::default(),
+        };
+        let scratch_bytes = scratch.total();
+        if scratch_bytes > worst_scratch_layer.1 {
+            worst_scratch_layer = (i, scratch_bytes);
+        }
+        scratch_peak = scratch_peak.max(scratch);
+
+        per_layer.push(LayerResources {
+            layer: i,
+            name: l.name.clone(),
+            weight_flash_bytes: l.weight_bytes_at(cm.cfg.wbits[i]),
+            code_flash_bytes: cm.codegen.kernels[i].code_bytes,
+            scratch_bytes,
+            in_bytes,
+            out_bytes,
+        });
+    }
+
+    let arena_bytes = cm.plan.peak_bytes;
+    let scratch_peak_bytes = scratch_peak.total();
+    let sram_peak_bytes = arena_bytes + scratch_peak_bytes;
+    let flash_total_bytes = cm.flash.total_bytes();
+    let cost = predict_model(&cm.model, cm.method, &cm.cfg);
+    let predicted_cycles = cost.cycles_on(&cm.target);
+
+    let audit = ResourceAudit {
+        per_layer,
+        arena_bytes,
+        scratch_peak_bytes,
+        sram_peak_bytes,
+        flash_weight_bytes: cm.flash.weight_bytes(),
+        flash_code_bytes: cm.flash.code_bytes,
+        flash_total_bytes,
+        sram_budget_bytes: cm.target.sram_bytes,
+        flash_budget_bytes: cm.target.flash_bytes,
+        predicted_cycles,
+        predicted_latency_ms: cost.latency_ms_on(&cm.target),
+    };
+
+    if audit.sram_peak_bytes > audit.sram_budget_bytes {
+        diags.push(Diagnostic::error(
+            rules::SRAM_EXCEEDED,
+            None,
+            format!(
+                "SRAM peak {} B (arena {} + scratch {}) exceeds {}'s {} B",
+                audit.sram_peak_bytes,
+                audit.arena_bytes,
+                audit.scratch_peak_bytes,
+                cm.target.name,
+                audit.sram_budget_bytes
+            ),
+            format!(
+                "layer {} carries the largest scratch demand ({} B); shrink its \
+                 channels or switch to a lifetime-planned method",
+                worst_scratch_layer.0, worst_scratch_layer.1
+            ),
+        ));
+    } else if audit.sram_utilization() > 0.9 {
+        diags.push(Diagnostic::warning(
+            rules::SRAM_HIGH_WATERMARK,
+            None,
+            format!(
+                "SRAM peak {} B is {:.0}% of {}'s budget",
+                audit.sram_peak_bytes,
+                audit.sram_utilization() * 100.0,
+                cm.target.name
+            ),
+            "headroom under 10% leaves no room for the serve runtime's stacks".into(),
+        ));
+    }
+
+    if audit.flash_total_bytes > audit.flash_budget_bytes {
+        diags.push(Diagnostic::error(
+            rules::FLASH_EXCEEDED,
+            None,
+            format!(
+                "flash image {} B (weights {} + code {}) exceeds {}'s {} B",
+                audit.flash_total_bytes,
+                audit.flash_weight_bytes,
+                audit.flash_code_bytes,
+                cm.target.name,
+                audit.flash_budget_bytes
+            ),
+            "lower the weight bitwidths or drop kernel specialization".into(),
+        ));
+    } else if audit.flash_utilization() > 0.9 {
+        diags.push(Diagnostic::warning(
+            rules::FLASH_HIGH_WATERMARK,
+            None,
+            format!(
+                "flash image {} B is {:.0}% of {}'s budget",
+                audit.flash_total_bytes,
+                audit.flash_utilization() * 100.0,
+                cm.target.name
+            ),
+            "the next OTA delta may not fit".into(),
+        ));
+    }
+
+    (audit, diags)
+}

@@ -137,6 +137,15 @@ impl Graph {
         }
     }
 
+    /// The *compute* node of layer `layer_idx` (not its pool/GAP
+    /// followers) — how the static analyzer anchors width-chain and
+    /// tensor-size checks to layers.
+    pub fn layer_node(&self, layer_idx: usize) -> Option<&Node> {
+        self.nodes
+            .iter()
+            .find(|n| matches!(n.op, NodeOp::Layer { layer_idx: i } if i == layer_idx))
+    }
+
     /// Layer spec behind a node (pool nodes reference their source layer).
     pub fn layer_of<'m>(&self, model: &'m ModelDesc, node: &Node) -> &'m LayerSpec {
         let idx = match node.op {

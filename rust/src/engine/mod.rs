@@ -162,6 +162,17 @@ impl KernelCache {
     pub fn packed_layers(&self) -> usize {
         self.layers.iter().filter(|o| o.is_some()).count()
     }
+
+    /// Replace layer `i`'s pre-packed kernel — the fault-injection seam
+    /// for the static analyzer's tests (e.g. planting a deliberately
+    /// over-packed plan and proving both `analysis::analyze` and
+    /// `verify_strict` reject it). Grows the cache as needed.
+    pub fn set_layer(&mut self, i: usize, kernel: Option<LayerKernel>) {
+        if self.layers.len() <= i {
+            self.layers.resize(i + 1, None);
+        }
+        self.layers[i] = kernel;
+    }
 }
 
 /// The one-time compilation product for one (model, config, method)
@@ -223,6 +234,40 @@ impl CompiledModel {
             target.sram_bytes
         );
         Ok(Self::finish(model, flat_params, cfg, method, graph, plan, target))
+    }
+
+    /// Opt-in strict compilation: [`compile_for`](Self::compile_for)
+    /// followed by the full static verification pass
+    /// ([`crate::analysis::analyze`]). Any Error-severity finding —
+    /// lane overflow, resource violation, plan inconsistency — rejects
+    /// the artifact, with the offending rule ids in the error text.
+    pub fn compile_for_strict(
+        model: &ModelDesc,
+        flat_params: &[f32],
+        cfg: &BitConfig,
+        method: Method,
+        target: &Target,
+    ) -> Result<CompiledModel> {
+        let cm = Self::compile_for(model, flat_params, cfg, method, target)?;
+        cm.verify_strict()?;
+        Ok(cm)
+    }
+
+    /// Run the static analyzer over this artifact and fail on any
+    /// Error-severity finding. The error message carries the rule ids
+    /// (e.g. `packing/lane-overflow`) so callers can pin the exact
+    /// rejection reason.
+    pub fn verify_strict(&self) -> Result<()> {
+        let report = crate::analysis::analyze(self);
+        let errs = report.error_rules();
+        anyhow::ensure!(
+            errs.is_empty(),
+            "{}: static analysis found {} error(s): [{}]",
+            self.model.name,
+            report.errors(),
+            errs.join(", ")
+        );
+        Ok(())
     }
 
     /// Build without the SRAM-capacity gate. Comparison tables (Table I)

@@ -49,6 +49,16 @@ impl MemoryPlan {
         self.peak_bytes <= sram_bytes
     }
 
+    /// Fraction of `sram_bytes` the arena high-water mark occupies —
+    /// the analyzer's watermark input (infinite when the budget is 0,
+    /// so a zero-SRAM target always reads as over-committed).
+    pub fn utilization(&self, sram_bytes: usize) -> f64 {
+        if sram_bytes == 0 {
+            return f64::INFINITY;
+        }
+        self.peak_bytes as f64 / sram_bytes as f64
+    }
+
     /// Check the invariant: tensors with overlapping lifetimes must not
     /// overlap in arena space (used by tests and debug assertions).
     pub fn validate(&self, graph: &Graph) -> Result<(), String> {

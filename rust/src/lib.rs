@@ -45,6 +45,13 @@
 //!    a Perfetto/Chrome trace exporter (`serve --events-out`), and a
 //!    per-layer cycles × joules execution profiler (the `profile` CLI
 //!    verb).
+//! 7. **Static analysis layer** — `mixq-check` ([`analysis`]): a
+//!    no-execution verification pass over compiled artifacts proving
+//!    lane-overflow safety (worst-case guard-bit interval propagation),
+//!    SRAM/flash resource fit per target, and plan self-consistency,
+//!    surfaced through the `check` CLI verb, the strict compile gate
+//!    (`CompiledModel::verify_strict`) and per-key lints in the serve
+//!    registry.
 //!
 //! ## Three-layer architecture
 //!
@@ -58,6 +65,7 @@
 //!   PJRT ([`runtime`]) and drives quantization search, QAT and MCU
 //!   deployment without any Python on the hot path.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod datasets;
 pub mod engine;

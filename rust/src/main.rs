@@ -7,6 +7,7 @@
 //! * `qat       --backbone B ...`   — QAT at a fixed bit configuration
 //! * `pipeline  --backbone B ...`   — full search→QAT→deploy→compare run
 //! * `deploy    --backbone B ...`   — deploy + simulate one method
+//! * `check     --backbone B ...`   — static packing-safety & resource analysis
 //! * `profile   --backbone B ...`   — per-layer cycle/energy execution profile
 //! * `serve     --mix M ...`        — replay a request trace on an MCU fleet
 //! * `bench-serve`                  — fixed-protocol serving benchmark (JSON)
@@ -56,6 +57,7 @@ fn run(args: &Args) -> Result<()> {
         "qat" => cmd_qat(args),
         "pipeline" => cmd_pipeline(args),
         "deploy" => cmd_deploy(args),
+        "check" => cmd_check(args),
         "profile" => cmd_profile(args),
         "serve" => cmd_serve(args),
         "bench-serve" => cmd_bench_serve(args),
@@ -87,6 +89,11 @@ fn print_help() {
          \x20          [--target stm32f746]\n\
          \x20 deploy   --backbone B         deploy one method\n\
          \x20          [--method rp-slbc] [--bits 4] [--target stm32f746]\n\
+         \x20 check    --backbone B         static packing-safety & resource\n\
+         \x20                               analysis of one compiled model (no\n\
+         \x20                               inference executed)\n\
+         \x20          [--method rp-slbc] [--bits 4] [--target stm32f746]\n\
+         \x20          [--json] [--out check.json] [--strict]\n\
          \x20 profile  --backbone B         per-layer execution profile: cycles,\n\
          \x20                               joules and instruction mix per layer,\n\
          \x20                               totals asserted bit-identical to deploy\n\
@@ -183,6 +190,25 @@ fn print_help() {
          \x20                               compatible with the legacy format)\n\
          Clocks can also be pinned statically per device: --fleet m4@84mhz:2\n\
          runs two M4s throttled to 84 MHz for the whole replay."
+    );
+    println!(
+        "\nSTATIC CHECKS (`check`; no inference executed):\n\
+         \x20 packing/*                     lane-overflow safety: exact worst-case\n\
+         \x20                               interval propagation per packed field\n\
+         \x20                               (min(G,K)·(2^sx-1)·(2^sk-1) vs the\n\
+         \x20                               field capacity), carrier fit, i64\n\
+         \x20                               accumulator bounds\n\
+         \x20 resource/*                    SRAM peak (arena + kernel scratch) and\n\
+         \x20                               flash footprint vs the target budgets,\n\
+         \x20                               layer by layer, with 90% watermarks\n\
+         \x20 plan/* quant/* graph/*        artifact self-consistency: stale/dead/\n\
+         \x20                               duplicate lane plans, register layouts,\n\
+         \x20                               weight ranges, arena overlap, the\n\
+         \x20                               cross-layer activation width chain\n\
+         check --strict exits non-zero on any Error finding (same gate as\n\
+         CompiledModel::compile_for_strict); --json emits the machine form\n\
+         with rule ids. The serve registry runs the same pass once per\n\
+         compiled key (RegistryStats.lint_errors/lint_warnings)."
     );
 }
 
@@ -363,6 +389,66 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     );
     for ((name, cyc), joules) in rep.per_layer.iter().zip(&rep.per_layer_joules) {
         println!("  {name:<14} {cyc:>10} cycles  {:>9.2} uJ", joules * 1e6);
+    }
+    Ok(())
+}
+
+/// Static packing-safety & resource analysis of one compiled model
+/// (`mixq-check`): proves or refutes lane-overflow safety, SRAM/flash
+/// fit and plan consistency without running any inference. `--strict`
+/// exits non-zero on any Error-severity finding — the same gate as
+/// `CompiledModel::compile_for_strict`.
+fn cmd_check(args: &Args) -> Result<()> {
+    let method = Method::parse(&args.str_or("method", "rp-slbc"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    // Artifact-trained parameters when the store has the backbone;
+    // otherwise the seeded synthetic parameters the serving path uses —
+    // the analyzer (like serve) must run without AOT artifacts.
+    let (model, params) = match store(args).and_then(|s| {
+        let arts = s.backbone(&backbone_arg(args))?;
+        let p = arts.load_init_params()?;
+        Ok((arts.model.clone(), p))
+    }) {
+        Ok(mp) => mp,
+        Err(_) => {
+            let model = mcu_mixq::models::by_name(&backbone_arg(args))
+                .ok_or_else(|| anyhow::anyhow!("unknown backbone `{}`", backbone_arg(args)))?;
+            let mut rng = mcu_mixq::util::prng::Rng::new(args.u64_or("seed", 1000));
+            let params = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+            (model, params)
+        }
+    };
+    let n = model.num_layers();
+    let cfg = BitConfig {
+        wbits: parse_bits(&args.str_or("bits", "4"), n)?,
+        abits: parse_bits(&args.str_or("bits", "4"), n)?,
+    };
+    let target = parse_target(args)?;
+    // Unbounded compile on purpose: a model over the SRAM budget must
+    // *report* resource/sram-exceeded, not die in the compile gate —
+    // the analyzer's own rules are the verdict here.
+    let cm = engine::CompiledModel::compile_unbounded_for(&model, &params, &cfg, method, target);
+    let report = mcu_mixq::analysis::analyze(&cm);
+
+    if args.bool_or("json", false) {
+        println!("{}", report.to_json().to_string_compact());
+    } else {
+        print!("{}", report.render());
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{}\n", report.to_json().to_string_compact()))?;
+        if !args.bool_or("json", false) {
+            println!("wrote {path}");
+        }
+    }
+    if args.bool_or("strict", false) {
+        anyhow::ensure!(
+            report.is_safe(),
+            "{}: static analysis found {} error(s): [{}]",
+            model.name,
+            report.errors(),
+            report.error_rules().join(", ")
+        );
     }
     Ok(())
 }

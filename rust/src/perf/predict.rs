@@ -50,6 +50,12 @@ impl PredictedCost {
     pub fn joules_on(&self, target: &crate::target::Target) -> f64 {
         target.joules(&self.counter)
     }
+
+    /// Predicted single-inference latency in milliseconds on `target` —
+    /// the static analyzer's headline figure (no inference executed).
+    pub fn latency_ms_on(&self, target: &crate::target::Target) -> f64 {
+        target.seconds(self.cycles_on(target)) * 1e3
+    }
 }
 
 /// Predict the instruction mix of running `layer` with `method` at

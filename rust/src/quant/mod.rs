@@ -71,6 +71,23 @@ pub struct QWeights {
     pub scale: f32,
 }
 
+/// Largest representable magnitude of a symmetric `bits`-wide weight:
+/// `2^(bits-1) - 1` — the clamp bound of [`quantize_weights`] and the
+/// range the static analyzer's quant lint re-proves per layer.
+pub fn weight_limit(bits: u8) -> i32 {
+    (1i32 << (bits - 1)) - 1
+}
+
+impl QWeights {
+    /// Every value inside the symmetric representable range.
+    /// [`quantize_weights`] guarantees this by clamping; a violation
+    /// means the tensor was mutated or decoded from a corrupt image.
+    pub fn in_range(&self) -> bool {
+        let lim = weight_limit(self.bits);
+        self.data.iter().all(|&v| (-lim..=lim).contains(&v))
+    }
+}
+
 /// A quantized activation tensor: unsigned `[0, 2^b - 1]` with scale.
 #[derive(Debug, Clone)]
 pub struct QActs {

@@ -130,7 +130,7 @@ pub use events::{EventHeap, SimEvent, SimEventKind};
 pub use fleet::{
     BatchWork, Device, DeviceCfg, DeviceClass, Dispatch, Fleet, PendingBatch, Resolution,
 };
-pub use registry::{hash_params, ModelKey, Registry, RegistryStats};
+pub use registry::{hash_params, KeyLint, ModelKey, Registry, RegistryStats};
 pub use sched::{EnergyAware, LeastLoaded, RoundRobin, Scheduler, SchedulerKind, SloAware};
 pub use stats::{DeviceStats, LatencySummary, ModelStats, ServeReport};
 pub use trace::{

@@ -95,6 +95,11 @@ pub struct RegistryStats {
     /// Hits served to a tenant other than the one whose lookup compiled
     /// the artifact — the cross-tenant weight-sharing win.
     pub shared_hits: u64,
+    /// Error-severity static-analysis findings over all first compiles
+    /// (each key is linted exactly once, on its compiling miss).
+    pub lint_errors: u64,
+    /// Warning-severity static-analysis findings over all first compiles.
+    pub lint_warnings: u64,
 }
 
 impl RegistryStats {
@@ -132,6 +137,19 @@ pub struct Registry {
     /// Lifetime hits per model label (first-hit order, survives
     /// eviction and re-insertion).
     hits_by_label: Vec<(String, u64)>,
+    /// Static-analysis outcome per compiled key, in first-compile
+    /// order. One record per compiling miss — hits never re-lint.
+    lints: Vec<KeyLint>,
+}
+
+/// The registry's record of one key's first-compile static analysis.
+#[derive(Debug, Clone)]
+pub struct KeyLint {
+    pub label: String,
+    pub errors: usize,
+    pub warnings: usize,
+    /// Deduped Error rule ids (empty for a clean artifact).
+    pub error_rules: Vec<&'static str>,
 }
 
 impl Registry {
@@ -144,6 +162,7 @@ impl Registry {
             entries: Vec::new(),
             stats: RegistryStats::default(),
             hits_by_label: Vec::new(),
+            lints: Vec::new(),
         }
     }
 
@@ -202,6 +221,18 @@ impl Registry {
         self.stats.misses += 1;
         let model = Arc::new(build()?);
         self.stats.compiles += 1;
+        // Lint on first compile per key: the static analyzer runs once
+        // per artifact (hits never re-lint) so a fleet silently serving
+        // an unsound or over-budget model is observable in the stats.
+        let lint = crate::analysis::analyze(&model);
+        self.stats.lint_errors += lint.errors() as u64;
+        self.stats.lint_warnings += lint.warnings() as u64;
+        self.lints.push(KeyLint {
+            label: key.label(),
+            errors: lint.errors(),
+            warnings: lint.warnings(),
+            error_rules: lint.error_rules(),
+        });
         if self.entries.len() == self.capacity {
             let lru = self
                 .entries
@@ -231,6 +262,12 @@ impl Registry {
     /// the true amortization of each model's compilations.
     pub fn per_model_hits(&self) -> Vec<(String, u64)> {
         self.hits_by_label.clone()
+    }
+
+    /// Static-analysis outcome per compiled key, in first-compile order
+    /// (one record per compiling miss; cache hits never re-lint).
+    pub fn lints(&self) -> &[KeyLint] {
+        &self.lints
     }
 }
 
@@ -420,5 +457,24 @@ mod tests {
         reg.get_or_compile(&k, || build(4, Method::Slbc)).unwrap();
         reg.get_or_compile(&k, || build(4, Method::Slbc)).unwrap();
         assert_eq!(reg.stats().hit_rate(), 0.5);
+    }
+
+    #[test]
+    fn registry_lints_each_key_once_on_first_compile() {
+        let mut reg = Registry::new(4);
+        let k = key(4, Method::RpSlbc);
+        for _ in 0..3 {
+            reg.get_or_compile(&k, || build(4, Method::RpSlbc)).unwrap();
+        }
+        // One compiling miss, two hits: exactly one lint record.
+        assert_eq!(reg.lints().len(), 1, "cache hits must not re-lint");
+        assert_eq!(reg.lints()[0].label, k.label());
+        assert_eq!(reg.lints()[0].errors, 0, "{:?}", reg.lints()[0].error_rules);
+        assert_eq!(reg.stats().lint_errors, 0);
+
+        let k2 = key(8, Method::Slbc);
+        reg.get_or_compile(&k2, || build(8, Method::Slbc)).unwrap();
+        assert_eq!(reg.lints().len(), 2);
+        assert!(reg.lints().iter().all(|l| l.error_rules.is_empty()));
     }
 }

@@ -642,6 +642,8 @@ mod tests {
                 compiles: 1,
                 evictions: 0,
                 shared_hits: 0,
+                lint_errors: 0,
+                lint_warnings: 0,
             },
             engine_compiles: 1,
             wall_s: 0.01,

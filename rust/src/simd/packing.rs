@@ -9,7 +9,7 @@
 //! must additionally stitch the boundary field of lane `l` to the first
 //! field of lane `l+1` — the overhead RP-SLBC's reordering removes.
 
-use super::poly::{field_width, PackSpec};
+use super::poly::PackSpec;
 
 /// A SIMD lane configuration of the 32-bit DSP register file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -270,14 +270,19 @@ impl SimdConv {
 /// Check that a lane can hold the full kernel at the given widths — the
 /// condition under which SLBC degenerates gracefully (paper assumes
 /// `N_k == k`, i.e. whole kernel per lane).
+///
+/// This is *defined as* "[`SimdConv::plan`] succeeds": the planner and the
+/// static analyzer must never disagree on legality, so there is exactly one
+/// implementation of the predicate. `field_width(sx,sk,k)·k ≤ lane_bits` is
+/// the closed form (pinned equal by `fits_lane_matches_plan` below).
 pub fn kernel_fits_lane(cfg: LaneCfg, sx_bits: u32, sk_bits: u32, k_taps: u32) -> bool {
-    field_width(sx_bits, sk_bits, k_taps) * k_taps <= cfg.lane_bits
+    SimdConv::plan(cfg, sx_bits, sk_bits, k_taps).is_some()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::simd::poly::conv1d_full_direct;
+    use crate::simd::poly::{conv1d_full_direct, field_width};
     use crate::util::prop::check;
 
     #[test]
@@ -368,5 +373,33 @@ mod tests {
     fn kernel_fits_lane_check() {
         assert!(kernel_fits_lane(LaneCfg::new(32, 16), 2, 2, 2));
         assert!(!kernel_fits_lane(LaneCfg::new(32, 8), 8, 8, 3));
+    }
+
+    /// The legality predicate has one implementation: `kernel_fits_lane`
+    /// delegates to `SimdConv::plan`, whose closed form is
+    /// `field_width(sx,sk,k)·k ≤ lane_bits`. Pin the three agree over the
+    /// whole `LaneCfg::all()` × bitwidth × taps grid so the analyzer and
+    /// the planner can never drift apart.
+    #[test]
+    fn fits_lane_matches_plan() {
+        for &cfg in LaneCfg::all() {
+            for sx in 1..=8u32 {
+                for sk in 1..=8u32 {
+                    for kt in 1..=8u32 {
+                        let closed = field_width(sx, sk, kt) * kt <= cfg.lane_bits;
+                        let planned = SimdConv::plan(cfg, sx, sk, kt).is_some();
+                        let fits = kernel_fits_lane(cfg, sx, sk, kt);
+                        assert_eq!(
+                            fits, planned,
+                            "fits_lane vs plan at {cfg:?} sx={sx} sk={sk} k={kt}"
+                        );
+                        assert_eq!(
+                            fits, closed,
+                            "fits_lane vs closed form at {cfg:?} sx={sx} sk={sk} k={kt}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,281 @@
+//! Acceptance tests for `mixq-check` (the static analyzer).
+//!
+//! Three pins:
+//! 1. every model key the suite exercises reports **zero**
+//!    Error-severity findings on both registry targets;
+//! 2. a deliberately over-packed plan (field too narrow for
+//!    taps × bitwidths) is rejected by the analyzer **and** by strict
+//!    compile with the same rule id (`packing/lane-overflow`);
+//! 3. the analyzer's worst-case lane bound is *exact*: it equals the
+//!    brute-force maximum over all operand values for small configs —
+//!    no false "safe" verdicts, and no over-tightness (a plan brute
+//!    force shows safe is never called unsafe).
+
+use mcu_mixq::analysis::{self, field_capacity, rules, worst_case_field_sum, Severity};
+use mcu_mixq::engine::CompiledModel;
+use mcu_mixq::models::{self, ModelDesc};
+use mcu_mixq::ops::slbc::LayerKernel;
+use mcu_mixq::ops::Method;
+use mcu_mixq::quant::BitConfig;
+use mcu_mixq::simd::poly::{conv1d_full_direct, PackSpec};
+use mcu_mixq::target::Target;
+use mcu_mixq::util::prng::Rng;
+
+fn params_for(model: &ModelDesc, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..model.param_count).map(|_| rng.normal() * 0.1).collect()
+}
+
+fn compile(
+    model: &ModelDesc,
+    bits: u8,
+    method: Method,
+    target: &'static Target,
+) -> CompiledModel {
+    let params = params_for(model, 1000);
+    let cfg = BitConfig::uniform(model.layers.len(), bits);
+    CompiledModel::compile_for(model, &params, &cfg, method, target)
+        .expect("suite-exercised config must compile")
+}
+
+/// Every (backbone, method, bits) combination the existing test suite
+/// and benches exercise must come out of the analyzer clean.
+#[test]
+fn suite_model_keys_report_zero_errors() {
+    let m7 = Target::lookup("stm32f746").unwrap();
+    let grid: &[(Method, &[u8])] = &[
+        (Method::Slbc, &[2, 4, 8]),
+        (Method::RpSlbc, &[2, 4, 8]),
+        (Method::CmixNn, &[2, 4, 8]),
+        (Method::WpcDdd, &[2, 4, 8]),
+        (Method::TinyEngine, &[8]),
+        (Method::Naive, &[8]),
+        (Method::Simd, &[8]),
+    ];
+    for model in [models::vgg_tiny(10, 16), models::mobilenet_tiny(2, 16)] {
+        for (method, bits_list) in grid {
+            for &bits in *bits_list {
+                let cm = compile(&model, bits, *method, m7);
+                let rep = analysis::analyze(&cm);
+                assert_eq!(
+                    rep.errors(),
+                    0,
+                    "{}/{}/w{bits}: {:?}",
+                    model.name,
+                    method.name(),
+                    rep.error_rules()
+                );
+                if matches!(*method, Method::Slbc | Method::RpSlbc) {
+                    assert!(!rep.lanes.is_empty(), "SLBC must produce lane audits");
+                    assert!(rep.lanes.iter().all(|a| a.safe));
+                }
+            }
+        }
+    }
+
+    // The canonical fig5/fig6 config must also clear the smaller M4.
+    let m4 = Target::lookup("stm32f446").unwrap();
+    for (model, method) in [
+        (models::vgg_tiny(10, 16), Method::RpSlbc),
+        (models::mobilenet_tiny(2, 16), Method::Slbc),
+    ] {
+        let rep = analysis::analyze(&compile(&model, 4, method, m4));
+        assert_eq!(rep.errors(), 0, "{}: {:?}", model.name, rep.error_rules());
+    }
+}
+
+/// Strict compilation is `compile_for` + the analyzer gate; clean
+/// configs must pass it on both targets.
+#[test]
+fn strict_compile_accepts_clean_configs() {
+    for tname in ["stm32f746", "stm32f446"] {
+        let target = Target::lookup(tname).unwrap();
+        let model = models::vgg_tiny(10, 16);
+        let params = params_for(&model, 1000);
+        let cfg = BitConfig::uniform(model.layers.len(), 4);
+        CompiledModel::compile_for_strict(&model, &params, &cfg, Method::RpSlbc, target)
+            .unwrap_or_else(|e| panic!("strict compile must accept a clean config: {e:#}"));
+    }
+}
+
+/// The acceptance pin: plant a field too narrow for taps × bitwidths
+/// and require BOTH the analyzer and the strict gate to reject it with
+/// `packing/lane-overflow`.
+#[test]
+fn overpacked_plan_rejected_by_analyzer_and_strict_gate_with_same_rule() {
+    let m7 = Target::lookup("stm32f746").unwrap();
+    let model = models::vgg_tiny(10, 16);
+    let mut cm = compile(&model, 4, Method::Slbc, m7);
+
+    // Grab a packed conv kernel past layer 0 (layer 0 packs 8-bit
+    // image inputs; inner layers run the configured 4 bits).
+    let (idx, ck) = (1..cm.model.layers.len())
+        .find_map(|i| match cm.kernels.layer(i) {
+            Some(LayerKernel::Conv(ck)) => Some((i, ck.clone())),
+            _ => None,
+        })
+        .expect("vgg has packed conv layers past layer 0");
+
+    // Narrow the field to the activation width alone: capacity
+    // 2^4 - 1 = 15 cannot hold even one worst-case term (15 * 15), let
+    // alone min(G, K) of them — provably over-packed.
+    let mut bad = ck;
+    let narrow = bad.abits as u32;
+    bad.plan.conv.spec.field = narrow;
+    bad.plan.field = narrow;
+    cm.kernels.set_layer(idx, Some(LayerKernel::Conv(bad)));
+
+    let rep = analysis::analyze(&cm);
+    let overflow: Vec<_> = rep
+        .diagnostics
+        .iter()
+        .filter(|d| d.rule == rules::LANE_OVERFLOW)
+        .collect();
+    assert!(!overflow.is_empty(), "analyzer must flag the planted overflow");
+    assert!(overflow.iter().all(|d| d.severity == Severity::Error));
+    assert_eq!(overflow[0].layer, Some(idx));
+    assert!(rep.error_rules().contains(&rules::LANE_OVERFLOW));
+
+    // Strict gate: same artifact, same rule id in the rejection text.
+    let err = cm.verify_strict().expect_err("strict gate must reject");
+    let text = format!("{err:#}");
+    assert!(
+        text.contains(rules::LANE_OVERFLOW),
+        "rejection must carry the rule id, got: {text}"
+    );
+}
+
+/// Exhaustive brute force: the true per-field maximum of a packed
+/// multiply over ALL operand tuples (mixed-radix enumeration).
+fn brute_force_max_field(spec: &PackSpec) -> u128 {
+    let g = spec.group as usize;
+    let kt = spec.k_taps as usize;
+    let xcard = 1u64 << spec.sx_bits;
+    let kcard = 1u64 << spec.sk_bits;
+    let mut x = vec![0u64; g];
+    let mut k = vec![0u64; kt];
+    let mut best = 0u128;
+    loop {
+        let peak = *conv1d_full_direct(&x, &k).iter().max().unwrap();
+        best = best.max(peak as u128);
+        // Increment (x ++ k) as one mixed-radix counter.
+        let mut carried = true;
+        for v in x.iter_mut() {
+            if *v + 1 < xcard {
+                *v += 1;
+                carried = false;
+                break;
+            }
+            *v = 0;
+        }
+        if carried {
+            for v in k.iter_mut() {
+                if *v + 1 < kcard {
+                    *v += 1;
+                    carried = false;
+                    break;
+                }
+                *v = 0;
+            }
+        }
+        if carried {
+            return best;
+        }
+    }
+}
+
+/// Satellite pin, part 1: over small carriers (tiny groups) the
+/// analyzer's bound EQUALS the exhaustive maximum — exact, so there can
+/// be neither a false "safe" nor hidden over-tightness.
+#[test]
+fn lane_bound_is_exact_against_exhaustive_enumeration() {
+    let mut checked = 0u32;
+    for sx in 1..=3u32 {
+        for sk in 1..=3u32 {
+            for kt in 1..=4u32 {
+                for rb in [8u32, 12, 16, 20] {
+                    let Some(spec) = PackSpec::new(sx, sk, kt, rb) else { continue };
+                    let combos = (1u128 << sx).pow(spec.group) * (1u128 << sk).pow(kt);
+                    if combos > 300_000 {
+                        continue;
+                    }
+                    let brute = brute_force_max_field(&spec);
+                    let bound = worst_case_field_sum(sx, sk, kt, spec.group);
+                    assert_eq!(bound, brute, "bound must be exact for {spec:?}");
+                    // Planner-chosen fields are safe, confirmed by the oracle.
+                    assert!(brute <= field_capacity(spec.field));
+                    checked += 1;
+                }
+            }
+        }
+    }
+    assert!(checked >= 20, "enumeration grid degenerated ({checked} specs)");
+}
+
+/// Satellite pin, part 2: for every candidate field width the
+/// analyzer's safe/unsafe verdict matches the brute-force truth —
+/// narrowed (over-packed) fields included.
+#[test]
+fn analyzer_verdict_matches_brute_force_for_every_field_width() {
+    for sx in 1..=3u32 {
+        for sk in 1..=3u32 {
+            for kt in 1..=3u32 {
+                for rb in [12u32, 16, 20] {
+                    let Some(base) = PackSpec::new(sx, sk, kt, rb) else { continue };
+                    let combos = (1u128 << sx).pow(base.group) * (1u128 << sk).pow(kt);
+                    if combos > 300_000 {
+                        continue;
+                    }
+                    // The true max depends only on (bits, taps, group).
+                    let brute = brute_force_max_field(&base);
+                    for field in 1..=base.field {
+                        let analyzer_safe =
+                            worst_case_field_sum(sx, sk, kt, base.group)
+                                <= field_capacity(field);
+                        let truly_safe = brute <= field_capacity(field);
+                        assert_eq!(
+                            analyzer_safe, truly_safe,
+                            "verdict diverges at field={field} for {base:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Satellite pin, part 3: up to 4-bit operands and 8 taps (the issue's
+/// envelope) the bound is attained by all-max operands — achievability
+/// on the big grid where full enumeration is too large.
+#[test]
+fn lane_bound_attained_by_all_max_operands_up_to_4bit_8tap() {
+    for sx in 1..=4u32 {
+        for sk in 1..=4u32 {
+            for kt in 1..=8u32 {
+                for rb in [16u32, 24, 32, 48, 63, 64] {
+                    let Some(spec) = PackSpec::new(sx, sk, kt, rb) else { continue };
+                    let x = vec![(1u64 << sx) - 1; spec.group as usize];
+                    let k = vec![(1u64 << sk) - 1; kt as usize];
+                    let peak = *conv1d_full_direct(&x, &k).iter().max().unwrap() as u128;
+                    assert_eq!(
+                        peak,
+                        worst_case_field_sum(sx, sk, kt, spec.group),
+                        "all-max operands must attain the bound for {spec:?}"
+                    );
+                    assert!(peak <= field_capacity(spec.field));
+                }
+            }
+        }
+    }
+}
+
+/// The machine-readable contract the CI trend artifact greps for.
+#[test]
+fn check_json_carries_schema_keys() {
+    let m7 = Target::lookup("stm32f746").unwrap();
+    let cm = compile(&models::vgg_tiny(10, 16), 4, Method::RpSlbc, m7);
+    let js = analysis::analyze(&cm).to_json().to_string_compact();
+    for key in ["\"rule\"", "\"severity\"", "\"sram_peak_bytes\"", "\"diagnostics\""] {
+        assert!(js.contains(key), "missing {key} in {js}");
+    }
+}
