@@ -8,6 +8,7 @@
 use crate::nas::CostProxy;
 use crate::ops::Method;
 use crate::perf::PerfModel;
+use crate::quant::BitConfig;
 use crate::runtime::{ArtifactStore, Runtime};
 use crate::target::Target;
 use crate::Result;
@@ -33,6 +34,11 @@ pub struct PipelineCfg {
     /// Use the EdMIPS MAC proxy instead of the Eq. 12 model (Fig. 8
     /// ablation).
     pub use_edmips_proxy: bool,
+    /// Skip the supernet search and QAT/deploy this configuration
+    /// instead — how a saved config (`--config-file`, written by
+    /// `search --native` or `quant::save_config`) re-enters the
+    /// pipeline as a reusable artifact.
+    pub fixed_config: Option<BitConfig>,
 }
 
 impl PipelineCfg {
@@ -49,6 +55,7 @@ impl PipelineCfg {
                 Method::RpSlbc,
             ],
             use_edmips_proxy: false,
+            fixed_config: None,
         }
     }
 }
@@ -75,18 +82,39 @@ pub fn run_pipeline(rt: &Runtime, store: &ArtifactStore, cfg: &PipelineCfg) -> R
     let target = Target::resolve(&cfg.target)?;
 
     // 1. Hardware-aware quantization search, priced for the deployment
-    // target's core.
-    let proxy = if cfg.use_edmips_proxy {
-        CostProxy::EdMipsMacs
-    } else {
-        CostProxy::SimdAware(PerfModel::for_target(target), Method::RpSlbc)
+    // target's core — or the caller's fixed configuration, which skips
+    // the supernet entirely (QAT warm-starts from the init params).
+    let (config, warm_params, search_history, final_entropy) = match &cfg.fixed_config {
+        Some(fixed) => {
+            anyhow::ensure!(
+                fixed.num_layers() == model.num_layers(),
+                "fixed config has {} layers, {} has {}",
+                fixed.num_layers(),
+                model.name,
+                model.num_layers()
+            );
+            (fixed.clone(), arts.load_init_params()?, Vec::new(), 0.0)
+        }
+        None => {
+            let proxy = if cfg.use_edmips_proxy {
+                CostProxy::EdMipsMacs
+            } else {
+                CostProxy::SimdAware(PerfModel::for_target(target), Method::RpSlbc)
+            };
+            let search = SupernetSearch::new(rt, &arts, proxy, cfg.search.seed)?;
+            let outcome = search.run(&cfg.search)?;
+            (
+                outcome.config,
+                outcome.params,
+                outcome.history,
+                outcome.final_entropy,
+            )
+        }
     };
-    let search = SupernetSearch::new(rt, &arts, proxy, cfg.search.seed)?;
-    let outcome = search.run(&cfg.search)?;
 
     // 2. QAT of the selected sub-net.
     let runner = QatRunner::new(rt, &arts, cfg.qat.seed)?;
-    let qat = runner.run(&outcome.params, &outcome.config, &cfg.qat)?;
+    let qat = runner.run(&warm_params, &config, &cfg.qat)?;
 
     // 3. Deploy every method and compare.
     let probe = super::DataStream::new(
@@ -100,7 +128,7 @@ pub fn run_pipeline(rt: &Runtime, store: &ArtifactStore, cfg: &PipelineCfg) -> R
         rt,
         &arts,
         &model,
-        &outcome.config,
+        &config,
         &qat.params,
         &cfg.methods,
         &cfg.qat,
@@ -127,10 +155,10 @@ pub fn run_pipeline(rt: &Runtime, store: &ArtifactStore, cfg: &PipelineCfg) -> R
 
     Ok(PipelineReport {
         backbone: cfg.backbone.clone(),
-        search_history: outcome.history,
-        searched_wbits: outcome.config.wbits.clone(),
-        searched_abits: outcome.config.abits.clone(),
-        final_entropy: outcome.final_entropy,
+        search_history,
+        searched_wbits: config.wbits.clone(),
+        searched_abits: config.abits.clone(),
+        final_entropy,
         qat_history: qat.history,
         qat_eval_acc: qat.eval_acc,
         rows,

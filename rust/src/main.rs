@@ -14,10 +14,11 @@
 //! * `slbc-demo`                    — Layer-1 Pallas kernel vs Rust packing
 //! * `calibrate`                    — fit & report the Eq. 12 coefficients
 //!
-//! The search/QAT/pipeline commands run from the AOT artifacts in
-//! `--artifacts DIR` (default `artifacts/`); Python is never invoked.
-//! `serve` and `bench-serve` need neither artifacts nor PJRT: workloads
-//! deploy zoo backbones with seeded synthetic parameters.
+//! The supernet search/QAT/pipeline commands run from the AOT artifacts
+//! in `--artifacts DIR` (default `artifacts/`); Python is never invoked.
+//! `search --native`, `deploy`, `check`, `profile`, `serve` and
+//! `bench-serve` need neither artifacts nor PJRT: they fall back to zoo
+//! backbones with seeded synthetic parameters.
 
 use mcu_mixq::coordinator::qat::QatCfg;
 use mcu_mixq::coordinator::{self, PipelineCfg, QatRunner, SearchCfg, SupernetSearch};
@@ -82,13 +83,15 @@ fn print_help() {
          COMMANDS:\n\
          \x20 info                          show artifacts / backbones / calibration\n\
          \x20 search   --backbone B         run the quantization explorer\n\
+         \x20          [--native] (Pareto co-design search, see SEARCH below)\n\
          \x20          [--steps N] [--lam F] [--proxy simd|edmips]\n\
          \x20 qat      --backbone B         QAT at fixed bits\n\
          \x20          [--steps N] [--wbits 4,4,..] [--abits 4,4,..]\n\
          \x20 pipeline --backbone B         full search→QAT→deploy→compare\n\
-         \x20          [--target stm32f746]\n\
+         \x20          [--target stm32f746] [--config-file CFG.json]\n\
          \x20 deploy   --backbone B         deploy one method\n\
-         \x20          [--method rp-slbc] [--bits 4] [--target stm32f746]\n\
+         \x20          [--method rp-slbc] [--bits 4] [--config-file CFG.json]\n\
+         \x20          [--target stm32f746]\n\
          \x20 check    --backbone B         static packing-safety & resource\n\
          \x20                               analysis of one compiled model (no\n\
          \x20                               inference executed)\n\
@@ -101,6 +104,7 @@ fn print_help() {
          \x20          [--out profile.json]\n\
          \x20 serve                         replay a request trace on an MCU fleet\n\
          \x20          [--mix backbone:method:bits[:weight],...]\n\
+         \x20           (bits also takes cfg@FILE, a saved searched config)\n\
          \x20          [--fleet m7:4,m4:4] [--sched rr|least|slo|energy]\n\
          \x20          [--admission fifo|class] [--preempt] [--steal]\n\
          \x20          [--requests N] [--devices N] [--mean-gap-ms F]\n\
@@ -141,6 +145,27 @@ fn print_help() {
             t.flash_bytes / 1024
         );
     }
+    println!(
+        "\nSEARCH (`search --native`; no PJRT or artifacts needed):\n\
+         \x20 search --native               native mixed-precision co-design\n\
+         \x20                               search: DP over the layer graph\n\
+         \x20                               (MPIC-style MACs/cycle LUT derived\n\
+         \x20                               from the target CycleModel) + a\n\
+         \x20                               seeded evolutionary loop keeping a\n\
+         \x20                               Pareto archive over cycles x joules\n\
+         \x20                               x SRAM peak x accuracy proxy (MAC-\n\
+         \x20                               weighted SQNR). Candidates are\n\
+         \x20                               pruned through analysis::analyze —\n\
+         \x20                               lane-overflow/SRAM/flash-infeasible\n\
+         \x20                               configs are never scored\n\
+         \x20        [--backbone B] [--method rp-slbc] [--seed S]\n\
+         \x20        [--targets stm32f746,stm32f446] [--generations N]\n\
+         \x20        [--population N] [--out search_pareto.json]\n\
+         \x20        [--save-config CFG.json] (best-cycles config, reusable)\n\
+         Saved configs are first-class artifacts: deploy/pipeline take them\n\
+         via --config-file, serve via a `backbone:method:cfg@CFG.json` mix\n\
+         entry (each searched config gets its own registry ModelKey)."
+    );
     println!(
         "\nSCHEDULERS (`--sched`): rr (round-robin), least (least-loaded),\n\
          \x20 slo (deadline-miss-minimizing), energy (minimize predicted\n\
@@ -220,6 +245,53 @@ fn backbone_arg(args: &Args) -> String {
     args.str_or("backbone", "vgg_tiny")
 }
 
+/// Backbone geometry + flat parameters: artifact-trained when the store
+/// has the backbone, otherwise the seeded synthetic parameters the
+/// serving path uses — the artifact-free fallback shared by `check`,
+/// `profile`, `deploy` and `search --native`.
+fn load_model_params(args: &Args) -> Result<(mcu_mixq::models::ModelDesc, Vec<f32>)> {
+    match store(args).and_then(|s| {
+        let arts = s.backbone(&backbone_arg(args))?;
+        let p = arts.load_init_params()?;
+        Ok((arts.model.clone(), p))
+    }) {
+        Ok(mp) => Ok(mp),
+        Err(_) => {
+            let model = mcu_mixq::models::by_name(&backbone_arg(args))
+                .ok_or_else(|| anyhow::anyhow!("unknown backbone `{}`", backbone_arg(args)))?;
+            let mut rng = mcu_mixq::util::prng::Rng::new(args.u64_or("seed", 1000));
+            let params = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+            Ok((model, params))
+        }
+    }
+}
+
+/// Resolve the layer bit configuration for `deploy`-style commands:
+/// `--config-file` (a saved `search --native` artifact, backbone-checked)
+/// wins over `--bits`.
+fn parse_config(args: &Args, model: &mcu_mixq::models::ModelDesc) -> Result<BitConfig> {
+    let n = model.num_layers();
+    if let Some(path) = args.get("config-file") {
+        let (backbone, cfg) = mcu_mixq::quant::load_config(path)?;
+        anyhow::ensure!(
+            backbone == model.name,
+            "{path} was searched for `{backbone}`, not `{}`",
+            model.name
+        );
+        anyhow::ensure!(
+            cfg.num_layers() == n,
+            "{path}: config has {} layers, {} has {n}",
+            cfg.num_layers(),
+            model.name
+        );
+        return Ok(cfg);
+    }
+    Ok(BitConfig {
+        wbits: parse_bits(&args.str_or("bits", "4"), n)?,
+        abits: parse_bits(&args.str_or("bits", "4"), n)?,
+    })
+}
+
 fn parse_bits(s: &str, n: usize) -> Result<Vec<u8>> {
     if let Ok(b) = s.parse::<u8>() {
         return Ok(vec![b; n]);
@@ -262,6 +334,9 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
+    if args.bool_or("native", false) {
+        return cmd_search_native(args);
+    }
     let store = store(args)?;
     let rt = Runtime::cpu()?;
     let arts = store.backbone(&backbone_arg(args))?;
@@ -293,6 +368,96 @@ fn cmd_search(args: &Args) -> Result<()> {
         out.config.avg_abits(),
         out.final_entropy
     );
+    Ok(())
+}
+
+/// Native Pareto-front co-design search (`search --native`): no PJRT,
+/// no artifacts required — DP seeding over the MPIC-style MACs/cycle
+/// LUT plus a seeded evolutionary loop, every candidate pruned through
+/// the static analyzer before scoring. Emits one Pareto front per
+/// `--targets` entry into `--out` and optionally saves the first
+/// target's best-cycles configuration as a reusable `--config-file`
+/// artifact.
+fn cmd_search_native(args: &Args) -> Result<()> {
+    use mcu_mixq::nas::search::{native_search, outcomes_to_json, NativeSearchCfg};
+
+    let (model, params) = load_model_params(args)?;
+    let method = Method::parse(&args.str_or("method", "rp-slbc"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let mut cfg = NativeSearchCfg {
+        method,
+        ..NativeSearchCfg::default()
+    };
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.generations = args.usize_or("generations", cfg.generations);
+    cfg.population = args.usize_or("population", cfg.population);
+
+    let target_spec = args.str_or("targets", "stm32f746,stm32f446");
+    let targets: Vec<&'static Target> = target_spec
+        .split(',')
+        .map(|t| Target::resolve(t.trim()))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!targets.is_empty(), "--targets wants at least one name");
+
+    println!(
+        "native search: {} via {} (seed {}, {} generation(s) x {} offspring)\n",
+        model.name,
+        method.name(),
+        cfg.seed,
+        cfg.generations,
+        cfg.population
+    );
+    let mut outcomes = Vec::new();
+    for target in targets {
+        let out = native_search(&model, &params, target, &cfg)?;
+        let best = out.best_cycles().clone();
+        println!(
+            "{}: {} Pareto point(s) ({} scored, {} pruned by the analyzer)",
+            target.name,
+            out.front.len(),
+            out.evaluated,
+            out.pruned
+        );
+        let mut t = Table::new(vec![
+            "cycles", "joules", "SRAM KB", "flash KB", "SQNR dB", "avg w", "avg a",
+        ]);
+        for p in &out.front {
+            t.row(vec![
+                format!("{}", p.obj.cycles),
+                format!("{:.4}", p.obj.joules),
+                format!("{:.1}", p.obj.sram_peak_bytes as f64 / 1024.0),
+                format!("{:.1}", p.obj.flash_total_bytes as f64 / 1024.0),
+                format!("{:.1}", p.obj.accuracy_proxy_db),
+                format!("{:.2}", p.cfg.avg_wbits()),
+                format!("{:.2}", p.cfg.avg_abits()),
+            ]);
+        }
+        t.print();
+        println!(
+            "best-cycles vs uniform-8: {:.2}x cycles, {:.2}x flash  (u8: {} cycles, {:.1} KB)\n",
+            best.obj.cycles as f64 / out.uniform8.cycles as f64,
+            best.obj.flash_total_bytes as f64 / out.uniform8.flash_total_bytes as f64,
+            out.uniform8.cycles,
+            out.uniform8.flash_total_bytes as f64 / 1024.0
+        );
+        outcomes.push(out);
+    }
+
+    if let Some(path) = args.get("save-config") {
+        let best = outcomes[0].best_cycles();
+        mcu_mixq::quant::save_config(path, &model.name, &best.cfg)?;
+        println!(
+            "saved best-cycles config for {} ({}) to {path}",
+            model.name, outcomes[0].target
+        );
+    }
+    let json = outcomes_to_json(&model.name, method, cfg.seed, &outcomes);
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, format!("{}\n", json.to_string_compact()))?;
+        println!("wrote {path}");
+    } else {
+        println!("{}", json.to_string_compact());
+    }
     Ok(())
 }
 
@@ -333,6 +498,16 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     cfg.search.steps = args.usize_or("search-steps", cfg.search.steps);
     cfg.qat.steps = args.usize_or("qat-steps", cfg.qat.steps);
     cfg.use_edmips_proxy = args.str_or("proxy", "simd") == "edmips";
+    if let Some(path) = args.get("config-file") {
+        // A saved `search --native` artifact replaces the supernet
+        // search: QAT and the comparison table run at this config.
+        let (saved_backbone, fixed) = mcu_mixq::quant::load_config(path)?;
+        anyhow::ensure!(
+            saved_backbone == backbone,
+            "{path} was searched for `{saved_backbone}`, not `{backbone}`"
+        );
+        cfg.fixed_config = Some(fixed);
+    }
 
     let report = coordinator::run_pipeline(&rt, &store, &cfg)?;
     println!("== search ==");
@@ -357,17 +532,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 }
 
 fn cmd_deploy(args: &Args) -> Result<()> {
-    let store = store(args)?;
-    let arts = store.backbone(&backbone_arg(args))?;
-    let model = arts.model.clone();
     let method = Method::parse(&args.str_or("method", "rp-slbc"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
-    let n = model.num_layers();
-    let cfg = BitConfig {
-        wbits: parse_bits(&args.str_or("bits", "4"), n)?,
-        abits: parse_bits(&args.str_or("bits", "4"), n)?,
-    };
-    let params = arts.load_init_params()?;
+    let (model, params) = load_model_params(args)?;
+    let cfg = parse_config(args, &model)?;
     let target = parse_target(args)?;
     let probe = mcu_mixq::datasets::generate(
         mcu_mixq::datasets::Task::for_backbone(&model.name),
@@ -401,28 +569,8 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 fn cmd_check(args: &Args) -> Result<()> {
     let method = Method::parse(&args.str_or("method", "rp-slbc"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
-    // Artifact-trained parameters when the store has the backbone;
-    // otherwise the seeded synthetic parameters the serving path uses —
-    // the analyzer (like serve) must run without AOT artifacts.
-    let (model, params) = match store(args).and_then(|s| {
-        let arts = s.backbone(&backbone_arg(args))?;
-        let p = arts.load_init_params()?;
-        Ok((arts.model.clone(), p))
-    }) {
-        Ok(mp) => mp,
-        Err(_) => {
-            let model = mcu_mixq::models::by_name(&backbone_arg(args))
-                .ok_or_else(|| anyhow::anyhow!("unknown backbone `{}`", backbone_arg(args)))?;
-            let mut rng = mcu_mixq::util::prng::Rng::new(args.u64_or("seed", 1000));
-            let params = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
-            (model, params)
-        }
-    };
-    let n = model.num_layers();
-    let cfg = BitConfig {
-        wbits: parse_bits(&args.str_or("bits", "4"), n)?,
-        abits: parse_bits(&args.str_or("bits", "4"), n)?,
-    };
+    let (model, params) = load_model_params(args)?;
+    let cfg = parse_config(args, &model)?;
     let target = parse_target(args)?;
     // Unbounded compile on purpose: a model over the SRAM budget must
     // *report* resource/sram-exceeded, not die in the compile gate —
@@ -460,28 +608,8 @@ fn cmd_check(args: &Args) -> Result<()> {
 fn cmd_profile(args: &Args) -> Result<()> {
     let method = Method::parse(&args.str_or("method", "rp-slbc"))
         .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
-    // Artifact-trained parameters when the store has the backbone;
-    // otherwise the seeded synthetic parameters the serving path uses —
-    // the profiler (like serve) must run without AOT artifacts.
-    let (model, params) = match store(args).and_then(|s| {
-        let arts = s.backbone(&backbone_arg(args))?;
-        let p = arts.load_init_params()?;
-        Ok((arts.model.clone(), p))
-    }) {
-        Ok(mp) => mp,
-        Err(_) => {
-            let model = mcu_mixq::models::by_name(&backbone_arg(args))
-                .ok_or_else(|| anyhow::anyhow!("unknown backbone `{}`", backbone_arg(args)))?;
-            let mut rng = mcu_mixq::util::prng::Rng::new(args.u64_or("seed", 1000));
-            let params = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
-            (model, params)
-        }
-    };
-    let n = model.num_layers();
-    let cfg = BitConfig {
-        wbits: parse_bits(&args.str_or("bits", "4"), n)?,
-        abits: parse_bits(&args.str_or("bits", "4"), n)?,
-    };
+    let (model, params) = load_model_params(args)?;
+    let cfg = parse_config(args, &model)?;
     let target = parse_target(args)?;
     let probe = mcu_mixq::datasets::generate(
         mcu_mixq::datasets::Task::for_backbone(&model.name),
@@ -565,7 +693,9 @@ fn cmd_slbc_demo(args: &Args) -> Result<()> {
 
 /// Parse a `--mix` spec: comma-separated `backbone:method:bits[:weight]`
 /// entries, each becoming one served workload with seeded synthetic
-/// parameters.
+/// parameters. The bits field also accepts `cfg@FILE` — a saved
+/// `search --native` configuration (`quant::save_config`), which serves
+/// the searched per-layer mixed-precision config as its own `ModelKey`.
 fn parse_mix(spec: &str) -> Result<(Vec<Workload>, Vec<f64>)> {
     let mut workloads = Vec::new();
     let mut weights = Vec::new();
@@ -577,10 +707,20 @@ fn parse_mix(spec: &str) -> Result<(Vec<Workload>, Vec<f64>)> {
         );
         let method = Method::parse(parts[1])
             .ok_or_else(|| anyhow::anyhow!("unknown method `{}` in mix", parts[1]))?;
-        let bits: u8 = parts[2].parse()?;
         let weight: f64 = if parts.len() == 4 { parts[3].parse()? } else { 1.0 };
         anyhow::ensure!(weight > 0.0, "mix weight must be positive in `{entry}`");
-        workloads.push(Workload::synth(parts[0], method, bits, 1000 + i as u64)?);
+        let workload = if let Some(path) = parts[2].strip_prefix("cfg@") {
+            let (backbone, cfg) = mcu_mixq::quant::load_config(path)?;
+            anyhow::ensure!(
+                backbone == parts[0],
+                "{path} was searched for `{backbone}`, not `{}` (mix entry `{entry}`)",
+                parts[0]
+            );
+            Workload::with_config(parts[0], method, cfg, 1000 + i as u64)?
+        } else {
+            Workload::synth(parts[0], method, parts[2].parse()?, 1000 + i as u64)?
+        };
+        workloads.push(workload);
         weights.push(weight);
     }
     Ok((workloads, weights))

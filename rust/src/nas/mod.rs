@@ -1,15 +1,27 @@
 //! Hardware-aware quantization search (paper §III.B, Fig. 8).
 //!
-//! The differentiable supernet itself lives at Layer 2 (JAX,
-//! `model.py::make_supernet_train_step`) and is executed through PJRT by
-//! the coordinator. This module owns everything *around* that program:
+//! Two search engines share this module, one per execution tier:
 //!
-//! * the quantization search space `Q` (bitwidth options per layer);
-//! * the **cost tables** `cost[l, i, j]` fed to the supernet's complexity
-//!   loss — either the EdMIPS-style MAC proxy (the Fig. 8 baseline) or the
-//!   SIMD-aware Eq. 12 model of [`crate::perf`] (the paper's contribution);
-//! * branch-logit bookkeeping: softmax, entropy, argmax selection of the
-//!   final [`BitConfig`].
+//! * **Native co-design search** ([`search`]) — the offline engine: a DP
+//!   pass over the layer graph seeded from per-layer `(w_bit, a_bit)`
+//!   candidates, refined by a seeded evolutionary loop that maintains a
+//!   Pareto archive over cycles × joules × SRAM peak × accuracy proxy.
+//!   It needs no Python/PJRT: cycle and joule objectives come from
+//!   [`crate::perf::predict_model`], legality from [`crate::analysis`],
+//!   and the accuracy proxy from SQNR round-trips through
+//!   [`crate::quant`]. This is the `search --native` CLI path.
+//! * **Layer-2 supernet search** (the rest of this module) — the
+//!   differentiable EdMIPS-style supernet lives at Layer 2 (JAX,
+//!   `model.py::make_supernet_train_step`) and is executed through PJRT
+//!   by the coordinator. This module owns everything *around* that
+//!   program: the search space `Q`, the **cost tables** `cost[l, i, j]`
+//!   fed to the supernet's complexity loss — either the EdMIPS-style MAC
+//!   proxy (the Fig. 8 baseline) or the SIMD-aware Eq. 12 model of
+//!   [`crate::perf`] (the paper's contribution) — and branch-logit
+//!   bookkeeping: softmax, entropy, argmax selection of the final
+//!   [`BitConfig`].
+
+pub mod search;
 
 use crate::models::ModelDesc;
 use crate::ops::Method;
@@ -105,15 +117,10 @@ impl CostTable {
 
     /// Complexity of a concrete configuration (sum of selected entries).
     pub fn config_cost(&self, space: &SearchSpace, cfg: &BitConfig) -> f64 {
-        let k = self.k;
         let idx_of = |b: u8| space.options.iter().position(|&o| o == b).unwrap();
         (0..self.num_layers)
             .map(|l| self.at(l, idx_of(cfg.wbits[l]), idx_of(cfg.abits[l])) as f64)
             .sum::<f64>()
-            * {
-                let _ = k;
-                1.0
-            }
     }
 }
 

@@ -1,0 +1,193 @@
+//! Per-layer quantization-error accuracy proxy.
+//!
+//! No labeled evaluation exists offline, so the native search scores
+//! candidates by signal-to-quantization-noise ratio (SQNR): round-trip
+//! each layer's weights through [`quantize_weights`]/[`dequantize_weights`]
+//! and a seeded synthetic activation sample through [`quantize_acts`],
+//! measure error power against signal power in dB, and MAC-weight the
+//! per-layer scores (a mis-quantized heavy layer hurts more than a light
+//! one). The whole `[L, K, K]` grid is precomputed once per search — a
+//! candidate's proxy is then a table lookup, which is what lets the DP
+//! and the evolutionary loop score thousands of configs cheaply.
+
+use crate::models::ModelDesc;
+use crate::quant::{dequantize_weights, quantize_acts, quantize_weights};
+use crate::util::prng::Rng;
+
+/// SQNR ceiling (dB): a round-trip with vanishing error saturates here
+/// instead of diverging, keeping the proxy finite and comparable.
+pub const SQNR_CAP_DB: f64 = 96.0;
+
+/// Activation sample size per layer for the activation-side SQNR.
+const ACT_SAMPLES: usize = 256;
+
+fn sqnr_db(signal: &[f32], recon: impl Iterator<Item = f32>) -> f64 {
+    let mut p_sig = 0.0f64;
+    let mut p_err = 0.0f64;
+    for (&s, r) in signal.iter().zip(recon) {
+        p_sig += (s as f64) * (s as f64);
+        p_err += (s as f64 - r as f64) * (s as f64 - r as f64);
+    }
+    if p_sig <= 0.0 {
+        return 0.0;
+    }
+    if p_err <= 0.0 {
+        return SQNR_CAP_DB;
+    }
+    (10.0 * (p_sig / p_err).log10()).clamp(0.0, SQNR_CAP_DB)
+}
+
+/// Precomputed per-layer SQNR grid over the bit options: `q[l][i][j]` is
+/// layer `l`'s quality (dB) at `(wbits = options[i], abits = options[j])`,
+/// the mean of the weight and activation round-trip SQNRs.
+#[derive(Debug, Clone)]
+pub struct QualityTable {
+    pub options: Vec<u8>,
+    pub num_layers: usize,
+    q: Vec<f64>,
+    mac_share: Vec<f64>,
+}
+
+impl QualityTable {
+    /// Build the grid from the model's real weights (`params`, the flat
+    /// parameter vector) and seeded half-normal activation samples. The
+    /// samples depend only on `(seed, layer)`, never on the candidate
+    /// bits, so scores are comparable across configurations.
+    pub fn build(model: &ModelDesc, params: &[f32], options: &[u8], seed: u64) -> QualityTable {
+        let k = options.len();
+        let lnum = model.num_layers();
+        let total_macs = model.total_macs().max(1) as f64;
+        let mut q = vec![0.0f64; lnum * k * k];
+        let mut mac_share = Vec::with_capacity(lnum);
+        let base = Rng::new(seed);
+        for (l, layer) in model.layers.iter().enumerate() {
+            mac_share.push(layer.macs as f64 / total_macs);
+            let w = &params[layer.w_offset..layer.w_offset + layer.w_size];
+            // Half-normal activation sample (post-ReLU shape), fixed per
+            // (seed, layer).
+            let mut rng = base.clone().fork(l as u64 + 1);
+            let acts: Vec<f32> = (0..ACT_SAMPLES).map(|_| rng.normal().abs()).collect();
+            let w_sqnr: Vec<f64> = options
+                .iter()
+                .map(|&wb| {
+                    let qw = quantize_weights(w, wb);
+                    sqnr_db(w, dequantize_weights(&qw).into_iter())
+                })
+                .collect();
+            let a_sqnr: Vec<f64> = options
+                .iter()
+                .map(|&ab| {
+                    let qa = quantize_acts(&acts, ab);
+                    sqnr_db(&acts, qa.data.iter().map(|&v| v as f32 * qa.scale))
+                })
+                .collect();
+            for i in 0..k {
+                for j in 0..k {
+                    q[(l * k + i) * k + j] = 0.5 * (w_sqnr[i] + a_sqnr[j]);
+                }
+            }
+        }
+        QualityTable {
+            options: options.to_vec(),
+            num_layers: lnum,
+            q,
+            mac_share,
+        }
+    }
+
+    fn idx_of(&self, b: u8) -> usize {
+        self.options
+            .iter()
+            .position(|&o| o == b)
+            .unwrap_or_else(|| panic!("bitwidth {b} outside search options"))
+    }
+
+    /// Layer `l`'s SQNR (dB) at `(wbits, abits)`.
+    pub fn at(&self, l: usize, wbits: u8, abits: u8) -> f64 {
+        let k = self.options.len();
+        self.q[(l * k + self.idx_of(wbits)) * k + self.idx_of(abits)]
+    }
+
+    /// MAC share of layer `l` in the whole model (the proxy's weights).
+    pub fn mac_share(&self, l: usize) -> f64 {
+        self.mac_share[l]
+    }
+
+    /// MAC-weighted model SQNR (dB) of a full configuration — the search's
+    /// accuracy-proxy objective (higher is better).
+    pub fn proxy(&self, cfg: &crate::quant::BitConfig) -> f64 {
+        (0..self.num_layers)
+            .map(|l| self.mac_share[l] * self.at(l, cfg.wbits[l], cfg.abits[l]))
+            .sum()
+    }
+
+    /// MAC-weighted quality *drop* of layer `l` at `(w, a)` relative to
+    /// the best option pair — the DP's per-layer error cost (>= 0).
+    pub fn err_cost(&self, l: usize, wbits: u8, abits: u8) -> f64 {
+        let k = self.options.len();
+        let best = (0..k * k)
+            .map(|ij| self.q[l * k * k + ij])
+            .fold(f64::NEG_INFINITY, f64::max);
+        self.mac_share[l] * (best - self.at(l, wbits, abits))
+    }
+}
+
+/// One-shot MAC-weighted SQNR proxy (dB) for a single configuration —
+/// convenience wrapper over [`QualityTable`] for callers outside the
+/// search loop (benches, reports).
+pub fn accuracy_proxy(
+    model: &ModelDesc,
+    params: &[f32],
+    cfg: &crate::quant::BitConfig,
+    seed: u64,
+) -> f64 {
+    let mut options: Vec<u8> = cfg.wbits.iter().chain(&cfg.abits).copied().collect();
+    options.sort_unstable();
+    options.dedup();
+    QualityTable::build(model, params, &options, seed).proxy(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_tiny;
+    use crate::quant::BitConfig;
+
+    fn setup() -> (ModelDesc, Vec<f32>) {
+        let m = vgg_tiny(10, 16);
+        let mut rng = Rng::new(11);
+        let params = (0..m.param_count).map(|_| rng.normal() * 0.1).collect();
+        (m, params)
+    }
+
+    #[test]
+    fn more_bits_better_proxy() {
+        let (m, params) = setup();
+        let t = QualityTable::build(&m, &params, &[2, 4, 8], 5);
+        let p2 = t.proxy(&BitConfig::uniform(m.num_layers(), 2));
+        let p4 = t.proxy(&BitConfig::uniform(m.num_layers(), 4));
+        let p8 = t.proxy(&BitConfig::uniform(m.num_layers(), 8));
+        assert!(p2 < p4 && p4 < p8, "{p2} < {p4} < {p8} violated");
+        assert!(p8 <= SQNR_CAP_DB);
+    }
+
+    #[test]
+    fn err_cost_zero_at_best_pair() {
+        let (m, params) = setup();
+        let t = QualityTable::build(&m, &params, &[2, 4, 8], 5);
+        for l in 0..m.num_layers() {
+            // 8/8 is the highest-SQNR pair, so its drop is ~0.
+            assert!(t.err_cost(l, 8, 8) < 1e-9);
+            assert!(t.err_cost(l, 2, 2) > 0.0);
+        }
+    }
+
+    #[test]
+    fn proxy_deterministic_and_seed_sensitive_samples() {
+        let (m, params) = setup();
+        let cfg = BitConfig::uniform(m.num_layers(), 4);
+        let a = accuracy_proxy(&m, &params, &cfg, 5);
+        let b = accuracy_proxy(&m, &params, &cfg, 5);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

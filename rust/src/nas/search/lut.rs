@@ -1,0 +1,161 @@
+//! MPIC-style effective-MACs/cycle LUT per `(a_bit, w_bit)` pair.
+//!
+//! Ottavi et al.'s MPIC core publishes a table of effective MACs/cycle
+//! per activation × weight bitwidth — the shape every mixed-precision
+//! search wants as its fast hardware cost. Here the same table falls out
+//! of the repo's own [`CycleModel`](crate::mcu::CycleModel): price one
+//! reference conv layer with [`crate::perf::predict_layer`] at every
+//! `(w, a)` pair on a [`Target`] and divide the layer's MACs by the
+//! predicted cycles. The LUT is the DP seeding cost of the native search
+//! (cheap: one multiply per layer instead of a model compile) and a
+//! reported diagnostic in the Pareto-front JSON.
+
+use crate::models::{vgg_tiny, LayerSpec};
+use crate::ops::Method;
+use crate::perf::predict_layer;
+use crate::target::Target;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Effective MACs/cycle per `(a_bit, w_bit)` pair on one target, derived
+/// from the cycle model — the native analogue of the MPIC table.
+#[derive(Debug, Clone)]
+pub struct MacsPerCycleLut {
+    /// Bit options, ascending (the table's axes).
+    pub bits: Vec<u8>,
+    /// Row-major `[a][w]` effective MACs/cycle.
+    pub data: Vec<f64>,
+    pub method: Method,
+    /// Registry name of the target the table was priced on.
+    pub target: &'static str,
+}
+
+/// The reference geometry the table is priced on: a mid-stack 3×3 conv
+/// (vgg_tiny's conv2, 16→16 at 16×16) — packed-SIMD behavior without
+/// dense-layer or first-layer edge cases.
+fn reference_layer() -> LayerSpec {
+    vgg_tiny(10, 16).layers[1].clone()
+}
+
+impl MacsPerCycleLut {
+    /// Price the table for `method` on `target` over bit options 2..=8.
+    pub fn for_target(target: &Target, method: Method) -> MacsPerCycleLut {
+        let bits: Vec<u8> = (2..=8).collect();
+        let layer = reference_layer();
+        let mut data = Vec::with_capacity(bits.len() * bits.len());
+        for &a in &bits {
+            for &w in &bits {
+                let cycles = predict_layer(&layer, method, w, a).cycles_on(target);
+                data.push(layer.macs as f64 / cycles.max(1) as f64);
+            }
+        }
+        MacsPerCycleLut {
+            bits,
+            data,
+            method,
+            target: target.name,
+        }
+    }
+
+    /// Effective MACs/cycle at `(a_bit, w_bit)`.
+    pub fn at(&self, abits: u8, wbits: u8) -> f64 {
+        let idx = |b: u8| {
+            self.bits
+                .iter()
+                .position(|&o| o == b)
+                .unwrap_or_else(|| panic!("bitwidth {b} outside LUT options"))
+        };
+        self.data[idx(abits) * self.bits.len() + idx(wbits)]
+    }
+
+    /// Estimated cycles for `macs` multiply-accumulates at `(a, w)` — the
+    /// DP's per-layer cost.
+    pub fn est_cycles(&self, macs: u64, wbits: u8, abits: u8) -> f64 {
+        macs as f64 / self.at(abits, wbits)
+    }
+
+    /// The table as JSON: `{"bits": [...], "macs_per_cycle": [[..w..] per a]}`.
+    pub fn to_json(&self) -> Json {
+        let k = self.bits.len();
+        let rows: Vec<Json> = (0..k)
+            .map(|i| Json::Arr(self.data[i * k..(i + 1) * k].iter().map(|&v| Json::Num(v)).collect()))
+            .collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("bits".into(), Json::Arr(self.bits.iter().map(|&b| Json::Num(b as f64)).collect()));
+        obj.insert("macs_per_cycle".into(), Json::Arr(rows));
+        obj.insert("method".into(), Json::Str(self.method.name().into()));
+        obj.insert("target".into(), Json::Str(self.target.into()));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn luts() -> Vec<MacsPerCycleLut> {
+        ["stm32f746", "stm32f446"]
+            .iter()
+            .map(|n| MacsPerCycleLut::for_target(Target::resolve(n).unwrap(), Method::RpSlbc))
+            .collect()
+    }
+
+    #[test]
+    fn monotone_non_increasing_in_each_axis() {
+        // More bits never buy throughput: MACs/cycle is non-increasing
+        // along each of the a_bit and w_bit axes (MPIC table shape).
+        for lut in luts() {
+            for &a in &lut.bits {
+                for win in lut.bits.windows(2) {
+                    assert!(
+                        lut.at(a, win[0]) >= lut.at(a, win[1]) - 1e-12,
+                        "{}: a={a}: w{} -> w{} raised MACs/cycle",
+                        lut.target,
+                        win[0],
+                        win[1]
+                    );
+                }
+            }
+            for &w in &lut.bits {
+                for win in lut.bits.windows(2) {
+                    assert!(
+                        lut.at(win[0], w) >= lut.at(win[1], w) - 1e-12,
+                        "{}: w={w}: a{} -> a{} raised MACs/cycle",
+                        lut.target,
+                        win[0],
+                        win[1]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_ordering_matches_mpic_shape() {
+        // SNIPPETS.md Snippet 1 (MPIC, Ottavi et al.): the (2,2) corner
+        // is strictly fastest and the diagonal decays toward (8,8) —
+        // 6.5 > 3.5 > 2.1 in the reference table.
+        for lut in luts() {
+            let d2 = lut.at(2, 2);
+            let d4 = lut.at(4, 4);
+            let d8 = lut.at(8, 8);
+            assert!(d2 > d4 && d4 > d8, "{}: {d2} > {d4} > {d8} violated", lut.target);
+            assert!(d8 > 0.0);
+        }
+    }
+
+    #[test]
+    fn est_cycles_inverts_the_table() {
+        let lut = luts().remove(0);
+        let c = lut.est_cycles(1_000_000, 4, 4);
+        assert!((c - 1_000_000.0 / lut.at(4, 4)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_shape() {
+        let lut = luts().remove(0);
+        let j = lut.to_json();
+        assert_eq!(j.req("bits").unwrap().as_arr().unwrap().len(), 7);
+        assert_eq!(j.req("macs_per_cycle").unwrap().as_arr().unwrap().len(), 7);
+    }
+}

@@ -1,0 +1,449 @@
+//! Native mixed-precision co-design search (paper §III.B, no PJRT).
+//!
+//! The offline engine that closes the HW/SW co-design loop in pure Rust:
+//!
+//! 1. **DP seeding** — a dynamic program over the layer graph with the
+//!    [`MacsPerCycleLut`] (MPIC-style effective MACs/cycle derived from
+//!    the target's `CycleModel`) as its fast cycle cost and the
+//!    MAC-weighted SQNR drop from [`QualityTable`] as its error budget.
+//!    Sweeping the budget yields a spine of seed configurations from
+//!    fastest-but-lossy to slowest-but-accurate.
+//! 2. **Evolutionary refinement** — a seeded loop of mutation and
+//!    crossover over [`BitConfig`]s, every candidate scored on the real
+//!    objectives: cycles and joules from
+//!    [`crate::perf::predict_model`] priced on the [`Target`], SRAM peak
+//!    and flash from the static analyzer's [`ResourceAudit`], accuracy
+//!    from the SQNR table. A [`ParetoArchive`] keeps the non-dominated
+//!    set over cycles × joules × SRAM × accuracy.
+//! 3. **Legality pruning** — candidates compile through
+//!    [`CompiledModel::compile_unbounded_for`] and must pass
+//!    [`crate::analysis::analyze`] with zero Error findings
+//!    (lane-overflow, SRAM, flash, plan consistency) *before* they reach
+//!    the archive; infeasible configs are never scored.
+//!
+//! Everything is driven by the seeded [`Rng`], so a fixed `--seed`
+//! reproduces the front bit-for-bit.
+
+pub mod accuracy;
+pub mod lut;
+pub mod pareto;
+
+pub use accuracy::{accuracy_proxy, QualityTable};
+pub use lut::MacsPerCycleLut;
+pub use pareto::{Objectives, ParetoArchive, ParetoPoint};
+
+use crate::analysis;
+use crate::engine::CompiledModel;
+use crate::models::ModelDesc;
+use crate::ops::Method;
+use crate::perf::predict_model;
+use crate::quant::BitConfig;
+use crate::target::Target;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// Native search configuration.
+#[derive(Debug, Clone)]
+pub struct NativeSearchCfg {
+    /// Deployed kernel the candidates are compiled and priced with.
+    pub method: Method,
+    /// Bitwidth options per layer (paper: every width in `[2, 8]`).
+    pub options: Vec<u8>,
+    pub seed: u64,
+    /// Evolutionary generations after DP seeding.
+    pub generations: usize,
+    /// Offspring per generation.
+    pub population: usize,
+    /// Error-budget buckets of the DP sweep (one seed per bucket).
+    pub dp_buckets: usize,
+}
+
+impl Default for NativeSearchCfg {
+    fn default() -> Self {
+        NativeSearchCfg {
+            method: Method::RpSlbc,
+            options: (2..=8).collect(),
+            seed: 7,
+            generations: 8,
+            population: 16,
+            dp_buckets: 12,
+        }
+    }
+}
+
+impl NativeSearchCfg {
+    /// The cheap protocol for tests and CI smokes.
+    pub fn smoke(seed: u64) -> Self {
+        NativeSearchCfg {
+            seed,
+            generations: 3,
+            population: 8,
+            dp_buckets: 8,
+            ..NativeSearchCfg::default()
+        }
+    }
+}
+
+/// Everything one native search produced on one target.
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub target: &'static str,
+    pub front: Vec<ParetoPoint>,
+    /// The uniform 8-bit baseline's objectives (always feasible on the
+    /// registry targets — the row the front must beat).
+    pub uniform8: Objectives,
+    /// The MPIC-style diagnostic LUT the DP seeded from.
+    pub lut: MacsPerCycleLut,
+    /// Distinct configurations scored (compile + analyze + predict).
+    pub evaluated: usize,
+    /// Distinct configurations rejected by the legality oracle.
+    pub pruned: usize,
+}
+
+impl SearchOutcome {
+    /// The minimum-cycles front point.
+    pub fn best_cycles(&self) -> &ParetoPoint {
+        &self.front[0]
+    }
+
+    /// One target's JSON block for `search_pareto.json`.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("target".into(), Json::Str(self.target.into()));
+        o.insert("front".into(), Json::Arr(self.front.iter().map(|p| p.to_json()).collect()));
+        o.insert("uniform8".into(), self.uniform8.to_json());
+        o.insert("lut".into(), self.lut.to_json());
+        o.insert("evaluated".into(), Json::Num(self.evaluated as f64));
+        o.insert("pruned".into(), Json::Num(self.pruned as f64));
+        Json::Obj(o)
+    }
+}
+
+/// The per-search evaluator: owns the quality table and the memo of
+/// scored configs, and enforces the legality gate.
+struct Evaluator<'a> {
+    model: &'a ModelDesc,
+    params: &'a [f32],
+    target: &'a Target,
+    method: Method,
+    quality: QualityTable,
+    cache: BTreeMap<(Vec<u8>, Vec<u8>), Option<Objectives>>,
+    pruned: usize,
+}
+
+impl<'a> Evaluator<'a> {
+    /// Score a candidate, or `None` if the method rejects its widths or
+    /// the static analyzer finds any Error (lane overflow, SRAM/flash
+    /// over budget, plan inconsistency). Memoized per configuration.
+    fn evaluate(&mut self, cfg: &BitConfig) -> Option<Objectives> {
+        let key = (cfg.wbits.clone(), cfg.abits.clone());
+        if let Some(cached) = self.cache.get(&key) {
+            return cached.clone();
+        }
+        let obj = self.evaluate_uncached(cfg);
+        if obj.is_none() {
+            self.pruned += 1;
+        }
+        self.cache.insert(key, obj.clone());
+        obj
+    }
+
+    fn evaluate_uncached(&mut self, cfg: &BitConfig) -> Option<Objectives> {
+        // Cheap pre-filter: the kernel must support every layer's widths
+        // (layer 0 consumes the 8-bit input image — the engine contract).
+        for (i, (&w, &a)) in cfg.wbits.iter().zip(&cfg.abits).enumerate() {
+            let consumed = if i == 0 { 8 } else { a };
+            if !self.method.supports(w, consumed) {
+                return None;
+            }
+        }
+        // Legality oracle: unbounded compile so over-budget configs are
+        // *reported* by the analyzer's rules rather than dying in the
+        // compile gate, then zero-Error required.
+        let cm = CompiledModel::compile_unbounded_for(
+            self.model,
+            self.params,
+            cfg,
+            self.method,
+            self.target,
+        );
+        let report = analysis::analyze(&cm);
+        if !report.is_safe() {
+            return None;
+        }
+        let pred = predict_model(self.model, self.method, cfg);
+        Some(Objectives {
+            cycles: pred.cycles_on(self.target),
+            joules: pred.joules_on(self.target),
+            sram_peak_bytes: report.resources.sram_peak_bytes,
+            flash_total_bytes: report.resources.flash_total_bytes,
+            accuracy_proxy_db: self.quality.proxy(cfg),
+        })
+    }
+}
+
+/// DP over the layer graph: `dp[b]` is the minimum LUT-estimated cycle
+/// total over layers processed so far with cumulative MAC-weighted SQNR
+/// drop inside error bucket `b`. Backtracking every final bucket yields
+/// one seed per achievable accuracy budget — the spine the evolutionary
+/// loop refines.
+fn dp_seeds(
+    model: &ModelDesc,
+    lut: &MacsPerCycleLut,
+    quality: &QualityTable,
+    options: &[u8],
+    buckets: usize,
+) -> Vec<BitConfig> {
+    let lnum = model.num_layers();
+    let pairs: Vec<(u8, u8)> = options
+        .iter()
+        .flat_map(|&w| options.iter().map(move |&a| (w, a)))
+        .collect();
+    // Worst-case total error: every layer at its own worst pair.
+    let max_err: f64 = (0..lnum)
+        .map(|l| {
+            pairs
+                .iter()
+                .map(|&(w, a)| quality.err_cost(l, w, a))
+                .fold(0.0f64, f64::max)
+        })
+        .sum();
+    let bucket_of = |e: f64| -> usize {
+        if max_err <= 0.0 {
+            0
+        } else {
+            (((e / max_err) * buckets as f64) as usize).min(buckets)
+        }
+    };
+
+    const INF: f64 = f64::INFINITY;
+    let nb = buckets + 1;
+    // dp[l][b], choice[l][b] = (pair index, predecessor bucket).
+    let mut dp = vec![INF; nb];
+    dp[0] = 0.0;
+    let mut choice: Vec<Vec<(usize, usize)>> = Vec::with_capacity(lnum);
+    let mut err_acc = vec![0.0f64; nb];
+    for (l, layer) in model.layers.iter().enumerate() {
+        let mut next = vec![INF; nb];
+        let mut next_err = vec![0.0f64; nb];
+        let mut ch = vec![(usize::MAX, usize::MAX); nb];
+        for b in 0..nb {
+            if dp[b] == INF {
+                continue;
+            }
+            for (pi, &(w, a)) in pairs.iter().enumerate() {
+                let cost = dp[b] + lut.est_cycles(layer.macs, w, a);
+                let e = err_acc[b] + quality.err_cost(l, w, a);
+                let tb = bucket_of(e);
+                if cost < next[tb] {
+                    next[tb] = cost;
+                    next_err[tb] = e;
+                    ch[tb] = (pi, b);
+                }
+            }
+        }
+        dp = next;
+        err_acc = next_err;
+        choice.push(ch);
+    }
+
+    let mut seeds = Vec::new();
+    for end in 0..nb {
+        if dp[end] == INF {
+            continue;
+        }
+        let mut wbits = vec![0u8; lnum];
+        let mut abits = vec![0u8; lnum];
+        let mut b = end;
+        for l in (0..lnum).rev() {
+            let (pi, prev) = choice[l][b];
+            let (w, a) = pairs[pi];
+            wbits[l] = w;
+            abits[l] = a;
+            b = prev;
+        }
+        let cfg = BitConfig { wbits, abits };
+        if !seeds.contains(&cfg) {
+            seeds.push(cfg);
+        }
+    }
+    seeds
+}
+
+/// Run the native co-design search for one model on one target.
+pub fn native_search(
+    model: &ModelDesc,
+    params: &[f32],
+    target: &'static Target,
+    cfg: &NativeSearchCfg,
+) -> Result<SearchOutcome> {
+    anyhow::ensure!(!cfg.options.is_empty(), "empty bitwidth option set");
+    anyhow::ensure!(
+        params.len() >= model.param_count,
+        "parameter vector too short for {}",
+        model.name
+    );
+    let lut = MacsPerCycleLut::for_target(target, cfg.method);
+    let quality = QualityTable::build(model, params, &cfg.options, cfg.seed);
+    let mut ev = Evaluator {
+        model,
+        params,
+        target,
+        method: cfg.method,
+        quality,
+        cache: BTreeMap::new(),
+        pruned: 0,
+    };
+
+    let n = model.num_layers();
+    let uniform8 = ev
+        .evaluate(&BitConfig::uniform(n, 8))
+        .ok_or_else(|| anyhow::anyhow!("{}: uniform 8-bit infeasible on {}", model.name, target.name))?;
+
+    let mut archive = ParetoArchive::new();
+    // Seed generation: the DP spine plus every uniform configuration.
+    let mut population = dp_seeds(model, &lut, &ev.quality, &cfg.options, cfg.dp_buckets);
+    for &b in &cfg.options {
+        let u = BitConfig::uniform(n, b);
+        if !population.contains(&u) {
+            population.push(u);
+        }
+    }
+
+    let mut rng = Rng::new(cfg.seed);
+    let pick_bits = |rng: &mut Rng, options: &[u8]| options[rng.below(options.len() as u64) as usize];
+    for _gen in 0..=cfg.generations {
+        for cand in &population {
+            if let Some(obj) = ev.evaluate(cand) {
+                archive.insert(cand.clone(), obj);
+            }
+        }
+        if archive.is_empty() {
+            anyhow::bail!(
+                "{}: no feasible configuration on {} (every candidate pruned)",
+                model.name,
+                target.name
+            );
+        }
+        // Breed the next generation from the current front.
+        let parents: Vec<BitConfig> =
+            archive.points().iter().map(|p| p.cfg.clone()).collect();
+        let mut next = Vec::with_capacity(cfg.population);
+        while next.len() < cfg.population {
+            let mut child = parents[rng.below(parents.len() as u64) as usize].clone();
+            match rng.below(3) {
+                0 => {
+                    // Point mutation: one layer gets a fresh (w, a) pair.
+                    let l = rng.below(n as u64) as usize;
+                    child.wbits[l] = pick_bits(&mut rng, &cfg.options);
+                    child.abits[l] = pick_bits(&mut rng, &cfg.options);
+                }
+                1 => {
+                    // Uniform crossover with a second parent.
+                    let other = &parents[rng.below(parents.len() as u64) as usize];
+                    for l in 0..n {
+                        if rng.below(2) == 1 {
+                            child.wbits[l] = other.wbits[l];
+                            child.abits[l] = other.abits[l];
+                        }
+                    }
+                }
+                _ => {
+                    // Directional nudge: push one layer a step down (cheaper)
+                    // or up (more accurate) within the option ladder.
+                    let l = rng.below(n as u64) as usize;
+                    let step = |b: u8, up: bool, options: &[u8]| -> u8 {
+                        let i = options.iter().position(|&o| o == b).unwrap_or(0);
+                        if up {
+                            options[(i + 1).min(options.len() - 1)]
+                        } else {
+                            options[i.saturating_sub(1)]
+                        }
+                    };
+                    let up = rng.below(2) == 1;
+                    child.wbits[l] = step(child.wbits[l], up, &cfg.options);
+                    child.abits[l] = step(child.abits[l], up, &cfg.options);
+                }
+            }
+            next.push(child);
+        }
+        population = next;
+    }
+
+    let front = archive.sorted_points();
+    Ok(SearchOutcome {
+        target: target.name,
+        front,
+        uniform8,
+        lut,
+        evaluated: ev.cache.len() - ev.pruned,
+        pruned: ev.pruned,
+    })
+}
+
+/// Bundle per-target outcomes into the `search_pareto.json` document.
+pub fn outcomes_to_json(
+    backbone: &str,
+    method: Method,
+    seed: u64,
+    outcomes: &[SearchOutcome],
+) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("backbone".into(), Json::Str(backbone.into()));
+    o.insert("method".into(), Json::Str(method.name().into()));
+    o.insert("seed".into(), Json::Num(seed as f64));
+    o.insert(
+        "targets".into(),
+        Json::Arr(outcomes.iter().map(|s| s.to_json()).collect()),
+    );
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_tiny;
+
+    fn setup() -> (ModelDesc, Vec<f32>) {
+        let m = vgg_tiny(10, 16);
+        let mut rng = Rng::new(1000);
+        let params = (0..m.param_count).map(|_| rng.normal() * 0.1).collect();
+        (m, params)
+    }
+
+    #[test]
+    fn dp_seeds_span_fast_to_accurate() {
+        let (m, params) = setup();
+        let t = Target::resolve("m7").unwrap();
+        let lut = MacsPerCycleLut::for_target(t, Method::RpSlbc);
+        let q = QualityTable::build(&m, &params, &[2, 4, 8], 7);
+        let seeds = dp_seeds(&m, &lut, &q, &[2, 4, 8], 8);
+        assert!(seeds.len() >= 2, "want a spine, got {}", seeds.len());
+        // The spine must include both extremes of the trade-off.
+        let avgs: Vec<f64> = seeds.iter().map(|c| c.avg_wbits()).collect();
+        let min = avgs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = avgs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(max - min > 1.0, "avg wbits span [{min}, {max}] too narrow");
+    }
+
+    #[test]
+    fn infeasible_widths_never_scored() {
+        let (m, params) = setup();
+        let t = Target::resolve("m7").unwrap();
+        let q = QualityTable::build(&m, &params, &[2, 4, 8], 7);
+        let mut ev = Evaluator {
+            model: &m,
+            params: &params,
+            target: t,
+            method: Method::TinyEngine, // int8 only
+            quality: q,
+            cache: BTreeMap::new(),
+            pruned: 0,
+        };
+        assert!(ev.evaluate(&BitConfig::uniform(m.num_layers(), 4)).is_none());
+        assert_eq!(ev.pruned, 1);
+        assert!(ev.evaluate(&BitConfig::uniform(m.num_layers(), 8)).is_some());
+    }
+}

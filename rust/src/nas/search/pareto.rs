@@ -1,0 +1,191 @@
+//! Pareto archive over the native search's four objective axes.
+//!
+//! Minimize cycles, joules and SRAM peak; maximize the accuracy proxy.
+//! Flash footprint rides along in every point (it is the model-size axis
+//! of the fig8 acceptance check) but is not a dominance axis — it is a
+//! monotone function of `wbits`, which cycles already price.
+
+use crate::quant::BitConfig;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// The scored objectives of one feasible configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Objectives {
+    /// Predicted single-inference cycles on the search target.
+    pub cycles: u64,
+    /// Predicted single-inference joules (dynamic + static).
+    pub joules: f64,
+    /// Static SRAM high-water mark: arena + kernel scratch.
+    pub sram_peak_bytes: usize,
+    /// Flash footprint: packed weights + biases + scales + code.
+    pub flash_total_bytes: usize,
+    /// MAC-weighted SQNR proxy in dB (higher is better).
+    pub accuracy_proxy_db: f64,
+}
+
+impl Objectives {
+    /// `self` dominates `other`: no objective worse, at least one
+    /// strictly better.
+    pub fn dominates(&self, other: &Objectives) -> bool {
+        let no_worse = self.cycles <= other.cycles
+            && self.joules <= other.joules
+            && self.sram_peak_bytes <= other.sram_peak_bytes
+            && self.accuracy_proxy_db >= other.accuracy_proxy_db;
+        let strictly_better = self.cycles < other.cycles
+            || self.joules < other.joules
+            || self.sram_peak_bytes < other.sram_peak_bytes
+            || self.accuracy_proxy_db > other.accuracy_proxy_db;
+        no_worse && strictly_better
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("cycles".into(), Json::Num(self.cycles as f64));
+        o.insert("joules".into(), Json::Num(self.joules));
+        o.insert("sram_peak_bytes".into(), Json::Num(self.sram_peak_bytes as f64));
+        o.insert("flash_total_bytes".into(), Json::Num(self.flash_total_bytes as f64));
+        o.insert("accuracy_proxy".into(), Json::Num(self.accuracy_proxy_db));
+        Json::Obj(o)
+    }
+}
+
+/// One archived non-dominated configuration.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub cfg: BitConfig,
+    pub obj: Objectives,
+}
+
+impl ParetoPoint {
+    pub fn to_json(&self) -> Json {
+        let mut o = match self.obj.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        let bits = |v: &[u8]| Json::Arr(v.iter().map(|&b| Json::Num(b as f64)).collect());
+        o.insert("wbits".into(), bits(&self.cfg.wbits));
+        o.insert("abits".into(), bits(&self.cfg.abits));
+        o.insert("avg_wbits".into(), Json::Num(self.cfg.avg_wbits()));
+        o.insert("avg_abits".into(), Json::Num(self.cfg.avg_abits()));
+        Json::Obj(o)
+    }
+}
+
+/// A deterministic Pareto archive: insertion order is the tiebreak, and
+/// [`sorted_points`](ParetoArchive::sorted_points) emits a canonical
+/// cycles-ascending order, so a fixed seed reproduces the front
+/// bit-for-bit.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoArchive {
+    points: Vec<ParetoPoint>,
+}
+
+impl ParetoArchive {
+    pub fn new() -> Self {
+        ParetoArchive::default()
+    }
+
+    /// Offer a scored configuration. Returns `true` if it entered the
+    /// archive (i.e. no existing point dominates or duplicates it);
+    /// dominated incumbents are evicted.
+    pub fn insert(&mut self, cfg: BitConfig, obj: Objectives) -> bool {
+        for p in &self.points {
+            if p.obj.dominates(&obj) || (p.obj == obj && p.cfg == cfg) {
+                return false;
+            }
+        }
+        self.points.retain(|p| !obj.dominates(&p.obj));
+        self.points.push(ParetoPoint { cfg, obj });
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Archive members in insertion order (the evolutionary loop's
+    /// parent pool).
+    pub fn points(&self) -> &[ParetoPoint] {
+        &self.points
+    }
+
+    /// The front in canonical order: cycles ascending, then SRAM, then
+    /// joules, then the configuration bits — a total order, so equal
+    /// fronts render identically.
+    pub fn sorted_points(&self) -> Vec<ParetoPoint> {
+        let mut pts = self.points.clone();
+        pts.sort_by(|a, b| {
+            a.obj
+                .cycles
+                .cmp(&b.obj.cycles)
+                .then(a.obj.sram_peak_bytes.cmp(&b.obj.sram_peak_bytes))
+                .then(a.obj.joules.total_cmp(&b.obj.joules))
+                .then(a.cfg.wbits.cmp(&b.cfg.wbits))
+                .then(a.cfg.abits.cmp(&b.cfg.abits))
+        });
+        pts
+    }
+
+    /// The minimum-cycles point (the fig8 acceptance row).
+    pub fn best_cycles(&self) -> Option<ParetoPoint> {
+        self.sorted_points().into_iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(cycles: u64, joules: f64, sram: usize, acc: f64) -> Objectives {
+        Objectives {
+            cycles,
+            joules,
+            sram_peak_bytes: sram,
+            flash_total_bytes: 0,
+            accuracy_proxy_db: acc,
+        }
+    }
+
+    fn cfg(b: u8) -> BitConfig {
+        BitConfig::uniform(2, b)
+    }
+
+    #[test]
+    fn dominance_axes() {
+        let a = obj(100, 1.0, 10, 40.0);
+        assert!(a.dominates(&obj(200, 1.0, 10, 40.0)));
+        assert!(a.dominates(&obj(100, 2.0, 10, 30.0)));
+        assert!(!a.dominates(&obj(100, 1.0, 10, 40.0))); // equal: no strict edge
+        assert!(!a.dominates(&obj(50, 2.0, 10, 40.0))); // trade-off
+        assert!(obj(50, 0.5, 5, 50.0).dominates(&a));
+    }
+
+    #[test]
+    fn archive_keeps_tradeoffs_evicts_dominated() {
+        let mut ar = ParetoArchive::new();
+        assert!(ar.insert(cfg(8), obj(200, 2.0, 20, 60.0)));
+        assert!(ar.insert(cfg(2), obj(100, 1.0, 10, 30.0))); // trade-off: both stay
+        assert_eq!(ar.len(), 2);
+        // Dominates the 8-bit point (same accuracy, cheaper everywhere).
+        assert!(ar.insert(cfg(4), obj(150, 1.5, 15, 60.0)));
+        assert_eq!(ar.len(), 2);
+        // Dominated by the 2-bit point: rejected.
+        assert!(!ar.insert(cfg(3), obj(120, 1.2, 12, 29.0)));
+        assert_eq!(ar.len(), 2);
+    }
+
+    #[test]
+    fn sorted_points_cycles_ascending() {
+        let mut ar = ParetoArchive::new();
+        ar.insert(cfg(8), obj(200, 2.0, 20, 60.0));
+        ar.insert(cfg(2), obj(100, 1.0, 10, 30.0));
+        let pts = ar.sorted_points();
+        assert_eq!(pts[0].obj.cycles, 100);
+        assert_eq!(ar.best_cycles().unwrap().obj.cycles, 100);
+    }
+}

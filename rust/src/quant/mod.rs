@@ -4,6 +4,8 @@
 //! when deploying a trained flat parameter vector onto the MCU engine.
 
 use crate::models::ModelDesc;
+use crate::util::json::{Json, JsonError};
+use std::collections::BTreeMap;
 
 /// Per-layer weight/activation bitwidths, the NAS search result.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -60,6 +62,73 @@ impl BitConfig {
     pub fn abits_f32(&self) -> Vec<f32> {
         self.abits.iter().map(|&b| b as f32).collect()
     }
+
+    /// JSON form: `{"wbits": [...], "abits": [...]}`.
+    pub fn to_json(&self) -> Json {
+        let bits = |v: &[u8]| Json::Arr(v.iter().map(|&b| Json::Num(b as f64)).collect());
+        let mut o = BTreeMap::new();
+        o.insert("wbits".into(), bits(&self.wbits));
+        o.insert("abits".into(), bits(&self.abits));
+        Json::Obj(o)
+    }
+
+    /// Parse the [`to_json`](BitConfig::to_json) form back (also accepts
+    /// the saved-config envelope, which carries the same two keys).
+    pub fn from_json(j: &Json) -> Result<BitConfig, JsonError> {
+        let bits = |key: &str| -> Result<Vec<u8>, JsonError> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| JsonError(format!("{key} not an array")))?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .filter(|&b| (1..=32).contains(&b))
+                        .map(|b| b as u8)
+                        .ok_or_else(|| JsonError(format!("bad bitwidth in {key}")))
+                })
+                .collect()
+        };
+        let cfg = BitConfig {
+            wbits: bits("wbits")?,
+            abits: bits("abits")?,
+        };
+        if cfg.wbits.is_empty() || cfg.wbits.len() != cfg.abits.len() {
+            return Err(JsonError(format!(
+                "wbits/abits length mismatch ({} vs {})",
+                cfg.wbits.len(),
+                cfg.abits.len()
+            )));
+        }
+        Ok(cfg)
+    }
+}
+
+/// Save a searched configuration as a reusable artifact:
+/// `{"backbone": "...", "wbits": [...], "abits": [...]}` — the file
+/// `deploy`/`pipeline` `--config-file` and serve's `cfg@FILE` mix entries
+/// consume.
+pub fn save_config(path: &str, backbone: &str, cfg: &BitConfig) -> crate::Result<()> {
+    let mut o = match cfg.to_json() {
+        Json::Obj(o) => o,
+        _ => unreachable!(),
+    };
+    o.insert("backbone".into(), Json::Str(backbone.into()));
+    std::fs::write(path, format!("{}\n", Json::Obj(o).to_string_compact()))?;
+    Ok(())
+}
+
+/// Load a saved configuration: `(backbone, config)`.
+pub fn load_config(path: &str) -> crate::Result<(String, BitConfig)> {
+    let src = std::fs::read_to_string(path)?;
+    let j = Json::parse(&src).map_err(|e| anyhow::anyhow!("{path}: {}", e.0))?;
+    let backbone = j
+        .req("backbone")
+        .ok()
+        .and_then(|b| b.as_str())
+        .ok_or_else(|| anyhow::anyhow!("{path}: missing \"backbone\""))?
+        .to_string();
+    let cfg = BitConfig::from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {}", e.0))?;
+    Ok((backbone, cfg))
 }
 
 /// A quantized weight tensor: integer values in `[-2^(b-1)+1, 2^(b-1)-1]`

@@ -189,6 +189,40 @@ impl Workload {
         let cfg = BitConfig::uniform(model.num_layers(), bits);
         Ok(Workload::new(model, method, cfg, params))
     }
+
+    /// [`synth`](Workload::synth) with a per-layer mixed-precision
+    /// [`BitConfig`] instead of a uniform width — how a native-searched
+    /// configuration (`nas::search`, saved via `quant::save_config`)
+    /// enters the fleet as a first-class [`ModelKey`]: the key hashes the
+    /// full per-layer config, so distinct searched configs of the same
+    /// backbone compile and cache independently.
+    pub fn with_config(
+        backbone: &str,
+        method: Method,
+        cfg: BitConfig,
+        seed: u64,
+    ) -> Result<Workload> {
+        let model = models::by_name(backbone)
+            .ok_or_else(|| anyhow::anyhow!("unknown backbone `{backbone}`"))?;
+        anyhow::ensure!(
+            cfg.num_layers() == model.num_layers(),
+            "config has {} layers, {} has {}",
+            cfg.num_layers(),
+            backbone,
+            model.num_layers()
+        );
+        for (i, (&w, &a)) in cfg.wbits.iter().zip(&cfg.abits).enumerate() {
+            let consumed = if i == 0 { 8 } else { a };
+            anyhow::ensure!(
+                method.supports(w, consumed),
+                "{} does not support w{w}a{consumed} (layer {i})",
+                method.name()
+            );
+        }
+        let mut rng = Rng::new(seed);
+        let params: Vec<f32> = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+        Ok(Workload::new(model, method, cfg, params))
+    }
 }
 
 /// Serving-stack configuration.

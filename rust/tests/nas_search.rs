@@ -1,0 +1,129 @@
+//! Acceptance tests for the native mixed-precision co-design search.
+//!
+//! Pins (ISSUE acceptance criteria):
+//! 1. on both registry targets the best-cycles Pareto point strictly
+//!    beats uniform int8 on predicted cycles at equal-or-smaller flash;
+//! 2. every front point re-proves analyzer-clean (zero Error findings);
+//! 3. the search is bit-deterministic per seed — two runs with the same
+//!    seed produce identical fronts, objective-for-objective;
+//! 4. saved configs round-trip through `save_config`/`load_config` and
+//!    re-enter the serve layer as first-class workloads.
+
+use mcu_mixq::analysis;
+use mcu_mixq::engine::CompiledModel;
+use mcu_mixq::models::{vgg_tiny, ModelDesc};
+use mcu_mixq::nas::search::{native_search, NativeSearchCfg};
+use mcu_mixq::quant::{load_config, save_config, BitConfig};
+use mcu_mixq::target::Target;
+use mcu_mixq::util::prng::Rng;
+
+fn setup() -> (ModelDesc, Vec<f32>) {
+    let model = vgg_tiny(10, 16);
+    let mut rng = Rng::new(1000);
+    let params = (0..model.param_count).map(|_| rng.normal() * 0.1).collect();
+    (model, params)
+}
+
+#[test]
+fn searched_beats_uniform8_and_front_is_analyzer_clean() {
+    let (model, params) = setup();
+    let cfg = NativeSearchCfg::smoke(7);
+    for name in ["stm32f746", "stm32f446"] {
+        let target = Target::resolve(name).unwrap();
+        let out = native_search(&model, &params, target, &cfg).unwrap();
+        assert!(!out.front.is_empty(), "{name}: empty Pareto front");
+
+        // Acceptance: strictly fewer predicted cycles than uniform int8
+        // at equal-or-smaller flash (model size).
+        let best = out.best_cycles();
+        assert!(
+            best.obj.cycles < out.uniform8.cycles,
+            "{name}: best-cycles {} must beat uniform8 {}",
+            best.obj.cycles,
+            out.uniform8.cycles
+        );
+        assert!(
+            best.obj.flash_total_bytes <= out.uniform8.flash_total_bytes,
+            "{name}: searched flash {} exceeds uniform8 {}",
+            best.obj.flash_total_bytes,
+            out.uniform8.flash_total_bytes
+        );
+
+        // Acceptance: every front point passes the static analyzer with
+        // zero Error findings (independent recompile, not the memo).
+        for p in &out.front {
+            let cm = CompiledModel::compile_unbounded_for(
+                &model, &params, &p.cfg, cfg.method, target,
+            );
+            let report = analysis::analyze(&cm);
+            assert_eq!(
+                report.errors(),
+                0,
+                "{name}: front point w={:?} a={:?} has Errors: {:?}",
+                p.cfg.wbits,
+                p.cfg.abits,
+                report.error_rules()
+            );
+        }
+    }
+}
+
+#[test]
+fn search_is_bit_deterministic_per_seed() {
+    let (model, params) = setup();
+    let target = Target::resolve("stm32f446").unwrap();
+    let cfg = NativeSearchCfg::smoke(42);
+    let a = native_search(&model, &params, target, &cfg).unwrap();
+    let b = native_search(&model, &params, target, &cfg).unwrap();
+    assert_eq!(a.front.len(), b.front.len());
+    for (pa, pb) in a.front.iter().zip(&b.front) {
+        assert_eq!(pa.cfg, pb.cfg);
+        assert_eq!(pa.obj.cycles, pb.obj.cycles);
+        assert_eq!(pa.obj.sram_peak_bytes, pb.obj.sram_peak_bytes);
+        assert_eq!(pa.obj.flash_total_bytes, pb.obj.flash_total_bytes);
+        assert_eq!(pa.obj.joules.to_bits(), pb.obj.joules.to_bits());
+        assert_eq!(
+            pa.obj.accuracy_proxy_db.to_bits(),
+            pb.obj.accuracy_proxy_db.to_bits()
+        );
+    }
+    assert_eq!(a.evaluated, b.evaluated);
+    assert_eq!(a.pruned, b.pruned);
+}
+
+#[test]
+fn saved_config_round_trips_and_feeds_serve() {
+    let cfg = BitConfig {
+        wbits: vec![4, 2, 8, 4, 6, 8],
+        abits: vec![8, 4, 4, 8, 6, 8],
+    };
+    let path = std::env::temp_dir().join("mixq_nas_search_roundtrip.json");
+    let path = path.to_str().unwrap();
+    save_config(path, "vgg_tiny", &cfg).unwrap();
+    let (backbone, loaded) = load_config(path).unwrap();
+    assert_eq!(backbone, "vgg_tiny");
+    assert_eq!(loaded, cfg);
+
+    // A searched config is a first-class serve workload (ModelKey hashes
+    // the full per-layer bit vector).
+    let w = mcu_mixq::serve::Workload::with_config(
+        &backbone,
+        mcu_mixq::ops::Method::RpSlbc,
+        loaded.clone(),
+        5,
+    )
+    .unwrap();
+    assert_eq!(w.key.cfg, cfg);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn load_config_rejects_garbage() {
+    let dir = std::env::temp_dir();
+    let bad = dir.join("mixq_nas_search_bad.json");
+    std::fs::write(&bad, "{\"backbone\": \"x\", \"wbits\": [4], \"abits\": [4, 8]}").unwrap();
+    assert!(load_config(bad.to_str().unwrap()).is_err());
+    std::fs::write(&bad, "not json").unwrap();
+    assert!(load_config(bad.to_str().unwrap()).is_err());
+    std::fs::remove_file(&bad).ok();
+}
